@@ -1,0 +1,150 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas) -> HLO *text* artifacts.
+
+Interchange format is HLO text, NOT `.serialize()`d HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/).
+
+Emits, per entry point:
+    artifacts/<name>.hlo.txt     — the lowered module
+and one shared
+    artifacts/meta.json          — input/output shapes + LM param layout,
+                                   consumed by rust/src/runtime/artifact.rs.
+
+`make artifacts` runs this once; python is never on the request path.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--lm-preset gpt-tiny ...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, transformer
+
+# Fixed MF block geometry for the AOT artifact; the rust MF app partitions
+# the rating matrix into blocks of exactly this shape (config validates).
+MF_BM, MF_BN, MF_K = 64, 64, 32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_meta(args, names):
+    return [
+        {"name": n, "shape": list(a.shape), "dtype": str(a.dtype)}
+        for n, a in zip(names, args)
+    ]
+
+
+def lower_mf():
+    args = (
+        _spec((MF_BM, MF_K)),
+        _spec((MF_K, MF_BN)),
+        _spec((MF_BM, MF_BN)),
+        _spec((MF_BM, MF_BN)),
+        _spec((2,)),
+    )
+    lowered = jax.jit(model.mf_block_step).lower(*args)
+    meta = {
+        "inputs": _io_meta(args, ["L", "R", "D", "mask", "hp"]),
+        "outputs": [
+            {"name": "dL", "shape": [MF_BM, MF_K], "dtype": "float32"},
+            {"name": "dR", "shape": [MF_K, MF_BN], "dtype": "float32"},
+            {"name": "stats", "shape": [2], "dtype": "float32"},
+        ],
+        "block": {"bm": MF_BM, "bn": MF_BN, "k": MF_K},
+    }
+    return to_hlo_text(lowered), meta
+
+
+def lower_lm(preset: str, eval_only: bool):
+    cfg = transformer.PRESETS[preset]
+    spec = transformer.param_spec(cfg)
+    tok = _spec((cfg.batch, cfg.seq), jnp.int32)
+    params = tuple(_spec(s) for _, s in spec)
+    fn = model.lm_eval(cfg) if eval_only else model.lm_step(cfg)
+    lowered = jax.jit(fn).lower(tok, tok, *params)
+    meta = {
+        "inputs": _io_meta(
+            (tok, tok) + params, ["tokens", "targets"] + [n for n, _ in spec]
+        ),
+        "outputs": (
+            [{"name": "loss", "shape": [], "dtype": "float32"}]
+            + (
+                []
+                if eval_only
+                else [
+                    {"name": f"d_{n}", "shape": list(s), "dtype": "float32"}
+                    for n, s in spec
+                ]
+            )
+        ),
+        "lm_config": {
+            "preset": preset,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "d_model": cfg.d_model,
+            "n_layer": cfg.n_layer,
+            "n_head": cfg.n_head,
+            "batch": cfg.batch,
+            "param_count": int(transformer.param_count(cfg)),
+        },
+        "params": [{"name": n, "shape": list(s)} for n, s in spec],
+    }
+    return to_hlo_text(lowered), meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--lm-presets",
+        nargs="*",
+        default=["gpt-tiny"],
+        choices=sorted(transformer.PRESETS),
+        help="LM presets to lower (gpt-100m is compile-only on this testbed)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    meta_all = {}
+
+    text, meta = lower_mf()
+    name = f"mf_block_{MF_BM}x{MF_BN}x{MF_K}"
+    with open(os.path.join(args.out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    meta_all[name] = meta
+    print(f"lowered {name}: {len(text)} chars")
+
+    for preset in args.lm_presets:
+        for eval_only, tag in ((False, "step"), (True, "eval")):
+            text, meta = lower_lm(preset, eval_only)
+            name = f"lm_{tag}_{preset}"
+            with open(os.path.join(args.out_dir, f"{name}.hlo.txt"), "w") as f:
+                f.write(text)
+            meta_all[name] = meta
+            print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta_all, f, indent=1)
+    print(f"wrote meta.json with {len(meta_all)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

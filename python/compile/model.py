@@ -1,0 +1,54 @@
+"""L2 entry points lowered by aot.py — the paper's compute graphs.
+
+Two workloads, matching the paper's evaluation:
+
+  * mf_block_step — SGD deltas for one dense rating block of the Netflix-
+    style matrix factorization (calls the L1 Pallas kernel mf_sgd).
+  * lm_step / lm_eval — fwd+bwd (resp. fwd) of the transformer LM used by
+    the end-to-end data-parallel training driver (examples/lm_pretrain.rs);
+    the loss calls the L1 fused cross-entropy Pallas kernel.
+
+All functions are pure and take/return flat tuples of arrays so the rust
+runtime can drive them positionally. Hyperparameters that must vary at run
+time (step size, l2) travel as an f32[2] tensor, not as python constants.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .kernels import mf_sgd
+
+
+def mf_block_step(L, R, D, mask, hp):
+    """SGD deltas for one (BM, BN) rating block.
+
+    Args:
+        L: (BM, K), R: (K, BN), D/mask: (BM, BN), hp: f32[2] = [gamma, lam].
+
+    Returns:
+        (dL, dR, stats) with stats = f32[2] = [sq_loss, obs_count].
+    """
+    dl, dr, loss, cnt = mf_sgd.mf_block_grads(L, R, D, mask, hp[0], hp[1])
+    return dl, dr, jnp.stack([loss, cnt])
+
+
+def lm_step(cfg: transformer.LmConfig):
+    """Returns f(tokens, targets, *params) -> (loss, *grads)."""
+
+    def step(tokens, targets, *params):
+        loss, grads = jax.value_and_grad(transformer.loss_fn)(
+            list(params), tokens, targets, cfg
+        )
+        return (loss,) + tuple(grads)
+
+    return step
+
+
+def lm_eval(cfg: transformer.LmConfig):
+    """Returns f(tokens, targets, *params) -> (loss,)."""
+
+    def ev(tokens, targets, *params):
+        return (transformer.loss_fn(list(params), tokens, targets, cfg),)
+
+    return ev

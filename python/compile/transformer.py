@@ -1,0 +1,165 @@
+"""L2: GPT-style causal transformer LM, functional JAX, flat param list.
+
+The parameter layout is a *flat ordered list* of arrays so that the Rust
+coordinator can store each tensor as one parameter-server row and feed the
+AOT-compiled step executable positionally. `param_spec(cfg)` is the single
+source of truth for that ordering; aot.py serializes it to artifacts/meta.json
+and rust/src/apps/lm reads it back.
+
+Architecture: learned token + position embeddings, pre-LN blocks
+(causal MHA -> MLP with GELU), final LN, output projection tied to the token
+embedding. Loss is next-token cross entropy via the fused Pallas kernel
+(kernels/xent.py) wired through a custom VJP (analytic softmax-minus-onehot
+backward), so the Pallas kernel stays on the forward hot path while
+jax.grad differentiates the whole step.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import xent as xent_kernel
+
+
+@dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 4096
+    seq: int = 128
+    d_model: int = 256
+    n_layer: int = 4
+    n_head: int = 4
+    batch: int = 4
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_head
+
+    @property
+    def d_ff(self):
+        return 4 * self.d_model
+
+
+# Presets referenced by aot.py --preset and the rust CLI.
+PRESETS = {
+    # ~4.9M params: sized for the 1-core CPU testbed (DESIGN.md §8).
+    "gpt-tiny": LmConfig(vocab=4096, seq=128, d_model=256, n_layer=4, n_head=4, batch=4),
+    # ~2x tiny, for scaling checks.
+    "gpt-small": LmConfig(vocab=8192, seq=128, d_model=384, n_layer=6, n_head=6, batch=4),
+    # ~124M params (GPT-2 small shape): compile-only on this testbed.
+    "gpt-100m": LmConfig(vocab=32768, seq=256, d_model=768, n_layer=12, n_head=12, batch=2),
+}
+
+
+def param_spec(cfg: LmConfig):
+    """Ordered (name, shape) list — the PS row layout contract."""
+    d, ff = cfg.d_model, cfg.d_ff
+    spec = [
+        ("tok_emb", (cfg.vocab, d)),
+        ("pos_emb", (cfg.seq, d)),
+    ]
+    for i in range(cfg.n_layer):
+        spec += [
+            (f"l{i}.ln1_g", (d,)),
+            (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.wqkv", (d, 3 * d)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2_g", (d,)),
+            (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.w1", (d, ff)),
+            (f"l{i}.b1", (ff,)),
+            (f"l{i}.w2", (ff, d)),
+            (f"l{i}.b2", (d,)),
+        ]
+    spec += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return spec
+
+
+def param_count(cfg: LmConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def init_params(cfg: LmConfig, key):
+    """He-ish init matching the spec ordering."""
+    spec = param_spec(cfg)
+    params = []
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b", ".b1", ".b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 0.02 if "emb" in name else 1.0 / jnp.sqrt(fan_in)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, wqkv, wo, cfg: LmConfig):
+    B, S, d = x.shape
+    qkv = x @ wqkv  # (B, S, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(B, S, cfg.n_head, cfg.d_head).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(cfg.d_head).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    att = jnp.where(causal, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, d)
+    return out @ wo
+
+
+@jax.custom_vjp
+def fused_xent(logits, targets):
+    return xent_kernel.token_xent(logits, targets)
+
+
+def _fused_xent_fwd(logits, targets):
+    return xent_kernel.token_xent(logits, targets), (logits, targets)
+
+
+def _fused_xent_bwd(res, g):
+    logits, targets = res
+    sm = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    dlogits = (sm - onehot) * g[:, None]
+    return dlogits, jnp.zeros(targets.shape, jax.dtypes.float0)
+
+
+fused_xent.defvjp(_fused_xent_fwd, _fused_xent_bwd)
+
+
+def forward_logits(params, tokens, cfg: LmConfig):
+    """tokens: (B, S) int32 -> logits (B, S, V)."""
+    it = iter(params)
+    nxt = lambda: next(it)
+    tok_emb, pos_emb = nxt(), nxt()
+    x = tok_emb[tokens] + pos_emb[None, : tokens.shape[1]]
+    for _ in range(cfg.n_layer):
+        ln1_g, ln1_b, wqkv, wo = nxt(), nxt(), nxt(), nxt()
+        ln2_g, ln2_b, w1, b1, w2, b2 = nxt(), nxt(), nxt(), nxt(), nxt(), nxt()
+        x = x + _attention(_layernorm(x, ln1_g, ln1_b), wqkv, wo, cfg)
+        h = _layernorm(x, ln2_g, ln2_b)
+        x = x + jax.nn.gelu(h @ w1 + b1) @ w2 + b2
+    lnf_g, lnf_b = nxt(), nxt()
+    x = _layernorm(x, lnf_g, lnf_b)
+    return x @ tok_emb.T  # tied output head
+
+
+def loss_fn(params, tokens, targets, cfg: LmConfig):
+    """Mean next-token NLL over the batch, via the fused Pallas kernel."""
+    logits = forward_logits(params, tokens, cfg)
+    B, S, V = logits.shape
+    nll = fused_xent(logits.reshape(B * S, V), targets.reshape(B * S))
+    return jnp.mean(nll)

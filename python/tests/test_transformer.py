@@ -1,0 +1,130 @@
+"""L2 correctness: transformer shapes, init, gradients, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, transformer
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = transformer.LmConfig(vocab=64, seq=16, d_model=32, n_layer=2, n_head=2, batch=2)
+
+
+def _data(cfg, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    tokens = jax.random.randint(ks[0], (cfg.batch, cfg.seq), 0, cfg.vocab)
+    targets = jax.random.randint(ks[1], (cfg.batch, cfg.seq), 0, cfg.vocab)
+    return tokens, targets
+
+
+def test_param_spec_shapes_match_init():
+    params = transformer.init_params(TINY, jax.random.PRNGKey(0))
+    spec = transformer.param_spec(TINY)
+    assert len(params) == len(spec)
+    for p, (name, shape) in zip(params, spec):
+        assert p.shape == shape, name
+
+
+def test_param_count_presets():
+    # gpt-tiny must be a few-million-param model; gpt-100m ~ 100M.
+    n_tiny = transformer.param_count(transformer.PRESETS["gpt-tiny"])
+    n_100m = transformer.param_count(transformer.PRESETS["gpt-100m"])
+    assert 3e6 < n_tiny < 8e6, n_tiny
+    assert 8e7 < n_100m < 1.6e8, n_100m
+
+
+def test_forward_shape_and_finite():
+    params = transformer.init_params(TINY, jax.random.PRNGKey(0))
+    tokens, _ = _data(TINY)
+    logits = transformer.forward_logits(params, tokens, TINY)
+    assert logits.shape == (TINY.batch, TINY.seq, TINY.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    params = transformer.init_params(TINY, jax.random.PRNGKey(0))
+    tokens, targets = _data(TINY)
+    loss = transformer.loss_fn(params, tokens, targets, TINY)
+    assert abs(float(loss) - np.log(TINY.vocab)) < 1.0
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params = transformer.init_params(TINY, jax.random.PRNGKey(0))
+    tokens, _ = _data(TINY)
+    logits1 = transformer.forward_logits(params, tokens, TINY)
+    tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % TINY.vocab)
+    logits2 = transformer.forward_logits(params, tokens2, TINY)
+    np.testing.assert_allclose(logits1[:, :-1], logits2[:, :-1], atol=1e-5)
+    assert not np.allclose(logits1[:, -1], logits2[:, -1], atol=1e-5)
+
+
+def test_lm_step_outputs_grads_for_every_param():
+    step = jax.jit(model.lm_step(TINY))
+    params = transformer.init_params(TINY, jax.random.PRNGKey(0))
+    tokens, targets = _data(TINY)
+    out = step(tokens, targets, *params)
+    assert len(out) == 1 + len(params)
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_grad_matches_finite_difference():
+    params = transformer.init_params(TINY, jax.random.PRNGKey(1))
+    tokens, targets = _data(TINY, seed=3)
+    loss = lambda ps: transformer.loss_fn(ps, tokens, targets, TINY)
+    grads = jax.grad(loss)(params)
+    # Probe one weight in wqkv of layer 0 (index 4 in the spec). f32 central
+    # differences need a fairly large eps; tolerance is correspondingly loose
+    # (this is a sanity check on wiring, not a numerics test — the exact
+    # gradient check is test_xent_kernel.test_custom_vjp_matches_jnp_grad).
+    idx, (r, c) = 4, (3, 5)
+    eps = 3e-2
+    bumped_p = [p.at[r, c].add(eps) if i == idx else p for i, p in enumerate(params)]
+    bumped_m = [p.at[r, c].add(-eps) if i == idx else p for i, p in enumerate(params)]
+    fd = (loss(bumped_p) - loss(bumped_m)) / (2 * eps)
+    np.testing.assert_allclose(float(grads[idx][r, c]), float(fd), rtol=0.25)
+
+
+def test_sgd_reduces_loss():
+    """A few SGD steps on a fixed batch must drive the loss down (memorize)."""
+    step = jax.jit(model.lm_step(TINY))
+    params = transformer.init_params(TINY, jax.random.PRNGKey(0))
+    tokens, targets = _data(TINY)
+    out = step(tokens, targets, *params)
+    loss0 = float(out[0])
+    lr = 0.5
+    for _ in range(20):
+        out = step(tokens, targets, *params)
+        params = [p - lr * g for p, g in zip(params, out[1:])]
+    loss1 = float(model.lm_eval(TINY)(tokens, targets, *params)[0])
+    assert loss1 < 0.5 * loss0, (loss0, loss1)
+
+
+def test_eval_matches_step_loss():
+    params = transformer.init_params(TINY, jax.random.PRNGKey(2))
+    tokens, targets = _data(TINY, seed=5)
+    l_step = float(model.lm_step(TINY)(tokens, targets, *params)[0])
+    l_eval = float(model.lm_eval(TINY)(tokens, targets, *params)[0])
+    np.testing.assert_allclose(l_step, l_eval, rtol=1e-6)
+
+
+def test_mf_block_step_hp_tensor():
+    """model.mf_block_step must honor hp = [gamma, lam] as runtime inputs."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    L = jax.random.normal(ks[0], (64, 32))
+    R = jax.random.normal(ks[1], (32, 64))
+    D = jax.random.normal(ks[2], (64, 64))
+    M = (jax.random.uniform(ks[3], (64, 64)) < 0.2).astype(jnp.float32)
+    from compile.kernels import ref
+
+    for gamma, lam in ((0.01, 0.0), (0.2, 0.3)):
+        dl, dr, stats = model.mf_block_step(L, R, D, M, jnp.array([gamma, lam]))
+        dl2, dr2, loss2, cnt2 = ref.mf_block_grads(L, R, D, M, gamma, lam)
+        np.testing.assert_allclose(dl, dl2, rtol=3e-5, atol=1e-6)
+        np.testing.assert_allclose(dr, dr2, rtol=3e-5, atol=1e-6)
+        np.testing.assert_allclose(stats[0], loss2, rtol=3e-5)
+        assert float(stats[1]) == float(cnt2)

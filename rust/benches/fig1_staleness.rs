@@ -1,0 +1,78 @@
+//! Fig. 1 regenerator (bench form): staleness distribution (left) and
+//! LDA comm/comp breakdown (right), scaled down so `cargo bench` finishes
+//! in a couple of minutes. The CLI (`essptable fig1-staleness`,
+//! `essptable fig1-breakdown`) runs the full-size versions.
+//!
+//! Expected shape (paper): SSP differentials ~uniform over the staleness
+//! window; ESSP concentrated with smaller mean/variance; ESSP comm time
+//! below SSP at every staleness, both decreasing in s.
+
+use std::path::PathBuf;
+
+use essptable::apps::lda::LdaConfig;
+use essptable::apps::mf::MfConfig;
+use essptable::harness::{self, ExpOpts};
+use essptable::sim::straggler::StragglerModel;
+
+fn opts() -> ExpOpts {
+    ExpOpts {
+        workers: 8,
+        shards: 4,
+        seed: 42,
+        clocks: 30,
+        out_dir: PathBuf::from("results/bench"),
+        straggler: StragglerModel::RandomUniform { max_factor: 2.0 },
+        lan: true,
+        virtual_clock_ms: 20,
+    }
+}
+
+fn main() {
+    println!("== fig1 (left): staleness distributions, MF s=3 ==");
+    let mf = MfConfig {
+        rows: 512,
+        cols: 512,
+        minibatch: 0.5,
+        ..Default::default()
+    };
+    let runs = harness::fig1_staleness(&opts(), mf, 3).expect("fig1 staleness");
+    for run in &runs {
+        let h = &run.report.staleness;
+        println!(
+            "{:<8} mean {:+.3} var {:.3} dist {:?}",
+            run.label,
+            h.mean(),
+            h.variance(),
+            h.normalized()
+                .iter()
+                .map(|(d, f)| format!("{d}:{f:.2}"))
+                .collect::<Vec<_>>()
+        );
+    }
+    let (ssp, essp) = (&runs[0].report.staleness, &runs[1].report.staleness);
+    println!(
+        "ESSP variance reduction vs SSP: {:.2}x (paper: concentrated vs near-uniform)",
+        ssp.variance() / essp.variance().max(1e-9)
+    );
+
+    println!("\n== fig1 (right): LDA comm/comp breakdown ==");
+    let lda = LdaConfig {
+        docs: 200,
+        ..Default::default()
+    };
+    let rows = harness::fig1_breakdown(
+        &ExpOpts {
+            workers: 4,
+            shards: 2,
+            clocks: 15,
+            ..opts()
+        },
+        lda,
+        &[0, 2, 8],
+    )
+    .expect("fig1 breakdown");
+    println!("{:<10} {:>9} {:>9} {:>7}", "label", "comp(s)", "comm(s)", "comm%");
+    for (label, comp, comm, frac) in rows {
+        println!("{label:<10} {comp:>9.2} {comm:>9.2} {:>6.1}%", 100.0 * frac);
+    }
+}

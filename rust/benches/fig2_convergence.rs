@@ -1,0 +1,134 @@
+//! Fig. 2 regenerator (bench form): convergence per iteration and per
+//! second for MF (squared loss) and LDA (log-likelihood) across BSP / SSP
+//! / ESSP, scaled down for `cargo bench`. The CLI (`essptable fig2-mf`,
+//! `essptable fig2-lda`) runs the full-size versions; §Robustness and
+//! §VAP rows are also printed here so one bench run covers the paper's
+//! remaining evaluation claims.
+//!
+//! Expected shape (paper): ESSP >= SSP per iteration and a larger margin
+//! per second; staleness helps SSP substantially, ESSP less (already
+//! fresh); SSP destabilizes at large step x staleness, ESSP does not; VAP
+//! pays read stalls for its value bound.
+
+use std::path::PathBuf;
+
+use essptable::apps::lda::LdaConfig;
+use essptable::apps::mf::MfConfig;
+use essptable::harness::{self, ExpOpts};
+use essptable::sim::straggler::StragglerModel;
+
+fn opts(clocks: u64) -> ExpOpts {
+    ExpOpts {
+        workers: 8,
+        shards: 4,
+        seed: 42,
+        clocks,
+        out_dir: PathBuf::from("results/bench"),
+        straggler: StragglerModel::RandomUniform { max_factor: 2.0 },
+        lan: true,
+        virtual_clock_ms: 15,
+    }
+}
+
+fn mf_cfg() -> MfConfig {
+    MfConfig {
+        rows: 512,
+        cols: 512,
+        minibatch: 0.5,
+        gamma: 0.04,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    println!("== fig2 (MF): squared loss, lower is better ==");
+    let runs = harness::fig2_mf(&opts(30), mf_cfg(), &[3]).expect("fig2 mf");
+    for r in &runs {
+        println!(
+            "{:<8} final {:>12.2}  wall {:>6.2}s",
+            r.label,
+            r.final_value,
+            r.report.wall.as_secs_f64()
+        );
+    }
+
+    println!("\n== fig2 (LDA): log-likelihood, higher is better ==");
+    let lda = LdaConfig {
+        docs: 200,
+        ..Default::default()
+    };
+    let runs = harness::fig2_lda(
+        &ExpOpts {
+            workers: 4,
+            shards: 2,
+            ..opts(20)
+        },
+        lda,
+        &[3],
+    )
+    .expect("fig2 lda");
+    for r in &runs {
+        println!(
+            "{:<8} final {:>14.1}  wall {:>6.2}s",
+            r.label,
+            r.final_value,
+            r.report.wall.as_secs_f64()
+        );
+    }
+
+    println!("\n== robustness: step size x staleness (diverged flags) ==");
+    let rows = harness::robustness(
+        &ExpOpts {
+            workers: 4,
+            shards: 2,
+            virtual_clock_ms: 0,
+            lan: false,
+            straggler: StragglerModel::None,
+            ..opts(30)
+        },
+        MfConfig {
+            rows: 256,
+            cols: 256,
+            minibatch: 1.0,
+            ..mf_cfg()
+        },
+        &[0.05, 0.15],
+        &[0, 5],
+    )
+    .expect("robustness");
+    for r in rows {
+        println!(
+            "{:<8} gamma {:<5} final {:>12.2} diverged {}",
+            r.label, r.gamma, r.final_loss, r.diverged
+        );
+    }
+
+    println!("\n== vap: value-bound stall cost vs essp ==");
+    let rows = harness::vap_compare(
+        &ExpOpts {
+            workers: 4,
+            shards: 2,
+            virtual_clock_ms: 5,
+            ..opts(20)
+        },
+        MfConfig {
+            rows: 256,
+            cols: 256,
+            minibatch: 1.0,
+            ..mf_cfg()
+        },
+        &[0.5, 0.05],
+        3,
+    )
+    .expect("vap compare");
+    for r in rows {
+        println!(
+            "{:<10} wall {:>6.2}s  final {:>10.2}  stall {:>6.2}s over {} reads",
+            r.label,
+            r.wall.as_secs_f64(),
+            r.final_loss,
+            r.stall.as_secs_f64(),
+            r.stalled_reads
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! PS microbenchmarks — §ESSPTable system claims:
+//!   * update coalescing reduces message count and amortizes INC cost,
+//!   * server-push batching beats per-request pull on refresh traffic,
+//!   * the GET/INC hot path is allocation-light and fast.
+//!
+//! Run with `cargo bench --bench ps_throughput`.
+
+use essptable::ps::client::PsClient;
+use essptable::ps::consistency::Consistency;
+use essptable::ps::server::{Cluster, ClusterConfig, PsApp, TableSpec};
+use essptable::ps::types::Clock;
+use essptable::ps::update::UpdateMap;
+use essptable::sim::net::NetConfig;
+use essptable::util::benchkit::bench;
+
+/// Raw coalescing throughput: INCs folded per second.
+fn bench_coalescing() {
+    let mut m = UpdateMap::new();
+    let delta = vec![0.5f32; 32];
+    let r = bench("update coalescing: inc x1e5 into 256 rows", 2, 10, || {
+        for i in 0..100_000u64 {
+            m.inc((0, i % 256), &delta);
+        }
+        let _ = m.drain_routed(4, |k| (k.1 % 4) as usize);
+    });
+    r.print_throughput(1e5, "incs");
+}
+
+/// End-to-end GET/INC/CLOCK rate on an instant network (pure PS overhead).
+fn bench_get_inc_clock(consistency: Consistency, workers: usize) {
+    let label = format!(
+        "e2e {} x{workers}w: 64 get+inc per clock, 200 clocks",
+        consistency.label()
+    );
+    let r = bench(&label, 1, 5, || {
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers,
+            shards: 2,
+            consistency,
+            net: NetConfig::instant(),
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 256, 32));
+        let apps: Vec<Box<dyn PsApp>> = (0..workers)
+            .map(|w| {
+                Box::new(move |ps: &mut PsClient, _c: Clock| {
+                    for i in 0..64u64 {
+                        let key = (0, (w as u64 * 64 + i) % 256);
+                        let _row = ps.get(key);
+                        ps.inc(key, &[0.001f32; 32]);
+                    }
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let _ = cluster.run(apps, 200);
+    });
+    let ops = (workers * 64 * 200) as f64;
+    r.print_throughput(ops, "get+inc");
+}
+
+/// Push (ESSP) vs pull (SSP) refresh traffic for the same workload:
+/// message counts + bytes (the batching claim).
+fn bench_push_vs_pull_traffic() {
+    for consistency in [Consistency::Ssp { s: 1 }, Consistency::Essp { s: 1 }] {
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers: 4,
+            shards: 2,
+            consistency,
+            net: NetConfig::instant(),
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 512, 32));
+        let apps: Vec<Box<dyn PsApp>> = (0..4)
+            .map(|w| {
+                Box::new(move |ps: &mut PsClient, _c: Clock| {
+                    // Shared hot set: every worker reads+writes 128 rows.
+                    for i in 0..128u64 {
+                        let key = (0, (w as u64 * 37 + i * 3) % 512);
+                        let _ = ps.get(key);
+                        ps.inc(key, &[0.01; 32]);
+                    }
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let report = cluster.run(apps, 100);
+        println!(
+            "{:<44} {:>10} msgs {:>10.1} MB  ({} pull-replies, {} push-rows)",
+            format!("refresh traffic {}", consistency.label()),
+            report.net_messages,
+            report.net_bytes as f64 / 1e6,
+            report
+                .shard_stats
+                .iter()
+                .map(|s| s.gets_served)
+                .sum::<u64>(),
+            report
+                .shard_stats
+                .iter()
+                .map(|s| s.rows_pushed)
+                .sum::<u64>(),
+        );
+    }
+}
+
+fn main() {
+    println!("== ps_throughput (paper §ESSPTable system claims) ==");
+    bench_coalescing();
+    for c in [
+        Consistency::Bsp,
+        Consistency::Ssp { s: 3 },
+        Consistency::Essp { s: 3 },
+        Consistency::Async { refresh_every: 1 },
+    ] {
+        bench_get_inc_clock(c, 4);
+    }
+    bench_push_vs_pull_traffic();
+}

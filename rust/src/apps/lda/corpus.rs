@@ -1,0 +1,120 @@
+//! Synthetic LDA corpus from the model's own generative story
+//! (DESIGN.md §5 substitution for NYT): φ_k ~ Dir(β₀) over the vocabulary,
+//! θ_d ~ Dir(α₀) over topics, tokens ~ Mult(θ_d) ∘ Mult(φ_z). Gibbs on
+//! such a corpus exhibits the same PS access pattern (hot word rows,
+//! doc-major traversal) and a log-likelihood ascent like the paper's.
+
+use super::LdaConfig;
+use crate::util::rng::Rng;
+
+/// A corpus: docs of token ids.
+#[derive(Debug)]
+pub struct Corpus {
+    pub docs: Vec<Vec<u32>>,
+    pub cfg: LdaConfig,
+}
+
+impl Corpus {
+    pub fn generate(cfg: &LdaConfig) -> Self {
+        cfg.validate().expect("invalid LdaConfig");
+        let mut rng = Rng::with_stream(cfg.seed, 0x1DA);
+        // Topic-word distributions.
+        let phi: Vec<Vec<f64>> = (0..cfg.topics)
+            .map(|_| rng.dirichlet(cfg.gen_beta, cfg.vocab))
+            .collect();
+        let docs = (0..cfg.docs)
+            .map(|_| {
+                let theta = rng.dirichlet(cfg.gen_alpha, cfg.topics);
+                (0..cfg.doc_len)
+                    .map(|_| {
+                        let z = rng.categorical(&theta);
+                        rng.categorical(&phi[z]) as u32
+                    })
+                    .collect()
+            })
+            .collect();
+        Self {
+            docs,
+            cfg: cfg.clone(),
+        }
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.docs.iter().map(|d| d.len()).sum()
+    }
+
+    /// Docs owned by `worker` (striped).
+    pub fn docs_for_worker(&self, worker: usize, workers: usize) -> Vec<usize> {
+        (0..self.docs.len())
+            .filter(|d| d % workers == worker)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let cfg = LdaConfig::default();
+        let a = Corpus::generate(&cfg);
+        let b = Corpus::generate(&cfg);
+        assert_eq!(a.docs[..10], b.docs[..10]);
+    }
+
+    #[test]
+    fn shape_and_bounds() {
+        let cfg = LdaConfig {
+            docs: 50,
+            doc_len: 20,
+            vocab: 100,
+            ..Default::default()
+        };
+        let c = Corpus::generate(&cfg);
+        assert_eq!(c.docs.len(), 50);
+        assert_eq!(c.total_tokens(), 1000);
+        assert!(c
+            .docs
+            .iter()
+            .flatten()
+            .all(|&w| (w as usize) < cfg.vocab));
+    }
+
+    #[test]
+    fn topical_structure_exists() {
+        // A topic-concentrated corpus has lower unigram entropy per doc
+        // than the global unigram distribution: docs reuse few topics'
+        // vocabularies. Check docs have repeated words (non-uniformity).
+        let cfg = LdaConfig {
+            docs: 40,
+            doc_len: 100,
+            vocab: 2000,
+            gen_alpha: 0.05,
+            gen_beta: 0.01,
+            ..Default::default()
+        };
+        let c = Corpus::generate(&cfg);
+        let mut repeats = 0usize;
+        for d in &c.docs {
+            let mut sorted = d.clone();
+            sorted.sort_unstable();
+            let n = sorted.len();
+            sorted.dedup();
+            repeats += n - sorted.len();
+        }
+        // With uniform sampling over 2000 words, ~2.5 repeats/doc expected;
+        // topic concentration should give far more.
+        assert!(
+            repeats > 40 * 10,
+            "corpus lacks topical concentration: {repeats} repeats"
+        );
+    }
+
+    #[test]
+    fn worker_striping_partitions() {
+        let c = Corpus::generate(&LdaConfig::default());
+        let total: usize = (0..3).map(|w| c.docs_for_worker(w, 3).len()).sum();
+        assert_eq!(total, c.docs.len());
+    }
+}

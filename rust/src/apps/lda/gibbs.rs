@@ -1,0 +1,252 @@
+//! Collapsed Gibbs sampler for LDA over the PS (the paper's LDA worker).
+//!
+//! Per token w in doc d with current assignment z:
+//!   1. decrement n_dk locally; INC(-1) on the word row and topic row;
+//!   2. sample z' ∝ (n_wk + β)(n_dk + α) / (n_k + Vβ) from the PS view;
+//!   3. increment n_d,z' locally; INC(+1) on word/topic rows.
+//!
+//! The word-topic and topic-total counts read in step 2 are *stale* under
+//! SSP/ESSP — that staleness is exactly what the paper studies. Counts are
+//! clamped at >= 0 in the sampler: in-flight negative INCs can transiently
+//! undershoot, which the error-tolerance argument of the paper covers.
+
+use std::sync::Arc;
+
+use crate::ps::client::PsClient;
+use crate::ps::server::{Cluster, ClusterConfig, PsApp, RunReport, TableSpec};
+use crate::ps::types::{Clock, RowId};
+use crate::util::rng::Rng;
+
+use super::corpus::Corpus;
+use super::{LdaConfig, TOPIC_TABLE, WT_TABLE};
+
+/// Per-worker LDA Gibbs sampler.
+pub struct LdaWorker {
+    corpus: Arc<Corpus>,
+    cfg: LdaConfig,
+    my_docs: Vec<usize>,
+    /// Assignments per owned doc (parallel to corpus docs' tokens).
+    z: Vec<Vec<u8>>,
+    /// Local doc-topic counts per owned doc.
+    ndk: Vec<Vec<f32>>,
+    rng: Rng,
+    cursor: usize,
+    initialized: bool,
+}
+
+impl LdaWorker {
+    pub fn new(corpus: Arc<Corpus>, worker: usize, workers: usize) -> Self {
+        let cfg = corpus.cfg.clone();
+        let my_docs = corpus.docs_for_worker(worker, workers);
+        let rng = Rng::with_stream(cfg.seed ^ 0x91bb5, worker as u64);
+        Self {
+            corpus,
+            cfg,
+            my_docs,
+            z: Vec::new(),
+            ndk: Vec::new(),
+            rng,
+            cursor: 0,
+            initialized: false,
+        }
+    }
+
+    /// Random init: assign topics uniformly, push all counts to the PS.
+    fn init(&mut self, ps: &mut PsClient) {
+        let k = self.cfg.topics;
+        for &doc in &self.my_docs {
+            let tokens = &self.corpus.docs[doc];
+            let mut zs = Vec::with_capacity(tokens.len());
+            let mut counts = vec![0.0f32; k];
+            for &w in tokens {
+                let topic = self.rng.usize_below(k) as u8;
+                zs.push(topic);
+                counts[topic as usize] += 1.0;
+                ps.inc_sparse((WT_TABLE, w as RowId), &[(topic as usize, 1.0)]);
+                ps.inc_sparse((TOPIC_TABLE, 0), &[(topic as usize, 1.0)]);
+            }
+            self.z.push(zs);
+            self.ndk.push(counts);
+        }
+        self.initialized = true;
+    }
+
+    fn docs_per_clock(&self) -> usize {
+        ((self.my_docs.len() as f64 * self.cfg.minibatch).ceil() as usize)
+            .max(1)
+            .min(self.my_docs.len().max(1))
+    }
+
+    /// One Gibbs sweep over a doc. Returns the doc's log-likelihood
+    /// contribution under the *current* (stale) PS view.
+    fn sweep_doc(&mut self, ps: &mut PsClient, local_idx: usize) -> f64 {
+        let k = self.cfg.topics;
+        let (alpha, beta) = (self.cfg.alpha as f32, self.cfg.beta as f32);
+        let vbeta = self.cfg.vocab as f32 * beta;
+        let doc = self.my_docs[local_idx];
+        // Clone to satisfy the borrow checker; doc_len * 1 byte is tiny.
+        let tokens = self.corpus.docs[doc].clone();
+        let mut loglik = 0.0f64;
+        let doc_len = tokens.len() as f32;
+
+        for (t, &w) in tokens.iter().enumerate() {
+            let old = self.z[local_idx][t] as usize;
+            // 1. Remove the token from the counts.
+            self.ndk[local_idx][old] -= 1.0;
+            ps.inc_sparse((WT_TABLE, w as RowId), &[(old, -1.0)]);
+            ps.inc_sparse((TOPIC_TABLE, 0), &[(old, -1.0)]);
+
+            // 2. Sample from the conditional under the (stale) PS view.
+            let nwk = ps.get((WT_TABLE, w as RowId));
+            let nk = ps.get((TOPIC_TABLE, 0));
+            let ndk = &self.ndk[local_idx];
+            let mut weights = vec![0.0f64; k];
+            let mut p_token = 0.0f64; // predictive p(w|d) for log-lik
+            for kk in 0..k {
+                let a = (nwk[kk].max(0.0) + beta) as f64;
+                let b = (ndk[kk].max(0.0) + alpha) as f64;
+                let c = (nk[kk].max(0.0) + vbeta) as f64;
+                weights[kk] = a * b / c;
+                p_token += (a / c) * (b / (doc_len - 1.0 + k as f32 * alpha) as f64);
+            }
+            let new = self.rng.categorical(&weights);
+            loglik += p_token.max(1e-300).ln();
+
+            // 3. Add it back under the new topic.
+            self.z[local_idx][t] = new as u8;
+            self.ndk[local_idx][new] += 1.0;
+            ps.inc_sparse((WT_TABLE, w as RowId), &[(new, 1.0)]);
+            ps.inc_sparse((TOPIC_TABLE, 0), &[(new, 1.0)]);
+        }
+        loglik
+    }
+}
+
+impl PsApp for LdaWorker {
+    fn run_clock(&mut self, ps: &mut PsClient, _clock: Clock) -> Option<f64> {
+        if !self.initialized {
+            self.init(ps);
+            return None; // counts not yet global: no metric for clock 0
+        }
+        if self.my_docs.is_empty() {
+            return None;
+        }
+        let n = self.docs_per_clock();
+        let mut loglik = 0.0;
+        for i in 0..n {
+            // Spread doc sweeps across the (virtual) clock.
+            ps.pace(i, n);
+            let idx = self.cursor % self.my_docs.len();
+            self.cursor += 1;
+            loglik += self.sweep_doc(ps, idx);
+        }
+        Some(loglik)
+    }
+}
+
+/// Assemble and run an LDA experiment.
+pub fn run_lda(
+    cluster_cfg: ClusterConfig,
+    lda_cfg: LdaConfig,
+    clocks: u64,
+) -> (RunReport, Arc<Corpus>) {
+    lda_cfg.validate().expect("invalid LdaConfig");
+    let corpus = Arc::new(Corpus::generate(&lda_cfg));
+    let workers = cluster_cfg.workers;
+    let mut cluster = Cluster::new(cluster_cfg);
+    cluster.add_table(TableSpec::zeros(
+        WT_TABLE,
+        lda_cfg.vocab as RowId,
+        lda_cfg.topics,
+    ));
+    cluster.add_table(TableSpec::zeros(TOPIC_TABLE, 1, lda_cfg.topics));
+    let apps: Vec<Box<dyn PsApp>> = (0..workers)
+        .map(|w| Box::new(LdaWorker::new(corpus.clone(), w, workers)) as Box<dyn PsApp>)
+        .collect();
+    let report = cluster.run(apps, clocks);
+    (report, corpus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::consistency::Consistency;
+
+    fn tiny() -> LdaConfig {
+        LdaConfig {
+            vocab: 60,
+            topics: 4,
+            docs: 40,
+            doc_len: 30,
+            minibatch: 1.0,
+            ..Default::default()
+        }
+    }
+
+    fn run(consistency: Consistency, clocks: u64) -> (RunReport, Arc<Corpus>) {
+        run_lda(
+            ClusterConfig {
+                workers: 2,
+                shards: 2,
+                consistency,
+                ..Default::default()
+            },
+            tiny(),
+            clocks,
+        )
+    }
+
+    #[test]
+    fn counts_conserved_bsp() {
+        let (report, corpus) = run(Consistency::Bsp, 6);
+        // Total word-topic count mass == total tokens (every token counted
+        // exactly once, no update lost despite +/- churn).
+        let mut total = 0.0f64;
+        for w in 0..corpus.cfg.vocab as u64 {
+            if let Some(row) = report.table_rows.get(&(WT_TABLE, w)) {
+                total += row.iter().map(|&x| x as f64).sum::<f64>();
+            }
+        }
+        assert!(
+            (total - corpus.total_tokens() as f64).abs() < 1e-3,
+            "mass {total} vs {} tokens",
+            corpus.total_tokens()
+        );
+        // Topic totals must match too.
+        let tt: f64 = report.table_rows[&(TOPIC_TABLE, 0)]
+            .iter()
+            .map(|&x| x as f64)
+            .sum();
+        assert!((tt - corpus.total_tokens() as f64).abs() < 1e-3);
+    }
+
+    #[test]
+    fn counts_conserved_essp() {
+        let (report, corpus) = run(Consistency::Essp { s: 2 }, 6);
+        let tt: f64 = report.table_rows[&(TOPIC_TABLE, 0)]
+            .iter()
+            .map(|&x| x as f64)
+            .sum();
+        assert!((tt - corpus.total_tokens() as f64).abs() < 1e-3);
+    }
+
+    #[test]
+    fn loglik_improves_with_sweeps() {
+        let (report, _) = run(Consistency::Essp { s: 1 }, 12);
+        let series = report.convergence.summed();
+        assert!(series.len() >= 10);
+        let early = series[1].value; // clock 1 = first real sweep
+        let late = series.last().unwrap().value;
+        assert!(
+            late > early,
+            "log-likelihood should ascend: {early} -> {late}"
+        );
+    }
+
+    #[test]
+    fn assignments_stay_in_range() {
+        let corpus = Arc::new(Corpus::generate(&tiny()));
+        let w = LdaWorker::new(corpus.clone(), 0, 2);
+        assert!(w.my_docs.iter().all(|&d| d % 2 == 0));
+    }
+}

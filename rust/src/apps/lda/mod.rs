@@ -1,0 +1,65 @@
+//! LDA topic modeling via collapsed Gibbs sampling on the parameter
+//! server — the paper's second benchmark (NYT corpus, V=100k, K=100,
+//! 8 nodes; here a synthetic Dirichlet-generated corpus scaled to the
+//! testbed, DESIGN.md §5).
+//!
+//! PS layout, as in the paper: the word-topic count table (one PS row per
+//! vocabulary word, K floats) and the topic-total row are globally shared;
+//! doc-topic counts and topic assignments stay worker-local. Counts are
+//! float-valued on the server because updates are additive INCs (the paper
+//! does the same — commutative/associative coalescing needs a group, and
+//! negative in-flight counts are tolerated by the sampler via clamping).
+
+pub mod corpus;
+pub mod gibbs;
+
+use crate::ps::types::TableId;
+
+/// PS table: word-topic counts, V rows x K.
+pub const WT_TABLE: TableId = 10;
+/// PS table: topic totals, 1 row x K.
+pub const TOPIC_TABLE: TableId = 11;
+
+/// LDA workload configuration.
+#[derive(Debug, Clone)]
+pub struct LdaConfig {
+    pub vocab: usize,
+    pub topics: usize,
+    pub docs: usize,
+    /// Tokens per document.
+    pub doc_len: usize,
+    /// Dirichlet hyperparameters of the *generative* model.
+    pub gen_alpha: f64,
+    pub gen_beta: f64,
+    /// Sampler hyperparameters.
+    pub alpha: f64,
+    pub beta: f64,
+    /// Fraction of a worker's docs swept per clock (paper: 50% minibatch).
+    pub minibatch: f64,
+    pub seed: u64,
+}
+
+impl Default for LdaConfig {
+    fn default() -> Self {
+        Self {
+            vocab: 500,
+            topics: 10,
+            docs: 400,
+            doc_len: 64,
+            gen_alpha: 0.08,
+            gen_beta: 0.05,
+            alpha: 0.1,
+            beta: 0.1,
+            minibatch: 0.5,
+            seed: 11,
+        }
+    }
+}
+
+impl LdaConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.topics > 0 && self.vocab > 1 && self.docs > 0);
+        anyhow::ensure!(self.minibatch > 0.0 && self.minibatch <= 1.0);
+        Ok(())
+    }
+}

@@ -1,0 +1,225 @@
+//! L2-regularized logistic regression via SGD on the PS.
+//!
+//! Not in the paper's evaluation, but a one-table, one-row workload that
+//! (a) demonstrates the general-purpose claim — a third algorithm runs
+//! unchanged on every consistency model — and (b) gives the property tests
+//! a convex, single-parameter-vector workload where BSP equivalence and
+//! staleness effects are easy to reason about.
+
+use std::sync::Arc;
+
+use crate::ps::client::PsClient;
+use crate::ps::server::{Cluster, ClusterConfig, PsApp, RunReport, TableSpec};
+use crate::ps::types::{Clock, TableId};
+use crate::util::rng::Rng;
+
+/// PS table: a single row holding the weight vector (dim + 1 with bias).
+pub const W_TABLE: TableId = 30;
+
+#[derive(Debug, Clone)]
+pub struct LogRegConfig {
+    pub dim: usize,
+    pub examples: usize,
+    /// Margin scale of the synthetic separator.
+    pub margin: f32,
+    /// Label-noise rate.
+    pub flip: f64,
+    pub lr: f32,
+    pub lambda: f32,
+    /// Examples per worker per clock.
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Default for LogRegConfig {
+    fn default() -> Self {
+        Self {
+            dim: 32,
+            examples: 2000,
+            margin: 2.0,
+            flip: 0.02,
+            lr: 0.1,
+            lambda: 1e-4,
+            batch: 64,
+            seed: 21,
+        }
+    }
+}
+
+/// Synthetic linearly-separable-with-noise dataset.
+pub struct LogRegData {
+    pub xs: Vec<Vec<f32>>,
+    pub ys: Vec<f32>, // +-1
+    pub cfg: LogRegConfig,
+}
+
+impl LogRegData {
+    pub fn generate(cfg: &LogRegConfig) -> Self {
+        let mut rng = Rng::with_stream(cfg.seed, 0x106e9);
+        let w_true: Vec<f32> = (0..cfg.dim).map(|_| rng.normal_f32()).collect();
+        let norm: f32 = w_true.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let mut xs = Vec::with_capacity(cfg.examples);
+        let mut ys = Vec::with_capacity(cfg.examples);
+        for _ in 0..cfg.examples {
+            let x: Vec<f32> = (0..cfg.dim).map(|_| rng.normal_f32()).collect();
+            let score: f32 =
+                x.iter().zip(&w_true).map(|(a, b)| a * b).sum::<f32>() / norm * cfg.margin;
+            let mut y = if score >= 0.0 { 1.0 } else { -1.0 };
+            if rng.f64() < cfg.flip {
+                y = -y;
+            }
+            xs.push(x);
+            ys.push(y);
+        }
+        Self {
+            xs,
+            ys,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Mean log-loss of weights `w` (with bias at the end) over all data.
+    pub fn log_loss(&self, w: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        for (x, &y) in self.xs.iter().zip(&self.ys) {
+            let z: f32 = x.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() + w[self.cfg.dim];
+            total += (1.0 + (-(y * z) as f64).exp()).ln();
+        }
+        total / self.xs.len() as f64
+    }
+
+    pub fn accuracy(&self, w: &[f32]) -> f64 {
+        let mut correct = 0usize;
+        for (x, &y) in self.xs.iter().zip(&self.ys) {
+            let z: f32 = x.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() + w[self.cfg.dim];
+            if z * y > 0.0 {
+                correct += 1;
+            }
+        }
+        correct as f64 / self.xs.len() as f64
+    }
+}
+
+/// Per-worker SGD trainer.
+pub struct LogRegWorker {
+    data: Arc<LogRegData>,
+    my_examples: Vec<usize>,
+    cursor: usize,
+    cfg: LogRegConfig,
+}
+
+impl LogRegWorker {
+    pub fn new(data: Arc<LogRegData>, worker: usize, workers: usize) -> Self {
+        let cfg = data.cfg.clone();
+        let my_examples = (0..data.xs.len()).filter(|i| i % workers == worker).collect();
+        Self {
+            data,
+            my_examples,
+            cursor: 0,
+            cfg,
+        }
+    }
+}
+
+impl PsApp for LogRegWorker {
+    fn run_clock(&mut self, ps: &mut PsClient, _clock: Clock) -> Option<f64> {
+        let w = ps.get((W_TABLE, 0));
+        let dim = self.cfg.dim;
+        let mut grad = vec![0.0f32; dim + 1];
+        let mut loss = 0.0f64;
+        let n = self.cfg.batch.min(self.my_examples.len());
+        for _ in 0..n {
+            let idx = self.my_examples[self.cursor % self.my_examples.len()];
+            self.cursor += 1;
+            let (x, y) = (&self.data.xs[idx], self.data.ys[idx]);
+            let z: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum::<f32>() + w[dim];
+            let margin = (y * z) as f64;
+            loss += (1.0 + (-margin).exp()).ln();
+            // d/dw logloss = -sigmoid(-y z) * y * x
+            let coef = -(1.0 / (1.0 + margin.exp())) as f32 * y;
+            for (g, xv) in grad.iter_mut().zip(x) {
+                *g += coef * xv;
+            }
+            grad[dim] += coef;
+        }
+        let scale = -self.cfg.lr / n as f32;
+        let mut delta: Vec<f32> = grad.iter().map(|g| g * scale).collect();
+        for (d, wv) in delta.iter_mut().zip(&w) {
+            *d -= self.cfg.lr * self.cfg.lambda * wv;
+        }
+        ps.inc((W_TABLE, 0), &delta);
+        Some(loss / n as f64)
+    }
+}
+
+/// Assemble and run a logistic-regression experiment.
+pub fn run_logreg(
+    cluster_cfg: ClusterConfig,
+    cfg: LogRegConfig,
+    clocks: u64,
+) -> (RunReport, Arc<LogRegData>) {
+    let data = Arc::new(LogRegData::generate(&cfg));
+    let workers = cluster_cfg.workers;
+    let mut cluster = Cluster::new(cluster_cfg);
+    cluster.add_table(TableSpec::zeros(W_TABLE, 1, cfg.dim + 1));
+    let apps: Vec<Box<dyn PsApp>> = (0..workers)
+        .map(|w| Box::new(LogRegWorker::new(data.clone(), w, workers)) as Box<dyn PsApp>)
+        .collect();
+    let report = cluster.run(apps, clocks);
+    (report, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::consistency::Consistency;
+
+    #[test]
+    fn data_is_mostly_separable() {
+        let data = LogRegData::generate(&LogRegConfig::default());
+        assert_eq!(data.xs.len(), 2000);
+        // Zero weights: 50% accuracy, loss ln 2.
+        let w0 = vec![0.0f32; 33];
+        assert!((data.log_loss(&w0) - (2.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trains_to_high_accuracy_essp() {
+        let (report, data) = run_logreg(
+            ClusterConfig {
+                workers: 4,
+                shards: 1,
+                consistency: Consistency::Essp { s: 1 },
+                ..Default::default()
+            },
+            LogRegConfig::default(),
+            40,
+        );
+        let w = &report.table_rows[&(W_TABLE, 0)];
+        let acc = data.accuracy(w);
+        assert!(acc > 0.9, "accuracy {acc}");
+        let loss = data.log_loss(w);
+        assert!(loss < 0.35, "loss {loss}");
+    }
+
+    #[test]
+    fn loss_curve_monotoneish() {
+        let (report, _) = run_logreg(
+            ClusterConfig {
+                workers: 2,
+                shards: 1,
+                consistency: Consistency::Bsp,
+                ..Default::default()
+            },
+            LogRegConfig::default(),
+            60,
+        );
+        let s = report.convergence.summed();
+        assert!(
+            s.last().unwrap().value < 0.6 * s.first().unwrap().value,
+            "{} -> {}",
+            s.first().unwrap().value,
+            s.last().unwrap().value
+        );
+    }
+}

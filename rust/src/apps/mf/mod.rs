@@ -1,0 +1,88 @@
+//! Matrix Factorization via SGD on the parameter server — the paper's
+//! first benchmark (Netflix, rank 100, 64 nodes; here a synthetic
+//! Netflix-like matrix scaled to the testbed, see DESIGN.md §5).
+//!
+//! Both factor matrices live in the PS, as in the paper: table
+//! [`L_TABLE`] holds the row factors (one PS row per matrix row, K floats),
+//! table [`R_TABLE`] the column factors. Data is partitioned by row-blocks
+//! across workers; each clock a worker processes a minibatch of dense
+//! (64x64) blocks, computing deltas with either the AOT-compiled JAX+Pallas
+//! kernel (`mf_block_64x64x32`, the production path) or a pure-rust
+//! reference (`native`, used for tests and fast experiment sweeps).
+
+pub mod data;
+pub mod native;
+pub mod train;
+
+use crate::ps::types::TableId;
+
+/// PS table holding L (one PS row per matrix row; K floats).
+pub const L_TABLE: TableId = 0;
+/// PS table holding R (one PS row per matrix column; K floats).
+pub const R_TABLE: TableId = 1;
+
+/// MF workload configuration.
+#[derive(Debug, Clone)]
+pub struct MfConfig {
+    /// Matrix rows (multiple of `block`).
+    pub rows: usize,
+    /// Matrix cols (multiple of `block`).
+    pub cols: usize,
+    /// Factorization rank (must equal the artifact's K for the XLA path).
+    pub rank: usize,
+    /// Dense block edge (must equal the artifact's BM=BN for XLA).
+    pub block: usize,
+    /// Ground-truth rank used to synthesize the matrix.
+    pub true_rank: usize,
+    /// Observed entries per row (Netflix-like sparsity).
+    pub nnz_per_row: usize,
+    /// Observation noise stddev.
+    pub noise: f32,
+    /// SGD step size (absorbed constants, as in the paper).
+    pub gamma: f32,
+    /// L2 penalty.
+    pub lambda: f32,
+    /// Fraction of a worker's blocks processed per clock (the paper's
+    /// "1% / 10% minibatch per Clock()").
+    pub minibatch: f64,
+    /// Init scale for L and R.
+    pub init_scale: f32,
+    pub seed: u64,
+}
+
+impl Default for MfConfig {
+    fn default() -> Self {
+        Self {
+            rows: 512,
+            cols: 512,
+            rank: 32,
+            block: 64,
+            true_rank: 8,
+            nnz_per_row: 48,
+            noise: 0.05,
+            gamma: 0.03,
+            lambda: 0.05,
+            minibatch: 0.25,
+            init_scale: 0.1,
+            seed: 7,
+        }
+    }
+}
+
+impl MfConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.rows % self.block == 0, "rows % block != 0");
+        anyhow::ensure!(self.cols % self.block == 0, "cols % block != 0");
+        anyhow::ensure!(self.nnz_per_row <= self.cols, "nnz_per_row > cols");
+        anyhow::ensure!(self.rank > 0 && self.block > 0);
+        Ok(())
+    }
+
+    pub fn row_blocks(&self) -> usize {
+        self.rows / self.block
+    }
+
+    pub fn col_blocks(&self) -> usize {
+        self.cols / self.block
+    }
+}

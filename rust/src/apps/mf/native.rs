@@ -1,0 +1,199 @@
+//! Pure-rust reference implementation of the MF block gradient — the same
+//! contract as the AOT kernel `mf_block_64x64x32`:
+//!
+//! ```text
+//! E  = mask ⊙ (D − L·R)
+//! dL = γ (E·Rᵀ − λL)
+//! dR = γ (Lᵀ·E − λR)
+//! ```
+//!
+//! Used (a) to cross-check the XLA path in integration tests, (b) as the
+//! fast backend for consistency-model sweeps where the figure of interest
+//! is staleness/convergence shape rather than kernel throughput.
+
+/// Compute block deltas. All matrices row-major: `l` is (bm x k),
+/// `r` is (k x bn), `d`/`mask` are (bm x bn). Returns (dl, dr, sq_loss,
+/// obs_count).
+pub fn block_grads(
+    l: &[f32],
+    r: &[f32],
+    d: &[f32],
+    mask: &[f32],
+    bm: usize,
+    bn: usize,
+    k: usize,
+    gamma: f32,
+    lambda: f32,
+) -> (Vec<f32>, Vec<f32>, f32, f32) {
+    debug_assert_eq!(l.len(), bm * k);
+    debug_assert_eq!(r.len(), k * bn);
+    debug_assert_eq!(d.len(), bm * bn);
+    debug_assert_eq!(mask.len(), bm * bn);
+
+    // E = mask * (D - L @ R), computed tile-free (block fits in cache).
+    let mut e = vec![0.0f32; bm * bn];
+    let mut sq_loss = 0.0f32;
+    let mut cnt = 0.0f32;
+    for i in 0..bm {
+        let li = &l[i * k..(i + 1) * k];
+        for j in 0..bn {
+            let m = mask[i * bn + j];
+            if m == 0.0 {
+                continue;
+            }
+            let mut dot = 0.0f32;
+            for (kk, &lv) in li.iter().enumerate() {
+                dot += lv * r[kk * bn + j];
+            }
+            let err = d[i * bn + j] - dot;
+            e[i * bn + j] = err;
+            sq_loss += err * err;
+            cnt += m;
+        }
+    }
+
+    // dL = gamma * (E @ R^T - lambda * L)
+    let mut dl = vec![0.0f32; bm * k];
+    for i in 0..bm {
+        for kk in 0..k {
+            let mut acc = 0.0f32;
+            for j in 0..bn {
+                acc += e[i * bn + j] * r[kk * bn + j];
+            }
+            dl[i * k + kk] = gamma * (acc - lambda * l[i * k + kk]);
+        }
+    }
+
+    // dR = gamma * (L^T @ E - lambda * R)
+    let mut dr = vec![0.0f32; k * bn];
+    for kk in 0..k {
+        for j in 0..bn {
+            let mut acc = 0.0f32;
+            for i in 0..bm {
+                acc += l[i * k + kk] * e[i * bn + j];
+            }
+            dr[kk * bn + j] = gamma * (acc - lambda * r[kk * bn + j]);
+        }
+    }
+
+    (dl, dr, sq_loss, cnt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+        (0..n).map(|_| s * rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn zero_mask_is_pure_shrinkage() {
+        let mut rng = Rng::new(1);
+        let (bm, bn, k) = (8, 8, 4);
+        let l = randv(&mut rng, bm * k, 1.0);
+        let r = randv(&mut rng, k * bn, 1.0);
+        let d = randv(&mut rng, bm * bn, 1.0);
+        let mask = vec![0.0; bm * bn];
+        let (dl, dr, loss, cnt) = block_grads(&l, &r, &d, &mask, bm, bn, k, 0.1, 0.5);
+        for (x, lv) in dl.iter().zip(&l) {
+            assert!((x - (-0.1 * 0.5 * lv)).abs() < 1e-6);
+        }
+        for (x, rv) in dr.iter().zip(&r) {
+            assert!((x - (-0.1 * 0.5 * rv)).abs() < 1e-6);
+        }
+        assert_eq!((loss, cnt), (0.0, 0.0));
+    }
+
+    #[test]
+    fn gradient_direction_reduces_loss() {
+        let mut rng = Rng::new(2);
+        let (bm, bn, k) = (16, 16, 4);
+        let lt = randv(&mut rng, bm * k, 0.5);
+        let rt = randv(&mut rng, k * bn, 0.5);
+        // D = Lt @ Rt exactly, full mask.
+        let mut d = vec![0.0f32; bm * bn];
+        for i in 0..bm {
+            for j in 0..bn {
+                for kk in 0..k {
+                    d[i * bn + j] += lt[i * k + kk] * rt[kk * bn + j];
+                }
+            }
+        }
+        let mask = vec![1.0; bm * bn];
+        let mut l = randv(&mut rng, bm * k, 0.3);
+        let mut r = randv(&mut rng, k * bn, 0.3);
+        let (_, _, loss0, _) = block_grads(&l, &r, &d, &mask, bm, bn, k, 0.01, 0.0);
+        for _ in 0..200 {
+            let (dl, dr, _, _) = block_grads(&l, &r, &d, &mask, bm, bn, k, 0.01, 0.0);
+            for (a, x) in l.iter_mut().zip(&dl) {
+                *a += x;
+            }
+            for (a, x) in r.iter_mut().zip(&dr) {
+                *a += x;
+            }
+        }
+        let (_, _, loss1, _) = block_grads(&l, &r, &d, &mask, bm, bn, k, 0.01, 0.0);
+        assert!(loss1 < 0.1 * loss0, "{loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn finite_difference_check() {
+        // Objective f = sum mask*(D-LR)^2 + lambda(|L|^2+|R|^2); our delta
+        // is -gamma/2 * df (constants absorbed): check direction via f
+        // decrease for small gamma on a single coordinate bump.
+        let mut rng = Rng::new(3);
+        let (bm, bn, k) = (4, 4, 2);
+        let l = randv(&mut rng, bm * k, 0.5);
+        let r = randv(&mut rng, k * bn, 0.5);
+        let d = randv(&mut rng, bm * bn, 1.0);
+        let mask: Vec<f32> = (0..bm * bn).map(|i| (i % 3 == 0) as u8 as f32).collect();
+        let f = |l: &[f32], r: &[f32]| -> f64 {
+            let mut tot = 0.0f64;
+            for i in 0..bm {
+                for j in 0..bn {
+                    if mask[i * bn + j] == 0.0 {
+                        continue;
+                    }
+                    let mut dot = 0.0f32;
+                    for kk in 0..k {
+                        dot += l[i * k + kk] * r[kk * bn + j];
+                    }
+                    tot += ((d[i * bn + j] - dot) as f64).powi(2);
+                }
+            }
+            let lam = 0.1f64;
+            tot + lam * (l.iter().map(|x| (x * x) as f64).sum::<f64>()
+                + r.iter().map(|x| (x * x) as f64).sum::<f64>())
+        };
+        let (dl, dr, _, _) = block_grads(&l, &r, &d, &mask, bm, bn, k, 1.0, 0.1);
+        // delta = -1/2 grad f. Finite-difference the full objective.
+        let eps = 1e-3f32;
+        for idx in [0usize, 3, 7] {
+            let mut lp = l.clone();
+            lp[idx] += eps;
+            let mut lm = l.clone();
+            lm[idx] -= eps;
+            let fd = (f(&lp, &r) - f(&lm, &r)) / (2.0 * eps as f64);
+            let analytic = -2.0 * dl[idx] as f64;
+            assert!(
+                (fd - analytic).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx {idx}: fd {fd} vs {analytic}"
+            );
+        }
+        let eps = 1e-3f32;
+        for idx in [1usize, 5] {
+            let mut rp = r.clone();
+            rp[idx] += eps;
+            let mut rm = r.clone();
+            rm[idx] -= eps;
+            let fd = (f(&l, &rp) - f(&l, &rm)) / (2.0 * eps as f64);
+            let analytic = -2.0 * dr[idx] as f64;
+            assert!(
+                (fd - analytic).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx {idx}: fd {fd} vs {analytic}"
+            );
+        }
+    }
+}

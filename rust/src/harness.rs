@@ -1,0 +1,377 @@
+//! Experiment harness: one driver per paper table/figure (DESIGN.md §4).
+//!
+//! Each driver runs the workload across the consistency models the paper
+//! compares, writes the regenerating CSV under `results/`, and returns a
+//! summary that `main.rs` prints as the paper's rows/series. Absolute
+//! numbers differ from the paper (simulated substrate); the *shape* — who
+//! wins, by what factor, where divergence sets in — is the reproduction
+//! target.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::apps::lda::gibbs::run_lda;
+use crate::apps::lda::LdaConfig;
+use crate::apps::mf::train::{final_sq_loss, run_mf, MfBackend};
+use crate::apps::mf::MfConfig;
+use crate::metrics::convergence::Sample;
+use crate::metrics::export;
+use crate::ps::consistency::Consistency;
+use crate::ps::server::{ClusterConfig, RunReport};
+use crate::sim::net::NetConfig;
+use crate::sim::straggler::StragglerModel;
+
+/// Common experiment options (from the CLI).
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    pub workers: usize,
+    pub shards: usize,
+    pub seed: u64,
+    pub clocks: u64,
+    pub out_dir: PathBuf,
+    /// Straggler injection shared by all runs of an experiment.
+    pub straggler: StragglerModel,
+    /// Network profile ("lan" with delays, or "instant").
+    pub lan: bool,
+    /// Virtual per-clock compute duration (ms); 0 = raw speed. The paper's
+    /// regime — long uniform compute per clock — needs this on a
+    /// timeshared testbed (see ClusterConfig::virtual_clock).
+    pub virtual_clock_ms: u64,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        Self {
+            workers: 8,
+            shards: 4,
+            seed: 42,
+            clocks: 60,
+            out_dir: PathBuf::from("results"),
+            straggler: StragglerModel::RandomUniform { max_factor: 3.0 },
+            lan: true,
+            virtual_clock_ms: 25,
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn cluster(&self, consistency: Consistency) -> ClusterConfig {
+        ClusterConfig {
+            workers: self.workers,
+            shards: self.shards,
+            consistency,
+            net: if self.lan {
+                NetConfig::lan(self.seed)
+            } else {
+                NetConfig::instant()
+            },
+            straggler: self.straggler.clone(),
+            cache_capacity: 0,
+            read_my_writes: true,
+            virtual_clock: (self.virtual_clock_ms > 0)
+                .then(|| Duration::from_millis(self.virtual_clock_ms)),
+            seed: self.seed,
+        }
+    }
+
+    pub fn out(&self, name: &str) -> PathBuf {
+        self.out_dir.join(name)
+    }
+}
+
+/// One labeled run result used by summaries.
+pub struct LabeledRun {
+    pub label: String,
+    pub report: RunReport,
+    pub final_value: f64,
+}
+
+// ---------------------------------------------------------------- FIG1-L
+
+/// Fig. 1 (left): empirical staleness distribution, MF on SSP vs ESSP.
+pub fn fig1_staleness(opts: &ExpOpts, mf: MfConfig, s: i64) -> Result<Vec<LabeledRun>> {
+    let mut runs = Vec::new();
+    for consistency in [Consistency::Ssp { s }, Consistency::Essp { s }] {
+        let (report, data) = run_mf(
+            opts.cluster(consistency),
+            mf.clone(),
+            opts.clocks,
+            MfBackend::Native,
+        );
+        let final_value = final_sq_loss(&report, &data);
+        let label = consistency.label();
+        export::staleness_csv(
+            &opts.out(&format!("fig1_staleness_{}.csv", label.replace(':', "_"))),
+            &label,
+            &report.staleness,
+        )?;
+        runs.push(LabeledRun {
+            label,
+            report,
+            final_value,
+        });
+    }
+    // Combined CSV matching the figure's two series.
+    let mut rows = Vec::new();
+    for run in &runs {
+        let total = run.report.staleness.total().max(1) as f64;
+        for (d, c) in run.report.staleness.buckets() {
+            rows.push(vec![
+                run.label.clone(),
+                d.to_string(),
+                c.to_string(),
+                format!("{:.6}", c as f64 / total),
+            ]);
+        }
+    }
+    export::write_csv(
+        &opts.out("fig1_staleness.csv"),
+        &["label", "differential", "count", "fraction"],
+        &rows,
+    )?;
+    Ok(runs)
+}
+
+// ---------------------------------------------------------------- FIG1-R
+
+/// Fig. 1 (right): communication vs computation breakdown, LDA across
+/// staleness values, SSP vs ESSP.
+pub fn fig1_breakdown(
+    opts: &ExpOpts,
+    lda: LdaConfig,
+    staleness: &[i64],
+) -> Result<Vec<(String, f64, f64, f64)>> {
+    // (label, comp_s, comm_s, comm_fraction)
+    let mut out = Vec::new();
+    for &s in staleness {
+        for consistency in [Consistency::Ssp { s }, Consistency::Essp { s }] {
+            let (report, _) = run_lda(opts.cluster(consistency), lda.clone(), opts.clocks);
+            let comp: f64 = report
+                .timelines
+                .iter()
+                .map(|t| t.total_comp().as_secs_f64())
+                .sum();
+            let comm: f64 = report
+                .timelines
+                .iter()
+                .map(|t| t.total_comm().as_secs_f64())
+                .sum();
+            out.push((
+                consistency.label(),
+                comp,
+                comm,
+                report.comm_fraction(),
+            ));
+        }
+    }
+    let rows: Vec<Vec<String>> = out
+        .iter()
+        .map(|(l, comp, comm, frac)| {
+            vec![
+                l.clone(),
+                format!("{comp:.4}"),
+                format!("{comm:.4}"),
+                format!("{frac:.4}"),
+            ]
+        })
+        .collect();
+    export::write_csv(
+        &opts.out("fig1_breakdown.csv"),
+        &["label", "comp_seconds", "comm_seconds", "comm_fraction"],
+        &rows,
+    )?;
+    Ok(out)
+}
+
+// ------------------------------------------------------------------ FIG2
+
+/// The consistency set Fig. 2 compares at a given staleness list:
+/// BSP plus SSP/ESSP at each s.
+pub fn fig2_models(staleness: &[i64]) -> Vec<Consistency> {
+    let mut v = vec![Consistency::Bsp];
+    for &s in staleness {
+        v.push(Consistency::Ssp { s });
+        v.push(Consistency::Essp { s });
+    }
+    v
+}
+
+/// Fig. 2 (MF): squared-loss convergence per iteration and per second.
+pub fn fig2_mf(opts: &ExpOpts, mf: MfConfig, staleness: &[i64]) -> Result<Vec<LabeledRun>> {
+    let mut runs = Vec::new();
+    let mut series: Vec<(String, Vec<Sample>)> = Vec::new();
+    for consistency in fig2_models(staleness) {
+        let (report, data) = run_mf(
+            opts.cluster(consistency),
+            mf.clone(),
+            opts.clocks,
+            MfBackend::Native,
+        );
+        let final_value = final_sq_loss(&report, &data);
+        series.push((consistency.label(), report.convergence.summed()));
+        runs.push(LabeledRun {
+            label: consistency.label(),
+            report,
+            final_value,
+        });
+    }
+    export::convergence_csv(&opts.out("fig2_mf.csv"), &series)?;
+    Ok(runs)
+}
+
+/// Fig. 2 (LDA): log-likelihood convergence per iteration and per second.
+pub fn fig2_lda(opts: &ExpOpts, lda: LdaConfig, staleness: &[i64]) -> Result<Vec<LabeledRun>> {
+    let mut runs = Vec::new();
+    let mut series: Vec<(String, Vec<Sample>)> = Vec::new();
+    for consistency in fig2_models(staleness) {
+        let (report, _) = run_lda(opts.cluster(consistency), lda.clone(), opts.clocks);
+        let final_value = report.convergence.last_value().unwrap_or(f64::NAN);
+        series.push((consistency.label(), report.convergence.summed()));
+        runs.push(LabeledRun {
+            label: consistency.label(),
+            report,
+            final_value,
+        });
+    }
+    export::convergence_csv(&opts.out("fig2_lda.csv"), &series)?;
+    Ok(runs)
+}
+
+// ------------------------------------------------------------- ROBUSTNESS
+
+/// §Robustness: MF at aggressive step sizes across staleness; SSP should
+/// destabilize/diverge at high staleness while ESSP stays stable.
+pub struct RobustnessRow {
+    pub label: String,
+    pub gamma: f32,
+    pub final_loss: f64,
+    pub diverged: bool,
+}
+
+pub fn robustness(
+    opts: &ExpOpts,
+    mf_base: MfConfig,
+    gammas: &[f32],
+    staleness: &[i64],
+) -> Result<Vec<RobustnessRow>> {
+    let mut rows = Vec::new();
+    // Reference scale: loss with zero training (initial factors).
+    let (report0, data0) = run_mf(
+        opts.cluster(Consistency::Bsp),
+        MfConfig {
+            gamma: 0.0,
+            ..mf_base.clone()
+        },
+        1,
+        MfBackend::Native,
+    );
+    let initial_loss = final_sq_loss(&report0, &data0);
+    for &gamma in gammas {
+        for &s in staleness {
+            for consistency in [Consistency::Ssp { s }, Consistency::Essp { s }] {
+                let mf = MfConfig {
+                    gamma,
+                    ..mf_base.clone()
+                };
+                let (report, data) = run_mf(
+                    opts.cluster(consistency),
+                    mf,
+                    opts.clocks,
+                    MfBackend::Native,
+                );
+                let final_loss = final_sq_loss(&report, &data);
+                let diverged = !final_loss.is_finite() || final_loss > 2.0 * initial_loss;
+                rows.push(RobustnessRow {
+                    label: consistency.label(),
+                    gamma,
+                    final_loss,
+                    diverged,
+                });
+            }
+        }
+    }
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                format!("{}", r.gamma),
+                format!("{:.4}", r.final_loss),
+                r.diverged.to_string(),
+            ]
+        })
+        .collect();
+    export::write_csv(
+        &opts.out("robustness.csv"),
+        &["label", "gamma", "final_loss", "diverged"],
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+// ------------------------------------------------------------------- VAP
+
+pub struct VapRow {
+    pub label: String,
+    pub wall: Duration,
+    pub final_loss: f64,
+    pub stall: Duration,
+    pub stalled_reads: u64,
+}
+
+/// §VAP: enforceable only with global synchronization — measure the read
+/// stalls VAP induces at various v0 against ESSP on the same workload.
+pub fn vap_compare(opts: &ExpOpts, mf: MfConfig, v0s: &[f32], s: i64) -> Result<Vec<VapRow>> {
+    let mut rows = Vec::new();
+    let mut do_run = |consistency: Consistency| {
+        let (report, data) = run_mf(
+            opts.cluster(consistency),
+            mf.clone(),
+            opts.clocks,
+            MfBackend::Native,
+        );
+        let final_loss = final_sq_loss(&report, &data);
+        let (stall, stalled_reads) = report.vap_stall.unwrap_or((Duration::ZERO, 0));
+        rows.push(VapRow {
+            label: consistency.label(),
+            wall: report.wall,
+            final_loss,
+            stall,
+            stalled_reads,
+        });
+    };
+    do_run(Consistency::Essp { s });
+    for &v0 in v0s {
+        do_run(Consistency::Vap { v0 });
+    }
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                format!("{:.4}", r.wall.as_secs_f64()),
+                format!("{:.4}", r.final_loss),
+                format!("{:.4}", r.stall.as_secs_f64()),
+                r.stalled_reads.to_string(),
+            ]
+        })
+        .collect();
+    export::write_csv(
+        &opts.out("vap_compare.csv"),
+        &["label", "wall_seconds", "final_loss", "stall_seconds", "stalled_reads"],
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+/// Write the merged staleness summary JSON used by EXPERIMENTS.md.
+pub fn write_staleness_summary(path: &Path, runs: &[LabeledRun]) -> Result<()> {
+    use crate::util::json::{arr, Json};
+    let items: Vec<Json> = runs
+        .iter()
+        .map(|r| export::staleness_summary(&r.label, &r.report.staleness))
+        .collect();
+    export::write_json(path, &arr(items))
+}

@@ -1,0 +1,65 @@
+//! ESSPTable: a parameter-server framework with pluggable consistency
+//! models, reproducing *High-Performance Distributed ML at Scale through
+//! Parameter Server Consistency Models* (Dai et al., AAAI 2015).
+//!
+//! Layering (see DESIGN.md):
+//! * [`ps`] — the parameter server: GET/INC/CLOCK client, sharded server,
+//!   consistency models (BSP / SSP / ESSP / Async / VAP).
+//! * [`sim`] — the simulated cluster substrate (network, stragglers).
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX+Pallas
+//!   artifacts (`artifacts/*.hlo.txt`).
+//! * [`apps`] — the paper's workloads (MF-SGD, LDA Gibbs) plus the LM
+//!   trainer and logistic regression.
+//! * [`metrics`] — staleness histograms, comm/comp timelines, convergence.
+//! * [`harness`] — experiment drivers regenerating each paper figure.
+
+pub mod util {
+    pub mod benchkit;
+    pub mod cli;
+    pub mod json;
+    pub mod rng;
+    pub mod stats;
+}
+
+pub mod sim {
+    pub mod net;
+    pub mod priority;
+    pub mod straggler;
+}
+
+pub mod ps {
+    pub mod cache;
+    pub mod checkpoint;
+    pub mod client;
+    pub mod consistency;
+    pub mod msg;
+    pub mod router;
+    pub mod server;
+    pub mod shard;
+    pub mod theory;
+    pub mod types;
+    pub mod update;
+    pub mod vap;
+    pub mod vclock;
+}
+
+pub mod metrics {
+    pub mod convergence;
+    pub mod export;
+    pub mod staleness;
+    pub mod timeline;
+}
+
+pub mod runtime {
+    pub mod artifact;
+    pub mod engine;
+}
+
+pub mod apps {
+    pub mod lda;
+    pub mod lm;
+    pub mod logreg;
+    pub mod mf;
+}
+
+pub mod harness;

@@ -1,0 +1,394 @@
+//! `essptable` CLI: the launcher for training runs and for regenerating
+//! every paper figure (DESIGN.md §4).
+//!
+//! Subcommands:
+//!   mf | lda | logreg | lm      — run one workload once, print a summary
+//!   fig1-staleness              — Fig. 1 (left): staleness distributions
+//!   fig1-breakdown              — Fig. 1 (right): comm/comp breakdown
+//!   fig2-mf | fig2-lda          — Fig. 2: convergence curves
+//!   robustness                  — §Robustness: step-size x staleness grid
+//!   vap-compare                 — §VAP: stall cost vs ESSP
+//!   artifacts                   — list AOT artifacts and their specs
+//!
+//! Common flags: --workers N --shards N --clocks N --seed N
+//!   --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0
+//!   --straggler none|uniform:F|fixed:W,..xF|spikes:P,F|rotating:PxF
+//!   --net lan|instant --out results/
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use essptable::apps::lda::gibbs::run_lda;
+use essptable::apps::lda::LdaConfig;
+use essptable::apps::lm::{run_lm, LmTrainConfig};
+use essptable::apps::logreg::{run_logreg, LogRegConfig};
+use essptable::apps::mf::train::{final_sq_loss, run_mf, MfBackend, MF_ARTIFACT};
+use essptable::apps::mf::MfConfig;
+use essptable::harness::{self, ExpOpts};
+use essptable::metrics::export;
+use essptable::ps::consistency::Consistency;
+use essptable::ps::server::RunReport;
+use essptable::runtime::artifact::ArtifactDir;
+use essptable::runtime::engine::RuntimeService;
+use essptable::sim::straggler::StragglerModel;
+use essptable::util::cli::Args;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("mf") => cmd_mf(&args),
+        Some("lda") => cmd_lda(&args),
+        Some("logreg") => cmd_logreg(&args),
+        Some("lm") => cmd_lm(&args),
+        Some("fig1-staleness") => cmd_fig1_staleness(&args),
+        Some("fig1-breakdown") => cmd_fig1_breakdown(&args),
+        Some("fig2-mf") => cmd_fig2_mf(&args),
+        Some("fig2-lda") => cmd_fig2_lda(&args),
+        Some("robustness") => cmd_robustness(&args),
+        Some("vap-compare") => cmd_vap_compare(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand {cmd:?}\n");
+            }
+            eprintln!("{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    let unused = args.unused();
+    if !unused.is_empty() {
+        eprintln!("warning: unused flags: {unused:?}");
+    }
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "usage: essptable <subcommand> [flags]
+  workloads:    mf | lda | logreg | lm
+  experiments:  fig1-staleness | fig1-breakdown | fig2-mf | fig2-lda
+                robustness | vap-compare
+  inspection:   artifacts
+  common flags: --workers N --shards N --clocks N --seed N
+                --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0
+                --straggler none|uniform:F|... --net lan|instant
+                --out DIR  (see README.md for per-command flags)";
+
+fn opts(args: &Args) -> anyhow::Result<ExpOpts> {
+    Ok(ExpOpts {
+        workers: args.usize("workers", 8),
+        shards: args.usize("shards", 4),
+        seed: args.u64("seed", 42),
+        clocks: args.u64("clocks", 60),
+        out_dir: PathBuf::from(args.str("out", "results")),
+        straggler: StragglerModel::parse(&args.str("straggler", "uniform:3"))
+            .map_err(anyhow::Error::msg)?,
+        lan: args.str("net", "lan") == "lan",
+        virtual_clock_ms: args.u64("virtual-clock-ms", 25),
+    })
+}
+
+fn consistency(args: &Args, default: &str) -> anyhow::Result<Consistency> {
+    Consistency::parse(&args.str("consistency", default)).map_err(anyhow::Error::msg)
+}
+
+fn mf_config(args: &Args) -> MfConfig {
+    MfConfig {
+        rows: args.usize("rows", 512),
+        cols: args.usize("cols", 512),
+        rank: args.usize("rank", 32),
+        true_rank: args.usize("true-rank", 8),
+        nnz_per_row: args.usize("nnz-per-row", 48),
+        noise: args.f32("noise", 0.05),
+        gamma: args.f32("gamma", 0.03),
+        lambda: args.f32("lambda", 0.05),
+        minibatch: args.f64("minibatch", 0.25),
+        ..MfConfig::default()
+    }
+}
+
+fn lda_config(args: &Args) -> LdaConfig {
+    LdaConfig {
+        vocab: args.usize("vocab", 500),
+        topics: args.usize("topics", 10),
+        docs: args.usize("docs", 400),
+        doc_len: args.usize("doc-len", 64),
+        minibatch: args.f64("minibatch", 0.5),
+        ..LdaConfig::default()
+    }
+}
+
+fn print_report(label: &str, report: &RunReport, final_value: f64, value_name: &str) {
+    println!("== {label}");
+    println!("  wall            {:.2}s", report.wall.as_secs_f64());
+    println!("  {value_name:<15} {final_value:.4}");
+    println!(
+        "  staleness       mean {:+.3} var {:.3} range [{}, {}]",
+        report.staleness.mean(),
+        report.staleness.variance(),
+        report.staleness.min().unwrap_or(0),
+        report.staleness.max().unwrap_or(0),
+    );
+    println!(
+        "  comm fraction   {:.1}%   net {} msgs / {:.1} MB",
+        100.0 * report.comm_fraction(),
+        report.net_messages,
+        report.net_bytes as f64 / 1e6
+    );
+    if let Some((stall, reads)) = report.vap_stall {
+        println!(
+            "  vap stalls      {:.2}s across {reads} reads",
+            stall.as_secs_f64()
+        );
+    }
+}
+
+fn cmd_mf(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args)?;
+    let c = consistency(args, "essp:3")?;
+    let mf = mf_config(args);
+    let backend = if args.bool("xla", false) {
+        let rt = RuntimeService::start(ArtifactDir::open(
+            args.str("artifacts", ArtifactDir::default_dir().to_str().unwrap()),
+        )?)?;
+        let handle = rt.handle();
+        handle.preload(MF_ARTIFACT)?;
+        // Leak the service so the handle stays valid for the whole run.
+        std::mem::forget(rt);
+        MfBackend::Xla(handle)
+    } else {
+        MfBackend::Native
+    };
+    let (report, data) = run_mf(o.cluster(c), mf, o.clocks, backend);
+    print_report(&c.label(), &report, final_sq_loss(&report, &data), "sq loss");
+    Ok(())
+}
+
+fn cmd_lda(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args)?;
+    let c = consistency(args, "essp:3")?;
+    let (report, _) = run_lda(o.cluster(c), lda_config(args), o.clocks);
+    let ll = report.convergence.last_value().unwrap_or(f64::NAN);
+    print_report(&c.label(), &report, ll, "log-likelihood");
+    Ok(())
+}
+
+fn cmd_logreg(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args)?;
+    let c = consistency(args, "essp:3")?;
+    let (report, data) = run_logreg(o.cluster(c), LogRegConfig::default(), o.clocks);
+    let w = &report.table_rows[&(essptable::apps::logreg::W_TABLE, 0)];
+    print_report(&c.label(), &report, data.log_loss(w), "log loss");
+    println!("  accuracy        {:.3}", data.accuracy(w));
+    Ok(())
+}
+
+fn cmd_lm(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args)?;
+    let c = consistency(args, "essp:1")?;
+    let artifact = args.str("artifact", "lm_step_gpt-tiny");
+    let art_dir = ArtifactDir::open(
+        args.str("artifacts", ArtifactDir::default_dir().to_str().unwrap()),
+    )?;
+    let meta = art_dir.meta(&artifact)?.clone();
+    let rt = RuntimeService::start(art_dir)?;
+    let cfg = LmTrainConfig {
+        artifact,
+        lr: args.f32("lr", 0.12),
+        lr_decay: args.f64("lr-decay", 200.0),
+        seed: o.seed,
+        branch: args.usize("branch", 4),
+    };
+    let report = run_lm(o.cluster(c), cfg, &meta, rt.handle(), o.clocks)?;
+    let series = report.convergence.mean();
+    print_report(
+        &c.label(),
+        &report,
+        series.last().map(|s| s.value).unwrap_or(f64::NAN),
+        "final loss",
+    );
+    export::convergence_csv(&o.out("lm_loss.csv"), &[(c.label(), series.clone())])?;
+    println!("  loss curve -> {}", o.out("lm_loss.csv").display());
+    if let Some(first) = series.first() {
+        println!(
+            "  loss {:.4} (clock 0) -> {:.4} (clock {})",
+            first.value,
+            series.last().unwrap().value,
+            series.last().unwrap().clock
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig1_staleness(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args)?;
+    let s = args.u64("staleness", 3) as i64;
+    let runs = harness::fig1_staleness(&o, mf_config(args), s)?;
+    harness::write_staleness_summary(&o.out("fig1_staleness_summary.json"), &runs)?;
+    println!("Fig. 1 (left) — staleness distributions (MF, s={s})");
+    for run in &runs {
+        println!(
+            "  {:<8} mean {:+.3}  var {:.3}  range [{}, {}]  (n={})",
+            run.label,
+            run.report.staleness.mean(),
+            run.report.staleness.variance(),
+            run.report.staleness.min().unwrap_or(0),
+            run.report.staleness.max().unwrap_or(0),
+            run.report.staleness.total(),
+        );
+    }
+    println!("csv -> {}", o.out("fig1_staleness.csv").display());
+    // Theorem 5 on the measured profiles: the theory's account of why the
+    // ESSP profile converges faster (see ps::theory).
+    if runs.len() == 2 {
+        let params = essptable::ps::theory::BoundParams {
+            lipschitz: 1.0,
+            f_sq: 1.0,
+            eta: 0.1,
+            workers: o.workers,
+            staleness: s,
+            horizon: o.clocks * o.workers as u64,
+        };
+        println!("\nTheorem 5 on the measured profiles (L=1, F=1, eta=0.1):");
+        print!(
+            "{}",
+            essptable::ps::theory::compare_report(
+                &params,
+                &runs[0].label,
+                &runs[0].report.staleness,
+                &runs[1].label,
+                &runs[1].report.staleness,
+            )
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig1_breakdown(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args)?;
+    let staleness: Vec<i64> = parse_list(&args.str("staleness-list", "0,1,2,4,8"))?;
+    let rows = harness::fig1_breakdown(&o, lda_config(args), &staleness)?;
+    println!("Fig. 1 (right) — comm/comp breakdown (LDA)");
+    println!("  {:<10} {:>9} {:>9} {:>7}", "label", "comp(s)", "comm(s)", "comm%");
+    for (label, comp, comm, frac) in &rows {
+        println!("  {label:<10} {comp:>9.2} {comm:>9.2} {:>6.1}%", 100.0 * frac);
+    }
+    println!("csv -> {}", o.out("fig1_breakdown.csv").display());
+    Ok(())
+}
+
+fn cmd_fig2_mf(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args)?;
+    let staleness: Vec<i64> = parse_list(&args.str("staleness-list", "2,5"))?;
+    let runs = harness::fig2_mf(&o, mf_config(args), &staleness)?;
+    println!("Fig. 2 (MF) — convergence (final squared loss, lower is better)");
+    for run in &runs {
+        println!(
+            "  {:<8} final {:>12.2}  wall {:>6.2}s",
+            run.label,
+            run.final_value,
+            run.report.wall.as_secs_f64()
+        );
+    }
+    println!("csv -> {}", o.out("fig2_mf.csv").display());
+    Ok(())
+}
+
+fn cmd_fig2_lda(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args)?;
+    let staleness: Vec<i64> = parse_list(&args.str("staleness-list", "2,5"))?;
+    let runs = harness::fig2_lda(&o, lda_config(args), &staleness)?;
+    println!("Fig. 2 (LDA) — convergence (final log-likelihood, higher is better)");
+    for run in &runs {
+        println!(
+            "  {:<8} final {:>14.1}  wall {:>6.2}s",
+            run.label,
+            run.final_value,
+            run.report.wall.as_secs_f64()
+        );
+    }
+    println!("csv -> {}", o.out("fig2_lda.csv").display());
+    Ok(())
+}
+
+fn cmd_robustness(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args)?;
+    let gammas: Vec<f32> = parse_list(&args.str("gammas", "0.05,0.1,0.2"))?;
+    let staleness: Vec<i64> = parse_list(&args.str("staleness-list", "0,2,5,10"))?;
+    let rows = harness::robustness(&o, mf_config(args), &gammas, &staleness)?;
+    println!("§Robustness — MF final loss across step size x staleness");
+    println!("  {:<10} {:>7} {:>14} {:>9}", "label", "gamma", "final_loss", "diverged");
+    for r in &rows {
+        println!(
+            "  {:<10} {:>7} {:>14.2} {:>9}",
+            r.label, r.gamma, r.final_loss, r.diverged
+        );
+    }
+    println!("csv -> {}", o.out("robustness.csv").display());
+    Ok(())
+}
+
+fn cmd_vap_compare(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args)?;
+    let v0s: Vec<f32> = parse_list(&args.str("v0s", "0.5,0.1,0.02"))?;
+    let s = args.u64("staleness", 3) as i64;
+    let rows = harness::vap_compare(&o, mf_config(args), &v0s, s)?;
+    println!("§VAP — value-bound enforcement cost vs ESSP");
+    println!(
+        "  {:<10} {:>8} {:>12} {:>9} {:>13}",
+        "label", "wall(s)", "final_loss", "stall(s)", "stalled_reads"
+    );
+    for r in &rows {
+        println!(
+            "  {:<10} {:>8.2} {:>12.2} {:>9.2} {:>13}",
+            r.label,
+            r.wall.as_secs_f64(),
+            r.final_loss,
+            r.stall.as_secs_f64(),
+            r.stalled_reads
+        );
+    }
+    println!("csv -> {}", o.out("vap_compare.csv").display());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = ArtifactDir::open(
+        args.str("artifacts", ArtifactDir::default_dir().to_str().unwrap()),
+    )?;
+    println!("artifacts in {}:", dir.dir().display());
+    for name in dir.names() {
+        let m = dir.meta(name)?;
+        println!(
+            "  {name}: {} inputs, {} outputs{}",
+            m.inputs.len(),
+            m.outputs.len(),
+            m.lm_config
+                .as_ref()
+                .map(|c| format!(
+                    " (LM {}: {} params, vocab {}, seq {})",
+                    c.preset, c.param_count, c.vocab, c.seq
+                ))
+                .unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+fn parse_list<T: std::str::FromStr>(s: &str) -> anyhow::Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    s.split(',')
+        .filter(|x| !x.is_empty())
+        .map(|x| {
+            x.trim()
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("bad list item {x:?}: {e}"))
+        })
+        .collect()
+}

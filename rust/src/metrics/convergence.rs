@@ -1,0 +1,121 @@
+//! Convergence curves — the Fig. 2 instrument.
+//!
+//! Workers report a per-clock local metric (e.g. summed squared residuals
+//! for MF, token log-likelihood for LDA); the harness aggregates across
+//! workers per clock, yielding (clock, wall-seconds, value) series plotted
+//! against both axes as in the paper.
+
+use std::collections::BTreeMap;
+
+use crate::ps::types::Clock;
+
+/// One aggregated sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub clock: Clock,
+    /// Seconds since run start at which the *last* worker reported this
+    /// clock (i.e. when the aggregate became complete).
+    pub seconds: f64,
+    pub value: f64,
+}
+
+/// Aggregates per-worker per-clock metric reports.
+#[derive(Debug, Default, Clone)]
+pub struct ConvergenceLog {
+    /// clock -> (sum, n_reports, latest_seconds)
+    acc: BTreeMap<Clock, (f64, usize, f64)>,
+}
+
+impl ConvergenceLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn report(&mut self, clock: Clock, seconds: f64, value: f64) {
+        let e = self.acc.entry(clock).or_insert((0.0, 0, 0.0));
+        e.0 += value;
+        e.1 += 1;
+        e.2 = e.2.max(seconds);
+    }
+
+    pub fn merge(&mut self, other: &ConvergenceLog) {
+        for (&c, &(v, n, s)) in &other.acc {
+            let e = self.acc.entry(c).or_insert((0.0, 0, 0.0));
+            e.0 += v;
+            e.1 += n;
+            e.2 = e.2.max(s);
+        }
+    }
+
+    /// Summed series (MF squared loss, LDA log-likelihood are sums over
+    /// data partitions).
+    pub fn summed(&self) -> Vec<Sample> {
+        self.acc
+            .iter()
+            .map(|(&clock, &(v, _, s))| Sample {
+                clock,
+                seconds: s,
+                value: v,
+            })
+            .collect()
+    }
+
+    /// Per-worker-mean series.
+    pub fn mean(&self) -> Vec<Sample> {
+        self.acc
+            .iter()
+            .map(|(&clock, &(v, n, s))| Sample {
+                clock,
+                seconds: s,
+                value: v / n.max(1) as f64,
+            })
+            .collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.acc.is_empty()
+    }
+
+    /// Final summed value (used for headline comparisons).
+    pub fn last_value(&self) -> Option<f64> {
+        self.summed().last().map(|s| s.value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_across_workers() {
+        let mut log = ConvergenceLog::new();
+        log.report(0, 1.0, 10.0);
+        log.report(0, 1.5, 20.0);
+        log.report(1, 2.0, 8.0);
+        let s = log.summed();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].value, 30.0);
+        assert_eq!(s[0].seconds, 1.5); // completion time = max
+        assert_eq!(s[1].value, 8.0);
+    }
+
+    #[test]
+    fn mean_divides_by_reports() {
+        let mut log = ConvergenceLog::new();
+        log.report(3, 0.0, 4.0);
+        log.report(3, 0.0, 8.0);
+        assert_eq!(log.mean()[0].value, 6.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = ConvergenceLog::new();
+        a.report(0, 1.0, 1.0);
+        let mut b = ConvergenceLog::new();
+        b.report(0, 2.0, 2.0);
+        b.report(1, 3.0, 3.0);
+        a.merge(&b);
+        assert_eq!(a.summed()[0].value, 3.0);
+        assert_eq!(a.last_value(), Some(3.0));
+    }
+}

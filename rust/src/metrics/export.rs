@@ -1,0 +1,130 @@
+//! CSV/JSON export of run metrics into `results/` — every experiment
+//! harness writes its series through here so figures regenerate from flat
+//! files.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::convergence::Sample;
+use super::staleness::StalenessHist;
+use crate::util::json::{arr, num, obj, str as jstr, Json};
+
+/// Write a CSV file with the given header and rows.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut f = fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Staleness histogram -> CSV (differential, count, fraction).
+pub fn staleness_csv(path: &Path, label: &str, hist: &StalenessHist) -> Result<()> {
+    let total = hist.total().max(1) as f64;
+    let rows: Vec<Vec<String>> = hist
+        .buckets()
+        .map(|(d, c)| {
+            vec![
+                label.to_string(),
+                d.to_string(),
+                c.to_string(),
+                format!("{:.6}", c as f64 / total),
+            ]
+        })
+        .collect();
+    write_csv(path, &["label", "differential", "count", "fraction"], &rows)
+}
+
+/// Convergence series -> CSV (label, clock, seconds, value).
+pub fn convergence_csv(path: &Path, series: &[(String, Vec<Sample>)]) -> Result<()> {
+    let mut rows = Vec::new();
+    for (label, samples) in series {
+        for s in samples {
+            rows.push(vec![
+                label.clone(),
+                s.clock.to_string(),
+                format!("{:.4}", s.seconds),
+                format!("{:.6}", s.value),
+            ]);
+        }
+    }
+    write_csv(path, &["label", "clock", "seconds", "value"], &rows)
+}
+
+/// Arbitrary summary object -> pretty JSON file.
+pub fn write_json(path: &Path, value: &Json) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    fs::write(path, value.to_string_pretty(1)).with_context(|| format!("write {}", path.display()))
+}
+
+/// Build a summary JSON for a staleness histogram.
+pub fn staleness_summary(label: &str, hist: &StalenessHist) -> Json {
+    obj(vec![
+        ("label", jstr(label)),
+        ("total_reads", num(hist.total() as f64)),
+        ("mean", num(hist.mean())),
+        ("variance", num(hist.variance())),
+        ("min", num(hist.min().unwrap_or(0) as f64)),
+        ("max", num(hist.max().unwrap_or(0) as f64)),
+        (
+            "normalized",
+            arr(hist
+                .normalized()
+                .into_iter()
+                .map(|(d, f)| arr(vec![num(d as f64), num(f)]))
+                .collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("essptable-test-{}", std::process::id()));
+        let path = dir.join("t.csv");
+        write_csv(
+            &path,
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn staleness_csv_fractions_sum() {
+        let mut h = StalenessHist::new();
+        h.record(-1);
+        h.record(-1);
+        h.record(0);
+        let dir = std::env::temp_dir().join(format!("essptable-test2-{}", std::process::id()));
+        let path = dir.join("s.csv");
+        staleness_csv(&path, "essp", &h).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(text.contains("essp,-1,2,0.666667"));
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let mut h = StalenessHist::new();
+        h.record(-1);
+        let j = staleness_summary("x", &h);
+        assert_eq!(j.get("total_reads").unwrap().as_u64().unwrap(), 1);
+        assert!(j.get("normalized").unwrap().as_arr().unwrap().len() == 1);
+    }
+}

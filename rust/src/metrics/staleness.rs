@@ -1,0 +1,144 @@
+//! Staleness histogram — the Fig. 1 (left) instrument.
+//!
+//! On every GET the client records the *clock differential*:
+//! `fresh - c_worker`, where `fresh` is the max update clock reflected in
+//! the row copy it read and `c_worker` is the clock it is working on. Under
+//! BSP this is identically -1 (you see everything up to the barrier and
+//! nothing newer); under SSP it spreads toward -(s+1); under ESSP it
+//! concentrates near 0 (and can be positive when faster workers' best-
+//! effort updates are already reflected).
+
+use std::collections::BTreeMap;
+
+use crate::ps::types::Clock;
+
+/// Integer-valued histogram over clock differentials.
+#[derive(Debug, Default, Clone)]
+pub struct StalenessHist {
+    counts: BTreeMap<Clock, u64>,
+    total: u64,
+}
+
+impl StalenessHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, differential: Clock) {
+        *self.counts.entry(differential).or_insert(0) += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn count(&self, differential: Clock) -> u64 {
+        self.counts.get(&differential).copied().unwrap_or(0)
+    }
+
+    /// Merge another histogram (per-worker -> global aggregation).
+    pub fn merge(&mut self, other: &StalenessHist) {
+        for (&d, &c) in &other.counts {
+            *self.counts.entry(d).or_insert(0) += c;
+        }
+        self.total += other.total;
+    }
+
+    /// Mean differential — the μ_γ analogue the theory section says drives
+    /// the convergence-rate gap between ESSP and SSP (Theorem 5).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let s: f64 = self
+            .counts
+            .iter()
+            .map(|(&d, &c)| d as f64 * c as f64)
+            .sum();
+        s / self.total as f64
+    }
+
+    /// Variance of the differential (σ_γ analogue).
+    pub fn variance(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let s: f64 = self
+            .counts
+            .iter()
+            .map(|(&d, &c)| (d as f64 - m).powi(2) * c as f64)
+            .sum();
+        s / self.total as f64
+    }
+
+    /// (differential, count) pairs in ascending differential order.
+    pub fn buckets(&self) -> impl Iterator<Item = (Clock, u64)> + '_ {
+        self.counts.iter().map(|(&d, &c)| (d, c))
+    }
+
+    /// Normalized (differential, fraction) series — Fig. 1's y-axis.
+    pub fn normalized(&self) -> Vec<(Clock, f64)> {
+        self.counts
+            .iter()
+            .map(|(&d, &c)| (d, c as f64 / self.total.max(1) as f64))
+            .collect()
+    }
+
+    pub fn min(&self) -> Option<Clock> {
+        self.counts.keys().next().copied()
+    }
+
+    pub fn max(&self) -> Option<Clock> {
+        self.counts.keys().next_back().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_normalizes() {
+        let mut h = StalenessHist::new();
+        for _ in 0..3 {
+            h.record(-1);
+        }
+        h.record(2);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.count(-1), 3);
+        let n = h.normalized();
+        assert_eq!(n, vec![(-1, 0.75), (2, 0.25)]);
+    }
+
+    #[test]
+    fn mean_and_variance() {
+        let mut h = StalenessHist::new();
+        h.record(-2);
+        h.record(0);
+        assert!((h.mean() + 1.0).abs() < 1e-12);
+        assert!((h.variance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = StalenessHist::new();
+        a.record(-1);
+        let mut b = StalenessHist::new();
+        b.record(-1);
+        b.record(3);
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        assert_eq!(a.count(-1), 2);
+        assert_eq!((a.min(), a.max()), (Some(-1), Some(3)));
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let h = StalenessHist::new();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.variance(), 0.0);
+        assert_eq!(h.min(), None);
+    }
+}

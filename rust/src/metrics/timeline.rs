@@ -1,0 +1,121 @@
+//! Per-clock computation/communication breakdown — the Fig. 1 (right)
+//! instrument.
+//!
+//! The client attributes wall time to `comm` whenever it is blocked waiting
+//! on the network (pull replies, SSP wait condition, VAP value-bound
+//! stalls) and to `comp` otherwise. The harness aggregates the per-clock
+//! splits into the stacked-bar series the paper plots for LDA.
+
+use std::time::Duration;
+
+/// One clock tick's time split on one worker.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClockSplit {
+    pub comp_ns: u64,
+    pub comm_ns: u64,
+}
+
+/// Time-split series for one worker.
+#[derive(Debug, Default, Clone)]
+pub struct Timeline {
+    clocks: Vec<ClockSplit>,
+    cur_comm_ns: u64,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add blocked time to the clock currently in progress.
+    pub fn add_comm(&mut self, d: Duration) {
+        self.cur_comm_ns += d.as_nanos() as u64;
+    }
+
+    /// Comm time accrued in the clock currently in progress. The harness
+    /// uses this to straggle *compute* only — multiplying blocked time
+    /// would create a positive feedback loop between workers.
+    pub fn current_comm(&self) -> Duration {
+        Duration::from_nanos(self.cur_comm_ns)
+    }
+
+    /// Close the current clock: `elapsed` is the total wall time of the
+    /// tick; comp = elapsed - comm accumulated during it.
+    pub fn finish_clock(&mut self, elapsed: Duration) {
+        let total = elapsed.as_nanos() as u64;
+        let comm = self.cur_comm_ns.min(total);
+        self.clocks.push(ClockSplit {
+            comp_ns: total - comm,
+            comm_ns: comm,
+        });
+        self.cur_comm_ns = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clocks.is_empty()
+    }
+
+    pub fn splits(&self) -> &[ClockSplit] {
+        &self.clocks
+    }
+
+    pub fn total_comp(&self) -> Duration {
+        Duration::from_nanos(self.clocks.iter().map(|c| c.comp_ns).sum())
+    }
+
+    pub fn total_comm(&self) -> Duration {
+        Duration::from_nanos(self.clocks.iter().map(|c| c.comm_ns).sum())
+    }
+
+    /// Fraction of wall time spent blocked on communication.
+    pub fn comm_fraction(&self) -> f64 {
+        let comp = self.total_comp().as_secs_f64();
+        let comm = self.total_comm().as_secs_f64();
+        if comp + comm == 0.0 {
+            0.0
+        } else {
+            comm / (comp + comm)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_accounting() {
+        let mut t = Timeline::new();
+        t.add_comm(Duration::from_millis(30));
+        t.finish_clock(Duration::from_millis(100));
+        assert_eq!(t.len(), 1);
+        let s = t.splits()[0];
+        assert_eq!(s.comm_ns, 30_000_000);
+        assert_eq!(s.comp_ns, 70_000_000);
+        assert!((t.comm_fraction() - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_capped_at_elapsed() {
+        let mut t = Timeline::new();
+        t.add_comm(Duration::from_millis(120));
+        t.finish_clock(Duration::from_millis(100));
+        let s = t.splits()[0];
+        assert_eq!(s.comm_ns, 100_000_000);
+        assert_eq!(s.comp_ns, 0);
+    }
+
+    #[test]
+    fn comm_resets_between_clocks() {
+        let mut t = Timeline::new();
+        t.add_comm(Duration::from_millis(10));
+        t.finish_clock(Duration::from_millis(20));
+        t.finish_clock(Duration::from_millis(20));
+        assert_eq!(t.splits()[1].comm_ns, 0);
+        assert_eq!(t.splits()[1].comp_ns, 20_000_000);
+    }
+}

@@ -1,0 +1,237 @@
+//! Client-side parameter cache with per-row clocks and LRU eviction.
+//!
+//! Mirrors the paper's ESSPTable client library: "the client library caches
+//! locally accessed parameters … cold parameters are evicted using an
+//! approximate LRU policy". Each cached row carries two clocks:
+//!
+//!   * `vclock` — the server table clock when this copy was produced; all
+//!     updates with clock <= vclock are guaranteed reflected (the SSP read
+//!     condition tests this one).
+//!   * `fresh`  — the max update clock actually reflected (best-effort
+//!     in-window updates); this is what the Fig. 1 staleness histogram
+//!     measures: differential = fresh - worker clock.
+
+use std::collections::HashMap;
+
+use super::types::{Clock, Key};
+
+#[derive(Debug, Clone)]
+pub struct CachedRow {
+    pub data: Vec<f32>,
+    pub vclock: Clock,
+    pub fresh: Clock,
+    /// LRU tick of the last access.
+    last_used: u64,
+}
+
+/// Row cache with capacity-bounded approximate LRU.
+#[derive(Debug)]
+pub struct RowCache {
+    rows: HashMap<Key, CachedRow>,
+    capacity: usize,
+    tick: u64,
+    evictions: u64,
+}
+
+impl RowCache {
+    /// `capacity` in rows (0 = unbounded).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            rows: HashMap::new(),
+            capacity,
+            tick: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Look up a row, bumping its LRU position.
+    pub fn get(&mut self, key: &Key) -> Option<&CachedRow> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.rows.get_mut(key).map(|r| {
+            r.last_used = tick;
+            &*r
+        })
+    }
+
+    /// Peek without touching LRU order (used by metrics / invariant checks).
+    pub fn peek(&self, key: &Key) -> Option<&CachedRow> {
+        self.rows.get(key)
+    }
+
+    /// Insert or replace a row copy, evicting the LRU row if over capacity.
+    ///
+    /// Replacement keeps the *newer* clock pair: an in-flight pull reply
+    /// must not clobber a fresher pushed copy that arrived first.
+    pub fn insert(&mut self, key: Key, data: Vec<f32>, vclock: Clock, fresh: Clock) {
+        self.tick += 1;
+        match self.rows.get_mut(&key) {
+            Some(existing) if existing.vclock > vclock => {
+                // Stale arrival: keep the existing copy, but merge `fresh`
+                // (monotone) so the metric never goes backwards.
+                existing.fresh = existing.fresh.max(fresh);
+                return;
+            }
+            _ => {}
+        }
+        self.rows.insert(
+            key,
+            CachedRow {
+                data,
+                vclock,
+                fresh,
+                last_used: self.tick,
+            },
+        );
+        if self.capacity > 0 && self.rows.len() > self.capacity {
+            self.evict_lru();
+        }
+    }
+
+    /// Apply a local delta to the cached copy (read-my-writes support).
+    pub fn apply_delta(&mut self, key: &Key, delta: &[f32]) {
+        if let Some(r) = self.rows.get_mut(key) {
+            for (a, d) in r.data.iter_mut().zip(delta) {
+                *a += d;
+            }
+        }
+    }
+
+    /// Raise a row's best-effort freshness (monotone). Used when the
+    /// worker folds its *own* clock-`c` updates into the cached copy: the
+    /// data now reflects updates of clock c, and the staleness metric must
+    /// account for that.
+    pub fn bump_fresh(&mut self, key: &Key, clock: Clock) {
+        if let Some(r) = self.rows.get_mut(key) {
+            r.fresh = r.fresh.max(clock);
+        }
+    }
+
+    /// Raise a row's *guaranteed* clock (monotone). Used when a push wave
+    /// announces a new table clock and this row was NOT in the wave —
+    /// i.e. the shard certifies it is unchanged through `vclock`.
+    pub fn bump_vclock(&mut self, key: &Key, vclock: Clock) {
+        if let Some(r) = self.rows.get_mut(key) {
+            if vclock > r.vclock {
+                r.vclock = vclock;
+                r.fresh = r.fresh.max(vclock);
+            }
+        }
+    }
+
+    /// Snapshot of cached keys (used by push-wave processing).
+    pub fn keys(&self) -> Vec<Key> {
+        self.rows.keys().copied().collect()
+    }
+
+    /// Replace a row's *contents* without touching its guaranteed clock
+    /// (VAP eager waves: the data is fresher, but no new clock guarantee
+    /// is implied). Inserts with no guarantee if the row is not cached.
+    pub fn force_data(&mut self, key: Key, data: Vec<f32>, fresh: Clock) {
+        self.tick += 1;
+        match self.rows.get_mut(&key) {
+            Some(r) => {
+                r.data = data;
+                r.fresh = r.fresh.max(fresh);
+                r.last_used = self.tick;
+            }
+            None => {
+                self.insert(key, data, super::types::NEVER, fresh);
+            }
+        }
+    }
+
+    pub fn remove(&mut self, key: &Key) -> Option<CachedRow> {
+        self.rows.remove(key)
+    }
+
+    fn evict_lru(&mut self) {
+        if let Some((&key, _)) = self.rows.iter().min_by_key(|(_, r)| r.last_used) {
+            self.rows.remove(&key);
+            self.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(i: u64) -> Key {
+        (0, i)
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut c = RowCache::new(0);
+        c.insert(k(1), vec![1.0, 2.0], 5, 7);
+        let r = c.get(&k(1)).unwrap();
+        assert_eq!(r.data, vec![1.0, 2.0]);
+        assert_eq!((r.vclock, r.fresh), (5, 7));
+        assert!(c.get(&k(2)).is_none());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = RowCache::new(2);
+        c.insert(k(1), vec![1.0], 0, 0);
+        c.insert(k(2), vec![2.0], 0, 0);
+        c.get(&k(1)); // bump 1; key 2 is now LRU
+        c.insert(k(3), vec![3.0], 0, 0);
+        assert!(c.peek(&k(2)).is_none(), "LRU row should be evicted");
+        assert!(c.peek(&k(1)).is_some());
+        assert!(c.peek(&k(3)).is_some());
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn stale_arrival_does_not_clobber() {
+        let mut c = RowCache::new(0);
+        c.insert(k(1), vec![9.0], 10, 12);
+        c.insert(k(1), vec![1.0], 4, 4); // late pull reply
+        let r = c.peek(&k(1)).unwrap();
+        assert_eq!(r.data, vec![9.0]);
+        assert_eq!(r.vclock, 10);
+        assert_eq!(r.fresh, 12);
+    }
+
+    #[test]
+    fn newer_arrival_replaces() {
+        let mut c = RowCache::new(0);
+        c.insert(k(1), vec![1.0], 4, 4);
+        c.insert(k(1), vec![9.0], 10, 11);
+        let r = c.peek(&k(1)).unwrap();
+        assert_eq!(r.data, vec![9.0]);
+        assert_eq!((r.vclock, r.fresh), (10, 11));
+    }
+
+    #[test]
+    fn apply_delta_mutates_copy() {
+        let mut c = RowCache::new(0);
+        c.insert(k(1), vec![1.0, 1.0], 0, 0);
+        c.apply_delta(&k(1), &[0.5, -0.5]);
+        assert_eq!(c.peek(&k(1)).unwrap().data, vec![1.5, 0.5]);
+    }
+
+    #[test]
+    fn unbounded_never_evicts() {
+        let mut c = RowCache::new(0);
+        for i in 0..1000 {
+            c.insert(k(i), vec![0.0], 0, 0);
+        }
+        assert_eq!(c.len(), 1000);
+        assert_eq!(c.evictions(), 0);
+    }
+}

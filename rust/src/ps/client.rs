@@ -1,0 +1,467 @@
+//! ESSPTable client library: the GET / INC / CLOCK interface workers
+//! program against (paper, "PS Interface").
+//!
+//! Enforcement of each consistency model happens here:
+//!   * SSP/BSP/ESSP read condition: a cached row is readable at worker
+//!     clock c iff its vclock >= c - s - 1; otherwise the client pulls and
+//!     blocks (`ToShard::Get` with `min_vclock`, which the shard holds
+//!     until the table clock is high enough).
+//!   * ESSP: on first GET of a key the client registers for eager pushes;
+//!     pushed waves land in the cache from the inbox drain, so reads
+//!     almost always hit fresh copies (the paper's Fig. 1 effect).
+//!   * Async: reads never block after first fetch; refresh pulls are fired
+//!     opportunistically.
+//!   * VAP: reads additionally spin (draining the inbox, so acks keep
+//!     flowing) until the global in-transit value bound holds.
+//!
+//! All blocked time is attributed to the communication side of the
+//! Fig. 1 (right) breakdown via `metrics::timeline`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::cache::RowCache;
+use super::consistency::Consistency;
+use super::msg::{ToShard, ToWorker};
+use super::router::Router;
+use super::types::{Clock, Key, TableId, WorkerId};
+use super::update::UpdateMap;
+use super::vap::VapTracker;
+use crate::metrics::staleness::StalenessHist;
+use crate::metrics::timeline::Timeline;
+use crate::sim::net::{NetHandle, NodeId, Packet};
+
+/// Client-side configuration.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    pub consistency: Consistency,
+    /// Row-cache capacity (0 = unbounded).
+    pub cache_capacity: usize,
+    /// Overlay the worker's own pending + flushed updates on reads.
+    pub read_my_writes: bool,
+    /// Virtual per-clock compute duration for `pace()` (see
+    /// ClusterConfig::virtual_clock).
+    pub virtual_clock: Option<std::time::Duration>,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            consistency: Consistency::Essp { s: 1 },
+            cache_capacity: 0,
+            read_my_writes: true,
+            virtual_clock: None,
+        }
+    }
+}
+
+/// Per-client counters.
+#[derive(Debug, Default, Clone)]
+pub struct ClientStats {
+    pub gets: u64,
+    pub cache_hits: u64,
+    pub pulls: u64,
+    pub pushes_received: u64,
+    pub rows_pushed_in: u64,
+    pub raw_incs: u64,
+    pub update_batches: u64,
+    pub vap_stall_ns: u64,
+}
+
+/// The per-worker PS client.
+pub struct PsClient {
+    worker: WorkerId,
+    clock: Clock,
+    cfg: ClientConfig,
+    router: Router,
+    net: NetHandle,
+    inbox: Receiver<ToWorker>,
+    cache: RowCache,
+    pending: UpdateMap,
+    /// Row lengths per table (for sparse INC fill-in).
+    row_len: HashMap<TableId, usize>,
+    registered: HashSet<Key>,
+    pulls_in_flight: HashSet<Key>,
+    /// Async mode: last clock at which a refresh pull was fired per key.
+    last_refresh: HashMap<Key, Clock>,
+    /// Per shard: the latest wave vclock announced (ESSP). A cached row
+    /// from shard s is guaranteed through max(row.vclock, announced[s]):
+    /// delta waves carry every row dirtied since the previous wave, so a
+    /// row absent from all waves up to T is certified unchanged through T.
+    /// This makes wave processing O(rows in wave) instead of O(cache).
+    shard_announced: Vec<Clock>,
+    vap: Option<Arc<VapTracker>>,
+    started: Instant,
+    pub staleness: StalenessHist,
+    pub timeline: Timeline,
+    pub stats: ClientStats,
+    clock_started: Instant,
+}
+
+impl PsClient {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        worker: WorkerId,
+        cfg: ClientConfig,
+        router: Router,
+        net: NetHandle,
+        inbox: Receiver<ToWorker>,
+        row_len: HashMap<TableId, usize>,
+        vap: Option<Arc<VapTracker>>,
+        started: Instant,
+    ) -> Self {
+        let cache_capacity = cfg.cache_capacity;
+        let n_shards = router.n_shards();
+        Self {
+            worker,
+            clock: 0,
+            cfg,
+            router,
+            net,
+            inbox,
+            cache: RowCache::new(cache_capacity),
+            pending: UpdateMap::new(),
+            row_len,
+            registered: HashSet::new(),
+            pulls_in_flight: HashSet::new(),
+            last_refresh: HashMap::new(),
+            shard_announced: vec![super::types::NEVER; n_shards],
+            vap,
+            started,
+            staleness: StalenessHist::new(),
+            timeline: Timeline::new(),
+            stats: ClientStats::default(),
+            clock_started: Instant::now(),
+        }
+    }
+
+    pub fn worker_id(&self) -> WorkerId {
+        self.worker
+    }
+
+    pub fn clock(&self) -> Clock {
+        self.clock
+    }
+
+    pub fn consistency(&self) -> Consistency {
+        self.cfg.consistency
+    }
+
+    /// Seconds since the cluster run started (for convergence curves).
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn send(&self, shard: usize, msg: ToShard) {
+        self.net.send(
+            NodeId::Worker(self.worker),
+            NodeId::Shard(shard),
+            Packet::ToShard(msg),
+        );
+    }
+
+    /// Apply one inbound message to the cache.
+    fn apply(&mut self, msg: ToWorker) {
+        match msg {
+            ToWorker::Row {
+                key,
+                data,
+                vclock,
+                fresh,
+            } => {
+                self.pulls_in_flight.remove(&key);
+                self.cache.insert(key, data, vclock, fresh);
+            }
+            ToWorker::Push {
+                shard,
+                vclock,
+                rows,
+            } => {
+                self.stats.pushes_received += 1;
+                self.stats.rows_pushed_in += rows.len() as u64;
+                for row in rows {
+                    self.cache.insert(row.key, row.data, vclock, row.fresh);
+                }
+                // Rows absent from the wave are certified unchanged by the
+                // shard through `vclock` (delta waves carry every dirtied
+                // row): record one announcement instead of touching every
+                // cached row (§Perf iteration 3).
+                if vclock > self.shard_announced[shard] {
+                    self.shard_announced[shard] = vclock;
+                }
+                self.send(
+                    shard,
+                    ToShard::PushAck {
+                        worker: self.worker,
+                        vclock,
+                    },
+                );
+            }
+            ToWorker::VapPush { shard, seq, rows } => {
+                self.stats.pushes_received += 1;
+                self.stats.rows_pushed_in += rows.len() as u64;
+                for row in rows {
+                    self.cache.force_data(row.key, row.data, row.fresh);
+                }
+                self.send(
+                    shard,
+                    ToShard::VapAck {
+                        worker: self.worker,
+                        seq,
+                    },
+                );
+            }
+        }
+    }
+
+    fn drain_inbox(&mut self) {
+        while let Ok(msg) = self.inbox.try_recv() {
+            self.apply(msg);
+        }
+    }
+
+    /// Block on the inbox until at least one message is applied, charging
+    /// the wait to comm time.
+    fn wait_inbox(&mut self, timeout: Duration) {
+        let t0 = Instant::now();
+        match self.inbox.recv_timeout(timeout) {
+            Ok(msg) => {
+                self.timeline.add_comm(t0.elapsed());
+                self.apply(msg);
+                self.drain_inbox();
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                self.timeline.add_comm(t0.elapsed());
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                panic!("worker {} inbox disconnected mid-run", self.worker)
+            }
+        }
+    }
+
+    /// VAP read gate: spin (draining acks) until the value bound holds.
+    fn vap_gate(&mut self) {
+        let Some(vap) = self.vap.clone() else { return };
+        if vap.is_bounded() {
+            return;
+        }
+        let t0 = Instant::now();
+        let mut first = true;
+        while !vap.is_bounded() {
+            self.wait_inbox(Duration::from_micros(200));
+            if first {
+                vap.record_stall(0, true);
+                first = false;
+            }
+        }
+        let ns = t0.elapsed().as_nanos() as u64;
+        vap.record_stall(ns, false);
+        self.stats.vap_stall_ns += ns;
+    }
+
+    /// GET: returns a copy of the row, enforcing the read condition of the
+    /// configured consistency model.
+    pub fn get(&mut self, key: Key) -> Vec<f32> {
+        self.stats.gets += 1;
+        self.drain_inbox();
+        self.vap_gate();
+
+        // ESSP/VAP: register for eager pushes on first access.
+        if self.cfg.consistency.server_push() && self.registered.insert(key) {
+            self.send(
+                self.router.shard_of(&key),
+                ToShard::Register {
+                    key,
+                    worker: self.worker,
+                },
+            );
+        }
+
+        let min_vclock = self.cfg.consistency.min_row_vclock(self.clock);
+        let key_shard = self.router.shard_of(&key);
+        let mut pulled = false;
+        loop {
+            // Re-read each pass: waves applied in wait_inbox move it.
+            let announced = self.shard_announced[key_shard];
+            if let Some(row) = self.cache.get(&key) {
+                // Effective guarantee: the copy's own vclock, or the
+                // shard's latest wave announcement if newer (the row was
+                // in no wave since, hence unchanged).
+                let vclock = row.vclock.max(announced);
+                let ok = match self.cfg.consistency.async_refresh() {
+                    // Async: any cached copy is readable.
+                    Some(_) => true,
+                    None => vclock >= min_vclock,
+                };
+                if ok {
+                    // The paper's clock differential: c_param - c_worker,
+                    // where c_param is the row copy's *guaranteed* clock
+                    // ("all updates from all workers generated before
+                    // clock x have been applied" — exactly our vclock).
+                    // BSP pins this at -1; SSP spreads it over the window;
+                    // ESSP's eager waves concentrate it near -1.
+                    let differential = vclock - self.clock;
+                    let mut data = row.data.clone();
+                    self.staleness.record(differential);
+                    if !pulled {
+                        self.stats.cache_hits += 1;
+                    }
+                    // Async opportunistic refresh.
+                    if let Some(every) = self.cfg.consistency.async_refresh() {
+                        let last = *self.last_refresh.get(&key).unwrap_or(&(Clock::MIN / 2));
+                        if self.clock - last >= every && !self.pulls_in_flight.contains(&key) {
+                            self.fire_pull(key, Clock::MIN / 2);
+                            self.last_refresh.insert(key, self.clock);
+                        }
+                    }
+                    if self.cfg.read_my_writes {
+                        if let Some(delta) = self.pending.pending(&key) {
+                            for (a, d) in data.iter_mut().zip(delta) {
+                                *a += d;
+                            }
+                        }
+                    }
+                    return data;
+                }
+            }
+            // Cache miss or stale beyond the bound: pull and block.
+            if !self.pulls_in_flight.contains(&key) {
+                self.fire_pull(key, min_vclock);
+            }
+            pulled = true;
+            self.wait_inbox(Duration::from_millis(100));
+        }
+    }
+
+    fn fire_pull(&mut self, key: Key, min_vclock: Clock) {
+        self.stats.pulls += 1;
+        self.pulls_in_flight.insert(key);
+        self.send(
+            self.router.shard_of(&key),
+            ToShard::Get {
+                key,
+                worker: self.worker,
+                min_vclock,
+            },
+        );
+    }
+
+    /// INC: additive update, coalesced client-side until CLOCK.
+    pub fn inc(&mut self, key: Key, delta: &[f32]) {
+        self.stats.raw_incs += 1;
+        self.pending.inc(key, delta);
+    }
+
+    /// Sparse INC: (index, value) pairs against a row of the table's width.
+    pub fn inc_sparse(&mut self, key: Key, pairs: &[(usize, f32)]) {
+        self.stats.raw_incs += 1;
+        let len = *self
+            .row_len
+            .get(&key.0)
+            .unwrap_or_else(|| panic!("unknown table {} in inc_sparse", key.0));
+        self.pending.inc_sparse(key, len, pairs);
+    }
+
+    /// CLOCK: flush coalesced updates, commit the tick, advance the clock.
+    pub fn tick(&mut self) {
+        let batch_norm = self.pending.inf_norm();
+        // Read-my-writes across the flush: fold the deltas into our cached
+        // copies (the server copy will include them once applied; replacing
+        // pushes/pulls overwrite, so nothing double-counts).
+        if self.cfg.read_my_writes {
+            let keys: Vec<Key> = {
+                let mut ks = Vec::with_capacity(self.pending.len());
+                // drain below needs ownership; collect keys first
+                ks.extend(self.pending_keys());
+                ks
+            };
+            for key in keys {
+                if let Some(delta) = self.pending.pending(&key) {
+                    let delta = delta.to_vec();
+                    self.cache.apply_delta(&key, &delta);
+                    // The copy now reflects this worker's clock-`c` updates.
+                    self.cache.bump_fresh(&key, self.clock);
+                }
+            }
+        }
+        let n_shards = self.router.n_shards();
+        let router = self.router;
+        let batches = self.pending.drain_routed(n_shards, |k| router.shard_of(k));
+        // VAP bookkeeping: the flushed batch enters the in-transit set,
+        // *before* any shard can apply it (the tracker is process-global,
+        // so this ordering is strict).
+        if let Some(vap) = &self.vap {
+            let parts = batches.iter().filter(|b| !b.is_empty()).count() as u32;
+            vap.add_batch(self.worker, self.clock, batch_norm, parts);
+        }
+        for (shard, rows) in batches.into_iter().enumerate() {
+            if !rows.is_empty() {
+                self.stats.update_batches += 1;
+                self.send(
+                    shard,
+                    ToShard::Update {
+                        worker: self.worker,
+                        clock: self.clock,
+                        rows,
+                    },
+                );
+            }
+        }
+        // Commit tick to every shard (FIFO after the updates).
+        for shard in 0..n_shards {
+            self.send(
+                shard,
+                ToShard::ClockTick {
+                    worker: self.worker,
+                    clock: self.clock,
+                },
+            );
+        }
+        self.clock += 1;
+        self.timeline.finish_clock(self.clock_started.elapsed());
+        self.clock_started = Instant::now();
+    }
+
+    fn pending_keys(&self) -> Vec<Key> {
+        // UpdateMap doesn't expose iteration; mirror via pending() probing
+        // is impossible — expose keys here through a small accessor.
+        self.pending.keys()
+    }
+
+    /// Pace the virtual clock: after finishing `done` of `total` work
+    /// units, sleep until `done/total` of the virtual clock duration has
+    /// elapsed. Under a virtual clock, real compute is fast, so without
+    /// pacing every GET would cluster at the start of the clock — unlike
+    /// the modeled system, where reads interleave with seconds of compute.
+    /// No-op when no virtual clock is configured.
+    pub fn pace(&mut self, done: usize, total: usize) {
+        let Some(v) = self.cfg.virtual_clock else { return };
+        if total == 0 {
+            return;
+        }
+        let target = v.mul_f64(done as f64 / total as f64);
+        let elapsed = self.clock_started.elapsed();
+        // Only sleep ahead-of-schedule *compute* — waiting time counts.
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+    }
+
+    /// Number of pending (coalesced) rows not yet flushed.
+    pub fn pending_rows(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Cache size (rows).
+    pub fn cached_rows(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Configure the cache capacity (rows; 0 = unbounded). Exposed for the
+    /// LRU-eviction experiments.
+    pub fn set_cache_capacity(&mut self, capacity: usize) {
+        self.cache = RowCache::new(capacity);
+    }
+}

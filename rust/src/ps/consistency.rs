@@ -1,0 +1,179 @@
+//! Consistency models (DESIGN.md §7) — the paper's central object of study.
+//!
+//! A consistency model decides (a) when a cached row may be read, (b) how
+//! rows are refreshed (lazy pull vs eager push), and (c) any additional
+//! global condition (VAP's value bound). `Consistency` is pure data; the
+//! enforcement lives in `client.rs` / `shard.rs` / `vap.rs`, keyed off the
+//! accessors here, so every model shares one code path and differs only in
+//! policy — mirroring how ESSP is "SSP plus an eager communication
+//! strategy" in the paper.
+
+use super::types::Clock;
+
+/// Which consistency model a run uses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Consistency {
+    /// Bulk Synchronous Parallel: barrier every clock (== `Ssp { s: 0 }`,
+    /// kept distinct for reporting).
+    Bsp,
+    /// Stale Synchronous Parallel with staleness bound `s`; lazy pulls
+    /// ("waits until the last minute" — paper Fig. 1 discussion).
+    Ssp { s: Clock },
+    /// Eager SSP: same bound `s`, but the server pushes refreshed rows to
+    /// registered clients on every table-clock advance.
+    Essp { s: Clock },
+    /// No bound at all (Hogwild-flavored baseline). Reads never block;
+    /// rows refresh opportunistically every `refresh_every` clocks.
+    Async { refresh_every: Clock },
+    /// Value-bounded Asynchronous Parallel: reads additionally wait until
+    /// every worker's aggregated in-transit update magnitude is below
+    /// `v0 / sqrt(t)`. Enforced by a global tracker that is only
+    /// realizable because the cluster is simulated (the paper's point).
+    /// Transport is eager (ESSP-style) so visibility can be tracked.
+    Vap { v0: f32 },
+}
+
+impl Consistency {
+    /// Staleness bound used in the SSP read condition; `None` = unbounded.
+    pub fn staleness(&self) -> Option<Clock> {
+        match self {
+            Consistency::Bsp => Some(0),
+            Consistency::Ssp { s } | Consistency::Essp { s } => Some(*s),
+            Consistency::Async { .. } => None,
+            // VAP bounds *values*, not clocks; clock-wise it is unbounded
+            // (we still cap at a large window to avoid pathological runs,
+            // matching the paper's "updates finitely apart" assumption).
+            Consistency::Vap { .. } => Some(1_000_000),
+        }
+    }
+
+    /// Minimum row vclock needed for a read at worker clock `c`:
+    /// all updates with clock <= c - s - 1 must be visible.
+    pub fn min_row_vclock(&self, c: Clock) -> Clock {
+        match self.staleness() {
+            Some(s) => c - s - 1,
+            None => Clock::MIN / 2,
+        }
+    }
+
+    /// Does the server eagerly push refreshed rows to registered clients?
+    pub fn server_push(&self) -> bool {
+        matches!(self, Consistency::Essp { .. } | Consistency::Vap { .. })
+    }
+
+    /// Does the client need the global VAP value-bound check before reads?
+    pub fn value_bound(&self) -> Option<f32> {
+        match self {
+            Consistency::Vap { v0 } => Some(*v0),
+            _ => None,
+        }
+    }
+
+    /// Async refresh period (None for bounded models).
+    pub fn async_refresh(&self) -> Option<Clock> {
+        match self {
+            Consistency::Async { refresh_every } => Some(*refresh_every),
+            _ => None,
+        }
+    }
+
+    /// Parse "bsp" | "ssp:3" | "essp:3" | "async" | "async:5" | "vap:0.1".
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "bsp" => Ok(Consistency::Bsp),
+            "ssp" => {
+                let s: Clock = arg
+                    .ok_or("ssp needs a staleness, e.g. ssp:3")?
+                    .parse()
+                    .map_err(|e| format!("bad staleness: {e}"))?;
+                Ok(Consistency::Ssp { s })
+            }
+            "essp" => {
+                let s: Clock = arg
+                    .ok_or("essp needs a staleness, e.g. essp:3")?
+                    .parse()
+                    .map_err(|e| format!("bad staleness: {e}"))?;
+                Ok(Consistency::Essp { s })
+            }
+            "async" => {
+                let r: Clock = match arg {
+                    Some(a) => a.parse().map_err(|e| format!("bad refresh: {e}"))?,
+                    None => 1,
+                };
+                Ok(Consistency::Async { refresh_every: r })
+            }
+            "vap" => {
+                let v0: f32 = arg
+                    .ok_or("vap needs a value bound, e.g. vap:0.1")?
+                    .parse()
+                    .map_err(|e| format!("bad v0: {e}"))?;
+                Ok(Consistency::Vap { v0 })
+            }
+            _ => Err(format!("unknown consistency model {s:?}")),
+        }
+    }
+
+    /// Short human/CSV label, e.g. "essp:3".
+    pub fn label(&self) -> String {
+        match self {
+            Consistency::Bsp => "bsp".into(),
+            Consistency::Ssp { s } => format!("ssp:{s}"),
+            Consistency::Essp { s } => format!("essp:{s}"),
+            Consistency::Async { refresh_every } => format!("async:{refresh_every}"),
+            Consistency::Vap { v0 } => format!("vap:{v0}"),
+        }
+    }
+}
+
+impl std::fmt::Display for Consistency {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bsp_is_ssp0() {
+        assert_eq!(Consistency::Bsp.staleness(), Some(0));
+        assert_eq!(Consistency::Bsp.min_row_vclock(5), 4);
+        assert_eq!(Consistency::Ssp { s: 0 }.min_row_vclock(5), 4);
+    }
+
+    #[test]
+    fn ssp_window() {
+        let m = Consistency::Ssp { s: 3 };
+        // Read at clock 10 must see all updates <= 6.
+        assert_eq!(m.min_row_vclock(10), 6);
+        assert!(!m.server_push());
+        assert_eq!(Consistency::Essp { s: 3 }.min_row_vclock(10), 6);
+        assert!(Consistency::Essp { s: 3 }.server_push());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["bsp", "ssp:3", "essp:7", "async:2", "vap:0.25"] {
+            let m = Consistency::parse(s).unwrap();
+            assert_eq!(m.label(), s);
+        }
+        assert_eq!(
+            Consistency::parse("async").unwrap(),
+            Consistency::Async { refresh_every: 1 }
+        );
+        assert!(Consistency::parse("ssp").is_err());
+        assert!(Consistency::parse("wild:1").is_err());
+    }
+
+    #[test]
+    fn vap_exposes_bound() {
+        assert_eq!(Consistency::Vap { v0: 0.5 }.value_bound(), Some(0.5));
+        assert_eq!(Consistency::Bsp.value_bound(), None);
+        assert!(Consistency::Vap { v0: 0.5 }.server_push());
+    }
+}

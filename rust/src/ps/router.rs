@@ -1,0 +1,82 @@
+//! Key -> shard routing.
+//!
+//! Deterministic hash routing; every client and every shard agree on the
+//! mapping with zero coordination. FxHash-style multiply-xor keeps the hot
+//! path to a handful of cycles.
+
+use super::types::Key;
+
+/// Routes keys to `n_shards` server shards.
+#[derive(Debug, Clone, Copy)]
+pub struct Router {
+    n_shards: usize,
+}
+
+impl Router {
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards > 0, "need at least one shard");
+        Self { n_shards }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Shard owning `key`.
+    #[inline]
+    pub fn shard_of(&self, key: &Key) -> usize {
+        let h = Self::hash(key);
+        (h % self.n_shards as u64) as usize
+    }
+
+    #[inline]
+    fn hash(key: &Key) -> u64 {
+        // splitmix-style avalanche over (table, row).
+        let mut z = (key.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ key.1;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let r = Router::new(8);
+        for i in 0..100u64 {
+            assert_eq!(r.shard_of(&(1, i)), r.shard_of(&(1, i)));
+        }
+    }
+
+    #[test]
+    fn in_range_and_roughly_balanced() {
+        let r = Router::new(4);
+        let mut counts = [0usize; 4];
+        for t in 0..4u32 {
+            for i in 0..1000u64 {
+                let s = r.shard_of(&(t, i));
+                assert!(s < 4);
+                counts[s] += 1;
+            }
+        }
+        for &c in &counts {
+            // 4000 keys over 4 shards: each within ±25% of fair share.
+            assert!((750..=1250).contains(&c), "imbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_shard() {
+        let r = Router::new(1);
+        assert_eq!(r.shard_of(&(9, 1234)), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_shards_rejected() {
+        Router::new(0);
+    }
+}

@@ -1,0 +1,489 @@
+//! Cluster assembly: builds shards + simulated network + clients, runs an
+//! application across P workers, and collects the run report.
+//!
+//! This is the launcher the paper's "each physical machine runs one
+//! ESSPTable process" maps onto: here, shard threads play the server
+//! processes, worker threads the computation threads, and `sim::net` the
+//! Ethernet between them.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::client::{ClientConfig, ClientStats, PsClient};
+use super::consistency::Consistency;
+use super::msg::{ToShard, ToWorker};
+use super::router::Router;
+use super::shard::{Shard, ShardFinal, ShardStats};
+use super::types::{Clock, Key, RowId, TableId};
+use super::vap::VapTracker;
+use crate::metrics::convergence::ConvergenceLog;
+use crate::metrics::staleness::StalenessHist;
+use crate::metrics::timeline::Timeline;
+use crate::sim::net::{NetConfig, SimNet};
+use crate::sim::straggler::StragglerModel;
+use crate::util::rng::Rng;
+
+/// One application instance per worker. `run_clock` performs one clock of
+/// work against the PS and optionally reports a local convergence metric.
+pub trait PsApp: Send + 'static {
+    fn run_clock(&mut self, ps: &mut PsClient, clock: Clock) -> Option<f64>;
+}
+
+impl<F> PsApp for F
+where
+    F: FnMut(&mut PsClient, Clock) -> Option<f64> + Send + 'static,
+{
+    fn run_clock(&mut self, ps: &mut PsClient, clock: Clock) -> Option<f64> {
+        self(ps, clock)
+    }
+}
+
+/// Cluster-level configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub workers: usize,
+    pub shards: usize,
+    pub consistency: Consistency,
+    pub net: NetConfig,
+    pub straggler: StragglerModel,
+    pub cache_capacity: usize,
+    pub read_my_writes: bool,
+    /// Virtual per-clock compute duration: each clock is padded (by
+    /// sleeping) to at least this long. This emulates the paper's regime —
+    /// long, *uniform* compute per clock on dedicated cores — on a
+    /// timeshared testbed where raw CPU-bound clocks would otherwise have
+    /// scheduler-driven duration noise with no analogue in the modeled
+    /// cluster (DESIGN.md §Substitutions). `None` = run at raw speed.
+    pub virtual_clock: Option<Duration>,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            shards: 2,
+            consistency: Consistency::Essp { s: 1 },
+            net: NetConfig::instant(),
+            straggler: StragglerModel::None,
+            cache_capacity: 0,
+            read_my_writes: true,
+            virtual_clock: None,
+            seed: 42,
+        }
+    }
+}
+
+/// Declarative table spec; rows are initialized before launch.
+pub struct TableSpec {
+    pub table: TableId,
+    pub rows: RowId,
+    /// Uniform row length, or `usize::MAX` for variable-length rows (e.g.
+    /// the LM parameter table where row r holds tensor r); variable-length
+    /// tables cannot be used with `inc_sparse`.
+    pub row_len: usize,
+    /// Initializer: (row id, rng) -> payload.
+    pub init: Box<dyn Fn(RowId, &mut Rng) -> Vec<f32>>,
+}
+
+impl TableSpec {
+    pub fn zeros(table: TableId, rows: RowId, row_len: usize) -> Self {
+        Self {
+            table,
+            rows,
+            row_len,
+            init: Box::new(move |_, _| vec![0.0; row_len]),
+        }
+    }
+
+    pub fn random_normal(table: TableId, rows: RowId, row_len: usize, scale: f32) -> Self {
+        Self {
+            table,
+            rows,
+            row_len,
+            init: Box::new(move |_, rng| (0..row_len).map(|_| scale * rng.normal_f32()).collect()),
+        }
+    }
+}
+
+/// Everything measured during a run.
+pub struct RunReport {
+    pub wall: Duration,
+    pub staleness: StalenessHist,
+    pub per_worker_staleness: Vec<StalenessHist>,
+    pub timelines: Vec<Timeline>,
+    pub convergence: ConvergenceLog,
+    pub client_stats: Vec<ClientStats>,
+    pub shard_stats: Vec<ShardStats>,
+    pub net_messages: u64,
+    pub net_bytes: u64,
+    /// Final table contents (merged across shards).
+    pub table_rows: HashMap<Key, Vec<f32>>,
+    /// VAP-only: total reader stall time and stalled read count.
+    pub vap_stall: Option<(Duration, u64)>,
+}
+
+impl RunReport {
+    pub fn comm_fraction(&self) -> f64 {
+        let comp: f64 = self.timelines.iter().map(|t| t.total_comp().as_secs_f64()).sum();
+        let comm: f64 = self.timelines.iter().map(|t| t.total_comm().as_secs_f64()).sum();
+        if comp + comm == 0.0 {
+            0.0
+        } else {
+            comm / (comp + comm)
+        }
+    }
+
+    /// Reassemble a table into a dense matrix (rows x row_len).
+    pub fn table_matrix(&self, table: TableId, rows: RowId, row_len: usize) -> Vec<Vec<f32>> {
+        (0..rows)
+            .map(|r| {
+                self.table_rows
+                    .get(&(table, r))
+                    .cloned()
+                    .unwrap_or_else(|| vec![0.0; row_len])
+            })
+            .collect()
+    }
+}
+
+/// A configured-but-not-yet-running cluster.
+pub struct Cluster {
+    cfg: ClusterConfig,
+    tables: Vec<TableSpec>,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        assert!(cfg.workers > 0 && cfg.shards > 0);
+        Self {
+            cfg,
+            tables: Vec::new(),
+        }
+    }
+
+    pub fn add_table(&mut self, spec: TableSpec) -> &mut Self {
+        self.tables.push(spec);
+        self
+    }
+
+    /// Run `apps` (one per worker) for `clocks` ticks each; returns the
+    /// report. Consumes the cluster.
+    pub fn run(self, apps: Vec<Box<dyn PsApp>>, clocks: u64) -> RunReport {
+        let cfg = self.cfg;
+        assert_eq!(
+            apps.len(),
+            cfg.workers,
+            "need exactly one app instance per worker"
+        );
+        let router = Router::new(cfg.shards);
+        let vap: Option<Arc<VapTracker>> = cfg
+            .consistency
+            .value_bound()
+            .map(|v0| Arc::new(VapTracker::new(v0, cfg.workers)));
+
+        // Channels: per-worker and per-shard inboxes.
+        let mut worker_tx: Vec<Sender<ToWorker>> = Vec::new();
+        let mut worker_rx: Vec<Receiver<ToWorker>> = Vec::new();
+        for _ in 0..cfg.workers {
+            let (tx, rx) = channel();
+            worker_tx.push(tx);
+            worker_rx.push(rx);
+        }
+        let mut shard_tx: Vec<Sender<ToShard>> = Vec::new();
+        let mut shard_rx: Vec<Receiver<ToShard>> = Vec::new();
+        for _ in 0..cfg.shards {
+            let (tx, rx) = channel();
+            shard_tx.push(tx);
+            shard_rx.push(rx);
+        }
+
+        let net = SimNet::new(cfg.net.clone(), worker_tx, shard_tx.clone());
+
+        // Build + initialize shards. Clock-gated push waves are an ESSP
+        // mechanism; VAP uses its own per-update eager waves instead.
+        let clock_push = cfg.consistency.server_push() && vap.is_none();
+        let mut shards: Vec<Shard> = (0..cfg.shards)
+            .map(|id| Shard::new(id, cfg.workers, clock_push, net.handle(), vap.clone()))
+            .collect();
+        let mut init_rng = Rng::with_stream(cfg.seed, 0x7ab1e);
+        let mut row_len: HashMap<TableId, usize> = HashMap::new();
+        for spec in &self.tables {
+            let variable = spec.row_len == usize::MAX;
+            if !variable {
+                row_len.insert(spec.table, spec.row_len);
+            }
+            for r in 0..spec.rows {
+                let key = (spec.table, r);
+                let data = (spec.init)(r, &mut init_rng);
+                assert!(
+                    variable || data.len() == spec.row_len,
+                    "init length mismatch on table {} row {r}",
+                    spec.table
+                );
+                shards[router.shard_of(&key)].init_row(key, data);
+            }
+        }
+
+        // Launch shard threads.
+        let (dump_tx, dump_rx) = channel::<ShardFinal>();
+        let shard_handles: Vec<_> = shards
+            .into_iter()
+            .zip(shard_rx)
+            .map(|(shard, rx)| super::shard::spawn(shard, rx, dump_tx.clone()))
+            .collect();
+        drop(dump_tx);
+
+        // Launch worker threads.
+        let started = Instant::now();
+        let worker_handles: Vec<_> = apps
+            .into_iter()
+            .zip(worker_rx)
+            .enumerate()
+            .map(|(w, (mut app, inbox))| {
+                let client_cfg = ClientConfig {
+                    consistency: cfg.consistency,
+                    cache_capacity: cfg.cache_capacity,
+                    read_my_writes: cfg.read_my_writes,
+                    virtual_clock: cfg.virtual_clock,
+                };
+                let net_handle = net.handle();
+                let row_len = row_len.clone();
+                let vap = vap.clone();
+                let straggler = cfg.straggler.clone();
+                let virtual_clock = cfg.virtual_clock;
+                let seed = cfg.seed;
+                std::thread::Builder::new()
+                    .name(format!("worker-{w}"))
+                    .spawn(move || {
+                        crate::sim::priority::worker_thread();
+                        let vap_for_detach = vap.clone();
+                        let mut ps = PsClient::new(
+                            w,
+                            client_cfg,
+                            router,
+                            net_handle,
+                            inbox,
+                            row_len,
+                            vap,
+                            started,
+                        );
+                        let mut log = ConvergenceLog::new();
+                        let trace = std::env::var_os("ESSPTABLE_TRACE").is_some();
+                        for c in 0..clocks as Clock {
+                            if trace {
+                                eprintln!(
+                                    "[trace] worker {w} clock {c} t={:.3}s",
+                                    started.elapsed().as_secs_f64()
+                                );
+                            }
+                            let t0 = Instant::now();
+                            let comm0 = ps.timeline.current_comm();
+                            let metric = app.run_clock(&mut ps, c);
+                            // Straggler injection: stretch this clock's
+                            // *compute* time by the model's factor. Blocked
+                            // (comm) time must not be multiplied — that
+                            // would couple workers into a positive feedback
+                            // loop (slow worker -> others wait longer ->
+                            // they sleep longer -> ...).
+                            let factor = straggler.factor(seed, w, c as u64);
+                            let comm = ps.timeline.current_comm() - comm0;
+                            let comp = t0.elapsed().saturating_sub(comm);
+                            // Virtual clock: pad compute to the configured
+                            // duration so per-clock compute is long and
+                            // uniform (the paper's regime), then apply the
+                            // straggler factor to the *virtual* duration.
+                            let target = match virtual_clock {
+                                Some(v) => v.max(comp).mul_f64(factor),
+                                None => comp.mul_f64(factor),
+                            };
+                            if target > comp {
+                                std::thread::sleep(target - comp);
+                            }
+                            if let Some(v) = metric {
+                                log.report(c, ps.elapsed_seconds(), v);
+                            }
+                            ps.tick();
+                        }
+                        // VAP: a finished worker must detach so remaining
+                        // readers don't wait forever for its acks.
+                        if let Some(v) = &vap_for_detach {
+                            v.detach(w);
+                        }
+                        (ps, log)
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+
+        // Join workers, harvest metrics.
+        let mut staleness = StalenessHist::new();
+        let mut per_worker_staleness = Vec::new();
+        let mut timelines = Vec::new();
+        let mut convergence = ConvergenceLog::new();
+        let mut client_stats = Vec::new();
+        for h in worker_handles {
+            let (ps, log) = h.join().expect("worker panicked");
+            staleness.merge(&ps.staleness);
+            per_worker_staleness.push(ps.staleness.clone());
+            timelines.push(ps.timeline.clone());
+            convergence.merge(&log);
+            client_stats.push(ps.stats.clone());
+        }
+        let wall = started.elapsed();
+
+        // Drain the network so no in-flight update can race the direct-path
+        // Shutdown below (mpsc inboxes are FIFO: once delivered, messages
+        // queued before Shutdown are processed before it).
+        net.flush();
+
+        // Stop shards (direct control-plane path, bypassing the sim net).
+        for tx in &shard_tx {
+            let _ = tx.send(ToShard::Shutdown);
+        }
+        let mut shard_stats = vec![ShardStats::default(); cfg.shards];
+        let mut table_rows = HashMap::new();
+        for _ in 0..cfg.shards {
+            let fin = dump_rx.recv().expect("shard final state");
+            shard_stats[fin.id] = fin.stats;
+            for (k, row) in fin.rows {
+                table_rows.insert(k, row.data);
+            }
+        }
+        for h in shard_handles {
+            let _ = h.join();
+        }
+        let net_messages = net.messages();
+        let net_bytes = net.bytes();
+        net.shutdown();
+
+        RunReport {
+            wall,
+            staleness,
+            per_worker_staleness,
+            timelines,
+            convergence,
+            client_stats,
+            shard_stats,
+            net_messages,
+            net_bytes,
+            table_rows,
+            vap_stall: vap.map(|v| {
+                (
+                    Duration::from_nanos(v.stall_ns()),
+                    v.stalled_reads(),
+                )
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// P workers each add 1.0 to the same row every clock; final value
+    /// must be P * clocks regardless of the consistency model.
+    fn counter_run(consistency: Consistency, workers: usize, clocks: u64) -> RunReport {
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers,
+            shards: 2,
+            consistency,
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 4, 1));
+        let apps: Vec<Box<dyn PsApp>> = (0..workers)
+            .map(|_| {
+                Box::new(|ps: &mut PsClient, _c: Clock| {
+                    let _ = ps.get((0, 0));
+                    ps.inc((0, 0), &[1.0]);
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        cluster.run(apps, clocks)
+    }
+
+    #[test]
+    fn no_update_lost_bsp() {
+        let r = counter_run(Consistency::Bsp, 4, 10);
+        assert_eq!(r.table_rows[&(0, 0)][0], 40.0);
+    }
+
+    #[test]
+    fn no_update_lost_ssp() {
+        let r = counter_run(Consistency::Ssp { s: 3 }, 4, 10);
+        assert_eq!(r.table_rows[&(0, 0)][0], 40.0);
+    }
+
+    #[test]
+    fn no_update_lost_essp() {
+        let r = counter_run(Consistency::Essp { s: 3 }, 4, 10);
+        assert_eq!(r.table_rows[&(0, 0)][0], 40.0);
+        // ESSP must actually push.
+        assert!(r.shard_stats.iter().any(|s| s.push_waves > 0));
+    }
+
+    #[test]
+    fn no_update_lost_async() {
+        let r = counter_run(Consistency::Async { refresh_every: 1 }, 4, 10);
+        assert_eq!(r.table_rows[&(0, 0)][0], 40.0);
+    }
+
+    #[test]
+    fn no_update_lost_vap() {
+        let r = counter_run(Consistency::Vap { v0: 100.0 }, 2, 5);
+        assert_eq!(r.table_rows[&(0, 0)][0], 10.0);
+        assert!(r.vap_stall.is_some());
+    }
+
+    #[test]
+    fn bsp_staleness_is_exactly_minus_one() {
+        let r = counter_run(Consistency::Bsp, 3, 8);
+        // Paper, Fig. 1 caption: "on BSP the staleness is always -1". With
+        // the clock-differential metric (c_param - c_worker, c_param = the
+        // copy's guaranteed clock) a BSP read at clock c waits for table
+        // clock c-1 and cannot see beyond it: exactly -1, every read.
+        assert_eq!(r.staleness.min(), Some(-1), "{:?}", r.staleness.min());
+        assert_eq!(r.staleness.max(), Some(-1), "{:?}", r.staleness.max());
+    }
+
+    #[test]
+    fn convergence_log_collects() {
+        let mut cluster = Cluster::new(ClusterConfig::default());
+        cluster.add_table(TableSpec::zeros(0, 1, 1));
+        let apps: Vec<Box<dyn PsApp>> = (0..4)
+            .map(|_| {
+                Box::new(|ps: &mut PsClient, c: Clock| {
+                    let _ = ps.get((0, 0));
+                    Some(c as f64)
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let r = cluster.run(apps, 3);
+        let s = r.convergence.summed();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[2].value, 4.0 * 2.0);
+    }
+
+    #[test]
+    fn random_table_init_is_seeded() {
+        let mk = || {
+            let mut c = Cluster::new(ClusterConfig {
+                workers: 1,
+                ..Default::default()
+            });
+            c.add_table(TableSpec::random_normal(0, 8, 4, 0.1));
+            let apps: Vec<Box<dyn PsApp>> =
+                vec![Box::new(|_: &mut PsClient, _: Clock| None)];
+            c.run(apps, 1)
+        };
+        let a = mk();
+        let b = mk();
+        for r in 0..8u64 {
+            assert_eq!(a.table_rows[&(0, r)], b.table_rows[&(0, r)]);
+        }
+    }
+}

@@ -1,0 +1,476 @@
+//! Server shard: owns a partition of the rows, applies coalesced updates,
+//! tracks the table clock, answers pulls (SSP) and fires eager push waves
+//! (ESSP) — the server half of the paper's ESSPTable.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::msg::{PushRow, ToShard, ToWorker};
+use super::types::{Clock, Key, WorkerId};
+use super::vap::VapTracker;
+use super::vclock::MinClock;
+use crate::sim::net::{NetHandle, NodeId, Packet};
+
+/// A stored row: payload plus best-effort freshness.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub data: Vec<f32>,
+    /// Max update clock reflected in `data` (NEVER if untouched).
+    pub fresh: Clock,
+}
+
+/// Counters reported back to the harness at shutdown.
+#[derive(Debug, Default, Clone)]
+pub struct ShardStats {
+    pub gets_served: u64,
+    pub gets_queued: u64,
+    pub updates_applied: u64,
+    pub rows_pushed: u64,
+    pub push_waves: u64,
+}
+
+struct PendingGet {
+    key: Key,
+    worker: WorkerId,
+    min_vclock: Clock,
+}
+
+/// Shard state. Owned by its thread after `spawn`; constructed (and row-
+/// initialized) by the coordinator before launch.
+pub struct Shard {
+    id: usize,
+    rows: HashMap<Key, Row>,
+    clocks: MinClock,
+    /// ESSP push lists: worker -> keys it registered (insertion-ordered
+    /// Vec — iteration order affects only message layout).
+    registered: Vec<Vec<Key>>,
+    /// Rows updated since the last push wave: waves carry only these (the
+    /// paper's server "pushes out the [updated] table-rows"), which keeps
+    /// wave size proportional to update traffic, not to the working set.
+    dirty: std::collections::HashSet<Key>,
+    pending: Vec<PendingGet>,
+    push_enabled: bool,
+    net: NetHandle,
+    vap: Option<Arc<VapTracker>>,
+    stats: ShardStats,
+}
+
+impl Shard {
+    pub fn new(
+        id: usize,
+        workers: usize,
+        push_enabled: bool,
+        net: NetHandle,
+        vap: Option<Arc<VapTracker>>,
+    ) -> Self {
+        Self {
+            id,
+            rows: HashMap::new(),
+            clocks: MinClock::new(workers),
+            registered: vec![Vec::new(); workers],
+            dirty: std::collections::HashSet::new(),
+            pending: Vec::new(),
+            push_enabled,
+            net,
+            vap,
+            stats: ShardStats::default(),
+        }
+    }
+
+    /// Pre-launch initialization of a row (coordinator only).
+    pub fn init_row(&mut self, key: Key, data: Vec<f32>) {
+        self.rows.insert(
+            key,
+            Row {
+                data,
+                fresh: super::types::NEVER,
+            },
+        );
+    }
+
+    pub fn table_clock(&self) -> Clock {
+        self.clocks.min()
+    }
+
+    pub fn row(&self, key: &Key) -> Option<&Row> {
+        self.rows.get(key)
+    }
+
+    pub fn stats(&self) -> &ShardStats {
+        &self.stats
+    }
+
+    /// Drive the shard from its inbox until Shutdown. Returns final stats
+    /// and the row store (for end-of-run evaluation by the harness).
+    pub fn run(mut self, inbox: Receiver<ToShard>, dump: Sender<ShardFinal>) {
+        while let Ok(msg) = inbox.recv() {
+            if !self.handle(msg) {
+                break;
+            }
+        }
+        let _ = dump.send(ShardFinal {
+            id: self.id,
+            rows: self.rows,
+            stats: self.stats,
+        });
+    }
+
+    /// Process one message; false = shutdown requested.
+    pub fn handle(&mut self, msg: ToShard) -> bool {
+        match msg {
+            ToShard::Get {
+                key,
+                worker,
+                min_vclock,
+            } => self.on_get(key, worker, min_vclock),
+            ToShard::Update {
+                worker,
+                clock,
+                rows,
+            } => self.on_update(worker, clock, rows),
+            ToShard::ClockTick { worker, clock } => self.on_tick(worker, clock),
+            ToShard::Register { key, worker } => {
+                if !self.registered[worker].contains(&key) {
+                    self.registered[worker].push(key);
+                }
+            }
+            // ESSP wave acks model ack traffic; nothing to track server-side.
+            ToShard::PushAck { .. } => {}
+            ToShard::VapAck { worker, seq } => {
+                if let Some(vap) = &self.vap {
+                    vap.on_wave_ack(worker, seq);
+                }
+            }
+            ToShard::Shutdown => return false,
+        }
+        true
+    }
+
+    fn reply_row(&mut self, key: Key, worker: WorkerId) {
+        let vclock = self.table_clock();
+        let row = self
+            .rows
+            .get(&key)
+            .unwrap_or_else(|| panic!("GET of uninitialized row {key:?} on shard {}", self.id));
+        let msg = ToWorker::Row {
+            key,
+            data: row.data.clone(),
+            vclock,
+            fresh: row.fresh.max(vclock),
+        };
+        self.stats.gets_served += 1;
+        self.net
+            .send(NodeId::Shard(self.id), NodeId::Worker(worker), Packet::ToWorker(msg));
+    }
+
+    fn on_get(&mut self, key: Key, worker: WorkerId, min_vclock: Clock) {
+        if self.table_clock() >= min_vclock {
+            self.reply_row(key, worker);
+        } else {
+            // SSP wait condition: hold the reply until enough clocks commit.
+            self.stats.gets_queued += 1;
+            self.pending.push(PendingGet {
+                key,
+                worker,
+                min_vclock,
+            });
+        }
+    }
+
+    fn on_update(&mut self, source: WorkerId, clock: Clock, rows: Vec<(Key, Vec<f32>)>) {
+        let mut touched = Vec::with_capacity(rows.len());
+        for (key, delta) in rows {
+            self.stats.updates_applied += 1;
+            if self.push_enabled {
+                self.dirty.insert(key);
+            }
+            let row = self.rows.entry(key).or_insert_with(|| Row {
+                data: vec![0.0; delta.len()],
+                fresh: super::types::NEVER,
+            });
+            debug_assert_eq!(row.data.len(), delta.len(), "row length mismatch {key:?}");
+            for (a, d) in row.data.iter_mut().zip(&delta) {
+                *a += d;
+            }
+            row.fresh = row.fresh.max(clock);
+            touched.push(key);
+        }
+        if self.vap.is_some() {
+            self.vap_wave(source, clock, &touched);
+        }
+    }
+
+    /// VAP eager propagation: immediately push the rows this batch touched
+    /// to every *other* registered reader, ack-tracked per wave. This —
+    /// a per-update round trip to every reader — is the synchronization
+    /// cost the paper argues makes VAP impractical; here it is simulated
+    /// faithfully so the cost can be measured (vap-compare experiment).
+    fn vap_wave(&mut self, source: WorkerId, clock: Clock, touched: &[Key]) {
+        let vap = self.vap.as_ref().unwrap().clone();
+        let mut awaiting = std::collections::HashSet::new();
+        let mut per_worker_rows: Vec<Vec<PushRow>> =
+            (0..self.registered.len()).map(|_| Vec::new()).collect();
+        for (w, regs) in self.registered.iter().enumerate() {
+            if w == source {
+                continue; // the writer reads-its-own-writes locally
+            }
+            for key in touched {
+                if regs.contains(key) {
+                    if let Some(row) = self.rows.get(key) {
+                        per_worker_rows[w].push(PushRow {
+                            key: *key,
+                            data: row.data.clone(),
+                            fresh: row.fresh,
+                        });
+                    }
+                }
+            }
+            if !per_worker_rows[w].is_empty() {
+                awaiting.insert(w);
+            }
+        }
+        let seq = vap.assign_wave((source, clock), awaiting.clone());
+        for w in awaiting {
+            let rows = std::mem::take(&mut per_worker_rows[w]);
+            self.stats.rows_pushed += rows.len() as u64;
+            self.net.send(
+                NodeId::Shard(self.id),
+                NodeId::Worker(w),
+                Packet::ToWorker(ToWorker::VapPush {
+                    shard: self.id,
+                    seq,
+                    rows,
+                }),
+            );
+        }
+    }
+
+    fn on_tick(&mut self, worker: WorkerId, clock: Clock) {
+        if let Some(new_min) = self.clocks.commit(worker, clock) {
+            self.serve_pending(new_min);
+            if self.push_enabled {
+                self.push_wave(new_min);
+            }
+        }
+    }
+
+    fn serve_pending(&mut self, table_clock: Clock) {
+        let mut still = Vec::new();
+        for p in std::mem::take(&mut self.pending) {
+            if table_clock >= p.min_vclock {
+                self.reply_row(p.key, p.worker);
+            } else {
+                still.push(p);
+            }
+        }
+        self.pending = still;
+    }
+
+    /// ESSP: push the registered rows *updated since the last wave* to
+    /// each registered client, batched per client into one wave message.
+    fn push_wave(&mut self, vclock: Clock) {
+        for worker in 0..self.registered.len() {
+            if self.registered[worker].is_empty() {
+                continue;
+            }
+            let rows: Vec<PushRow> = self.registered[worker]
+                .iter()
+                .filter(|key| self.dirty.contains(*key))
+                .filter_map(|key| {
+                    self.rows.get(key).map(|row| PushRow {
+                        key: *key,
+                        data: row.data.clone(),
+                        fresh: row.fresh.max(vclock),
+                    })
+                })
+                .collect();
+            // Empty waves still announce the new table clock so clients
+            // can advance their copies' guarantees without re-pulling.
+            self.stats.rows_pushed += rows.len() as u64;
+            self.stats.push_waves += 1;
+            self.net.send(
+                NodeId::Shard(self.id),
+                NodeId::Worker(worker),
+                Packet::ToWorker(ToWorker::Push {
+                    shard: self.id,
+                    vclock,
+                    rows,
+                }),
+            );
+        }
+        self.dirty.clear();
+    }
+}
+
+/// Final shard state returned to the harness at shutdown.
+pub struct ShardFinal {
+    pub id: usize,
+    pub rows: HashMap<Key, Row>,
+    pub stats: ShardStats,
+}
+
+/// Spawn a shard thread. Returns its join handle.
+pub fn spawn(shard: Shard, inbox: Receiver<ToShard>, dump: Sender<ShardFinal>) -> JoinHandle<()> {
+    let id = shard.id;
+    std::thread::Builder::new()
+        .name(format!("shard-{id}"))
+        .spawn(move || {
+            crate::sim::priority::infrastructure_thread();
+            shard.run(inbox, dump)
+        })
+        .expect("spawn shard thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::net::{NetConfig, SimNet};
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    /// Single-shard fixture with an instant network and one worker inbox.
+    fn fixture(workers: usize, push: bool) -> (Shard, std::sync::mpsc::Receiver<ToWorker>, SimNet)
+    {
+        let (wtx, wrx) = channel();
+        let (stx, _srx) = channel();
+        let net = SimNet::new(NetConfig::instant(), vec![wtx], vec![stx]);
+        let shard = Shard::new(0, workers, push, net.handle(), None);
+        (shard, wrx, net)
+    }
+
+    #[test]
+    fn get_after_init_replies_immediately() {
+        let (mut shard, wrx, _net) = fixture(1, false);
+        shard.init_row((0, 1), vec![1.0, 2.0]);
+        // min_vclock NEVER-ish: satisfied at table clock -1.
+        shard.handle(ToShard::Get {
+            key: (0, 1),
+            worker: 0,
+            min_vclock: -1,
+        });
+        match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Row { data, vclock, .. } => {
+                assert_eq!(data, vec![1.0, 2.0]);
+                assert_eq!(vclock, -1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn get_blocks_until_clock_advances() {
+        let (mut shard, wrx, _net) = fixture(2, false);
+        shard.init_row((0, 1), vec![0.0]);
+        shard.handle(ToShard::Get {
+            key: (0, 1),
+            worker: 0,
+            min_vclock: 0,
+        });
+        assert!(wrx.try_recv().is_err(), "must queue until table clock 0");
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        assert!(wrx.try_recv().is_err(), "worker 1 has not committed");
+        shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
+        match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Row { vclock, .. } => assert_eq!(vclock, 0),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn updates_are_additive_and_bump_fresh() {
+        let (mut shard, _wrx, _net) = fixture(1, false);
+        shard.init_row((0, 1), vec![1.0, 1.0]);
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![0.5, -1.0])],
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 1,
+            rows: vec![((0, 1), vec![0.5, 0.0])],
+        });
+        let row = shard.row(&(0, 1)).unwrap();
+        assert_eq!(row.data, vec![2.0, 0.0]);
+        assert_eq!(row.fresh, 1);
+    }
+
+    #[test]
+    fn essp_pushes_updated_registered_rows_on_advance() {
+        let (mut shard, wrx, _net) = fixture(1, true);
+        shard.init_row((0, 1), vec![7.0]);
+        shard.init_row((0, 2), vec![8.0]);
+        shard.handle(ToShard::Register { key: (0, 1), worker: 0 });
+        shard.handle(ToShard::Register { key: (0, 2), worker: 0 });
+        // Only row (0,1) is updated: the wave must carry exactly it
+        // (delta pushes — unchanged rows are certified by omission).
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![1.0])],
+        });
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Push { vclock, rows, .. } => {
+                assert_eq!(vclock, 0);
+                assert_eq!(rows.len(), 1);
+                assert_eq!(rows[0].key, (0, 1));
+                assert_eq!(rows[0].data, vec![8.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(shard.stats().push_waves, 1);
+        // Next advance with no updates: empty wave still announces vclock.
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 1 });
+        match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Push { vclock, rows, .. } => {
+                assert_eq!(vclock, 1);
+                assert!(rows.is_empty());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ssp_mode_never_pushes() {
+        let (mut shard, wrx, _net) = fixture(1, false);
+        shard.init_row((0, 1), vec![7.0]);
+        shard.handle(ToShard::Register { key: (0, 1), worker: 0 });
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        assert!(wrx.try_recv().is_err());
+    }
+
+    #[test]
+    fn duplicate_registration_is_idempotent() {
+        let (mut shard, wrx, _net) = fixture(1, true);
+        shard.init_row((0, 1), vec![7.0]);
+        for _ in 0..3 {
+            shard.handle(ToShard::Register { key: (0, 1), worker: 0 });
+        }
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![1.0])],
+        });
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Push { rows, .. } => assert_eq!(rows.len(), 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_returns_final_state() {
+        let (mut shard, _wrx, _net) = fixture(1, false);
+        shard.init_row((0, 1), vec![3.0]);
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![1.0])],
+        });
+        assert!(!shard.handle(ToShard::Shutdown));
+        assert_eq!(shard.row(&(0, 1)).unwrap().data, vec![4.0]);
+    }
+}

@@ -1,0 +1,233 @@
+//! Theory instruments: the paper's convergence bounds, evaluated on
+//! *measured* staleness profiles.
+//!
+//! Theorem 5 (SGD under SSP, convergence in probability) bounds
+//!
+//! ```text
+//! P[ R[X]/T - (1/sqrt(T)) (ηL² + F²/η + 2ηL²μ_γ) >= τ ]
+//!   <= exp( -Tτ² / (2·η̄_T·σ_γ + (2/3)·ηL²(2s+1)P·τ) )
+//! ```
+//!
+//! with η̄_T = η²L⁴(ln T + 1)/T, where μ_γ and σ_γ are the mean and
+//! variance of the staleness distribution γ_t. The paper's argument for
+//! ESSP is exactly that eager communication shrinks μ_γ and σ_γ, which
+//! tightens both the expected-regret gap term (2ηL²μ_γ/√T) and the
+//! exponential tail. This module computes those quantities from a
+//! [`StalenessHist`] measured during a run, so each experiment can report
+//! "theory-predicted" alongside "measured" — the bridge between the
+//! paper's Theorems and its Figures.
+//!
+//! Units note: γ_t in the theory is ||γ_t||₂ of the missing-update vector,
+//! bounded by P(2s+1); our measured clock differentials are a 1-D proxy.
+//! We map differential d -> γ = P * (d - (-1)).abs() (number of missing
+//! update *waves* times workers), the same scaling the Lemma 4 bound uses.
+
+use crate::metrics::staleness::StalenessHist;
+
+/// Problem constants for the bound (paper notation).
+#[derive(Debug, Clone, Copy)]
+pub struct BoundParams {
+    /// Lipschitz constant L of the component losses.
+    pub lipschitz: f64,
+    /// Diameter bound F² >= D(x||x').
+    pub f_sq: f64,
+    /// Step-size scale η (η_t = η/√t).
+    pub eta: f64,
+    /// Workers P.
+    pub workers: usize,
+    /// Staleness bound s.
+    pub staleness: i64,
+    /// Horizon T (total updates).
+    pub horizon: u64,
+}
+
+/// Staleness moments extracted from a measured histogram, mapped to the
+/// theory's γ scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GammaMoments {
+    pub mu: f64,
+    pub sigma_sq: f64,
+    /// Hard bound P(2s+1) from Lemma 4.
+    pub gamma_max: f64,
+}
+
+/// Map a measured clock-differential histogram to γ moments.
+///
+/// Differential -1 (fully fresh) maps to γ = 0; each additional clock of
+/// staleness contributes P missing updates.
+pub fn gamma_moments(hist: &StalenessHist, workers: usize, staleness: i64) -> GammaMoments {
+    let p = workers as f64;
+    let total = hist.total().max(1) as f64;
+    let mut mu = 0.0;
+    for (d, c) in hist.buckets() {
+        let gamma = p * ((d + 1).abs() as f64);
+        mu += gamma * c as f64 / total;
+    }
+    let mut var = 0.0;
+    for (d, c) in hist.buckets() {
+        let gamma = p * ((d + 1).abs() as f64);
+        var += (gamma - mu).powi(2) * c as f64 / total;
+    }
+    GammaMoments {
+        mu,
+        sigma_sq: var,
+        gamma_max: p * (2 * staleness + 1) as f64,
+    }
+}
+
+/// The deterministic part of Theorem 5: the expected-regret rate
+/// (1/√T)(ηL² + F²/η + 2ηL²μ_γ). Lower is better; the μ_γ term is the
+/// lever ESSP pulls.
+pub fn expected_regret_rate(p: &BoundParams, g: &GammaMoments) -> f64 {
+    let l2 = p.lipschitz * p.lipschitz;
+    (p.eta * l2 + p.f_sq / p.eta + 2.0 * p.eta * l2 * g.mu) / (p.horizon as f64).sqrt()
+}
+
+/// The exponential tail of Theorem 5: probability that R[X]/T exceeds the
+/// expected rate by τ.
+pub fn tail_probability(p: &BoundParams, g: &GammaMoments, tau: f64) -> f64 {
+    let t = p.horizon as f64;
+    let l2 = p.lipschitz * p.lipschitz;
+    let l4 = l2 * l2;
+    let eta_bar = p.eta * p.eta * l4 * (t.ln() + 1.0) / t;
+    let denom = 2.0 * eta_bar * g.sigma_sq
+        + (2.0 / 3.0)
+            * p.eta
+            * l2
+            * ((2 * p.staleness + 1) as f64)
+            * (p.workers as f64)
+            * tau;
+    if denom <= 0.0 {
+        return if tau > 0.0 { 0.0 } else { 1.0 };
+    }
+    (-t * tau * tau / denom).exp().min(1.0)
+}
+
+/// The η that minimizes the staleness-aware rate: balancing
+/// ηL²(1 + 2μ_γ) against F²/η gives η* = F / (L √(1 + 2μ_γ)).
+/// Fresh reads (μ_γ -> 0) permit larger steps — the theory's version of
+/// the §Robustness observation that staleness effectively inflates the
+/// step size.
+pub fn optimal_eta(p: &BoundParams, g: &GammaMoments) -> f64 {
+    (p.f_sq.sqrt()) / (p.lipschitz * (1.0 + 2.0 * g.mu).sqrt())
+}
+
+/// Side-by-side theory report for two measured runs (e.g. SSP vs ESSP).
+pub fn compare_report(
+    params: &BoundParams,
+    label_a: &str,
+    hist_a: &StalenessHist,
+    label_b: &str,
+    hist_b: &StalenessHist,
+) -> String {
+    let ga = gamma_moments(hist_a, params.workers, params.staleness);
+    let gb = gamma_moments(hist_b, params.workers, params.staleness);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:>10} {:>12} {:>14} {:>12}\n",
+        "run", "mu_gamma", "sigma2", "regret rate", "P[tau=0.5]"
+    ));
+    for (label, g) in [(label_a, &ga), (label_b, &gb)] {
+        out.push_str(&format!(
+            "{:<10} {:>10.2} {:>12.2} {:>14.5} {:>12.3e}\n",
+            label,
+            g.mu,
+            g.sigma_sq,
+            expected_regret_rate(params, g),
+            tail_probability(params, g, 0.5),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> BoundParams {
+        BoundParams {
+            lipschitz: 1.0,
+            f_sq: 1.0,
+            eta: 0.5,
+            workers: 8,
+            staleness: 3,
+            horizon: 10_000,
+        }
+    }
+
+    fn hist(entries: &[(i64, u64)]) -> StalenessHist {
+        let mut h = StalenessHist::new();
+        for &(d, c) in entries {
+            for _ in 0..c {
+                h.record(d);
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn fresh_profile_has_zero_mu() {
+        let h = hist(&[(-1, 100)]);
+        let g = gamma_moments(&h, 8, 3);
+        assert_eq!(g.mu, 0.0);
+        assert_eq!(g.sigma_sq, 0.0);
+        assert_eq!(g.gamma_max, 8.0 * 7.0);
+    }
+
+    #[test]
+    fn staler_profile_has_larger_mu() {
+        let fresh = gamma_moments(&hist(&[(-1, 80), (-2, 20)]), 8, 3);
+        let stale = gamma_moments(&hist(&[(-1, 20), (-4, 80)]), 8, 3);
+        assert!(stale.mu > fresh.mu);
+    }
+
+    #[test]
+    fn regret_rate_monotone_in_mu() {
+        let p = params();
+        let fresh = gamma_moments(&hist(&[(-1, 100)]), p.workers, p.staleness);
+        let stale = gamma_moments(&hist(&[(-4, 100)]), p.workers, p.staleness);
+        assert!(expected_regret_rate(&p, &stale) > expected_regret_rate(&p, &fresh));
+    }
+
+    #[test]
+    fn regret_rate_shrinks_with_horizon() {
+        let g = gamma_moments(&hist(&[(-2, 100)]), 8, 3);
+        let short = expected_regret_rate(&BoundParams { horizon: 100, ..params() }, &g);
+        let long = expected_regret_rate(&BoundParams { horizon: 100_000, ..params() }, &g);
+        assert!(long < short);
+    }
+
+    #[test]
+    fn tail_probability_behaves() {
+        let p = params();
+        let g = gamma_moments(&hist(&[(-1, 50), (-3, 50)]), p.workers, p.staleness);
+        let p_small = tail_probability(&p, &g, 0.1);
+        let p_large = tail_probability(&p, &g, 1.0);
+        assert!((0.0..=1.0).contains(&p_small));
+        assert!(p_large <= p_small, "tail must decay in tau");
+        // Lower-variance profile -> smaller tail at fixed tau.
+        let tight = gamma_moments(&hist(&[(-2, 100)]), p.workers, p.staleness);
+        // Same mu as the mixed profile above (both average one stale clock).
+        assert!((tight.mu - g.mu).abs() < 1e-9);
+        assert!(tail_probability(&p, &tight, 0.1) <= p_small);
+    }
+
+    #[test]
+    fn optimal_eta_larger_when_fresh() {
+        let p = params();
+        let fresh = gamma_moments(&hist(&[(-1, 100)]), p.workers, p.staleness);
+        let stale = gamma_moments(&hist(&[(-4, 100)]), p.workers, p.staleness);
+        assert!(optimal_eta(&p, &fresh) > optimal_eta(&p, &stale));
+    }
+
+    #[test]
+    fn compare_report_formats() {
+        let p = params();
+        let a = hist(&[(-1, 90), (-2, 10)]);
+        let b = hist(&[(-1, 10), (-4, 90)]);
+        let rep = compare_report(&p, "essp", &a, "ssp", &b);
+        assert!(rep.contains("essp"));
+        assert!(rep.contains("ssp"));
+        assert_eq!(rep.lines().count(), 3);
+    }
+}

@@ -1,0 +1,22 @@
+//! Core identifier types shared across the parameter server.
+
+/// Table identifier (an application owns one or more tables).
+pub type TableId = u32;
+/// Row identifier within a table.
+pub type RowId = u64;
+/// (table, row) — the unit of GET/INC and of server-side storage.
+pub type Key = (TableId, RowId);
+/// Worker (computation thread) identifier, dense in `0..P`.
+pub type WorkerId = usize;
+/// Logical clock. Workers start executing clock 0; `committed = -1` means
+/// nothing committed yet. Table clock = min over workers' committed clocks.
+pub type Clock = i64;
+
+/// Clock value meaning "nothing committed yet".
+pub const NEVER: Clock = -1;
+
+/// Estimated wire size of a row payload, for the bandwidth model.
+#[inline]
+pub fn row_wire_bytes(len: usize) -> usize {
+    len * 4 + 24 // f32 payload + key/clock framing
+}

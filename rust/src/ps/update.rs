@@ -1,0 +1,169 @@
+//! Client-side update coalescing.
+//!
+//! Updates are additive (x += u), hence commutative and associative; the
+//! paper's client library exploits this by summing all INCs to the same row
+//! within a clock and shipping one delta per touched row per clock. This is
+//! the main message-count reduction in the system (benchmarked in
+//! `benches/ps_throughput.rs`).
+
+use std::collections::HashMap;
+
+use super::types::{row_wire_bytes, Key};
+
+/// Coalesced pending updates for one clock tick.
+#[derive(Debug, Default)]
+pub struct UpdateMap {
+    rows: HashMap<Key, Vec<f32>>,
+    /// Number of raw INC calls folded in (for coalescing-ratio metrics).
+    raw_incs: u64,
+}
+
+impl UpdateMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one INC into the pending delta for `key`.
+    pub fn inc(&mut self, key: Key, delta: &[f32]) {
+        self.raw_incs += 1;
+        match self.rows.get_mut(&key) {
+            Some(acc) => {
+                debug_assert_eq!(acc.len(), delta.len(), "row length mismatch on {key:?}");
+                for (a, d) in acc.iter_mut().zip(delta) {
+                    *a += d;
+                }
+            }
+            None => {
+                self.rows.insert(key, delta.to_vec());
+            }
+        }
+    }
+
+    /// Fold a sparse INC (index/value pairs) into the pending delta.
+    /// The row must already exist or `row_len` is used to create it.
+    pub fn inc_sparse(&mut self, key: Key, row_len: usize, pairs: &[(usize, f32)]) {
+        self.raw_incs += 1;
+        let acc = self.rows.entry(key).or_insert_with(|| vec![0.0; row_len]);
+        for &(i, v) in pairs {
+            acc[i] += v;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn raw_incs(&self) -> u64 {
+        self.raw_incs
+    }
+
+    /// Peek at the pending delta for a row (read-my-writes support).
+    pub fn pending(&self, key: &Key) -> Option<&[f32]> {
+        self.rows.get(key).map(|v| v.as_slice())
+    }
+
+    /// Keys with pending deltas (arbitrary order).
+    pub fn keys(&self) -> Vec<Key> {
+        self.rows.keys().copied().collect()
+    }
+
+    /// Max |delta| over all pending rows — the VAP in-transit magnitude
+    /// contribution of this batch (∞-norm of the aggregated update).
+    pub fn inf_norm(&self) -> f32 {
+        self.rows
+            .values()
+            .flat_map(|v| v.iter())
+            .fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Drain into per-destination batches, keyed by `route(key)`.
+    /// Returns (destination -> rows) and resets the map.
+    pub fn drain_routed<F: Fn(&Key) -> usize>(
+        &mut self,
+        n_dests: usize,
+        route: F,
+    ) -> Vec<Vec<(Key, Vec<f32>)>> {
+        let mut out: Vec<Vec<(Key, Vec<f32>)>> = (0..n_dests).map(|_| Vec::new()).collect();
+        for (key, delta) in self.rows.drain() {
+            out[route(&key)].push((key, delta));
+        }
+        self.raw_incs = 0;
+        out
+    }
+
+    /// Wire size estimate of the pending batch.
+    pub fn wire_bytes(&self) -> usize {
+        self.rows.values().map(|v| row_wire_bytes(v.len())).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const K: Key = (0, 7);
+
+    #[test]
+    fn coalesces_additively() {
+        let mut m = UpdateMap::new();
+        m.inc(K, &[1.0, 2.0]);
+        m.inc(K, &[0.5, -1.0]);
+        assert_eq!(m.pending(&K).unwrap(), &[1.5, 1.0]);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.raw_incs(), 2);
+    }
+
+    #[test]
+    fn sparse_and_dense_mix() {
+        let mut m = UpdateMap::new();
+        m.inc_sparse(K, 4, &[(0, 1.0), (3, 2.0)]);
+        m.inc(K, &[1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(m.pending(&K).unwrap(), &[2.0, 1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn inf_norm_over_all_rows() {
+        let mut m = UpdateMap::new();
+        m.inc((0, 1), &[0.5, -3.0]);
+        m.inc((0, 2), &[1.0]);
+        assert_eq!(m.inf_norm(), 3.0);
+        assert_eq!(UpdateMap::new().inf_norm(), 0.0);
+    }
+
+    #[test]
+    fn drain_routes_and_resets() {
+        let mut m = UpdateMap::new();
+        m.inc((0, 0), &[1.0]);
+        m.inc((0, 1), &[2.0]);
+        m.inc((0, 2), &[3.0]);
+        let routed = m.drain_routed(2, |k| (k.1 % 2) as usize);
+        assert_eq!(routed[0].len(), 2); // rows 0, 2
+        assert_eq!(routed[1].len(), 1); // row 1
+        assert!(m.is_empty());
+        assert_eq!(m.raw_incs(), 0);
+    }
+
+    #[test]
+    fn coalescing_is_lossless() {
+        // Sum of drained batches equals the sum of raw updates.
+        let mut m = UpdateMap::new();
+        let mut expect = vec![0.0f32; 3];
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..100 {
+            let d: Vec<f32> = (0..3).map(|_| rng.normal_f32()).collect();
+            for (e, x) in expect.iter_mut().zip(&d) {
+                *e += x;
+            }
+            m.inc(K, &d);
+        }
+        let routed = m.drain_routed(1, |_| 0);
+        let got = &routed[0][0].1;
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-4);
+        }
+    }
+}

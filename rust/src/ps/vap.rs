@@ -1,0 +1,294 @@
+//! VAP enforcement: the global in-transit update-magnitude tracker.
+//!
+//! The VAP condition (paper, "VAP"): whenever any worker computes on the
+//! model, every worker p's aggregated in-transit updates must satisfy
+//! ||u_p||_inf <= v_t, with v_t = v0 / sqrt(t) decaying in the global
+//! update count t. "In transit" = produced but not yet seen by *all*
+//! workers that read the touched rows.
+//!
+//! Enforcing this needs *eager value propagation with per-update
+//! acknowledgment* — visibility cannot be gated on clock advances (a
+//! blocked reader would deadlock waiting for commits it is itself
+//! holding up). So in VAP mode the shards push touched rows to registered
+//! readers immediately on every update application, each wave tagged with
+//! a global sequence number; a batch retires once every addressed reader
+//! acked its waves. The paper's point — that this amounts to strong-
+//! consistency-grade synchronization — shows up directly as the per-update
+//! round trips and the reader stall time this tracker measures (the
+//! VAPSIM experiment). The tracker itself is a process-global object that
+//! only a simulated cluster can have.
+//!
+//! We track the ∞-norm of each flushed batch and sum per worker — an upper
+//! bound on the ∞-norm of the aggregated in-transit update (triangle
+//! inequality), i.e. a *conservative* enforcement of the condition.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::types::{Clock, WorkerId};
+
+/// One flushed-but-not-globally-seen batch.
+#[derive(Debug)]
+struct Transit {
+    inf_norm: f32,
+    /// Shard-parts of the batch whose waves are not yet fully acked.
+    parts_left: u32,
+}
+
+#[derive(Debug)]
+struct Wave {
+    origin: (WorkerId, Clock),
+    awaiting: HashSet<WorkerId>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// Per worker: clock -> in-transit batch state.
+    in_transit: Vec<HashMap<Clock, Transit>>,
+    /// Outstanding eager-push waves by sequence number.
+    waves: HashMap<u64, Wave>,
+    /// Workers that finished their run (treated as seeing everything).
+    detached: HashSet<WorkerId>,
+}
+
+/// Global VAP state shared by all clients and shards (simulation-only).
+#[derive(Debug)]
+pub struct VapTracker {
+    v0: f32,
+    inner: Mutex<Inner>,
+    /// Global update-count t for the v_t = v0/sqrt(t) schedule.
+    global_t: AtomicU64,
+    next_seq: AtomicU64,
+    /// Total reader stall time, ns (the cost of the VAP condition).
+    stall_ns: AtomicU64,
+    /// Number of reads that had to stall at least once.
+    stalled_reads: AtomicU64,
+}
+
+impl VapTracker {
+    pub fn new(v0: f32, workers: usize) -> Self {
+        Self {
+            v0,
+            inner: Mutex::new(Inner {
+                in_transit: (0..workers).map(|_| HashMap::new()).collect(),
+                waves: HashMap::new(),
+                detached: HashSet::new(),
+            }),
+            global_t: AtomicU64::new(0),
+            next_seq: AtomicU64::new(0),
+            stall_ns: AtomicU64::new(0),
+            stalled_reads: AtomicU64::new(0),
+        }
+    }
+
+    /// Current value bound v_t = v0 / sqrt(max(t, 1)).
+    pub fn v_t(&self) -> f32 {
+        let t = self.global_t.load(Ordering::Relaxed).max(1);
+        self.v0 / (t as f32).sqrt()
+    }
+
+    /// Register a flushed batch (client, at CLOCK time, *before* sending
+    /// the Update messages). `parts` = number of shards receiving a
+    /// non-empty part of this batch.
+    pub fn add_batch(&self, worker: WorkerId, clock: Clock, inf_norm: f32, parts: u32) {
+        if inf_norm > 0.0 && parts > 0 {
+            let mut g = self.inner.lock().unwrap();
+            g.in_transit[worker].insert(
+                clock,
+                Transit {
+                    inf_norm,
+                    parts_left: parts,
+                },
+            );
+        }
+        self.global_t.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Shard applied one part of batch `origin` and pushed its rows to
+    /// `awaiting`. Returns the wave's sequence number. An empty (or fully
+    /// detached) awaiting set resolves the part immediately.
+    pub fn assign_wave(
+        &self,
+        origin: (WorkerId, Clock),
+        awaiting: HashSet<WorkerId>,
+    ) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        let awaiting: HashSet<WorkerId> = awaiting
+            .into_iter()
+            .filter(|w| !g.detached.contains(w))
+            .collect();
+        if awaiting.is_empty() {
+            Self::part_seen(&mut g, origin);
+        } else {
+            g.waves.insert(seq, Wave { origin, awaiting });
+        }
+        seq
+    }
+
+    /// A reader acked wave `seq`.
+    pub fn on_wave_ack(&self, worker: WorkerId, seq: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let resolved = match g.waves.get_mut(&seq) {
+            Some(wave) => {
+                wave.awaiting.remove(&worker);
+                wave.awaiting.is_empty()
+            }
+            None => false,
+        };
+        if resolved {
+            let origin = g.waves.remove(&seq).unwrap().origin;
+            Self::part_seen(&mut g, origin);
+        }
+    }
+
+    fn part_seen(g: &mut Inner, origin: (WorkerId, Clock)) {
+        if let Some(t) = g.in_transit[origin.0].get_mut(&origin.1) {
+            t.parts_left = t.parts_left.saturating_sub(1);
+            if t.parts_left == 0 {
+                g.in_transit[origin.0].remove(&origin.1);
+            }
+        }
+    }
+
+    /// A worker finished its run: it will never ack again, and its own
+    /// in-transit updates are final. Treat it as having seen everything —
+    /// otherwise the remaining workers deadlock waiting for its acks.
+    pub fn detach(&self, worker: WorkerId) {
+        let mut g = self.inner.lock().unwrap();
+        g.detached.insert(worker);
+        g.in_transit[worker].clear();
+        let resolved: Vec<u64> = g
+            .waves
+            .iter_mut()
+            .filter_map(|(&seq, wave)| {
+                wave.awaiting.remove(&worker);
+                wave.awaiting.is_empty().then_some(seq)
+            })
+            .collect();
+        for seq in resolved {
+            let origin = g.waves.remove(&seq).unwrap().origin;
+            Self::part_seen(&mut g, origin);
+        }
+    }
+
+    /// Is the VAP condition currently satisfied (all workers' aggregated
+    /// in-transit norms within v_t)?
+    pub fn is_bounded(&self) -> bool {
+        let v_t = self.v_t();
+        let g = self.inner.lock().unwrap();
+        g.in_transit
+            .iter()
+            .all(|m| m.values().map(|t| t.inf_norm).sum::<f32>() <= v_t)
+    }
+
+    /// Max per-worker aggregated in-transit norm (for metrics/tests).
+    pub fn max_in_transit(&self) -> f32 {
+        let g = self.inner.lock().unwrap();
+        g.in_transit
+            .iter()
+            .map(|m| m.values().map(|t| t.inf_norm).sum::<f32>())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn record_stall(&self, ns: u64, first: bool) {
+        self.stall_ns.fetch_add(ns, Ordering::Relaxed);
+        if first {
+            self.stalled_reads.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stall_ns(&self) -> u64 {
+        self.stall_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn stalled_reads(&self) -> u64 {
+        self.stalled_reads.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(ws: &[WorkerId]) -> HashSet<WorkerId> {
+        ws.iter().copied().collect()
+    }
+
+    #[test]
+    fn bound_decays_with_t() {
+        let v = VapTracker::new(1.0, 2);
+        assert!((v.v_t() - 1.0).abs() < 1e-6);
+        for c in 0..4 {
+            v.add_batch(0, c, 0.0, 0);
+        }
+        assert!((v.v_t() - 0.5).abs() < 1e-6); // 1/sqrt(4)
+    }
+
+    #[test]
+    fn batch_retires_when_all_readers_ack() {
+        let v = VapTracker::new(0.1, 3);
+        v.add_batch(0, 0, 5.0, 1);
+        assert!(!v.is_bounded());
+        let seq = v.assign_wave((0, 0), set(&[1, 2]));
+        v.on_wave_ack(1, seq);
+        assert!(!v.is_bounded(), "worker 2 has not seen it");
+        v.on_wave_ack(2, seq);
+        assert!(v.is_bounded());
+        assert_eq!(v.max_in_transit(), 0.0);
+    }
+
+    #[test]
+    fn multi_part_batch_needs_all_parts() {
+        let v = VapTracker::new(0.1, 2);
+        v.add_batch(0, 0, 3.0, 2); // spans two shards
+        let s1 = v.assign_wave((0, 0), set(&[1]));
+        let s2 = v.assign_wave((0, 0), set(&[1]));
+        v.on_wave_ack(1, s1);
+        assert!(!v.is_bounded(), "second part still in transit");
+        v.on_wave_ack(1, s2);
+        assert!(v.is_bounded());
+    }
+
+    #[test]
+    fn empty_awaiting_resolves_immediately() {
+        let v = VapTracker::new(0.1, 2);
+        v.add_batch(0, 0, 9.0, 1);
+        let _ = v.assign_wave((0, 0), set(&[]));
+        assert!(v.is_bounded(), "no reader to wait for");
+    }
+
+    #[test]
+    fn aggregates_norms_per_worker() {
+        let v = VapTracker::new(10.0, 2);
+        v.add_batch(0, 0, 4.0, 1);
+        v.add_batch(0, 1, 4.0, 1);
+        assert_eq!(v.max_in_transit(), 8.0);
+        // After two batches t=2: v_t = 10/sqrt(2) ~ 7.07 < 8.
+        assert!(!v.is_bounded());
+    }
+
+    #[test]
+    fn detach_resolves_pending_waves() {
+        let v = VapTracker::new(0.1, 3);
+        v.add_batch(0, 0, 5.0, 1);
+        let _seq = v.assign_wave((0, 0), set(&[1, 2]));
+        v.detach(1);
+        assert!(!v.is_bounded(), "worker 2 still owes an ack");
+        v.detach(2);
+        assert!(v.is_bounded());
+        // Future waves never wait on detached workers.
+        v.add_batch(0, 1, 5.0, 1);
+        let _ = v.assign_wave((0, 1), set(&[1, 2]));
+        assert!(v.is_bounded());
+    }
+
+    #[test]
+    fn zero_norm_batches_only_advance_t() {
+        let v = VapTracker::new(1.0, 1);
+        v.add_batch(0, 0, 0.0, 1);
+        assert!(v.is_bounded());
+        assert_eq!(v.max_in_transit(), 0.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! Min-clock aggregation: tracks each worker's committed clock and derives
+//! the table clock (min over workers), which gates SSP reads and drives
+//! ESSP pushes.
+
+use super::types::{Clock, WorkerId, NEVER};
+
+/// Tracks committed clocks for `P` workers; the table clock is their min.
+#[derive(Debug, Clone)]
+pub struct MinClock {
+    committed: Vec<Clock>,
+}
+
+impl MinClock {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            committed: vec![NEVER; workers],
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.committed.len()
+    }
+
+    pub fn committed(&self, w: WorkerId) -> Clock {
+        self.committed[w]
+    }
+
+    /// Record that worker `w` committed clock `c`. Returns `Some(new_min)`
+    /// if the table clock advanced. Panics on clock regression — clocks are
+    /// per-worker monotone by construction, so regression is a bug.
+    pub fn commit(&mut self, w: WorkerId, c: Clock) -> Option<Clock> {
+        assert!(
+            c > self.committed[w],
+            "worker {w} clock regression: {} -> {c}",
+            self.committed[w]
+        );
+        let old_min = self.min();
+        self.committed[w] = c;
+        let new_min = self.min();
+        (new_min > old_min).then_some(new_min)
+    }
+
+    /// The table clock: every update with clock <= min is fully applied.
+    pub fn min(&self) -> Clock {
+        self.committed.iter().copied().min().unwrap_or(NEVER)
+    }
+
+    pub fn max(&self) -> Clock {
+        self.committed.iter().copied().max().unwrap_or(NEVER)
+    }
+
+    /// Clock spread (max - min): bounded by s+1 under SSP if the clients
+    /// enforce the read condition (property-tested).
+    pub fn spread(&self) -> Clock {
+        self.max() - self.min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_never() {
+        let m = MinClock::new(3);
+        assert_eq!(m.min(), NEVER);
+        assert_eq!(m.max(), NEVER);
+    }
+
+    #[test]
+    fn min_advances_only_when_slowest_commits() {
+        let mut m = MinClock::new(3);
+        assert_eq!(m.commit(0, 0), None);
+        assert_eq!(m.commit(1, 0), None);
+        assert_eq!(m.commit(2, 0), Some(0)); // slowest committed -> advance
+        assert_eq!(m.commit(0, 1), None);
+        assert_eq!(m.min(), 0);
+        assert_eq!(m.spread(), 1);
+    }
+
+    #[test]
+    fn skipping_clocks_is_allowed() {
+        // A worker may commit several clocks in one message burst.
+        let mut m = MinClock::new(2);
+        m.commit(0, 3);
+        assert_eq!(m.commit(1, 5), Some(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "regression")]
+    fn regression_panics() {
+        let mut m = MinClock::new(2);
+        m.commit(0, 2);
+        m.commit(0, 1);
+    }
+}

@@ -1,0 +1,265 @@
+//! Artifact discovery: `artifacts/meta.json` + `artifacts/*.hlo.txt`.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX graphs (which embed the L1
+//! Pallas kernels) to HLO *text* and records, per artifact, the positional
+//! input/output tensor specs plus — for LM artifacts — the parameter-row
+//! layout contract (`params`: ordered name/shape list). This module reads
+//! that metadata back so the rust side can drive the executables blind.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// One positional input/output of an artifact.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_, _>>()?,
+            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// LM parameter layout entry (PS row contract).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// LM geometry recorded at lowering time.
+#[derive(Debug, Clone)]
+pub struct LmConfigMeta {
+    pub preset: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub batch: usize,
+    pub param_count: usize,
+}
+
+/// Metadata for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub params: Option<Vec<ParamSpec>>,
+    pub lm_config: Option<LmConfigMeta>,
+    /// MF block geometry (bm, bn, k) if this is an MF artifact.
+    pub mf_block: Option<(usize, usize, usize)>,
+}
+
+/// A directory of AOT artifacts.
+#[derive(Debug)]
+pub struct ArtifactDir {
+    dir: PathBuf,
+    metas: Vec<ArtifactMeta>,
+}
+
+impl ArtifactDir {
+    /// Default location: `$ESSPTABLE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ESSPTABLE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", meta_path.display()))?;
+        let root = Json::parse(&text).context("parse meta.json")?;
+        let mut metas = Vec::new();
+        for (name, j) in root.as_obj()? {
+            let inputs = j
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = j
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let params = match j.opt("params")? {
+                Some(p) => Some(
+                    p.as_arr()?
+                        .iter()
+                        .map(|e| {
+                            Ok(ParamSpec {
+                                name: e.get("name")?.as_str()?.to_string(),
+                                shape: e
+                                    .get("shape")?
+                                    .as_arr()?
+                                    .iter()
+                                    .map(|v| v.as_usize())
+                                    .collect::<Result<_, _>>()?,
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                ),
+                None => None,
+            };
+            let lm_config = match j.opt("lm_config")? {
+                Some(c) => Some(LmConfigMeta {
+                    preset: c.get("preset")?.as_str()?.to_string(),
+                    vocab: c.get("vocab")?.as_usize()?,
+                    seq: c.get("seq")?.as_usize()?,
+                    d_model: c.get("d_model")?.as_usize()?,
+                    n_layer: c.get("n_layer")?.as_usize()?,
+                    n_head: c.get("n_head")?.as_usize()?,
+                    batch: c.get("batch")?.as_usize()?,
+                    param_count: c.get("param_count")?.as_usize()?,
+                }),
+                None => None,
+            };
+            let mf_block = match j.opt("block")? {
+                Some(b) => Some((
+                    b.get("bm")?.as_usize()?,
+                    b.get("bn")?.as_usize()?,
+                    b.get("k")?.as_usize()?,
+                )),
+                None => None,
+            };
+            metas.push(ArtifactMeta {
+                name: name.clone(),
+                inputs,
+                outputs,
+                params,
+                lm_config,
+                mf_block,
+            });
+        }
+        Ok(Self { dir, metas })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.metas.iter().map(|m| m.name.as_str()).collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.metas
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("artifact {name} not in meta.json (have: {:?})", self.names()))
+    }
+
+    /// Path of the HLO text module for an artifact.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_meta(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("meta.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_mf_meta() {
+        let dir = std::env::temp_dir().join(format!("esspt-art-{}", std::process::id()));
+        write_meta(
+            &dir,
+            r#"{"mf_block_64x64x32": {
+                "inputs": [{"name":"L","shape":[64,32],"dtype":"float32"}],
+                "outputs": [{"name":"dL","shape":[64,32],"dtype":"float32"}],
+                "block": {"bm":64,"bn":64,"k":32}
+            }}"#,
+        );
+        let art = ArtifactDir::open(&dir).unwrap();
+        let m = art.meta("mf_block_64x64x32").unwrap();
+        assert_eq!(m.inputs[0].shape, vec![64, 32]);
+        assert_eq!(m.inputs[0].dtype, DType::F32);
+        assert_eq!(m.mf_block, Some((64, 64, 32)));
+        assert!(m.params.is_none());
+        assert!(art.meta("nope").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn parses_lm_meta_params() {
+        let dir = std::env::temp_dir().join(format!("esspt-art2-{}", std::process::id()));
+        write_meta(
+            &dir,
+            r#"{"lm_step_x": {
+                "inputs": [{"name":"tokens","shape":[2,8],"dtype":"int32"}],
+                "outputs": [{"name":"loss","shape":[],"dtype":"float32"}],
+                "params": [{"name":"tok_emb","shape":[64,16]}],
+                "lm_config": {"preset":"x","vocab":64,"seq":8,"d_model":16,
+                              "n_layer":1,"n_head":2,"batch":2,"param_count":1024}
+            }}"#,
+        );
+        let art = ArtifactDir::open(&dir).unwrap();
+        let m = art.meta("lm_step_x").unwrap();
+        assert_eq!(m.inputs[0].dtype, DType::I32);
+        let params = m.params.as_ref().unwrap();
+        assert_eq!(params[0].elements(), 1024);
+        assert_eq!(m.lm_config.as_ref().unwrap().vocab, 64);
+        assert!(art.hlo_path("lm_step_x").ends_with("lm_step_x.hlo.txt"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = ArtifactDir::open("/nonexistent-essptable").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,307 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and serves execute requests from worker threads.
+//!
+//! Architecture notes (see /opt/xla-example and DESIGN.md):
+//!  * Interchange is HLO *text* — `HloModuleProto::from_text_file`
+//!    reassigns instruction ids, avoiding the 64-bit-id proto rejection.
+//!  * The modules were lowered with `return_tuple=True`, so the execution
+//!    result is always a tuple literal; we untuple into per-output vectors.
+//!  * One `RuntimeService` thread owns the PJRT client and all compiled
+//!    executables; workers talk to it through a channel (`RuntimeHandle`,
+//!    cloneable). On the 1-core testbed serialized execution costs
+//!    nothing, and it sidesteps `!Send` FFI handles. Python is never
+//!    involved at run time.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{ArtifactDir, DType};
+
+/// A tensor crossing the runtime boundary.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    /// Unwrap f32 payload.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Consume into f32 payload.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        lit.reshape(&dims)
+            .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.shape().map_err(|e| anyhow!("literal shape: {e}"))?;
+        let (dims, ty) = match shape {
+            xla::Shape::Array(a) => (
+                a.dims().iter().map(|&d| d as usize).collect::<Vec<_>>(),
+                a.primitive_type(),
+            ),
+            other => bail!("non-array output shape {other:?}"),
+        };
+        match ty {
+            xla::PrimitiveType::F32 => Ok(Tensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
+            }),
+            xla::PrimitiveType::S32 => Ok(Tensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
+            }),
+            other => bail!("unsupported output primitive type {other:?}"),
+        }
+    }
+}
+
+/// The engine proper: PJRT client + compiled executables. Not `Send`; owned
+/// by the service thread (or used single-threaded in tests/benches).
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: ArtifactDir,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new(artifacts: ArtifactDir) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            artifacts,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn artifacts(&self) -> &ArtifactDir {
+        &self.artifacts
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts.hlo_path(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. Inputs are validated against meta.json.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        let meta = self.artifacts.meta(name)?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&meta.inputs) {
+            if t.shape() != spec.shape.as_slice() || t.dtype() != spec.dtype {
+                bail!(
+                    "{name}: input {} expects {:?}{:?}, got {:?}{:?}",
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.executables.get(name).expect("loaded above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {name}: {e}"))?;
+        // Modules are lowered with return_tuple=True.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result of {name}: {e}"))?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: Sender<Result<Vec<Tensor>>>,
+    },
+    Preload {
+        name: String,
+        reply: Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the runtime service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+}
+
+impl RuntimeHandle {
+    /// Execute an artifact, blocking until the result is ready.
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Execute {
+                name: name.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+
+    /// Compile ahead of the run (so compile time is not charged to clock 0).
+    pub fn preload(&self, name: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Preload {
+                name: name.to_string(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+}
+
+/// The runtime service: spawns the engine-owning thread.
+pub struct RuntimeService {
+    tx: Sender<Request>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl RuntimeService {
+    pub fn start(artifacts: ArtifactDir) -> Result<Self> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || service_loop(artifacts, rx, ready_tx))
+            .context("spawn runtime thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during init"))??;
+        Ok(Self {
+            tx,
+            join: Mutex::new(Some(join)),
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        RuntimeHandle {
+            tx: self.tx.clone(),
+        }
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn service_loop(artifacts: ArtifactDir, rx: Receiver<Request>, ready: Sender<Result<()>>) {
+    let mut engine = match Engine::new(artifacts) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Execute {
+                name,
+                inputs,
+                reply,
+            } => {
+                let _ = reply.send(engine.execute(&name, &inputs));
+            }
+            Request::Preload { name, reply } => {
+                let _ = reply.send(engine.load(&name));
+            }
+            Request::Shutdown => break,
+        }
+    }
+}

@@ -1,0 +1,417 @@
+//! Simulated cluster network (DESIGN.md §5 substitution for the paper's
+//! 1 Gbps Ethernet testbed).
+//!
+//! All PS traffic flows through a single router thread that models, per
+//! directed (src, dst) link:
+//!
+//!   * propagation latency (+ optional uniform jitter),
+//!   * serialization time `bytes / bandwidth` with the link busy until the
+//!     message has fully "left the NIC" (messages queue behind each other),
+//!   * FIFO delivery (TCP-like; delivery times are made monotone per link).
+//!
+//! Consistency-model behavior depends on the *ordering and delay* of
+//! messages, not on physical NICs — this is exactly the phenomenon that
+//! produces staleness, so it is the part we must reproduce faithfully.
+//! With `NetConfig::instant()` the router forwards without delay, which is
+//! what the pure-throughput benches use.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::ps::msg::{ToShard, ToWorker};
+use crate::util::rng::Rng;
+
+/// A network endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodeId {
+    Worker(usize),
+    Shard(usize),
+}
+
+/// Payload variants routed by the simulated network.
+#[derive(Debug)]
+pub enum Packet {
+    ToShard(ToShard),
+    ToWorker(ToWorker),
+}
+
+impl Packet {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            Packet::ToShard(m) => m.wire_bytes(),
+            Packet::ToWorker(m) => m.wire_bytes(),
+        }
+    }
+}
+
+/// Link model parameters.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// One-way propagation latency.
+    pub latency: Duration,
+    /// Uniform jitter in [0, jitter] added per message.
+    pub jitter: Duration,
+    /// Link bandwidth in bytes/second (f64::INFINITY = no serialization
+    /// delay). The paper's clusters use 1 Gbps; scaled-down defaults live
+    /// in `config.rs`.
+    pub bandwidth: f64,
+    /// Seed for jitter.
+    pub seed: u64,
+}
+
+impl NetConfig {
+    /// Zero-delay network (throughput benches, unit tests).
+    pub fn instant() -> Self {
+        Self {
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+            bandwidth: f64::INFINITY,
+            seed: 0,
+        }
+    }
+
+    /// A LAN-ish profile scaled for the single-machine testbed: the paper's
+    /// 1 Gbps / ~0.1 ms Ethernet, with bandwidth scaled down so that
+    /// comm:comp ratios at our (much smaller) workload sizes land in the
+    /// same regime as the paper's cluster (see DESIGN.md §5).
+    pub fn lan(seed: u64) -> Self {
+        Self {
+            latency: Duration::from_micros(200),
+            jitter: Duration::from_micros(100),
+            bandwidth: 40e6, // 40 MB/s
+            seed,
+        }
+    }
+
+    pub fn is_instant(&self) -> bool {
+        self.latency.is_zero() && self.jitter.is_zero() && self.bandwidth.is_infinite()
+    }
+}
+
+struct Wire {
+    dst: NodeId,
+    src: NodeId,
+    packet: Packet,
+}
+
+/// Counters exposed for the comm/comp breakdown experiments.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+    pub delivered: AtomicU64,
+}
+
+/// Handle used by nodes to send through the simulated network.
+#[derive(Clone)]
+pub struct NetHandle {
+    intake: Sender<Wire>,
+    stats: Arc<NetStats>,
+}
+
+impl NetHandle {
+    pub fn send(&self, src: NodeId, dst: NodeId, packet: Packet) {
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes
+            .fetch_add(packet.wire_bytes() as u64, Ordering::Relaxed);
+        // Ignore send errors during shutdown (router already gone).
+        let _ = self.intake.send(Wire { src, dst, packet });
+    }
+}
+
+/// The simulated network: owns the router thread.
+pub struct SimNet {
+    handle: NetHandle,
+    router: Option<JoinHandle<()>>,
+    stats: Arc<NetStats>,
+}
+
+impl SimNet {
+    /// Build the network. `worker_inboxes[i]` / `shard_inboxes[i]` receive
+    /// packets addressed to `NodeId::Worker(i)` / `NodeId::Shard(i)`.
+    pub fn new(
+        cfg: NetConfig,
+        worker_inboxes: Vec<Sender<ToWorker>>,
+        shard_inboxes: Vec<Sender<ToShard>>,
+    ) -> Self {
+        let (tx, rx) = channel::<Wire>();
+        let stats = Arc::new(NetStats::default());
+        let router_stats = stats.clone();
+        let router = std::thread::Builder::new()
+            .name("simnet-router".into())
+            .spawn(move || {
+                crate::sim::priority::infrastructure_thread();
+                route_loop(cfg, rx, worker_inboxes, shard_inboxes, router_stats)
+            })
+            .expect("spawn simnet router");
+        SimNet {
+            handle: NetHandle {
+                intake: tx,
+                stats: stats.clone(),
+            },
+            router: Some(router),
+            stats,
+        }
+    }
+
+    pub fn handle(&self) -> NetHandle {
+        self.handle.clone()
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.stats.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.stats.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Block until every message sent so far has been delivered to its
+    /// destination inbox. Used by the coordinator before issuing the
+    /// direct-path Shutdown so no in-flight update is lost.
+    pub fn flush(&self) {
+        loop {
+            let sent = self.stats.messages.load(Ordering::Acquire);
+            let delivered = self.stats.delivered.load(Ordering::Acquire);
+            if delivered >= sent {
+                return;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Stop the router after delivering everything still queued.
+    pub fn shutdown(mut self) {
+        drop(self.handle.intake);
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn deliver(
+    wire: Wire,
+    workers: &[Sender<ToWorker>],
+    shards: &[Sender<ToShard>],
+    stats: &NetStats,
+) {
+    // Send errors mean the destination already exited (shutdown); drop.
+    match (wire.dst, wire.packet) {
+        (NodeId::Worker(i), Packet::ToWorker(m)) => {
+            let _ = workers[i].send(m);
+        }
+        (NodeId::Shard(i), Packet::ToShard(m)) => {
+            let _ = shards[i].send(m);
+        }
+        (dst, p) => panic!("packet {p:?} addressed to incompatible node {dst:?}"),
+    }
+    stats.delivered.fetch_add(1, Ordering::Release);
+}
+
+struct Scheduled {
+    at: Instant,
+    seq: u64,
+    wire: Wire,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+fn route_loop(
+    cfg: NetConfig,
+    rx: Receiver<Wire>,
+    workers: Vec<Sender<ToWorker>>,
+    shards: Vec<Sender<ToShard>>,
+    stats: Arc<NetStats>,
+) {
+    if cfg.is_instant() {
+        // Fast path: synchronous forwarding.
+        while let Ok(wire) = rx.recv() {
+            deliver(wire, &workers, &shards, &stats);
+        }
+        return;
+    }
+
+    let mut rng = Rng::with_stream(cfg.seed, 0x6e65747e); // "net~"
+    let mut heap: BinaryHeap<Reverse<Scheduled>> = BinaryHeap::new();
+    // Per-link: when the link is next free (bandwidth serialization + FIFO).
+    let mut link_free: HashMap<(NodeId, NodeId), Instant> = HashMap::new();
+    // Per-link: latest scheduled delivery, to keep delivery FIFO (TCP-like)
+    // even though jitter varies per message. The PS protocol depends on
+    // Update-before-ClockTick ordering within a (worker, shard) link.
+    let mut link_last: HashMap<(NodeId, NodeId), Instant> = HashMap::new();
+    let mut seq = 0u64;
+    let mut closed = false;
+
+    loop {
+        // Dispatch everything due.
+        let now = Instant::now();
+        while heap.peek().is_some_and(|Reverse(s)| s.at <= now) {
+            let Reverse(s) = heap.pop().unwrap();
+            deliver(s.wire, &workers, &shards, &stats);
+        }
+        if closed && heap.is_empty() {
+            return;
+        }
+        // Wait for the next deadline or new intake.
+        let timeout = heap
+            .peek()
+            .map(|Reverse(s)| s.at.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(wire) => {
+                let now = Instant::now();
+                let bytes = wire.packet.wire_bytes() as f64;
+                let ser = if cfg.bandwidth.is_finite() {
+                    Duration::from_secs_f64(bytes / cfg.bandwidth)
+                } else {
+                    Duration::ZERO
+                };
+                let jit = cfg.jitter.mul_f64(rng.f64());
+                let link = (wire.src, wire.dst);
+                let free_at = link_free.get(&link).copied().unwrap_or(now).max(now) + ser;
+                link_free.insert(link, free_at);
+                let mut at = free_at + cfg.latency + jit;
+                // FIFO per link: never deliver before an earlier message.
+                if let Some(&last) = link_last.get(&link) {
+                    at = at.max(last + Duration::from_nanos(1));
+                }
+                link_last.insert(link, at);
+                seq += 1;
+                heap.push(Reverse(Scheduled { at, seq, wire }));
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => closed = true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::msg::ToShard;
+
+    fn tick(worker: usize, clock: i64) -> Packet {
+        Packet::ToShard(ToShard::ClockTick { worker, clock })
+    }
+
+    #[test]
+    fn instant_delivers_immediately() {
+        let (stx, srx) = channel();
+        let net = SimNet::new(NetConfig::instant(), vec![], vec![stx]);
+        net.handle()
+            .send(NodeId::Worker(0), NodeId::Shard(0), tick(0, 1));
+        let msg = srx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert!(matches!(msg, ToShard::ClockTick { clock: 1, .. }));
+        assert_eq!(net.messages(), 1);
+        net.shutdown();
+    }
+
+    #[test]
+    fn delayed_delivery_respects_latency() {
+        let (stx, srx) = channel();
+        let cfg = NetConfig {
+            latency: Duration::from_millis(20),
+            jitter: Duration::ZERO,
+            bandwidth: f64::INFINITY,
+            seed: 1,
+        };
+        let net = SimNet::new(cfg, vec![], vec![stx]);
+        let t0 = Instant::now();
+        net.handle()
+            .send(NodeId::Worker(0), NodeId::Shard(0), tick(0, 1));
+        srx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(18), "{:?}", t0.elapsed());
+        net.shutdown();
+    }
+
+    #[test]
+    fn fifo_per_link() {
+        let (stx, srx) = channel();
+        let cfg = NetConfig {
+            latency: Duration::from_millis(5),
+            jitter: Duration::from_millis(5), // jitter could reorder w/o FIFO
+            bandwidth: f64::INFINITY,
+            seed: 2,
+        };
+        let net = SimNet::new(cfg, vec![], vec![stx]);
+        for c in 0..20 {
+            net.handle()
+                .send(NodeId::Worker(0), NodeId::Shard(0), tick(0, c));
+        }
+        let mut got = Vec::new();
+        for _ in 0..20 {
+            match srx.recv_timeout(Duration::from_secs(2)).unwrap() {
+                ToShard::ClockTick { clock, .. } => got.push(clock),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Delivery must be FIFO per link even with jitter (the PS protocol
+        // depends on Update-before-ClockTick ordering).
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+        net.shutdown();
+    }
+
+    #[test]
+    fn bandwidth_serializes_large_messages() {
+        let (stx, srx) = channel();
+        let cfg = NetConfig {
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+            bandwidth: 1e6, // 1 MB/s
+            seed: 3,
+        };
+        let net = SimNet::new(cfg, vec![], vec![stx]);
+        // ~100 KB update => ~100 ms serialization.
+        let big = ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 0), vec![0.0f32; 25_000])],
+        };
+        let t0 = Instant::now();
+        net.handle()
+            .send(NodeId::Worker(0), NodeId::Shard(0), Packet::ToShard(big));
+        srx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(80), "{:?}", t0.elapsed());
+        net.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queue() {
+        let (stx, srx) = channel();
+        let cfg = NetConfig {
+            latency: Duration::from_millis(30),
+            jitter: Duration::ZERO,
+            bandwidth: f64::INFINITY,
+            seed: 4,
+        };
+        let net = SimNet::new(cfg, vec![], vec![stx]);
+        for c in 0..5 {
+            net.handle()
+                .send(NodeId::Worker(0), NodeId::Shard(0), tick(0, c));
+        }
+        net.shutdown(); // must block until the 5 ticks are delivered
+        let got = srx.try_iter().count();
+        assert_eq!(got, 5);
+    }
+}

@@ -1,0 +1,197 @@
+//! Straggler injection: per-(worker, clock) compute-slowdown factors.
+//!
+//! The paper's staleness phenomena (Fig. 1) arise from workers progressing
+//! at different speeds; on a real cluster this comes from multi-tenancy,
+//! GC pauses and OS jitter. The harness multiplies each worker's per-clock
+//! compute time by `factor(worker, clock)`; a factor of 1.0 = no slowdown.
+//! Factors are derived deterministically from (seed, worker, clock) so runs
+//! are reproducible and SSP-vs-ESSP comparisons see identical straggling.
+
+use crate::util::rng::{splitmix64, Rng};
+
+/// Straggler model for a run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StragglerModel {
+    /// Everyone runs at full speed.
+    None,
+    /// A fixed set of workers is permanently slow by `factor`.
+    FixedSlow { workers: Vec<usize>, factor: f64 },
+    /// Every (worker, clock) draws a factor uniformly from [1, max_factor].
+    RandomUniform { max_factor: f64 },
+    /// Heavy-tailed: factor 1 with prob 1-p, else Pareto-ish spike up to
+    /// `max_factor` (models rare long pauses).
+    Spikes { p: f64, max_factor: f64 },
+    /// Deterministic rotation: worker w is slowed by `factor` on clocks
+    /// where `clock % period == w % period` (models periodic interference
+    /// sweeping across the cluster).
+    Rotating { period: u64, factor: f64 },
+}
+
+impl StragglerModel {
+    /// Slowdown multiplier for `worker` at `clock` (>= 1.0).
+    pub fn factor(&self, seed: u64, worker: usize, clock: u64) -> f64 {
+        match self {
+            StragglerModel::None => 1.0,
+            StragglerModel::FixedSlow { workers, factor } => {
+                if workers.contains(&worker) {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+            StragglerModel::RandomUniform { max_factor } => {
+                let mut r = Self::rng(seed, worker, clock);
+                1.0 + (max_factor - 1.0) * r.f64()
+            }
+            StragglerModel::Spikes { p, max_factor } => {
+                let mut r = Self::rng(seed, worker, clock);
+                if r.f64() < *p {
+                    // Inverse-CDF of a truncated Pareto(alpha=1) on
+                    // [1, max_factor]: heavy tail, bounded.
+                    let u = r.f64().max(1e-12);
+                    (1.0 / (1.0 - u * (1.0 - 1.0 / max_factor))).min(*max_factor)
+                } else {
+                    1.0
+                }
+            }
+            StragglerModel::Rotating { period, factor } => {
+                if *period > 0 && clock % period == (worker as u64) % period {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    fn rng(seed: u64, worker: usize, clock: u64) -> Rng {
+        let mut s = seed ^ (worker as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+        let a = splitmix64(&mut s);
+        Rng::with_stream(a ^ clock.wrapping_mul(0xE703_7ED1_A0B4_28DB), worker as u64)
+    }
+
+    /// Parse "none" | "fixed:0,2x4" | "uniform:3" | "spikes:0.05,10" |
+    /// "rotating:8x5".
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "none" => Ok(StragglerModel::None),
+            "fixed" => {
+                let a = arg.ok_or("fixed needs workers and factor, e.g. fixed:0,2x4")?;
+                let (list, f) = a.split_once('x').ok_or("fixed:W,W,..xF")?;
+                let workers = list
+                    .split(',')
+                    .map(|w| w.parse().map_err(|e| format!("bad worker: {e}")))
+                    .collect::<Result<Vec<usize>, _>>()?;
+                Ok(StragglerModel::FixedSlow {
+                    workers,
+                    factor: f.parse().map_err(|e| format!("bad factor: {e}"))?,
+                })
+            }
+            "uniform" => Ok(StragglerModel::RandomUniform {
+                max_factor: arg
+                    .ok_or("uniform needs a max factor")?
+                    .parse()
+                    .map_err(|e| format!("bad factor: {e}"))?,
+            }),
+            "spikes" => {
+                let a = arg.ok_or("spikes needs p,maxfactor")?;
+                let (p, f) = a.split_once(',').ok_or("spikes:P,F")?;
+                Ok(StragglerModel::Spikes {
+                    p: p.parse().map_err(|e| format!("bad p: {e}"))?,
+                    max_factor: f.parse().map_err(|e| format!("bad factor: {e}"))?,
+                })
+            }
+            "rotating" => {
+                let a = arg.ok_or("rotating needs periodxfactor")?;
+                let (p, f) = a.split_once('x').ok_or("rotating:PxF")?;
+                Ok(StragglerModel::Rotating {
+                    period: p.parse().map_err(|e| format!("bad period: {e}"))?,
+                    factor: f.parse().map_err(|e| format!("bad factor: {e}"))?,
+                })
+            }
+            _ => Err(format!("unknown straggler model {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_one() {
+        assert_eq!(StragglerModel::None.factor(0, 3, 17), 1.0);
+    }
+
+    #[test]
+    fn fixed_slows_only_listed() {
+        let m = StragglerModel::FixedSlow {
+            workers: vec![1],
+            factor: 4.0,
+        };
+        assert_eq!(m.factor(0, 1, 0), 4.0);
+        assert_eq!(m.factor(0, 0, 0), 1.0);
+    }
+
+    #[test]
+    fn uniform_in_range_and_deterministic() {
+        let m = StragglerModel::RandomUniform { max_factor: 3.0 };
+        for w in 0..4 {
+            for c in 0..50 {
+                let f = m.factor(7, w, c);
+                assert!((1.0..=3.0).contains(&f));
+                assert_eq!(f, m.factor(7, w, c), "must be reproducible");
+            }
+        }
+    }
+
+    #[test]
+    fn spikes_mostly_one() {
+        let m = StragglerModel::Spikes {
+            p: 0.1,
+            max_factor: 10.0,
+        };
+        let mut ones = 0;
+        let n = 2000;
+        for c in 0..n {
+            let f = m.factor(3, 0, c);
+            assert!((1.0..=10.0).contains(&f));
+            if f == 1.0 {
+                ones += 1;
+            }
+        }
+        let frac = ones as f64 / n as f64;
+        assert!((0.85..=0.95).contains(&frac), "spike rate off: {frac}");
+    }
+
+    #[test]
+    fn rotating_pattern() {
+        let m = StragglerModel::Rotating {
+            period: 4,
+            factor: 5.0,
+        };
+        assert_eq!(m.factor(0, 1, 5), 5.0); // 5 % 4 == 1
+        assert_eq!(m.factor(0, 1, 6), 1.0);
+    }
+
+    #[test]
+    fn parse_all() {
+        assert_eq!(StragglerModel::parse("none").unwrap(), StragglerModel::None);
+        assert_eq!(
+            StragglerModel::parse("fixed:0,2x4").unwrap(),
+            StragglerModel::FixedSlow {
+                workers: vec![0, 2],
+                factor: 4.0
+            }
+        );
+        assert_eq!(
+            StragglerModel::parse("uniform:3").unwrap(),
+            StragglerModel::RandomUniform { max_factor: 3.0 }
+        );
+        assert!(StragglerModel::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Measures wall time over warmup + timed iterations and reports
+//! mean / p50 / p95 / throughput. Used by `rust/benches/*` (harness=false
+//! targets), which print the rows the paper's tables correspond to.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark measurement.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    /// Items-per-second given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+            self.name, self.mean, self.p50, self.p95, self.iters
+        );
+    }
+
+    pub fn print_throughput(&self, items: f64, unit: &str) {
+        println!(
+            "{:<44} {:>10.3?} mean  {:>12.0} {unit}/s  ({} iters)",
+            self.name,
+            self.mean,
+            self.throughput(items),
+            self.iters
+        );
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations, timing the latter.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(stats::mean(&times)),
+        p50: Duration::from_secs_f64(stats::percentile(&times, 50.0)),
+        p95: Duration::from_secs_f64(stats::percentile(&times, 95.0)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.p95 >= r.p50);
+    }
+}

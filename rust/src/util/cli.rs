@@ -1,0 +1,146 @@
+//! Tiny CLI argument helper (no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value` and `--key=value`; typed accessors with
+//! defaults; collects positional arguments. Unknown-flag detection is the
+//! caller's job via `unused()`.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+    consumed: std::cell::RefCell<std::collections::HashSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.insert(rest.to_string(), v);
+                } else {
+                    flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self {
+            flags,
+            positional,
+            consumed: Default::default(),
+        }
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.raw(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.raw(key).map(|s| s.to_string())
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.raw(key)
+            .map(|v| v.parse().unwrap_or_else(|e| panic!("--{key}: {e}")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.u64(key, default as u64) as usize
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.raw(key)
+            .map(|v| v.parse().unwrap_or_else(|e| panic!("--{key}: {e}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.f64(key, default as f64) as f32
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.raw(key)
+            .map(|v| matches!(v, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Flags present on the command line but never read by the program —
+    /// almost always a typo; callers surface these as errors.
+    pub fn unused(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        self.flags
+            .keys()
+            .filter(|k| !consumed.contains(*k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = args("run --workers 8 --staleness=3 --verbose");
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.usize("workers", 1), 8);
+        assert_eq!(a.u64("staleness", 0), 3);
+        assert!(a.bool("verbose", false));
+        assert_eq!(a.usize("shards", 2), 2);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = args("--offset -3");
+        assert_eq!(a.f64("offset", 0.0), -3.0);
+    }
+
+    #[test]
+    fn unused_detection() {
+        let a = args("--used 1 --typo 2");
+        let _ = a.u64("used", 0);
+        assert_eq!(a.unused(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn positional_collection() {
+        let a = args("fig2-mf out.csv --seed 1");
+        assert_eq!(a.positional(), &["fig2-mf", "out.csv"]);
+    }
+}

@@ -1,0 +1,421 @@
+//! Minimal JSON parser + writer (no serde in the offline vendor set).
+//!
+//! The parser covers the full JSON grammar needed by `artifacts/meta.json`
+//! and experiment configs; the writer is used by `metrics::export`. Both are
+//! intentionally small — this repo's hot path never touches JSON.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use thiserror::Error;
+
+/// A parsed JSON value. Object keys are ordered (BTreeMap) so output and
+/// tests are deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+#[derive(Debug, Error)]
+pub enum JsonError {
+    #[error("unexpected end of input at byte {0}")]
+    Eof(usize),
+    #[error("unexpected character {0:?} at byte {1}")]
+    Unexpected(char, usize),
+    #[error("invalid number at byte {0}")]
+    BadNumber(usize),
+    #[error("invalid escape at byte {0}")]
+    BadEscape(usize),
+    #[error("trailing garbage at byte {0}")]
+    Trailing(usize),
+    #[error("expected {0} but found {1}")]
+    Type(&'static str, &'static str),
+    #[error("missing key {0:?}")]
+    MissingKey(String),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json, JsonError> {
+        let b = s.as_bytes();
+        let mut i = 0;
+        let v = parse_value(b, &mut i)?;
+        skip_ws(b, &mut i);
+        if i != b.len() {
+            return Err(JsonError::Trailing(i));
+        }
+        Ok(v)
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>, JsonError> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            other => Err(JsonError::Type("object", other.type_name())),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json], JsonError> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => Err(JsonError::Type("array", other.type_name())),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str, JsonError> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(JsonError::Type("string", other.type_name())),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, JsonError> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => Err(JsonError::Type("number", other.type_name())),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64, JsonError> {
+        Ok(self.as_f64()? as u64)
+    }
+
+    pub fn as_usize(&self) -> Result<usize, JsonError> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool, JsonError> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(JsonError::Type("bool", other.type_name())),
+        }
+    }
+
+    /// Object field access with a useful error.
+    pub fn get(&self, key: &str) -> Result<&Json, JsonError> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| JsonError::MissingKey(key.to_string()))
+    }
+
+    /// Optional field: Ok(None) when absent or null.
+    pub fn opt(&self, key: &str) -> Result<Option<&Json>, JsonError> {
+        Ok(match self.as_obj()?.get(key) {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v),
+        })
+    }
+
+    /// Serialize; `indent` of 0 means compact.
+    pub fn to_string_pretty(&self, indent: usize) -> String {
+        let mut out = String::new();
+        write_value(self, indent, 0, &mut out);
+        out
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_string_pretty(0))
+    }
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize) -> Result<Json, JsonError> {
+    skip_ws(b, i);
+    let c = *b.get(*i).ok_or(JsonError::Eof(*i))?;
+    match c {
+        b'{' => parse_obj(b, i),
+        b'[' => parse_arr(b, i),
+        b'"' => Ok(Json::Str(parse_string(b, i)?)),
+        b't' => parse_lit(b, i, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, i, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, i, "null", Json::Null),
+        b'-' | b'0'..=b'9' => parse_num(b, i),
+        _ => Err(JsonError::Unexpected(c as char, *i)),
+    }
+}
+
+fn parse_lit(b: &[u8], i: &mut usize, lit: &str, v: Json) -> Result<Json, JsonError> {
+    if b[*i..].starts_with(lit.as_bytes()) {
+        *i += lit.len();
+        Ok(v)
+    } else {
+        Err(JsonError::Unexpected(b[*i] as char, *i))
+    }
+}
+
+fn parse_num(b: &[u8], i: &mut usize) -> Result<Json, JsonError> {
+    let start = *i;
+    if b[*i] == b'-' {
+        *i += 1;
+    }
+    while *i < b.len() && matches!(b[*i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-') {
+        *i += 1;
+    }
+    std::str::from_utf8(&b[start..*i])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or(JsonError::BadNumber(start))
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> Result<String, JsonError> {
+    debug_assert_eq!(b[*i], b'"');
+    *i += 1;
+    let mut s = String::new();
+    loop {
+        let c = *b.get(*i).ok_or(JsonError::Eof(*i))?;
+        match c {
+            b'"' => {
+                *i += 1;
+                return Ok(s);
+            }
+            b'\\' => {
+                *i += 1;
+                let e = *b.get(*i).ok_or(JsonError::Eof(*i))?;
+                match e {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'b' => s.push('\u{8}'),
+                    b'f' => s.push('\u{c}'),
+                    b'n' => s.push('\n'),
+                    b'r' => s.push('\r'),
+                    b't' => s.push('\t'),
+                    b'u' => {
+                        if *i + 4 >= b.len() {
+                            return Err(JsonError::Eof(*i));
+                        }
+                        let hex = std::str::from_utf8(&b[*i + 1..*i + 5])
+                            .map_err(|_| JsonError::BadEscape(*i))?;
+                        let cp =
+                            u32::from_str_radix(hex, 16).map_err(|_| JsonError::BadEscape(*i))?;
+                        s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        *i += 4;
+                    }
+                    _ => return Err(JsonError::BadEscape(*i)),
+                }
+                *i += 1;
+            }
+            _ => {
+                // Copy a run of plain bytes (valid UTF-8 by construction).
+                let start = *i;
+                while *i < b.len() && b[*i] != b'"' && b[*i] != b'\\' {
+                    *i += 1;
+                }
+                s.push_str(std::str::from_utf8(&b[start..*i]).map_err(|_| JsonError::Eof(start))?);
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], i: &mut usize) -> Result<Json, JsonError> {
+    *i += 1; // consume '['
+    let mut v = Vec::new();
+    skip_ws(b, i);
+    if *b.get(*i).ok_or(JsonError::Eof(*i))? == b']' {
+        *i += 1;
+        return Ok(Json::Arr(v));
+    }
+    loop {
+        v.push(parse_value(b, i)?);
+        skip_ws(b, i);
+        match *b.get(*i).ok_or(JsonError::Eof(*i))? {
+            b',' => *i += 1,
+            b']' => {
+                *i += 1;
+                return Ok(Json::Arr(v));
+            }
+            c => return Err(JsonError::Unexpected(c as char, *i)),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], i: &mut usize) -> Result<Json, JsonError> {
+    *i += 1; // consume '{'
+    let mut m = BTreeMap::new();
+    skip_ws(b, i);
+    if *b.get(*i).ok_or(JsonError::Eof(*i))? == b'}' {
+        *i += 1;
+        return Ok(Json::Obj(m));
+    }
+    loop {
+        skip_ws(b, i);
+        if *b.get(*i).ok_or(JsonError::Eof(*i))? != b'"' {
+            return Err(JsonError::Unexpected(b[*i] as char, *i));
+        }
+        let key = parse_string(b, i)?;
+        skip_ws(b, i);
+        if *b.get(*i).ok_or(JsonError::Eof(*i))? != b':' {
+            return Err(JsonError::Unexpected(b[*i] as char, *i));
+        }
+        *i += 1;
+        m.insert(key, parse_value(b, i)?);
+        skip_ws(b, i);
+        match *b.get(*i).ok_or(JsonError::Eof(*i))? {
+            b',' => *i += 1,
+            b'}' => {
+                *i += 1;
+                return Ok(Json::Obj(m));
+            }
+            c => return Err(JsonError::Unexpected(c as char, *i)),
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn write_value(v: &Json, indent: usize, depth: usize, out: &mut String) {
+    let nl = |out: &mut String, d: usize| {
+        if indent > 0 {
+            out.push('\n');
+            out.push_str(&" ".repeat(indent * d));
+        }
+    };
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                let _ = write!(out, "{}", *n as i64);
+            } else {
+                let _ = write!(out, "{n}");
+            }
+        }
+        Json::Str(s) => write_escaped(s, out),
+        Json::Arr(a) => {
+            out.push('[');
+            for (k, item) in a.iter().enumerate() {
+                if k > 0 {
+                    out.push(',');
+                }
+                nl(out, depth + 1);
+                write_value(item, indent, depth + 1, out);
+            }
+            if !a.is_empty() {
+                nl(out, depth);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (k, (key, item)) in m.iter().enumerate() {
+                if k > 0 {
+                    out.push(',');
+                }
+                nl(out, depth + 1);
+                write_escaped(key, out);
+                out.push(':');
+                if indent > 0 {
+                    out.push(' ');
+                }
+                write_value(item, indent, depth + 1, out);
+            }
+            if !m.is_empty() {
+                nl(out, depth);
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// Convenience builders for export code.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+pub fn str(s: impl Into<String>) -> Json {
+    Json::Str(s.into())
+}
+
+pub fn arr(v: Vec<Json>) -> Json {
+    Json::Arr(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": "x\ny", "d": null}, "e": true}"#;
+        let v = Json::parse(src).unwrap();
+        let re = Json::parse(&v.to_string_pretty(2)).unwrap();
+        assert_eq!(v, re);
+    }
+
+    #[test]
+    fn parses_meta_like_structure() {
+        let src = r#"{"mf": {"inputs": [{"name":"L","shape":[64,32],"dtype":"float32"}]}}"#;
+        let v = Json::parse(src).unwrap();
+        let inputs = v.get("mf").unwrap().get("inputs").unwrap().as_arr().unwrap();
+        assert_eq!(inputs[0].get("name").unwrap().as_str().unwrap(), "L");
+        assert_eq!(inputs[0].get("shape").unwrap().as_arr().unwrap()[1].as_usize().unwrap(), 32);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn unicode_escape() {
+        let v = Json::parse(r#""éA""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "éA");
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn integer_formatting() {
+        assert_eq!(Json::Num(3.0).to_string_pretty(0), "3");
+        assert_eq!(Json::Num(3.5).to_string_pretty(0), "3.5");
+    }
+}

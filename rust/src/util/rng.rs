@@ -1,0 +1,292 @@
+//! Deterministic PRNG (no `rand` crate in the offline vendor set).
+//!
+//! PCG64-DXSM-flavored generator: fast, statistically solid for simulation
+//! use, and — critically for the experiments — fully reproducible from a
+//! `u64` seed. `Rng::fork(tag)` derives independent streams per worker /
+//! per subsystem so thread scheduling never perturbs the sampled workload.
+
+/// SplitMix64, used for seeding and as a cheap one-shot mixer.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic, forkable PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+}
+
+impl Rng {
+    /// Build from a 64-bit seed (stream 0).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0)
+    }
+
+    /// Build from a seed and a stream id; distinct streams are independent.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut s = seed;
+        let a = splitmix64(&mut s);
+        let b = splitmix64(&mut s);
+        let mut t = stream ^ 0xDA3E_39CB_94B9_5BDB;
+        let c = splitmix64(&mut t);
+        let mut rng = Self {
+            state: ((a as u128) << 64) | b as u128,
+            inc: (((c as u128) << 64) | (stream as u128)) | 1,
+        };
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child stream, e.g. one per worker.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::with_stream(seed, tag)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // PCG-DXSM on 128-bit state.
+        const MUL: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+        let mut hi = (self.state >> 64) as u64;
+        let lo = (self.state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(0xDA94_2042_E4DD_58B5);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's nearly-divisionless bounded sampling.
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    #[inline]
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (stateless variant: discards pair).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Exponential with the given rate.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.f64().max(1e-300).ln() / rate
+    }
+
+    /// Draw from a symmetric Dirichlet(alpha) of dimension `k`.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = v.iter().sum();
+        if s > 0.0 {
+            for x in &mut v {
+                *x /= s;
+            }
+        } else {
+            v.fill(1.0 / k as f64);
+        }
+        v
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (with boost for shape < 1).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            let u = self.f64().max(1e-300);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Sample an index proportionally to non-negative `weights`.
+    /// Returns `weights.len() - 1` if the total mass underflows.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.usize_below(weights.len().max(1));
+        }
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Rng::with_stream(42, 0);
+        let mut b = Rng::with_stream(42, 1);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn forks_are_independent_of_parent_continuation() {
+        let mut parent = Rng::new(7);
+        let mut child = parent.fork(3);
+        let c1: Vec<u64> = (0..4).map(|_| child.next_u64()).collect();
+        // Re-derive: same fork tag from same parent state gives same child.
+        let mut parent2 = Rng::new(7);
+        let mut child2 = parent2.fork(3);
+        let c2: Vec<u64> = (0..4).map(|_| child2.next_u64()).collect();
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = r.below(7) as usize;
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.08, "var {var}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(4);
+        let v = r.dirichlet(0.1, 50);
+        assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(v.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(5);
+        let w = [0.0, 0.0, 1.0, 0.0];
+        for _ in 0..100 {
+            assert_eq!(r.categorical(&w), 2);
+        }
+        // Rough proportion check.
+        let w = [1.0, 3.0];
+        let mut c1 = 0;
+        for _ in 0..10_000 {
+            if r.categorical(&w) == 1 {
+                c1 += 1;
+            }
+        }
+        assert!((c1 as f64 / 10_000.0 - 0.75).abs() < 0.03);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(6);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

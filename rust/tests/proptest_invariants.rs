@@ -1,0 +1,223 @@
+//! Property-based tests over PS invariants (DESIGN.md §7).
+//!
+//! The offline vendor set has no `proptest`, so this uses a small seeded
+//! generator harness: each property runs across many random cases derived
+//! from a fixed master seed (reproducible; failures print the case seed).
+
+use essptable::ps::cache::RowCache;
+use essptable::ps::client::PsClient;
+use essptable::ps::consistency::Consistency;
+use essptable::ps::router::Router;
+use essptable::ps::server::{Cluster, ClusterConfig, PsApp, TableSpec};
+use essptable::ps::types::{Clock, Key};
+use essptable::ps::update::UpdateMap;
+use essptable::ps::vclock::MinClock;
+use essptable::sim::net::NetConfig;
+use essptable::sim::straggler::StragglerModel;
+use essptable::util::json::Json;
+use essptable::util::rng::Rng;
+
+/// Run `prop` on `cases` seeded cases.
+fn for_cases(cases: u64, mut prop: impl FnMut(u64, &mut Rng)) {
+    for case in 0..cases {
+        let mut rng = Rng::with_stream(0xC0FFEE, case);
+        prop(case, &mut rng);
+    }
+}
+
+#[test]
+fn prop_coalescing_lossless() {
+    // Sum of drained routed batches == elementwise sum of raw INCs,
+    // regardless of inc order, sparsity mix, and shard count.
+    for_cases(50, |case, rng| {
+        let rows = 1 + rng.usize_below(20) as u64;
+        let len = 1 + rng.usize_below(16);
+        let shards = 1 + rng.usize_below(5);
+        let mut m = UpdateMap::new();
+        let mut expect = vec![vec![0.0f32; len]; rows as usize];
+        for _ in 0..rng.usize_below(500) {
+            let r = rng.below(rows);
+            if rng.f64() < 0.5 {
+                let delta: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                for (e, d) in expect[r as usize].iter_mut().zip(&delta) {
+                    *e += d;
+                }
+                m.inc((0, r), &delta);
+            } else {
+                let idx = rng.usize_below(len);
+                let v = rng.normal_f32();
+                expect[r as usize][idx] += v;
+                m.inc_sparse((0, r), len, &[(idx, v)]);
+            }
+        }
+        let router = Router::new(shards);
+        let batches = m.drain_routed(shards, |k| router.shard_of(k));
+        let mut got = vec![vec![0.0f32; len]; rows as usize];
+        for (shard, batch) in batches.iter().enumerate() {
+            for (key, delta) in batch {
+                assert_eq!(router.shard_of(key), shard, "case {case}: misrouted");
+                for (g, d) in got[key.1 as usize].iter_mut().zip(delta) {
+                    *g += d;
+                }
+            }
+        }
+        for (r, (g, e)) in got.iter().zip(&expect).enumerate() {
+            for (a, b) in g.iter().zip(e) {
+                assert!((a - b).abs() < 1e-3, "case {case} row {r}: {a} vs {b}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_min_clock_is_min() {
+    for_cases(50, |case, rng| {
+        let workers = 1 + rng.usize_below(8);
+        let mut mc = MinClock::new(workers);
+        let mut committed = vec![-1i64; workers];
+        for _ in 0..200 {
+            let w = rng.usize_below(workers);
+            let c = committed[w] + 1 + rng.below(3) as i64;
+            committed[w] = c;
+            mc.commit(w, c);
+            assert_eq!(
+                mc.min(),
+                *committed.iter().min().unwrap(),
+                "case {case}: min mismatch"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_lru_never_exceeds_capacity_and_keeps_hot() {
+    for_cases(40, |case, rng| {
+        let cap = 1 + rng.usize_below(8);
+        let mut cache = RowCache::new(cap);
+        let hot: Key = (0, 999);
+        cache.insert(hot, vec![1.0], 0, 0);
+        for i in 0..rng.usize_below(200) {
+            let _ = cache.get(&hot); // keep hot row warm
+            cache.insert((0, i as u64), vec![0.0], 0, 0);
+            assert!(cache.len() <= cap, "case {case}: over capacity");
+        }
+        if cap > 1 {
+            assert!(
+                cache.peek(&hot).is_some(),
+                "case {case}: hot row evicted despite constant use"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_staleness_bound_never_violated() {
+    // Random consistency, worker count, straggling, jitter: the recorded
+    // clock differential is always within [-(s+1), 0].
+    for_cases(8, |case, rng| {
+        let s = rng.below(4) as i64;
+        let consistency = if rng.f64() < 0.5 {
+            Consistency::Ssp { s }
+        } else {
+            Consistency::Essp { s }
+        };
+        let workers = 2 + rng.usize_below(3);
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers,
+            shards: 1 + rng.usize_below(3),
+            consistency,
+            net: NetConfig {
+                latency: std::time::Duration::from_micros(rng.below(500)),
+                jitter: std::time::Duration::from_micros(rng.below(300)),
+                bandwidth: 10e6,
+                seed: case,
+            },
+            straggler: StragglerModel::RandomUniform { max_factor: 2.0 },
+            seed: case,
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 6, 2));
+        let apps: Vec<Box<dyn PsApp>> = (0..workers)
+            .map(|_| {
+                Box::new(|ps: &mut PsClient, _c: Clock| {
+                    for r in 0..6u64 {
+                        let _ = ps.get((0, r));
+                        ps.inc((0, r), &[1.0, -1.0]);
+                    }
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let report = cluster.run(apps, 8);
+        let min = report.staleness.min().unwrap();
+        let max = report.staleness.max().unwrap();
+        assert!(
+            min >= -(s + 1),
+            "case {case} ({consistency}): differential {min} < -(s+1)"
+        );
+        assert!(max <= 0, "case {case}: differential {max} > 0");
+        // Conservation, while we're here.
+        for r in 0..6u64 {
+            let v = report.table_rows[&(0, r)][0];
+            assert!((v - (workers * 8) as f32).abs() < 1e-3, "case {case}: {v}");
+        }
+    });
+}
+
+#[test]
+fn prop_router_agrees_across_instances() {
+    for_cases(30, |case, rng| {
+        let shards = 1 + rng.usize_below(16);
+        let a = Router::new(shards);
+        let b = Router::new(shards);
+        for _ in 0..100 {
+            let key: Key = (rng.next_u32(), rng.next_u64());
+            assert_eq!(a.shard_of(&key), b.shard_of(&key), "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => Json::Str(format!("s{}-\"quoted\"\n", rng.below(1000))),
+            4 => Json::Arr((0..rng.usize_below(4)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.usize_below(4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_cases(100, |case, rng| {
+        let v = gen(rng, 0);
+        for indent in [0, 2] {
+            let text = v.to_string_pretty(indent);
+            let re = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+            assert_eq!(v, re, "case {case} (indent {indent})");
+        }
+    });
+}
+
+#[test]
+fn prop_rng_below_uniformity() {
+    for_cases(10, |case, rng| {
+        let n = 2 + rng.below(20);
+        let mut counts = vec![0usize; n as usize];
+        let draws = 5000;
+        for _ in 0..draws {
+            counts[rng.below(n) as usize] += 1;
+        }
+        let expect = draws as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > 0.4 * expect && (c as f64) < 2.0 * expect,
+                "case {case}: bucket {i} has {c} (expect ~{expect})"
+            );
+        }
+    });
+}

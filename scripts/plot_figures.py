@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Render the paper's figures from the CSVs the experiment harness emits.
+
+Usage:  python scripts/plot_figures.py [results-dir] [out-dir]
+
+Reads fig1_staleness.csv / fig1_breakdown.csv / fig2_mf.csv / fig2_lda.csv
+(whichever exist) and writes PNGs mirroring the paper's panels: staleness
+histograms (Fig 1 left), stacked comm/comp bars (Fig 1 right), and
+convergence vs iteration & vs seconds (Fig 2). Requires matplotlib (plot
+generation is optional tooling; the CSVs are the primary artifact).
+"""
+
+import csv
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+try:
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+except ImportError:
+    sys.exit("matplotlib not available; the CSVs under results/ are the data")
+
+
+def load(path):
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def fig1_staleness(results, out):
+    path = results / "fig1_staleness.csv"
+    if not path.exists():
+        return
+    rows = load(path)
+    series = defaultdict(list)
+    for r in rows:
+        series[r["label"]].append((int(r["differential"]), float(r["fraction"])))
+    fig, ax = plt.subplots(figsize=(6, 4))
+    width = 0.8 / max(len(series), 1)
+    for i, (label, pts) in enumerate(sorted(series.items())):
+        pts.sort()
+        xs = [d + i * width for d, _ in pts]
+        ax.bar(xs, [f for _, f in pts], width=width, label=label)
+    ax.set_xlabel("clock differential (parameter age − local clock)")
+    ax.set_ylabel("fraction of reads")
+    ax.set_title("Fig 1 (left): empirical staleness distribution (MF)")
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(out / "fig1_staleness.png", dpi=120)
+    print(f"wrote {out}/fig1_staleness.png")
+
+
+def fig1_breakdown(results, out):
+    path = results / "fig1_breakdown.csv"
+    if not path.exists():
+        return
+    rows = load(path)
+    labels = [r["label"] for r in rows]
+    comp = [float(r["comp_seconds"]) for r in rows]
+    comm = [float(r["comm_seconds"]) for r in rows]
+    fig, ax = plt.subplots(figsize=(7, 4))
+    xs = range(len(labels))
+    ax.bar(xs, comp, label="computation")
+    ax.bar(xs, comm, bottom=comp, label="communication")
+    ax.set_xticks(list(xs))
+    ax.set_xticklabels(labels, rotation=45, ha="right")
+    ax.set_ylabel("seconds (summed over workers)")
+    ax.set_title("Fig 1 (right): comm/comp breakdown (LDA)")
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(out / "fig1_breakdown.png", dpi=120)
+    print(f"wrote {out}/fig1_breakdown.png")
+
+
+def fig2(results, out, name, ylabel):
+    path = results / f"{name}.csv"
+    if not path.exists():
+        return
+    rows = load(path)
+    series = defaultdict(list)
+    for r in rows:
+        series[r["label"]].append(
+            (int(r["clock"]), float(r["seconds"]), float(r["value"]))
+        )
+    fig, axes = plt.subplots(1, 2, figsize=(11, 4))
+    for label, pts in sorted(series.items()):
+        pts.sort()
+        axes[0].plot([c for c, _, _ in pts], [v for _, _, v in pts], label=label)
+        axes[1].plot([s for _, s, _ in pts], [v for _, _, v in pts], label=label)
+    axes[0].set_xlabel("clock (iteration)")
+    axes[1].set_xlabel("seconds")
+    for ax in axes:
+        ax.set_ylabel(ylabel)
+        ax.legend()
+    fig.suptitle(f"Fig 2: {name} convergence per iteration and per second")
+    fig.tight_layout()
+    fig.savefig(out / f"{name}.png", dpi=120)
+    print(f"wrote {out}/{name}.png")
+
+
+def main():
+    results = Path(sys.argv[1] if len(sys.argv) > 1 else "results/final")
+    out = Path(sys.argv[2] if len(sys.argv) > 2 else results)
+    out.mkdir(parents=True, exist_ok=True)
+    fig1_staleness(results, out)
+    fig1_breakdown(results, out)
+    fig2(results, out, "fig2_mf", "training squared loss")
+    fig2(results, out, "fig2_lda", "log-likelihood")
+
+
+if __name__ == "__main__":
+    main()
