@@ -3,7 +3,15 @@
 //!   * server-push batching beats per-request pull on refresh traffic,
 //!   * the GET/INC hot path is allocation-light and fast.
 //!
-//! Run with `cargo bench --bench ps_throughput`.
+//! Run with `cargo bench --bench ps_throughput` (or `scripts/bench.sh`).
+//!
+//! Besides printing, results are written to `BENCH_ps_throughput.json`
+//! (path overridable via `ESSPTABLE_BENCH_JSON`). The writer preserves the
+//! previous run as `baseline` the first time it sees one, so running the
+//! bench before and after a perf change records both numbers plus the
+//! speedup — the perf ratchet the ROADMAP asks every PR to feed.
+
+use std::collections::BTreeMap;
 
 use essptable::ps::client::PsClient;
 use essptable::ps::consistency::Consistency;
@@ -12,9 +20,13 @@ use essptable::ps::types::Clock;
 use essptable::ps::update::UpdateMap;
 use essptable::sim::net::NetConfig;
 use essptable::util::benchkit::bench;
+use essptable::util::json::Json;
+
+/// One recorded measurement: (stable name, mean seconds, items/s).
+type Entry = (String, f64, f64);
 
 /// Raw coalescing throughput: INCs folded per second.
-fn bench_coalescing() {
+fn bench_coalescing(out: &mut Vec<Entry>) {
     let mut m = UpdateMap::new();
     let delta = vec![0.5f32; 32];
     let r = bench("update coalescing: inc x1e5 into 256 rows", 2, 10, || {
@@ -24,12 +36,25 @@ fn bench_coalescing() {
         let _ = m.drain_routed(4, |k| (k.1 % 4) as usize);
     });
     r.print_throughput(1e5, "incs");
+    out.push((
+        "coalescing_inc_1e5_256rows".into(),
+        r.mean.as_secs_f64(),
+        r.throughput(1e5),
+    ));
 }
 
 /// End-to-end GET/INC/CLOCK rate on an instant network (pure PS overhead).
-fn bench_get_inc_clock(consistency: Consistency, workers: usize) {
+/// `alloc_free` switches the worker loop from `get()` (compat, allocates a
+/// Vec per read) to `get_into()` (reusable buffer, allocation-free reads).
+fn bench_get_inc_clock(
+    consistency: Consistency,
+    workers: usize,
+    alloc_free: bool,
+    out: &mut Vec<Entry>,
+) {
+    let variant = if alloc_free { "get_into" } else { "get" };
     let label = format!(
-        "e2e {} x{workers}w: 64 get+inc per clock, 200 clocks",
+        "e2e {} x{workers}w {variant}: 64 rd+inc/clock, 200 clocks",
         consistency.label()
     );
     let r = bench(&label, 1, 5, || {
@@ -43,20 +68,37 @@ fn bench_get_inc_clock(consistency: Consistency, workers: usize) {
         cluster.add_table(TableSpec::zeros(0, 256, 32));
         let apps: Vec<Box<dyn PsApp>> = (0..workers)
             .map(|w| {
-                Box::new(move |ps: &mut PsClient, _c: Clock| {
-                    for i in 0..64u64 {
-                        let key = (0, (w as u64 * 64 + i) % 256);
-                        let _row = ps.get(key);
-                        ps.inc(key, &[0.001f32; 32]);
-                    }
-                    None
-                }) as Box<dyn PsApp>
+                if alloc_free {
+                    let mut buf: Vec<f32> = Vec::new();
+                    Box::new(move |ps: &mut PsClient, _c: Clock| {
+                        for i in 0..64u64 {
+                            let key = (0, (w as u64 * 64 + i) % 256);
+                            ps.get_into(key, &mut buf);
+                            ps.inc(key, &[0.001f32; 32]);
+                        }
+                        None
+                    }) as Box<dyn PsApp>
+                } else {
+                    Box::new(move |ps: &mut PsClient, _c: Clock| {
+                        for i in 0..64u64 {
+                            let key = (0, (w as u64 * 64 + i) % 256);
+                            let _row = ps.get(key);
+                            ps.inc(key, &[0.001f32; 32]);
+                        }
+                        None
+                    }) as Box<dyn PsApp>
+                }
             })
             .collect();
         let _ = cluster.run(apps, 200);
     });
     let ops = (workers * 64 * 200) as f64;
     r.print_throughput(ops, "get+inc");
+    out.push((
+        format!("e2e_{}_x{workers}w_{variant}", consistency.label()),
+        r.mean.as_secs_f64(),
+        r.throughput(ops),
+    ));
 }
 
 /// Push (ESSP) vs pull (SSP) refresh traffic for the same workload:
@@ -104,16 +146,132 @@ fn bench_push_vs_pull_traffic() {
     }
 }
 
+fn entries_json(entries: &[Entry]) -> Json {
+    Json::Arr(
+        entries
+            .iter()
+            .map(|(name, mean_s, per_s)| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(name.clone()));
+                o.insert("mean_s".to_string(), Json::Num(*mean_s));
+                o.insert("per_s".to_string(), Json::Num(*per_s));
+                Json::Obj(o)
+            })
+            .collect(),
+    )
+}
+
+/// Current git commit, for baseline/current provenance (a baseline
+/// accidentally recorded on the wrong commit is then detectable).
+fn git_rev() -> Json {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| Json::Str(s.trim().to_string()))
+        .unwrap_or(Json::Null)
+}
+
+/// A recorded run: `{rev, results: [...]}`.
+fn run_json(entries: &[Entry]) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("rev".to_string(), git_rev());
+    o.insert("results".to_string(), entries_json(entries));
+    Json::Obj(o)
+}
+
+/// Result rows of a recorded run, tolerating both the `{rev, results}`
+/// object form and a bare array (older files).
+fn run_results(run: &Json) -> Option<&[Json]> {
+    match run {
+        Json::Arr(rows) => Some(rows),
+        Json::Obj(_) => run.get("results").ok().and_then(|r| r.as_arr().ok()),
+        _ => None,
+    }
+}
+
+/// Write `BENCH_ps_throughput.json`: the fresh run as `current`, keeping
+/// the oldest recorded run as `baseline` (first run seeds it), plus
+/// per-benchmark `speedup_vs_baseline` ratios.
+fn write_json(entries: &[Entry]) {
+    let path = std::env::var("ESSPTABLE_BENCH_JSON")
+        .unwrap_or_else(|_| "../BENCH_ps_throughput.json".to_string());
+    let path = std::path::PathBuf::from(path);
+    let prior = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    // Baseline: the prior baseline if recorded, else the prior current
+    // (i.e. the first post-change run promotes the pre-change numbers).
+    let baseline = prior.as_ref().and_then(|j| {
+        j.opt("baseline")
+            .ok()
+            .flatten()
+            .or_else(|| j.opt("current").ok().flatten())
+            .cloned()
+    });
+
+    let current = run_json(entries);
+    let mut speedups = BTreeMap::new();
+    if let Some(base) = &baseline {
+        if let Some(base_rows) = run_results(base) {
+            for (name, _mean, per_s) in entries {
+                for row in base_rows {
+                    let matches = row
+                        .get("name")
+                        .ok()
+                        .and_then(|n| n.as_str().ok().map(|s| s == name))
+                        .unwrap_or(false);
+                    if matches {
+                        if let Ok(base_per_s) = row.get("per_s").and_then(|v| v.as_f64()) {
+                            if base_per_s > 0.0 {
+                                speedups.insert(
+                                    name.clone(),
+                                    Json::Num(per_s / base_per_s),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("ps_throughput".to_string()));
+    root.insert(
+        "note".to_string(),
+        Json::Str(
+            "per_s = operations/second; baseline is preserved from the \
+             first recorded run, current overwritten each run by \
+             scripts/bench.sh"
+                .to_string(),
+        ),
+    );
+    root.insert("baseline".to_string(), baseline.unwrap_or(Json::Null));
+    root.insert("current".to_string(), current);
+    root.insert("speedup_vs_baseline".to_string(), Json::Obj(speedups));
+    match std::fs::write(&path, Json::Obj(root).to_string_pretty(2)) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nwarning: could not write {}: {e}", path.display()),
+    }
+}
+
 fn main() {
     println!("== ps_throughput (paper §ESSPTable system claims) ==");
-    bench_coalescing();
+    let mut entries = Vec::new();
+    bench_coalescing(&mut entries);
     for c in [
         Consistency::Bsp,
         Consistency::Ssp { s: 3 },
         Consistency::Essp { s: 3 },
         Consistency::Async { refresh_every: 1 },
     ] {
-        bench_get_inc_clock(c, 4);
+        bench_get_inc_clock(c, 4, false, &mut entries);
     }
+    // The alloc-free read path on the headline ESSP config.
+    bench_get_inc_clock(Consistency::Essp { s: 3 }, 4, true, &mut entries);
     bench_push_vs_pull_traffic();
+    write_json(&entries);
 }

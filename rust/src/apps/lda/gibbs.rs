@@ -32,6 +32,12 @@ pub struct LdaWorker {
     rng: Rng,
     cursor: usize,
     initialized: bool,
+    /// Reusable read/sampling buffers: the per-token hot loop reads the
+    /// word-topic and topic-total rows via `get_into` and fills `weights`
+    /// in place, so steady-state sweeps perform no per-token allocation.
+    nwk_buf: Vec<f32>,
+    nk_buf: Vec<f32>,
+    weights_buf: Vec<f64>,
 }
 
 impl LdaWorker {
@@ -48,6 +54,9 @@ impl LdaWorker {
             rng,
             cursor: 0,
             initialized: false,
+            nwk_buf: Vec::new(),
+            nk_buf: Vec::new(),
+            weights_buf: Vec::new(),
         }
     }
 
@@ -89,6 +98,13 @@ impl LdaWorker {
         let mut loglik = 0.0f64;
         let doc_len = tokens.len() as f32;
 
+        // Reuse the worker's buffers across tokens (no per-token allocs).
+        let mut nwk = std::mem::take(&mut self.nwk_buf);
+        let mut nk = std::mem::take(&mut self.nk_buf);
+        let mut weights = std::mem::take(&mut self.weights_buf);
+        weights.clear();
+        weights.resize(k, 0.0);
+
         for (t, &w) in tokens.iter().enumerate() {
             let old = self.z[local_idx][t] as usize;
             // 1. Remove the token from the counts.
@@ -97,10 +113,9 @@ impl LdaWorker {
             ps.inc_sparse((TOPIC_TABLE, 0), &[(old, -1.0)]);
 
             // 2. Sample from the conditional under the (stale) PS view.
-            let nwk = ps.get((WT_TABLE, w as RowId));
-            let nk = ps.get((TOPIC_TABLE, 0));
+            ps.get_into((WT_TABLE, w as RowId), &mut nwk);
+            ps.get_into((TOPIC_TABLE, 0), &mut nk);
             let ndk = &self.ndk[local_idx];
-            let mut weights = vec![0.0f64; k];
             let mut p_token = 0.0f64; // predictive p(w|d) for log-lik
             for kk in 0..k {
                 let a = (nwk[kk].max(0.0) + beta) as f64;
@@ -118,6 +133,10 @@ impl LdaWorker {
             ps.inc_sparse((WT_TABLE, w as RowId), &[(new, 1.0)]);
             ps.inc_sparse((TOPIC_TABLE, 0), &[(new, 1.0)]);
         }
+
+        self.nwk_buf = nwk;
+        self.nk_buf = nk;
+        self.weights_buf = weights;
         loglik
     }
 }

@@ -106,6 +106,9 @@ pub struct LogRegWorker {
     my_examples: Vec<usize>,
     cursor: usize,
     cfg: LogRegConfig,
+    /// Reusable weight buffer: the inner loop reads via `get_into`, so
+    /// steady-state clocks allocate nothing for the GET.
+    w_buf: Vec<f32>,
 }
 
 impl LogRegWorker {
@@ -117,13 +120,15 @@ impl LogRegWorker {
             my_examples,
             cursor: 0,
             cfg,
+            w_buf: Vec::new(),
         }
     }
 }
 
 impl PsApp for LogRegWorker {
     fn run_clock(&mut self, ps: &mut PsClient, _clock: Clock) -> Option<f64> {
-        let w = ps.get((W_TABLE, 0));
+        let mut w = std::mem::take(&mut self.w_buf);
+        ps.get_into((W_TABLE, 0), &mut w);
         let dim = self.cfg.dim;
         let mut grad = vec![0.0f32; dim + 1];
         let mut loss = 0.0f64;
@@ -148,6 +153,7 @@ impl PsApp for LogRegWorker {
             *d -= self.cfg.lr * self.cfg.lambda * wv;
         }
         ps.inc((W_TABLE, 0), &delta);
+        self.w_buf = w;
         Some(loss / n as f64)
     }
 }

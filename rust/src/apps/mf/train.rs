@@ -63,18 +63,22 @@ impl MfWorker {
     fn step_block(&self, ps: &mut PsClient, blk: &Block) -> (f64, f64) {
         let (b, k) = (self.cfg.block, self.cfg.rank);
         // GET L rows for this block-row and R columns for this block-col.
+        // `with_row` borrows the cached snapshot in place: the assembly
+        // copies straight out of the shared payload, no per-row Vec.
         let mut l = vec![0.0f32; b * k];
         for i in 0..b {
-            let row = ps.get((L_TABLE, (blk.bi * b + i) as RowId));
-            l[i * k..(i + 1) * k].copy_from_slice(&row);
+            ps.with_row((L_TABLE, (blk.bi * b + i) as RowId), |row| {
+                l[i * k..(i + 1) * k].copy_from_slice(row);
+            });
         }
         // R stored per matrix-column (K floats); assemble (k x b) row-major.
         let mut r = vec![0.0f32; k * b];
         for j in 0..b {
-            let col = ps.get((R_TABLE, (blk.bj * b + j) as RowId));
-            for kk in 0..k {
-                r[kk * b + j] = col[kk];
-            }
+            ps.with_row((R_TABLE, (blk.bj * b + j) as RowId), |col| {
+                for kk in 0..k {
+                    r[kk * b + j] = col[kk];
+                }
+            });
         }
 
         let (dl, dr, loss, cnt) = match &self.backend {

@@ -16,6 +16,7 @@
 pub mod util {
     pub mod benchkit;
     pub mod cli;
+    pub mod hash;
     pub mod json;
     pub mod rng;
     pub mod stats;

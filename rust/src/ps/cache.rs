@@ -2,22 +2,32 @@
 //!
 //! Mirrors the paper's ESSPTable client library: "the client library caches
 //! locally accessed parameters … cold parameters are evicted using an
-//! approximate LRU policy". Each cached row carries two clocks:
+//! approximate LRU policy". Row payloads are shared immutable snapshots
+//! (`Arc<[f32]>`): inserting a pulled or pushed row stores the *same*
+//! allocation the shard sent (zero-copy); local read-my-writes folding
+//! copies-on-write, so a shared snapshot is never mutated in place.
+//!
+//! Each cached row carries two clocks:
 //!
 //!   * `vclock` — the server table clock when this copy was produced; all
-//!     updates with clock <= vclock are guaranteed reflected (the SSP read
-//!     condition tests this one).
+//!     updates with clock <= vclock are guaranteed reflected. This is the
+//!     clock the SSP read condition tests, and the one the Fig. 1
+//!     staleness histogram measures: the client records the differential
+//!     `vclock - worker clock` (the *guaranteed* clock, per the paper's
+//!     "all updates generated before clock x have been applied"), with
+//!     `vclock` effectively raised by newer empty-wave announcements.
 //!   * `fresh`  — the max update clock actually reflected (best-effort
-//!     in-window updates); this is what the Fig. 1 staleness histogram
-//!     measures: differential = fresh - worker clock.
+//!     in-window updates). Advisory only: it never enters the staleness
+//!     histogram, which would otherwise overstate guarantees.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
 use super::types::{Clock, Key};
+use crate::util::hash::FxHashMap;
 
 #[derive(Debug, Clone)]
 pub struct CachedRow {
-    pub data: Vec<f32>,
+    pub data: Arc<[f32]>,
     pub vclock: Clock,
     pub fresh: Clock,
     /// LRU tick of the last access.
@@ -27,7 +37,7 @@ pub struct CachedRow {
 /// Row cache with capacity-bounded approximate LRU.
 #[derive(Debug)]
 pub struct RowCache {
-    rows: HashMap<Key, CachedRow>,
+    rows: FxHashMap<Key, CachedRow>,
     capacity: usize,
     tick: u64,
     evictions: u64,
@@ -37,7 +47,7 @@ impl RowCache {
     /// `capacity` in rows (0 = unbounded).
     pub fn new(capacity: usize) -> Self {
         Self {
-            rows: HashMap::new(),
+            rows: FxHashMap::default(),
             capacity,
             tick: 0,
             evictions: 0,
@@ -75,7 +85,13 @@ impl RowCache {
     ///
     /// Replacement keeps the *newer* clock pair: an in-flight pull reply
     /// must not clobber a fresher pushed copy that arrived first.
-    pub fn insert(&mut self, key: Key, data: Vec<f32>, vclock: Clock, fresh: Clock) {
+    pub fn insert(
+        &mut self,
+        key: Key,
+        data: impl Into<Arc<[f32]>>,
+        vclock: Clock,
+        fresh: Clock,
+    ) {
         self.tick += 1;
         match self.rows.get_mut(&key) {
             Some(existing) if existing.vclock > vclock => {
@@ -89,7 +105,7 @@ impl RowCache {
         self.rows.insert(
             key,
             CachedRow {
-                data,
+                data: data.into(),
                 vclock,
                 fresh,
                 last_used: self.tick,
@@ -101,9 +117,16 @@ impl RowCache {
     }
 
     /// Apply a local delta to the cached copy (read-my-writes support).
+    /// Copies-on-write: a snapshot shared with an in-flight message or the
+    /// shard is detached before mutation.
     pub fn apply_delta(&mut self, key: &Key, delta: &[f32]) {
         if let Some(r) = self.rows.get_mut(key) {
-            for (a, d) in r.data.iter_mut().zip(delta) {
+            if Arc::get_mut(&mut r.data).is_none() {
+                let detached: Arc<[f32]> = r.data.iter().copied().collect();
+                r.data = detached;
+            }
+            let data = Arc::get_mut(&mut r.data).expect("unique after copy-on-write");
+            for (a, d) in data.iter_mut().zip(delta) {
                 *a += d;
             }
         }
@@ -139,11 +162,11 @@ impl RowCache {
     /// Replace a row's *contents* without touching its guaranteed clock
     /// (VAP eager waves: the data is fresher, but no new clock guarantee
     /// is implied). Inserts with no guarantee if the row is not cached.
-    pub fn force_data(&mut self, key: Key, data: Vec<f32>, fresh: Clock) {
+    pub fn force_data(&mut self, key: Key, data: impl Into<Arc<[f32]>>, fresh: Clock) {
         self.tick += 1;
         match self.rows.get_mut(&key) {
             Some(r) => {
-                r.data = data;
+                r.data = data.into();
                 r.fresh = r.fresh.max(fresh);
                 r.last_used = self.tick;
             }
@@ -178,9 +201,20 @@ mod tests {
         let mut c = RowCache::new(0);
         c.insert(k(1), vec![1.0, 2.0], 5, 7);
         let r = c.get(&k(1)).unwrap();
-        assert_eq!(r.data, vec![1.0, 2.0]);
+        assert_eq!(&r.data[..], &[1.0, 2.0]);
         assert_eq!((r.vclock, r.fresh), (5, 7));
         assert!(c.get(&k(2)).is_none());
+    }
+
+    #[test]
+    fn insert_shares_the_arc_zero_copy() {
+        let mut c = RowCache::new(0);
+        let payload: Arc<[f32]> = vec![1.0, 2.0].into();
+        c.insert(k(1), Arc::clone(&payload), 0, 0);
+        assert!(
+            Arc::ptr_eq(&payload, &c.peek(&k(1)).unwrap().data),
+            "insert must store the shared snapshot, not a deep copy"
+        );
     }
 
     #[test]
@@ -197,14 +231,42 @@ mod tests {
     }
 
     #[test]
+    fn eviction_counter_tracks_every_overflow() {
+        let mut c = RowCache::new(3);
+        for i in 0..10 {
+            c.insert(k(i), vec![i as f32], 0, 0);
+            assert!(c.len() <= 3, "capacity exceeded at insert {i}");
+        }
+        assert_eq!(c.evictions(), 7, "10 inserts into capacity 3");
+        // The three newest keys survive.
+        for i in 7..10 {
+            assert!(c.peek(&k(i)).is_some(), "recent key {i} evicted");
+        }
+    }
+
+    #[test]
     fn stale_arrival_does_not_clobber() {
+        // A pull reply that raced a fresher push must not replace it: the
+        // newer clock pair wins, and `fresh` merges monotonically.
         let mut c = RowCache::new(0);
         c.insert(k(1), vec![9.0], 10, 12);
         c.insert(k(1), vec![1.0], 4, 4); // late pull reply
         let r = c.peek(&k(1)).unwrap();
-        assert_eq!(r.data, vec![9.0]);
+        assert_eq!(&r.data[..], &[9.0]);
         assert_eq!(r.vclock, 10);
         assert_eq!(r.fresh, 12);
+    }
+
+    #[test]
+    fn stale_arrival_still_merges_fresh_forward() {
+        let mut c = RowCache::new(0);
+        c.insert(k(1), vec![9.0], 10, 10);
+        // Older guarantee but higher best-effort freshness: keep data and
+        // vclock, advance fresh.
+        c.insert(k(1), vec![1.0], 4, 15);
+        let r = c.peek(&k(1)).unwrap();
+        assert_eq!(&r.data[..], &[9.0]);
+        assert_eq!((r.vclock, r.fresh), (10, 15));
     }
 
     #[test]
@@ -213,7 +275,7 @@ mod tests {
         c.insert(k(1), vec![1.0], 4, 4);
         c.insert(k(1), vec![9.0], 10, 11);
         let r = c.peek(&k(1)).unwrap();
-        assert_eq!(r.data, vec![9.0]);
+        assert_eq!(&r.data[..], &[9.0]);
         assert_eq!((r.vclock, r.fresh), (10, 11));
     }
 
@@ -222,7 +284,18 @@ mod tests {
         let mut c = RowCache::new(0);
         c.insert(k(1), vec![1.0, 1.0], 0, 0);
         c.apply_delta(&k(1), &[0.5, -0.5]);
-        assert_eq!(c.peek(&k(1)).unwrap().data, vec![1.5, 0.5]);
+        assert_eq!(&c.peek(&k(1)).unwrap().data[..], &[1.5, 0.5]);
+    }
+
+    #[test]
+    fn apply_delta_detaches_shared_snapshot() {
+        let mut c = RowCache::new(0);
+        let shared: Arc<[f32]> = vec![1.0, 1.0].into();
+        c.insert(k(1), Arc::clone(&shared), 0, 0);
+        c.apply_delta(&k(1), &[1.0, 0.0]);
+        // The external holder's view is untouched (copy-on-write).
+        assert_eq!(&shared[..], &[1.0, 1.0]);
+        assert_eq!(&c.peek(&k(1)).unwrap().data[..], &[2.0, 1.0]);
     }
 
     #[test]

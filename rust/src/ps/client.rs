@@ -14,10 +14,17 @@
 //!   * VAP: reads additionally spin (draining the inbox, so acks keep
 //!     flowing) until the global in-transit value bound holds.
 //!
+//! Read paths, fastest first:
+//!   * [`PsClient::with_row`] — borrow the cached snapshot in place;
+//!     allocation-free on the hot path (a reusable scratch buffer is used
+//!     only when pending local writes must be overlaid).
+//!   * [`PsClient::get_into`] — copy into a caller-owned reusable buffer.
+//!   * [`PsClient::get`] — compat wrapper returning a fresh `Vec<f32>`.
+//!
 //! All blocked time is attributed to the communication side of the
 //! Fig. 1 (right) breakdown via `metrics::timeline`.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -32,6 +39,7 @@ use super::vap::VapTracker;
 use crate::metrics::staleness::StalenessHist;
 use crate::metrics::timeline::Timeline;
 use crate::sim::net::{NetHandle, NodeId, Packet};
+use crate::util::hash::{FxHashMap, FxHashSet};
 
 /// Client-side configuration.
 #[derive(Debug, Clone)]
@@ -81,17 +89,20 @@ pub struct PsClient {
     cache: RowCache,
     pending: UpdateMap,
     /// Row lengths per table (for sparse INC fill-in).
-    row_len: HashMap<TableId, usize>,
-    registered: HashSet<Key>,
-    pulls_in_flight: HashSet<Key>,
+    row_len: FxHashMap<TableId, usize>,
+    registered: FxHashSet<Key>,
+    pulls_in_flight: FxHashSet<Key>,
     /// Async mode: last clock at which a refresh pull was fired per key.
-    last_refresh: HashMap<Key, Clock>,
+    last_refresh: FxHashMap<Key, Clock>,
     /// Per shard: the latest wave vclock announced (ESSP). A cached row
     /// from shard s is guaranteed through max(row.vclock, announced[s]):
     /// delta waves carry every row dirtied since the previous wave, so a
     /// row absent from all waves up to T is certified unchanged through T.
     /// This makes wave processing O(rows in wave) instead of O(cache).
     shard_announced: Vec<Clock>,
+    /// Reusable overlay buffer for `with_row` (read-my-writes composition
+    /// without per-read allocation).
+    scratch: Vec<f32>,
     vap: Option<Arc<VapTracker>>,
     started: Instant,
     pub staleness: StalenessHist,
@@ -123,11 +134,12 @@ impl PsClient {
             inbox,
             cache: RowCache::new(cache_capacity),
             pending: UpdateMap::new(),
-            row_len,
-            registered: HashSet::new(),
-            pulls_in_flight: HashSet::new(),
-            last_refresh: HashMap::new(),
+            row_len: row_len.into_iter().collect(),
+            registered: FxHashSet::default(),
+            pulls_in_flight: FxHashSet::default(),
+            last_refresh: FxHashMap::default(),
             shard_announced: vec![super::types::NEVER; n_shards],
+            scratch: Vec::new(),
             vap,
             started,
             staleness: StalenessHist::new(),
@@ -162,7 +174,8 @@ impl PsClient {
         );
     }
 
-    /// Apply one inbound message to the cache.
+    /// Apply one inbound message to the cache. Pushed/pulled payloads are
+    /// stored as-is (`Arc` clone) — the fan-out path never deep-copies.
     fn apply(&mut self, msg: ToWorker) {
         match msg {
             ToWorker::Row {
@@ -261,9 +274,10 @@ impl PsClient {
         self.stats.vap_stall_ns += ns;
     }
 
-    /// GET: returns a copy of the row, enforcing the read condition of the
-    /// configured consistency model.
-    pub fn get(&mut self, key: Key) -> Vec<f32> {
+    /// Core of every read: enforce the read condition, then return the
+    /// cached snapshot (an `Arc` clone — no payload copy). The overlay of
+    /// this worker's pending writes is left to the public wrappers.
+    fn get_snapshot(&mut self, key: Key) -> Arc<[f32]> {
         self.stats.gets += 1;
         self.drain_inbox();
         self.vap_gate();
@@ -303,7 +317,7 @@ impl PsClient {
                     // BSP pins this at -1; SSP spreads it over the window;
                     // ESSP's eager waves concentrate it near -1.
                     let differential = vclock - self.clock;
-                    let mut data = row.data.clone();
+                    let data = Arc::clone(&row.data);
                     self.staleness.record(differential);
                     if !pulled {
                         self.stats.cache_hits += 1;
@@ -316,13 +330,6 @@ impl PsClient {
                             self.last_refresh.insert(key, self.clock);
                         }
                     }
-                    if self.cfg.read_my_writes {
-                        if let Some(delta) = self.pending.pending(&key) {
-                            for (a, d) in data.iter_mut().zip(delta) {
-                                *a += d;
-                            }
-                        }
-                    }
                     return data;
                 }
             }
@@ -332,6 +339,59 @@ impl PsClient {
             }
             pulled = true;
             self.wait_inbox(Duration::from_millis(100));
+        }
+    }
+
+    /// Fold this worker's pending (not yet flushed) deltas into `buf`
+    /// (read-my-writes), if enabled.
+    fn overlay_pending(&self, key: &Key, buf: &mut [f32]) {
+        if self.cfg.read_my_writes {
+            if let Some(delta) = self.pending.pending(key) {
+                for (a, d) in buf.iter_mut().zip(delta) {
+                    *a += d;
+                }
+            }
+        }
+    }
+
+    /// GET: returns a copy of the row, enforcing the read condition of the
+    /// configured consistency model. Compat wrapper over [`Self::get_into`]
+    /// — inner loops should prefer `get_into` / [`Self::with_row`], which
+    /// do not allocate per read.
+    pub fn get(&mut self, key: Key) -> Vec<f32> {
+        let data = self.get_snapshot(key);
+        let mut out = data.to_vec();
+        self.overlay_pending(&key, &mut out);
+        out
+    }
+
+    /// GET into a caller-owned buffer (cleared and refilled). The buffer's
+    /// allocation is reused across reads, so steady-state GETs perform no
+    /// heap allocation.
+    pub fn get_into(&mut self, key: Key, buf: &mut Vec<f32>) {
+        let data = self.get_snapshot(key);
+        buf.clear();
+        buf.extend_from_slice(&data);
+        self.overlay_pending(&key, buf);
+    }
+
+    /// GET without copying: runs `f` on the row snapshot in place. When
+    /// read-my-writes has pending local deltas for `key`, the overlay is
+    /// composed in a client-owned reusable scratch buffer; otherwise `f`
+    /// borrows the cached `Arc` payload directly (zero copies, zero
+    /// allocations).
+    pub fn with_row<R>(&mut self, key: Key, f: impl FnOnce(&[f32]) -> R) -> R {
+        let data = self.get_snapshot(key);
+        if self.cfg.read_my_writes && self.pending.pending(&key).is_some() {
+            let mut scratch = std::mem::take(&mut self.scratch);
+            scratch.clear();
+            scratch.extend_from_slice(&data);
+            self.overlay_pending(&key, &mut scratch);
+            let out = f(&scratch);
+            self.scratch = scratch;
+            out
+        } else {
+            f(&data)
         }
     }
 
@@ -366,18 +426,18 @@ impl PsClient {
 
     /// CLOCK: flush coalesced updates, commit the tick, advance the clock.
     pub fn tick(&mut self) {
-        let batch_norm = self.pending.inf_norm();
+        // The batch ∞-norm only matters to the VAP tracker: skip the work
+        // entirely for every other consistency model.
+        let batch_norm = if self.vap.is_some() {
+            self.pending.inf_norm()
+        } else {
+            0.0
+        };
         // Read-my-writes across the flush: fold the deltas into our cached
         // copies (the server copy will include them once applied; replacing
         // pushes/pulls overwrite, so nothing double-counts).
         if self.cfg.read_my_writes {
-            let keys: Vec<Key> = {
-                let mut ks = Vec::with_capacity(self.pending.len());
-                // drain below needs ownership; collect keys first
-                ks.extend(self.pending_keys());
-                ks
-            };
-            for key in keys {
+            for key in self.pending.keys() {
                 if let Some(delta) = self.pending.pending(&key) {
                     let delta = delta.to_vec();
                     self.cache.apply_delta(&key, &delta);
@@ -422,12 +482,6 @@ impl PsClient {
         self.clock += 1;
         self.timeline.finish_clock(self.clock_started.elapsed());
         self.clock_started = Instant::now();
-    }
-
-    fn pending_keys(&self) -> Vec<Key> {
-        // UpdateMap doesn't expose iteration; mirror via pending() probing
-        // is impossible — expose keys here through a small accessor.
-        self.pending.keys()
     }
 
     /// Pace the virtual clock: after finishing `done` of `total` work

@@ -202,19 +202,34 @@ impl Cluster {
 
         let net = SimNet::new(cfg.net.clone(), worker_tx, shard_tx.clone());
 
+        // Table row-length registry, shared with shards so a GET racing
+        // ahead of row materialization can be served zeros (variable-
+        // length tables are excluded: no uniform length to synthesize).
+        let mut row_len: HashMap<TableId, usize> = HashMap::new();
+        for spec in &self.tables {
+            if spec.row_len != usize::MAX {
+                row_len.insert(spec.table, spec.row_len);
+            }
+        }
+
         // Build + initialize shards. Clock-gated push waves are an ESSP
         // mechanism; VAP uses its own per-update eager waves instead.
         let clock_push = cfg.consistency.server_push() && vap.is_none();
         let mut shards: Vec<Shard> = (0..cfg.shards)
-            .map(|id| Shard::new(id, cfg.workers, clock_push, net.handle(), vap.clone()))
+            .map(|id| {
+                Shard::new(
+                    id,
+                    cfg.workers,
+                    clock_push,
+                    net.handle(),
+                    vap.clone(),
+                    row_len.clone(),
+                )
+            })
             .collect();
         let mut init_rng = Rng::with_stream(cfg.seed, 0x7ab1e);
-        let mut row_len: HashMap<TableId, usize> = HashMap::new();
         for spec in &self.tables {
             let variable = spec.row_len == usize::MAX;
-            if !variable {
-                row_len.insert(spec.table, spec.row_len);
-            }
             for r in 0..spec.rows {
                 let key = (spec.table, r);
                 let data = (spec.init)(r, &mut init_rng);
@@ -349,7 +364,7 @@ impl Cluster {
             let fin = dump_rx.recv().expect("shard final state");
             shard_stats[fin.id] = fin.stats;
             for (k, row) in fin.rows {
-                table_rows.insert(k, row.data);
+                table_rows.insert(k, row.data.to_vec());
             }
         }
         for h in shard_handles {

@@ -1,6 +1,17 @@
 //! Server shard: owns a partition of the rows, applies coalesced updates,
 //! tracks the table clock, answers pulls (SSP) and fires eager push waves
 //! (ESSP) — the server half of the paper's ESSPTable.
+//!
+//! Data-plane layout (zero-copy push):
+//!  * Row payloads are shared immutable snapshots (`Arc<[f32]>`). A push
+//!    wave addressed to P readers clones the `Arc` P times; the payload
+//!    itself is deep-copied exactly zero times. `on_update` copies-on-
+//!    write, so in-flight wave payloads are immutable.
+//!  * Registrations live in an inverted index `Key -> ReaderSet` (bitset
+//!    over workers), so `push_wave`/`vap_wave` cost O(dirty rows x
+//!    interested readers) — the wave size — instead of scanning every
+//!    worker's full registration list, and `Register` idempotency is a
+//!    single O(1) bit test.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
@@ -8,17 +19,61 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::msg::{PushRow, ToShard, ToWorker};
-use super::types::{Clock, Key, WorkerId};
+use super::types::{Clock, Key, TableId, WorkerId};
 use super::vap::VapTracker;
 use super::vclock::MinClock;
 use crate::sim::net::{NetHandle, NodeId, Packet};
+use crate::util::hash::{FxHashMap, FxHashSet};
 
-/// A stored row: payload plus best-effort freshness.
+/// A stored row: shared immutable payload plus best-effort freshness.
 #[derive(Debug, Clone)]
 pub struct Row {
-    pub data: Vec<f32>,
+    pub data: Arc<[f32]>,
     /// Max update clock reflected in `data` (NEVER if untouched).
     pub fresh: Clock,
+}
+
+/// The set of workers registered for eager pushes of one key: a fixed-
+/// width bitset over worker ids (P is known at shard construction).
+#[derive(Debug, Clone)]
+pub struct ReaderSet {
+    words: Vec<u64>,
+}
+
+impl ReaderSet {
+    fn for_workers(workers: usize) -> Self {
+        Self {
+            words: vec![0; (workers + 63) / 64],
+        }
+    }
+
+    /// Set worker `w`'s bit; returns true iff it was newly set (O(1)).
+    fn insert(&mut self, w: WorkerId) -> bool {
+        let (word, bit) = (w / 64, 1u64 << (w % 64));
+        let fresh = self.words[word] & bit == 0;
+        self.words[word] |= bit;
+        fresh
+    }
+
+    pub fn contains(&self, w: WorkerId) -> bool {
+        self.words[w / 64] & (1u64 << (w % 64)) != 0
+    }
+
+    /// Iterate set worker ids in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = WorkerId> + '_ {
+        self.words.iter().enumerate().flat_map(|(i, &w)| {
+            let base = i * 64;
+            let mut word = w;
+            std::iter::from_fn(move || {
+                if word == 0 {
+                    return None;
+                }
+                let t = word.trailing_zeros() as usize;
+                word &= word - 1;
+                Some(base + t)
+            })
+        })
+    }
 }
 
 /// Counters reported back to the harness at shutdown.
@@ -41,19 +96,27 @@ struct PendingGet {
 /// initialized) by the coordinator before launch.
 pub struct Shard {
     id: usize,
-    rows: HashMap<Key, Row>,
+    workers: usize,
+    rows: FxHashMap<Key, Row>,
     clocks: MinClock,
-    /// ESSP push lists: worker -> keys it registered (insertion-ordered
-    /// Vec — iteration order affects only message layout).
-    registered: Vec<Vec<Key>>,
+    /// ESSP/VAP inverted registration index: key -> registered readers.
+    readers: FxHashMap<Key, ReaderSet>,
+    /// Per-worker registered-key count (a worker with >= 1 registration
+    /// receives every wave, if only to learn the new table clock).
+    reg_count: Vec<usize>,
     /// Rows updated since the last push wave: waves carry only these (the
     /// paper's server "pushes out the [updated] table-rows"), which keeps
     /// wave size proportional to update traffic, not to the working set.
-    dirty: std::collections::HashSet<Key>,
+    dirty: FxHashSet<Key>,
     pending: Vec<PendingGet>,
     push_enabled: bool,
     net: NetHandle,
     vap: Option<Arc<VapTracker>>,
+    /// Uniform row length per table, for serving GETs of rows that no
+    /// update or init has materialized yet (replied as zeros).
+    row_len: HashMap<TableId, usize>,
+    /// Cached all-zeros payloads per table (shared, never mutated).
+    zero_rows: HashMap<TableId, Arc<[f32]>>,
     stats: ShardStats,
 }
 
@@ -64,17 +127,22 @@ impl Shard {
         push_enabled: bool,
         net: NetHandle,
         vap: Option<Arc<VapTracker>>,
+        row_len: HashMap<TableId, usize>,
     ) -> Self {
         Self {
             id,
-            rows: HashMap::new(),
+            workers,
+            rows: FxHashMap::default(),
             clocks: MinClock::new(workers),
-            registered: vec![Vec::new(); workers],
-            dirty: std::collections::HashSet::new(),
+            readers: FxHashMap::default(),
+            reg_count: vec![0; workers],
+            dirty: FxHashSet::default(),
             pending: Vec::new(),
             push_enabled,
             net,
             vap,
+            row_len,
+            zero_rows: HashMap::new(),
             stats: ShardStats::default(),
         }
     }
@@ -84,7 +152,7 @@ impl Shard {
         self.rows.insert(
             key,
             Row {
-                data,
+                data: data.into(),
                 fresh: super::types::NEVER,
             },
         );
@@ -132,8 +200,13 @@ impl Shard {
             } => self.on_update(worker, clock, rows),
             ToShard::ClockTick { worker, clock } => self.on_tick(worker, clock),
             ToShard::Register { key, worker } => {
-                if !self.registered[worker].contains(&key) {
-                    self.registered[worker].push(key);
+                let workers = self.workers;
+                let set = self
+                    .readers
+                    .entry(key)
+                    .or_insert_with(|| ReaderSet::for_workers(workers));
+                if set.insert(worker) {
+                    self.reg_count[worker] += 1;
                 }
             }
             // ESSP wave acks model ack traffic; nothing to track server-side.
@@ -148,17 +221,37 @@ impl Shard {
         true
     }
 
+    /// All-zeros payload for `table`, shared across replies.
+    fn zero_row(&mut self, table: TableId) -> Arc<[f32]> {
+        if let Some(z) = self.zero_rows.get(&table) {
+            return Arc::clone(z);
+        }
+        let len = *self.row_len.get(&table).unwrap_or_else(|| {
+            panic!(
+                "GET of uninitialized row in table {table} with unknown row \
+                 length on shard {}",
+                self.id
+            )
+        });
+        let z: Arc<[f32]> = vec![0.0f32; len].into();
+        self.zero_rows.insert(table, Arc::clone(&z));
+        z
+    }
+
     fn reply_row(&mut self, key: Key, worker: WorkerId) {
         let vclock = self.table_clock();
-        let row = self
-            .rows
-            .get(&key)
-            .unwrap_or_else(|| panic!("GET of uninitialized row {key:?} on shard {}", self.id));
+        // A GET may legitimately race ahead of row materialization (e.g.
+        // the row will first exist when some worker's update creates it):
+        // serve zeros of the table's row length rather than panicking.
+        let (data, fresh) = match self.rows.get(&key) {
+            Some(row) => (Arc::clone(&row.data), row.fresh),
+            None => (self.zero_row(key.0), super::types::NEVER),
+        };
         let msg = ToWorker::Row {
             key,
-            data: row.data.clone(),
+            data,
             vclock,
-            fresh: row.fresh.max(vclock),
+            fresh: fresh.max(vclock),
         };
         self.stats.gets_served += 1;
         self.net
@@ -187,11 +280,18 @@ impl Shard {
                 self.dirty.insert(key);
             }
             let row = self.rows.entry(key).or_insert_with(|| Row {
-                data: vec![0.0; delta.len()],
+                data: vec![0.0; delta.len()].into(),
                 fresh: super::types::NEVER,
             });
             debug_assert_eq!(row.data.len(), delta.len(), "row length mismatch {key:?}");
-            for (a, d) in row.data.iter_mut().zip(&delta) {
+            // Copy-on-write: mutate in place while we hold the only
+            // reference; otherwise detach from the (in-flight) snapshot.
+            if Arc::get_mut(&mut row.data).is_none() {
+                let detached: Arc<[f32]> = row.data.iter().copied().collect();
+                row.data = detached;
+            }
+            let data = Arc::get_mut(&mut row.data).expect("unique after copy-on-write");
+            for (a, d) in data.iter_mut().zip(&delta) {
                 *a += d;
             }
             row.fresh = row.fresh.max(clock);
@@ -209,28 +309,29 @@ impl Shard {
     /// faithfully so the cost can be measured (vap-compare experiment).
     fn vap_wave(&mut self, source: WorkerId, clock: Clock, touched: &[Key]) {
         let vap = self.vap.as_ref().unwrap().clone();
-        let mut awaiting = std::collections::HashSet::new();
-        let mut per_worker_rows: Vec<Vec<PushRow>> =
-            (0..self.registered.len()).map(|_| Vec::new()).collect();
-        for (w, regs) in self.registered.iter().enumerate() {
-            if w == source {
-                continue; // the writer reads-its-own-writes locally
-            }
-            for key in touched {
-                if regs.contains(key) {
-                    if let Some(row) = self.rows.get(key) {
-                        per_worker_rows[w].push(PushRow {
-                            key: *key,
-                            data: row.data.clone(),
-                            fresh: row.fresh,
-                        });
-                    }
+        let mut per_worker_rows: Vec<Vec<PushRow>> = Vec::new();
+        per_worker_rows.resize_with(self.workers, Vec::new);
+        for key in touched {
+            let Some(readers) = self.readers.get(key) else {
+                continue;
+            };
+            let Some(row) = self.rows.get(key) else {
+                continue;
+            };
+            for w in readers.iter() {
+                if w == source {
+                    continue; // the writer reads-its-own-writes locally
                 }
-            }
-            if !per_worker_rows[w].is_empty() {
-                awaiting.insert(w);
+                per_worker_rows[w].push(PushRow {
+                    key: *key,
+                    data: Arc::clone(&row.data),
+                    fresh: row.fresh,
+                });
             }
         }
+        let awaiting: std::collections::HashSet<WorkerId> = (0..self.workers)
+            .filter(|&w| !per_worker_rows[w].is_empty())
+            .collect();
         let seq = vap.assign_wave((source, clock), awaiting.clone());
         for w in awaiting {
             let rows = std::mem::take(&mut per_worker_rows[w]);
@@ -270,22 +371,32 @@ impl Shard {
 
     /// ESSP: push the registered rows *updated since the last wave* to
     /// each registered client, batched per client into one wave message.
+    /// Cost is O(dirty rows x interested readers) — the total wave size —
+    /// thanks to the inverted index; payloads are `Arc`-shared, so a wave
+    /// to P readers performs zero payload deep-copies.
     fn push_wave(&mut self, vclock: Clock) {
-        for worker in 0..self.registered.len() {
-            if self.registered[worker].is_empty() {
+        let mut per_worker: Vec<Vec<PushRow>> = Vec::new();
+        per_worker.resize_with(self.workers, Vec::new);
+        for key in self.dirty.drain() {
+            let Some(readers) = self.readers.get(&key) else {
+                continue;
+            };
+            let Some(row) = self.rows.get(&key) else {
+                continue;
+            };
+            let fresh = row.fresh.max(vclock);
+            for w in readers.iter() {
+                per_worker[w].push(PushRow {
+                    key,
+                    data: Arc::clone(&row.data),
+                    fresh,
+                });
+            }
+        }
+        for (worker, rows) in per_worker.into_iter().enumerate() {
+            if self.reg_count[worker] == 0 {
                 continue;
             }
-            let rows: Vec<PushRow> = self.registered[worker]
-                .iter()
-                .filter(|key| self.dirty.contains(*key))
-                .filter_map(|key| {
-                    self.rows.get(key).map(|row| PushRow {
-                        key: *key,
-                        data: row.data.clone(),
-                        fresh: row.fresh.max(vclock),
-                    })
-                })
-                .collect();
             // Empty waves still announce the new table clock so clients
             // can advance their copies' guarantees without re-pulling.
             self.stats.rows_pushed += rows.len() as u64;
@@ -300,14 +411,13 @@ impl Shard {
                 }),
             );
         }
-        self.dirty.clear();
     }
 }
 
 /// Final shard state returned to the harness at shutdown.
 pub struct ShardFinal {
     pub id: usize,
-    pub rows: HashMap<Key, Row>,
+    pub rows: FxHashMap<Key, Row>,
     pub stats: ShardStats,
 }
 
@@ -330,14 +440,30 @@ mod tests {
     use std::sync::mpsc::channel;
     use std::time::Duration;
 
-    /// Single-shard fixture with an instant network and one worker inbox.
+    /// Fixture with an instant network and one inbox per worker.
+    fn fixture_n(
+        workers: usize,
+        push: bool,
+        row_len: HashMap<TableId, usize>,
+    ) -> (Shard, Vec<std::sync::mpsc::Receiver<ToWorker>>, SimNet) {
+        let mut wtxs = Vec::new();
+        let mut wrxs = Vec::new();
+        for _ in 0..workers {
+            let (wtx, wrx) = channel();
+            wtxs.push(wtx);
+            wrxs.push(wrx);
+        }
+        let (stx, _srx) = channel();
+        let net = SimNet::new(NetConfig::instant(), wtxs, vec![stx]);
+        let shard = Shard::new(0, workers, push, net.handle(), None, row_len);
+        (shard, wrxs, net)
+    }
+
+    /// Single-worker fixture (the common case in these tests).
     fn fixture(workers: usize, push: bool) -> (Shard, std::sync::mpsc::Receiver<ToWorker>, SimNet)
     {
-        let (wtx, wrx) = channel();
-        let (stx, _srx) = channel();
-        let net = SimNet::new(NetConfig::instant(), vec![wtx], vec![stx]);
-        let shard = Shard::new(0, workers, push, net.handle(), None);
-        (shard, wrx, net)
+        let (shard, mut wrxs, net) = fixture_n(workers, push, HashMap::new());
+        (shard, wrxs.remove(0), net)
     }
 
     #[test]
@@ -352,11 +478,54 @@ mod tests {
         });
         match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
             ToWorker::Row { data, vclock, .. } => {
-                assert_eq!(data, vec![1.0, 2.0]);
+                assert_eq!(&data[..], &[1.0, 2.0]);
                 assert_eq!(vclock, -1);
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn get_of_unmaterialized_row_serves_zeros() {
+        // A GET can race ahead of any update/init materializing the row
+        // (regression: this used to panic the shard thread). The reply
+        // must be zeros of the table's registered row length, fresh NEVER.
+        let mut row_len = HashMap::new();
+        row_len.insert(0u32, 3usize);
+        let (mut shard, wrxs, _net) = fixture_n(1, false, row_len);
+        shard.handle(ToShard::Get {
+            key: (0, 99),
+            worker: 0,
+            min_vclock: -1,
+        });
+        match wrxs[0].recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Row { data, fresh, .. } => {
+                assert_eq!(&data[..], &[0.0, 0.0, 0.0]);
+                assert_eq!(fresh, -1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The shard must not have materialized the row server-side.
+        assert!(shard.row(&(0, 99)).is_none());
+        // A later update to that row starts from zeros, consistently.
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 99), vec![1.0, 2.0, 3.0])],
+        });
+        assert_eq!(&shard.row(&(0, 99)).unwrap().data[..], &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown row length")]
+    fn get_of_unknown_table_still_panics() {
+        // No row and no row-length registry entry: nothing sane to serve.
+        let (mut shard, _wrx, _net) = fixture(1, false);
+        shard.handle(ToShard::Get {
+            key: (7, 0),
+            worker: 0,
+            min_vclock: -1,
+        });
     }
 
     #[test]
@@ -393,7 +562,7 @@ mod tests {
             rows: vec![((0, 1), vec![0.5, 0.0])],
         });
         let row = shard.row(&(0, 1)).unwrap();
-        assert_eq!(row.data, vec![2.0, 0.0]);
+        assert_eq!(&row.data[..], &[2.0, 0.0]);
         assert_eq!(row.fresh, 1);
     }
 
@@ -417,7 +586,7 @@ mod tests {
                 assert_eq!(vclock, 0);
                 assert_eq!(rows.len(), 1);
                 assert_eq!(rows[0].key, (0, 1));
-                assert_eq!(rows[0].data, vec![8.0]);
+                assert_eq!(&rows[0].data[..], &[8.0]);
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -431,6 +600,74 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn push_wave_payloads_are_shared_not_copied() {
+        // A wave addressed to P readers must carry the *same* allocation
+        // the shard stores — Arc clones, zero payload deep-copies.
+        let p = 3;
+        let (mut shard, wrxs, _net) = fixture_n(p, true, HashMap::new());
+        shard.init_row((0, 1), vec![0.0, 0.0]);
+        for w in 0..p {
+            shard.handle(ToShard::Register { key: (0, 1), worker: w });
+        }
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![1.0, 2.0])],
+        });
+        for w in 0..p {
+            shard.handle(ToShard::ClockTick { worker: w, clock: 0 });
+        }
+        let stored = Arc::clone(&shard.row(&(0, 1)).unwrap().data);
+        let mut received = Vec::new();
+        for wrx in &wrxs {
+            match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+                ToWorker::Push { rows, .. } => {
+                    assert_eq!(rows.len(), 1);
+                    received.push(Arc::clone(&rows[0].data));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        for arc in &received {
+            assert!(
+                Arc::ptr_eq(arc, &stored),
+                "push wave deep-copied the payload"
+            );
+        }
+        // Refcount: shard's copy + our `stored` + P in-wave clones.
+        assert_eq!(Arc::strong_count(&stored), 2 + p);
+    }
+
+    #[test]
+    fn update_after_push_copies_on_write() {
+        // While a pushed snapshot is still referenced (in flight / cached
+        // by a reader), applying an update must detach, not mutate it.
+        let (mut shard, wrx, _net) = fixture(1, true);
+        shard.init_row((0, 1), vec![0.0]);
+        shard.handle(ToShard::Register { key: (0, 1), worker: 0 });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![1.0])],
+        });
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        let pushed = match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Push { mut rows, .. } => rows.remove(0).data,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(&pushed[..], &[1.0]);
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 1,
+            rows: vec![((0, 1), vec![1.0])],
+        });
+        // The held snapshot is unchanged; the stored row advanced.
+        assert_eq!(&pushed[..], &[1.0]);
+        assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[2.0]);
+        assert!(!Arc::ptr_eq(&pushed, &shard.row(&(0, 1)).unwrap().data));
     }
 
     #[test]
@@ -449,6 +686,7 @@ mod tests {
         for _ in 0..3 {
             shard.handle(ToShard::Register { key: (0, 1), worker: 0 });
         }
+        assert_eq!(shard.reg_count[0], 1, "re-registration must not recount");
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
@@ -462,6 +700,17 @@ mod tests {
     }
 
     #[test]
+    fn reader_set_bitset_semantics() {
+        let mut s = ReaderSet::for_workers(130);
+        assert!(s.insert(0));
+        assert!(s.insert(64));
+        assert!(s.insert(129));
+        assert!(!s.insert(64), "second insert reports already-present");
+        assert!(s.contains(129) && !s.contains(1));
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 64, 129]);
+    }
+
+    #[test]
     fn shutdown_returns_final_state() {
         let (mut shard, _wrx, _net) = fixture(1, false);
         shard.init_row((0, 1), vec![3.0]);
@@ -471,6 +720,6 @@ mod tests {
             rows: vec![((0, 1), vec![1.0])],
         });
         assert!(!shard.handle(ToShard::Shutdown));
-        assert_eq!(shard.row(&(0, 1)).unwrap().data, vec![4.0]);
+        assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[4.0]);
     }
 }

@@ -6,21 +6,40 @@
 //! the main message-count reduction in the system (benchmarked in
 //! `benches/ps_throughput.rs`).
 
-use std::collections::HashMap;
-
 use super::types::{row_wire_bytes, Key};
+use crate::util::hash::FxHashMap;
 
 /// Coalesced pending updates for one clock tick.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct UpdateMap {
-    rows: HashMap<Key, Vec<f32>>,
+    rows: FxHashMap<Key, Vec<f32>>,
     /// Number of raw INC calls folded in (for coalescing-ratio metrics).
     raw_incs: u64,
+    /// Running max |element| over all pending rows, maintained by
+    /// `inc`/`inc_sparse`. Exact while `norm_exact`; an element that held
+    /// the max and then shrank (sign cancellation) flips `norm_exact`, and
+    /// the next `inf_norm()` call falls back to a rescan. This keeps
+    /// `inf_norm()` O(1) on the common SGD path (each element written once
+    /// per clock, magnitudes grow monotonically within a batch) instead of
+    /// rescanning every pending element on every `tick()`.
+    max_abs: f32,
+    norm_exact: bool,
+}
+
+impl Default for UpdateMap {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl UpdateMap {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            rows: FxHashMap::default(),
+            raw_incs: 0,
+            max_abs: 0.0,
+            norm_exact: true,
+        }
     }
 
     /// Fold one INC into the pending delta for `key`.
@@ -29,11 +48,28 @@ impl UpdateMap {
         match self.rows.get_mut(&key) {
             Some(acc) => {
                 debug_assert_eq!(acc.len(), delta.len(), "row length mismatch on {key:?}");
+                let mut max_abs = self.max_abs;
+                let mut exact = self.norm_exact;
                 for (a, d) in acc.iter_mut().zip(delta) {
+                    let old = *a;
                     *a += d;
+                    let new_abs = a.abs();
+                    if new_abs >= max_abs {
+                        max_abs = new_abs;
+                    } else if old.abs() >= max_abs {
+                        exact = false;
+                    }
                 }
+                self.max_abs = max_abs;
+                self.norm_exact = exact;
             }
             None => {
+                for d in delta {
+                    let a = d.abs();
+                    if a > self.max_abs {
+                        self.max_abs = a;
+                    }
+                }
                 self.rows.insert(key, delta.to_vec());
             }
         }
@@ -44,9 +80,20 @@ impl UpdateMap {
     pub fn inc_sparse(&mut self, key: Key, row_len: usize, pairs: &[(usize, f32)]) {
         self.raw_incs += 1;
         let acc = self.rows.entry(key).or_insert_with(|| vec![0.0; row_len]);
+        let mut max_abs = self.max_abs;
+        let mut exact = self.norm_exact;
         for &(i, v) in pairs {
+            let old = acc[i];
             acc[i] += v;
+            let new_abs = acc[i].abs();
+            if new_abs >= max_abs {
+                max_abs = new_abs;
+            } else if old.abs() >= max_abs {
+                exact = false;
+            }
         }
+        self.max_abs = max_abs;
+        self.norm_exact = exact;
     }
 
     pub fn is_empty(&self) -> bool {
@@ -73,7 +120,18 @@ impl UpdateMap {
 
     /// Max |delta| over all pending rows — the VAP in-transit magnitude
     /// contribution of this batch (∞-norm of the aggregated update).
+    /// O(1) while the incrementally-tracked max is exact (the common
+    /// case); falls back to a rescan only after sign cancellation shrank
+    /// a maximal element.
     pub fn inf_norm(&self) -> f32 {
+        if self.norm_exact {
+            return self.max_abs;
+        }
+        self.rescan_inf_norm()
+    }
+
+    /// Ground-truth ∞-norm by full rescan (test oracle + fallback).
+    pub fn rescan_inf_norm(&self) -> f32 {
         self.rows
             .values()
             .flat_map(|v| v.iter())
@@ -92,6 +150,8 @@ impl UpdateMap {
             out[route(&key)].push((key, delta));
         }
         self.raw_incs = 0;
+        self.max_abs = 0.0;
+        self.norm_exact = true;
         out
     }
 
@@ -135,6 +195,42 @@ mod tests {
     }
 
     #[test]
+    fn inf_norm_tracks_cancellation_exactly() {
+        // +5 then -5 on the max element: the incremental max must not
+        // report the stale peak — it falls back to a rescan and matches.
+        let mut m = UpdateMap::new();
+        m.inc(K, &[5.0, 1.0]);
+        assert_eq!(m.inf_norm(), 5.0);
+        m.inc(K, &[-5.0, 0.0]);
+        assert_eq!(m.inf_norm(), 1.0);
+        assert_eq!(m.inf_norm(), m.rescan_inf_norm());
+    }
+
+    #[test]
+    fn inf_norm_matches_rescan_under_random_churn() {
+        // Property check: whatever mix of dense/sparse, positive/negative
+        // INCs, the O(1)-path answer always equals the ground truth.
+        let mut rng = crate::util::rng::Rng::new(31);
+        for _case in 0..20 {
+            let mut m = UpdateMap::new();
+            for _ in 0..200 {
+                let key = (0, rng.below(8));
+                if rng.f64() < 0.5 {
+                    let d: Vec<f32> = (0..4).map(|_| rng.normal_f32() * 2.0).collect();
+                    m.inc(key, &d);
+                } else {
+                    let idx = rng.usize_below(4);
+                    m.inc_sparse(key, 4, &[(idx, rng.normal_f32() * 3.0)]);
+                }
+                assert_eq!(m.inf_norm(), m.rescan_inf_norm());
+            }
+            // Reset on drain.
+            let _ = m.drain_routed(2, |k| (k.1 % 2) as usize);
+            assert_eq!(m.inf_norm(), 0.0);
+        }
+    }
+
+    #[test]
     fn drain_routes_and_resets() {
         let mut m = UpdateMap::new();
         m.inc((0, 0), &[1.0]);
@@ -145,6 +241,7 @@ mod tests {
         assert_eq!(routed[1].len(), 1); // row 1
         assert!(m.is_empty());
         assert_eq!(m.raw_incs(), 0);
+        assert_eq!(m.inf_norm(), 0.0);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! what the pure-throughput benches use.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -24,6 +24,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::ps::msg::{ToShard, ToWorker};
+use crate::util::hash::FxHashMap;
 use crate::util::rng::Rng;
 
 /// A network endpoint.
@@ -255,11 +256,13 @@ fn route_loop(
     let mut rng = Rng::with_stream(cfg.seed, 0x6e65747e); // "net~"
     let mut heap: BinaryHeap<Reverse<Scheduled>> = BinaryHeap::new();
     // Per-link: when the link is next free (bandwidth serialization + FIFO).
-    let mut link_free: HashMap<(NodeId, NodeId), Instant> = HashMap::new();
+    // Fx-hashed: these maps are touched once per message on the router's
+    // hot loop.
+    let mut link_free: FxHashMap<(NodeId, NodeId), Instant> = FxHashMap::default();
     // Per-link: latest scheduled delivery, to keep delivery FIFO (TCP-like)
     // even though jitter varies per message. The PS protocol depends on
     // Update-before-ClockTick ordering within a (worker, shard) link.
-    let mut link_last: HashMap<(NodeId, NodeId), Instant> = HashMap::new();
+    let mut link_last: FxHashMap<(NodeId, NodeId), Instant> = FxHashMap::default();
     let mut seq = 0u64;
     let mut closed = false;
 
@@ -369,6 +372,38 @@ mod tests {
         // Delivery must be FIFO per link even with jitter (the PS protocol
         // depends on Update-before-ClockTick ordering).
         assert_eq!(got, (0..20).collect::<Vec<_>>());
+        net.shutdown();
+    }
+
+    #[test]
+    fn fifo_per_link_with_interleaved_senders() {
+        // Two source links into one shard, interleaved sends under jitter
+        // + bandwidth: delivery must stay FIFO *within* each link even
+        // though the links race each other.
+        let (stx, srx) = channel();
+        let cfg = NetConfig {
+            latency: Duration::from_millis(2),
+            jitter: Duration::from_millis(4),
+            bandwidth: 5e6,
+            seed: 11,
+        };
+        let net = SimNet::new(cfg, vec![], vec![stx]);
+        for c in 0..15 {
+            net.handle()
+                .send(NodeId::Worker(0), NodeId::Shard(0), tick(0, c));
+            net.handle()
+                .send(NodeId::Worker(1), NodeId::Shard(0), tick(1, c));
+        }
+        let mut per_worker: [Vec<i64>; 2] = [Vec::new(), Vec::new()];
+        for _ in 0..30 {
+            match srx.recv_timeout(Duration::from_secs(2)).unwrap() {
+                ToShard::ClockTick { worker, clock } => per_worker[worker].push(clock),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        for (w, got) in per_worker.iter().enumerate() {
+            assert_eq!(got, &(0..15).collect::<Vec<_>>(), "link {w} reordered");
+        }
         net.shutdown();
     }
 

@@ -7,8 +7,6 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use thiserror::Error;
-
 /// A parsed JSON value. Object keys are ordered (BTreeMap) so output and
 /// tests are deterministic.
 #[derive(Debug, Clone, PartialEq)]
@@ -21,23 +19,36 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, Error)]
+/// Parse / access errors. Display and `std::error::Error` are implemented
+/// by hand (no `thiserror` in the offline build).
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character {0:?} at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape at byte {0}")]
     BadEscape(usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
-    #[error("expected {0} but found {1}")]
     Type(&'static str, &'static str),
-    #[error("missing key {0:?}")]
     MissingKey(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof(i) => write!(f, "unexpected end of input at byte {i}"),
+            JsonError::Unexpected(c, i) => {
+                write!(f, "unexpected character {c:?} at byte {i}")
+            }
+            JsonError::BadNumber(i) => write!(f, "invalid number at byte {i}"),
+            JsonError::BadEscape(i) => write!(f, "invalid escape at byte {i}"),
+            JsonError::Trailing(i) => write!(f, "trailing garbage at byte {i}"),
+            JsonError::Type(want, got) => write!(f, "expected {want} but found {got}"),
+            JsonError::MissingKey(k) => write!(f, "missing key {k:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {

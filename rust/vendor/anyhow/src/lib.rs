@@ -1,0 +1,197 @@
+//! Offline drop-in subset of the `anyhow` error-handling API.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface `essptable` uses: `Error`, `Result<T>`,
+//! the `anyhow!` / `bail!` / `ensure!` macros, and the `Context` extension
+//! trait for `Result` and `Option`. Errors are message chains: wrapping
+//! with context prepends `"{context}: "` segments, and the alternate
+//! formatter (`{:#}`) prints the full chain, matching how the real crate
+//! is used in this codebase.
+
+use std::fmt::{self, Debug, Display};
+
+/// A boxed, context-augmentable error message chain.
+pub struct Error {
+    /// Outermost context first; the root cause is the last element.
+    chain: Vec<String>,
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message (the real crate's
+    /// `Error::msg`).
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a context layer.
+    pub fn context<C: Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (without the cause chain).
+    pub fn to_string_outer(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, outermost first — "ctx: ctx: cause".
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror anyhow's Debug: message plus a Caused by list.
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts via `?` (the real crate's blanket From). The
+// source chain is flattened into the message chain.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: Display>(self, context: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_and_alternate_prints_all() {
+        let e: Result<()> = Err(io_err());
+        let e = e.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Err(anyhow!("always fails with {}", x))
+        }
+        assert!(format!("{}", f(-1).unwrap_err()).contains("negative"));
+        assert!(format!("{}", f(200).unwrap_err()).contains("too big"));
+        assert!(format!("{}", f(5).unwrap_err()).contains("always fails with 5"));
+    }
+}

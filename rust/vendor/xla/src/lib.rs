@@ -1,0 +1,196 @@
+//! API-compatible stub of the XLA/PJRT bindings used by
+//! `essptable::runtime::engine`.
+//!
+//! The build environment has no crates.io access and no PJRT shared
+//! library, so this vendored crate mirrors the exact type/method surface
+//! the engine compiles against. `PjRtClient::cpu()` — the entry point to
+//! every execution path — returns an error, which the engine and the
+//! integration tests already treat as "runtime unavailable, skip" (the
+//! same behavior as a checkout without `make artifacts`). Swapping in the
+//! real bindings is a one-line Cargo change; no engine code needs to
+//! differ.
+
+use std::fmt;
+
+/// Error type: the engine only ever Display-formats these.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "XLA/PJRT runtime not available in this build (vendored stub)".to_string(),
+    ))
+}
+
+/// Element types an engine literal can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for f64 {}
+
+/// Scalar element type of an array shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum PrimitiveType {
+    F32,
+    F64,
+    S32,
+    S64,
+    U32,
+    Pred,
+}
+
+/// Dims + element type of an array.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+}
+
+/// Shape of a literal: array or tuple.
+#[derive(Debug, Clone)]
+#[non_exhaustive]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// A host-side literal (tensor value). The stub records only the payload
+/// size — no execution path can ever consume the data.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    len_bytes: usize,
+    shape: Option<Shape>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            len_bytes: std::mem::size_of_val(data),
+            shape: None,
+        }
+    }
+
+    /// Reshape to `dims` (stub: carries the request through).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        match &self.shape {
+            Some(s) => Ok(s.clone()),
+            None => unavailable(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    /// Payload size (stub introspection; unused by the engine).
+    pub fn size_bytes(&self) -> usize {
+        self.len_bytes
+    }
+}
+
+/// Parsed HLO module (stub: retains nothing).
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute with one replica/partition; `[replica][output]` buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle. The stub's `cpu()` always fails — callers treat
+/// that as "runtime unavailable" and skip, matching a checkout without
+/// the native PJRT library.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn vec1_roundtrips_byte_length() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert_eq!(l.size_bytes(), 12);
+        assert!(l.shape().is_err());
+    }
+}

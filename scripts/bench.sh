@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Run the PS throughput benchmark and record results in
+# BENCH_ps_throughput.json at the repo root.
+#
+# The bench binary itself performs the JSON bookkeeping: the fresh run is
+# written as "current", the oldest recorded run is preserved as
+# "baseline" (the first run seeds it), and per-benchmark
+# speedup_vs_baseline ratios are computed. Running this script once
+# before and once after a perf change therefore records both numbers —
+# the cross-PR perf ratchet.
+#
+# Usage: scripts/bench.sh
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+export ESSPTABLE_BENCH_JSON="$ROOT/BENCH_ps_throughput.json"
+
+cd "$ROOT"
+cargo bench --bench ps_throughput
+
+echo
+echo "recorded -> $ESSPTABLE_BENCH_JSON"
