@@ -23,6 +23,7 @@ fn opts() -> ExpOpts {
         out_dir: PathBuf::from("results/bench"),
         straggler: StragglerModel::RandomUniform { max_factor: 2.0 },
         lan: true,
+        transport: Default::default(),
         virtual_clock_ms: 20,
     }
 }

@@ -19,6 +19,7 @@ use essptable::ps::server::{Cluster, ClusterConfig, PsApp, TableSpec};
 use essptable::ps::types::Clock;
 use essptable::ps::update::UpdateMap;
 use essptable::sim::net::NetConfig;
+use essptable::transport::TransportSel;
 use essptable::util::benchkit::bench;
 use essptable::util::json::Json;
 
@@ -96,6 +97,48 @@ fn bench_get_inc_clock(
     r.print_throughput(ops, "get+inc");
     out.push((
         format!("e2e_{}_x{workers}w_{variant}", consistency.label()),
+        r.mean.as_secs_f64(),
+        r.throughput(ops),
+    ));
+}
+
+/// The same GET/INC/CLOCK workload over the real loopback-TCP data plane
+/// (`tcp_loopback` series): what wire encoding + two socket hops cost per
+/// operation, directly comparable to the in-process `e2e_*` numbers.
+fn bench_get_inc_clock_tcp(consistency: Consistency, workers: usize, out: &mut Vec<Entry>) {
+    let label = format!(
+        "e2e {} x{workers}w get_into tcp_loopback: 64 rd+inc/clock, 200 clocks",
+        consistency.label()
+    );
+    let r = bench(&label, 1, 3, || {
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers,
+            shards: 2,
+            consistency,
+            net: NetConfig::instant(),
+            transport: TransportSel::Tcp,
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 256, 32));
+        let apps: Vec<Box<dyn PsApp>> = (0..workers)
+            .map(|w| {
+                let mut buf: Vec<f32> = Vec::new();
+                Box::new(move |ps: &mut PsClient, _c: Clock| {
+                    for i in 0..64u64 {
+                        let key = (0, (w as u64 * 64 + i) % 256);
+                        ps.get_into(key, &mut buf);
+                        ps.inc(key, &[0.001f32; 32]);
+                    }
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let _ = cluster.run(apps, 200);
+    });
+    let ops = (workers * 64 * 200) as f64;
+    r.print_throughput(ops, "get+inc");
+    out.push((
+        format!("e2e_{}_x{workers}w_get_into_tcp_loopback", consistency.label()),
         r.mean.as_secs_f64(),
         r.throughput(ops),
     ));
@@ -272,6 +315,9 @@ fn main() {
     }
     // The alloc-free read path on the headline ESSP config.
     bench_get_inc_clock(Consistency::Essp { s: 3 }, 4, true, &mut entries);
+    // The same workload over real loopback TCP (codec + socket cost).
+    bench_get_inc_clock_tcp(Consistency::Bsp, 4, &mut entries);
+    bench_get_inc_clock_tcp(Consistency::Essp { s: 3 }, 4, &mut entries);
     bench_push_vs_pull_traffic();
     write_json(&entries);
 }

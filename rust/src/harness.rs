@@ -22,6 +22,7 @@ use crate::ps::consistency::Consistency;
 use crate::ps::server::{ClusterConfig, RunReport};
 use crate::sim::net::NetConfig;
 use crate::sim::straggler::StragglerModel;
+use crate::transport::TransportSel;
 
 /// Common experiment options (from the CLI).
 #[derive(Debug, Clone)]
@@ -35,6 +36,9 @@ pub struct ExpOpts {
     pub straggler: StragglerModel,
     /// Network profile ("lan" with delays, or "instant").
     pub lan: bool,
+    /// Data plane: the simulated router or real loopback TCP (over TCP
+    /// the modeled lan delays do not apply — the sockets are the network).
+    pub transport: TransportSel,
     /// Virtual per-clock compute duration (ms); 0 = raw speed. The paper's
     /// regime — long uniform compute per clock — needs this on a
     /// timeshared testbed (see ClusterConfig::virtual_clock).
@@ -51,6 +55,7 @@ impl Default for ExpOpts {
             out_dir: PathBuf::from("results"),
             straggler: StragglerModel::RandomUniform { max_factor: 3.0 },
             lan: true,
+            transport: TransportSel::Sim,
             virtual_clock_ms: 25,
         }
     }
@@ -72,6 +77,8 @@ impl ExpOpts {
             read_my_writes: true,
             virtual_clock: (self.virtual_clock_ms > 0)
                 .then(|| Duration::from_millis(self.virtual_clock_ms)),
+            transport: self.transport,
+            deterministic: false,
             seed: self.seed,
         }
     }

@@ -5,6 +5,9 @@
 //! Layering (see DESIGN.md):
 //! * [`ps`] — the parameter server: GET/INC/CLOCK client, sharded server,
 //!   consistency models (BSP / SSP / ESSP / Async / VAP).
+//! * [`transport`] — the data plane: binary wire codec plus two backends,
+//!   the in-process simulated network and a real TCP transport for
+//!   multi-process clusters.
 //! * [`sim`] — the simulated cluster substrate (network, stragglers).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX+Pallas
 //!   artifacts (`artifacts/*.hlo.txt`).
@@ -27,6 +30,8 @@ pub mod sim {
     pub mod priority;
     pub mod straggler;
 }
+
+pub mod transport;
 
 pub mod ps {
     pub mod cache;

@@ -9,28 +9,46 @@
 //!   robustness                  — §Robustness: step-size x staleness grid
 //!   vap-compare                 — §VAP: stall cost vs ESSP
 //!   artifacts                   — list AOT artifacts and their specs
+//!   serve-shard                 — host one PS shard as a TCP server process
+//!   run-worker                  — run one worker process against a cluster
+//!   run-cluster                 — spawn shards + workers as OS processes
 //!
 //! Common flags: --workers N --shards N --clocks N --seed N
 //!   --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0
 //!   --straggler none|uniform:F|fixed:W,..xF|spikes:P,F|rotating:PxF
-//!   --net lan|instant --out results/
+//!   --net lan|instant --transport sim|tcp --out results/
 
-use std::path::PathBuf;
-use std::process::ExitCode;
+use std::collections::HashMap;
+use std::net::ToSocketAddrs;
+use std::path::{Path, PathBuf};
+use std::process::{Command, ExitCode};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context};
 
 use essptable::apps::lda::gibbs::run_lda;
 use essptable::apps::lda::LdaConfig;
 use essptable::apps::lm::{run_lm, LmTrainConfig};
-use essptable::apps::logreg::{run_logreg, LogRegConfig};
+use essptable::apps::logreg::{run_logreg, LogRegConfig, LogRegData, LogRegWorker, W_TABLE};
 use essptable::apps::mf::train::{final_sq_loss, run_mf, MfBackend, MF_ARTIFACT};
 use essptable::apps::mf::MfConfig;
 use essptable::harness::{self, ExpOpts};
 use essptable::metrics::export;
+use essptable::ps::checkpoint;
+use essptable::ps::client::{ClientConfig, PsClient};
 use essptable::ps::consistency::Consistency;
-use essptable::ps::server::RunReport;
+use essptable::ps::msg::ToShard;
+use essptable::ps::router::Router;
+use essptable::ps::server::{self, PsApp, RunReport, TableSpec};
+use essptable::ps::shard::Shard;
+use essptable::ps::types::{Clock, Key};
 use essptable::runtime::artifact::ArtifactDir;
 use essptable::runtime::engine::RuntimeService;
 use essptable::sim::straggler::StragglerModel;
+use essptable::transport::tcp::{LocalSink, PeerEvent, TcpTransport};
+use essptable::transport::{NodeId, TransportSel};
 use essptable::util::cli::Args;
 
 fn main() -> ExitCode {
@@ -47,6 +65,9 @@ fn main() -> ExitCode {
         Some("robustness") => cmd_robustness(&args),
         Some("vap-compare") => cmd_vap_compare(&args),
         Some("artifacts") => cmd_artifacts(&args),
+        Some("serve-shard") => cmd_serve_shard(&args),
+        Some("run-worker") => cmd_run_worker(&args),
+        Some("run-cluster") => cmd_run_cluster(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
@@ -73,9 +94,15 @@ const USAGE: &str = "usage: essptable <subcommand> [flags]
   experiments:  fig1-staleness | fig1-breakdown | fig2-mf | fig2-lda
                 robustness | vap-compare
   inspection:   artifacts
+  cluster:      run-cluster --app logreg|counter --workers N --shards N
+                  [--cluster host:p,...] [--clocks N] [--consistency C]
+                serve-shard --index I --bind ADDR --shards N --workers N
+                  [--dump FILE.ckp]
+                run-worker  --index W --cluster host:p,... --workers N
   common flags: --workers N --shards N --clocks N --seed N
                 --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0
                 --straggler none|uniform:F|... --net lan|instant
+                --transport sim|tcp
                 --out DIR  (see README.md for per-command flags)";
 
 fn opts(args: &Args) -> anyhow::Result<ExpOpts> {
@@ -88,6 +115,8 @@ fn opts(args: &Args) -> anyhow::Result<ExpOpts> {
         straggler: StragglerModel::parse(&args.str("straggler", "uniform:3"))
             .map_err(anyhow::Error::msg)?,
         lan: args.str("net", "lan") == "lan",
+        transport: TransportSel::parse(&args.str("transport", "sim"))
+            .map_err(anyhow::Error::msg)?,
         virtual_clock_ms: args.u64("virtual-clock-ms", 25),
     })
 }
@@ -375,6 +404,470 @@ fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
                 ))
                 .unwrap_or_default()
         );
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------- cluster processes
+//
+// `run-cluster` spawns one OS process per shard (`serve-shard`) and per
+// worker (`run-worker`), talking loopback/LAN TCP through
+// `transport::tcp` — the paper's actual deployment shape (one ESSPTable
+// server process per machine). Every process derives identical initial
+// state from the same flags/seed via `server::init_rows`.
+
+/// An application runnable as real OS processes. Table specs and worker
+/// construction must be pure functions of the flags, identical in every
+/// process.
+struct DistApp {
+    tables: Vec<TableSpec>,
+    make: Box<dyn Fn(usize, usize) -> Box<dyn PsApp>>,
+}
+
+fn dist_app(args: &Args) -> anyhow::Result<DistApp> {
+    match args.str("app", "logreg").as_str() {
+        "logreg" => {
+            let cfg = LogRegConfig {
+                lr: args.f32("lr", 0.1),
+                seed: args.u64("data-seed", 21),
+                ..LogRegConfig::default()
+            };
+            let dim = cfg.dim;
+            let data = Arc::new(LogRegData::generate(&cfg));
+            Ok(DistApp {
+                tables: vec![TableSpec::zeros(W_TABLE, 1, dim + 1)],
+                make: Box::new(move |w, workers| {
+                    Box::new(LogRegWorker::new(data.clone(), w, workers))
+                }),
+            })
+        }
+        "counter" => Ok(DistApp {
+            tables: vec![TableSpec::zeros(0, 4, 1)],
+            make: Box::new(|_, _| {
+                Box::new(|ps: &mut PsClient, _c: Clock| {
+                    let _ = ps.get((0, 0));
+                    ps.inc((0, 0), &[1.0]);
+                    None
+                }) as Box<dyn PsApp>
+            }),
+        }),
+        other => bail!("unknown --app {other:?} (expected logreg|counter)"),
+    }
+}
+
+/// Reject consistency models a multi-process cluster cannot honor.
+fn check_dist_consistency(c: Consistency) -> anyhow::Result<()> {
+    if c.value_bound().is_some() {
+        bail!(
+            "vap needs the process-global visibility tracker and cannot run \
+             across OS processes — exactly the paper's point that value-bounds \
+             are unrealizable without global synchronization; use bsp/ssp/essp/async"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
+    let index = args.usize("index", 0);
+    let shards = args.usize("shards", 2);
+    let workers = args.usize("workers", 4);
+    let bind = args.str("bind", "127.0.0.1:0");
+    let consistency = consistency(args, "bsp")?;
+    // Deterministic replay defers updates to the table-clock commit, which
+    // would silently replace Async's eager-visibility semantics (Async has
+    // no clock gate to hide the deferral behind) — never stage for it.
+    let deterministic = args.bool("deterministic", true) && consistency.staleness().is_some();
+    let seed = args.u64("seed", 42);
+    let dump = args.opt_str("dump");
+    ensure!(index < shards, "--index {index} out of range for --shards {shards}");
+    check_dist_consistency(consistency)?;
+    let app = dist_app(args)?;
+    let row_len = server::table_row_lens(&app.tables);
+
+    let (shard_tx, shard_rx) = channel::<ToShard>();
+    let (events_tx, events_rx) = channel::<PeerEvent>();
+    let (transport, addr) = TcpTransport::server(
+        &bind,
+        vec![(NodeId::Shard(index), LocalSink::Shard(shard_tx.clone()))],
+        Some(events_tx),
+        workers,
+    )?;
+    println!(
+        "shard {index}/{shards} listening on {addr} ({workers} workers expected, {})",
+        consistency.label()
+    );
+
+    let router = Router::new(shards);
+    let mut shard = Shard::new(
+        index,
+        workers,
+        consistency.server_push(),
+        transport.handle(),
+        None,
+        row_len,
+        deterministic,
+    );
+    server::init_rows(&app.tables, seed, |key, data| {
+        if router.shard_of(&key) == index {
+            shard.init_row(key, data);
+        }
+    });
+    let (dump_tx, dump_rx) = channel();
+    let handle = essptable::ps::shard::spawn(shard, shard_rx, dump_tx);
+
+    // Lifecycle: each worker dials exactly once; when every expected
+    // worker id has cleanly disconnected, its FIFO traffic has been fully
+    // delivered (the reader drains the socket before seeing EOF), so the
+    // shard's final state is complete. Identity is tracked per worker id:
+    // stray peers (out-of-range ids, duplicate dials from a re-launched
+    // worker) are warned about but never fill another worker's quota.
+    let expected = |node: &NodeId| matches!(node, NodeId::Worker(w) if *w < workers);
+    let mut done: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
+    // Idle bound: if no lifecycle event arrives for this long (e.g. a
+    // worker process died before ever dialing), fail instead of hanging
+    // run-cluster (and CI) forever.
+    let idle = Duration::from_secs(args.u64("worker-timeout-s", 300));
+    while done.len() < workers {
+        match events_rx.recv_timeout(idle) {
+            Ok(PeerEvent::Connected(node)) => {
+                if expected(&node) {
+                    eprintln!("shard {index}: {node:?} connected");
+                } else {
+                    eprintln!("shard {index}: ignoring unexpected peer {node:?}");
+                }
+            }
+            Ok(PeerEvent::Disconnected { node, clean: true }) => {
+                if expected(&node) && done.insert(node) {
+                    eprintln!("shard {index}: {node:?} done ({}/{workers})", done.len());
+                } else {
+                    eprintln!("shard {index}: ignoring disconnect of {node:?}");
+                }
+            }
+            Ok(PeerEvent::Disconnected { node, clean: false }) => {
+                // A real worker's errored link may have lost updates:
+                // refuse to dump partial state as if the run succeeded.
+                // Stray or already-finished peers just get logged.
+                if expected(&node) && !done.contains(&node) {
+                    bail!(
+                        "shard {index}: connection to {node:?} failed mid-run; \
+                         aborting instead of dumping partial state"
+                    );
+                }
+                eprintln!("shard {index}: ignoring failed stray connection {node:?}");
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => bail!(
+                "shard {index}: no worker activity for {idle:?} with {}/{workers} \
+                 workers finished — did a worker process die before connecting?",
+                done.len()
+            ),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                bail!("shard {index}: transport event stream ended early")
+            }
+        }
+    }
+    let _ = shard_tx.send(ToShard::Shutdown);
+    let fin = dump_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("shard {index}: shard thread died without dumping"))?;
+    let _ = handle.join();
+    if let Some(path) = dump {
+        let rows: HashMap<Key, Vec<f32>> = fin
+            .rows
+            .iter()
+            .map(|(k, row)| (*k, row.data.to_vec()))
+            .collect();
+        checkpoint::save(Path::new(&path), &rows)?;
+        println!("shard {index}: {} rows -> {path}", rows.len());
+    }
+    transport.close_send();
+    transport.join();
+    Ok(())
+}
+
+fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
+    let index = args.usize("index", 0);
+    let workers = args.usize("workers", 4);
+    let clocks = args.u64("clocks", 20);
+    let consistency = consistency(args, "bsp")?;
+    check_dist_consistency(consistency)?;
+    let shard_addrs = args.strs("cluster");
+    ensure!(
+        !shard_addrs.is_empty(),
+        "run-worker needs --cluster host:port[,host:port...] (one address per shard)"
+    );
+    let shards = shard_addrs.len();
+    ensure!(index < workers, "--index {index} out of range for --workers {workers}");
+    let app = dist_app(args)?;
+    let row_len = server::table_row_lens(&app.tables);
+
+    let mut conns = Vec::new();
+    for (s, a) in shard_addrs.iter().enumerate() {
+        let sa = a
+            .to_socket_addrs()
+            .with_context(|| format!("resolving shard {s} address {a:?}"))?
+            .next()
+            .with_context(|| format!("shard {s} address {a:?} resolved to nothing"))?;
+        conns.push((index, s, sa));
+    }
+    let (worker_tx, worker_rx) = channel();
+    let timeout = Duration::from_secs(args.u64("connect-timeout-s", 30));
+    let transport = TcpTransport::client(
+        vec![(NodeId::Worker(index), LocalSink::Worker(worker_tx))],
+        &conns,
+        timeout,
+    )?;
+    println!(
+        "worker {index}/{workers}: connected to {shards} shard(s), {} clocks of {}",
+        clocks,
+        consistency.label()
+    );
+
+    let client_cfg = ClientConfig {
+        consistency,
+        cache_capacity: 0,
+        read_my_writes: true,
+        virtual_clock: None,
+    };
+    let mut ps = PsClient::new(
+        index,
+        client_cfg,
+        Router::new(shards),
+        transport.handle(),
+        worker_rx,
+        row_len,
+        None,
+        Instant::now(),
+    );
+    let mut worker = (app.make)(index, workers);
+    let mut last_metric = None;
+    for c in 0..clocks as Clock {
+        if let Some(v) = worker.run_clock(&mut ps, c) {
+            last_metric = Some(v);
+        }
+        ps.tick();
+    }
+    println!(
+        "worker {index}: done ({} pulls, {} pushes in{})",
+        ps.stats.pulls,
+        ps.stats.pushes_received,
+        last_metric
+            .map(|v| format!(", final local metric {v:.4}"))
+            .unwrap_or_default()
+    );
+    transport.close_send();
+    transport.join();
+    Ok(())
+}
+
+/// Pick `n` distinct free localhost ports (bind-then-release; the small
+/// race window is fine for a local launcher).
+fn pick_local_ports(n: usize) -> anyhow::Result<Vec<String>> {
+    let mut held = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let l = std::net::TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(format!("127.0.0.1:{}", l.local_addr()?.port()));
+        held.push(l); // hold all simultaneously so the ports are distinct
+    }
+    Ok(addrs)
+}
+
+/// Order-stable digest of final parameters (sorted keys, f32 bit
+/// patterns) for quick cross-run comparison.
+fn params_digest(rows: &HashMap<Key, Vec<f32>>) -> u64 {
+    use essptable::util::rng::splitmix64;
+    let mut keys: Vec<&Key> = rows.keys().collect();
+    keys.sort();
+    let mut h: u64 = 0x243F_6A88_85A3_08D3;
+    for k in keys {
+        let mut s = h ^ (((k.0 as u64) << 32) ^ k.1);
+        h = splitmix64(&mut s);
+        for x in &rows[k] {
+            let mut s = h ^ x.to_bits() as u64;
+            h = splitmix64(&mut s);
+        }
+    }
+    h
+}
+
+fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
+    let workers = args.usize("workers", 4);
+    let shards = args.usize("shards", 2);
+    let clocks = args.u64("clocks", 20);
+    let consistency = consistency(args, "bsp")?;
+    check_dist_consistency(consistency)?;
+    let seed = args.u64("seed", 42);
+    let app_name = args.str("app", "logreg");
+    let lr = args.f32("lr", 0.1);
+    let data_seed = args.u64("data-seed", 21);
+    let deterministic = args.bool("deterministic", true);
+    let out = PathBuf::from(args.str("out", "results/cluster"));
+    std::fs::create_dir_all(&out).with_context(|| format!("creating {out:?}"))?;
+
+    let addrs = {
+        let given = args.strs("cluster");
+        if given.is_empty() {
+            pick_local_ports(shards)?
+        } else {
+            ensure!(
+                given.len() == shards,
+                "--cluster lists {} addresses but --shards is {shards}",
+                given.len()
+            );
+            given
+        }
+    };
+
+    let exe = std::env::current_exe().context("locating own binary")?;
+    // On any spawn failure, kill what was already launched: dropped Child
+    // handles do NOT terminate the processes, and shards wait on their
+    // workers forever.
+    fn kill_all(children: &mut Vec<(&str, usize, std::process::Child)>) {
+        for (_, _, child) in children.iter_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+    let mut children: Vec<(&str, usize, std::process::Child)> = Vec::new();
+    // Per-app flags: only logreg reads these — forwarding them to the
+    // counter app would trip every child's unused-flag warning.
+    let app_flags: Vec<String> = if app_name == "logreg" {
+        vec![
+            "--lr".into(),
+            lr.to_string(),
+            "--data-seed".into(),
+            data_seed.to_string(),
+        ]
+    } else {
+        Vec::new()
+    };
+    let mut dumps = Vec::new();
+    for i in 0..shards {
+        let dump = out.join(format!("shard_{i}.ckp"));
+        let mut sargs: Vec<String> = vec![
+            "serve-shard".into(),
+            "--index".into(),
+            i.to_string(),
+            "--shards".into(),
+            shards.to_string(),
+            "--workers".into(),
+            workers.to_string(),
+            "--bind".into(),
+            addrs[i].clone(),
+            "--consistency".into(),
+            consistency.label(),
+            "--seed".into(),
+            seed.to_string(),
+            "--app".into(),
+            app_name.clone(),
+            "--deterministic".into(),
+            (if deterministic { "true" } else { "false" }).to_string(),
+            "--dump".into(),
+            dump.to_str().context("non-utf8 dump path")?.into(),
+        ];
+        sargs.extend(app_flags.iter().cloned());
+        let child = Command::new(&exe).args(&sargs).spawn();
+        let child = match child {
+            Ok(c) => c,
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(anyhow::Error::from(e).context(format!("spawning shard {i}")));
+            }
+        };
+        dumps.push(dump);
+        children.push(("shard", i, child));
+    }
+    let cluster_list = addrs.join(",");
+    for w in 0..workers {
+        let mut wargs: Vec<String> = vec![
+            "run-worker".into(),
+            "--index".into(),
+            w.to_string(),
+            "--workers".into(),
+            workers.to_string(),
+            "--cluster".into(),
+            cluster_list.clone(),
+            "--clocks".into(),
+            clocks.to_string(),
+            "--consistency".into(),
+            consistency.label(),
+            "--app".into(),
+            app_name.clone(),
+        ];
+        wargs.extend(app_flags.iter().cloned());
+        let child = Command::new(&exe).args(&wargs).spawn();
+        let child = match child {
+            Ok(c) => c,
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(anyhow::Error::from(e).context(format!("spawning worker {w}")));
+            }
+        };
+        children.push(("worker", w, child));
+    }
+
+    // Poll rather than wait sequentially: when one process fails, the
+    // survivors must be killed (they would otherwise block forever on
+    // their dead peer) instead of being waited on indefinitely.
+    let mut failed = false;
+    while !children.is_empty() && !failed {
+        let mut still = Vec::new();
+        for (kind, i, mut child) in children {
+            match child.try_wait() {
+                Ok(Some(status)) if status.success() => {}
+                Ok(Some(status)) => {
+                    eprintln!("{kind} {i} exited with {status}");
+                    failed = true;
+                }
+                Ok(None) => still.push((kind, i, child)),
+                Err(e) => {
+                    eprintln!("waiting for {kind} {i}: {e}");
+                    failed = true;
+                }
+            }
+        }
+        children = still;
+        if !failed && !children.is_empty() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    if failed {
+        kill_all(&mut children);
+        bail!("cluster run had failing processes; survivors were terminated");
+    }
+
+    let mut table_rows: HashMap<Key, Vec<f32>> = HashMap::new();
+    for d in &dumps {
+        table_rows.extend(checkpoint::load(d)?);
+    }
+    println!(
+        "cluster run complete: {workers} workers x {shards} shards, {} rows, \
+         params digest {:016x}",
+        table_rows.len(),
+        params_digest(&table_rows)
+    );
+    match app_name.as_str() {
+        "logreg" => {
+            let cfg = LogRegConfig {
+                lr,
+                seed: data_seed,
+                ..LogRegConfig::default()
+            };
+            let data = LogRegData::generate(&cfg);
+            let w = table_rows
+                .get(&(W_TABLE, 0))
+                .context("weight row missing from shard dumps")?;
+            println!(
+                "  log loss {:.4}  accuracy {:.3}",
+                data.log_loss(w),
+                data.accuracy(w)
+            );
+        }
+        "counter" => {
+            let total = table_rows.get(&(0, 0)).map(|r| r[0]).unwrap_or(0.0);
+            println!("  counter {total} (expected {})", workers as u64 * clocks);
+        }
+        _ => {}
     }
     Ok(())
 }

@@ -44,30 +44,63 @@ pub fn save(path: &Path, rows: &HashMap<Key, Vec<f32>>) -> Result<()> {
 }
 
 /// Read a checkpoint back.
+///
+/// Hardened against corrupt/truncated files: the declared row count and
+/// every per-row payload length are validated against the file's actual
+/// size *before* any allocation, so a bad header yields a context-rich
+/// error instead of a multi-GB preallocation attempt.
 pub fn load(path: &Path) -> Result<HashMap<Key, Vec<f32>>> {
-    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let file_len = file
+        .metadata()
+        .with_context(|| format!("stat {path:?}"))?
+        .len();
+    let mut r = BufReader::new(file);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic)
+        .with_context(|| format!("{path:?}: truncated before magic"))?;
     if &magic != MAGIC {
         bail!("{path:?} is not an ESSPTable checkpoint (bad magic)");
     }
     let mut buf8 = [0u8; 8];
-    r.read_exact(&mut buf8)?;
+    r.read_exact(&mut buf8)
+        .with_context(|| format!("{path:?}: truncated header"))?;
     let n = u64::from_le_bytes(buf8);
+    // Each row takes at least 16 bytes (table u32 + row u64 + length u32):
+    // a count the file cannot possibly hold is a corrupt header.
+    let body_len = file_len.saturating_sub(16);
+    if n > body_len / 16 {
+        bail!(
+            "{path:?}: header claims {n} rows but only {body_len} bytes of row data \
+             follow — corrupt or truncated checkpoint"
+        );
+    }
     let mut rows = HashMap::with_capacity(n as usize);
     let mut buf4 = [0u8; 4];
-    for _ in 0..n {
-        r.read_exact(&mut buf4)?;
+    let mut payload = Vec::new();
+    for i in 0..n {
+        let row_ctx = |what: &str| format!("{path:?}: row {i}/{n}: truncated {what}");
+        r.read_exact(&mut buf4).with_context(|| row_ctx("table id"))?;
         let table = TableId::from_le_bytes(buf4);
-        r.read_exact(&mut buf8)?;
+        r.read_exact(&mut buf8).with_context(|| row_ctx("row id"))?;
         let row = RowId::from_le_bytes(buf8);
-        r.read_exact(&mut buf4)?;
+        r.read_exact(&mut buf4).with_context(|| row_ctx("length"))?;
         let len = u32::from_le_bytes(buf4) as usize;
-        let mut data = vec![0f32; len];
-        for x in &mut data {
-            r.read_exact(&mut buf4)?;
-            *x = f32::from_le_bytes(buf4);
+        if len as u64 * 4 > body_len {
+            bail!(
+                "{path:?}: row {i} (table {table}, row {row}) claims a {len}-element \
+                 payload, larger than the whole file — corrupt length field"
+            );
         }
+        payload.clear();
+        payload.resize(len * 4, 0u8);
+        r.read_exact(&mut payload).with_context(|| {
+            format!("{path:?}: row {i} (table {table}, row {row}): truncated payload")
+        })?;
+        let data: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
         rows.insert((table, row), data);
     }
     Ok(rows)
@@ -124,6 +157,53 @@ mod tests {
         let path = tmp("garbage.bin");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_absurd_row_count_without_allocating() {
+        // Valid magic, then a row count the 0-byte body cannot hold: must
+        // fail fast on the header check (a naive with_capacity here would
+        // try to reserve for u64::MAX entries).
+        let path = tmp("hugecount.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("corrupt or truncated"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_lying_payload_length() {
+        // One row whose length field claims far more f32s than the file
+        // holds: must fail on the bounds check, naming the row.
+        let path = tmp("hugelen.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // table
+        bytes.extend_from_slice(&9u64.to_le_bytes()); // row
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // payload length lie
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("corrupt length field"), "{err}");
+        assert!(err.contains("table 3"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncated_payload_errors_with_row_context() {
+        // A checkpoint cut off mid-payload: the error must say which row.
+        let mut rows = HashMap::new();
+        rows.insert((0u32, 0u64), vec![1.0f32; 8]);
+        let path = tmp("truncpay.bin");
+        save(&path, &rows).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("truncated payload"), "{err}");
         std::fs::remove_file(path).ok();
     }
 

@@ -38,7 +38,7 @@ use super::update::UpdateMap;
 use super::vap::VapTracker;
 use crate::metrics::staleness::StalenessHist;
 use crate::metrics::timeline::Timeline;
-use crate::sim::net::{NetHandle, NodeId, Packet};
+use crate::transport::{NodeId, Packet, TransportHandle};
 use crate::util::hash::{FxHashMap, FxHashSet};
 
 /// Client-side configuration.
@@ -65,6 +65,26 @@ impl Default for ClientConfig {
     }
 }
 
+/// How long one blocking read may go *without any inbound message*
+/// before the client fails fast (`ESSPTABLE_READ_TIMEOUT_S`; 0 disables,
+/// default 600s). The timer restarts whenever anything arrives, so slow
+/// but healthy clusters (extreme stragglers/virtual clocks) only trip it
+/// if they exceed ten silent minutes — while a dead shard, which can
+/// never reply, turns a forever-hang into a diagnosable failure.
+fn read_stall_limit() -> Duration {
+    static LIMIT: std::sync::OnceLock<Duration> = std::sync::OnceLock::new();
+    *LIMIT.get_or_init(|| {
+        match std::env::var("ESSPTABLE_READ_TIMEOUT_S")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+        {
+            Some(0) => Duration::MAX,
+            Some(secs) => Duration::from_secs(secs),
+            None => Duration::from_secs(600),
+        }
+    })
+}
+
 /// Per-client counters.
 #[derive(Debug, Default, Clone)]
 pub struct ClientStats {
@@ -84,7 +104,7 @@ pub struct PsClient {
     clock: Clock,
     cfg: ClientConfig,
     router: Router,
-    net: NetHandle,
+    net: TransportHandle,
     inbox: Receiver<ToWorker>,
     cache: RowCache,
     pending: UpdateMap,
@@ -117,7 +137,7 @@ impl PsClient {
         worker: WorkerId,
         cfg: ClientConfig,
         router: Router,
-        net: NetHandle,
+        net: TransportHandle,
         inbox: Receiver<ToWorker>,
         row_len: HashMap<TableId, usize>,
         vap: Option<Arc<VapTracker>>,
@@ -236,17 +256,20 @@ impl PsClient {
     }
 
     /// Block on the inbox until at least one message is applied, charging
-    /// the wait to comm time.
-    fn wait_inbox(&mut self, timeout: Duration) {
+    /// the wait to comm time. Returns whether anything arrived (the
+    /// liveness signal for the read-stall watchdog).
+    fn wait_inbox(&mut self, timeout: Duration) -> bool {
         let t0 = Instant::now();
         match self.inbox.recv_timeout(timeout) {
             Ok(msg) => {
                 self.timeline.add_comm(t0.elapsed());
                 self.apply(msg);
                 self.drain_inbox();
+                true
             }
             Err(RecvTimeoutError::Timeout) => {
                 self.timeline.add_comm(t0.elapsed());
+                false
             }
             Err(RecvTimeoutError::Disconnected) => {
                 panic!("worker {} inbox disconnected mid-run", self.worker)
@@ -296,6 +319,7 @@ impl PsClient {
         let min_vclock = self.cfg.consistency.min_row_vclock(self.clock);
         let key_shard = self.router.shard_of(&key);
         let mut pulled = false;
+        let mut stalled_since: Option<Instant> = None;
         loop {
             // Re-read each pass: waves applied in wait_inbox move it.
             let announced = self.shard_announced[key_shard];
@@ -337,8 +361,31 @@ impl PsClient {
             if !self.pulls_in_flight.contains(&key) {
                 self.fire_pull(key, min_vclock);
             }
+            if !pulled {
+                stalled_since = Some(Instant::now());
+            }
             pulled = true;
-            self.wait_inbox(Duration::from_millis(100));
+            if self.wait_inbox(Duration::from_millis(100)) {
+                // Something arrived: the cluster is alive, restart the
+                // silence timer.
+                stalled_since = Some(Instant::now());
+            }
+            // Liveness watchdog: total *silence* for this long means the
+            // shard is unreachable (e.g. its process died — over TCP the
+            // reply can then never arrive) or the cluster is wedged.
+            // Fail fast with context instead of spinning forever.
+            if let Some(t0) = stalled_since {
+                if t0.elapsed() > read_stall_limit() {
+                    panic!(
+                        "worker {} read of {key:?} got no messages for {:?} \
+                         waiting for vclock >= {min_vclock}: shard unreachable \
+                         or cluster wedged (raise/disable via \
+                         ESSPTABLE_READ_TIMEOUT_S)",
+                        self.worker,
+                        t0.elapsed()
+                    );
+                }
+            }
         }
     }
 

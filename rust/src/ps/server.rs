@@ -1,10 +1,33 @@
-//! Cluster assembly: builds shards + simulated network + clients, runs an
+//! Cluster assembly: builds shards + data plane + clients, runs an
 //! application across P workers, and collects the run report.
 //!
 //! This is the launcher the paper's "each physical machine runs one
 //! ESSPTable process" maps onto: here, shard threads play the server
-//! processes, worker threads the computation threads, and `sim::net` the
-//! Ethernet between them.
+//! processes, worker threads the computation threads, and a pluggable
+//! transport the Ethernet between them.
+//!
+//! # Transport
+//!
+//! The paper's testbed boundary — processes exchanging bytes over
+//! 1 Gbps Ethernet — is substituted by [`crate::transport`]:
+//!
+//! * `ClusterConfig::transport == TransportSel::Sim` (default) routes all
+//!   traffic through the in-process `sim::net` router with modeled
+//!   latency/bandwidth/FIFO links;
+//! * `TransportSel::Tcp` runs the *same* worker and shard threads over
+//!   real loopback TCP sockets: frames are `len:u32 | src | dst | kind |
+//!   body`, little-endian, preceded per connection by an `"ESSPWIR1"`
+//!   magic + version handshake (see `transport::wire` for the full
+//!   layout). Byte accounting is identical in both modes because the
+//!   SimNet model charges the codec's exact frame sizes.
+//!
+//! Fully separate OS processes (one per shard / worker, the paper's
+//! actual deployment shape) are launched via the `serve-shard` /
+//! `run-worker` / `run-cluster` CLI subcommands, which reuse
+//! [`init_rows`] / [`table_row_lens`] so every process derives identical
+//! initial state. With `ClusterConfig::deterministic` (and the same
+//! seed), a BSP run produces bit-identical final parameters whether it
+//! runs in-process, over loopback TCP, or as a multi-process cluster.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -21,8 +44,9 @@ use super::vap::VapTracker;
 use crate::metrics::convergence::ConvergenceLog;
 use crate::metrics::staleness::StalenessHist;
 use crate::metrics::timeline::Timeline;
-use crate::sim::net::{NetConfig, SimNet};
+use crate::sim::net::NetConfig;
 use crate::sim::straggler::StragglerModel;
+use crate::transport::{Fabric, TransportSel};
 use crate::util::rng::Rng;
 
 /// One application instance per worker. `run_clock` performs one clock of
@@ -57,6 +81,14 @@ pub struct ClusterConfig {
     /// scheduler-driven duration noise with no analogue in the modeled
     /// cluster (DESIGN.md §Substitutions). `None` = run at raw speed.
     pub virtual_clock: Option<Duration>,
+    /// Which data plane carries PS traffic (see module docs, § Transport).
+    pub transport: TransportSel,
+    /// Shards defer updates and replay them in (clock, worker) order at
+    /// each table-clock commit, making final parameters bit-reproducible
+    /// across runs and transports (float summation order is fixed). Off
+    /// by default: eager application propagates uncommitted freshness,
+    /// which the Async/VAP dynamics use.
+    pub deterministic: bool,
     pub seed: u64,
 }
 
@@ -71,6 +103,8 @@ impl Default for ClusterConfig {
             cache_capacity: 0,
             read_my_writes: true,
             virtual_clock: None,
+            transport: TransportSel::Sim,
+            deterministic: false,
             seed: 42,
         }
     }
@@ -149,6 +183,37 @@ impl RunReport {
     }
 }
 
+/// Deterministically initialize table rows: calls each spec's `init` for
+/// *every* row of every table in declaration order against one shared rng
+/// stream, handing each `(key, payload)` to `sink`. Multi-process shards
+/// must consume the stream identically regardless of which rows they own,
+/// so a process filters inside `sink` rather than skipping calls.
+pub fn init_rows(tables: &[TableSpec], seed: u64, mut sink: impl FnMut(Key, Vec<f32>)) {
+    let mut rng = Rng::with_stream(seed, 0x7ab1e);
+    for spec in tables {
+        let variable = spec.row_len == usize::MAX;
+        for r in 0..spec.rows {
+            let data = (spec.init)(r, &mut rng);
+            assert!(
+                variable || data.len() == spec.row_len,
+                "init length mismatch on table {} row {r}",
+                spec.table
+            );
+            sink((spec.table, r), data);
+        }
+    }
+}
+
+/// Uniform row length per table (variable-length tables excluded) — the
+/// registry shards use to serve GETs racing row materialization.
+pub fn table_row_lens(tables: &[TableSpec]) -> HashMap<TableId, usize> {
+    tables
+        .iter()
+        .filter(|s| s.row_len != usize::MAX)
+        .map(|s| (s.table, s.row_len))
+        .collect()
+}
+
 /// A configured-but-not-yet-running cluster.
 pub struct Cluster {
     cfg: ClusterConfig,
@@ -200,47 +265,38 @@ impl Cluster {
             shard_rx.push(rx);
         }
 
-        let net = SimNet::new(cfg.net.clone(), worker_tx, shard_tx.clone());
+        let fabric = Fabric::build(cfg.transport, cfg.net.clone(), worker_tx, shard_tx.clone())
+            .expect("transport bootstrap failed");
 
         // Table row-length registry, shared with shards so a GET racing
         // ahead of row materialization can be served zeros (variable-
         // length tables are excluded: no uniform length to synthesize).
-        let mut row_len: HashMap<TableId, usize> = HashMap::new();
-        for spec in &self.tables {
-            if spec.row_len != usize::MAX {
-                row_len.insert(spec.table, spec.row_len);
-            }
-        }
+        let row_len = table_row_lens(&self.tables);
 
         // Build + initialize shards. Clock-gated push waves are an ESSP
         // mechanism; VAP uses its own per-update eager waves instead.
         let clock_push = cfg.consistency.server_push() && vap.is_none();
+        // Deterministic staged replay defers updates to the table-clock
+        // commit, which only clock-gated models can hide behind: Async
+        // (no clock bound; Shard::new itself disarms VAP) relies on eager
+        // visibility, so staging would silently change its semantics.
+        let deterministic = cfg.deterministic && cfg.consistency.staleness().is_some();
         let mut shards: Vec<Shard> = (0..cfg.shards)
             .map(|id| {
                 Shard::new(
                     id,
                     cfg.workers,
                     clock_push,
-                    net.handle(),
+                    fabric.shard_handle(),
                     vap.clone(),
                     row_len.clone(),
+                    deterministic,
                 )
             })
             .collect();
-        let mut init_rng = Rng::with_stream(cfg.seed, 0x7ab1e);
-        for spec in &self.tables {
-            let variable = spec.row_len == usize::MAX;
-            for r in 0..spec.rows {
-                let key = (spec.table, r);
-                let data = (spec.init)(r, &mut init_rng);
-                assert!(
-                    variable || data.len() == spec.row_len,
-                    "init length mismatch on table {} row {r}",
-                    spec.table
-                );
-                shards[router.shard_of(&key)].init_row(key, data);
-            }
-        }
+        init_rows(&self.tables, cfg.seed, |key, data| {
+            shards[router.shard_of(&key)].init_row(key, data)
+        });
 
         // Launch shard threads.
         let (dump_tx, dump_rx) = channel::<ShardFinal>();
@@ -264,7 +320,7 @@ impl Cluster {
                     read_my_writes: cfg.read_my_writes,
                     virtual_clock: cfg.virtual_clock,
                 };
-                let net_handle = net.handle();
+                let net_handle = fabric.worker_handle();
                 let row_len = row_len.clone();
                 let vap = vap.clone();
                 let straggler = cfg.straggler.clone();
@@ -349,10 +405,10 @@ impl Cluster {
         }
         let wall = started.elapsed();
 
-        // Drain the network so no in-flight update can race the direct-path
-        // Shutdown below (mpsc inboxes are FIFO: once delivered, messages
-        // queued before Shutdown are processed before it).
-        net.flush();
+        // Drain the data plane so no in-flight update can race the direct-
+        // path Shutdown below (mpsc inboxes are FIFO: once delivered,
+        // messages queued before Shutdown are processed before it).
+        fabric.flush();
 
         // Stop shards (direct control-plane path, bypassing the sim net).
         for tx in &shard_tx {
@@ -370,9 +426,9 @@ impl Cluster {
         for h in shard_handles {
             let _ = h.join();
         }
-        let net_messages = net.messages();
-        let net_bytes = net.bytes();
-        net.shutdown();
+        let net_messages = fabric.messages();
+        let net_bytes = fabric.bytes();
+        fabric.shutdown();
 
         RunReport {
             wall,
@@ -481,6 +537,69 @@ mod tests {
         let s = r.convergence.summed();
         assert_eq!(s.len(), 3);
         assert_eq!(s[2].value, 4.0 * 2.0);
+    }
+
+    #[test]
+    fn deterministic_mode_loses_no_updates() {
+        for consistency in [
+            Consistency::Bsp,
+            Consistency::Ssp { s: 2 },
+            Consistency::Essp { s: 2 },
+        ] {
+            let mut cluster = Cluster::new(ClusterConfig {
+                workers: 4,
+                shards: 2,
+                consistency,
+                deterministic: true,
+                ..Default::default()
+            });
+            cluster.add_table(TableSpec::zeros(0, 4, 1));
+            let apps: Vec<Box<dyn PsApp>> = (0..4)
+                .map(|_| {
+                    Box::new(|ps: &mut PsClient, _c: Clock| {
+                        let _ = ps.get((0, 0));
+                        ps.inc((0, 0), &[1.0]);
+                        None
+                    }) as Box<dyn PsApp>
+                })
+                .collect();
+            let r = cluster.run(apps, 10);
+            assert_eq!(
+                r.table_rows[&(0, 0)][0],
+                40.0,
+                "{consistency:?} lost updates under deterministic replay"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_bsp_runs_are_bit_identical() {
+        // Thread/arrival-order noise must not leak into final parameters:
+        // two identical deterministic BSP runs of a float workload (logreg
+        // gradients — genuinely order-sensitive sums) match to the bit.
+        let run = || {
+            let (report, _) = crate::apps::logreg::run_logreg(
+                ClusterConfig {
+                    workers: 4,
+                    shards: 2,
+                    consistency: Consistency::Bsp,
+                    deterministic: true,
+                    ..Default::default()
+                },
+                crate::apps::logreg::LogRegConfig::default(),
+                6,
+            );
+            report.table_rows
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.len(), b.len());
+        for (k, va) in &a {
+            let vb = &b[k];
+            assert_eq!(va.len(), vb.len());
+            for (x, y) in va.iter().zip(vb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "row {k:?} differs: {x} vs {y}");
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!    worker's full registration list, and `Register` idempotency is a
 //!    single O(1) bit test.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -22,7 +22,7 @@ use super::msg::{PushRow, ToShard, ToWorker};
 use super::types::{Clock, Key, TableId, WorkerId};
 use super::vap::VapTracker;
 use super::vclock::MinClock;
-use crate::sim::net::{NetHandle, NodeId, Packet};
+use crate::transport::{NodeId, Packet, TransportHandle};
 use crate::util::hash::{FxHashMap, FxHashSet};
 
 /// A stored row: shared immutable payload plus best-effort freshness.
@@ -110,7 +110,17 @@ pub struct Shard {
     dirty: FxHashSet<Key>,
     pending: Vec<PendingGet>,
     push_enabled: bool,
-    net: NetHandle,
+    /// Deterministic application: buffer updates per (clock, worker) and
+    /// apply them in that sorted order when the table clock commits, so
+    /// float summation order — and hence the final parameters — is
+    /// bit-identical no matter how messages interleave on the wire. Off
+    /// by default (eager application propagates uncommitted freshness,
+    /// which Async/VAP rely on); multi-process runs enable it so a
+    /// loopback-TCP cluster reproduces the in-process result exactly.
+    deterministic: bool,
+    /// Staged (not yet applied) update batches, keyed for sorted replay.
+    staged: BTreeMap<(Clock, WorkerId), Vec<(Key, Vec<f32>)>>,
+    net: TransportHandle,
     vap: Option<Arc<VapTracker>>,
     /// Uniform row length per table, for serving GETs of rows that no
     /// update or init has materialized yet (replied as zeros).
@@ -125,10 +135,14 @@ impl Shard {
         id: usize,
         workers: usize,
         push_enabled: bool,
-        net: NetHandle,
+        net: TransportHandle,
         vap: Option<Arc<VapTracker>>,
         row_len: HashMap<TableId, usize>,
+        deterministic: bool,
     ) -> Self {
+        // VAP's eager per-update waves are incompatible with deferred
+        // application; its global tracker is in-process anyway.
+        let deterministic = deterministic && vap.is_none();
         Self {
             id,
             workers,
@@ -139,6 +153,8 @@ impl Shard {
             dirty: FxHashSet::default(),
             pending: Vec::new(),
             push_enabled,
+            deterministic,
+            staged: BTreeMap::new(),
             net,
             vap,
             row_len,
@@ -273,6 +289,17 @@ impl Shard {
     }
 
     fn on_update(&mut self, source: WorkerId, clock: Clock, rows: Vec<(Key, Vec<f32>)>) {
+        if self.deterministic {
+            // Defer until the table clock commits `clock`; replay is then
+            // sorted by (clock, worker), independent of arrival order.
+            self.staged.entry((clock, source)).or_default().extend(rows);
+            return;
+        }
+        self.apply_rows(source, clock, rows);
+    }
+
+    /// Apply one update batch to the row store (copy-on-write per row).
+    fn apply_rows(&mut self, source: WorkerId, clock: Clock, rows: Vec<(Key, Vec<f32>)>) {
         let mut touched = Vec::with_capacity(rows.len());
         for (key, delta) in rows {
             self.stats.updates_applied += 1;
@@ -350,6 +377,17 @@ impl Shard {
 
     fn on_tick(&mut self, worker: WorkerId, clock: Clock) {
         if let Some(new_min) = self.clocks.commit(worker, clock) {
+            // Deterministic mode: every update with clock <= new_min has
+            // arrived (Update precedes ClockTick on each FIFO link), so
+            // replay them in sorted (clock, worker) order before serving
+            // reads or firing the wave for this advance.
+            while let Some((&(c, w), _)) = self.staged.first_key_value() {
+                if c > new_min {
+                    break;
+                }
+                let rows = self.staged.remove(&(c, w)).unwrap();
+                self.apply_rows(w, c, rows);
+            }
             self.serve_pending(new_min);
             if self.push_enabled {
                 self.push_wave(new_min);
@@ -455,7 +493,15 @@ mod tests {
         }
         let (stx, _srx) = channel();
         let net = SimNet::new(NetConfig::instant(), wtxs, vec![stx]);
-        let shard = Shard::new(0, workers, push, net.handle(), None, row_len);
+        let shard = Shard::new(
+            0,
+            workers,
+            push,
+            TransportHandle::new(net.handle()),
+            None,
+            row_len,
+            false,
+        );
         (shard, wrxs, net)
     }
 
@@ -708,6 +754,92 @@ mod tests {
         assert!(!s.insert(64), "second insert reports already-present");
         assert!(s.contains(129) && !s.contains(1));
         assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 64, 129]);
+    }
+
+    #[test]
+    fn deterministic_mode_applies_updates_in_worker_order() {
+        // f32 addition is not associative: starting from 1e8, applying
+        // +1.0 then -1e8 gives 0.0 (the +1 is absorbed), while -1e8 then
+        // +1.0 gives 1.0. Deterministic mode must replay sorted by
+        // (clock, worker) — yielding 0.0 — even when worker 1's update
+        // arrives first.
+        let mk = |deterministic: bool| {
+            let (wtx, _wrx) = channel();
+            let (stx, _srx) = channel();
+            let net = SimNet::new(NetConfig::instant(), vec![wtx], vec![stx]);
+            let mut shard = Shard::new(
+                0,
+                2,
+                false,
+                TransportHandle::new(net.handle()),
+                None,
+                HashMap::new(),
+                deterministic,
+            );
+            shard.init_row((0, 0), vec![1e8]);
+            shard.handle(ToShard::Update {
+                worker: 1,
+                clock: 0,
+                rows: vec![((0, 0), vec![-1e8])],
+            });
+            shard.handle(ToShard::Update {
+                worker: 0,
+                clock: 0,
+                rows: vec![((0, 0), vec![1.0])],
+            });
+            shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+            shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
+            let v = shard.row(&(0, 0)).unwrap().data[0];
+            drop(shard);
+            net.shutdown();
+            v
+        };
+        assert_eq!(mk(true), 0.0, "sorted replay: worker 0's +1 absorbed");
+        assert_eq!(mk(false), 1.0, "eager application keeps arrival order");
+    }
+
+    #[test]
+    fn deterministic_mode_defers_until_commit() {
+        let (mut shard, wrx, _net) = {
+            let (wtx, wrx) = channel();
+            let (stx, _srx) = channel();
+            let net = SimNet::new(NetConfig::instant(), vec![wtx], vec![stx]);
+            let shard = Shard::new(
+                0,
+                2,
+                false,
+                TransportHandle::new(net.handle()),
+                None,
+                HashMap::new(),
+                true,
+            );
+            (shard, wrx, net)
+        };
+        shard.init_row((0, 0), vec![0.0]);
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 0), vec![5.0])],
+        });
+        // Not applied yet: worker 1 has not committed clock 0.
+        assert_eq!(shard.row(&(0, 0)).unwrap().data[0], 0.0);
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        assert_eq!(shard.row(&(0, 0)).unwrap().data[0], 0.0);
+        shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
+        assert_eq!(shard.row(&(0, 0)).unwrap().data[0], 5.0);
+        // A GET served after the commit sees the applied value.
+        shard.handle(ToShard::Get {
+            key: (0, 0),
+            worker: 0,
+            min_vclock: 0,
+        });
+        match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Row { data, vclock, .. } => {
+                assert_eq!(&data[..], &[5.0]);
+                assert_eq!(vclock, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

@@ -15,8 +15,12 @@ pub type Clock = i64;
 /// Clock value meaning "nothing committed yet".
 pub const NEVER: Clock = -1;
 
-/// Estimated wire size of a row payload, for the bandwidth model.
+/// Estimated wire size of one pending update row: the `transport::wire`
+/// codec's per-row Update framing (key 12 + length prefix 4 + f32
+/// payload). Exact message sizes come from the codec itself
+/// (`ToShard::wire_bytes`); this is for client-side pending-bytes
+/// estimates only.
 #[inline]
 pub fn row_wire_bytes(len: usize) -> usize {
-    len * 4 + 24 // f32 payload + key/clock framing
+    len * 4 + 16
 }

@@ -6,7 +6,9 @@
 //!
 //!   * propagation latency (+ optional uniform jitter),
 //!   * serialization time `bytes / bandwidth` with the link busy until the
-//!     message has fully "left the NIC" (messages queue behind each other),
+//!     message has fully "left the NIC" (messages queue behind each other);
+//!     `bytes` is the *exact* encoded frame size from `transport::wire`,
+//!     so this model and the real TCP framing agree byte-for-byte,
 //!   * FIFO delivery (TCP-like; delivery times are made monotone per link).
 //!
 //! Consistency-model behavior depends on the *ordering and delay* of
@@ -27,28 +29,9 @@ use crate::ps::msg::{ToShard, ToWorker};
 use crate::util::hash::FxHashMap;
 use crate::util::rng::Rng;
 
-/// A network endpoint.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum NodeId {
-    Worker(usize),
-    Shard(usize),
-}
-
-/// Payload variants routed by the simulated network.
-#[derive(Debug)]
-pub enum Packet {
-    ToShard(ToShard),
-    ToWorker(ToWorker),
-}
-
-impl Packet {
-    fn wire_bytes(&self) -> usize {
-        match self {
-            Packet::ToShard(m) => m.wire_bytes(),
-            Packet::ToWorker(m) => m.wire_bytes(),
-        }
-    }
-}
+// The addressing and packet types live in the transport layer (shared
+// with the real TCP backend); re-exported here for existing importers.
+pub use crate::transport::{NodeId, Packet};
 
 /// Link model parameters.
 #[derive(Debug, Clone)]
@@ -117,12 +100,20 @@ pub struct NetHandle {
 
 impl NetHandle {
     pub fn send(&self, src: NodeId, dst: NodeId, packet: Packet) {
-        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        // AcqRel so `flush`'s Acquire reads observe these increments as
+        // early as the memory model allows (see the note in `flush`).
+        self.stats.messages.fetch_add(1, Ordering::AcqRel);
         self.stats
             .bytes
-            .fetch_add(packet.wire_bytes() as u64, Ordering::Relaxed);
+            .fetch_add(packet.wire_bytes() as u64, Ordering::AcqRel);
         // Ignore send errors during shutdown (router already gone).
         let _ = self.intake.send(Wire { src, dst, packet });
+    }
+}
+
+impl crate::transport::Transport for NetHandle {
+    fn send(&self, src: NodeId, dst: NodeId, packet: Packet) {
+        NetHandle::send(self, src, dst, packet)
     }
 }
 
@@ -178,8 +169,17 @@ impl SimNet {
     /// direct-path Shutdown so no in-flight update is lost.
     pub fn flush(&self) {
         loop {
-            let sent = self.stats.messages.load(Ordering::Acquire);
+            // Read delivered BEFORE sent: delivered <= sent always holds
+            // (every delivery is preceded by its send), so observing
+            // delivered(t1) >= sent(t2) with t1 < t2 proves quiescence
+            // for every send this thread can observe — in particular all
+            // worker traffic, which happens-before flush via the worker
+            // joins. (The opposite read order can return while messages
+            // are still in flight even on x86.) The Shutdown that
+            // follows flush races only shard->worker waves, which cannot
+            // affect shard final state.
             let delivered = self.stats.delivered.load(Ordering::Acquire);
+            let sent = self.stats.messages.load(Ordering::Acquire);
             if delivered >= sent {
                 return;
             }

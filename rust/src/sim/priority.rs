@@ -12,6 +12,10 @@
 //!
 //! Uses plain `nice` values; raising priority needs root (true in this
 //! environment) and degrades gracefully to a no-op otherwise.
+//!
+//! The offline vendor set has no `libc` crate, so the two symbols we need
+//! (`syscall` for gettid, `setpriority`) are declared directly against
+//! the C library every Linux target already links.
 
 /// Mark the calling thread as infrastructure (router, shard, runtime).
 pub fn infrastructure_thread() {
@@ -23,15 +27,31 @@ pub fn worker_thread() {
     set_nice(5);
 }
 
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
 fn set_nice(value: i32) {
+    use std::ffi::{c_int, c_long};
+    #[cfg(target_arch = "x86_64")]
+    const SYS_GETTID: c_long = 186;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_GETTID: c_long = 178;
+    const PRIO_PROCESS: c_int = 0;
+    extern "C" {
+        fn syscall(num: c_long, ...) -> c_long;
+        fn setpriority(which: c_int, who: u32, prio: c_int) -> c_int;
+    }
     // Per-thread nice: setpriority(PRIO_PROCESS, tid, value) on Linux.
     unsafe {
-        let tid = libc::syscall(libc::SYS_gettid) as libc::id_t;
-        // Ignore failures (non-root lowering of nice, unsupported OS):
-        // priorities are an optimization of the simulation's fidelity,
-        // not a correctness requirement.
-        libc::setpriority(libc::PRIO_PROCESS, tid, value);
+        let tid = syscall(SYS_GETTID) as u32;
+        // Ignore failures (non-root lowering of nice): priorities are an
+        // optimization of the simulation's fidelity, not a correctness
+        // requirement.
+        setpriority(PRIO_PROCESS, tid, value);
     }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn set_nice(_value: i32) {
+    // Unsupported platform: scheduling priority is best-effort only.
 }
 
 #[cfg(test)]

@@ -1,0 +1,263 @@
+//! Transport layer: how PS messages travel between workers and shards.
+//!
+//! The paper's ESSPTable runs one server process per physical machine over
+//! 1 Gbps Ethernet. This module makes that boundary explicit: everything
+//! above it (client, shard, consistency models) addresses peers as
+//! [`NodeId`]s and hands [`Packet`]s to a [`Transport`]; everything below
+//! it is swappable:
+//!
+//!   * [`sim::net::SimNet`](crate::sim::net::SimNet) — the in-process
+//!     router thread with modeled latency/bandwidth/FIFO links (the
+//!     simulated substitution for the paper's testbed), and
+//!   * [`tcp::TcpTransport`] — real TCP sockets speaking the [`wire`]
+//!     binary codec, so a cluster can run as separate OS processes over
+//!     loopback or a LAN (the paper's actual deployment shape).
+//!
+//! Both deliver into per-node `mpsc` inboxes, and both charge bytes via
+//! the *same* codec ([`Packet::wire_bytes`] is the exact encoded frame
+//! size), so the simulated serialization-time model and the real framing
+//! agree byte-for-byte.
+
+pub mod tcp;
+pub mod wire;
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context as _, Result};
+
+use crate::ps::msg::{ToShard, ToWorker};
+use crate::sim::net::{NetConfig, SimNet};
+use self::tcp::{LocalSink, TcpTransport};
+
+/// A network endpoint: worker `w` or shard `s`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodeId {
+    Worker(usize),
+    Shard(usize),
+}
+
+/// Payload variants carried by any transport.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Packet {
+    ToShard(ToShard),
+    ToWorker(ToWorker),
+}
+
+impl Packet {
+    /// Exact encoded frame size in bytes — the single source of truth
+    /// (in [`wire`]) shared by the SimNet bandwidth model and TCP framing.
+    pub fn wire_bytes(&self) -> usize {
+        wire::packet_frame_len(self)
+    }
+}
+
+/// A one-way message fabric: carries a packet from `src` toward `dst`'s
+/// inbox. Reliability and per-(src, dst) FIFO ordering are part of the
+/// contract — the PS protocol depends on Update-before-ClockTick order
+/// within each (worker, shard) link.
+pub trait Transport: Send + Sync {
+    fn send(&self, src: NodeId, dst: NodeId, packet: Packet);
+}
+
+/// Cloneable shared handle to a transport backend; what clients and
+/// shards hold (they never see the concrete backend).
+#[derive(Clone)]
+pub struct TransportHandle(Arc<dyn Transport>);
+
+impl TransportHandle {
+    pub fn new<T: Transport + 'static>(t: T) -> Self {
+        Self(Arc::new(t))
+    }
+
+    pub fn from_arc(t: Arc<dyn Transport>) -> Self {
+        Self(t)
+    }
+
+    #[inline]
+    pub fn send(&self, src: NodeId, dst: NodeId, packet: Packet) {
+        self.0.send(src, dst, packet)
+    }
+}
+
+/// Which data plane a cluster run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportSel {
+    /// In-process router thread with modeled latency/bandwidth (`sim::net`).
+    #[default]
+    Sim,
+    /// Real loopback TCP sockets through [`tcp::TcpTransport`]: the same
+    /// worker/shard threads, but every message is wire-encoded and crosses
+    /// the OS network stack. `NetConfig` delay modeling does not apply —
+    /// the sockets *are* the network.
+    Tcp,
+}
+
+impl TransportSel {
+    pub fn parse(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "sim" => Ok(Self::Sim),
+            "tcp" => Ok(Self::Tcp),
+            other => Err(format!("unknown transport {other:?} (expected sim|tcp)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Sim => "sim",
+            Self::Tcp => "tcp",
+        }
+    }
+}
+
+/// The assembled data plane of one in-process cluster run: either the
+/// simulated network, or a pair of real TCP endpoints talking over
+/// loopback (server side hosting every shard inbox, client side hosting
+/// every worker inbox).
+pub enum Fabric {
+    Sim(SimNet),
+    Tcp {
+        client: TcpTransport,
+        server: TcpTransport,
+    },
+}
+
+impl Fabric {
+    /// Build the selected data plane around the given per-node inboxes.
+    pub fn build(
+        sel: TransportSel,
+        net: NetConfig,
+        worker_tx: Vec<Sender<ToWorker>>,
+        shard_tx: Vec<Sender<ToShard>>,
+    ) -> Result<Fabric> {
+        match sel {
+            TransportSel::Sim => Ok(Fabric::Sim(SimNet::new(net, worker_tx, shard_tx))),
+            TransportSel::Tcp => {
+                if !net.is_instant() {
+                    eprintln!(
+                        "note: modeled net delays are ignored over the tcp transport \
+                         (real sockets are the network)"
+                    );
+                }
+                let n_shards = shard_tx.len();
+                let server_locals: Vec<(NodeId, LocalSink)> = shard_tx
+                    .into_iter()
+                    .enumerate()
+                    .map(|(s, tx)| (NodeId::Shard(s), LocalSink::Shard(tx)))
+                    .collect();
+                let workers = worker_tx.len();
+                let (server, addr) =
+                    TcpTransport::server("127.0.0.1:0", server_locals, None, workers)
+                        .context("binding loopback shard endpoint")?;
+                let client_locals: Vec<(NodeId, LocalSink)> = worker_tx
+                    .into_iter()
+                    .enumerate()
+                    .map(|(w, tx)| (NodeId::Worker(w), LocalSink::Worker(tx)))
+                    .collect();
+                let conns: Vec<(usize, usize, std::net::SocketAddr)> = (0..workers)
+                    .flat_map(|w| (0..n_shards).map(move |s| (w, s, addr)))
+                    .collect();
+                let client =
+                    TcpTransport::client(client_locals, &conns, Duration::from_secs(10))
+                        .context("dialing loopback shard endpoint")?;
+                Ok(Fabric::Tcp { client, server })
+            }
+        }
+    }
+
+    /// Handle workers send through.
+    pub fn worker_handle(&self) -> TransportHandle {
+        match self {
+            Fabric::Sim(net) => TransportHandle::new(net.handle()),
+            Fabric::Tcp { client, .. } => client.handle(),
+        }
+    }
+
+    /// Handle shards send through.
+    pub fn shard_handle(&self) -> TransportHandle {
+        match self {
+            Fabric::Sim(net) => TransportHandle::new(net.handle()),
+            Fabric::Tcp { server, .. } => server.handle(),
+        }
+    }
+
+    pub fn messages(&self) -> u64 {
+        match self {
+            Fabric::Sim(net) => net.messages(),
+            Fabric::Tcp { client, server } => {
+                client.stats().messages() + server.stats().messages()
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Fabric::Sim(net) => net.bytes(),
+            Fabric::Tcp { client, server } => client.stats().bytes() + server.stats().bytes(),
+        }
+    }
+
+    /// Block until every message sent so far has settled (delivered to its
+    /// destination inbox, or — TCP error paths only — counted dropped).
+    pub fn flush(&self) {
+        match self {
+            Fabric::Sim(net) => net.flush(),
+            Fabric::Tcp { client, server } => {
+                // Frames already written into a link that subsequently
+                // dies settle nowhere, so unlike SimNet this wait must be
+                // bounded: after the deadline, report and move on rather
+                // than hanging the run on a broken connection.
+                let deadline = std::time::Instant::now() + Duration::from_secs(30);
+                loop {
+                    // Settled counters are read BEFORE the sent counters:
+                    // settled <= sent always holds, so settled(t1) >=
+                    // sent(t2) with t1 < t2 proves true quiescence (see
+                    // SimNet::flush).
+                    let settled = client.stats().settled() + server.stats().settled();
+                    let sent = client.stats().messages() + server.stats().messages();
+                    if settled >= sent {
+                        return;
+                    }
+                    if std::time::Instant::now() > deadline {
+                        eprintln!(
+                            "transport: flush timed out with {} of {sent} messages \
+                             unsettled (a connection died mid-run?); continuing",
+                            sent - settled
+                        );
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+    }
+
+    /// Tear the data plane down (joins all transport threads).
+    pub fn shutdown(self) {
+        match self {
+            Fabric::Sim(net) => net.shutdown(),
+            Fabric::Tcp { client, server } => {
+                // Stop outbound traffic on both ends first: each side's
+                // readers only exit once the *remote* write half closes.
+                client.close_send();
+                server.close_send();
+                client.join();
+                server.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_sel_parses() {
+        assert_eq!(TransportSel::parse("sim").unwrap(), TransportSel::Sim);
+        assert_eq!(TransportSel::parse("tcp").unwrap(), TransportSel::Tcp);
+        assert!(TransportSel::parse("rdma").is_err());
+        assert_eq!(TransportSel::default().label(), "sim");
+    }
+}

@@ -1,0 +1,658 @@
+//! Versioned, length-prefixed little-endian binary codec for PS messages.
+//!
+//! This is the single source of truth for message sizes: `ToShard::
+//! wire_bytes` / `ToWorker::wire_bytes` (which feed the SimNet
+//! serialization-time model) delegate to [`to_shard_frame_len`] /
+//! [`to_worker_frame_len`], so the simulated byte counts and the real TCP
+//! framing agree exactly.
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! ```text
+//! frame := len:u32 | src:node | dst:node | kind:u8 | body
+//! node  := kind:u8 (0 = worker, 1 = shard) | id:u32
+//! ```
+//!
+//! `len` counts every byte after the length prefix. Message kinds 0–6 are
+//! the `ToShard` variants (Get, Update, ClockTick, Register, PushAck,
+//! VapAck, Shutdown), 16–18 the `ToWorker` variants (Row, Push, VapPush).
+//! Row payloads are raw `f32` little-endian; on little-endian targets the
+//! encoder writes them straight from the shared `Arc<[f32]>` storage —
+//! encoding a push wave stages no intermediate payload copy.
+//!
+//! Connections start with a fixed-size handshake:
+//!
+//! ```text
+//! hello := magic "ESSPWIR1" (8) | version:u16 | src:node | dst:node
+//! ```
+//!
+//! Decoding is defensive: every length field is bounds-checked against the
+//! bytes actually present *before* any allocation, so a truncated or
+//! corrupt frame yields a context-rich error, never a multi-GB
+//! preallocation or a panic.
+
+use std::io::{self, Read, Write};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{NodeId, Packet};
+use crate::ps::msg::{PushRow, ToShard, ToWorker};
+use crate::ps::types::Key;
+
+/// Handshake magic: protocol name + wire revision byte.
+pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
+/// Protocol version carried in the handshake; bumped on layout changes.
+pub const VERSION: u16 = 1;
+/// Upper bound on one frame's encoded size (a push wave of ~16M f32s);
+/// anything larger is rejected as corrupt before allocation.
+pub const MAX_FRAME: usize = 1 << 28;
+
+/// Encoded size of a `node` field.
+const NODE_LEN: usize = 5;
+/// Bytes before the body in every frame: length prefix + src + dst + kind.
+pub const FRAME_OVERHEAD: usize = 4 + 2 * NODE_LEN + 1;
+/// Total handshake size.
+pub const HELLO_LEN: usize = 8 + 2 + 2 * NODE_LEN;
+
+const K_GET: u8 = 0;
+const K_UPDATE: u8 = 1;
+const K_TICK: u8 = 2;
+const K_REGISTER: u8 = 3;
+const K_PUSH_ACK: u8 = 4;
+const K_VAP_ACK: u8 = 5;
+const K_SHUTDOWN: u8 = 6;
+const K_ROW: u8 = 16;
+const K_PUSH: u8 = 17;
+const K_VAP_PUSH: u8 = 18;
+
+// ------------------------------------------------------------------ sizes
+
+/// Exact body size of a `ToShard` message.
+pub fn to_shard_body_len(m: &ToShard) -> usize {
+    match m {
+        ToShard::Get { .. } => 24,
+        ToShard::Update { rows, .. } => {
+            16 + rows.iter().map(|(_, v)| 16 + 4 * v.len()).sum::<usize>()
+        }
+        ToShard::ClockTick { .. } => 12,
+        ToShard::Register { .. } => 16,
+        ToShard::PushAck { .. } => 12,
+        ToShard::VapAck { .. } => 12,
+        ToShard::Shutdown => 0,
+    }
+}
+
+/// Exact body size of a `ToWorker` message.
+pub fn to_worker_body_len(m: &ToWorker) -> usize {
+    match m {
+        ToWorker::Row { data, .. } => 32 + 4 * data.len(),
+        ToWorker::Push { rows, .. } | ToWorker::VapPush { rows, .. } => {
+            16 + rows.iter().map(|r| 24 + 4 * r.data.len()).sum::<usize>()
+        }
+    }
+}
+
+/// Exact size of the full encoded frame for a `ToShard` message.
+pub fn to_shard_frame_len(m: &ToShard) -> usize {
+    FRAME_OVERHEAD + to_shard_body_len(m)
+}
+
+/// Exact size of the full encoded frame for a `ToWorker` message.
+pub fn to_worker_frame_len(m: &ToWorker) -> usize {
+    FRAME_OVERHEAD + to_worker_body_len(m)
+}
+
+/// Exact size of the full encoded frame for a packet.
+pub fn packet_frame_len(p: &Packet) -> usize {
+    match p {
+        Packet::ToShard(m) => to_shard_frame_len(m),
+        Packet::ToWorker(m) => to_worker_frame_len(m),
+    }
+}
+
+// ----------------------------------------------------------------- encode
+
+#[inline]
+fn w8(w: &mut impl Write, v: u8) -> io::Result<()> {
+    w.write_all(&[v])
+}
+
+#[inline]
+fn w32(w: &mut impl Write, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+#[inline]
+fn w64(w: &mut impl Write, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+#[inline]
+fn wi64(w: &mut impl Write, v: i64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+#[inline]
+fn wkey(w: &mut impl Write, key: &Key) -> io::Result<()> {
+    w32(w, key.0)?;
+    w64(w, key.1)
+}
+
+fn write_node(w: &mut impl Write, n: NodeId) -> io::Result<()> {
+    match n {
+        NodeId::Worker(i) => {
+            w8(w, 0)?;
+            w32(w, i as u32)
+        }
+        NodeId::Shard(i) => {
+            w8(w, 1)?;
+            w32(w, i as u32)
+        }
+    }
+}
+
+/// Write a row payload. On little-endian targets this is one `write_all`
+/// straight from the `f32` storage (no intermediate per-element buffer),
+/// so pushing an `Arc<[f32]>` wave copies payload bytes exactly once —
+/// into the socket.
+pub fn write_f32s(w: &mut impl Write, xs: &[f32]) -> io::Result<()> {
+    #[cfg(target_endian = "little")]
+    {
+        // Safety: `f32` is 4 bytes with no padding and any bit pattern is
+        // a valid byte; the slice is live for the duration of the call.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+        w.write_all(bytes)
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        for x in xs {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
+    match m {
+        ToShard::Get {
+            key,
+            worker,
+            min_vclock,
+        } => {
+            w8(w, K_GET)?;
+            wkey(w, key)?;
+            w32(w, *worker as u32)?;
+            wi64(w, *min_vclock)
+        }
+        ToShard::Update {
+            worker,
+            clock,
+            rows,
+        } => {
+            w8(w, K_UPDATE)?;
+            w32(w, *worker as u32)?;
+            wi64(w, *clock)?;
+            w32(w, rows.len() as u32)?;
+            for (key, v) in rows {
+                wkey(w, key)?;
+                w32(w, v.len() as u32)?;
+                write_f32s(w, v)?;
+            }
+            Ok(())
+        }
+        ToShard::ClockTick { worker, clock } => {
+            w8(w, K_TICK)?;
+            w32(w, *worker as u32)?;
+            wi64(w, *clock)
+        }
+        ToShard::Register { key, worker } => {
+            w8(w, K_REGISTER)?;
+            wkey(w, key)?;
+            w32(w, *worker as u32)
+        }
+        ToShard::PushAck { worker, vclock } => {
+            w8(w, K_PUSH_ACK)?;
+            w32(w, *worker as u32)?;
+            wi64(w, *vclock)
+        }
+        ToShard::VapAck { worker, seq } => {
+            w8(w, K_VAP_ACK)?;
+            w32(w, *worker as u32)?;
+            w64(w, *seq)
+        }
+        ToShard::Shutdown => w8(w, K_SHUTDOWN),
+    }
+}
+
+fn write_push_rows(w: &mut impl Write, rows: &[PushRow]) -> io::Result<()> {
+    w32(w, rows.len() as u32)?;
+    for r in rows {
+        wkey(w, &r.key)?;
+        wi64(w, r.fresh)?;
+        w32(w, r.data.len() as u32)?;
+        write_f32s(w, &r.data)?;
+    }
+    Ok(())
+}
+
+fn write_to_worker(w: &mut impl Write, m: &ToWorker) -> io::Result<()> {
+    match m {
+        ToWorker::Row {
+            key,
+            data,
+            vclock,
+            fresh,
+        } => {
+            w8(w, K_ROW)?;
+            wkey(w, key)?;
+            wi64(w, *vclock)?;
+            wi64(w, *fresh)?;
+            w32(w, data.len() as u32)?;
+            write_f32s(w, data)
+        }
+        ToWorker::Push {
+            shard,
+            vclock,
+            rows,
+        } => {
+            w8(w, K_PUSH)?;
+            w32(w, *shard as u32)?;
+            wi64(w, *vclock)?;
+            write_push_rows(w, rows)
+        }
+        ToWorker::VapPush { shard, seq, rows } => {
+            w8(w, K_VAP_PUSH)?;
+            w32(w, *shard as u32)?;
+            w64(w, *seq)?;
+            write_push_rows(w, rows)
+        }
+    }
+}
+
+/// Encode one full frame (length prefix, addressing, body) to `w`.
+///
+/// Frames larger than [`MAX_FRAME`] are rejected with `InvalidInput`
+/// *before any byte is written* (the stream stays clean): the decoder
+/// would drop the connection on such a length, and beyond u32 the prefix
+/// would wrap. The TCP sender asserts this bound before enqueueing (an
+/// oversized message fails the run loudly rather than losing a gradient
+/// batch); this error is the encoder-level backstop.
+pub fn write_frame(
+    w: &mut impl Write,
+    src: NodeId,
+    dst: NodeId,
+    p: &Packet,
+) -> io::Result<()> {
+    let total = packet_frame_len(p);
+    if total > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "frame of {total} bytes exceeds MAX_FRAME ({MAX_FRAME}); \
+                 split the wave/update into smaller batches"
+            ),
+        ));
+    }
+    let len = (total - 4) as u32;
+    w32(w, len)?;
+    write_node(w, src)?;
+    write_node(w, dst)?;
+    match p {
+        Packet::ToShard(m) => write_to_shard(w, m),
+        Packet::ToWorker(m) => write_to_worker(w, m),
+    }
+}
+
+// ----------------------------------------------------------------- decode
+
+/// Bounds-checked little-endian reads over a frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.b.len() >= n,
+            "frame truncated: wanted {n} more bytes, have {}",
+            self.b.len()
+        );
+        let (head, rest) = self.b.split_at(n);
+        self.b = rest;
+        Ok(head)
+    }
+
+    fn rem(&self) -> usize {
+        self.b.len()
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn key(&mut self) -> Result<Key> {
+        Ok((self.u32()?, self.u64()?))
+    }
+
+    fn worker(&mut self) -> Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+
+    /// Read `n` f32s; the byte bound is checked before any allocation, so
+    /// a lying length field cannot trigger a huge preallocation.
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).context("payload length overflow")?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn node(&mut self) -> Result<NodeId> {
+        let kind = self.u8()?;
+        let id = self.u32()? as usize;
+        match kind {
+            0 => Ok(NodeId::Worker(id)),
+            1 => Ok(NodeId::Shard(id)),
+            k => bail!("bad node kind {k}"),
+        }
+    }
+}
+
+fn decode_push_rows(c: &mut Cur) -> Result<Vec<PushRow>> {
+    let n = c.u32()? as usize;
+    // Each row needs >= 24 header bytes: bound the count (and hence the
+    // Vec preallocation) by what the frame can actually hold.
+    ensure!(
+        n <= c.rem() / 24,
+        "push wave claims {n} rows but only {} bytes remain",
+        c.rem()
+    );
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        let key = c.key().with_context(|| format!("push row {i}"))?;
+        let fresh = c.i64()?;
+        let len = c.u32()? as usize;
+        let data: Arc<[f32]> = c
+            .f32s(len)
+            .with_context(|| format!("push row {i} payload"))?
+            .into();
+        rows.push(PushRow { key, data, fresh });
+    }
+    Ok(rows)
+}
+
+/// Decode a frame body (everything after the length prefix).
+pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
+    let mut c = Cur { b: body };
+    let src = c.node().context("frame src address")?;
+    let dst = c.node().context("frame dst address")?;
+    let kind = c.u8().context("frame kind")?;
+    let packet = match kind {
+        K_GET => Packet::ToShard(ToShard::Get {
+            key: c.key()?,
+            worker: c.worker()?,
+            min_vclock: c.i64()?,
+        }),
+        K_UPDATE => {
+            let worker = c.worker()?;
+            let clock = c.i64()?;
+            let n = c.u32()? as usize;
+            ensure!(
+                n <= c.rem() / 16,
+                "update claims {n} rows but only {} bytes remain",
+                c.rem()
+            );
+            let mut rows = Vec::with_capacity(n);
+            for i in 0..n {
+                let key = c.key().with_context(|| format!("update row {i}"))?;
+                let len = c.u32()? as usize;
+                rows.push((
+                    key,
+                    c.f32s(len)
+                        .with_context(|| format!("update row {i} payload"))?,
+                ));
+            }
+            Packet::ToShard(ToShard::Update {
+                worker,
+                clock,
+                rows,
+            })
+        }
+        K_TICK => Packet::ToShard(ToShard::ClockTick {
+            worker: c.worker()?,
+            clock: c.i64()?,
+        }),
+        K_REGISTER => Packet::ToShard(ToShard::Register {
+            key: c.key()?,
+            worker: c.worker()?,
+        }),
+        K_PUSH_ACK => Packet::ToShard(ToShard::PushAck {
+            worker: c.worker()?,
+            vclock: c.i64()?,
+        }),
+        K_VAP_ACK => Packet::ToShard(ToShard::VapAck {
+            worker: c.worker()?,
+            seq: c.u64()?,
+        }),
+        K_SHUTDOWN => Packet::ToShard(ToShard::Shutdown),
+        K_ROW => {
+            let key = c.key()?;
+            let vclock = c.i64()?;
+            let fresh = c.i64()?;
+            let len = c.u32()? as usize;
+            Packet::ToWorker(ToWorker::Row {
+                key,
+                data: c.f32s(len).context("row payload")?.into(),
+                vclock,
+                fresh,
+            })
+        }
+        K_PUSH => Packet::ToWorker(ToWorker::Push {
+            shard: c.u32()? as usize,
+            vclock: c.i64()?,
+            rows: decode_push_rows(&mut c)?,
+        }),
+        K_VAP_PUSH => Packet::ToWorker(ToWorker::VapPush {
+            shard: c.u32()? as usize,
+            seq: c.u64()?,
+            rows: decode_push_rows(&mut c)?,
+        }),
+        k => bail!("unknown message kind {k}"),
+    };
+    ensure!(
+        c.rem() == 0,
+        "frame has {} trailing bytes after a complete message",
+        c.rem()
+    );
+    Ok((src, dst, packet))
+}
+
+/// Read the next frame from a stream. `Ok(None)` means a clean EOF at a
+/// frame boundary (the peer closed); mid-frame EOF is an error. `scratch`
+/// is a reusable body buffer.
+pub fn read_frame(
+    r: &mut impl Read,
+    scratch: &mut Vec<u8>,
+) -> Result<Option<(NodeId, NodeId, Packet)>> {
+    let mut prefix = [0u8; 4];
+    if !read_full_or_eof(r, &mut prefix)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    ensure!(
+        (FRAME_OVERHEAD - 4..=MAX_FRAME).contains(&len),
+        "bad frame length {len} (corrupt stream?)"
+    );
+    scratch.clear();
+    scratch.resize(len, 0);
+    r.read_exact(scratch)
+        .with_context(|| format!("reading {len}-byte frame body"))?;
+    decode_frame(scratch).map(Some)
+}
+
+/// Fill `buf` completely; `Ok(false)` = clean EOF before the first byte.
+fn read_full_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                bail!(
+                    "connection closed mid-frame ({filled} of {} prefix bytes)",
+                    buf.len()
+                );
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+// -------------------------------------------------------------- handshake
+
+/// Write the connection handshake: magic, version, and the (src, dst)
+/// node pair this connection will carry.
+pub fn write_hello(w: &mut impl Write, src: NodeId, dst: NodeId) -> io::Result<()> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    write_node(w, src)?;
+    write_node(w, dst)?;
+    w.flush()
+}
+
+/// Read and validate a handshake; returns the announced (src, dst).
+pub fn read_hello(r: &mut impl Read) -> Result<(NodeId, NodeId)> {
+    let mut buf = [0u8; HELLO_LEN];
+    r.read_exact(&mut buf).context("reading transport handshake")?;
+    ensure!(
+        buf[..8] == MAGIC,
+        "bad handshake magic {:02x?} (not an essptable peer?)",
+        &buf[..8]
+    );
+    let version = u16::from_le_bytes(buf[8..10].try_into().unwrap());
+    ensure!(
+        version == VERSION,
+        "wire protocol version mismatch: peer speaks v{version}, we speak v{VERSION}"
+    );
+    let mut c = Cur { b: &buf[10..] };
+    Ok((c.node()?, c.node()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encoded(src: NodeId, dst: NodeId, p: &Packet) -> Vec<u8> {
+        let mut v = Vec::new();
+        write_frame(&mut v, src, dst, p).unwrap();
+        v
+    }
+
+    #[test]
+    fn frame_len_is_exact_for_every_variant() {
+        let rows = vec![
+            PushRow {
+                key: (1, 2),
+                data: vec![1.0f32, 2.0, 3.0].into(),
+                fresh: 7,
+            },
+            PushRow {
+                key: (1, 3),
+                data: Vec::<f32>::new().into(),
+                fresh: -1,
+            },
+        ];
+        let msgs: Vec<Packet> = vec![
+            Packet::ToShard(ToShard::Get {
+                key: (0, 9),
+                worker: 3,
+                min_vclock: -5,
+            }),
+            Packet::ToShard(ToShard::Update {
+                worker: 1,
+                clock: 4,
+                rows: vec![((2, 8), vec![0.5f32; 5]), ((2, 9), vec![])],
+            }),
+            Packet::ToShard(ToShard::ClockTick { worker: 0, clock: 0 }),
+            Packet::ToShard(ToShard::Register {
+                key: (1, 1),
+                worker: 2,
+            }),
+            Packet::ToShard(ToShard::PushAck {
+                worker: 2,
+                vclock: 3,
+            }),
+            Packet::ToShard(ToShard::VapAck { worker: 0, seq: 99 }),
+            Packet::ToShard(ToShard::Shutdown),
+            Packet::ToWorker(ToWorker::Row {
+                key: (3, 1),
+                data: vec![1.5f32; 4].into(),
+                vclock: 2,
+                fresh: 3,
+            }),
+            Packet::ToWorker(ToWorker::Push {
+                shard: 1,
+                vclock: 6,
+                rows: rows.clone(),
+            }),
+            Packet::ToWorker(ToWorker::VapPush {
+                shard: 0,
+                seq: 11,
+                rows,
+            }),
+        ];
+        for p in &msgs {
+            let bytes = encoded(NodeId::Worker(1), NodeId::Shard(0), p);
+            assert_eq!(bytes.len(), p.wire_bytes(), "size mismatch for {p:?}");
+            let (src, dst, back) = decode_frame(&bytes[4..]).unwrap();
+            assert_eq!(src, NodeId::Worker(1));
+            assert_eq!(dst, NodeId::Shard(0));
+            assert_eq!(&back, p);
+        }
+    }
+
+    #[test]
+    fn hello_roundtrip_and_rejection() {
+        let mut buf = Vec::new();
+        write_hello(&mut buf, NodeId::Worker(7), NodeId::Shard(2)).unwrap();
+        assert_eq!(buf.len(), HELLO_LEN);
+        let (src, dst) = read_hello(&mut &buf[..]).unwrap();
+        assert_eq!(src, NodeId::Worker(7));
+        assert_eq!(dst, NodeId::Shard(2));
+        // Corrupt magic.
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(read_hello(&mut &bad[..]).is_err());
+        // Future version.
+        let mut newer = buf.clone();
+        newer[8] = 0xEE;
+        assert!(read_hello(&mut &newer[..]).is_err());
+    }
+
+    #[test]
+    fn oversize_and_undersize_length_prefixes_rejected() {
+        let huge = [0xFFu8, 0xFF, 0xFF, 0xFF, 0, 0];
+        assert!(read_frame(&mut &huge[..], &mut Vec::new()).is_err());
+        let tiny = 3u32.to_le_bytes();
+        assert!(read_frame(&mut &tiny[..], &mut Vec::new()).is_err());
+    }
+}

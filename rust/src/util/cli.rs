@@ -95,6 +95,20 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Comma-separated list value (e.g. `--cluster host:1,host:2`);
+    /// empty/absent -> empty vec.
+    pub fn strs(&self, key: &str) -> Vec<String> {
+        self.raw(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim())
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.to_string())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
     /// Flags present on the command line but never read by the program —
     /// almost always a typo; callers surface these as errors.
     pub fn unused(&self) -> Vec<String> {
@@ -136,6 +150,14 @@ mod tests {
         let a = args("--used 1 --typo 2");
         let _ = a.u64("used", 0);
         assert_eq!(a.unused(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn comma_lists() {
+        let a = args("--cluster host:1,host:2,host:3 --empty=");
+        assert_eq!(a.strs("cluster"), vec!["host:1", "host:2", "host:3"]);
+        assert!(a.strs("empty").is_empty());
+        assert!(a.strs("missing").is_empty());
     }
 
     #[test]

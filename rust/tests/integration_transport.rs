@@ -1,0 +1,204 @@
+//! Transport integration: the real TCP data plane must be a drop-in
+//! substitution for the simulated one at the paper's testbed boundary.
+//!
+//!   * loopback-TCP cluster runs (same threads, real sockets) reproduce
+//!     the in-process SimNet result bit-exactly under deterministic BSP;
+//!   * a genuine multi-process cluster (OS processes spawned via the
+//!     `serve-shard` / `run-worker` / `run-cluster` subcommands) runs
+//!     logreg to completion under BSP, SSP and ESSP, and the BSP run's
+//!     final parameters match the single-process run to the bit.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::Command;
+
+use essptable::apps::logreg::{run_logreg, LogRegConfig, W_TABLE};
+use essptable::ps::checkpoint;
+use essptable::ps::client::PsClient;
+use essptable::ps::consistency::Consistency;
+use essptable::ps::server::{Cluster, ClusterConfig, PsApp, TableSpec};
+use essptable::ps::types::{Clock, Key};
+use essptable::transport::TransportSel;
+
+const WORKERS: usize = 4;
+const SHARDS: usize = 2;
+
+fn run_logreg_once(
+    transport: TransportSel,
+    consistency: Consistency,
+    clocks: u64,
+) -> HashMap<Key, Vec<f32>> {
+    let (report, _) = run_logreg(
+        ClusterConfig {
+            workers: WORKERS,
+            shards: SHARDS,
+            consistency,
+            transport,
+            deterministic: true,
+            ..Default::default()
+        },
+        LogRegConfig::default(),
+        clocks,
+    );
+    report.table_rows
+}
+
+fn assert_bit_identical(a: &HashMap<Key, Vec<f32>>, b: &HashMap<Key, Vec<f32>>) {
+    assert_eq!(a.len(), b.len(), "row sets differ");
+    for (k, va) in a {
+        let vb = b.get(k).unwrap_or_else(|| panic!("row {k:?} missing"));
+        assert_eq!(va.len(), vb.len(), "row {k:?} length differs");
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "row {k:?} elem {i} differs: {x} vs {y}"
+            );
+        }
+    }
+}
+
+// --------------------------------------------------- loopback, in-process
+
+#[test]
+fn tcp_loopback_matches_simnet_bit_exact_under_bsp() {
+    let sim = run_logreg_once(TransportSel::Sim, Consistency::Bsp, 8);
+    let tcp = run_logreg_once(TransportSel::Tcp, Consistency::Bsp, 8);
+    assert_bit_identical(&sim, &tcp);
+    // And the weights actually moved (the run did real work).
+    let w = &sim[&(W_TABLE, 0)];
+    assert!(w.iter().any(|x| *x != 0.0), "weights never updated");
+}
+
+#[test]
+fn tcp_loopback_ssp_trains_to_completion() {
+    let rows = run_logreg_once(TransportSel::Tcp, Consistency::Ssp { s: 2 }, 8);
+    let w = &rows[&(W_TABLE, 0)];
+    assert!(w.iter().all(|x| x.is_finite()));
+    assert!(w.iter().any(|x| *x != 0.0));
+}
+
+#[test]
+fn tcp_loopback_essp_pushes_and_counts_exactly() {
+    // Counter workload: exact-integer increments make "no update lost"
+    // checkable regardless of float order; ESSP must actually push.
+    let mut cluster = Cluster::new(ClusterConfig {
+        workers: WORKERS,
+        shards: SHARDS,
+        consistency: Consistency::Essp { s: 2 },
+        transport: TransportSel::Tcp,
+        ..Default::default()
+    });
+    cluster.add_table(TableSpec::zeros(0, 4, 1));
+    let apps: Vec<Box<dyn PsApp>> = (0..WORKERS)
+        .map(|_| {
+            Box::new(|ps: &mut PsClient, _c: Clock| {
+                let _ = ps.get((0, 0));
+                ps.inc((0, 0), &[1.0]);
+                None
+            }) as Box<dyn PsApp>
+        })
+        .collect();
+    let report = cluster.run(apps, 10);
+    assert_eq!(report.table_rows[&(0, 0)][0], (WORKERS * 10) as f32);
+    assert!(
+        report.shard_stats.iter().any(|s| s.push_waves > 0),
+        "ESSP never pushed over TCP"
+    );
+    // Real frames crossed the wire and were all accounted for.
+    assert!(report.net_messages > 0);
+    assert!(report.net_bytes > 0);
+}
+
+// ------------------------------------------------------- multi-process
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_essptable")
+}
+
+fn out_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("esspt-dist-{}-{tag}", std::process::id()))
+}
+
+/// Launch a full multi-process cluster (2 shards + 4 workers as OS
+/// processes over loopback TCP) and return the merged final tables.
+fn run_cluster_processes(consistency: &str, clocks: u64, tag: &str) -> HashMap<Key, Vec<f32>> {
+    let out = out_dir(tag);
+    std::fs::create_dir_all(&out).unwrap();
+    let status = Command::new(bin())
+        .args([
+            "run-cluster",
+            "--app",
+            "logreg",
+            "--workers",
+            &WORKERS.to_string(),
+            "--shards",
+            &SHARDS.to_string(),
+            "--clocks",
+            &clocks.to_string(),
+            "--consistency",
+            consistency,
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawning run-cluster");
+    assert!(status.success(), "run-cluster {consistency} failed: {status}");
+    let mut rows = HashMap::new();
+    for i in 0..SHARDS {
+        let dump = out.join(format!("shard_{i}.ckp"));
+        rows.extend(checkpoint::load(&dump).expect("loading shard dump"));
+    }
+    std::fs::remove_dir_all(&out).ok();
+    rows
+}
+
+#[test]
+fn multiprocess_bsp_matches_single_process_bit_exact() {
+    let dist = run_cluster_processes("bsp", 10, "bsp");
+    let local = run_logreg_once(TransportSel::Sim, Consistency::Bsp, 10);
+    assert_bit_identical(&local, &dist);
+}
+
+#[test]
+fn multiprocess_ssp_and_essp_run_to_completion() {
+    for (consistency, tag) in [("ssp:2", "ssp"), ("essp:2", "essp")] {
+        let rows = run_cluster_processes(consistency, 8, tag);
+        let w = rows
+            .get(&(W_TABLE, 0))
+            .unwrap_or_else(|| panic!("{consistency}: weight row missing"));
+        assert!(
+            w.iter().all(|x| x.is_finite()),
+            "{consistency}: non-finite weights"
+        );
+        assert!(
+            w.iter().any(|x| *x != 0.0),
+            "{consistency}: weights never updated"
+        );
+    }
+}
+
+#[test]
+fn multiprocess_vap_is_rejected_with_guidance() {
+    let out = out_dir("vap");
+    std::fs::create_dir_all(&out).unwrap();
+    let output = Command::new(bin())
+        .args([
+            "run-cluster",
+            "--app",
+            "counter",
+            "--consistency",
+            "vap:0.5",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawning run-cluster");
+    assert!(!output.status.success(), "vap must not launch cross-process");
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        stderr.contains("global synchronization"),
+        "unhelpful error: {stderr}"
+    );
+    std::fs::remove_dir_all(&out).ok();
+}

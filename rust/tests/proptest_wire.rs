@@ -1,0 +1,317 @@
+//! Wire-codec property tests (offline vendor set has no `proptest`, so
+//! this uses the same seeded-case harness as `proptest_invariants`):
+//!
+//!   * `decode(encode(m)) == m` over randomly generated messages of every
+//!     `ToShard`/`ToWorker` variant, with `wire_bytes()` checked against
+//!     the actual encoded length on every case (one source of truth);
+//!   * every proper prefix of a frame fails cleanly (no panic, no bogus
+//!     decode) — the truncation fuzz;
+//!   * garbage kind/node bytes, trailing bytes, and lying payload-length
+//!     fields are rejected before any oversized allocation.
+
+use std::sync::Arc;
+
+use essptable::ps::msg::{PushRow, ToShard, ToWorker};
+use essptable::ps::types::Key;
+use essptable::transport::wire;
+use essptable::transport::{NodeId, Packet};
+use essptable::util::rng::Rng;
+
+const SRC: NodeId = NodeId::Worker(3);
+const DST: NodeId = NodeId::Shard(1);
+
+fn gen_key(rng: &mut Rng) -> Key {
+    (rng.next_u32() % 64, rng.below(1 << 20))
+}
+
+fn gen_clock(rng: &mut Rng) -> i64 {
+    // Mixed-sign clocks, including NEVER-ish negatives.
+    (rng.next_u64() as i64) >> 16
+}
+
+fn gen_payload(rng: &mut Rng) -> Vec<f32> {
+    let n = rng.usize_below(33);
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn gen_arc(rng: &mut Rng) -> Arc<[f32]> {
+    gen_payload(rng).into()
+}
+
+fn gen_push_rows(rng: &mut Rng) -> Vec<PushRow> {
+    (0..rng.usize_below(9))
+        .map(|_| PushRow {
+            key: gen_key(rng),
+            data: gen_arc(rng),
+            fresh: gen_clock(rng),
+        })
+        .collect()
+}
+
+const TO_SHARD_VARIANTS: usize = 7;
+
+fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
+    match variant {
+        0 => ToShard::Get {
+            key: gen_key(rng),
+            worker: rng.usize_below(64),
+            min_vclock: gen_clock(rng),
+        },
+        1 => ToShard::Update {
+            worker: rng.usize_below(64),
+            clock: gen_clock(rng),
+            rows: (0..rng.usize_below(9))
+                .map(|_| (gen_key(rng), gen_payload(rng)))
+                .collect(),
+        },
+        2 => ToShard::ClockTick {
+            worker: rng.usize_below(64),
+            clock: gen_clock(rng),
+        },
+        3 => ToShard::Register {
+            key: gen_key(rng),
+            worker: rng.usize_below(64),
+        },
+        4 => ToShard::PushAck {
+            worker: rng.usize_below(64),
+            vclock: gen_clock(rng),
+        },
+        5 => ToShard::VapAck {
+            worker: rng.usize_below(64),
+            seq: rng.next_u64(),
+        },
+        _ => ToShard::Shutdown,
+    }
+}
+
+const TO_WORKER_VARIANTS: usize = 3;
+
+fn gen_to_worker(rng: &mut Rng, variant: usize) -> ToWorker {
+    match variant {
+        0 => ToWorker::Row {
+            key: gen_key(rng),
+            data: gen_arc(rng),
+            vclock: gen_clock(rng),
+            fresh: gen_clock(rng),
+        },
+        1 => ToWorker::Push {
+            shard: rng.usize_below(16),
+            vclock: gen_clock(rng),
+            rows: gen_push_rows(rng),
+        },
+        _ => ToWorker::VapPush {
+            shard: rng.usize_below(16),
+            seq: rng.next_u64(),
+            rows: gen_push_rows(rng),
+        },
+    }
+}
+
+fn encode(p: &Packet) -> Vec<u8> {
+    let mut v = Vec::new();
+    wire::write_frame(&mut v, SRC, DST, p).unwrap();
+    v
+}
+
+fn roundtrip(p: Packet) {
+    let bytes = encode(&p);
+    assert_eq!(
+        bytes.len(),
+        p.wire_bytes(),
+        "wire_bytes() is not the encoded size for {p:?}"
+    );
+    let mut r = &bytes[..];
+    let mut scratch = Vec::new();
+    let (src, dst, back) = wire::read_frame(&mut r, &mut scratch)
+        .expect("decode failed")
+        .expect("unexpected EOF");
+    assert_eq!((src, dst), (SRC, DST));
+    assert_eq!(back, p, "roundtrip mismatch");
+    assert!(r.is_empty(), "decoder left bytes unconsumed");
+    // The stream is exactly one frame: the next read is a clean EOF.
+    assert!(wire::read_frame(&mut r, &mut scratch).unwrap().is_none());
+}
+
+#[test]
+fn prop_roundtrip_every_to_shard_variant() {
+    for case in 0..300 {
+        let mut rng = Rng::with_stream(0x3317e, case);
+        for v in 0..TO_SHARD_VARIANTS {
+            roundtrip(Packet::ToShard(gen_to_shard(&mut rng, v)));
+        }
+    }
+}
+
+#[test]
+fn prop_roundtrip_every_to_worker_variant() {
+    for case in 0..300 {
+        let mut rng = Rng::with_stream(0x3317f, case);
+        for v in 0..TO_WORKER_VARIANTS {
+            roundtrip(Packet::ToWorker(gen_to_worker(&mut rng, v)));
+        }
+    }
+}
+
+#[test]
+fn prop_back_to_back_frames_stream_cleanly() {
+    // Many frames concatenated on one stream (what a TCP reader sees)
+    // decode in order with nothing lost or reordered.
+    let mut rng = Rng::with_stream(0x57123a, 7);
+    let msgs: Vec<Packet> = (0..50)
+        .map(|i| {
+            if i % 2 == 0 {
+                Packet::ToShard(gen_to_shard(&mut rng, i % TO_SHARD_VARIANTS))
+            } else {
+                Packet::ToWorker(gen_to_worker(&mut rng, i % TO_WORKER_VARIANTS))
+            }
+        })
+        .collect();
+    let mut stream = Vec::new();
+    for m in &msgs {
+        wire::write_frame(&mut stream, SRC, DST, m).unwrap();
+    }
+    let mut r = &stream[..];
+    let mut scratch = Vec::new();
+    for expect in &msgs {
+        let (_, _, got) = wire::read_frame(&mut r, &mut scratch).unwrap().unwrap();
+        assert_eq!(&got, expect);
+    }
+    assert!(wire::read_frame(&mut r, &mut scratch).unwrap().is_none());
+}
+
+fn check_truncations(p: Packet) {
+    let bytes = encode(&p);
+    for cut in 0..bytes.len() {
+        let mut r = &bytes[..cut];
+        let mut scratch = Vec::new();
+        match wire::read_frame(&mut r, &mut scratch) {
+            Ok(None) => assert_eq!(cut, 0, "clean EOF mid-frame at {cut} bytes"),
+            Ok(Some(m)) => panic!(
+                "decoded {m:?} from a {cut}-byte prefix of a {}-byte frame",
+                bytes.len()
+            ),
+            Err(_) => {} // the required outcome: a clean error
+        }
+    }
+}
+
+#[test]
+fn prop_truncated_frames_error_cleanly_every_variant() {
+    for case in 0..20 {
+        let mut rng = Rng::with_stream(0x77aa, case);
+        for v in 0..TO_SHARD_VARIANTS {
+            check_truncations(Packet::ToShard(gen_to_shard(&mut rng, v)));
+        }
+        for v in 0..TO_WORKER_VARIANTS {
+            check_truncations(Packet::ToWorker(gen_to_worker(&mut rng, v)));
+        }
+    }
+}
+
+#[test]
+fn garbage_prefix_per_variant_is_rejected() {
+    // Flip the kind byte (offset 14: len 4 + src 5 + dst 5) to an unknown
+    // value for one encoded frame of every variant: decode must fail.
+    let mut rng = Rng::with_stream(0x9b1d, 1);
+    let mut frames: Vec<Vec<u8>> = Vec::new();
+    for v in 0..TO_SHARD_VARIANTS {
+        frames.push(encode(&Packet::ToShard(gen_to_shard(&mut rng, v))));
+    }
+    for v in 0..TO_WORKER_VARIANTS {
+        frames.push(encode(&Packet::ToWorker(gen_to_worker(&mut rng, v))));
+    }
+    for bytes in &mut frames {
+        bytes[14] = 0x7F;
+        let mut r = &bytes[..];
+        let err = wire::read_frame(&mut r, &mut Vec::new());
+        assert!(err.is_err(), "unknown kind byte accepted");
+        assert!(
+            format!("{:#}", err.unwrap_err()).contains("unknown message kind"),
+            "wrong error"
+        );
+    }
+    // Garbage node kind in the src address.
+    let mut bytes = encode(&Packet::ToShard(ToShard::Shutdown));
+    bytes[4] = 9;
+    assert!(wire::read_frame(&mut &bytes[..], &mut Vec::new()).is_err());
+}
+
+#[test]
+fn trailing_bytes_inside_a_frame_are_rejected() {
+    // Grow the declared frame length and append padding: the body parses
+    // but leaves residue, which must be an error (catches length lies).
+    let mut bytes = encode(&Packet::ToShard(ToShard::ClockTick { worker: 1, clock: 2 }));
+    let len = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+    bytes[..4].copy_from_slice(&(len + 4).to_le_bytes());
+    bytes.extend_from_slice(&[0u8; 4]);
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+}
+
+#[test]
+fn lying_row_count_is_bounded_before_allocation() {
+    // A Push frame whose row count claims 2^31 rows in a tiny body must
+    // fail on the remaining-bytes bound, not attempt the allocation.
+    // Layout after kind byte (offset 15): shard u32 | vclock i64 | n u32.
+    let mut bytes = encode(&Packet::ToWorker(ToWorker::Push {
+        shard: 0,
+        vclock: 1,
+        rows: vec![],
+    }));
+    let n_off = 15 + 4 + 8;
+    bytes[n_off..n_off + 4].copy_from_slice(&(1u32 << 31).to_le_bytes());
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("claims"), "{err:#}");
+}
+
+#[test]
+fn lying_payload_length_is_bounded_before_allocation() {
+    // An Update row claiming u32::MAX f32s: rejected by the byte bound.
+    // Layout after kind byte: worker u32 | clock i64 | nrows u32 |
+    // key (u32+u64) | rowlen u32 | payload.
+    let mut bytes = encode(&Packet::ToShard(ToShard::Update {
+        worker: 0,
+        clock: 1,
+        rows: vec![((0, 0), vec![1.0, 2.0])],
+    }));
+    let len_off = 15 + 4 + 8 + 4 + 12;
+    bytes[len_off..len_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("truncated") || msg.contains("overflow"),
+        "{msg}"
+    );
+}
+
+#[test]
+fn special_float_bit_patterns_survive_roundtrip() {
+    let specials = vec![
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        -0.0,
+        f32::MIN_POSITIVE,
+        f32::MAX,
+        f32::from_bits(0x7FC0_1234), // payloaded NaN
+    ];
+    let p = Packet::ToWorker(ToWorker::Row {
+        key: (0, 0),
+        data: specials.clone().into(),
+        vclock: 0,
+        fresh: 0,
+    });
+    let bytes = encode(&p);
+    let (_, _, back) = wire::read_frame(&mut &bytes[..], &mut Vec::new())
+        .unwrap()
+        .unwrap();
+    match back {
+        Packet::ToWorker(ToWorker::Row { data, .. }) => {
+            assert_eq!(data.len(), specials.len());
+            for (a, b) in specials.iter().zip(data.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} lost its bit pattern");
+            }
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}

@@ -9,6 +9,10 @@
 # before and once after a perf change therefore records both numbers —
 # the cross-PR perf ratchet.
 #
+# Series recorded: in-process e2e_* numbers (SimNet data plane) plus the
+# e2e_*_tcp_loopback series — the same workload over the real TCP
+# transport (wire codec + socket hops), for the sim-vs-real comparison.
+#
 # Usage: scripts/bench.sh
 set -euo pipefail
 
