@@ -315,9 +315,16 @@ fn main() {
     }
     // The alloc-free read path on the headline ESSP config.
     bench_get_inc_clock(Consistency::Essp { s: 3 }, 4, true, &mut entries);
+    // Value-bounded models (per-update waves + ∞-norm reports + bound
+    // grants — the policy layer's most message-intensive path).
+    bench_get_inc_clock(Consistency::Vap { v0: 1000.0 }, 4, true, &mut entries);
+    bench_get_inc_clock(Consistency::Avap { v0: 1000.0, s: 3 }, 4, true, &mut entries);
     // The same workload over real loopback TCP (codec + socket cost).
     bench_get_inc_clock_tcp(Consistency::Bsp, 4, &mut entries);
     bench_get_inc_clock_tcp(Consistency::Essp { s: 3 }, 4, &mut entries);
+    // VAP over TCP: possible at all only since the consistency-policy
+    // refactor distributed its enforcement onto the wire.
+    bench_get_inc_clock_tcp(Consistency::Vap { v0: 1000.0 }, 4, &mut entries);
     bench_push_vs_pull_traffic();
     write_json(&entries);
 }

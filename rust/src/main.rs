@@ -14,7 +14,7 @@
 //!   run-cluster                 — spawn shards + workers as OS processes
 //!
 //! Common flags: --workers N --shards N --clocks N --seed N
-//!   --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0
+//!   --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0|avap:V0:S
 //!   --straggler none|uniform:F|fixed:W,..xF|spikes:P,F|rotating:PxF
 //!   --net lan|instant --transport sim|tcp --out results/
 
@@ -100,7 +100,7 @@ const USAGE: &str = "usage: essptable <subcommand> [flags]
                   [--dump FILE.ckp]
                 run-worker  --index W --cluster host:p,... --workers N
   common flags: --workers N --shards N --clocks N --seed N
-                --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0
+                --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0|avap:V0:S
                 --straggler none|uniform:F|... --net lan|instant
                 --transport sim|tcp
                 --out DIR  (see README.md for per-command flags)";
@@ -455,16 +455,18 @@ fn dist_app(args: &Args) -> anyhow::Result<DistApp> {
     }
 }
 
-/// Reject consistency models a multi-process cluster cannot honor.
-fn check_dist_consistency(c: Consistency) -> anyhow::Result<()> {
-    if c.value_bound().is_some() {
-        bail!(
-            "vap needs the process-global visibility tracker and cannot run \
-             across OS processes — exactly the paper's point that value-bounds \
-             are unrealizable without global synchronization; use bsp/ssp/essp/async"
-        );
-    }
-    Ok(())
+/// Default for the cluster subcommands' `--deterministic` flag.
+///
+/// Deterministic staged replay works for every model — value-bounded
+/// policies fire their eager (preview) waves at update receipt, so
+/// visibility never depends on the deferred commit — and is on by default
+/// so multi-process runs are bit-reproducible. Async is the exception:
+/// staging defers *all* read freshness to table-clock commits, the
+/// opposite of the Hogwild dynamics the Async baseline exists to measure,
+/// so it defaults off there. An explicit `--deterministic true|false`
+/// always wins (the transport-matrix test opts Async in deliberately).
+fn deterministic_default(c: Consistency) -> bool {
+    !matches!(c, Consistency::Async { .. })
 }
 
 fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
@@ -473,14 +475,10 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
     let workers = args.usize("workers", 4);
     let bind = args.str("bind", "127.0.0.1:0");
     let consistency = consistency(args, "bsp")?;
-    // Deterministic replay defers updates to the table-clock commit, which
-    // would silently replace Async's eager-visibility semantics (Async has
-    // no clock gate to hide the deferral behind) — never stage for it.
-    let deterministic = args.bool("deterministic", true) && consistency.staleness().is_some();
+    let deterministic = args.bool("deterministic", deterministic_default(consistency));
     let seed = args.u64("seed", 42);
     let dump = args.opt_str("dump");
     ensure!(index < shards, "--index {index} out of range for --shards {shards}");
-    check_dist_consistency(consistency)?;
     let app = dist_app(args)?;
     let row_len = server::table_row_lens(&app.tables);
 
@@ -501,9 +499,8 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
     let mut shard = Shard::new(
         index,
         workers,
-        consistency.server_push(),
+        consistency,
         transport.handle(),
-        None,
         row_len,
         deterministic,
     );
@@ -589,7 +586,6 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
     let workers = args.usize("workers", 4);
     let clocks = args.u64("clocks", 20);
     let consistency = consistency(args, "bsp")?;
-    check_dist_consistency(consistency)?;
     let shard_addrs = args.strs("cluster");
     ensure!(
         !shard_addrs.is_empty(),
@@ -635,7 +631,6 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
         transport.handle(),
         worker_rx,
         row_len,
-        None,
         Instant::now(),
     );
     let mut worker = (app.make)(index, workers);
@@ -646,6 +641,9 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
         }
         ps.tick();
     }
+    // Value-bounded models: tell every shard this worker is done, so the
+    // cluster never waits on acks that will not come.
+    ps.finish();
     println!(
         "worker {index}: done ({} pulls, {} pushes in{})",
         ps.stats.pulls,
@@ -695,12 +693,18 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
     let shards = args.usize("shards", 2);
     let clocks = args.u64("clocks", 20);
     let consistency = consistency(args, "bsp")?;
-    check_dist_consistency(consistency)?;
+    // A multi-process cluster *is* the tcp transport; accept the common
+    // flag for symmetry with the in-process commands.
+    let transport = args.str("transport", "tcp");
+    ensure!(
+        transport == "tcp",
+        "run-cluster always runs over tcp (got --transport {transport:?})"
+    );
     let seed = args.u64("seed", 42);
     let app_name = args.str("app", "logreg");
     let lr = args.f32("lr", 0.1);
     let data_seed = args.u64("data-seed", 21);
-    let deterministic = args.bool("deterministic", true);
+    let deterministic = args.bool("deterministic", deterministic_default(consistency));
     let out = PathBuf::from(args.str("out", "results/cluster"));
     std::fs::create_dir_all(&out).with_context(|| format!("creating {out:?}"))?;
 

@@ -1,18 +1,19 @@
 //! ESSPTable client library: the GET / INC / CLOCK interface workers
 //! program against (paper, "PS Interface").
 //!
-//! Enforcement of each consistency model happens here:
-//!   * SSP/BSP/ESSP read condition: a cached row is readable at worker
-//!     clock c iff its vclock >= c - s - 1; otherwise the client pulls and
-//!     blocks (`ToShard::Get` with `min_vclock`, which the shard holds
-//!     until the table clock is high enough).
-//!   * ESSP: on first GET of a key the client registers for eager pushes;
-//!     pushed waves land in the cache from the inbox drain, so reads
-//!     almost always hit fresh copies (the paper's Fig. 1 effect).
-//!   * Async: reads never block after first fetch; refresh pulls are fired
-//!     opportunistically.
-//!   * VAP: reads additionally spin (draining the inbox, so acks keep
-//!     flowing) until the global in-transit value bound holds.
+//! The client core is consistency-agnostic: every model-specific decision
+//! is delegated to the [`ClientPolicy`] its [`Consistency`] config
+//! selects (see `ps::policy`):
+//!   * read admission — the policy's clock window gates cached copies; a
+//!     miss pulls and blocks (`ToShard::Get` with `min_vclock`, which the
+//!     shard holds until the table clock is high enough);
+//!   * refresh — eager registration (ESSP/VAP families) or opportunistic
+//!     re-pulls (Async family);
+//!   * the value gate — reads spin (draining the inbox, so acks keep
+//!     flowing) while any shard's bound grant is revoked
+//!     (`ToWorker::Bound`, value-bounded family);
+//!   * flush obligations — per-shard ∞-norm reports ahead of the Update
+//!     batches, and end-of-run `Detach` teardown.
 //!
 //! Read paths, fastest first:
 //!   * [`PsClient::with_row`] — borrow the cached snapshot in place;
@@ -32,10 +33,10 @@ use std::time::{Duration, Instant};
 use super::cache::RowCache;
 use super::consistency::Consistency;
 use super::msg::{ToShard, ToWorker};
+use super::policy::ClientPolicy;
 use super::router::Router;
 use super::types::{Clock, Key, TableId, WorkerId};
 use super::update::UpdateMap;
-use super::vap::VapTracker;
 use crate::metrics::staleness::StalenessHist;
 use crate::metrics::timeline::Timeline;
 use crate::transport::{NodeId, Packet, TransportHandle};
@@ -95,7 +96,10 @@ pub struct ClientStats {
     pub rows_pushed_in: u64,
     pub raw_incs: u64,
     pub update_batches: u64,
+    /// Value-bounded models: total time reads spent blocked on revoked
+    /// bound grants, and the number of reads that blocked at least once.
     pub vap_stall_ns: u64,
+    pub vap_stalled_reads: u64,
 }
 
 /// The per-worker PS client.
@@ -103,6 +107,7 @@ pub struct PsClient {
     worker: WorkerId,
     clock: Clock,
     cfg: ClientConfig,
+    policy: Box<dyn ClientPolicy>,
     router: Router,
     net: TransportHandle,
     inbox: Receiver<ToWorker>,
@@ -123,7 +128,8 @@ pub struct PsClient {
     /// Reusable overlay buffer for `with_row` (read-my-writes composition
     /// without per-read allocation).
     scratch: Vec<f32>,
-    vap: Option<Arc<VapTracker>>,
+    /// End-of-run teardown already sent.
+    finished: bool,
     started: Instant,
     pub staleness: StalenessHist,
     pub timeline: Timeline,
@@ -132,7 +138,6 @@ pub struct PsClient {
 }
 
 impl PsClient {
-    #[allow(clippy::too_many_arguments)]
     pub fn new(
         worker: WorkerId,
         cfg: ClientConfig,
@@ -140,15 +145,16 @@ impl PsClient {
         net: TransportHandle,
         inbox: Receiver<ToWorker>,
         row_len: HashMap<TableId, usize>,
-        vap: Option<Arc<VapTracker>>,
         started: Instant,
     ) -> Self {
         let cache_capacity = cfg.cache_capacity;
         let n_shards = router.n_shards();
+        let policy = cfg.consistency.client_policy(n_shards);
         Self {
             worker,
             clock: 0,
             cfg,
+            policy,
             router,
             net,
             inbox,
@@ -160,7 +166,7 @@ impl PsClient {
             last_refresh: FxHashMap::default(),
             shard_announced: vec![super::types::NEVER; n_shards],
             scratch: Vec::new(),
-            vap,
+            finished: false,
             started,
             staleness: StalenessHist::new(),
             timeline: Timeline::new(),
@@ -194,8 +200,9 @@ impl PsClient {
         );
     }
 
-    /// Apply one inbound message to the cache. Pushed/pulled payloads are
-    /// stored as-is (`Arc` clone) — the fan-out path never deep-copies.
+    /// Apply one inbound message to the cache (or route it to the
+    /// policy). Pushed/pulled payloads are stored as-is (`Arc` clone) —
+    /// the fan-out path never deep-copies.
     fn apply(&mut self, msg: ToWorker) {
         match msg {
             ToWorker::Row {
@@ -246,6 +253,9 @@ impl PsClient {
                     },
                 );
             }
+            ToWorker::Bound { shard, granted } => {
+                self.policy.on_bound(shard, granted);
+            }
         }
     }
 
@@ -277,36 +287,44 @@ impl PsClient {
         }
     }
 
-    /// VAP read gate: spin (draining acks) until the value bound holds.
-    fn vap_gate(&mut self) {
-        let Some(vap) = self.vap.clone() else { return };
-        if vap.is_bounded() {
+    /// Value-bound read gate: spin (draining acks, so shards can retire
+    /// in-transit batches and re-grant) while any shard's bound grant is
+    /// revoked. No-op for policies without a value bound.
+    fn value_gate(&mut self) {
+        if !self.policy.read_blocked() {
             return;
         }
         let t0 = Instant::now();
-        let mut first = true;
-        while !vap.is_bounded() {
-            self.wait_inbox(Duration::from_micros(200));
-            if first {
-                vap.record_stall(0, true);
-                first = false;
+        self.stats.vap_stalled_reads += 1;
+        let mut last_msg = Instant::now();
+        while self.policy.read_blocked() {
+            if self.wait_inbox(Duration::from_micros(200)) {
+                last_msg = Instant::now();
+            }
+            if last_msg.elapsed() > read_stall_limit() {
+                panic!(
+                    "worker {} value-gated read got no messages for {:?} \
+                     waiting for bound grants: shard unreachable or cluster \
+                     wedged (raise/disable via ESSPTABLE_READ_TIMEOUT_S)",
+                    self.worker,
+                    last_msg.elapsed()
+                );
             }
         }
-        let ns = t0.elapsed().as_nanos() as u64;
-        vap.record_stall(ns, false);
-        self.stats.vap_stall_ns += ns;
+        self.stats.vap_stall_ns += t0.elapsed().as_nanos() as u64;
     }
 
-    /// Core of every read: enforce the read condition, then return the
-    /// cached snapshot (an `Arc` clone — no payload copy). The overlay of
-    /// this worker's pending writes is left to the public wrappers.
+    /// Core of every read: enforce the policy's read conditions, then
+    /// return the cached snapshot (an `Arc` clone — no payload copy). The
+    /// overlay of this worker's pending writes is left to the public
+    /// wrappers.
     fn get_snapshot(&mut self, key: Key) -> Arc<[f32]> {
         self.stats.gets += 1;
         self.drain_inbox();
-        self.vap_gate();
+        self.value_gate();
 
-        // ESSP/VAP: register for eager pushes on first access.
-        if self.cfg.consistency.server_push() && self.registered.insert(key) {
+        // ESSP/VAP families: register for eager pushes on first access.
+        if self.policy.eager_register() && self.registered.insert(key) {
             self.send(
                 self.router.shard_of(&key),
                 ToShard::Register {
@@ -316,7 +334,11 @@ impl PsClient {
             );
         }
 
-        let min_vclock = self.cfg.consistency.min_row_vclock(self.clock);
+        // The clock window (None = clock-unbounded: any cached copy is
+        // admissible, and pulls are served at whatever clock the shard
+        // holds).
+        let min_vclock = self.policy.min_row_vclock(self.clock);
+        let pull_floor = min_vclock.unwrap_or(Clock::MIN / 2);
         let key_shard = self.router.shard_of(&key);
         let mut pulled = false;
         let mut stalled_since: Option<Instant> = None;
@@ -328,10 +350,9 @@ impl PsClient {
                 // shard's latest wave announcement if newer (the row was
                 // in no wave since, hence unchanged).
                 let vclock = row.vclock.max(announced);
-                let ok = match self.cfg.consistency.async_refresh() {
-                    // Async: any cached copy is readable.
-                    Some(_) => true,
-                    None => vclock >= min_vclock,
+                let ok = match min_vclock {
+                    Some(mv) => vclock >= mv,
+                    None => true,
                 };
                 if ok {
                     // The paper's clock differential: c_param - c_worker,
@@ -346,8 +367,8 @@ impl PsClient {
                     if !pulled {
                         self.stats.cache_hits += 1;
                     }
-                    // Async opportunistic refresh.
-                    if let Some(every) = self.cfg.consistency.async_refresh() {
+                    // Opportunistic refresh (Async family).
+                    if let Some(every) = self.policy.refresh_every() {
                         let last = *self.last_refresh.get(&key).unwrap_or(&(Clock::MIN / 2));
                         if self.clock - last >= every && !self.pulls_in_flight.contains(&key) {
                             self.fire_pull(key, Clock::MIN / 2);
@@ -359,7 +380,7 @@ impl PsClient {
             }
             // Cache miss or stale beyond the bound: pull and block.
             if !self.pulls_in_flight.contains(&key) {
-                self.fire_pull(key, min_vclock);
+                self.fire_pull(key, pull_floor);
             }
             if !pulled {
                 stalled_since = Some(Instant::now());
@@ -378,7 +399,7 @@ impl PsClient {
                 if t0.elapsed() > read_stall_limit() {
                     panic!(
                         "worker {} read of {key:?} got no messages for {:?} \
-                         waiting for vclock >= {min_vclock}: shard unreachable \
+                         waiting for vclock >= {pull_floor}: shard unreachable \
                          or cluster wedged (raise/disable via \
                          ESSPTABLE_READ_TIMEOUT_S)",
                         self.worker,
@@ -473,13 +494,6 @@ impl PsClient {
 
     /// CLOCK: flush coalesced updates, commit the tick, advance the clock.
     pub fn tick(&mut self) {
-        // The batch ∞-norm only matters to the VAP tracker: skip the work
-        // entirely for every other consistency model.
-        let batch_norm = if self.vap.is_some() {
-            self.pending.inf_norm()
-        } else {
-            0.0
-        };
         // Read-my-writes across the flush: fold the deltas into our cached
         // copies (the server copy will include them once applied; replacing
         // pushes/pulls overwrite, so nothing double-counts).
@@ -496,14 +510,28 @@ impl PsClient {
         let n_shards = self.router.n_shards();
         let router = self.router;
         let batches = self.pending.drain_routed(n_shards, |k| router.shard_of(k));
-        // VAP bookkeeping: the flushed batch enters the in-transit set,
-        // *before* any shard can apply it (the tracker is process-global,
-        // so this ordering is strict).
-        if let Some(vap) = &self.vap {
-            let parts = batches.iter().filter(|b| !b.is_empty()).count() as u32;
-            vap.add_batch(self.worker, self.clock, batch_norm, parts);
-        }
+        // Value-bounded models: report each part's ∞-norm to its shard
+        // ahead of the Update on the same FIFO link, so the shard
+        // registers the in-transit mass before it can apply the part.
+        // Zero-norm (incl. empty) parts are reported too — every shard's
+        // decay clock t must count every flush of every worker. The norm
+        // scan costs O(batch) and runs only under these policies.
+        let report_norms = self.policy.reports_norms();
         for (shard, rows) in batches.into_iter().enumerate() {
+            if report_norms {
+                let inf_norm = rows
+                    .iter()
+                    .flat_map(|(_, v)| v.iter())
+                    .fold(0.0f32, |m, x| m.max(x.abs()));
+                self.send(
+                    shard,
+                    ToShard::NormReport {
+                        worker: self.worker,
+                        clock: self.clock,
+                        inf_norm,
+                    },
+                );
+            }
             if !rows.is_empty() {
                 self.stats.update_batches += 1;
                 self.send(
@@ -529,6 +557,26 @@ impl PsClient {
         self.clock += 1;
         self.timeline.finish_clock(self.clock_started.elapsed());
         self.clock_started = Instant::now();
+    }
+
+    /// End-of-run teardown: policies with per-worker server-side state
+    /// (value-bounded family) notify every shard that this worker will
+    /// never read or ack again — otherwise the remaining workers would
+    /// stall forever waiting on its acks. Idempotent; a no-op for other
+    /// policies.
+    pub fn finish(&mut self) {
+        if self.finished || !self.policy.detach_on_finish() {
+            return;
+        }
+        self.finished = true;
+        for shard in 0..self.router.n_shards() {
+            self.send(
+                shard,
+                ToShard::Detach {
+                    worker: self.worker,
+                },
+            );
+        }
     }
 
     /// Pace the virtual clock: after finishing `done` of `total` work

@@ -1,16 +1,32 @@
-//! Consistency models (DESIGN.md §7) — the paper's central object of study.
+//! Consistency models (DESIGN.md §7) — the paper's central object of
+//! study, reduced to *pure configuration*.
 //!
-//! A consistency model decides (a) when a cached row may be read, (b) how
-//! rows are refreshed (lazy pull vs eager push), and (c) any additional
-//! global condition (VAP's value bound). `Consistency` is pure data; the
-//! enforcement lives in `client.rs` / `shard.rs` / `vap.rs`, keyed off the
-//! accessors here, so every model shares one code path and differs only in
-//! policy — mirroring how ESSP is "SSP plus an eager communication
-//! strategy" in the paper.
+//! `Consistency` carries each model's parameters and knows how to parse /
+//! label them; all enforcement lives in [`crate::ps::policy`], selected by
+//! [`Consistency::client_policy`] / [`Consistency::server_policy`]. The
+//! client and shard cores are policy-agnostic: every model shares one
+//! code path and differs only in the policy pair it plugs in — mirroring
+//! how ESSP is "SSP plus an eager communication strategy" in the paper,
+//! and how AVAP is SSP's clock window composed with VAP's value bound.
+//!
+//! Model strings (CLI `--consistency`):
+//!
+//! | string      | model                                              |
+//! |-------------|----------------------------------------------------|
+//! | `bsp`       | Bulk Synchronous Parallel (== `ssp:0`)             |
+//! | `ssp:S`     | Stale Synchronous Parallel, staleness `S`          |
+//! | `essp:S`    | Eager SSP: same bound, server-push refresh         |
+//! | `async[:R]` | unbounded; opportunistic re-pull every `R` clocks  |
+//! | `vap:V0`    | value-bounded (v_t = V0/sqrt(t)), clock-unbounded  |
+//! | `avap:V0:S` | value bound *and* SSP clock window (§Theory)       |
 
+use super::policy::value::{ValueClient, ValueServer};
+use super::policy::window::{AsyncClient, PullServer, PushServer, WindowClient};
+use super::policy::{ClientPolicy, ServerPolicy};
 use super::types::Clock;
 
-/// Which consistency model a run uses.
+/// Which consistency model a run uses. Pure data: the enforcement is the
+/// policy pair this selects (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Consistency {
     /// Bulk Synchronous Parallel: barrier every clock (== `Ssp { s: 0 }`,
@@ -27,97 +43,111 @@ pub enum Consistency {
     Async { refresh_every: Clock },
     /// Value-bounded Asynchronous Parallel: reads additionally wait until
     /// every worker's aggregated in-transit update magnitude is below
-    /// `v0 / sqrt(t)`. Enforced by a global tracker that is only
-    /// realizable because the cluster is simulated (the paper's point).
-    /// Transport is eager (ESSP-style) so visibility can be tracked.
+    /// `v0 / sqrt(t)`. Clock-wise genuinely unbounded. Enforced by
+    /// shard-local visibility ledgers plus bound grant/revoke messages,
+    /// so it runs over any transport — at the per-update-round-trip cost
+    /// the paper predicts.
     Vap { v0: f32 },
+    /// AVAP (the paper's §Theory suggestion): VAP's value bound composed
+    /// with SSP's clock window `s`. Implemented purely as a policy pair —
+    /// no client/shard core involvement.
+    Avap { v0: f32, s: Clock },
 }
 
 impl Consistency {
-    /// Staleness bound used in the SSP read condition; `None` = unbounded.
-    pub fn staleness(&self) -> Option<Clock> {
-        match self {
-            Consistency::Bsp => Some(0),
-            Consistency::Ssp { s } | Consistency::Essp { s } => Some(*s),
-            Consistency::Async { .. } => None,
-            // VAP bounds *values*, not clocks; clock-wise it is unbounded
-            // (we still cap at a large window to avoid pathological runs,
-            // matching the paper's "updates finitely apart" assumption).
-            Consistency::Vap { .. } => Some(1_000_000),
+    /// The client-side enforcement for this model.
+    pub fn client_policy(&self, n_shards: usize) -> Box<dyn ClientPolicy> {
+        match *self {
+            Consistency::Bsp => Box::new(WindowClient::lazy(0)),
+            Consistency::Ssp { s } => Box::new(WindowClient::lazy(s)),
+            Consistency::Essp { s } => Box::new(WindowClient::eager(s)),
+            Consistency::Async { refresh_every } => Box::new(AsyncClient { refresh_every }),
+            Consistency::Vap { .. } => Box::new(ValueClient::new(None, n_shards)),
+            Consistency::Avap { s, .. } => Box::new(ValueClient::new(Some(s), n_shards)),
         }
     }
 
-    /// Minimum row vclock needed for a read at worker clock `c`:
-    /// all updates with clock <= c - s - 1 must be visible.
-    pub fn min_row_vclock(&self, c: Clock) -> Clock {
-        match self.staleness() {
-            Some(s) => c - s - 1,
-            None => Clock::MIN / 2,
+    /// The shard-side enforcement for this model.
+    pub fn server_policy(&self, workers: usize) -> Box<dyn ServerPolicy> {
+        match *self {
+            Consistency::Bsp | Consistency::Ssp { .. } | Consistency::Async { .. } => {
+                Box::new(PullServer)
+            }
+            Consistency::Essp { .. } => Box::new(PushServer),
+            Consistency::Vap { v0 } | Consistency::Avap { v0, .. } => {
+                Box::new(ValueServer::new(v0, workers))
+            }
         }
     }
 
-    /// Does the server eagerly push refreshed rows to registered clients?
-    pub fn server_push(&self) -> bool {
-        matches!(self, Consistency::Essp { .. } | Consistency::Vap { .. })
-    }
-
-    /// Does the client need the global VAP value-bound check before reads?
+    /// The value bound v0, for models that have one (reporting only —
+    /// enforcement lives in the policies).
     pub fn value_bound(&self) -> Option<f32> {
         match self {
-            Consistency::Vap { v0 } => Some(*v0),
+            Consistency::Vap { v0 } | Consistency::Avap { v0, .. } => Some(*v0),
             _ => None,
         }
     }
 
-    /// Async refresh period (None for bounded models).
-    pub fn async_refresh(&self) -> Option<Clock> {
-        match self {
-            Consistency::Async { refresh_every } => Some(*refresh_every),
-            _ => None,
-        }
-    }
-
-    /// Parse "bsp" | "ssp:3" | "essp:3" | "async" | "async:5" | "vap:0.1".
+    /// Parse a model string (see module docs for the grammar).
     pub fn parse(s: &str) -> Result<Self, String> {
         let (head, arg) = match s.split_once(':') {
             Some((h, a)) => (h, Some(a)),
             None => (s, None),
         };
+        fn staleness(a: &str) -> Result<Clock, String> {
+            let s: Clock = a.parse().map_err(|e| format!("bad staleness: {e}"))?;
+            if s < 0 {
+                return Err(format!("bad staleness: {s} is negative"));
+            }
+            Ok(s)
+        }
+        fn bound(a: &str) -> Result<f32, String> {
+            let v0: f32 = a.parse().map_err(|e| format!("bad v0: {e}"))?;
+            if !(v0.is_finite() && v0 > 0.0) {
+                return Err(format!("bad v0: {v0} must be finite and > 0"));
+            }
+            Ok(v0)
+        }
         match head {
-            "bsp" => Ok(Consistency::Bsp),
-            "ssp" => {
-                let s: Clock = arg
-                    .ok_or("ssp needs a staleness, e.g. ssp:3")?
-                    .parse()
-                    .map_err(|e| format!("bad staleness: {e}"))?;
-                Ok(Consistency::Ssp { s })
-            }
-            "essp" => {
-                let s: Clock = arg
-                    .ok_or("essp needs a staleness, e.g. essp:3")?
-                    .parse()
-                    .map_err(|e| format!("bad staleness: {e}"))?;
-                Ok(Consistency::Essp { s })
-            }
+            "bsp" => match arg {
+                None => Ok(Consistency::Bsp),
+                Some(a) => Err(format!("bsp takes no argument (got {a:?})")),
+            },
+            "ssp" => Ok(Consistency::Ssp {
+                s: staleness(arg.ok_or("ssp needs a staleness, e.g. ssp:3")?)?,
+            }),
+            "essp" => Ok(Consistency::Essp {
+                s: staleness(arg.ok_or("essp needs a staleness, e.g. essp:3")?)?,
+            }),
             "async" => {
                 let r: Clock = match arg {
                     Some(a) => a.parse().map_err(|e| format!("bad refresh: {e}"))?,
                     None => 1,
                 };
+                if r < 1 {
+                    return Err(format!("bad refresh: {r} must be >= 1"));
+                }
                 Ok(Consistency::Async { refresh_every: r })
             }
-            "vap" => {
-                let v0: f32 = arg
-                    .ok_or("vap needs a value bound, e.g. vap:0.1")?
-                    .parse()
-                    .map_err(|e| format!("bad v0: {e}"))?;
-                Ok(Consistency::Vap { v0 })
+            "vap" => Ok(Consistency::Vap {
+                v0: bound(arg.ok_or("vap needs a value bound, e.g. vap:0.1")?)?,
+            }),
+            "avap" => {
+                let a = arg.ok_or("avap needs a bound and staleness, e.g. avap:0.1:3")?;
+                let (v, s) = a
+                    .split_once(':')
+                    .ok_or("avap needs both parts, e.g. avap:0.1:3")?;
+                Ok(Consistency::Avap {
+                    v0: bound(v)?,
+                    s: staleness(s)?,
+                })
             }
             _ => Err(format!("unknown consistency model {s:?}")),
         }
     }
 
-    /// Short human/CSV label, e.g. "essp:3".
+    /// Short human/CSV label, e.g. "essp:3"; `parse(label())` round-trips.
     pub fn label(&self) -> String {
         match self {
             Consistency::Bsp => "bsp".into(),
@@ -125,6 +155,7 @@ impl Consistency {
             Consistency::Essp { s } => format!("essp:{s}"),
             Consistency::Async { refresh_every } => format!("async:{refresh_every}"),
             Consistency::Vap { v0 } => format!("vap:{v0}"),
+            Consistency::Avap { v0, s } => format!("avap:{v0}:{s}"),
         }
     }
 }
@@ -140,25 +171,8 @@ mod tests {
     use super::*;
 
     #[test]
-    fn bsp_is_ssp0() {
-        assert_eq!(Consistency::Bsp.staleness(), Some(0));
-        assert_eq!(Consistency::Bsp.min_row_vclock(5), 4);
-        assert_eq!(Consistency::Ssp { s: 0 }.min_row_vclock(5), 4);
-    }
-
-    #[test]
-    fn ssp_window() {
-        let m = Consistency::Ssp { s: 3 };
-        // Read at clock 10 must see all updates <= 6.
-        assert_eq!(m.min_row_vclock(10), 6);
-        assert!(!m.server_push());
-        assert_eq!(Consistency::Essp { s: 3 }.min_row_vclock(10), 6);
-        assert!(Consistency::Essp { s: 3 }.server_push());
-    }
-
-    #[test]
     fn parse_roundtrip() {
-        for s in ["bsp", "ssp:3", "essp:7", "async:2", "vap:0.25"] {
+        for s in ["bsp", "ssp:3", "essp:7", "async:2", "vap:0.25", "avap:0.5:4"] {
             let m = Consistency::parse(s).unwrap();
             assert_eq!(m.label(), s);
         }
@@ -166,14 +180,43 @@ mod tests {
             Consistency::parse("async").unwrap(),
             Consistency::Async { refresh_every: 1 }
         );
-        assert!(Consistency::parse("ssp").is_err());
-        assert!(Consistency::parse("wild:1").is_err());
+        for bad in [
+            "", "ssp", "essp", "vap", "avap", "avap:0.5", "bsp:1", "ssp:-2", "vap:0",
+            "vap:-1", "vap:inf", "async:0", "avap:1:-3", "wild:1",
+        ] {
+            assert!(Consistency::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
     }
 
     #[test]
-    fn vap_exposes_bound() {
+    fn policies_enforce_the_models_bounds() {
+        // BSP/SSP: the clock window; ESSP: window + eager registration.
+        assert_eq!(Consistency::Bsp.client_policy(2).min_row_vclock(5), Some(4));
+        let ssp = Consistency::Ssp { s: 3 }.client_policy(2);
+        assert_eq!(ssp.min_row_vclock(10), Some(6));
+        assert!(!ssp.eager_register());
+        let essp = Consistency::Essp { s: 3 }.client_policy(2);
+        assert_eq!(essp.min_row_vclock(10), Some(6));
+        assert!(essp.eager_register());
+        assert!(Consistency::Essp { s: 3 }.server_policy(2).pushes_on_commit());
+        assert!(!Consistency::Ssp { s: 3 }.server_policy(2).pushes_on_commit());
+        // Async and VAP are honestly clock-unbounded — no sentinel window.
+        let vap = Consistency::Vap { v0: 0.5 }.client_policy(2);
+        assert_eq!(vap.min_row_vclock(2_000_000), None);
+        assert!(vap.reports_norms() && vap.eager_register() && vap.detach_on_finish());
+        let asy = Consistency::Async { refresh_every: 2 }.client_policy(2);
+        assert_eq!(asy.min_row_vclock(2_000_000), None);
+        assert!(!asy.reports_norms());
+        // AVAP composes both bounds.
+        let avap = Consistency::Avap { v0: 0.5, s: 3 }.client_policy(2);
+        assert_eq!(avap.min_row_vclock(10), Some(6));
+        assert!(avap.reports_norms());
+    }
+
+    #[test]
+    fn value_bound_is_config_introspection() {
         assert_eq!(Consistency::Vap { v0: 0.5 }.value_bound(), Some(0.5));
+        assert_eq!(Consistency::Avap { v0: 0.25, s: 1 }.value_bound(), Some(0.25));
         assert_eq!(Consistency::Bsp.value_bound(), None);
-        assert!(Consistency::Vap { v0: 0.5 }.server_push());
     }
 }

@@ -1,0 +1,136 @@
+//! The consistency-policy engine: pluggable enforcement of the paper's
+//! consistency models over one PS mechanism.
+//!
+//! The paper's central observation is that BSP, SSP, ESSP, Async and VAP
+//! are *policies* layered over the same GET/INC/CLOCK machinery — ESSP is
+//! "SSP plus an eager communication strategy", VAP swaps the clock bound
+//! for a value bound. Before this layer existed, that observation was
+//! smeared across ad-hoc branches in `client.rs` / `shard.rs`; now it is
+//! a pair of traits:
+//!
+//!   * [`ClientPolicy`] — the client-side contract: read admission (the
+//!     clock window), refresh strategy (eager registration / opportunistic
+//!     re-pulls), flush-time obligations (∞-norm reports), the read gate
+//!     (bound grants/revokes), and end-of-run teardown.
+//!   * [`ServerPolicy`] — the shard-side contract: push decisions (clock-
+//!     gated waves vs per-update waves), commit hooks, and ack/report/
+//!     detach handling.
+//!
+//! [`super::consistency::Consistency`] is pure configuration that selects
+//! a policy pair; the client and shard cores are policy-agnostic. Adding
+//! a model means adding a policy pair here — e.g. [`value`] implements
+//! both VAP (value bound, clock-unbounded) and AVAP (value bound + SSP
+//! clock window, the paper's §Theory suggestion) with zero edits to the
+//! cores.
+//!
+//! Policies are driven entirely by messages ([`crate::ps::msg`]), so
+//! every model — including VAP, which previously needed a process-global
+//! tracker — runs unchanged over the simulated network, loopback TCP,
+//! and multi-process clusters.
+
+pub mod value;
+pub mod window;
+
+use super::shard::ShardCore;
+use super::types::{Clock, Key, WorkerId};
+
+/// Client-side consistency contract. One instance per PS client; the
+/// client core consults it on every read and flush and forwards
+/// policy-addressed control messages to it.
+pub trait ClientPolicy: Send {
+    /// Clock-window read condition: the minimum guaranteed row vclock for
+    /// a read at worker clock `clock` (the SSP condition `>= c - s - 1`).
+    /// `None` = clock-unbounded: any cached copy is admissible once
+    /// present, and pulls are served at whatever clock the shard holds.
+    fn min_row_vclock(&self, clock: Clock) -> Option<Clock>;
+
+    /// Register for eager server pushes on first access of a key
+    /// (ESSP-style refresh, also the addressing basis of VAP waves).
+    fn eager_register(&self) -> bool {
+        false
+    }
+
+    /// Opportunistic refresh period: re-pull a cached row if it was last
+    /// refreshed more than this many clocks ago (Async family).
+    fn refresh_every(&self) -> Option<Clock> {
+        None
+    }
+
+    /// Must every CLOCK flush be preceded by per-shard ∞-norm reports
+    /// (`ToShard::NormReport`, value-bounded family)?
+    fn reports_norms(&self) -> bool {
+        false
+    }
+
+    /// Inbound bound grant/revoke from `shard` (`ToWorker::Bound`).
+    fn on_bound(&mut self, _shard: usize, _granted: bool) {}
+
+    /// Must reads currently hold? True while any shard has revoked its
+    /// bound grant; the client spins (draining the inbox, so acks keep
+    /// flowing) until this clears.
+    fn read_blocked(&self) -> bool {
+        false
+    }
+
+    /// Does the policy keep per-worker server-side state that must be
+    /// torn down with `ToShard::Detach` when the worker finishes?
+    fn detach_on_finish(&self) -> bool {
+        false
+    }
+}
+
+/// Shard-side consistency contract. One instance per [`ShardCore`]; the
+/// shard core owns rows/clocks/registrations and calls into the policy at
+/// the protocol's decision points.
+pub trait ServerPolicy: Send {
+    /// Should the core track dirty rows and expect a batched push wave at
+    /// each table-clock advance (ESSP family)? Queried once at shard
+    /// construction.
+    fn pushes_on_commit(&self) -> bool {
+        false
+    }
+
+    /// `worker` registered for eager pushes of a key (the core has
+    /// already recorded it in the inverted index). The first policy-
+    /// visible proof that a route to `worker` exists — value-bounded
+    /// policies bring the newcomer up to date on the bound state here.
+    fn on_register(&mut self, _core: &mut ShardCore, _worker: WorkerId) {}
+
+    /// One inbound Update batch was processed: applied (eager path) or
+    /// staged for deterministic replay. `touched` lists its keys. Fire
+    /// per-update waves here (VAP family).
+    fn on_update(
+        &mut self,
+        _core: &mut ShardCore,
+        _source: WorkerId,
+        _clock: Clock,
+        _touched: &[Key],
+    ) {
+    }
+
+    /// The table clock advanced to `table_clock` (staged updates already
+    /// replayed, pending GETs already served). Fire clock-gated waves
+    /// here (ESSP family).
+    fn on_commit(&mut self, _core: &mut ShardCore, _table_clock: Clock) {}
+
+    /// A client acked a clock-gated push wave (`ToShard::PushAck`).
+    fn on_push_ack(&mut self, _core: &mut ShardCore, _worker: WorkerId, _vclock: Clock) {}
+
+    /// A client acked a per-update wave (`ToShard::VapAck`).
+    fn on_wave_ack(&mut self, _core: &mut ShardCore, _worker: WorkerId, _seq: u64) {}
+
+    /// A client reported the ∞-norm of a flushed batch part
+    /// (`ToShard::NormReport`; zero-norm reports still advance the decay
+    /// clock t).
+    fn on_norm_report(
+        &mut self,
+        _core: &mut ShardCore,
+        _worker: WorkerId,
+        _clock: Clock,
+        _inf_norm: f32,
+    ) {
+    }
+
+    /// A worker finished its run (`ToShard::Detach`).
+    fn on_detach(&mut self, _core: &mut ShardCore, _worker: WorkerId) {}
+}

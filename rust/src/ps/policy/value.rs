@@ -1,0 +1,561 @@
+//! Value-bounded policies: VAP and AVAP, distributable across processes.
+//!
+//! VAP gates *reads* on a bound over in-transit update magnitudes instead
+//! of (VAP) or in addition to (AVAP) the SSP clock window. Enforcement is
+//! the wire protocol described in [`crate::ps::vap`]:
+//!
+//!   * the client prefixes every CLOCK flush with one per-shard
+//!     `ToShard::NormReport` (the ∞-norm of the batch part routed to that
+//!     shard; zero-norm parts included so every shard's decay clock t
+//!     advances identically);
+//!   * the shard applies the part, eagerly pushes the touched rows to
+//!     every *other* registered reader (`ToWorker::VapPush`, ack-tracked
+//!     per wave), and retires the part once every addressed reader acked
+//!     (`ToShard::VapAck`);
+//!   * whenever the shard-local inequality Σ part norms <= v_t flips, the
+//!     shard broadcasts `ToWorker::Bound { granted }` to every worker it
+//!     has heard from; the client blocks reads while any shard's grant is
+//!     revoked, spinning on its inbox so acks keep flowing.
+//!
+//! Because grants travel as messages, enforcement is eventually
+//! consistent within one network latency — a read racing an in-flight
+//! revoke may still be admitted. That is the honest distributed analogue
+//! of the paper's process-global tracker (which got atomicity for free
+//! from shared memory); the cost the paper cares about — a per-update
+//! round trip to every reader, surfacing as read stalls — is unchanged
+//! and now measurable over real sockets too.
+//!
+//! AVAP (`avap:V0:S`, the paper's §Theory suggestion) composes the value
+//! bound with SSP's clock window: [`ValueClient`] with a finite
+//! `staleness` — same [`ValueServer`], zero edits to the client/shard
+//! cores. Clock-window refreshes use SSP-style lazy pulls; the eager
+//! VapPush waves keep value visibility (and its ack accounting) flowing.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use super::{ClientPolicy, ServerPolicy};
+use crate::ps::msg::{PushRow, ToWorker};
+use crate::ps::shard::ShardCore;
+use crate::ps::types::{Clock, Key, WorkerId};
+use crate::ps::vap::ShardVisibility;
+
+/// Client policy for the value-bounded family.
+#[derive(Debug, Clone)]
+pub struct ValueClient {
+    /// SSP staleness bound composed with the value bound (AVAP), or
+    /// `None` for pure VAP (clock-unbounded — honestly, not via a huge
+    /// sentinel window).
+    pub staleness: Option<Clock>,
+    /// Per-shard bound grants; a read may proceed only while all are
+    /// granted. Starts all-granted (nothing is in transit at t=0).
+    granted: Vec<bool>,
+}
+
+impl ValueClient {
+    pub fn new(staleness: Option<Clock>, n_shards: usize) -> Self {
+        Self {
+            staleness,
+            granted: vec![true; n_shards],
+        }
+    }
+}
+
+impl ClientPolicy for ValueClient {
+    fn min_row_vclock(&self, clock: Clock) -> Option<Clock> {
+        self.staleness.map(|s| clock - s - 1)
+    }
+
+    fn eager_register(&self) -> bool {
+        // Registration addresses the per-update VapPush waves.
+        true
+    }
+
+    fn reports_norms(&self) -> bool {
+        true
+    }
+
+    fn on_bound(&mut self, shard: usize, granted: bool) {
+        if let Some(g) = self.granted.get_mut(shard) {
+            *g = granted;
+        }
+    }
+
+    fn read_blocked(&self) -> bool {
+        self.granted.iter().any(|&g| !g)
+    }
+
+    fn detach_on_finish(&self) -> bool {
+        true
+    }
+}
+
+/// Server policy for the value-bounded family: shard-local visibility
+/// ledger + per-update eager waves + bound grant/revoke broadcasts.
+#[derive(Debug)]
+pub struct ValueServer {
+    vis: ShardVisibility,
+    /// Workers this shard has heard from (a Register or NormReport) —
+    /// a route to them provably exists, so bound broadcasts are never
+    /// sent into the void before a peer has connected. Every VAP reader
+    /// registers on its very first GET and reports on its very first
+    /// flush, so this fills within one clock.
+    known: Vec<bool>,
+    /// The last bound state broadcast (grants are edge-triggered).
+    granted: bool,
+}
+
+impl ValueServer {
+    pub fn new(v0: f32, workers: usize) -> Self {
+        Self {
+            vis: ShardVisibility::new(v0, workers),
+            known: vec![false; workers],
+            granted: true,
+        }
+    }
+
+    /// Test/metrics access to the ledger.
+    pub fn visibility(&self) -> &ShardVisibility {
+        &self.vis
+    }
+
+    /// First contact from `worker`: mark it reachable, and if the bound
+    /// is currently revoked, bring it up to date immediately — it missed
+    /// the edge-triggered broadcast.
+    fn mark_known(&mut self, core: &mut ShardCore, worker: WorkerId) {
+        if worker >= self.known.len() || self.known[worker] {
+            return;
+        }
+        self.known[worker] = true;
+        if !self.granted {
+            core.send_to_worker(
+                worker,
+                ToWorker::Bound {
+                    shard: core.id,
+                    granted: false,
+                },
+            );
+        }
+    }
+
+    /// Broadcast the bound state to every known, still-attached worker if
+    /// it flipped since the last broadcast.
+    fn sync_bound(&mut self, core: &mut ShardCore) {
+        let ok = self.vis.is_bounded();
+        if ok == self.granted {
+            return;
+        }
+        self.granted = ok;
+        for w in 0..core.workers {
+            if self.known[w] && !self.vis.is_detached(w) {
+                core.send_to_worker(
+                    w,
+                    ToWorker::Bound {
+                        shard: core.id,
+                        granted: ok,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Eager value propagation: push the rows this part touched to every
+    /// *other* registered reader, ack-tracked per wave. This per-update
+    /// round trip is the synchronization cost the paper argues makes
+    /// value bounds impractical; it is reproduced faithfully so the cost
+    /// can be measured (the VAPSIM experiment), in-process or over TCP.
+    ///
+    /// In deterministic mode the update batches are staged, not applied,
+    /// so the wave composes *preview* contents — the committed row plus
+    /// the sum of ALL staged deltas for that key (not just this part's:
+    /// a reader's cache is overwritten wholesale by each wave, so a
+    /// preview missing a concurrent worker's staged part would erase it
+    /// from reader caches until commit). Readers thus genuinely see the
+    /// update whose norm is in transit, while the store itself stays
+    /// untouched until the sorted commit replay — final parameters
+    /// remain bit-deterministic.
+    fn wave(&mut self, core: &mut ShardCore, source: WorkerId, clock: Clock, touched: &[Key]) {
+        let mut per_worker: Vec<Vec<PushRow>> = Vec::new();
+        per_worker.resize_with(core.workers, Vec::new);
+        let staged = core.staged_sums(touched);
+        for key in touched {
+            let Some(readers) = core.readers.get(key) else {
+                continue;
+            };
+            let (data, fresh): (Arc<[f32]>, Clock) = match (core.rows.get(key), staged.get(key)) {
+                // Eager path: the update is already applied to the store.
+                (Some(row), None) => (Arc::clone(&row.data), row.fresh),
+                // Deterministic path: overlay the staged sums (preview).
+                (Some(row), Some(d)) => {
+                    let mut v = row.data.to_vec();
+                    for (a, x) in v.iter_mut().zip(d) {
+                        *a += x;
+                    }
+                    (v.into(), row.fresh.max(clock))
+                }
+                // Row not yet materialized: the staged sum from zeros is
+                // the preview (exactly how the commit will create it).
+                (None, Some(d)) => (d.clone().into(), clock),
+                (None, None) => continue,
+            };
+            for w in readers.iter() {
+                if w == source || self.vis.is_detached(w) {
+                    continue; // the writer reads-its-own-writes locally
+                }
+                per_worker[w].push(PushRow {
+                    key: *key,
+                    data: Arc::clone(&data),
+                    fresh,
+                });
+            }
+        }
+        let awaiting: HashSet<WorkerId> = (0..core.workers)
+            .filter(|&w| !per_worker[w].is_empty())
+            .collect();
+        let seq = self.vis.assign_wave((source, clock), awaiting.clone());
+        for w in awaiting {
+            let rows = std::mem::take(&mut per_worker[w]);
+            core.stats.rows_pushed += rows.len() as u64;
+            core.send_to_worker(
+                w,
+                ToWorker::VapPush {
+                    shard: core.id,
+                    seq,
+                    rows,
+                },
+            );
+        }
+    }
+}
+
+impl ServerPolicy for ValueServer {
+    fn on_update(
+        &mut self,
+        core: &mut ShardCore,
+        source: WorkerId,
+        clock: Clock,
+        touched: &[Key],
+    ) {
+        // Deterministic mode stages the application until the table-clock
+        // commit, but the wave must fire *now*: gating value visibility on
+        // clock advances would deadlock (a bound-blocked reader cannot
+        // tick the very clock whose commit would retire the batch it is
+        // waiting on). `wave` composes preview contents in that case, so
+        // readers still receive the update whose norm is in transit.
+        self.wave(core, source, clock, touched);
+        self.sync_bound(core);
+    }
+
+    fn on_wave_ack(&mut self, core: &mut ShardCore, worker: WorkerId, seq: u64) {
+        self.vis.on_ack(worker, seq);
+        self.sync_bound(core);
+    }
+
+    fn on_register(&mut self, core: &mut ShardCore, worker: WorkerId) {
+        // A reader registers before its first read: making it reachable
+        // here (not only at its first flush) means a revoke raised while
+        // it is still computing its first clock reaches it too.
+        self.mark_known(core, worker);
+    }
+
+    fn on_norm_report(
+        &mut self,
+        core: &mut ShardCore,
+        worker: WorkerId,
+        clock: Clock,
+        inf_norm: f32,
+    ) {
+        self.vis.on_report(worker, clock, inf_norm);
+        self.mark_known(core, worker);
+        self.sync_bound(core);
+    }
+
+    fn on_detach(&mut self, core: &mut ShardCore, worker: WorkerId) {
+        self.vis.detach(worker);
+        self.sync_bound(core);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::consistency::Consistency;
+    use crate::ps::msg::ToShard;
+    use crate::ps::shard::Shard;
+    use crate::sim::net::{NetConfig, SimNet};
+    use crate::transport::TransportHandle;
+    use std::collections::HashMap;
+    use std::sync::mpsc::{channel, Receiver};
+    use std::time::Duration;
+
+    /// A VAP shard with `workers` instant-net worker inboxes.
+    fn vap_fixture_det(
+        workers: usize,
+        v0: f32,
+        deterministic: bool,
+    ) -> (Shard, Vec<Receiver<ToWorker>>, SimNet) {
+        let mut wtxs = Vec::new();
+        let mut wrxs = Vec::new();
+        for _ in 0..workers {
+            let (wtx, wrx) = channel();
+            wtxs.push(wtx);
+            wrxs.push(wrx);
+        }
+        let (stx, _srx) = channel();
+        let net = SimNet::new(NetConfig::instant(), wtxs, vec![stx]);
+        let shard = Shard::new(
+            0,
+            workers,
+            Consistency::Vap { v0 },
+            TransportHandle::new(net.handle()),
+            HashMap::new(),
+            deterministic,
+        );
+        (shard, wrxs, net)
+    }
+
+    fn vap_fixture(workers: usize, v0: f32) -> (Shard, Vec<Receiver<ToWorker>>, SimNet) {
+        vap_fixture_det(workers, v0, false)
+    }
+
+    fn recv(rx: &Receiver<ToWorker>) -> ToWorker {
+        rx.recv_timeout(Duration::from_secs(1)).expect("message")
+    }
+
+    #[test]
+    fn update_fires_ack_tracked_wave_to_other_readers() {
+        let (mut shard, wrxs, net) = vap_fixture(3, 100.0);
+        shard.init_row((0, 1), vec![0.0]);
+        for w in 0..3 {
+            shard.handle(ToShard::Register { key: (0, 1), worker: w });
+        }
+        shard.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 0,
+            inf_norm: 1.0,
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![1.0])],
+        });
+        // The wave reaches readers 1 and 2 but never the writer.
+        for w in [1usize, 2] {
+            match recv(&wrxs[w]) {
+                ToWorker::VapPush { shard: s, rows, .. } => {
+                    assert_eq!(s, 0);
+                    assert_eq!(rows.len(), 1);
+                    assert_eq!(&rows[0].data[..], &[1.0]);
+                }
+                other => panic!("worker {w}: unexpected {other:?}"),
+            }
+        }
+        net.flush();
+        assert!(wrxs[0].try_recv().is_err(), "writer must not receive its own wave");
+    }
+
+    #[test]
+    fn bound_revoked_then_regranted_on_acks() {
+        let (mut shard, wrxs, _net) = vap_fixture(2, 0.5);
+        shard.init_row((0, 1), vec![0.0]);
+        for w in 0..2 {
+            shard.handle(ToShard::Register { key: (0, 1), worker: w });
+        }
+        // Make both workers known so bound broadcasts reach them.
+        shard.handle(ToShard::NormReport {
+            worker: 1,
+            clock: 0,
+            inf_norm: 0.0,
+        });
+        // Worker 0 flushes a part whose norm blows the bound.
+        shard.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 0,
+            inf_norm: 5.0,
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![5.0])],
+        });
+        // Worker 1 sees: revoke, then the wave.
+        match recv(&wrxs[1]) {
+            ToWorker::Bound { granted, .. } => assert!(!granted, "expected a revoke"),
+            other => panic!("unexpected {other:?}"),
+        }
+        let seq = match recv(&wrxs[1]) {
+            ToWorker::VapPush { seq, .. } => seq,
+            other => panic!("unexpected {other:?}"),
+        };
+        // The writer got the revoke too.
+        match recv(&wrxs[0]) {
+            ToWorker::Bound { granted, .. } => assert!(!granted),
+            other => panic!("unexpected {other:?}"),
+        }
+        // The ack retires the part: both workers get the grant back.
+        shard.handle(ToShard::VapAck { worker: 1, seq });
+        for wrx in &wrxs {
+            match recv(wrx) {
+                ToWorker::Bound { granted, .. } => assert!(granted, "expected a grant"),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn detach_regrants_and_stops_waves_to_finished_workers() {
+        let (mut shard, wrxs, net) = vap_fixture(2, 0.5);
+        shard.init_row((0, 1), vec![0.0]);
+        for w in 0..2 {
+            shard.handle(ToShard::Register { key: (0, 1), worker: w });
+        }
+        shard.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 0,
+            inf_norm: 5.0,
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![5.0])],
+        });
+        // Worker 1 never acks — it finishes instead. The part must retire
+        // and the grant return to worker 0 (the only attached worker).
+        shard.handle(ToShard::Detach { worker: 1 });
+        match recv(&wrxs[0]) {
+            ToWorker::Bound { granted, .. } => assert!(!granted),
+            other => panic!("unexpected {other:?}"),
+        }
+        match recv(&wrxs[0]) {
+            ToWorker::Bound { granted, .. } => assert!(granted),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Further updates produce no wave traffic to the detached worker.
+        shard.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 1,
+            inf_norm: 0.1,
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 1,
+            rows: vec![((0, 1), vec![0.1])],
+        });
+        // Drain anything addressed to worker 1 before the update above:
+        // only the pre-detach revoke/wave pair may be present.
+        net.flush();
+        let mut later_wave = false;
+        while let Ok(msg) = wrxs[1].try_recv() {
+            if let ToWorker::VapPush { rows, .. } = &msg {
+                if rows[0].data[0] > 5.0 {
+                    later_wave = true;
+                }
+            }
+        }
+        assert!(!later_wave, "detached worker received a post-detach wave");
+    }
+
+    #[test]
+    fn deterministic_wave_carries_preview_contents() {
+        // Deterministic mode stages the update (store untouched until the
+        // commit), yet the eager wave must carry the update's values —
+        // committed contents plus the staged delta — so the in-transit
+        // norm being tracked corresponds to data readers actually see.
+        let (mut shard, wrxs, _net) = vap_fixture_det(2, 100.0, true);
+        shard.init_row((0, 1), vec![10.0, 20.0]);
+        for w in 0..2 {
+            shard.handle(ToShard::Register { key: (0, 1), worker: w });
+        }
+        shard.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 0,
+            inf_norm: 2.0,
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![1.0, 2.0])],
+        });
+        // The store is unchanged (staged until commit) ...
+        assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[10.0, 20.0]);
+        // ... but the wave previews the post-update values.
+        match recv(&wrxs[1]) {
+            ToWorker::VapPush { rows, .. } => {
+                assert_eq!(rows.len(), 1);
+                assert_eq!(&rows[0].data[..], &[11.0, 22.0]);
+                assert_eq!(rows[0].fresh, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // A concurrent writer's staged part accumulates into later
+        // previews: worker 1's wave must carry BOTH staged deltas, or a
+        // reader cache overwritten by it would lose worker 0's update.
+        shard.handle(ToShard::NormReport {
+            worker: 1,
+            clock: 0,
+            inf_norm: 1.0,
+        });
+        shard.handle(ToShard::Update {
+            worker: 1,
+            clock: 0,
+            rows: vec![((0, 1), vec![100.0, 0.0])],
+        });
+        match recv(&wrxs[0]) {
+            ToWorker::VapPush { rows, .. } => {
+                assert_eq!(&rows[0].data[..], &[111.0, 22.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The commit applies the same deltas to the store.
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
+        assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[111.0, 22.0]);
+    }
+
+    #[test]
+    fn revoke_reaches_registered_workers_before_their_first_flush() {
+        // A reader that has registered but not yet flushed (no NormReport)
+        // must still receive a revoke raised by another worker's batch —
+        // registration already proves the route.
+        let (mut shard, wrxs, _net) = vap_fixture(2, 0.5);
+        shard.init_row((0, 1), vec![0.0]);
+        shard.handle(ToShard::Register { key: (0, 1), worker: 1 });
+        shard.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 0,
+            inf_norm: 5.0,
+        });
+        match recv(&wrxs[1]) {
+            ToWorker::Bound { granted, .. } => assert!(!granted),
+            other => panic!("unexpected {other:?}"),
+        }
+        // And a worker first heard from while revoked is caught up.
+        let (mut shard2, wrxs2, _net2) = vap_fixture(2, 0.5);
+        shard2.init_row((0, 1), vec![0.0]);
+        shard2.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 0,
+            inf_norm: 5.0,
+        });
+        shard2.handle(ToShard::Register { key: (0, 1), worker: 1 });
+        match recv(&wrxs2[1]) {
+            ToWorker::Bound { granted, .. } => assert!(!granted, "late registrant not caught up"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn avap_composes_clock_window_with_value_bound() {
+        let avap = ValueClient::new(Some(3), 2);
+        assert_eq!(avap.min_row_vclock(10), Some(6), "SSP window enforced");
+        assert!(avap.reports_norms() && avap.eager_register());
+        let vap = ValueClient::new(None, 2);
+        assert_eq!(vap.min_row_vclock(10), None, "VAP is clock-unbounded");
+        let mut c = ValueClient::new(None, 2);
+        assert!(!c.read_blocked());
+        c.on_bound(1, false);
+        assert!(c.read_blocked());
+        c.on_bound(1, true);
+        assert!(!c.read_blocked());
+    }
+}

@@ -1,0 +1,129 @@
+//! Clock-window policies: BSP, SSP, ESSP and Async.
+//!
+//! All four share one client shape — a staleness window over the SSP read
+//! condition — and differ only in the window width and refresh strategy:
+//!
+//!   * BSP  = `WindowClient { s: 0, eager: false }` (barrier every clock),
+//!   * SSP  = `WindowClient { s, eager: false }` (lazy pulls),
+//!   * ESSP = `WindowClient { s, eager: true }` + [`PushServer`] (the
+//!     same bound, refreshed by clock-gated server waves),
+//!   * Async = [`AsyncClient`] (no bound at all; opportunistic re-pulls).
+//!
+//! Server-side, the pull-only models need no policy at all
+//! ([`PullServer`] is empty); ESSP's entire server behavior is "mark
+//! applied rows dirty, flush them as one wave per registered reader at
+//! each table-clock advance" — which the core provides as
+//! [`ShardCore::push_wave`], so the policy is a two-line adapter. That
+//! economy is the point: ESSP really is SSP plus an eager communication
+//! strategy.
+
+use super::{ClientPolicy, ServerPolicy};
+use crate::ps::shard::ShardCore;
+use crate::ps::types::{Clock, WorkerId};
+
+/// Client policy for the clock-bounded family (BSP / SSP / ESSP).
+#[derive(Debug, Clone)]
+pub struct WindowClient {
+    /// Staleness bound `s` of the SSP read condition.
+    pub s: Clock,
+    /// Register for eager pushes (ESSP) instead of lazy pulls (BSP/SSP).
+    pub eager: bool,
+}
+
+impl WindowClient {
+    pub fn lazy(s: Clock) -> Self {
+        Self { s, eager: false }
+    }
+
+    pub fn eager(s: Clock) -> Self {
+        Self { s, eager: true }
+    }
+}
+
+impl ClientPolicy for WindowClient {
+    fn min_row_vclock(&self, clock: Clock) -> Option<Clock> {
+        // All updates with clock <= c - s - 1 must be visible.
+        Some(clock - self.s - 1)
+    }
+
+    fn eager_register(&self) -> bool {
+        self.eager
+    }
+}
+
+/// Client policy for Async (Hogwild-flavored baseline): reads never block
+/// after the first fetch; cached rows are re-pulled opportunistically
+/// every `refresh_every` clocks.
+#[derive(Debug, Clone)]
+pub struct AsyncClient {
+    pub refresh_every: Clock,
+}
+
+impl ClientPolicy for AsyncClient {
+    fn min_row_vclock(&self, _clock: Clock) -> Option<Clock> {
+        None
+    }
+
+    fn refresh_every(&self) -> Option<Clock> {
+        Some(self.refresh_every)
+    }
+}
+
+/// Server policy for the pull-only models (BSP / SSP / Async): the core's
+/// hold-the-GET behavior is the whole protocol; nothing to add.
+#[derive(Debug, Clone)]
+pub struct PullServer;
+
+impl ServerPolicy for PullServer {}
+
+/// Server policy for ESSP: clock-gated delta push waves.
+#[derive(Debug, Clone)]
+pub struct PushServer;
+
+impl ServerPolicy for PushServer {
+    fn pushes_on_commit(&self) -> bool {
+        true
+    }
+
+    fn on_commit(&mut self, core: &mut ShardCore, table_clock: Clock) {
+        core.push_wave(table_clock);
+    }
+
+    fn on_push_ack(&mut self, _core: &mut ShardCore, _worker: WorkerId, _vclock: Clock) {
+        // Ack traffic is modeled for byte accounting; nothing to track.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bsp_is_ssp0() {
+        let bsp = WindowClient::lazy(0);
+        assert_eq!(bsp.min_row_vclock(5), Some(4));
+        assert!(!bsp.eager_register());
+        assert!(!bsp.read_blocked());
+    }
+
+    #[test]
+    fn ssp_window() {
+        let ssp = WindowClient::lazy(3);
+        // Read at clock 10 must see all updates <= 6.
+        assert_eq!(ssp.min_row_vclock(10), Some(6));
+        let essp = WindowClient::eager(3);
+        assert_eq!(essp.min_row_vclock(10), Some(6));
+        assert!(essp.eager_register());
+        assert!(PushServer.pushes_on_commit());
+        assert!(!PullServer.pushes_on_commit());
+    }
+
+    #[test]
+    fn async_is_unbounded_with_refresh() {
+        let a = AsyncClient { refresh_every: 5 };
+        assert_eq!(a.min_row_vclock(1_000_000), None);
+        assert_eq!(a.refresh_every(), Some(5));
+        assert!(!a.eager_register());
+        assert!(!a.reports_norms());
+    }
+}

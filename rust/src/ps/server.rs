@@ -31,7 +31,6 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::client::{ClientConfig, ClientStats, PsClient};
@@ -40,7 +39,6 @@ use super::msg::{ToShard, ToWorker};
 use super::router::Router;
 use super::shard::{Shard, ShardFinal, ShardStats};
 use super::types::{Clock, Key, RowId, TableId};
-use super::vap::VapTracker;
 use crate::metrics::convergence::ConvergenceLog;
 use crate::metrics::staleness::StalenessHist;
 use crate::metrics::timeline::Timeline;
@@ -85,9 +83,15 @@ pub struct ClusterConfig {
     pub transport: TransportSel,
     /// Shards defer updates and replay them in (clock, worker) order at
     /// each table-clock commit, making final parameters bit-reproducible
-    /// across runs and transports (float summation order is fixed). Off
-    /// by default: eager application propagates uncommitted freshness,
-    /// which the Async/VAP dynamics use.
+    /// across runs and transports (float summation order is fixed) for
+    /// *every* consistency model — value-bounded policies fire their
+    /// eager waves at update receipt (with staged-sum preview contents),
+    /// so visibility never gates on the commit. Off by default: eager
+    /// application propagates uncommitted freshness, which the Async/VAP
+    /// read dynamics prefer — for Async in particular, staging commits-
+    /// gates all read freshness, so enable it there only when
+    /// reproducibility genuinely outranks the Hogwild dynamics (the CLI
+    /// cluster subcommands default it off for Async for this reason).
     pub deterministic: bool,
     pub seed: u64,
 }
@@ -155,7 +159,9 @@ pub struct RunReport {
     pub net_bytes: u64,
     /// Final table contents (merged across shards).
     pub table_rows: HashMap<Key, Vec<f32>>,
-    /// VAP-only: total reader stall time and stalled read count.
+    /// Value-bounded models (VAP/AVAP) only: total reader stall time and
+    /// stalled read count, aggregated across the clients (the read gate
+    /// is client-side; there is no process-global tracker).
     pub vap_stall: Option<(Duration, u64)>,
 }
 
@@ -244,10 +250,6 @@ impl Cluster {
             "need exactly one app instance per worker"
         );
         let router = Router::new(cfg.shards);
-        let vap: Option<Arc<VapTracker>> = cfg
-            .consistency
-            .value_bound()
-            .map(|v0| Arc::new(VapTracker::new(v0, cfg.workers)));
 
         // Channels: per-worker and per-shard inboxes.
         let mut worker_tx: Vec<Sender<ToWorker>> = Vec::new();
@@ -273,24 +275,18 @@ impl Cluster {
         // length tables are excluded: no uniform length to synthesize).
         let row_len = table_row_lens(&self.tables);
 
-        // Build + initialize shards. Clock-gated push waves are an ESSP
-        // mechanism; VAP uses its own per-update eager waves instead.
-        let clock_push = cfg.consistency.server_push() && vap.is_none();
-        // Deterministic staged replay defers updates to the table-clock
-        // commit, which only clock-gated models can hide behind: Async
-        // (no clock bound; Shard::new itself disarms VAP) relies on eager
-        // visibility, so staging would silently change its semantics.
-        let deterministic = cfg.deterministic && cfg.consistency.staleness().is_some();
+        // Build + initialize shards. Each shard derives its server policy
+        // (clock-gated waves, per-update waves + visibility ledger, or
+        // pull-only) from the consistency config; the core is identical.
         let mut shards: Vec<Shard> = (0..cfg.shards)
             .map(|id| {
                 Shard::new(
                     id,
                     cfg.workers,
-                    clock_push,
+                    cfg.consistency,
                     fabric.shard_handle(),
-                    vap.clone(),
                     row_len.clone(),
-                    deterministic,
+                    cfg.deterministic,
                 )
             })
             .collect();
@@ -322,7 +318,6 @@ impl Cluster {
                 };
                 let net_handle = fabric.worker_handle();
                 let row_len = row_len.clone();
-                let vap = vap.clone();
                 let straggler = cfg.straggler.clone();
                 let virtual_clock = cfg.virtual_clock;
                 let seed = cfg.seed;
@@ -330,7 +325,6 @@ impl Cluster {
                     .name(format!("worker-{w}"))
                     .spawn(move || {
                         crate::sim::priority::worker_thread();
-                        let vap_for_detach = vap.clone();
                         let mut ps = PsClient::new(
                             w,
                             client_cfg,
@@ -338,7 +332,6 @@ impl Cluster {
                             net_handle,
                             inbox,
                             row_len,
-                            vap,
                             started,
                         );
                         let mut log = ConvergenceLog::new();
@@ -378,11 +371,10 @@ impl Cluster {
                             }
                             ps.tick();
                         }
-                        // VAP: a finished worker must detach so remaining
-                        // readers don't wait forever for its acks.
-                        if let Some(v) = &vap_for_detach {
-                            v.detach(w);
-                        }
+                        // A finished worker detaches (value-bounded
+                        // policies only) so remaining readers don't wait
+                        // forever for its acks.
+                        ps.finish();
                         (ps, log)
                     })
                     .expect("spawn worker")
@@ -430,6 +422,16 @@ impl Cluster {
         let net_bytes = fabric.bytes();
         fabric.shutdown();
 
+        // Value-bound stall cost, aggregated from the client side (the
+        // gate — and hence the stall — lives in the clients now that no
+        // process-global tracker exists).
+        let vap_stall = cfg.consistency.value_bound().map(|_| {
+            (
+                Duration::from_nanos(client_stats.iter().map(|s| s.vap_stall_ns).sum()),
+                client_stats.iter().map(|s| s.vap_stalled_reads).sum(),
+            )
+        });
+
         RunReport {
             wall,
             staleness,
@@ -441,12 +443,7 @@ impl Cluster {
             net_messages,
             net_bytes,
             table_rows,
-            vap_stall: vap.map(|v| {
-                (
-                    Duration::from_nanos(v.stall_ns()),
-                    v.stalled_reads(),
-                )
-            }),
+            vap_stall,
         }
     }
 }
@@ -511,6 +508,15 @@ mod tests {
     }
 
     #[test]
+    fn no_update_lost_avap() {
+        // The composed model (value bound + SSP window) is pure policy:
+        // the same cores must conserve updates under it too.
+        let r = counter_run(Consistency::Avap { v0: 100.0, s: 1 }, 2, 5);
+        assert_eq!(r.table_rows[&(0, 0)][0], 10.0);
+        assert!(r.vap_stall.is_some());
+    }
+
+    #[test]
     fn bsp_staleness_is_exactly_minus_one() {
         let r = counter_run(Consistency::Bsp, 3, 8);
         // Paper, Fig. 1 caption: "on BSP the staleness is always -1". With
@@ -541,10 +547,16 @@ mod tests {
 
     #[test]
     fn deterministic_mode_loses_no_updates() {
+        // Every model — including the value-bounded ones, whose eager
+        // waves fire at update receipt rather than commit — must conserve
+        // updates under staged sorted replay.
         for consistency in [
             Consistency::Bsp,
             Consistency::Ssp { s: 2 },
             Consistency::Essp { s: 2 },
+            Consistency::Async { refresh_every: 1 },
+            Consistency::Vap { v0: 100.0 },
+            Consistency::Avap { v0: 100.0, s: 2 },
         ] {
             let mut cluster = Cluster::new(ClusterConfig {
                 workers: 4,

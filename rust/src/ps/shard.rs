@@ -1,14 +1,22 @@
 //! Server shard: owns a partition of the rows, applies coalesced updates,
-//! tracks the table clock, answers pulls (SSP) and fires eager push waves
-//! (ESSP) — the server half of the paper's ESSPTable.
+//! tracks the table clock, answers pulls, and delegates every consistency
+//! decision to a [`ServerPolicy`] — the server half of the paper's
+//! ESSPTable.
+//!
+//! A [`Shard`] is a policy-agnostic [`ShardCore`] (rows, clocks, the
+//! registration index, staged deterministic replay, pending GETs) driven
+//! by the policy pair its [`Consistency`] config selects: ESSP's
+//! clock-gated waves, VAP's per-update waves and visibility ledger, and
+//! any future model live entirely in `ps::policy` — `handle` only routes
+//! messages to core ops and policy hooks.
 //!
 //! Data-plane layout (zero-copy push):
 //!  * Row payloads are shared immutable snapshots (`Arc<[f32]>`). A push
 //!    wave addressed to P readers clones the `Arc` P times; the payload
-//!    itself is deep-copied exactly zero times. `on_update` copies-on-
+//!    itself is deep-copied exactly zero times. `apply_rows` copies-on-
 //!    write, so in-flight wave payloads are immutable.
 //!  * Registrations live in an inverted index `Key -> ReaderSet` (bitset
-//!    over workers), so `push_wave`/`vap_wave` cost O(dirty rows x
+//!    over workers), so wave construction costs O(dirty rows x
 //!    interested readers) — the wave size — instead of scanning every
 //!    worker's full registration list, and `Register` idempotency is a
 //!    single O(1) bit test.
@@ -18,9 +26,10 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::consistency::Consistency;
 use super::msg::{PushRow, ToShard, ToWorker};
+use super::policy::ServerPolicy;
 use super::types::{Clock, Key, TableId, WorkerId};
-use super::vap::VapTracker;
 use super::vclock::MinClock;
 use crate::transport::{NodeId, Packet, TransportHandle};
 use crate::util::hash::{FxHashMap, FxHashSet};
@@ -92,78 +101,172 @@ struct PendingGet {
     min_vclock: Clock,
 }
 
-/// Shard state. Owned by its thread after `spawn`; constructed (and row-
-/// initialized) by the coordinator before launch.
-pub struct Shard {
-    id: usize,
-    workers: usize,
-    rows: FxHashMap<Key, Row>,
+/// Policy-agnostic shard state and mechanism. Owned by its thread after
+/// `spawn`; constructed (and row-initialized) by the coordinator before
+/// launch. Policies receive `&mut ShardCore` in every hook and drive the
+/// mechanism through its fields and helpers.
+pub struct ShardCore {
+    pub(crate) id: usize,
+    pub(crate) workers: usize,
+    pub(crate) rows: FxHashMap<Key, Row>,
     clocks: MinClock,
-    /// ESSP/VAP inverted registration index: key -> registered readers.
-    readers: FxHashMap<Key, ReaderSet>,
+    /// Inverted registration index: key -> registered readers (addresses
+    /// both ESSP clock waves and VAP per-update waves).
+    pub(crate) readers: FxHashMap<Key, ReaderSet>,
     /// Per-worker registered-key count (a worker with >= 1 registration
-    /// receives every wave, if only to learn the new table clock).
-    reg_count: Vec<usize>,
+    /// receives every clock wave, if only to learn the new table clock).
+    pub(crate) reg_count: Vec<usize>,
     /// Rows updated since the last push wave: waves carry only these (the
     /// paper's server "pushes out the [updated] table-rows"), which keeps
     /// wave size proportional to update traffic, not to the working set.
+    /// Maintained only when the policy pushes on commit.
     dirty: FxHashSet<Key>,
+    track_dirty: bool,
     pending: Vec<PendingGet>,
-    push_enabled: bool,
     /// Deterministic application: buffer updates per (clock, worker) and
     /// apply them in that sorted order when the table clock commits, so
     /// float summation order — and hence the final parameters — is
     /// bit-identical no matter how messages interleave on the wire. Off
-    /// by default (eager application propagates uncommitted freshness,
-    /// which Async/VAP rely on); multi-process runs enable it so a
-    /// loopback-TCP cluster reproduces the in-process result exactly.
+    /// by default (eager application propagates uncommitted freshness);
+    /// multi-process runs enable it so a TCP cluster reproduces the
+    /// in-process result exactly.
     deterministic: bool,
     /// Staged (not yet applied) update batches, keyed for sorted replay.
     staged: BTreeMap<(Clock, WorkerId), Vec<(Key, Vec<f32>)>>,
     net: TransportHandle,
-    vap: Option<Arc<VapTracker>>,
     /// Uniform row length per table, for serving GETs of rows that no
     /// update or init has materialized yet (replied as zeros).
     row_len: HashMap<TableId, usize>,
     /// Cached all-zeros payloads per table (shared, never mutated).
     zero_rows: HashMap<TableId, Arc<[f32]>>,
-    stats: ShardStats,
+    pub(crate) stats: ShardStats,
+}
+
+/// A shard = the policy-agnostic core plus the consistency policy its
+/// config selects.
+pub struct Shard {
+    core: ShardCore,
+    policy: Box<dyn ServerPolicy>,
 }
 
 impl Shard {
     pub fn new(
         id: usize,
         workers: usize,
-        push_enabled: bool,
+        consistency: Consistency,
         net: TransportHandle,
-        vap: Option<Arc<VapTracker>>,
         row_len: HashMap<TableId, usize>,
         deterministic: bool,
     ) -> Self {
-        // VAP's eager per-update waves are incompatible with deferred
-        // application; its global tracker is in-process anyway.
-        let deterministic = deterministic && vap.is_none();
+        let policy = consistency.server_policy(workers);
+        let track_dirty = policy.pushes_on_commit();
         Self {
-            id,
-            workers,
-            rows: FxHashMap::default(),
-            clocks: MinClock::new(workers),
-            readers: FxHashMap::default(),
-            reg_count: vec![0; workers],
-            dirty: FxHashSet::default(),
-            pending: Vec::new(),
-            push_enabled,
-            deterministic,
-            staged: BTreeMap::new(),
-            net,
-            vap,
-            row_len,
-            zero_rows: HashMap::new(),
-            stats: ShardStats::default(),
+            core: ShardCore {
+                id,
+                workers,
+                rows: FxHashMap::default(),
+                clocks: MinClock::new(workers),
+                readers: FxHashMap::default(),
+                reg_count: vec![0; workers],
+                dirty: FxHashSet::default(),
+                track_dirty,
+                pending: Vec::new(),
+                deterministic,
+                staged: BTreeMap::new(),
+                net,
+                row_len,
+                zero_rows: HashMap::new(),
+                stats: ShardStats::default(),
+            },
+            policy,
         }
     }
 
     /// Pre-launch initialization of a row (coordinator only).
+    pub fn init_row(&mut self, key: Key, data: Vec<f32>) {
+        self.core.init_row(key, data);
+    }
+
+    pub fn table_clock(&self) -> Clock {
+        self.core.table_clock()
+    }
+
+    pub fn row(&self, key: &Key) -> Option<&Row> {
+        self.core.row(key)
+    }
+
+    pub fn stats(&self) -> &ShardStats {
+        &self.core.stats
+    }
+
+    /// Drive the shard from its inbox until Shutdown. Returns final stats
+    /// and the row store (for end-of-run evaluation by the harness).
+    pub fn run(mut self, inbox: Receiver<ToShard>, dump: Sender<ShardFinal>) {
+        while let Ok(msg) = inbox.recv() {
+            if !self.handle(msg) {
+                break;
+            }
+        }
+        let _ = dump.send(ShardFinal {
+            id: self.core.id,
+            rows: self.core.rows,
+            stats: self.core.stats,
+        });
+    }
+
+    /// Process one message; false = shutdown requested. Pure routing:
+    /// core mechanism first, then the matching policy hook — no model-
+    /// specific branching.
+    pub fn handle(&mut self, msg: ToShard) -> bool {
+        match msg {
+            ToShard::Get {
+                key,
+                worker,
+                min_vclock,
+            } => self.core.on_get(key, worker, min_vclock),
+            ToShard::Update {
+                worker,
+                clock,
+                rows,
+            } => {
+                let touched = self.core.on_update(worker, clock, rows);
+                self.policy.on_update(&mut self.core, worker, clock, &touched);
+            }
+            ToShard::ClockTick { worker, clock } => {
+                if let Some(new_min) = self.core.on_tick(worker, clock) {
+                    self.policy.on_commit(&mut self.core, new_min);
+                }
+            }
+            ToShard::Register { key, worker } => {
+                self.core.on_register(key, worker);
+                self.policy.on_register(&mut self.core, worker);
+            }
+            ToShard::PushAck { worker, vclock } => {
+                self.policy.on_push_ack(&mut self.core, worker, vclock)
+            }
+            ToShard::VapAck { worker, seq } => {
+                self.policy.on_wave_ack(&mut self.core, worker, seq)
+            }
+            ToShard::NormReport {
+                worker,
+                clock,
+                inf_norm,
+            } => self
+                .policy
+                .on_norm_report(&mut self.core, worker, clock, inf_norm),
+            ToShard::Detach { worker } => self.policy.on_detach(&mut self.core, worker),
+            ToShard::Shutdown => return false,
+        }
+        true
+    }
+
+    #[cfg(test)]
+    fn core(&self) -> &ShardCore {
+        &self.core
+    }
+}
+
+impl ShardCore {
     pub fn init_row(&mut self, key: Key, data: Vec<f32>) {
         self.rows.insert(
             key,
@@ -182,59 +285,13 @@ impl Shard {
         self.rows.get(key)
     }
 
-    pub fn stats(&self) -> &ShardStats {
-        &self.stats
-    }
-
-    /// Drive the shard from its inbox until Shutdown. Returns final stats
-    /// and the row store (for end-of-run evaluation by the harness).
-    pub fn run(mut self, inbox: Receiver<ToShard>, dump: Sender<ShardFinal>) {
-        while let Ok(msg) = inbox.recv() {
-            if !self.handle(msg) {
-                break;
-            }
-        }
-        let _ = dump.send(ShardFinal {
-            id: self.id,
-            rows: self.rows,
-            stats: self.stats,
-        });
-    }
-
-    /// Process one message; false = shutdown requested.
-    pub fn handle(&mut self, msg: ToShard) -> bool {
-        match msg {
-            ToShard::Get {
-                key,
-                worker,
-                min_vclock,
-            } => self.on_get(key, worker, min_vclock),
-            ToShard::Update {
-                worker,
-                clock,
-                rows,
-            } => self.on_update(worker, clock, rows),
-            ToShard::ClockTick { worker, clock } => self.on_tick(worker, clock),
-            ToShard::Register { key, worker } => {
-                let workers = self.workers;
-                let set = self
-                    .readers
-                    .entry(key)
-                    .or_insert_with(|| ReaderSet::for_workers(workers));
-                if set.insert(worker) {
-                    self.reg_count[worker] += 1;
-                }
-            }
-            // ESSP wave acks model ack traffic; nothing to track server-side.
-            ToShard::PushAck { .. } => {}
-            ToShard::VapAck { worker, seq } => {
-                if let Some(vap) = &self.vap {
-                    vap.on_wave_ack(worker, seq);
-                }
-            }
-            ToShard::Shutdown => return false,
-        }
-        true
+    /// Send one message to a worker through the data plane.
+    pub(crate) fn send_to_worker(&self, worker: WorkerId, msg: ToWorker) {
+        self.net.send(
+            NodeId::Shard(self.id),
+            NodeId::Worker(worker),
+            Packet::ToWorker(msg),
+        );
     }
 
     /// All-zeros payload for `table`, shared across replies.
@@ -263,15 +320,16 @@ impl Shard {
             Some(row) => (Arc::clone(&row.data), row.fresh),
             None => (self.zero_row(key.0), super::types::NEVER),
         };
-        let msg = ToWorker::Row {
-            key,
-            data,
-            vclock,
-            fresh: fresh.max(vclock),
-        };
         self.stats.gets_served += 1;
-        self.net
-            .send(NodeId::Shard(self.id), NodeId::Worker(worker), Packet::ToWorker(msg));
+        self.send_to_worker(
+            worker,
+            ToWorker::Row {
+                key,
+                data,
+                vclock,
+                fresh: fresh.max(vclock),
+            },
+        );
     }
 
     fn on_get(&mut self, key: Key, worker: WorkerId, min_vclock: Clock) {
@@ -288,22 +346,42 @@ impl Shard {
         }
     }
 
-    fn on_update(&mut self, source: WorkerId, clock: Clock, rows: Vec<(Key, Vec<f32>)>) {
+    fn on_register(&mut self, key: Key, worker: WorkerId) {
+        let workers = self.workers;
+        let set = self
+            .readers
+            .entry(key)
+            .or_insert_with(|| ReaderSet::for_workers(workers));
+        if set.insert(worker) {
+            self.reg_count[worker] += 1;
+        }
+    }
+
+    /// Process one inbound Update batch: apply it (eager path) or stage
+    /// it for deterministic replay. Returns the touched keys (for the
+    /// policy's `on_update` hook).
+    fn on_update(
+        &mut self,
+        source: WorkerId,
+        clock: Clock,
+        rows: Vec<(Key, Vec<f32>)>,
+    ) -> Vec<Key> {
         if self.deterministic {
             // Defer until the table clock commits `clock`; replay is then
             // sorted by (clock, worker), independent of arrival order.
+            let keys: Vec<Key> = rows.iter().map(|(k, _)| *k).collect();
             self.staged.entry((clock, source)).or_default().extend(rows);
-            return;
+            return keys;
         }
-        self.apply_rows(source, clock, rows);
+        self.apply_rows(clock, rows)
     }
 
     /// Apply one update batch to the row store (copy-on-write per row).
-    fn apply_rows(&mut self, source: WorkerId, clock: Clock, rows: Vec<(Key, Vec<f32>)>) {
+    fn apply_rows(&mut self, clock: Clock, rows: Vec<(Key, Vec<f32>)>) -> Vec<Key> {
         let mut touched = Vec::with_capacity(rows.len());
         for (key, delta) in rows {
             self.stats.updates_applied += 1;
-            if self.push_enabled {
+            if self.track_dirty {
                 self.dirty.insert(key);
             }
             let row = self.rows.entry(key).or_insert_with(|| Row {
@@ -324,75 +402,58 @@ impl Shard {
             row.fresh = row.fresh.max(clock);
             touched.push(key);
         }
-        if self.vap.is_some() {
-            self.vap_wave(source, clock, &touched);
-        }
+        touched
     }
 
-    /// VAP eager propagation: immediately push the rows this batch touched
-    /// to every *other* registered reader, ack-tracked per wave. This —
-    /// a per-update round trip to every reader — is the synchronization
-    /// cost the paper argues makes VAP impractical; here it is simulated
-    /// faithfully so the cost can be measured (vap-compare experiment).
-    fn vap_wave(&mut self, source: WorkerId, clock: Clock, touched: &[Key]) {
-        let vap = self.vap.as_ref().unwrap().clone();
-        let mut per_worker_rows: Vec<Vec<PushRow>> = Vec::new();
-        per_worker_rows.resize_with(self.workers, Vec::new);
-        for key in touched {
-            let Some(readers) = self.readers.get(key) else {
-                continue;
-            };
-            let Some(row) = self.rows.get(key) else {
-                continue;
-            };
-            for w in readers.iter() {
-                if w == source {
-                    continue; // the writer reads-its-own-writes locally
+    /// Summed staged-but-unapplied deltas per key, restricted to `keys`
+    /// (deterministic mode defers application to the table-clock commit).
+    /// Policies that propagate update *values* eagerly overlay these sums
+    /// so their waves carry everything the store will apply — including
+    /// concurrent workers' staged parts, exactly like the eager path's
+    /// accumulated store contents. Empty (and O(1)) outside deterministic
+    /// mode. Summation follows the staged map's sorted (clock, worker)
+    /// order, so previews are deterministic too.
+    pub(crate) fn staged_sums(&self, keys: &[Key]) -> FxHashMap<Key, Vec<f32>> {
+        let mut out: FxHashMap<Key, Vec<f32>> = FxHashMap::default();
+        if self.staged.is_empty() {
+            return out;
+        }
+        let want: FxHashSet<Key> = keys.iter().copied().collect();
+        for rows in self.staged.values() {
+            for (k, d) in rows {
+                if !want.contains(k) {
+                    continue;
                 }
-                per_worker_rows[w].push(PushRow {
-                    key: *key,
-                    data: Arc::clone(&row.data),
-                    fresh: row.fresh,
-                });
+                out.entry(*k)
+                    .and_modify(|acc| {
+                        for (a, x) in acc.iter_mut().zip(d) {
+                            *a += x;
+                        }
+                    })
+                    .or_insert_with(|| d.clone());
             }
         }
-        let awaiting: std::collections::HashSet<WorkerId> = (0..self.workers)
-            .filter(|&w| !per_worker_rows[w].is_empty())
-            .collect();
-        let seq = vap.assign_wave((source, clock), awaiting.clone());
-        for w in awaiting {
-            let rows = std::mem::take(&mut per_worker_rows[w]);
-            self.stats.rows_pushed += rows.len() as u64;
-            self.net.send(
-                NodeId::Shard(self.id),
-                NodeId::Worker(w),
-                Packet::ToWorker(ToWorker::VapPush {
-                    shard: self.id,
-                    seq,
-                    rows,
-                }),
-            );
-        }
+        out
     }
 
-    fn on_tick(&mut self, worker: WorkerId, clock: Clock) {
-        if let Some(new_min) = self.clocks.commit(worker, clock) {
-            // Deterministic mode: every update with clock <= new_min has
-            // arrived (Update precedes ClockTick on each FIFO link), so
-            // replay them in sorted (clock, worker) order before serving
-            // reads or firing the wave for this advance.
-            while let Some((&(c, w), _)) = self.staged.first_key_value() {
-                if c > new_min {
-                    break;
-                }
-                let rows = self.staged.remove(&(c, w)).unwrap();
-                self.apply_rows(w, c, rows);
+    /// Commit `worker`'s `clock`; on a table-clock advance, replay staged
+    /// updates in sorted order and serve unblocked GETs, then report the
+    /// new minimum (the caller runs the policy's commit hook after).
+    fn on_tick(&mut self, worker: WorkerId, clock: Clock) -> Option<Clock> {
+        let new_min = self.clocks.commit(worker, clock)?;
+        // Deterministic mode: every update with clock <= new_min has
+        // arrived (Update precedes ClockTick on each FIFO link), so
+        // replay them in sorted (clock, worker) order before serving
+        // reads or firing the wave for this advance.
+        while let Some((&(c, w), _)) = self.staged.first_key_value() {
+            if c > new_min {
+                break;
             }
-            self.serve_pending(new_min);
-            if self.push_enabled {
-                self.push_wave(new_min);
-            }
+            let rows = self.staged.remove(&(c, w)).unwrap();
+            self.apply_rows(c, rows);
         }
+        self.serve_pending(new_min);
+        Some(new_min)
     }
 
     fn serve_pending(&mut self, table_clock: Clock) {
@@ -407,12 +468,13 @@ impl Shard {
         self.pending = still;
     }
 
-    /// ESSP: push the registered rows *updated since the last wave* to
+    /// Clock-gated delta wave (ESSP; called from the policy's commit
+    /// hook): push the registered rows *updated since the last wave* to
     /// each registered client, batched per client into one wave message.
     /// Cost is O(dirty rows x interested readers) — the total wave size —
     /// thanks to the inverted index; payloads are `Arc`-shared, so a wave
     /// to P readers performs zero payload deep-copies.
-    fn push_wave(&mut self, vclock: Clock) {
+    pub fn push_wave(&mut self, vclock: Clock) {
         let mut per_worker: Vec<Vec<PushRow>> = Vec::new();
         per_worker.resize_with(self.workers, Vec::new);
         for key in self.dirty.drain() {
@@ -439,14 +501,13 @@ impl Shard {
             // can advance their copies' guarantees without re-pulling.
             self.stats.rows_pushed += rows.len() as u64;
             self.stats.push_waves += 1;
-            self.net.send(
-                NodeId::Shard(self.id),
-                NodeId::Worker(worker),
-                Packet::ToWorker(ToWorker::Push {
+            self.send_to_worker(
+                worker,
+                ToWorker::Push {
                     shard: self.id,
                     vclock,
                     rows,
-                }),
+                },
             );
         }
     }
@@ -461,7 +522,7 @@ pub struct ShardFinal {
 
 /// Spawn a shard thread. Returns its join handle.
 pub fn spawn(shard: Shard, inbox: Receiver<ToShard>, dump: Sender<ShardFinal>) -> JoinHandle<()> {
-    let id = shard.id;
+    let id = shard.core.id;
     std::thread::Builder::new()
         .name(format!("shard-{id}"))
         .spawn(move || {
@@ -481,7 +542,7 @@ mod tests {
     /// Fixture with an instant network and one inbox per worker.
     fn fixture_n(
         workers: usize,
-        push: bool,
+        consistency: Consistency,
         row_len: HashMap<TableId, usize>,
     ) -> (Shard, Vec<std::sync::mpsc::Receiver<ToWorker>>, SimNet) {
         let mut wtxs = Vec::new();
@@ -496,19 +557,24 @@ mod tests {
         let shard = Shard::new(
             0,
             workers,
-            push,
+            consistency,
             TransportHandle::new(net.handle()),
-            None,
             row_len,
             false,
         );
         (shard, wrxs, net)
     }
 
-    /// Single-worker fixture (the common case in these tests).
+    /// Single-worker fixture (the common case in these tests). `push`
+    /// selects the clock-wave policy (ESSP) vs pull-only (SSP).
     fn fixture(workers: usize, push: bool) -> (Shard, std::sync::mpsc::Receiver<ToWorker>, SimNet)
     {
-        let (shard, mut wrxs, net) = fixture_n(workers, push, HashMap::new());
+        let consistency = if push {
+            Consistency::Essp { s: 1 }
+        } else {
+            Consistency::Ssp { s: 1 }
+        };
+        let (shard, mut wrxs, net) = fixture_n(workers, consistency, HashMap::new());
         (shard, wrxs.remove(0), net)
     }
 
@@ -538,7 +604,7 @@ mod tests {
         // must be zeros of the table's registered row length, fresh NEVER.
         let mut row_len = HashMap::new();
         row_len.insert(0u32, 3usize);
-        let (mut shard, wrxs, _net) = fixture_n(1, false, row_len);
+        let (mut shard, wrxs, _net) = fixture_n(1, Consistency::Ssp { s: 1 }, row_len);
         shard.handle(ToShard::Get {
             key: (0, 99),
             worker: 0,
@@ -653,7 +719,8 @@ mod tests {
         // A wave addressed to P readers must carry the *same* allocation
         // the shard stores — Arc clones, zero payload deep-copies.
         let p = 3;
-        let (mut shard, wrxs, _net) = fixture_n(p, true, HashMap::new());
+        let (mut shard, wrxs, _net) =
+            fixture_n(p, Consistency::Essp { s: 1 }, HashMap::new());
         shard.init_row((0, 1), vec![0.0, 0.0]);
         for w in 0..p {
             shard.handle(ToShard::Register { key: (0, 1), worker: w });
@@ -732,7 +799,11 @@ mod tests {
         for _ in 0..3 {
             shard.handle(ToShard::Register { key: (0, 1), worker: 0 });
         }
-        assert_eq!(shard.reg_count[0], 1, "re-registration must not recount");
+        assert_eq!(
+            shard.core().reg_count[0],
+            1,
+            "re-registration must not recount"
+        );
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
@@ -756,6 +827,24 @@ mod tests {
         assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 64, 129]);
     }
 
+    fn det_shard(
+        workers: usize,
+        deterministic: bool,
+    ) -> (Shard, std::sync::mpsc::Receiver<ToWorker>, SimNet) {
+        let (wtx, wrx) = channel();
+        let (stx, _srx) = channel();
+        let net = SimNet::new(NetConfig::instant(), vec![wtx], vec![stx]);
+        let shard = Shard::new(
+            0,
+            workers,
+            Consistency::Ssp { s: 1 },
+            TransportHandle::new(net.handle()),
+            HashMap::new(),
+            deterministic,
+        );
+        (shard, wrx, net)
+    }
+
     #[test]
     fn deterministic_mode_applies_updates_in_worker_order() {
         // f32 addition is not associative: starting from 1e8, applying
@@ -764,18 +853,7 @@ mod tests {
         // (clock, worker) — yielding 0.0 — even when worker 1's update
         // arrives first.
         let mk = |deterministic: bool| {
-            let (wtx, _wrx) = channel();
-            let (stx, _srx) = channel();
-            let net = SimNet::new(NetConfig::instant(), vec![wtx], vec![stx]);
-            let mut shard = Shard::new(
-                0,
-                2,
-                false,
-                TransportHandle::new(net.handle()),
-                None,
-                HashMap::new(),
-                deterministic,
-            );
+            let (mut shard, _wrx, net) = det_shard(2, deterministic);
             shard.init_row((0, 0), vec![1e8]);
             shard.handle(ToShard::Update {
                 worker: 1,
@@ -800,21 +878,7 @@ mod tests {
 
     #[test]
     fn deterministic_mode_defers_until_commit() {
-        let (mut shard, wrx, _net) = {
-            let (wtx, wrx) = channel();
-            let (stx, _srx) = channel();
-            let net = SimNet::new(NetConfig::instant(), vec![wtx], vec![stx]);
-            let shard = Shard::new(
-                0,
-                2,
-                false,
-                TransportHandle::new(net.handle()),
-                None,
-                HashMap::new(),
-                true,
-            );
-            (shard, wrx, net)
-        };
+        let (mut shard, wrx, _net) = det_shard(2, true);
         shard.init_row((0, 0), vec![0.0]);
         shard.handle(ToShard::Update {
             worker: 0,

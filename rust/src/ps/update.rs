@@ -5,6 +5,11 @@
 //! within a clock and shipping one delta per touched row per clock. This is
 //! the main message-count reduction in the system (benchmarked in
 //! `benches/ps_throughput.rs`).
+//!
+//! The INC path deliberately does *no* norm bookkeeping: the value-bounded
+//! policies need per-shard *part* norms, which the client computes with one
+//! scan over the routed batches at flush time — and only when the active
+//! policy reports norms at all, so BSP/SSP/ESSP/Async pay nothing.
 
 use super::types::{row_wire_bytes, Key};
 use crate::util::hash::FxHashMap;
@@ -15,15 +20,6 @@ pub struct UpdateMap {
     rows: FxHashMap<Key, Vec<f32>>,
     /// Number of raw INC calls folded in (for coalescing-ratio metrics).
     raw_incs: u64,
-    /// Running max |element| over all pending rows, maintained by
-    /// `inc`/`inc_sparse`. Exact while `norm_exact`; an element that held
-    /// the max and then shrank (sign cancellation) flips `norm_exact`, and
-    /// the next `inf_norm()` call falls back to a rescan. This keeps
-    /// `inf_norm()` O(1) on the common SGD path (each element written once
-    /// per clock, magnitudes grow monotonically within a batch) instead of
-    /// rescanning every pending element on every `tick()`.
-    max_abs: f32,
-    norm_exact: bool,
 }
 
 impl Default for UpdateMap {
@@ -37,8 +33,6 @@ impl UpdateMap {
         Self {
             rows: FxHashMap::default(),
             raw_incs: 0,
-            max_abs: 0.0,
-            norm_exact: true,
         }
     }
 
@@ -48,28 +42,11 @@ impl UpdateMap {
         match self.rows.get_mut(&key) {
             Some(acc) => {
                 debug_assert_eq!(acc.len(), delta.len(), "row length mismatch on {key:?}");
-                let mut max_abs = self.max_abs;
-                let mut exact = self.norm_exact;
                 for (a, d) in acc.iter_mut().zip(delta) {
-                    let old = *a;
                     *a += d;
-                    let new_abs = a.abs();
-                    if new_abs >= max_abs {
-                        max_abs = new_abs;
-                    } else if old.abs() >= max_abs {
-                        exact = false;
-                    }
                 }
-                self.max_abs = max_abs;
-                self.norm_exact = exact;
             }
             None => {
-                for d in delta {
-                    let a = d.abs();
-                    if a > self.max_abs {
-                        self.max_abs = a;
-                    }
-                }
                 self.rows.insert(key, delta.to_vec());
             }
         }
@@ -80,20 +57,9 @@ impl UpdateMap {
     pub fn inc_sparse(&mut self, key: Key, row_len: usize, pairs: &[(usize, f32)]) {
         self.raw_incs += 1;
         let acc = self.rows.entry(key).or_insert_with(|| vec![0.0; row_len]);
-        let mut max_abs = self.max_abs;
-        let mut exact = self.norm_exact;
         for &(i, v) in pairs {
-            let old = acc[i];
             acc[i] += v;
-            let new_abs = acc[i].abs();
-            if new_abs >= max_abs {
-                max_abs = new_abs;
-            } else if old.abs() >= max_abs {
-                exact = false;
-            }
         }
-        self.max_abs = max_abs;
-        self.norm_exact = exact;
     }
 
     pub fn is_empty(&self) -> bool {
@@ -118,20 +84,11 @@ impl UpdateMap {
         self.rows.keys().copied().collect()
     }
 
-    /// Max |delta| over all pending rows — the VAP in-transit magnitude
-    /// contribution of this batch (∞-norm of the aggregated update).
-    /// O(1) while the incrementally-tracked max is exact (the common
-    /// case); falls back to a rescan only after sign cancellation shrank
-    /// a maximal element.
+    /// ∞-norm (max |element|) over all pending rows, by full scan. The
+    /// client's flush path computes per-shard part norms from the routed
+    /// batches instead; this is the whole-batch variant for tests and
+    /// metrics.
     pub fn inf_norm(&self) -> f32 {
-        if self.norm_exact {
-            return self.max_abs;
-        }
-        self.rescan_inf_norm()
-    }
-
-    /// Ground-truth ∞-norm by full rescan (test oracle + fallback).
-    pub fn rescan_inf_norm(&self) -> f32 {
         self.rows
             .values()
             .flat_map(|v| v.iter())
@@ -150,8 +107,6 @@ impl UpdateMap {
             out[route(&key)].push((key, delta));
         }
         self.raw_incs = 0;
-        self.max_abs = 0.0;
-        self.norm_exact = true;
         out
     }
 
@@ -195,39 +150,14 @@ mod tests {
     }
 
     #[test]
-    fn inf_norm_tracks_cancellation_exactly() {
-        // +5 then -5 on the max element: the incremental max must not
-        // report the stale peak — it falls back to a rescan and matches.
+    fn inf_norm_reflects_cancellation() {
+        // +5 then -5 on the max element: the scan sees the summed state,
+        // never a stale peak.
         let mut m = UpdateMap::new();
         m.inc(K, &[5.0, 1.0]);
         assert_eq!(m.inf_norm(), 5.0);
         m.inc(K, &[-5.0, 0.0]);
         assert_eq!(m.inf_norm(), 1.0);
-        assert_eq!(m.inf_norm(), m.rescan_inf_norm());
-    }
-
-    #[test]
-    fn inf_norm_matches_rescan_under_random_churn() {
-        // Property check: whatever mix of dense/sparse, positive/negative
-        // INCs, the O(1)-path answer always equals the ground truth.
-        let mut rng = crate::util::rng::Rng::new(31);
-        for _case in 0..20 {
-            let mut m = UpdateMap::new();
-            for _ in 0..200 {
-                let key = (0, rng.below(8));
-                if rng.f64() < 0.5 {
-                    let d: Vec<f32> = (0..4).map(|_| rng.normal_f32() * 2.0).collect();
-                    m.inc(key, &d);
-                } else {
-                    let idx = rng.usize_below(4);
-                    m.inc_sparse(key, 4, &[(idx, rng.normal_f32() * 3.0)]);
-                }
-                assert_eq!(m.inf_norm(), m.rescan_inf_norm());
-            }
-            // Reset on drain.
-            let _ = m.drain_routed(2, |k| (k.1 % 2) as usize);
-            assert_eq!(m.inf_norm(), 0.0);
-        }
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! VAP enforcement: the global in-transit update-magnitude tracker.
+//! Shard-local VAP visibility accounting: the ledger behind the
+//! value-bounded policies in [`crate::ps::policy`].
 //!
 //! The VAP condition (paper, "VAP"): whenever any worker computes on the
 //! model, every worker p's aggregated in-transit updates must satisfy
@@ -6,35 +7,50 @@
 //! update count t. "In transit" = produced but not yet seen by *all*
 //! workers that read the touched rows.
 //!
-//! Enforcing this needs *eager value propagation with per-update
-//! acknowledgment* — visibility cannot be gated on clock advances (a
-//! blocked reader would deadlock waiting for commits it is itself
-//! holding up). So in VAP mode the shards push touched rows to registered
-//! readers immediately on every update application, each wave tagged with
-//! a global sequence number; a batch retires once every addressed reader
-//! acked its waves. The paper's point — that this amounts to strong-
-//! consistency-grade synchronization — shows up directly as the per-update
-//! round trips and the reader stall time this tracker measures (the
-//! VAPSIM experiment). The tracker itself is a process-global object that
-//! only a simulated cluster can have.
+//! Up to PR 2 this was enforced by a process-global `Mutex`-protected
+//! tracker — realizable only in a simulated cluster, which is why VAP was
+//! rejected on the TCP data plane. This module is the distributable
+//! replacement: one `ShardVisibility` ledger per shard, fed entirely by
+//! wire messages, no shared memory.
 //!
-//! We track the ∞-norm of each flushed batch and sum per worker — an upper
-//! bound on the ∞-norm of the aggregated in-transit update (triangle
-//! inequality), i.e. a *conservative* enforcement of the condition.
+//! The decomposition that makes shard-local accounting *sound*: rows are
+//! partitioned across shards, so the aggregated in-transit update of
+//! worker p restricted to shard s's rows has ∞-norm bounded by the sum of
+//! p's in-transit *part* norms at s (triangle inequality), and the global
+//! ∞-norm is the max over shards of those restrictions. Hence
+//!
+//! > for every shard s and worker p: Σ in-transit part norms of p at s
+//! > <= v_t   ⟹   the global VAP condition holds.
+//!
+//! Each shard therefore enforces its local inequality independently and
+//! broadcasts grant/revoke transitions to workers (`ToWorker::Bound`);
+//! a client may read only while every shard has granted. This is in fact
+//! *less* conservative than the old global tracker, which charged every
+//! shard-part the full batch norm.
+//!
+//! The decay clock t is also derived locally without coordination:
+//! every worker sends a `ToShard::NormReport` to **every** shard on every
+//! CLOCK flush (zero-norm parts included), so each shard's count of
+//! received reports equals the global tick count — all shards agree on
+//! v_t exactly, with no extra round trips.
+//!
+//! Protocol (all per shard, driven by `policy::value::ValueServer`):
+//!   * `on_report`    — a flushed batch part enters the in-transit set
+//!     (the report precedes the Update on the same FIFO link);
+//!   * `assign_wave`  — the part was applied and eagerly pushed to the
+//!     registered readers; the returned sequence number tags the wave;
+//!   * `on_ack`       — a reader acked the wave; when the last reader
+//!     acks, the part retires;
+//!   * `detach`       — a finished worker will never ack again: drop it
+//!     from every awaiting set and finalize its own parts.
+//!
+//! The per-update round trip to every reader — the synchronization cost
+//! the paper argues makes value bounds impractical — is unchanged; it is
+//! now simply paid over a real network as well.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 use super::types::{Clock, WorkerId};
-
-/// One flushed-but-not-globally-seen batch.
-#[derive(Debug)]
-struct Transit {
-    inf_norm: f32,
-    /// Shard-parts of the batch whose waves are not yet fully acked.
-    parts_left: u32,
-}
 
 #[derive(Debug)]
 struct Wave {
@@ -42,95 +58,78 @@ struct Wave {
     awaiting: HashSet<WorkerId>,
 }
 
-#[derive(Debug, Default)]
-struct Inner {
-    /// Per worker: clock -> in-transit batch state.
-    in_transit: Vec<HashMap<Clock, Transit>>,
+/// One shard's view of the value-bound state: in-transit part norms per
+/// source worker, outstanding eager-push waves, and the locally derived
+/// global tick count. Owned by the shard thread — no locks.
+#[derive(Debug)]
+pub struct ShardVisibility {
+    v0: f32,
+    /// Per source worker: clock -> in-transit part ∞-norm at this shard
+    /// (at most one part per (worker, clock): updates are coalesced per
+    /// CLOCK flush).
+    in_transit: Vec<HashMap<Clock, f32>>,
     /// Outstanding eager-push waves by sequence number.
     waves: HashMap<u64, Wave>,
     /// Workers that finished their run (treated as seeing everything).
-    detached: HashSet<WorkerId>,
+    detached: Vec<bool>,
+    /// Locally observed tick count == global update count t (every worker
+    /// reports every flush to every shard).
+    t: u64,
+    next_seq: u64,
 }
 
-/// Global VAP state shared by all clients and shards (simulation-only).
-#[derive(Debug)]
-pub struct VapTracker {
-    v0: f32,
-    inner: Mutex<Inner>,
-    /// Global update-count t for the v_t = v0/sqrt(t) schedule.
-    global_t: AtomicU64,
-    next_seq: AtomicU64,
-    /// Total reader stall time, ns (the cost of the VAP condition).
-    stall_ns: AtomicU64,
-    /// Number of reads that had to stall at least once.
-    stalled_reads: AtomicU64,
-}
-
-impl VapTracker {
+impl ShardVisibility {
     pub fn new(v0: f32, workers: usize) -> Self {
         Self {
             v0,
-            inner: Mutex::new(Inner {
-                in_transit: (0..workers).map(|_| HashMap::new()).collect(),
-                waves: HashMap::new(),
-                detached: HashSet::new(),
-            }),
-            global_t: AtomicU64::new(0),
-            next_seq: AtomicU64::new(0),
-            stall_ns: AtomicU64::new(0),
-            stalled_reads: AtomicU64::new(0),
+            in_transit: (0..workers).map(|_| HashMap::new()).collect(),
+            waves: HashMap::new(),
+            detached: vec![false; workers],
+            t: 0,
+            next_seq: 0,
         }
     }
 
     /// Current value bound v_t = v0 / sqrt(max(t, 1)).
     pub fn v_t(&self) -> f32 {
-        let t = self.global_t.load(Ordering::Relaxed).max(1);
-        self.v0 / (t as f32).sqrt()
+        self.v0 / (self.t.max(1) as f32).sqrt()
     }
 
-    /// Register a flushed batch (client, at CLOCK time, *before* sending
-    /// the Update messages). `parts` = number of shards receiving a
-    /// non-empty part of this batch.
-    pub fn add_batch(&self, worker: WorkerId, clock: Clock, inf_norm: f32, parts: u32) {
-        if inf_norm > 0.0 && parts > 0 {
-            let mut g = self.inner.lock().unwrap();
-            g.in_transit[worker].insert(
-                clock,
-                Transit {
-                    inf_norm,
-                    parts_left: parts,
-                },
-            );
+    /// Observed tick count (the locally derived global t).
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// A worker flushed a batch whose part routed to this shard has the
+    /// given ∞-norm (0.0 for an empty part — still advances t).
+    pub fn on_report(&mut self, worker: WorkerId, clock: Clock, inf_norm: f32) {
+        self.t += 1;
+        if inf_norm > 0.0 && !self.detached[worker] {
+            self.in_transit[worker].insert(clock, inf_norm);
         }
-        self.global_t.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Shard applied one part of batch `origin` and pushed its rows to
+    /// The part from `origin` was applied and its rows pushed to
     /// `awaiting`. Returns the wave's sequence number. An empty (or fully
-    /// detached) awaiting set resolves the part immediately.
-    pub fn assign_wave(
-        &self,
-        origin: (WorkerId, Clock),
-        awaiting: HashSet<WorkerId>,
-    ) -> u64 {
-        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-        let mut g = self.inner.lock().unwrap();
+    /// detached) awaiting set retires the part immediately.
+    pub fn assign_wave(&mut self, origin: (WorkerId, Clock), awaiting: HashSet<WorkerId>) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
         let awaiting: HashSet<WorkerId> = awaiting
             .into_iter()
-            .filter(|w| !g.detached.contains(w))
+            .filter(|&w| !self.detached[w])
             .collect();
         if awaiting.is_empty() {
-            Self::part_seen(&mut g, origin);
+            self.retire(origin);
         } else {
-            g.waves.insert(seq, Wave { origin, awaiting });
+            self.waves.insert(seq, Wave { origin, awaiting });
         }
         seq
     }
 
     /// A reader acked wave `seq`.
-    pub fn on_wave_ack(&self, worker: WorkerId, seq: u64) {
-        let mut g = self.inner.lock().unwrap();
-        let resolved = match g.waves.get_mut(&seq) {
+    pub fn on_ack(&mut self, worker: WorkerId, seq: u64) {
+        let resolved = match self.waves.get_mut(&seq) {
             Some(wave) => {
                 wave.awaiting.remove(&worker);
                 wave.awaiting.is_empty()
@@ -138,28 +137,22 @@ impl VapTracker {
             None => false,
         };
         if resolved {
-            let origin = g.waves.remove(&seq).unwrap().origin;
-            Self::part_seen(&mut g, origin);
+            let origin = self.waves.remove(&seq).unwrap().origin;
+            self.retire(origin);
         }
     }
 
-    fn part_seen(g: &mut Inner, origin: (WorkerId, Clock)) {
-        if let Some(t) = g.in_transit[origin.0].get_mut(&origin.1) {
-            t.parts_left = t.parts_left.saturating_sub(1);
-            if t.parts_left == 0 {
-                g.in_transit[origin.0].remove(&origin.1);
-            }
-        }
+    fn retire(&mut self, origin: (WorkerId, Clock)) {
+        self.in_transit[origin.0].remove(&origin.1);
     }
 
     /// A worker finished its run: it will never ack again, and its own
-    /// in-transit updates are final. Treat it as having seen everything —
-    /// otherwise the remaining workers deadlock waiting for its acks.
-    pub fn detach(&self, worker: WorkerId) {
-        let mut g = self.inner.lock().unwrap();
-        g.detached.insert(worker);
-        g.in_transit[worker].clear();
-        let resolved: Vec<u64> = g
+    /// in-transit parts are final. Treat it as having seen everything —
+    /// otherwise the remaining workers stall forever on its acks.
+    pub fn detach(&mut self, worker: WorkerId) {
+        self.detached[worker] = true;
+        self.in_transit[worker].clear();
+        let resolved: Vec<u64> = self
             .waves
             .iter_mut()
             .filter_map(|(&seq, wave)| {
@@ -168,43 +161,31 @@ impl VapTracker {
             })
             .collect();
         for seq in resolved {
-            let origin = g.waves.remove(&seq).unwrap().origin;
-            Self::part_seen(&mut g, origin);
+            let origin = self.waves.remove(&seq).unwrap().origin;
+            self.retire(origin);
         }
     }
 
-    /// Is the VAP condition currently satisfied (all workers' aggregated
-    /// in-transit norms within v_t)?
+    pub fn is_detached(&self, worker: WorkerId) -> bool {
+        self.detached[worker]
+    }
+
+    /// Is this shard's local inequality satisfied for every worker
+    /// (Σ in-transit part norms <= v_t)? All shards granting implies the
+    /// global VAP condition (see module docs).
     pub fn is_bounded(&self) -> bool {
         let v_t = self.v_t();
-        let g = self.inner.lock().unwrap();
-        g.in_transit
+        self.in_transit
             .iter()
-            .all(|m| m.values().map(|t| t.inf_norm).sum::<f32>() <= v_t)
+            .all(|m| m.values().sum::<f32>() <= v_t)
     }
 
-    /// Max per-worker aggregated in-transit norm (for metrics/tests).
+    /// Max per-worker aggregated in-transit part norm (metrics/tests).
     pub fn max_in_transit(&self) -> f32 {
-        let g = self.inner.lock().unwrap();
-        g.in_transit
+        self.in_transit
             .iter()
-            .map(|m| m.values().map(|t| t.inf_norm).sum::<f32>())
+            .map(|m| m.values().sum::<f32>())
             .fold(0.0, f32::max)
-    }
-
-    pub fn record_stall(&self, ns: u64, first: bool) {
-        self.stall_ns.fetch_add(ns, Ordering::Relaxed);
-        if first {
-            self.stalled_reads.fetch_add(1, Ordering::Relaxed);
-        }
-    }
-
-    pub fn stall_ns(&self) -> u64 {
-        self.stall_ns.load(Ordering::Relaxed)
-    }
-
-    pub fn stalled_reads(&self) -> u64 {
-        self.stalled_reads.load(Ordering::Relaxed)
     }
 }
 
@@ -218,77 +199,93 @@ mod tests {
 
     #[test]
     fn bound_decays_with_t() {
-        let v = VapTracker::new(1.0, 2);
+        let mut v = ShardVisibility::new(1.0, 2);
         assert!((v.v_t() - 1.0).abs() < 1e-6);
         for c in 0..4 {
-            v.add_batch(0, c, 0.0, 0);
+            v.on_report(0, c, 0.0);
         }
         assert!((v.v_t() - 0.5).abs() < 1e-6); // 1/sqrt(4)
+        assert_eq!(v.t(), 4);
     }
 
     #[test]
-    fn batch_retires_when_all_readers_ack() {
-        let v = VapTracker::new(0.1, 3);
-        v.add_batch(0, 0, 5.0, 1);
+    fn part_retires_when_all_readers_ack() {
+        let mut v = ShardVisibility::new(0.1, 3);
+        v.on_report(0, 0, 5.0);
         assert!(!v.is_bounded());
         let seq = v.assign_wave((0, 0), set(&[1, 2]));
-        v.on_wave_ack(1, seq);
+        v.on_ack(1, seq);
         assert!(!v.is_bounded(), "worker 2 has not seen it");
-        v.on_wave_ack(2, seq);
+        v.on_ack(2, seq);
         assert!(v.is_bounded());
         assert_eq!(v.max_in_transit(), 0.0);
     }
 
     #[test]
-    fn multi_part_batch_needs_all_parts() {
-        let v = VapTracker::new(0.1, 2);
-        v.add_batch(0, 0, 3.0, 2); // spans two shards
-        let s1 = v.assign_wave((0, 0), set(&[1]));
-        let s2 = v.assign_wave((0, 0), set(&[1]));
-        v.on_wave_ack(1, s1);
-        assert!(!v.is_bounded(), "second part still in transit");
-        v.on_wave_ack(1, s2);
-        assert!(v.is_bounded());
-    }
-
-    #[test]
-    fn empty_awaiting_resolves_immediately() {
-        let v = VapTracker::new(0.1, 2);
-        v.add_batch(0, 0, 9.0, 1);
+    fn empty_awaiting_retires_immediately() {
+        let mut v = ShardVisibility::new(0.1, 2);
+        v.on_report(0, 0, 9.0);
         let _ = v.assign_wave((0, 0), set(&[]));
         assert!(v.is_bounded(), "no reader to wait for");
     }
 
     #[test]
-    fn aggregates_norms_per_worker() {
-        let v = VapTracker::new(10.0, 2);
-        v.add_batch(0, 0, 4.0, 1);
-        v.add_batch(0, 1, 4.0, 1);
+    fn aggregates_part_norms_per_worker() {
+        let mut v = ShardVisibility::new(10.0, 2);
+        v.on_report(0, 0, 4.0);
+        v.on_report(0, 1, 4.0);
         assert_eq!(v.max_in_transit(), 8.0);
-        // After two batches t=2: v_t = 10/sqrt(2) ~ 7.07 < 8.
+        // After two reports t=2: v_t = 10/sqrt(2) ~ 7.07 < 8.
         assert!(!v.is_bounded());
     }
 
     #[test]
     fn detach_resolves_pending_waves() {
-        let v = VapTracker::new(0.1, 3);
-        v.add_batch(0, 0, 5.0, 1);
+        let mut v = ShardVisibility::new(0.1, 3);
+        v.on_report(0, 0, 5.0);
         let _seq = v.assign_wave((0, 0), set(&[1, 2]));
         v.detach(1);
         assert!(!v.is_bounded(), "worker 2 still owes an ack");
         v.detach(2);
         assert!(v.is_bounded());
         // Future waves never wait on detached workers.
-        v.add_batch(0, 1, 5.0, 1);
+        v.on_report(0, 1, 5.0);
         let _ = v.assign_wave((0, 1), set(&[1, 2]));
         assert!(v.is_bounded());
+        assert!(v.is_detached(1) && v.is_detached(2) && !v.is_detached(0));
     }
 
     #[test]
-    fn zero_norm_batches_only_advance_t() {
-        let v = VapTracker::new(1.0, 1);
-        v.add_batch(0, 0, 0.0, 1);
+    fn detached_workers_own_reports_are_final() {
+        let mut v = ShardVisibility::new(0.1, 2);
+        v.on_report(0, 0, 5.0);
+        v.detach(0);
+        assert!(v.is_bounded(), "a detached worker's parts are final");
+        // Its later reports still advance t but add no in-transit mass.
+        v.on_report(0, 1, 5.0);
+        assert!(v.is_bounded());
+        assert_eq!(v.t(), 2);
+    }
+
+    #[test]
+    fn zero_norm_reports_only_advance_t() {
+        let mut v = ShardVisibility::new(1.0, 1);
+        v.on_report(0, 0, 0.0);
         assert!(v.is_bounded());
         assert_eq!(v.max_in_transit(), 0.0);
+        assert_eq!(v.t(), 1);
+    }
+
+    #[test]
+    fn late_ack_after_retire_is_ignored() {
+        let mut v = ShardVisibility::new(0.1, 3);
+        v.on_report(0, 0, 2.0);
+        let seq = v.assign_wave((0, 0), set(&[1]));
+        v.on_ack(1, seq);
+        assert!(v.is_bounded());
+        // Duplicate / stray acks must not panic or corrupt state.
+        v.on_ack(1, seq);
+        v.on_ack(2, 999);
+        assert!(v.is_bounded());
     }
 }

@@ -13,9 +13,10 @@
 //! node  := kind:u8 (0 = worker, 1 = shard) | id:u32
 //! ```
 //!
-//! `len` counts every byte after the length prefix. Message kinds 0–6 are
+//! `len` counts every byte after the length prefix. Message kinds 0–8 are
 //! the `ToShard` variants (Get, Update, ClockTick, Register, PushAck,
-//! VapAck, Shutdown), 16–18 the `ToWorker` variants (Row, Push, VapPush).
+//! VapAck, Shutdown, NormReport, Detach), 16–19 the `ToWorker` variants
+//! (Row, Push, VapPush, Bound).
 //! Row payloads are raw `f32` little-endian; on little-endian targets the
 //! encoder writes them straight from the shared `Arc<[f32]>` storage —
 //! encoding a push wave stages no intermediate payload copy.
@@ -42,8 +43,9 @@ use crate::ps::types::Key;
 
 /// Handshake magic: protocol name + wire revision byte.
 pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
-/// Protocol version carried in the handshake; bumped on layout changes.
-pub const VERSION: u16 = 1;
+/// Protocol version carried in the handshake; bumped on layout changes
+/// (v2: NormReport/Detach/Bound — the distributed value-bound protocol).
+pub const VERSION: u16 = 2;
 /// Upper bound on one frame's encoded size (a push wave of ~16M f32s);
 /// anything larger is rejected as corrupt before allocation.
 pub const MAX_FRAME: usize = 1 << 28;
@@ -62,9 +64,12 @@ const K_REGISTER: u8 = 3;
 const K_PUSH_ACK: u8 = 4;
 const K_VAP_ACK: u8 = 5;
 const K_SHUTDOWN: u8 = 6;
+const K_NORM_REPORT: u8 = 7;
+const K_DETACH: u8 = 8;
 const K_ROW: u8 = 16;
 const K_PUSH: u8 = 17;
 const K_VAP_PUSH: u8 = 18;
+const K_BOUND: u8 = 19;
 
 // ------------------------------------------------------------------ sizes
 
@@ -79,6 +84,8 @@ pub fn to_shard_body_len(m: &ToShard) -> usize {
         ToShard::Register { .. } => 16,
         ToShard::PushAck { .. } => 12,
         ToShard::VapAck { .. } => 12,
+        ToShard::NormReport { .. } => 16,
+        ToShard::Detach { .. } => 4,
         ToShard::Shutdown => 0,
     }
 }
@@ -90,6 +97,7 @@ pub fn to_worker_body_len(m: &ToWorker) -> usize {
         ToWorker::Push { rows, .. } | ToWorker::VapPush { rows, .. } => {
             16 + rows.iter().map(|r| 24 + 4 * r.data.len()).sum::<usize>()
         }
+        ToWorker::Bound { .. } => 5,
     }
 }
 
@@ -222,6 +230,20 @@ fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
             w32(w, *worker as u32)?;
             w64(w, *seq)
         }
+        ToShard::NormReport {
+            worker,
+            clock,
+            inf_norm,
+        } => {
+            w8(w, K_NORM_REPORT)?;
+            w32(w, *worker as u32)?;
+            wi64(w, *clock)?;
+            w.write_all(&inf_norm.to_le_bytes())
+        }
+        ToShard::Detach { worker } => {
+            w8(w, K_DETACH)?;
+            w32(w, *worker as u32)
+        }
         ToShard::Shutdown => w8(w, K_SHUTDOWN),
     }
 }
@@ -267,6 +289,11 @@ fn write_to_worker(w: &mut impl Write, m: &ToWorker) -> io::Result<()> {
             w32(w, *shard as u32)?;
             w64(w, *seq)?;
             write_push_rows(w, rows)
+        }
+        ToWorker::Bound { shard, granted } => {
+            w8(w, K_BOUND)?;
+            w32(w, *shard as u32)?;
+            w8(w, u8::from(*granted))
         }
     }
 }
@@ -342,6 +369,18 @@ impl<'a> Cur<'a> {
 
     fn i64(&mut self) -> Result<i64> {
         Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("bad bool byte {b}"),
+        }
     }
 
     fn key(&mut self) -> Result<Key> {
@@ -449,6 +488,14 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
             worker: c.worker()?,
             seq: c.u64()?,
         }),
+        K_NORM_REPORT => Packet::ToShard(ToShard::NormReport {
+            worker: c.worker()?,
+            clock: c.i64()?,
+            inf_norm: c.f32()?,
+        }),
+        K_DETACH => Packet::ToShard(ToShard::Detach {
+            worker: c.worker()?,
+        }),
         K_SHUTDOWN => Packet::ToShard(ToShard::Shutdown),
         K_ROW => {
             let key = c.key()?;
@@ -471,6 +518,10 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
             shard: c.u32()? as usize,
             seq: c.u64()?,
             rows: decode_push_rows(&mut c)?,
+        }),
+        K_BOUND => Packet::ToWorker(ToWorker::Bound {
+            shard: c.u32()? as usize,
+            granted: c.bool()?,
         }),
         k => bail!("unknown message kind {k}"),
     };
@@ -602,6 +653,12 @@ mod tests {
                 vclock: 3,
             }),
             Packet::ToShard(ToShard::VapAck { worker: 0, seq: 99 }),
+            Packet::ToShard(ToShard::NormReport {
+                worker: 1,
+                clock: 8,
+                inf_norm: 0.75,
+            }),
+            Packet::ToShard(ToShard::Detach { worker: 3 }),
             Packet::ToShard(ToShard::Shutdown),
             Packet::ToWorker(ToWorker::Row {
                 key: (3, 1),
@@ -618,6 +675,14 @@ mod tests {
                 shard: 0,
                 seq: 11,
                 rows,
+            }),
+            Packet::ToWorker(ToWorker::Bound {
+                shard: 1,
+                granted: true,
+            }),
+            Packet::ToWorker(ToWorker::Bound {
+                shard: 0,
+                granted: false,
             }),
         ];
         for p in &msgs {

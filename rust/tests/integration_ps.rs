@@ -97,6 +97,18 @@ fn conservation_under_delay_vap() {
 }
 
 #[test]
+fn conservation_under_delay_avap() {
+    // The composed model (value bound + SSP clock window) lives entirely
+    // in the policy layer; conservation and the clock bound must hold
+    // under delays and stragglers like every other model.
+    let r = adder_run(Consistency::Avap { v0: 50.0, s: 2 }, 3, 8, 4);
+    assert_conserved(&r, 3, 8, 4);
+    assert!(r.vap_stall.is_some(), "avap reports the value-bound stalls");
+    let min = r.staleness.min().unwrap();
+    assert!(min >= -3, "avap clock window violated: differential {min}");
+}
+
+#[test]
 fn staleness_bound_respected_ssp() {
     // The recorded clock differential can never be below -(s+1): the read
     // condition blocks first. And SSP can never read ahead of commits.

@@ -165,6 +165,71 @@ fn prop_staleness_bound_never_violated() {
 }
 
 #[test]
+fn prop_consistency_parse_label_roundtrip() {
+    // Every model — including the policy-layer-only avap — round-trips
+    // through its label exactly (f32 Display in Rust prints the shortest
+    // representation that re-parses to the same bits, so v0 survives).
+    for_cases(300, |case, rng| {
+        let s = rng.below(1000) as i64;
+        let refresh = 1 + rng.below(100) as i64;
+        let v0 = (rng_f32(rng) * 100.0).abs().max(1e-6);
+        let m = match case % 6 {
+            0 => Consistency::Bsp,
+            1 => Consistency::Ssp { s },
+            2 => Consistency::Essp { s },
+            3 => Consistency::Async {
+                refresh_every: refresh,
+            },
+            4 => Consistency::Vap { v0 },
+            _ => Consistency::Avap { v0, s },
+        };
+        let label = m.label();
+        let back = Consistency::parse(&label)
+            .unwrap_or_else(|e| panic!("case {case}: {label:?} failed to re-parse: {e}"));
+        assert_eq!(back, m, "case {case}: {label:?} round-tripped to {back:?}");
+        assert_eq!(back.label(), label, "case {case}: label not idempotent");
+    });
+    // Malformed strings are rejected, never mis-parsed.
+    for bad in [
+        "",
+        "bsp:0",
+        "ssp",
+        "ssp:",
+        "ssp:-1",
+        "ssp:1:2",
+        "essp",
+        "essp:x",
+        "async:0",
+        "async:-3",
+        "async:1.5",
+        "vap",
+        "vap:",
+        "vap:0",
+        "vap:-0.5",
+        "vap:nan",
+        "vap:inf",
+        "avap",
+        "avap:0.5",
+        "avap:0.5:",
+        "avap:0.5:-1",
+        "avap::2",
+        "avap:0.5:2:9",
+        "wild:1",
+        "BSP",
+    ] {
+        assert!(
+            Consistency::parse(bad).is_err(),
+            "{bad:?} must be rejected"
+        );
+    }
+}
+
+/// Uniform-ish f32 in [-1, 1) from the shared test rng.
+fn rng_f32(rng: &mut Rng) -> f32 {
+    (rng.f64() * 2.0 - 1.0) as f32
+}
+
+#[test]
 fn prop_router_agrees_across_instances() {
     for_cases(30, |case, rng| {
         let shards = 1 + rng.usize_below(16);

@@ -48,7 +48,7 @@ fn gen_push_rows(rng: &mut Rng) -> Vec<PushRow> {
         .collect()
 }
 
-const TO_SHARD_VARIANTS: usize = 7;
+const TO_SHARD_VARIANTS: usize = 9;
 
 fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
     match variant {
@@ -80,11 +80,19 @@ fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
             worker: rng.usize_below(64),
             seq: rng.next_u64(),
         },
+        6 => ToShard::NormReport {
+            worker: rng.usize_below(64),
+            clock: gen_clock(rng),
+            inf_norm: rng.normal_f32().abs(),
+        },
+        7 => ToShard::Detach {
+            worker: rng.usize_below(64),
+        },
         _ => ToShard::Shutdown,
     }
 }
 
-const TO_WORKER_VARIANTS: usize = 3;
+const TO_WORKER_VARIANTS: usize = 4;
 
 fn gen_to_worker(rng: &mut Rng, variant: usize) -> ToWorker {
     match variant {
@@ -99,10 +107,14 @@ fn gen_to_worker(rng: &mut Rng, variant: usize) -> ToWorker {
             vclock: gen_clock(rng),
             rows: gen_push_rows(rng),
         },
-        _ => ToWorker::VapPush {
+        2 => ToWorker::VapPush {
             shard: rng.usize_below(16),
             seq: rng.next_u64(),
             rows: gen_push_rows(rng),
+        },
+        _ => ToWorker::Bound {
+            shard: rng.usize_below(16),
+            granted: rng.f64() < 0.5,
         },
     }
 }
@@ -282,6 +294,20 @@ fn lying_payload_length_is_bounded_before_allocation() {
         msg.contains("truncated") || msg.contains("overflow"),
         "{msg}"
     );
+}
+
+#[test]
+fn garbage_bound_bool_byte_is_rejected() {
+    // Bound's granted flag is a strict 0/1 byte; anything else is treated
+    // as stream corruption. Layout after kind byte (offset 15): shard u32
+    // | granted u8.
+    let mut bytes = encode(&Packet::ToWorker(ToWorker::Bound {
+        shard: 2,
+        granted: true,
+    }));
+    bytes[15 + 4] = 7;
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("bad bool"), "{err:#}");
 }
 
 #[test]
