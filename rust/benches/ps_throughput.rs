@@ -44,6 +44,29 @@ fn bench_coalescing(out: &mut Vec<Entry>) {
     ));
 }
 
+/// Sparse coalescing throughput on an LDA-shaped stream: every INC
+/// touches 2 of K=1024 indices and each row keeps the same few indices,
+/// so the coalesced delta stays far below the densify threshold — fold
+/// cost and flush bytes are O(nnz), not O(K).
+fn bench_coalescing_sparse(out: &mut Vec<Entry>) {
+    let mut m = UpdateMap::new();
+    let r = bench("update coalescing sparse: K=1024, nnz≈2", 2, 10, || {
+        for i in 0..100_000u64 {
+            let row = i % 256;
+            let a = ((row * 31) % 1024) as usize;
+            let b = ((row * 131 + 512) % 1024) as usize;
+            m.inc_sparse((0, row), 1024, &[(a, 1.0), (b, -1.0)]);
+        }
+        let _ = m.drain_routed(4, |k| (k.1 % 4) as usize);
+    });
+    r.print_throughput(1e5, "incs");
+    out.push((
+        "coalescing_inc_sparse_1e5_k1024_nnz2".into(),
+        r.mean.as_secs_f64(),
+        r.throughput(1e5),
+    ));
+}
+
 /// End-to-end GET/INC/CLOCK rate on an instant network (pure PS overhead).
 /// `alloc_free` switches the worker loop from `get()` (compat, allocates a
 /// Vec per read) to `get_into()` (reusable buffer, allocation-free reads).
@@ -139,6 +162,48 @@ fn bench_get_inc_clock_tcp(consistency: Consistency, workers: usize, out: &mut V
     r.print_throughput(ops, "get+inc");
     out.push((
         format!("e2e_{}_x{workers}w_get_into_tcp_loopback", consistency.label()),
+        r.mean.as_secs_f64(),
+        r.throughput(ops),
+    ));
+}
+
+/// LDA-shaped sparse flushes over the real loopback-TCP data plane: wide
+/// rows (K=1024), 2-index INCs. Before the hybrid delta plane every
+/// flush shipped all K f32s per touched row; now it ships O(nnz) pairs —
+/// this series watches that byte win translate into wall-clock.
+fn bench_sparse_flush_tcp(out: &mut Vec<Entry>) {
+    let workers = 4;
+    let label = "e2e essp:3 x4w sparse-inc tcp_loopback: K=1024, 16 rd+inc2/clock, 100 clocks";
+    let r = bench(label, 1, 3, || {
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers,
+            shards: 2,
+            consistency: Consistency::Essp { s: 3 },
+            net: NetConfig::instant(),
+            transport: TransportSel::Tcp,
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 64, 1024));
+        let apps: Vec<Box<dyn PsApp>> = (0..workers)
+            .map(|w| {
+                let mut buf: Vec<f32> = Vec::new();
+                Box::new(move |ps: &mut PsClient, _c: Clock| {
+                    for i in 0..16u64 {
+                        let key = (0, (w as u64 * 16 + i) % 64);
+                        ps.get_into(key, &mut buf);
+                        let idx = ((w as u64 * 37 + i * 3) % 1024) as usize;
+                        ps.inc_sparse(key, &[(idx, 1.0), ((idx + 5) % 1024, -1.0)]);
+                    }
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let _ = cluster.run(apps, 100);
+    });
+    let ops = (workers * 16 * 100) as f64;
+    r.print_throughput(ops, "get+inc2");
+    out.push((
+        "e2e_essp3_x4w_sparse_inc_tcp_loopback".into(),
         r.mean.as_secs_f64(),
         r.throughput(ops),
     ));
@@ -305,6 +370,7 @@ fn main() {
     println!("== ps_throughput (paper §ESSPTable system claims) ==");
     let mut entries = Vec::new();
     bench_coalescing(&mut entries);
+    bench_coalescing_sparse(&mut entries);
     for c in [
         Consistency::Bsp,
         Consistency::Ssp { s: 3 },
@@ -325,6 +391,8 @@ fn main() {
     // VAP over TCP: possible at all only since the consistency-policy
     // refactor distributed its enforcement onto the wire.
     bench_get_inc_clock_tcp(Consistency::Vap { v0: 1000.0 }, 4, &mut entries);
+    // Sparse flushes of wide rows over TCP (the hybrid delta plane win).
+    bench_sparse_flush_tcp(&mut entries);
     bench_push_vs_pull_traffic();
     write_json(&entries);
 }

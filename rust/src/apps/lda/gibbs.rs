@@ -9,6 +9,14 @@
 //! SSP/ESSP — that staleness is exactly what the paper studies. Counts are
 //! clamped at >= 0 in the sampler: in-flight negative INCs can transiently
 //! undershoot, which the error-tolerance argument of the paper covers.
+//!
+//! Each token's ±1 INCs touch 1–2 indices of a K-topic row and enter the
+//! PS as sparse pairs (`PsClient::inc_sparse`). They stay sparse
+//! end-to-end — coalesced as pairs, shipped as `len | nnz | (idx,val)*`,
+//! applied without densification — so a word-topic flush costs O(nnz)
+//! wire bytes instead of O(K) (see `ps::update`). Only the hot
+//! topic-total row (every token increments it) crosses the density
+//! threshold and densifies, which is exactly when dense is cheaper.
 
 use std::sync::Arc;
 

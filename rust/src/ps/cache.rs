@@ -22,7 +22,7 @@
 
 use std::sync::Arc;
 
-use super::types::{Clock, Key};
+use super::types::{Clock, Key, RowDelta};
 use crate::util::hash::FxHashMap;
 
 #[derive(Debug, Clone)]
@@ -118,17 +118,16 @@ impl RowCache {
 
     /// Apply a local delta to the cached copy (read-my-writes support).
     /// Copies-on-write: a snapshot shared with an in-flight message or the
-    /// shard is detached before mutation.
-    pub fn apply_delta(&mut self, key: &Key, delta: &[f32]) {
+    /// shard is detached before mutation. Sparse deltas fold in place,
+    /// touching only their nnz indices.
+    pub fn apply_delta(&mut self, key: &Key, delta: &RowDelta) {
         if let Some(r) = self.rows.get_mut(key) {
             if Arc::get_mut(&mut r.data).is_none() {
                 let detached: Arc<[f32]> = r.data.iter().copied().collect();
                 r.data = detached;
             }
             let data = Arc::get_mut(&mut r.data).expect("unique after copy-on-write");
-            for (a, d) in data.iter_mut().zip(delta) {
-                *a += d;
-            }
+            delta.add_into(data);
         }
     }
 
@@ -283,8 +282,16 @@ mod tests {
     fn apply_delta_mutates_copy() {
         let mut c = RowCache::new(0);
         c.insert(k(1), vec![1.0, 1.0], 0, 0);
-        c.apply_delta(&k(1), &[0.5, -0.5]);
+        c.apply_delta(&k(1), &vec![0.5, -0.5].into());
         assert_eq!(&c.peek(&k(1)).unwrap().data[..], &[1.5, 0.5]);
+    }
+
+    #[test]
+    fn apply_sparse_delta_touches_only_its_indices() {
+        let mut c = RowCache::new(0);
+        c.insert(k(1), vec![1.0, 2.0, 3.0, 4.0], 0, 0);
+        c.apply_delta(&k(1), &RowDelta::sparse(4, vec![(1, 10.0), (3, -4.0)]));
+        assert_eq!(&c.peek(&k(1)).unwrap().data[..], &[1.0, 12.0, 3.0, 0.0]);
     }
 
     #[test]
@@ -292,8 +299,18 @@ mod tests {
         let mut c = RowCache::new(0);
         let shared: Arc<[f32]> = vec![1.0, 1.0].into();
         c.insert(k(1), Arc::clone(&shared), 0, 0);
-        c.apply_delta(&k(1), &[1.0, 0.0]);
+        c.apply_delta(&k(1), &vec![1.0, 0.0].into());
         // The external holder's view is untouched (copy-on-write).
+        assert_eq!(&shared[..], &[1.0, 1.0]);
+        assert_eq!(&c.peek(&k(1)).unwrap().data[..], &[2.0, 1.0]);
+    }
+
+    #[test]
+    fn apply_sparse_delta_detaches_shared_snapshot() {
+        let mut c = RowCache::new(0);
+        let shared: Arc<[f32]> = vec![1.0, 1.0].into();
+        c.insert(k(1), Arc::clone(&shared), 0, 0);
+        c.apply_delta(&k(1), &RowDelta::sparse(2, vec![(0, 1.0)]));
         assert_eq!(&shared[..], &[1.0, 1.0]);
         assert_eq!(&c.peek(&k(1)).unwrap().data[..], &[2.0, 1.0]);
     }

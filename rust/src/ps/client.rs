@@ -411,13 +411,12 @@ impl PsClient {
     }
 
     /// Fold this worker's pending (not yet flushed) deltas into `buf`
-    /// (read-my-writes), if enabled.
+    /// (read-my-writes), if enabled. A sparse pending delta touches only
+    /// its nnz indices.
     fn overlay_pending(&self, key: &Key, buf: &mut [f32]) {
         if self.cfg.read_my_writes {
             if let Some(delta) = self.pending.pending(key) {
-                for (a, d) in buf.iter_mut().zip(delta) {
-                    *a += d;
-                }
+                delta.add_into(buf);
             }
         }
     }
@@ -482,7 +481,10 @@ impl PsClient {
         self.pending.inc(key, delta);
     }
 
-    /// Sparse INC: (index, value) pairs against a row of the table's width.
+    /// Sparse INC: (index, value) pairs against a row of the table's
+    /// width. The pairs coalesce — and ship — sparse (O(nnz) wire bytes,
+    /// not O(row len)) unless the pending row's fill crosses the density
+    /// threshold or a dense INC touches it (see `ps::update`).
     pub fn inc_sparse(&mut self, key: Key, pairs: &[(usize, f32)]) {
         self.stats.raw_incs += 1;
         let len = *self
@@ -495,16 +497,17 @@ impl PsClient {
     /// CLOCK: flush coalesced updates, commit the tick, advance the clock.
     pub fn tick(&mut self) {
         // Read-my-writes across the flush: fold the deltas into our cached
-        // copies (the server copy will include them once applied; replacing
-        // pushes/pulls overwrite, so nothing double-counts).
+        // copies in place — borrowed from the coalescing map, no per-row
+        // clone; `drain_routed` then *moves* the same deltas into the
+        // outgoing Update batches. (The server copy will include them once
+        // applied; replacing pushes/pulls overwrite, so nothing
+        // double-counts.)
         if self.cfg.read_my_writes {
-            for key in self.pending.keys() {
-                if let Some(delta) = self.pending.pending(&key) {
-                    let delta = delta.to_vec();
-                    self.cache.apply_delta(&key, &delta);
-                    // The copy now reflects this worker's clock-`c` updates.
-                    self.cache.bump_fresh(&key, self.clock);
-                }
+            let clock = self.clock;
+            for (key, delta) in self.pending.iter() {
+                self.cache.apply_delta(key, delta);
+                // The copy now reflects this worker's clock-`c` updates.
+                self.cache.bump_fresh(key, clock);
             }
         }
         let n_shards = self.router.n_shards();
@@ -515,14 +518,16 @@ impl PsClient {
         // registers the in-transit mass before it can apply the part.
         // Zero-norm (incl. empty) parts are reported too — every shard's
         // decay clock t must count every flush of every worker. The norm
-        // scan costs O(batch) and runs only under these policies.
+        // scan costs O(batch) and runs only under these policies; a
+        // sparse part is scanned directly off its stored pairs (implicit
+        // zeros cannot raise a max of absolute values).
         let report_norms = self.policy.reports_norms();
         for (shard, rows) in batches.into_iter().enumerate() {
             if report_norms {
                 let inf_norm = rows
                     .iter()
-                    .flat_map(|(_, v)| v.iter())
-                    .fold(0.0f32, |m, x| m.max(x.abs()));
+                    .map(|(_, d)| d.inf_norm())
+                    .fold(0.0f32, |m, x| m.max(x));
                 self.send(
                     shard,
                     ToShard::NormReport {

@@ -186,16 +186,15 @@ impl ValueServer {
                 // Eager path: the update is already applied to the store.
                 (Some(row), None) => (Arc::clone(&row.data), row.fresh),
                 // Deterministic path: overlay the staged sums (preview).
+                // A sparse sum folds only its nnz indices into the copy.
                 (Some(row), Some(d)) => {
                     let mut v = row.data.to_vec();
-                    for (a, x) in v.iter_mut().zip(d) {
-                        *a += x;
-                    }
+                    d.add_into(&mut v);
                     (v.into(), row.fresh.max(clock))
                 }
                 // Row not yet materialized: the staged sum from zeros is
                 // the preview (exactly how the commit will create it).
-                (None, Some(d)) => (d.clone().into(), clock),
+                (None, Some(d)) => (d.clone().to_dense().into(), clock),
                 (None, None) => continue,
             };
             for w in readers.iter() {
@@ -337,7 +336,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 1), vec![1.0])],
+            rows: vec![((0, 1), vec![1.0].into())],
         });
         // The wave reaches readers 1 and 2 but never the writer.
         for w in [1usize, 2] {
@@ -376,7 +375,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 1), vec![5.0])],
+            rows: vec![((0, 1), vec![5.0].into())],
         });
         // Worker 1 sees: revoke, then the wave.
         match recv(&wrxs[1]) {
@@ -417,7 +416,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 1), vec![5.0])],
+            rows: vec![((0, 1), vec![5.0].into())],
         });
         // Worker 1 never acks — it finishes instead. The part must retire
         // and the grant return to worker 0 (the only attached worker).
@@ -439,7 +438,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 1,
-            rows: vec![((0, 1), vec![0.1])],
+            rows: vec![((0, 1), vec![0.1].into())],
         });
         // Drain anything addressed to worker 1 before the update above:
         // only the pre-detach revoke/wave pair may be present.
@@ -474,7 +473,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 1), vec![1.0, 2.0])],
+            rows: vec![((0, 1), vec![1.0, 2.0].into())],
         });
         // The store is unchanged (staged until commit) ...
         assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[10.0, 20.0]);
@@ -498,7 +497,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 1,
             clock: 0,
-            rows: vec![((0, 1), vec![100.0, 0.0])],
+            rows: vec![((0, 1), vec![100.0, 0.0].into())],
         });
         match recv(&wrxs[0]) {
             ToWorker::VapPush { rows, .. } => {
@@ -510,6 +509,41 @@ mod tests {
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
         assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[111.0, 22.0]);
+    }
+
+    #[test]
+    fn deterministic_wave_previews_sparse_staged_deltas() {
+        // A sparse update staged for deterministic replay must still
+        // preview correctly in the eager wave: the pairs overlay the
+        // committed row copy, untouched indices keep their values, and
+        // the commit later applies the identical delta to the store.
+        use crate::ps::types::RowDelta;
+        let (mut shard, wrxs, _net) = vap_fixture_det(2, 100.0, true);
+        shard.init_row((0, 1), vec![10.0, 20.0, 30.0]);
+        for w in 0..2 {
+            shard.handle(ToShard::Register { key: (0, 1), worker: w });
+        }
+        shard.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 0,
+            inf_norm: 2.0,
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), RowDelta::sparse(3, vec![(2, 2.0)]))],
+        });
+        // Store untouched; wave previews the sparse overlay.
+        assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[10.0, 20.0, 30.0]);
+        match recv(&wrxs[1]) {
+            ToWorker::VapPush { rows, .. } => {
+                assert_eq!(&rows[0].data[..], &[10.0, 20.0, 32.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
+        assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[10.0, 20.0, 32.0]);
     }
 
     #[test]

@@ -15,6 +15,11 @@
 //!    wave addressed to P readers clones the `Arc` P times; the payload
 //!    itself is deep-copied exactly zero times. `apply_rows` copies-on-
 //!    write, so in-flight wave payloads are immutable.
+//!  * Update deltas arrive as hybrid [`RowDelta`]s and are applied in
+//!    their own representation: a sparse delta touches only its nnz
+//!    indices of the stored row — never densified, here or in the staged
+//!    deterministic-replay path (`staged_sums` accumulates previews with
+//!    the same hybrid fold the client's coalescing uses).
 //!  * Registrations live in an inverted index `Key -> ReaderSet` (bitset
 //!    over workers), so wave construction costs O(dirty rows x
 //!    interested readers) — the wave size — instead of scanning every
@@ -29,7 +34,7 @@ use std::thread::JoinHandle;
 use super::consistency::Consistency;
 use super::msg::{PushRow, ToShard, ToWorker};
 use super::policy::ServerPolicy;
-use super::types::{Clock, Key, TableId, WorkerId};
+use super::types::{Clock, Key, RowDelta, TableId, WorkerId};
 use super::vclock::MinClock;
 use crate::transport::{NodeId, Packet, TransportHandle};
 use crate::util::hash::{FxHashMap, FxHashSet};
@@ -132,7 +137,7 @@ pub struct ShardCore {
     /// in-process result exactly.
     deterministic: bool,
     /// Staged (not yet applied) update batches, keyed for sorted replay.
-    staged: BTreeMap<(Clock, WorkerId), Vec<(Key, Vec<f32>)>>,
+    staged: BTreeMap<(Clock, WorkerId), Vec<(Key, RowDelta)>>,
     net: TransportHandle,
     /// Uniform row length per table, for serving GETs of rows that no
     /// update or init has materialized yet (replied as zeros).
@@ -364,7 +369,7 @@ impl ShardCore {
         &mut self,
         source: WorkerId,
         clock: Clock,
-        rows: Vec<(Key, Vec<f32>)>,
+        rows: Vec<(Key, RowDelta)>,
     ) -> Vec<Key> {
         if self.deterministic {
             // Defer until the table clock commits `clock`; replay is then
@@ -377,16 +382,39 @@ impl ShardCore {
     }
 
     /// Apply one update batch to the row store (copy-on-write per row).
-    fn apply_rows(&mut self, clock: Clock, rows: Vec<(Key, Vec<f32>)>) -> Vec<Key> {
+    /// Each delta is folded in its own representation: a sparse delta
+    /// touches only its nnz indices — no densification on the apply path.
+    fn apply_rows(&mut self, clock: Clock, rows: Vec<(Key, RowDelta)>) -> Vec<Key> {
         let mut touched = Vec::with_capacity(rows.len());
         for (key, delta) in rows {
             self.stats.updates_applied += 1;
             if self.track_dirty {
                 self.dirty.insert(key);
             }
-            let row = self.rows.entry(key).or_insert_with(|| Row {
-                data: vec![0.0; delta.len()].into(),
-                fresh: super::types::NEVER,
+            // Materializing a row from its first update zero-fills the
+            // delta's claimed width — and a decoded frame may lie about
+            // it (a sparse row's `len` is a claim, not bytes actually on
+            // the wire). Validate against the table registry when one
+            // exists, so a corrupt frame cannot demand huge zero-fills;
+            // tables without a registered uniform width (variable-length
+            // LM tensors, bare test fixtures) keep the delta's word.
+            let row_len = &self.row_len;
+            let row = self.rows.entry(key).or_insert_with(|| {
+                if let Some(&registered) = row_len.get(&key.0) {
+                    assert_eq!(
+                        registered,
+                        delta.len(),
+                        "update materializing {:?} claims width {} but table {} registers {}",
+                        key,
+                        delta.len(),
+                        key.0,
+                        registered
+                    );
+                }
+                Row {
+                    data: vec![0.0; delta.len()].into(),
+                    fresh: super::types::NEVER,
+                }
             });
             debug_assert_eq!(row.data.len(), delta.len(), "row length mismatch {key:?}");
             // Copy-on-write: mutate in place while we hold the only
@@ -396,9 +424,7 @@ impl ShardCore {
                 row.data = detached;
             }
             let data = Arc::get_mut(&mut row.data).expect("unique after copy-on-write");
-            for (a, d) in data.iter_mut().zip(&delta) {
-                *a += d;
-            }
+            delta.add_into(data);
             row.fresh = row.fresh.max(clock);
             touched.push(key);
         }
@@ -412,9 +438,11 @@ impl ShardCore {
     /// concurrent workers' staged parts, exactly like the eager path's
     /// accumulated store contents. Empty (and O(1)) outside deterministic
     /// mode. Summation follows the staged map's sorted (clock, worker)
-    /// order, so previews are deterministic too.
-    pub(crate) fn staged_sums(&self, keys: &[Key]) -> FxHashMap<Key, Vec<f32>> {
-        let mut out: FxHashMap<Key, Vec<f32>> = FxHashMap::default();
+    /// order, so previews are deterministic too; sparse parts accumulate
+    /// with the same hybrid fold the client's coalescing uses, so a
+    /// below-threshold sum stays sparse.
+    pub(crate) fn staged_sums(&self, keys: &[Key]) -> FxHashMap<Key, RowDelta> {
+        let mut out: FxHashMap<Key, RowDelta> = FxHashMap::default();
         if self.staged.is_empty() {
             return out;
         }
@@ -425,11 +453,7 @@ impl ShardCore {
                     continue;
                 }
                 out.entry(*k)
-                    .and_modify(|acc| {
-                        for (a, x) in acc.iter_mut().zip(d) {
-                            *a += x;
-                        }
-                    })
+                    .and_modify(|acc| acc.add_assign(d))
                     .or_insert_with(|| d.clone());
             }
         }
@@ -623,7 +647,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 99), vec![1.0, 2.0, 3.0])],
+            rows: vec![((0, 99), vec![1.0, 2.0, 3.0].into())],
         });
         assert_eq!(&shard.row(&(0, 99)).unwrap().data[..], &[1.0, 2.0, 3.0]);
     }
@@ -666,16 +690,83 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 1), vec![0.5, -1.0])],
+            rows: vec![((0, 1), vec![0.5, -1.0].into())],
         });
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 1,
-            rows: vec![((0, 1), vec![0.5, 0.0])],
+            rows: vec![((0, 1), vec![0.5, 0.0].into())],
         });
         let row = shard.row(&(0, 1)).unwrap();
         assert_eq!(&row.data[..], &[2.0, 0.0]);
         assert_eq!(row.fresh, 1);
+    }
+
+    #[test]
+    fn sparse_updates_apply_without_densifying() {
+        let (mut shard, _wrx, _net) = fixture(1, false);
+        shard.init_row((0, 1), vec![1.0, 2.0, 3.0, 4.0]);
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), RowDelta::sparse(4, vec![(1, 0.5), (3, -4.0)]))],
+        });
+        let row = shard.row(&(0, 1)).unwrap();
+        assert_eq!(&row.data[..], &[1.0, 2.5, 3.0, 0.0]);
+        assert_eq!(row.fresh, 0);
+        // A sparse update may also materialize a missing row (from zeros).
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 1,
+            rows: vec![((0, 9), RowDelta::sparse(3, vec![(2, 7.0)]))],
+        });
+        assert_eq!(&shard.row(&(0, 9)).unwrap().data[..], &[0.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "claims width")]
+    fn materializing_update_with_lying_width_is_rejected() {
+        // A decoded update may claim any row width (a sparse row's `len`
+        // is a claim, not bytes on the wire): materializing a missing row
+        // must validate the claim against the table registry rather than
+        // zero-fill whatever the frame asked for.
+        let mut row_len = HashMap::new();
+        row_len.insert(0u32, 3usize);
+        let (mut shard, _wrxs, _net) = fixture_n(1, Consistency::Ssp { s: 1 }, row_len);
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 42), RowDelta::sparse(1 << 20, vec![]))],
+        });
+    }
+
+    #[test]
+    fn staged_sparse_sums_stay_sparse_below_threshold() {
+        // Deterministic mode: two workers stage sparse parts for the same
+        // wide row; the preview sum must accumulate as pairs (no
+        // densification below the threshold) and the commit must apply
+        // the same values.
+        let (mut shard, _wrx, _net) = det_shard(2, true);
+        shard.init_row((0, 0), vec![0.0; 1024]);
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 0), RowDelta::sparse(1024, vec![(3, 1.0), (900, 2.0)]))],
+        });
+        shard.handle(ToShard::Update {
+            worker: 1,
+            clock: 0,
+            rows: vec![((0, 0), RowDelta::sparse(1024, vec![(3, 0.5), (17, -1.0)]))],
+        });
+        let sums = shard.core().staged_sums(&[(0, 0)]);
+        let sum = &sums[&(0, 0)];
+        assert!(sum.is_sparse(), "below-threshold staged sum densified");
+        assert_eq!(sum.nnz(), 3);
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
+        let row = &shard.row(&(0, 0)).unwrap().data;
+        assert_eq!((row[3], row[17], row[900]), (1.5, -1.0, 2.0));
+        assert_eq!(row.iter().filter(|x| **x != 0.0).count(), 3);
     }
 
     #[test]
@@ -690,7 +781,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 1), vec![1.0])],
+            rows: vec![((0, 1), vec![1.0].into())],
         });
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
@@ -728,7 +819,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 1), vec![1.0, 2.0])],
+            rows: vec![((0, 1), vec![1.0, 2.0].into())],
         });
         for w in 0..p {
             shard.handle(ToShard::ClockTick { worker: w, clock: 0 });
@@ -764,7 +855,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 1), vec![1.0])],
+            rows: vec![((0, 1), vec![1.0].into())],
         });
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         let pushed = match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
@@ -775,7 +866,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 1,
-            rows: vec![((0, 1), vec![1.0])],
+            rows: vec![((0, 1), vec![1.0].into())],
         });
         // The held snapshot is unchanged; the stored row advanced.
         assert_eq!(&pushed[..], &[1.0]);
@@ -807,7 +898,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 1), vec![1.0])],
+            rows: vec![((0, 1), vec![1.0].into())],
         });
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
@@ -858,12 +949,12 @@ mod tests {
             shard.handle(ToShard::Update {
                 worker: 1,
                 clock: 0,
-                rows: vec![((0, 0), vec![-1e8])],
+                rows: vec![((0, 0), vec![-1e8].into())],
             });
             shard.handle(ToShard::Update {
                 worker: 0,
                 clock: 0,
-                rows: vec![((0, 0), vec![1.0])],
+                rows: vec![((0, 0), vec![1.0].into())],
             });
             shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
             shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
@@ -883,7 +974,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 0), vec![5.0])],
+            rows: vec![((0, 0), vec![5.0].into())],
         });
         // Not applied yet: worker 1 has not committed clock 0.
         assert_eq!(shard.row(&(0, 0)).unwrap().data[0], 0.0);
@@ -913,7 +1004,7 @@ mod tests {
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 1), vec![1.0])],
+            rows: vec![((0, 1), vec![1.0].into())],
         });
         assert!(!shard.handle(ToShard::Shutdown));
         assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[4.0]);

@@ -1,4 +1,6 @@
-//! Core identifier types shared across the parameter server.
+//! Core identifier types shared across the parameter server, plus the
+//! hybrid dense/sparse [`RowDelta`] — the representation-polymorphic unit
+//! of every additive update from app INC to shard commit.
 
 /// Table identifier (an application owns one or more tables).
 pub type TableId = u32;
@@ -15,12 +17,295 @@ pub type Clock = i64;
 /// Clock value meaning "nothing committed yet".
 pub const NEVER: Clock = -1;
 
-/// Estimated wire size of one pending update row: the `transport::wire`
-/// codec's per-row Update framing (key 12 + length prefix 4 + f32
-/// payload). Exact message sizes come from the codec itself
-/// (`ToShard::wire_bytes`); this is for client-side pending-bytes
-/// estimates only.
+/// A sparse [`RowDelta`] densifies once `nnz > len / DENSIFY_DIV`. The
+/// wire break-even is `len / 2` (8-byte pairs vs 4-byte dense elements);
+/// switching a bit earlier keeps the sorted-pair fold cheap and means a
+/// densification can never inflate the encoded size. The threshold also
+/// caps the cost of [`RowDelta::add_pair`]'s sorted-`Vec` insertion
+/// (O(nnz) memmove per fresh index, so O((len/3)^2) element moves worst
+/// case before densifying) — fine in the sparse regime this targets
+/// (LDA: nnz ≈ 2 of K ≈ 1e3); a workload filling a very wide row one
+/// index at a time should INC dense instead.
+pub const DENSIFY_DIV: usize = 3;
+
+/// Largest pair count at which a sparse delta of `len` stays sparse.
 #[inline]
-pub fn row_wire_bytes(len: usize) -> usize {
-    len * 4 + 16
+pub fn densify_threshold(len: usize) -> usize {
+    len / DENSIFY_DIV
+}
+
+/// One coalesced additive row delta, in whichever representation is
+/// smaller: dense (one f32 per element) or sparse (sorted
+/// `(index, value)` pairs against a row of `len` elements).
+///
+/// The type is load-bearing end-to-end: `UpdateMap` coalesces INCs into
+/// it natively, `ToShard::Update` carries it, the wire codec encodes each
+/// representation as-is (`transport::wire`), and `ShardCore::apply_rows`
+/// folds it into the store without densifying. A sparse LDA-style flush
+/// (nnz ≈ 2 of K = 1024) therefore costs O(nnz) bytes and work at every
+/// layer instead of O(K).
+///
+/// Invariants on `Sparse`: indices are strictly ascending, each `< len`,
+/// and `pairs.len() <= densify_threshold(len)` for deltas produced by
+/// coalescing (the wire decoder enforces the first two and `nnz <= len`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RowDelta {
+    /// Flat representation: element i of the row changes by `delta[i]`.
+    Dense(Vec<f32>),
+    /// Pair representation: element `i` changes by `v` for each `(i, v)`;
+    /// all other elements of the `len`-wide row are untouched.
+    Sparse { len: u32, pairs: Vec<(u32, f32)> },
+}
+
+impl RowDelta {
+    /// Build a sparse delta, debug-checking the representation invariants.
+    pub fn sparse(len: usize, pairs: Vec<(u32, f32)>) -> Self {
+        debug_assert!(
+            pairs.iter().all(|&(i, _)| (i as usize) < len),
+            "sparse index out of range"
+        );
+        debug_assert!(
+            pairs.windows(2).all(|w| w[0].0 < w[1].0),
+            "sparse indices not strictly ascending"
+        );
+        Self::Sparse {
+            len: len as u32,
+            pairs,
+        }
+    }
+
+    /// Logical row length (the dense width both representations describe).
+    pub fn len(&self) -> usize {
+        match self {
+            Self::Dense(v) => v.len(),
+            Self::Sparse { len, .. } => *len as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of explicitly stored elements (dense: the full width).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Self::Dense(v) => v.len(),
+            Self::Sparse { pairs, .. } => pairs.len(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Self::Sparse { .. })
+    }
+
+    /// Max |element| — the ∞-norm the value-bounded policies report. A
+    /// sparse delta scans only its pairs: implicit zeros cannot raise a
+    /// max over absolute values.
+    pub fn inf_norm(&self) -> f32 {
+        match self {
+            Self::Dense(v) => v.iter().fold(0.0f32, |m, x| m.max(x.abs())),
+            Self::Sparse { pairs, .. } => {
+                pairs.iter().fold(0.0f32, |m, (_, x)| m.max(x.abs()))
+            }
+        }
+    }
+
+    /// Fold this delta into a dense buffer: `out[i] += delta[i]`. Sparse
+    /// deltas touch only their nnz indices (out-of-range pairs, which the
+    /// wire decoder already rejects, are skipped defensively).
+    pub fn add_into(&self, out: &mut [f32]) {
+        match self {
+            Self::Dense(v) => {
+                for (a, d) in out.iter_mut().zip(v) {
+                    *a += d;
+                }
+            }
+            Self::Sparse { pairs, .. } => {
+                for &(i, v) in pairs {
+                    if let Some(a) = out.get_mut(i as usize) {
+                        *a += v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Materialize as a dense vector. Pair values are *placed* into the
+    /// zero-fill, not added to it, so every bit pattern (-0.0, NaN
+    /// payloads) survives exactly.
+    pub fn to_dense(self) -> Vec<f32> {
+        match self {
+            Self::Dense(v) => v,
+            Self::Sparse { len, pairs } => {
+                let mut out = vec![0.0f32; len as usize];
+                for (i, v) in pairs {
+                    if let Some(a) = out.get_mut(i as usize) {
+                        *a = v;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Switch a sparse delta to the dense representation.
+    fn densify(&mut self) {
+        if self.is_sparse() {
+            let taken = std::mem::replace(self, Self::Dense(Vec::new()));
+            *self = Self::Dense(taken.to_dense());
+        }
+    }
+
+    /// Fold a dense increment in. The accumulator densifies first: a
+    /// dense INC names every element, so sparse bookkeeping no longer
+    /// pays (and can never become sparse again within this clock).
+    pub fn add_dense(&mut self, delta: &[f32]) {
+        self.densify();
+        if let Self::Dense(v) = self {
+            debug_assert_eq!(v.len(), delta.len(), "dense fold length mismatch");
+            for (a, d) in v.iter_mut().zip(delta) {
+                *a += d;
+            }
+        }
+    }
+
+    /// Fold one `(index, value)` pair in, preserving the representation.
+    /// Callers batch the density check via [`Self::maybe_densify`] once
+    /// per INC instead of per pair.
+    pub fn add_pair(&mut self, i: u32, v: f32) {
+        match self {
+            Self::Dense(d) => {
+                if let Some(a) = d.get_mut(i as usize) {
+                    *a += v;
+                }
+            }
+            Self::Sparse { pairs, .. } => {
+                match pairs.binary_search_by_key(&i, |p| p.0) {
+                    Ok(j) => pairs[j].1 += v,
+                    Err(j) => pairs.insert(j, (i, v)),
+                }
+            }
+        }
+    }
+
+    /// Densify if the sparse fill passed [`densify_threshold`].
+    pub fn maybe_densify(&mut self) {
+        if let Self::Sparse { len, pairs } = self {
+            if pairs.len() > densify_threshold(*len as usize) {
+                self.densify();
+            }
+        }
+    }
+
+    /// Coalesce another delta in (same fold the `UpdateMap` INC path
+    /// uses, so accumulation order — and hence float bits — match).
+    pub fn add_assign(&mut self, other: &RowDelta) {
+        match other {
+            Self::Dense(d) => self.add_dense(d),
+            Self::Sparse { pairs, .. } => {
+                for &(i, v) in pairs {
+                    self.add_pair(i, v);
+                }
+                self.maybe_densify();
+            }
+        }
+    }
+}
+
+impl From<Vec<f32>> for RowDelta {
+    fn from(v: Vec<f32>) -> Self {
+        Self::Dense(v)
+    }
+}
+
+/// Exact wire footprint of one coalesced update row inside a
+/// `ToShard::Update` frame: key (12) + representation tag (1) + body
+/// (dense: `len:u32` + 4 bytes/element; sparse: `len:u32 | nnz:u32` + 8
+/// bytes/pair). The `transport::wire` codec derives its Update body
+/// length from this function — one source of truth — so the client's
+/// pending-bytes estimate, the SimNet serialization-time model, and the
+/// real TCP framing agree byte-for-byte.
+#[inline]
+pub fn row_wire_bytes(delta: &RowDelta) -> usize {
+    13 + match delta {
+        RowDelta::Dense(v) => 4 + 4 * v.len(),
+        RowDelta::Sparse { pairs, .. } => 8 + 8 * pairs.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_folds_stay_sparse_below_threshold() {
+        let mut d = RowDelta::sparse(1024, vec![]);
+        d.add_pair(900, 1.0);
+        d.add_pair(3, 2.0);
+        d.add_pair(900, 0.5);
+        d.maybe_densify();
+        assert!(d.is_sparse());
+        assert_eq!(d.nnz(), 2);
+        assert_eq!(d.len(), 1024);
+        // Pairs stay sorted regardless of insertion order.
+        match &d {
+            RowDelta::Sparse { pairs, .. } => {
+                assert_eq!(pairs.as_slice(), &[(3, 2.0), (900, 1.5)]);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn densify_crossover_at_threshold() {
+        // len 9 => threshold 3: the 4th distinct index flips to dense.
+        let mut d = RowDelta::sparse(9, vec![]);
+        for i in [0u32, 4, 8] {
+            d.add_pair(i, 1.0);
+            d.maybe_densify();
+            assert!(d.is_sparse(), "{} pairs must stay sparse", d.nnz());
+        }
+        d.add_pair(2, 5.0);
+        d.maybe_densify();
+        assert!(!d.is_sparse());
+        assert_eq!(
+            d.clone().to_dense(),
+            vec![1.0, 0.0, 5.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]
+        );
+    }
+
+    #[test]
+    fn dense_inc_densifies_sparse_accumulator() {
+        let mut d = RowDelta::sparse(3, vec![(1, 2.0)]);
+        d.add_dense(&[1.0, 1.0, 1.0]);
+        assert!(!d.is_sparse());
+        assert_eq!(d.to_dense(), vec![1.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn add_into_matches_to_dense() {
+        let d = RowDelta::sparse(5, vec![(0, -1.5), (3, 2.0)]);
+        let mut buf = vec![1.0f32; 5];
+        d.add_into(&mut buf);
+        assert_eq!(buf, vec![-0.5, 1.0, 1.0, 3.0, 1.0]);
+        assert_eq!(d.to_dense(), vec![-1.5, 0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn inf_norm_scans_only_stored_values() {
+        assert_eq!(RowDelta::sparse(100, vec![(7, -3.0), (9, 1.0)]).inf_norm(), 3.0);
+        assert_eq!(RowDelta::sparse(100, vec![]).inf_norm(), 0.0);
+        assert_eq!(RowDelta::Dense(vec![0.5, -2.0]).inf_norm(), 2.0);
+    }
+
+    #[test]
+    fn wire_bytes_favor_the_smaller_representation() {
+        let sparse = RowDelta::sparse(1024, vec![(1, 1.0), (2, 2.0)]);
+        let dense = RowDelta::Dense(vec![0.0; 1024]);
+        assert_eq!(row_wire_bytes(&sparse), 13 + 8 + 16);
+        assert_eq!(row_wire_bytes(&dense), 13 + 4 + 4096);
+        // At the densify threshold the sparse encoding is still smaller.
+        let at_threshold = RowDelta::sparse(1024, (0..341).map(|i| (i, 1.0)).collect());
+        assert!(row_wire_bytes(&at_threshold) < row_wire_bytes(&dense));
+    }
 }

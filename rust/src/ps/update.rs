@@ -1,4 +1,4 @@
-//! Client-side update coalescing.
+//! Client-side update coalescing over hybrid dense/sparse row deltas.
 //!
 //! Updates are additive (x += u), hence commutative and associative; the
 //! paper's client library exploits this by summing all INCs to the same row
@@ -6,18 +6,37 @@
 //! the main message-count reduction in the system (benchmarked in
 //! `benches/ps_throughput.rs`).
 //!
+//! ## Hybrid representation
+//!
+//! A pending row is a [`RowDelta`]. Sparse INCs (an LDA Gibbs token touches
+//! 1–2 indices of a K-length word-topic row) accumulate as sorted
+//! `(index, value)` pairs and ship on the wire as `len | nnz | (idx,val)*`
+//! — O(nnz) bytes instead of O(K). A dense INC, or a sparse accumulation
+//! whose fill passes the density threshold (`nnz > len / DENSIFY_DIV`,
+//! i.e. len/3), switches the row to the flat f32 representation for the
+//! rest of the clock — dense wins any mix. The threshold sits below the
+//! wire break-even (8-byte pairs overtake 4-byte elements at nnz = len/2),
+//! so densification never inflates the encoded size.
+//!
+//! [`UpdateMap::wire_bytes`] sums [`row_wire_bytes`] over the pending
+//! rows; the `transport::wire` codec derives its Update frame size from
+//! the *same* function, so the client's pending-bytes estimate, the
+//! SimNet serialization-time model, and the real TCP framing agree
+//! byte-for-byte.
+//!
 //! The INC path deliberately does *no* norm bookkeeping: the value-bounded
 //! policies need per-shard *part* norms, which the client computes with one
 //! scan over the routed batches at flush time — and only when the active
-//! policy reports norms at all, so BSP/SSP/ESSP/Async pay nothing.
+//! policy reports norms at all, so BSP/SSP/ESSP/Async pay nothing. For a
+//! sparse part that scan touches only the stored pairs.
 
-use super::types::{row_wire_bytes, Key};
+use super::types::{row_wire_bytes, Key, RowDelta};
 use crate::util::hash::FxHashMap;
 
 /// Coalesced pending updates for one clock tick.
 #[derive(Debug)]
 pub struct UpdateMap {
-    rows: FxHashMap<Key, Vec<f32>>,
+    rows: FxHashMap<Key, RowDelta>,
     /// Number of raw INC calls folded in (for coalescing-ratio metrics).
     raw_incs: u64,
 }
@@ -36,30 +55,41 @@ impl UpdateMap {
         }
     }
 
-    /// Fold one INC into the pending delta for `key`.
+    /// Fold one dense INC into the pending delta for `key`. A sparse
+    /// accumulator densifies: the increment names every element.
     pub fn inc(&mut self, key: Key, delta: &[f32]) {
         self.raw_incs += 1;
         match self.rows.get_mut(&key) {
             Some(acc) => {
                 debug_assert_eq!(acc.len(), delta.len(), "row length mismatch on {key:?}");
-                for (a, d) in acc.iter_mut().zip(delta) {
-                    *a += d;
-                }
+                acc.add_dense(delta);
             }
             None => {
-                self.rows.insert(key, delta.to_vec());
+                self.rows.insert(key, RowDelta::Dense(delta.to_vec()));
             }
         }
     }
 
-    /// Fold a sparse INC (index/value pairs) into the pending delta.
-    /// The row must already exist or `row_len` is used to create it.
+    /// Fold a sparse INC (index/value pairs against a row of `row_len`
+    /// elements) into the pending delta. A fresh row starts sparse and
+    /// stays sparse until the density threshold; a dense accumulator
+    /// absorbs the pairs in place.
     pub fn inc_sparse(&mut self, key: Key, row_len: usize, pairs: &[(usize, f32)]) {
         self.raw_incs += 1;
-        let acc = self.rows.entry(key).or_insert_with(|| vec![0.0; row_len]);
+        let acc = self
+            .rows
+            .entry(key)
+            .or_insert_with(|| RowDelta::sparse(row_len, Vec::new()));
+        debug_assert_eq!(acc.len(), row_len, "row length mismatch on {key:?}");
         for &(i, v) in pairs {
-            acc[i] += v;
+            // Hard check in all builds (the dense path gets one for free
+            // from slice indexing): a silently stored out-of-range pair
+            // would either vanish at apply time or poison the wire frame
+            // far from the buggy INC call.
+            assert!(i < row_len, "sparse index {i} out of range on {key:?}");
+            acc.add_pair(i as u32, v);
         }
+        acc.maybe_densify();
     }
 
     pub fn is_empty(&self) -> bool {
@@ -75,8 +105,15 @@ impl UpdateMap {
     }
 
     /// Peek at the pending delta for a row (read-my-writes support).
-    pub fn pending(&self, key: &Key) -> Option<&[f32]> {
-        self.rows.get(key).map(|v| v.as_slice())
+    pub fn pending(&self, key: &Key) -> Option<&RowDelta> {
+        self.rows.get(key)
+    }
+
+    /// Borrow every pending (key, delta) pair (arbitrary order). The
+    /// flush path folds these into the row cache in place — no per-row
+    /// clone — right before [`Self::drain_routed`] moves them out.
+    pub fn iter(&self) -> impl Iterator<Item = (&Key, &RowDelta)> {
+        self.rows.iter()
     }
 
     /// Keys with pending deltas (arbitrary order).
@@ -84,25 +121,26 @@ impl UpdateMap {
         self.rows.keys().copied().collect()
     }
 
-    /// ∞-norm (max |element|) over all pending rows, by full scan. The
-    /// client's flush path computes per-shard part norms from the routed
-    /// batches instead; this is the whole-batch variant for tests and
-    /// metrics.
+    /// ∞-norm (max |element|) over all pending rows. The client's flush
+    /// path computes per-shard part norms from the routed batches
+    /// instead; this is the whole-batch variant for tests and metrics.
+    /// Sparse rows scan only their stored pairs.
     pub fn inf_norm(&self) -> f32 {
         self.rows
             .values()
-            .flat_map(|v| v.iter())
-            .fold(0.0f32, |m, x| m.max(x.abs()))
+            .map(RowDelta::inf_norm)
+            .fold(0.0f32, |m, x| m.max(x))
     }
 
-    /// Drain into per-destination batches, keyed by `route(key)`.
-    /// Returns (destination -> rows) and resets the map.
+    /// Drain into per-destination batches, keyed by `route(key)`: each
+    /// coalesced delta is *moved* into its batch (no payload clone) and
+    /// the map resets.
     pub fn drain_routed<F: Fn(&Key) -> usize>(
         &mut self,
         n_dests: usize,
         route: F,
-    ) -> Vec<Vec<(Key, Vec<f32>)>> {
-        let mut out: Vec<Vec<(Key, Vec<f32>)>> = (0..n_dests).map(|_| Vec::new()).collect();
+    ) -> Vec<Vec<(Key, RowDelta)>> {
+        let mut out: Vec<Vec<(Key, RowDelta)>> = (0..n_dests).map(|_| Vec::new()).collect();
         for (key, delta) in self.rows.drain() {
             out[route(&key)].push((key, delta));
         }
@@ -110,24 +148,31 @@ impl UpdateMap {
         out
     }
 
-    /// Wire size estimate of the pending batch.
+    /// Exact wire size of the pending batch (see module docs: same
+    /// per-row accounting the codec uses).
     pub fn wire_bytes(&self) -> usize {
-        self.rows.values().map(|v| row_wire_bytes(v.len())).sum()
+        self.rows.values().map(row_wire_bytes).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ps::types::densify_threshold;
 
     const K: Key = (0, 7);
+
+    /// Densified view of a pending row (tests compare values, not repr).
+    fn dense(m: &UpdateMap, key: &Key) -> Vec<f32> {
+        m.pending(key).unwrap().clone().to_dense()
+    }
 
     #[test]
     fn coalesces_additively() {
         let mut m = UpdateMap::new();
         m.inc(K, &[1.0, 2.0]);
         m.inc(K, &[0.5, -1.0]);
-        assert_eq!(m.pending(&K).unwrap(), &[1.5, 1.0]);
+        assert_eq!(dense(&m, &K), vec![1.5, 1.0]);
         assert_eq!(m.len(), 1);
         assert_eq!(m.raw_incs(), 2);
     }
@@ -136,8 +181,42 @@ mod tests {
     fn sparse_and_dense_mix() {
         let mut m = UpdateMap::new();
         m.inc_sparse(K, 4, &[(0, 1.0), (3, 2.0)]);
+        assert!(m.pending(&K).unwrap().is_sparse());
         m.inc(K, &[1.0, 1.0, 0.0, 0.0]);
-        assert_eq!(m.pending(&K).unwrap(), &[2.0, 1.0, 0.0, 2.0]);
+        // One dense INC densifies the accumulator for the clock.
+        assert!(!m.pending(&K).unwrap().is_sparse());
+        assert_eq!(dense(&m, &K), vec![2.0, 1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn sparse_incs_stay_sparse_below_threshold() {
+        // LDA-shaped: +/-1 on a few indices of a wide row never densifies.
+        let mut m = UpdateMap::new();
+        for _ in 0..50 {
+            m.inc_sparse(K, 1024, &[(3, 1.0), (900, -1.0)]);
+        }
+        let d = m.pending(&K).unwrap();
+        assert!(d.is_sparse());
+        assert_eq!(d.nnz(), 2);
+        assert_eq!(d.len(), 1024);
+    }
+
+    #[test]
+    fn sparse_densifies_past_threshold() {
+        let len = 12; // threshold = 4
+        let mut m = UpdateMap::new();
+        for i in 0..densify_threshold(len) {
+            m.inc_sparse(K, len, &[(i, 1.0)]);
+            assert!(m.pending(&K).unwrap().is_sparse(), "below threshold at {i}");
+        }
+        m.inc_sparse(K, len, &[(len - 1, 1.0)]);
+        assert!(!m.pending(&K).unwrap().is_sparse(), "crossed threshold");
+        let mut want = vec![0.0f32; len];
+        for w in want.iter_mut().take(densify_threshold(len)) {
+            *w = 1.0;
+        }
+        want[len - 1] = 1.0;
+        assert_eq!(dense(&m, &K), want);
     }
 
     #[test]
@@ -145,6 +224,7 @@ mod tests {
         let mut m = UpdateMap::new();
         m.inc((0, 1), &[0.5, -3.0]);
         m.inc((0, 2), &[1.0]);
+        m.inc_sparse((0, 3), 64, &[(10, -2.0)]);
         assert_eq!(m.inf_norm(), 3.0);
         assert_eq!(UpdateMap::new().inf_norm(), 0.0);
     }
@@ -152,12 +232,16 @@ mod tests {
     #[test]
     fn inf_norm_reflects_cancellation() {
         // +5 then -5 on the max element: the scan sees the summed state,
-        // never a stale peak.
+        // never a stale peak — for both representations.
         let mut m = UpdateMap::new();
         m.inc(K, &[5.0, 1.0]);
         assert_eq!(m.inf_norm(), 5.0);
         m.inc(K, &[-5.0, 0.0]);
         assert_eq!(m.inf_norm(), 1.0);
+        let mut s = UpdateMap::new();
+        s.inc_sparse(K, 16, &[(2, 5.0)]);
+        s.inc_sparse(K, 16, &[(2, -5.0)]);
+        assert_eq!(s.inf_norm(), 0.0);
     }
 
     #[test]
@@ -165,13 +249,16 @@ mod tests {
         let mut m = UpdateMap::new();
         m.inc((0, 0), &[1.0]);
         m.inc((0, 1), &[2.0]);
-        m.inc((0, 2), &[3.0]);
+        m.inc_sparse((0, 2), 8, &[(4, 3.0)]);
         let routed = m.drain_routed(2, |k| (k.1 % 2) as usize);
         assert_eq!(routed[0].len(), 2); // rows 0, 2
         assert_eq!(routed[1].len(), 1); // row 1
         assert!(m.is_empty());
         assert_eq!(m.raw_incs(), 0);
         assert_eq!(m.inf_norm(), 0.0);
+        // The sparse row crossed drain without densifying.
+        let sparse_row = routed[0].iter().find(|(k, _)| *k == (0, 2)).unwrap();
+        assert!(sparse_row.1.is_sparse());
     }
 
     #[test]
@@ -188,9 +275,18 @@ mod tests {
             m.inc(K, &d);
         }
         let routed = m.drain_routed(1, |_| 0);
-        let got = &routed[0][0].1;
+        let got = routed[0][0].1.clone().to_dense();
         for (g, e) in got.iter().zip(&expect) {
             assert!((g - e).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn wire_bytes_shrink_for_sparse_pending() {
+        let mut sparse = UpdateMap::new();
+        sparse.inc_sparse(K, 1024, &[(1, 1.0), (2, -1.0)]);
+        let mut dense_m = UpdateMap::new();
+        dense_m.inc(K, &[1.0f32; 1024]);
+        assert!(sparse.wire_bytes() * 10 < dense_m.wire_bytes());
     }
 }

@@ -421,7 +421,7 @@ mod tests {
         let big = ToShard::Update {
             worker: 0,
             clock: 0,
-            rows: vec![((0, 0), vec![0.0f32; 25_000])],
+            rows: vec![((0, 0), vec![0.0f32; 25_000].into())],
         };
         let t0 = Instant::now();
         net.handle()

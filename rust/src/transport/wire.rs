@@ -21,6 +21,24 @@
 //! encoder writes them straight from the shared `Arc<[f32]>` storage —
 //! encoding a push wave stages no intermediate payload copy.
 //!
+//! Update rows are representation-polymorphic (wire v3): each row carries
+//! the `RowDelta` the client coalesced, never densified in transit:
+//!
+//! ```text
+//! row    := key | repr:u8 | body
+//! key    := table:u32 | row:u64
+//! dense  (repr 0): len:u32 | f32 * len
+//! sparse (repr 1): len:u32 | nnz:u32 | (idx:u32 | val:f32) * nnz
+//! ```
+//!
+//! Sparse indices must ascend strictly and land inside `len`, and `nnz`
+//! is bounded by both `len` and the bytes actually present — all checked
+//! before any allocation. Per-row sizes come from
+//! `ps::types::row_wire_bytes`, which this codec's Update body length
+//! delegates to: one function is the source of truth for the client's
+//! pending-bytes estimate, the SimNet serialization-time model, and the
+//! TCP frames on the socket, so the three can never drift apart.
+//!
 //! Connections start with a fixed-size handshake:
 //!
 //! ```text
@@ -39,13 +57,14 @@ use anyhow::{bail, ensure, Context, Result};
 
 use super::{NodeId, Packet};
 use crate::ps::msg::{PushRow, ToShard, ToWorker};
-use crate::ps::types::Key;
+use crate::ps::types::{row_wire_bytes, Key, RowDelta};
 
 /// Handshake magic: protocol name + wire revision byte.
 pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
 /// Protocol version carried in the handshake; bumped on layout changes
-/// (v2: NormReport/Detach/Bound — the distributed value-bound protocol).
-pub const VERSION: u16 = 2;
+/// (v2: NormReport/Detach/Bound — the distributed value-bound protocol;
+/// v3: hybrid dense/sparse Update rows).
+pub const VERSION: u16 = 3;
 /// Upper bound on one frame's encoded size (a push wave of ~16M f32s);
 /// anything larger is rejected as corrupt before allocation.
 pub const MAX_FRAME: usize = 1 << 28;
@@ -71,6 +90,10 @@ const K_PUSH: u8 = 17;
 const K_VAP_PUSH: u8 = 18;
 const K_BOUND: u8 = 19;
 
+/// Update-row representation tags (see module docs).
+const REPR_DENSE: u8 = 0;
+const REPR_SPARSE: u8 = 1;
+
 // ------------------------------------------------------------------ sizes
 
 /// Exact body size of a `ToShard` message.
@@ -78,7 +101,9 @@ pub fn to_shard_body_len(m: &ToShard) -> usize {
     match m {
         ToShard::Get { .. } => 24,
         ToShard::Update { rows, .. } => {
-            16 + rows.iter().map(|(_, v)| 16 + 4 * v.len()).sum::<usize>()
+            // Per-row accounting delegates to `row_wire_bytes`: the one
+            // source of truth shared with the client's pending estimate.
+            16 + rows.iter().map(|(_, d)| row_wire_bytes(d)).sum::<usize>()
         }
         ToShard::ClockTick { .. } => 12,
         ToShard::Register { .. } => 16,
@@ -203,10 +228,24 @@ fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
             w32(w, *worker as u32)?;
             wi64(w, *clock)?;
             w32(w, rows.len() as u32)?;
-            for (key, v) in rows {
+            for (key, delta) in rows {
                 wkey(w, key)?;
-                w32(w, v.len() as u32)?;
-                write_f32s(w, v)?;
+                match delta {
+                    RowDelta::Dense(v) => {
+                        w8(w, REPR_DENSE)?;
+                        w32(w, v.len() as u32)?;
+                        write_f32s(w, v)?;
+                    }
+                    RowDelta::Sparse { len, pairs } => {
+                        w8(w, REPR_SPARSE)?;
+                        w32(w, *len)?;
+                        w32(w, pairs.len() as u32)?;
+                        for (i, x) in pairs {
+                            w32(w, *i)?;
+                            w.write_all(&x.to_le_bytes())?;
+                        }
+                    }
+                }
             }
             Ok(())
         }
@@ -410,6 +449,63 @@ impl<'a> Cur<'a> {
             k => bail!("bad node kind {k}"),
         }
     }
+
+    /// Read one hybrid update-row delta. Every bound is verified before
+    /// any allocation: a sparse pair count is checked against both the
+    /// bytes actually present and the declared row length, and each index
+    /// must land inside the row and ascend strictly — a lying `nnz` or
+    /// out-of-range index can neither trigger a huge preallocation nor
+    /// corrupt a row at apply time.
+    fn row_delta(&mut self) -> Result<RowDelta> {
+        match self.u8()? {
+            REPR_DENSE => {
+                let len = self.u32()? as usize;
+                Ok(RowDelta::Dense(self.f32s(len)?))
+            }
+            REPR_SPARSE => {
+                let len = self.u32()?;
+                // A sparse row's `len` is a *claim* about the dense width
+                // it will expand to at apply time (`vec![0.0; len]` for a
+                // not-yet-materialized key), so bound it by the widest row
+                // the dense encoding could ever ship: otherwise a ~40-byte
+                // frame could demand a 16 GiB allocation downstream.
+                ensure!(
+                    (len as usize) * 4 <= MAX_FRAME,
+                    "sparse row claims dense width {len} (> MAX_FRAME/4)"
+                );
+                let nnz = self.u32()? as usize;
+                ensure!(
+                    nnz <= self.rem() / 8,
+                    "sparse row claims {nnz} pairs but only {} bytes remain",
+                    self.rem()
+                );
+                ensure!(
+                    nnz as u64 <= len as u64,
+                    "sparse row claims {nnz} pairs for a row of len {len}"
+                );
+                let mut pairs = Vec::with_capacity(nnz);
+                let mut prev: Option<u32> = None;
+                for p in 0..nnz {
+                    let i = self.u32()?;
+                    let v = self.f32()?;
+                    ensure!(
+                        i < len,
+                        "sparse pair {p}: index {i} out of range for row len {len}"
+                    );
+                    if let Some(q) = prev {
+                        ensure!(
+                            i > q,
+                            "sparse pair {p}: index {i} not strictly ascending after {q}"
+                        );
+                    }
+                    prev = Some(i);
+                    pairs.push((i, v));
+                }
+                Ok(RowDelta::Sparse { len, pairs })
+            }
+            r => bail!("bad row representation byte {r}"),
+        }
+    }
 }
 
 fn decode_push_rows(c: &mut Cur) -> Result<Vec<PushRow>> {
@@ -451,20 +547,21 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
             let worker = c.worker()?;
             let clock = c.i64()?;
             let n = c.u32()? as usize;
+            // Each row needs >= 17 header bytes (key 12, repr 1, len 4):
+            // bound the count (and the Vec preallocation) by what the
+            // frame can actually hold.
             ensure!(
-                n <= c.rem() / 16,
+                n <= c.rem() / 17,
                 "update claims {n} rows but only {} bytes remain",
                 c.rem()
             );
             let mut rows = Vec::with_capacity(n);
             for i in 0..n {
                 let key = c.key().with_context(|| format!("update row {i}"))?;
-                let len = c.u32()? as usize;
-                rows.push((
-                    key,
-                    c.f32s(len)
-                        .with_context(|| format!("update row {i} payload"))?,
-                ));
+                let delta = c
+                    .row_delta()
+                    .with_context(|| format!("update row {i} delta"))?;
+                rows.push((key, delta));
             }
             Packet::ToShard(ToShard::Update {
                 worker,
@@ -641,7 +738,12 @@ mod tests {
             Packet::ToShard(ToShard::Update {
                 worker: 1,
                 clock: 4,
-                rows: vec![((2, 8), vec![0.5f32; 5]), ((2, 9), vec![])],
+                rows: vec![
+                    ((2, 8), vec![0.5f32; 5].into()),
+                    ((2, 9), RowDelta::Dense(vec![])),
+                    ((2, 10), RowDelta::sparse(4096, vec![(0, 1.5), (17, -0.25)])),
+                    ((2, 11), RowDelta::sparse(8, vec![])),
+                ],
             }),
             Packet::ToShard(ToShard::ClockTick { worker: 0, clock: 0 }),
             Packet::ToShard(ToShard::Register {

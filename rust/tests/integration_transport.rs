@@ -82,7 +82,12 @@ fn tcp_loopback_matches_simnet_bit_exact_under_bsp() {
 /// Order-sensitive float counter: worker w adds 0.1 * (w + 1) to one
 /// shared row every clock, so the final value depends on float summation
 /// order — which deterministic mode pins to sorted (clock, worker)
-/// replay, independent of transport timing.
+/// replay, independent of transport timing. A second, wide table takes
+/// fractional *sparse* INCs (2 of 64 indices per worker per clock), so
+/// the matrix also proves the sparse delta path — pair coalescing, the
+/// wire-v3 sparse row arm, sparse apply, sparse staged previews, and
+/// sparse-part norm reports under VAP/AVAP — is bit-deterministic across
+/// both transports.
 fn fractional_counter_run(
     transport: TransportSel,
     consistency: Consistency,
@@ -97,11 +102,17 @@ fn fractional_counter_run(
         ..Default::default()
     });
     cluster.add_table(TableSpec::zeros(0, 4, 1));
+    cluster.add_table(TableSpec::zeros(1, 2, 64));
     let apps: Vec<Box<dyn PsApp>> = (0..workers)
         .map(|w| {
             Box::new(move |ps: &mut PsClient, _c: Clock| {
                 let _ = ps.get((0, 0));
                 ps.inc((0, 0), &[0.1 * (w + 1) as f32]);
+                let _ = ps.get((1, 0));
+                ps.inc_sparse(
+                    (1, 0),
+                    &[(w, 0.1 * (w + 1) as f32), (17 + w, 0.01)],
+                );
                 None
             }) as Box<dyn PsApp>
         })
@@ -135,6 +146,23 @@ fn transport_matrix_every_model_deterministic_bit_identical() {
         assert!(
             (v - 3.6).abs() < 1e-3,
             "{label}: expected ~3.6 total, got {v}"
+        );
+        // And the sparse INCs landed exactly where aimed: worker w's mass
+        // at index w (6 clocks x 0.1*(w+1)) and 0.01x6 at index 17+w —
+        // nothing anywhere else.
+        let row = &sim[&(1, 0)];
+        for w in 0..3 {
+            assert!(
+                (row[w] - 0.6 * (w + 1) as f32).abs() < 1e-3,
+                "{label}: sparse index {w} = {}",
+                row[w]
+            );
+            assert!((row[17 + w] - 0.06).abs() < 1e-3, "{label}: index {}", 17 + w);
+        }
+        let mass: f32 = row.iter().sum();
+        assert!(
+            (mass - (3.6 + 0.18)).abs() < 1e-2,
+            "{label}: sparse row mass {mass}"
         );
     }
 }

@@ -56,9 +56,7 @@ fn prop_coalescing_lossless() {
         for (shard, batch) in batches.iter().enumerate() {
             for (key, delta) in batch {
                 assert_eq!(router.shard_of(key), shard, "case {case}: misrouted");
-                for (g, d) in got[key.1 as usize].iter_mut().zip(delta) {
-                    *g += d;
-                }
+                delta.add_into(&mut got[key.1 as usize]);
             }
         }
         for (r, (g, e)) in got.iter().zip(&expect).enumerate() {
@@ -67,6 +65,62 @@ fn prop_coalescing_lossless() {
             }
         }
     });
+}
+
+#[test]
+fn prop_dense_sparse_coalescing_equivalent() {
+    // The same random INC stream fed once as sparse pairs and once as the
+    // equivalent dense vectors coalesces to bit-identical applied rows —
+    // including when the sparse accumulator crosses the densify threshold
+    // mid-stream. (Both paths perform the same per-index float additions
+    // in the same order; only the storage representation differs.)
+    let mut crossed = 0u32;
+    for_cases(60, |case, rng| {
+        let len = 2 + rng.usize_below(30);
+        let rows = 1 + rng.usize_below(4) as u64;
+        let mut sparse_m = UpdateMap::new();
+        let mut dense_m = UpdateMap::new();
+        for _ in 0..rng.usize_below(120) {
+            let r = rng.below(rows);
+            // Distinct indices per call (as real INC streams have): a
+            // duplicate would pre-sum on the dense side but fold twice on
+            // the sparse side — same value, different rounding order.
+            let nnz = 1 + rng.usize_below(3);
+            let mut idxs: Vec<usize> = (0..len).collect();
+            rng.shuffle(&mut idxs);
+            let pairs: Vec<(usize, f32)> = idxs
+                .into_iter()
+                .take(nnz)
+                .map(|i| (i, rng.normal_f32()))
+                .collect();
+            sparse_m.inc_sparse((0, r), len, &pairs);
+            let mut dvec = vec![0.0f32; len];
+            for &(i, v) in &pairs {
+                dvec[i] = v;
+            }
+            dense_m.inc((0, r), &dvec);
+        }
+        for key in dense_m.keys() {
+            let s = sparse_m.pending(&key).unwrap();
+            if !s.is_sparse() {
+                crossed += 1;
+            }
+            let s = s.clone().to_dense();
+            let d = dense_m.pending(&key).unwrap().clone().to_dense();
+            assert_eq!(d.len(), s.len(), "case {case} key {key:?}");
+            for (i, (x, y)) in d.iter().zip(&s).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "case {case} key {key:?} elem {i}: dense {x} vs sparse {y}"
+                );
+            }
+        }
+    });
+    assert!(
+        crossed > 0,
+        "no case ever crossed the densify threshold: property under-tested"
+    );
 }
 
 #[test]

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use essptable::ps::msg::{PushRow, ToShard, ToWorker};
-use essptable::ps::types::Key;
+use essptable::ps::types::{Key, RowDelta};
 use essptable::transport::wire;
 use essptable::transport::{NodeId, Packet};
 use essptable::util::rng::Rng;
@@ -38,6 +38,23 @@ fn gen_arc(rng: &mut Rng) -> Arc<[f32]> {
     gen_payload(rng).into()
 }
 
+/// A random hybrid update-row delta: dense, or canonical sparse (strictly
+/// ascending in-range indices, nnz within the density threshold).
+fn gen_delta(rng: &mut Rng) -> RowDelta {
+    if rng.f64() < 0.5 {
+        RowDelta::Dense(gen_payload(rng))
+    } else {
+        let len = 1 + rng.usize_below(64);
+        let nnz = rng.usize_below(len / 3 + 1);
+        let mut idx: Vec<u32> = (0..len as u32).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(nnz);
+        idx.sort_unstable();
+        let pairs = idx.into_iter().map(|i| (i, rng.normal_f32())).collect();
+        RowDelta::sparse(len, pairs)
+    }
+}
+
 fn gen_push_rows(rng: &mut Rng) -> Vec<PushRow> {
     (0..rng.usize_below(9))
         .map(|_| PushRow {
@@ -61,7 +78,7 @@ fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
             worker: rng.usize_below(64),
             clock: gen_clock(rng),
             rows: (0..rng.usize_below(9))
-                .map(|_| (gen_key(rng), gen_payload(rng)))
+                .map(|_| (gen_key(rng), gen_delta(rng)))
                 .collect(),
         },
         2 => ToShard::ClockTick {
@@ -276,17 +293,21 @@ fn lying_row_count_is_bounded_before_allocation() {
     assert!(format!("{err:#}").contains("claims"), "{err:#}");
 }
 
+/// Offset of an Update frame's first row, after the row count. Layout
+/// after the kind byte (offset 15): worker u32 | clock i64 | nrows u32 |
+/// rows. Each row: key (u32+u64) | repr u8 | repr-specific body.
+const UPDATE_ROW0: usize = 15 + 4 + 8 + 4;
+
 #[test]
 fn lying_payload_length_is_bounded_before_allocation() {
-    // An Update row claiming u32::MAX f32s: rejected by the byte bound.
-    // Layout after kind byte: worker u32 | clock i64 | nrows u32 |
-    // key (u32+u64) | rowlen u32 | payload.
+    // A dense Update row claiming u32::MAX f32s: rejected by the byte
+    // bound. Dense body after the repr byte: len u32 | payload.
     let mut bytes = encode(&Packet::ToShard(ToShard::Update {
         worker: 0,
         clock: 1,
-        rows: vec![((0, 0), vec![1.0, 2.0])],
+        rows: vec![((0, 0), vec![1.0, 2.0].into())],
     }));
-    let len_off = 15 + 4 + 8 + 4 + 12;
+    let len_off = UPDATE_ROW0 + 12 + 1;
     bytes[len_off..len_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
     let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
     let msg = format!("{err:#}");
@@ -294,6 +315,118 @@ fn lying_payload_length_is_bounded_before_allocation() {
         msg.contains("truncated") || msg.contains("overflow"),
         "{msg}"
     );
+}
+
+fn encoded_sparse_update() -> Vec<u8> {
+    // One sparse row: len 8, pairs [(1, 1.0), (2, 2.0)]. Sparse body after
+    // the repr byte: len u32 | nnz u32 | (idx u32, val f32)*.
+    encode(&Packet::ToShard(ToShard::Update {
+        worker: 0,
+        clock: 1,
+        rows: vec![((0, 0), RowDelta::sparse(8, vec![(1, 1.0), (2, 2.0)]))],
+    }))
+}
+
+#[test]
+fn lying_sparse_nnz_is_bounded_before_allocation() {
+    // Claiming 2^31 pairs in a tiny body must fail on the remaining-bytes
+    // bound, never attempt the allocation.
+    let mut bytes = encoded_sparse_update();
+    let nnz_off = UPDATE_ROW0 + 12 + 1 + 4;
+    bytes[nnz_off..nnz_off + 4].copy_from_slice(&(1u32 << 31).to_le_bytes());
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("claims"), "{err:#}");
+    // And an nnz that fits the bytes but exceeds the declared row length
+    // is rejected too (here: len patched below nnz).
+    let mut bytes = encoded_sparse_update();
+    let len_off = UPDATE_ROW0 + 12 + 1;
+    bytes[len_off..len_off + 4].copy_from_slice(&1u32.to_le_bytes());
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("claims"), "{err:#}");
+}
+
+#[test]
+fn lying_sparse_row_len_is_bounded_before_any_allocation() {
+    // `len` is a claim about the dense width the row expands to at apply
+    // time: a tiny frame claiming a u32::MAX-wide row must be rejected at
+    // decode, not allocate gigabytes in the shard later.
+    let mut bytes = encoded_sparse_update();
+    let len_off = UPDATE_ROW0 + 12 + 1;
+    bytes[len_off..len_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("dense width"), "{err:#}");
+}
+
+#[test]
+fn sparse_index_out_of_range_is_rejected() {
+    let mut bytes = encoded_sparse_update();
+    let idx0_off = UPDATE_ROW0 + 12 + 1 + 4 + 4;
+    bytes[idx0_off..idx0_off + 4].copy_from_slice(&200u32.to_le_bytes());
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+}
+
+#[test]
+fn sparse_index_order_violation_is_rejected() {
+    // Second index patched to 0 (< first index 1): non-canonical pair
+    // order is treated as stream corruption.
+    let mut bytes = encoded_sparse_update();
+    let idx1_off = UPDATE_ROW0 + 12 + 1 + 4 + 4 + 8;
+    bytes[idx1_off..idx1_off + 4].copy_from_slice(&0u32.to_le_bytes());
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("ascending"), "{err:#}");
+}
+
+#[test]
+fn garbage_row_representation_byte_is_rejected() {
+    let mut bytes = encoded_sparse_update();
+    bytes[UPDATE_ROW0 + 12] = 9;
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("representation"),
+        "{err:#}"
+    );
+}
+
+#[test]
+fn sparse_special_float_bits_survive_roundtrip() {
+    let specials = [
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        -0.0,
+        f32::MIN_POSITIVE,
+        f32::MAX,
+        f32::from_bits(0x7FC0_1234), // payloaded NaN
+    ];
+    let pairs: Vec<(u32, f32)> = specials
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (10 * i as u32, v))
+        .collect();
+    let p = Packet::ToShard(ToShard::Update {
+        worker: 2,
+        clock: 3,
+        rows: vec![((1, 5), RowDelta::sparse(1024, pairs.clone()))],
+    });
+    let bytes = encode(&p);
+    let (_, _, back) = wire::read_frame(&mut &bytes[..], &mut Vec::new())
+        .unwrap()
+        .unwrap();
+    match back {
+        Packet::ToShard(ToShard::Update { rows, .. }) => match &rows[0].1 {
+            RowDelta::Sparse { len, pairs: got } => {
+                assert_eq!(*len, 1024);
+                assert_eq!(got.len(), pairs.len());
+                for ((i, a), (j, b)) in pairs.iter().zip(got) {
+                    assert_eq!(i, j);
+                    assert_eq!(a.to_bits(), b.to_bits(), "{a} lost its bit pattern");
+                }
+            }
+            other => panic!("representation not preserved: {other:?}"),
+        },
+        other => panic!("unexpected {other:?}"),
+    }
 }
 
 #[test]
