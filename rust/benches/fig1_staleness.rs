@@ -25,6 +25,7 @@ fn opts() -> ExpOpts {
         lan: true,
         transport: Default::default(),
         virtual_clock_ms: 20,
+        replicas: 0,
     }
 }
 

@@ -28,6 +28,7 @@ fn opts(clocks: u64) -> ExpOpts {
         lan: true,
         transport: Default::default(),
         virtual_clock_ms: 15,
+        replicas: 0,
     }
 }
 

@@ -15,7 +15,7 @@ use std::collections::BTreeMap;
 
 use essptable::ps::client::PsClient;
 use essptable::ps::consistency::Consistency;
-use essptable::ps::server::{Cluster, ClusterConfig, PsApp, TableSpec};
+use essptable::ps::server::{Cluster, ClusterConfig, MigrationSpec, PsApp, TableSpec};
 use essptable::ps::types::Clock;
 use essptable::ps::update::UpdateMap;
 use essptable::sim::net::NetConfig;
@@ -209,6 +209,42 @@ fn bench_sparse_flush_tcp(out: &mut Vec<Entry>) {
     ));
 }
 
+/// Elastic shard plane: the same logreg workload over 4 provisioned
+/// shards with 2 initially active, migrating 2 -> 4 mid-run (grow at
+/// clock 100 of 200, deterministic) — what a live rebalance costs in
+/// wall-clock versus the static 2-shard baseline series.
+fn bench_migration_2to4(out: &mut Vec<Entry>) {
+    use essptable::apps::logreg::{run_logreg, LogRegConfig};
+    let label = "e2e bsp x4w logreg migration 2->4 shards mid-run (deterministic)";
+    let clocks = 200u64;
+    let r = bench(label, 1, 3, || {
+        let (_report, _) = run_logreg(
+            ClusterConfig {
+                workers: 4,
+                shards: 4,
+                active_shards: 2,
+                migration: Some(MigrationSpec {
+                    at_clock: 100,
+                    grow_to: Some(4),
+                    moves: vec![],
+                }),
+                consistency: Consistency::Bsp,
+                net: NetConfig::instant(),
+                deterministic: true,
+                ..Default::default()
+            },
+            LogRegConfig::default(),
+            clocks,
+        );
+    });
+    r.print_throughput(clocks as f64, "clocks");
+    out.push((
+        "e2e_bsp_x4w_logreg_migration_2to4_mid_run".into(),
+        r.mean.as_secs_f64(),
+        r.throughput(clocks as f64),
+    ));
+}
+
 /// Push (ESSP) vs pull (SSP) refresh traffic for the same workload:
 /// message counts + bytes (the batching claim).
 fn bench_push_vs_pull_traffic() {
@@ -393,6 +429,8 @@ fn main() {
     bench_get_inc_clock_tcp(Consistency::Vap { v0: 1000.0 }, 4, &mut entries);
     // Sparse flushes of wide rows over TCP (the hybrid delta plane win).
     bench_sparse_flush_tcp(&mut entries);
+    // Elastic shard plane: a live 2->4 rebalance mid-run.
+    bench_migration_2to4(&mut entries);
     bench_push_vs_pull_traffic();
     write_json(&entries);
 }

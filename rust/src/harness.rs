@@ -43,6 +43,9 @@ pub struct ExpOpts {
     /// regime — long uniform compute per clock — needs this on a
     /// timeshared testbed (see ClusterConfig::virtual_clock).
     pub virtual_clock_ms: u64,
+    /// Replica shards per primary (0 = none): hot-read fan-out for the
+    /// pull-admission models (see ClusterConfig::replicas).
+    pub replicas: usize,
 }
 
 impl Default for ExpOpts {
@@ -57,6 +60,7 @@ impl Default for ExpOpts {
             lan: true,
             transport: TransportSel::Sim,
             virtual_clock_ms: 25,
+            replicas: 0,
         }
     }
 }
@@ -66,6 +70,9 @@ impl ExpOpts {
         ClusterConfig {
             workers: self.workers,
             shards: self.shards,
+            active_shards: 0,
+            replicas: self.replicas,
+            migration: None,
             consistency,
             net: if self.lan {
                 NetConfig::lan(self.seed)

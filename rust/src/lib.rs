@@ -4,8 +4,10 @@
 //!
 //! Layering (see DESIGN.md):
 //! * [`ps`] — the parameter server: GET/INC/CLOCK client, sharded server,
-//!   and the consistency-policy engine (`ps::policy`) enforcing
-//!   BSP / SSP / ESSP / Async / VAP / AVAP as pluggable policy pairs.
+//!   the consistency-policy engine (`ps::policy`) enforcing
+//!   BSP / SSP / ESSP / Async / VAP / AVAP as pluggable policy pairs, and
+//!   the elastic shard plane (`ps::placement`): epoch-versioned key
+//!   placement, live key migration, and replica read fan-out.
 //! * [`transport`] — the data plane: binary wire codec plus two backends,
 //!   the in-process simulated network and a real TCP transport for
 //!   multi-process clusters.
@@ -52,8 +54,8 @@ pub mod ps {
     pub mod client;
     pub mod consistency;
     pub mod msg;
+    pub mod placement;
     pub mod policy;
-    pub mod router;
     pub mod server;
     pub mod shard;
     pub mod theory;

@@ -39,8 +39,8 @@ use essptable::metrics::export;
 use essptable::ps::checkpoint;
 use essptable::ps::client::{ClientConfig, PsClient};
 use essptable::ps::consistency::Consistency;
-use essptable::ps::msg::ToShard;
-use essptable::ps::router::Router;
+use essptable::ps::msg::{ToShard, ToWorker};
+use essptable::ps::placement::{plan_shards, PlacementDelta, PlacementMap};
 use essptable::ps::server::{self, PsApp, RunReport, TableSpec};
 use essptable::ps::shard::Shard;
 use essptable::ps::types::{Clock, Key};
@@ -96,13 +96,16 @@ const USAGE: &str = "usage: essptable <subcommand> [flags]
   inspection:   artifacts
   cluster:      run-cluster --app logreg|counter --workers N --shards N
                   [--cluster host:p,...] [--clocks N] [--consistency C]
+                  [--replicas R] [--active A] [--migrate-at C [--grow-to N]]
                 serve-shard --index I --bind ADDR --shards N --workers N
-                  [--dump FILE.ckp]
+                  [--dump FILE.ckp] [--replicas R] [--active A]
+                  [--migrate-at C --cluster addr,... [--grow-to N]]
                 run-worker  --index W --cluster host:p,... --workers N
+                  [--replicas R] [--active A] [--migrate-at C [--grow-to N]]
   common flags: --workers N --shards N --clocks N --seed N
                 --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0|avap:V0:S
                 --straggler none|uniform:F|... --net lan|instant
-                --transport sim|tcp
+                --transport sim|tcp --replicas R
                 --out DIR  (see README.md for per-command flags)";
 
 fn opts(args: &Args) -> anyhow::Result<ExpOpts> {
@@ -118,7 +121,36 @@ fn opts(args: &Args) -> anyhow::Result<ExpOpts> {
         transport: TransportSel::parse(&args.str("transport", "sim"))
             .map_err(anyhow::Error::msg)?,
         virtual_clock_ms: args.u64("virtual-clock-ms", 25),
+        replicas: args.usize("replicas", 0),
     })
+}
+
+/// The statically derived migration delta for the cluster subcommands:
+/// every process (launcher, shards, workers) computes the identical delta
+/// from the shared flags, then arms itself with it at bootstrap — the
+/// same `MigrateBegin`/`Placement` protocol the in-process coordinator
+/// drives. Growth defaults to the full provisioned primary set (the
+/// "2 -> 4 shards mid-run" shape).
+fn migration_delta(args: &Args, at_clock: Clock, shards: usize) -> PlacementDelta {
+    let grow_to = args.usize("grow-to", 0);
+    let grow_to = if grow_to == 0 { shards } else { grow_to };
+    PlacementDelta {
+        epoch: 1,
+        at_clock,
+        grow_active: Some(grow_to as u32),
+        moves: vec![],
+    }
+}
+
+/// Parse the optional `--migrate-at` clock.
+fn migrate_at(args: &Args) -> anyhow::Result<Option<Clock>> {
+    args.opt_str("migrate-at")
+        .map(|s| {
+            let c: Clock = s.parse().context("--migrate-at")?;
+            ensure!(c >= 1, "--migrate-at must be >= 1 (got {c})");
+            Ok(c)
+        })
+        .transpose()
 }
 
 fn consistency(args: &Args, default: &str) -> anyhow::Result<Consistency> {
@@ -473,16 +505,44 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
     let index = args.usize("index", 0);
     let shards = args.usize("shards", 2);
     let workers = args.usize("workers", 4);
+    let replicas = args.usize("replicas", 0);
+    let active = args.usize("active", 0);
+    let migrate = migrate_at(args)?;
     let bind = args.str("bind", "127.0.0.1:0");
     let consistency = consistency(args, "bsp")?;
     let deterministic = args.bool("deterministic", deterministic_default(consistency));
     let seed = args.u64("seed", 42);
     let dump = args.opt_str("dump");
-    ensure!(index < shards, "--index {index} out of range for --shards {shards}");
+    let active = if active == 0 { shards } else { active };
+    let placement = PlacementMap::new(shards, active, replicas);
+    let total = placement.total_shards();
+    ensure!(
+        index < total,
+        "--index {index} out of range for {total} shard nodes \
+         ({shards} primaries x (1 + {replicas} replicas))"
+    );
     let app = dist_app(args)?;
     let row_len = server::table_row_lens(&app.tables);
 
     let (shard_tx, shard_rx) = channel::<ToShard>();
+    // Self-arm a scheduled migration FIRST, so MigrateBegin leads the
+    // inbox before any worker traffic — the same message the in-process
+    // coordinator sends, derived identically in every process.
+    if let Some(at_clock) = migrate {
+        let delta = migration_delta(args, at_clock, shards);
+        let keys = app
+            .tables
+            .iter()
+            .flat_map(|t| (0..t.rows).map(move |r| (t.table, r)));
+        let mut plans = plan_shards(&placement, &delta, keys);
+        let plan = std::mem::take(&mut plans[index]);
+        let _ = shard_tx.send(ToShard::MigrateBegin {
+            epoch: delta.epoch,
+            at_clock: delta.at_clock,
+            outgoing: plan.outgoing,
+            incoming: plan.incoming,
+        });
+    }
     let (events_tx, events_rx) = channel::<PeerEvent>();
     let (transport, addr) = TcpTransport::server(
         &bind,
@@ -490,22 +550,57 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         Some(events_tx),
         workers,
     )?;
+    let role = if placement.is_replica(index) {
+        format!("replica of shard {}", placement.primary_of(index))
+    } else {
+        "primary".to_string()
+    };
     println!(
-        "shard {index}/{shards} listening on {addr} ({workers} workers expected, {})",
+        "shard {index}/{total} ({role}) listening on {addr} ({workers} workers expected, {})",
         consistency.label()
     );
+    // Migration handoffs need shard->shard links: dial every
+    // higher-indexed peer (one connection per unordered pair, carrying
+    // both directions).
+    if migrate.is_some() {
+        let cluster_addrs = args.strs("cluster");
+        ensure!(
+            cluster_addrs.len() == total,
+            "serve-shard --migrate-at needs --cluster listing all {total} shard \
+             addresses (got {})",
+            cluster_addrs.len()
+        );
+        let timeout = Duration::from_secs(args.u64("connect-timeout-s", 30));
+        for (j, a) in cluster_addrs.iter().enumerate() {
+            if j <= index {
+                continue;
+            }
+            let sa = a
+                .to_socket_addrs()
+                .with_context(|| format!("resolving peer shard {j} address {a:?}"))?
+                .next()
+                .with_context(|| format!("peer shard {j} address {a:?} resolved to nothing"))?;
+            transport
+                .dial(NodeId::Shard(index), NodeId::Shard(j), sa, timeout)
+                .with_context(|| format!("dialing peer shard {j}"))?;
+        }
+    }
 
-    let router = Router::new(shards);
-    let mut shard = Shard::new(
-        index,
-        workers,
-        consistency,
-        transport.handle(),
-        row_len,
-        deterministic,
-    );
+    let my_primary = placement.primary_of(index);
+    let mut shard = if placement.is_replica(index) {
+        Shard::replica(index, workers, transport.handle(), row_len, deterministic)
+    } else {
+        Shard::new(
+            index,
+            workers,
+            consistency,
+            transport.handle(),
+            row_len,
+            deterministic,
+        )
+    };
     server::init_rows(&app.tables, seed, |key, data| {
-        if router.shard_of(&key) == index {
+        if placement.shard_of(&key) == my_primary {
             shard.init_row(key, data);
         }
     });
@@ -585,13 +680,23 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
     let index = args.usize("index", 0);
     let workers = args.usize("workers", 4);
     let clocks = args.u64("clocks", 20);
+    let replicas = args.usize("replicas", 0);
+    let active = args.usize("active", 0);
+    let migrate = migrate_at(args)?;
     let consistency = consistency(args, "bsp")?;
     let shard_addrs = args.strs("cluster");
     ensure!(
         !shard_addrs.is_empty(),
-        "run-worker needs --cluster host:port[,host:port...] (one address per shard)"
+        "run-worker needs --cluster host:port[,host:port...] (one address per shard node)"
     );
-    let shards = shard_addrs.len();
+    let total = shard_addrs.len();
+    ensure!(
+        total % (1 + replicas) == 0,
+        "--cluster lists {total} addresses, not divisible by 1 + --replicas {replicas}"
+    );
+    let shards = total / (1 + replicas);
+    let active = if active == 0 { shards } else { active };
+    let placement = PlacementMap::new(shards, active, replicas);
     ensure!(index < workers, "--index {index} out of range for --workers {workers}");
     let app = dist_app(args)?;
     let row_len = server::table_row_lens(&app.tables);
@@ -606,6 +711,13 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
         conns.push((index, s, sa));
     }
     let (worker_tx, worker_rx) = channel();
+    // Self-arm a scheduled migration before anything else reaches the
+    // inbox: the identical Placement delta every process derives.
+    if let Some(at_clock) = migrate {
+        let _ = worker_tx.send(ToWorker::Placement {
+            delta: migration_delta(args, at_clock, shards),
+        });
+    }
     let timeout = Duration::from_secs(args.u64("connect-timeout-s", 30));
     let transport = TcpTransport::client(
         vec![(NodeId::Worker(index), LocalSink::Worker(worker_tx))],
@@ -613,7 +725,7 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
         timeout,
     )?;
     println!(
-        "worker {index}/{workers}: connected to {shards} shard(s), {} clocks of {}",
+        "worker {index}/{workers}: connected to {total} shard node(s), {} clocks of {}",
         clocks,
         consistency.label()
     );
@@ -627,7 +739,7 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
     let mut ps = PsClient::new(
         index,
         client_cfg,
-        Router::new(shards),
+        placement,
         transport.handle(),
         worker_rx,
         row_len,
@@ -692,6 +804,40 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
     let workers = args.usize("workers", 4);
     let shards = args.usize("shards", 2);
     let clocks = args.u64("clocks", 20);
+    let replicas = args.usize("replicas", 0);
+    let active = args.usize("active", 0);
+    let migrate = migrate_at(args)?;
+    let grow_to = if migrate.is_some() {
+        Some(args.usize("grow-to", 0))
+    } else {
+        None
+    };
+    let total = shards * (1 + replicas);
+    // Validate the migration geometry HERE, before N processes spawn:
+    // every child derives the same delta and would otherwise hit the
+    // PlacementMap asserts mid-run, leaving the operator with a pile of
+    // panicking processes instead of one actionable error.
+    if migrate.is_some() {
+        let active_eff = if active == 0 { shards } else { active };
+        let grow_eff = match grow_to {
+            Some(g) if g > 0 => g,
+            _ => shards,
+        };
+        ensure!(
+            active_eff <= shards,
+            "--active {active_eff} exceeds --shards {shards}"
+        );
+        ensure!(
+            grow_eff >= active_eff && grow_eff <= shards,
+            "--grow-to {grow_eff} out of range {active_eff}..={shards}"
+        );
+        ensure!(
+            grow_eff % active_eff == 0,
+            "--grow-to {grow_eff} must be a multiple of the initial active \
+             count {active_eff} (modular re-homing is only conservative for \
+             divisible growth)"
+        );
+    }
     let consistency = consistency(args, "bsp")?;
     // A multi-process cluster *is* the tcp transport; accept the common
     // flag for symmetry with the in-process commands.
@@ -711,11 +857,12 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
     let addrs = {
         let given = args.strs("cluster");
         if given.is_empty() {
-            pick_local_ports(shards)?
+            pick_local_ports(total)?
         } else {
             ensure!(
-                given.len() == shards,
-                "--cluster lists {} addresses but --shards is {shards}",
+                given.len() == total,
+                "--cluster lists {} addresses but {total} shard nodes are \
+                 configured ({shards} primaries x (1 + {replicas} replicas))",
                 given.len()
             );
             given
@@ -745,9 +892,20 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
     } else {
         Vec::new()
     };
+    let cluster_list = addrs.join(",");
+    // Migration flags shared verbatim by every process, so all derive the
+    // identical placement delta.
+    let mut mig_flags: Vec<String> = Vec::new();
+    if let Some(at) = migrate {
+        mig_flags.extend(["--migrate-at".into(), at.to_string()]);
+        if let Some(g) = grow_to {
+            if g > 0 {
+                mig_flags.extend(["--grow-to".into(), g.to_string()]);
+            }
+        }
+    }
     let mut dumps = Vec::new();
-    for i in 0..shards {
-        let dump = out.join(format!("shard_{i}.ckp"));
+    for i in 0..total {
         let mut sargs: Vec<String> = vec![
             "serve-shard".into(),
             "--index".into(),
@@ -756,6 +914,10 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             shards.to_string(),
             "--workers".into(),
             workers.to_string(),
+            "--replicas".into(),
+            replicas.to_string(),
+            "--active".into(),
+            active.to_string(),
             "--bind".into(),
             addrs[i].clone(),
             "--consistency".into(),
@@ -766,9 +928,22 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             app_name.clone(),
             "--deterministic".into(),
             (if deterministic { "true" } else { "false" }).to_string(),
-            "--dump".into(),
-            dump.to_str().context("non-utf8 dump path")?.into(),
         ];
+        if i < shards {
+            // Only primaries dump: they are the authoritative copies the
+            // launcher merges.
+            let dump = out.join(format!("shard_{i}.ckp"));
+            sargs.extend([
+                "--dump".into(),
+                dump.to_str().context("non-utf8 dump path")?.to_string(),
+            ]);
+            dumps.push(dump);
+        }
+        if migrate.is_some() {
+            // Peer dials for handoff links need the full address list.
+            sargs.extend(["--cluster".into(), cluster_list.clone()]);
+            sargs.extend(mig_flags.iter().cloned());
+        }
         sargs.extend(app_flags.iter().cloned());
         let child = Command::new(&exe).args(&sargs).spawn();
         let child = match child {
@@ -778,10 +953,8 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
                 return Err(anyhow::Error::from(e).context(format!("spawning shard {i}")));
             }
         };
-        dumps.push(dump);
         children.push(("shard", i, child));
     }
-    let cluster_list = addrs.join(",");
     for w in 0..workers {
         let mut wargs: Vec<String> = vec![
             "run-worker".into(),
@@ -789,6 +962,10 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             w.to_string(),
             "--workers".into(),
             workers.to_string(),
+            "--replicas".into(),
+            replicas.to_string(),
+            "--active".into(),
+            active.to_string(),
             "--cluster".into(),
             cluster_list.clone(),
             "--clocks".into(),
@@ -798,6 +975,7 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             "--app".into(),
             app_name.clone(),
         ];
+        wargs.extend(mig_flags.iter().cloned());
         wargs.extend(app_flags.iter().cloned());
         let child = Command::new(&exe).args(&wargs).spawn();
         let child = match child {

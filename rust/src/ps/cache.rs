@@ -7,7 +7,7 @@
 //! allocation the shard sent (zero-copy); local read-my-writes folding
 //! copies-on-write, so a shared snapshot is never mutated in place.
 //!
-//! Each cached row carries two clocks:
+//! Each cached row carries two clocks and its source shard:
 //!
 //!   * `vclock` — the server table clock when this copy was produced; all
 //!     updates with clock <= vclock are guaranteed reflected. This is the
@@ -19,17 +19,33 @@
 //!   * `fresh`  — the max update clock actually reflected (best-effort
 //!     in-window updates). Advisory only: it never enters the staleness
 //!     histogram, which would otherwise overstate guarantees.
+//!   * `source` — the shard that served this copy. A shard's wave
+//!     announcements ("rows absent from my waves are unchanged through
+//!     T") are claims about *its own* serving history, so the client
+//!     applies `shard_announced` only to copies whose source matches the
+//!     key's current owner. Without the tag, a copy pulled from a key's
+//!     *previous* owner (live migration) or from a replica could inherit
+//!     the new owner's blanket certification and be admitted while
+//!     missing updates the new owner already holds.
 
 use std::sync::Arc;
 
 use super::types::{Clock, Key, RowDelta};
 use crate::util::hash::FxHashMap;
 
+/// `source` value for a copy whose serving shard is unknown (e.g. a pull
+/// reply with no in-flight record): never equal to a real shard id, so
+/// blanket announcements are never applied to it.
+pub const NO_SOURCE: usize = usize::MAX;
+
 #[derive(Debug, Clone)]
 pub struct CachedRow {
     pub data: Arc<[f32]>,
     pub vclock: Clock,
     pub fresh: Clock,
+    /// Shard that served this copy (see module docs; [`NO_SOURCE`] if
+    /// unknown).
+    pub source: usize,
     /// LRU tick of the last access.
     last_used: u64,
 }
@@ -91,6 +107,7 @@ impl RowCache {
         data: impl Into<Arc<[f32]>>,
         vclock: Clock,
         fresh: Clock,
+        source: usize,
     ) {
         self.tick += 1;
         match self.rows.get_mut(&key) {
@@ -108,6 +125,7 @@ impl RowCache {
                 data: data.into(),
                 vclock,
                 fresh,
+                source,
                 last_used: self.tick,
             },
         );
@@ -161,16 +179,23 @@ impl RowCache {
     /// Replace a row's *contents* without touching its guaranteed clock
     /// (VAP eager waves: the data is fresher, but no new clock guarantee
     /// is implied). Inserts with no guarantee if the row is not cached.
-    pub fn force_data(&mut self, key: Key, data: impl Into<Arc<[f32]>>, fresh: Clock) {
+    pub fn force_data(
+        &mut self,
+        key: Key,
+        data: impl Into<Arc<[f32]>>,
+        fresh: Clock,
+        source: usize,
+    ) {
         self.tick += 1;
         match self.rows.get_mut(&key) {
             Some(r) => {
                 r.data = data.into();
                 r.fresh = r.fresh.max(fresh);
+                r.source = source;
                 r.last_used = self.tick;
             }
             None => {
-                self.insert(key, data, super::types::NEVER, fresh);
+                self.insert(key, data, super::types::NEVER, fresh, source);
             }
         }
     }
@@ -198,7 +223,7 @@ mod tests {
     #[test]
     fn insert_get_roundtrip() {
         let mut c = RowCache::new(0);
-        c.insert(k(1), vec![1.0, 2.0], 5, 7);
+        c.insert(k(1), vec![1.0, 2.0], 5, 7, 0);
         let r = c.get(&k(1)).unwrap();
         assert_eq!(&r.data[..], &[1.0, 2.0]);
         assert_eq!((r.vclock, r.fresh), (5, 7));
@@ -209,7 +234,7 @@ mod tests {
     fn insert_shares_the_arc_zero_copy() {
         let mut c = RowCache::new(0);
         let payload: Arc<[f32]> = vec![1.0, 2.0].into();
-        c.insert(k(1), Arc::clone(&payload), 0, 0);
+        c.insert(k(1), Arc::clone(&payload), 0, 0, 0);
         assert!(
             Arc::ptr_eq(&payload, &c.peek(&k(1)).unwrap().data),
             "insert must store the shared snapshot, not a deep copy"
@@ -219,10 +244,10 @@ mod tests {
     #[test]
     fn lru_evicts_least_recently_used() {
         let mut c = RowCache::new(2);
-        c.insert(k(1), vec![1.0], 0, 0);
-        c.insert(k(2), vec![2.0], 0, 0);
+        c.insert(k(1), vec![1.0], 0, 0, 0);
+        c.insert(k(2), vec![2.0], 0, 0, 0);
         c.get(&k(1)); // bump 1; key 2 is now LRU
-        c.insert(k(3), vec![3.0], 0, 0);
+        c.insert(k(3), vec![3.0], 0, 0, 0);
         assert!(c.peek(&k(2)).is_none(), "LRU row should be evicted");
         assert!(c.peek(&k(1)).is_some());
         assert!(c.peek(&k(3)).is_some());
@@ -233,7 +258,7 @@ mod tests {
     fn eviction_counter_tracks_every_overflow() {
         let mut c = RowCache::new(3);
         for i in 0..10 {
-            c.insert(k(i), vec![i as f32], 0, 0);
+            c.insert(k(i), vec![i as f32], 0, 0, 0);
             assert!(c.len() <= 3, "capacity exceeded at insert {i}");
         }
         assert_eq!(c.evictions(), 7, "10 inserts into capacity 3");
@@ -248,8 +273,8 @@ mod tests {
         // A pull reply that raced a fresher push must not replace it: the
         // newer clock pair wins, and `fresh` merges monotonically.
         let mut c = RowCache::new(0);
-        c.insert(k(1), vec![9.0], 10, 12);
-        c.insert(k(1), vec![1.0], 4, 4); // late pull reply
+        c.insert(k(1), vec![9.0], 10, 12, 0);
+        c.insert(k(1), vec![1.0], 4, 4, 0); // late pull reply
         let r = c.peek(&k(1)).unwrap();
         assert_eq!(&r.data[..], &[9.0]);
         assert_eq!(r.vclock, 10);
@@ -259,10 +284,10 @@ mod tests {
     #[test]
     fn stale_arrival_still_merges_fresh_forward() {
         let mut c = RowCache::new(0);
-        c.insert(k(1), vec![9.0], 10, 10);
+        c.insert(k(1), vec![9.0], 10, 10, 0);
         // Older guarantee but higher best-effort freshness: keep data and
         // vclock, advance fresh.
-        c.insert(k(1), vec![1.0], 4, 15);
+        c.insert(k(1), vec![1.0], 4, 15, 0);
         let r = c.peek(&k(1)).unwrap();
         assert_eq!(&r.data[..], &[9.0]);
         assert_eq!((r.vclock, r.fresh), (10, 15));
@@ -271,8 +296,8 @@ mod tests {
     #[test]
     fn newer_arrival_replaces() {
         let mut c = RowCache::new(0);
-        c.insert(k(1), vec![1.0], 4, 4);
-        c.insert(k(1), vec![9.0], 10, 11);
+        c.insert(k(1), vec![1.0], 4, 4, 0);
+        c.insert(k(1), vec![9.0], 10, 11, 0);
         let r = c.peek(&k(1)).unwrap();
         assert_eq!(&r.data[..], &[9.0]);
         assert_eq!((r.vclock, r.fresh), (10, 11));
@@ -281,7 +306,7 @@ mod tests {
     #[test]
     fn apply_delta_mutates_copy() {
         let mut c = RowCache::new(0);
-        c.insert(k(1), vec![1.0, 1.0], 0, 0);
+        c.insert(k(1), vec![1.0, 1.0], 0, 0, 0);
         c.apply_delta(&k(1), &vec![0.5, -0.5].into());
         assert_eq!(&c.peek(&k(1)).unwrap().data[..], &[1.5, 0.5]);
     }
@@ -289,7 +314,7 @@ mod tests {
     #[test]
     fn apply_sparse_delta_touches_only_its_indices() {
         let mut c = RowCache::new(0);
-        c.insert(k(1), vec![1.0, 2.0, 3.0, 4.0], 0, 0);
+        c.insert(k(1), vec![1.0, 2.0, 3.0, 4.0], 0, 0, 0);
         c.apply_delta(&k(1), &RowDelta::sparse(4, vec![(1, 10.0), (3, -4.0)]));
         assert_eq!(&c.peek(&k(1)).unwrap().data[..], &[1.0, 12.0, 3.0, 0.0]);
     }
@@ -298,7 +323,7 @@ mod tests {
     fn apply_delta_detaches_shared_snapshot() {
         let mut c = RowCache::new(0);
         let shared: Arc<[f32]> = vec![1.0, 1.0].into();
-        c.insert(k(1), Arc::clone(&shared), 0, 0);
+        c.insert(k(1), Arc::clone(&shared), 0, 0, 0);
         c.apply_delta(&k(1), &vec![1.0, 0.0].into());
         // The external holder's view is untouched (copy-on-write).
         assert_eq!(&shared[..], &[1.0, 1.0]);
@@ -309,17 +334,37 @@ mod tests {
     fn apply_sparse_delta_detaches_shared_snapshot() {
         let mut c = RowCache::new(0);
         let shared: Arc<[f32]> = vec![1.0, 1.0].into();
-        c.insert(k(1), Arc::clone(&shared), 0, 0);
+        c.insert(k(1), Arc::clone(&shared), 0, 0, 0);
         c.apply_delta(&k(1), &RowDelta::sparse(2, vec![(0, 1.0)]));
         assert_eq!(&shared[..], &[1.0, 1.0]);
         assert_eq!(&c.peek(&k(1)).unwrap().data[..], &[2.0, 1.0]);
     }
 
     #[test]
+    fn source_tag_tracks_the_serving_shard() {
+        let mut c = RowCache::new(0);
+        c.insert(k(1), vec![1.0], 5, 5, 2);
+        assert_eq!(c.peek(&k(1)).unwrap().source, 2);
+        // A newer copy retags; a stale arrival keeps the winning copy's.
+        c.insert(k(1), vec![2.0], 7, 7, 3);
+        assert_eq!(c.peek(&k(1)).unwrap().source, 3);
+        c.insert(k(1), vec![9.0], 6, 6, 0);
+        assert_eq!(
+            c.peek(&k(1)).unwrap().source,
+            3,
+            "stale arrival must not retag"
+        );
+        // force_data retags: the contents are now the pushing shard's.
+        c.force_data(k(1), vec![4.0], 8, 1);
+        assert_eq!(c.peek(&k(1)).unwrap().source, 1);
+        assert_eq!(NO_SOURCE, usize::MAX);
+    }
+
+    #[test]
     fn unbounded_never_evicts() {
         let mut c = RowCache::new(0);
         for i in 0..1000 {
-            c.insert(k(i), vec![0.0], 0, 0);
+            c.insert(k(i), vec![0.0], 0, 0, 0);
         }
         assert_eq!(c.len(), 1000);
         assert_eq!(c.evictions(), 0);

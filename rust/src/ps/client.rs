@@ -33,8 +33,8 @@ use std::time::{Duration, Instant};
 use super::cache::RowCache;
 use super::consistency::Consistency;
 use super::msg::{ToShard, ToWorker};
+use super::placement::{PlacementDelta, PlacementMap};
 use super::policy::ClientPolicy;
-use super::router::Router;
 use super::types::{Clock, Key, TableId, WorkerId};
 use super::update::UpdateMap;
 use crate::metrics::staleness::StalenessHist;
@@ -96,6 +96,9 @@ pub struct ClientStats {
     pub rows_pushed_in: u64,
     pub raw_incs: u64,
     pub update_batches: u64,
+    /// Pulls fanned out to a replica shard instead of the primary
+    /// (policies with `replica_reads`, replicated clusters only).
+    pub replica_pulls: u64,
     /// Value-bounded models: total time reads spent blocked on revoked
     /// bound grants, and the number of reads that blocked at least once.
     pub vap_stall_ns: u64,
@@ -108,7 +111,13 @@ pub struct PsClient {
     clock: Clock,
     cfg: ClientConfig,
     policy: Box<dyn ClientPolicy>,
-    router: Router,
+    /// Epoch-versioned key -> shard placement (`ps::placement`).
+    placement: PlacementMap,
+    /// A placement epoch announced by the coordinator, held until this
+    /// worker's clock reaches its activation boundary.
+    pending_placement: Option<PlacementDelta>,
+    /// Round-robin counter for replica read fan-out.
+    replica_rr: u64,
     net: TransportHandle,
     inbox: Receiver<ToWorker>,
     cache: RowCache,
@@ -116,7 +125,10 @@ pub struct PsClient {
     /// Row lengths per table (for sparse INC fill-in).
     row_len: FxHashMap<TableId, usize>,
     registered: FxHashSet<Key>,
-    pulls_in_flight: FxHashSet<Key>,
+    /// In-flight pulls and the shard each was sent to: the reply's cached
+    /// copy is tagged with that source, so per-shard wave announcements
+    /// certify only copies the announcing shard actually served.
+    pulls_in_flight: FxHashMap<Key, usize>,
     /// Async mode: last clock at which a refresh pull was fired per key.
     last_refresh: FxHashMap<Key, Clock>,
     /// Per shard: the latest wave vclock announced (ESSP). A cached row
@@ -141,30 +153,34 @@ impl PsClient {
     pub fn new(
         worker: WorkerId,
         cfg: ClientConfig,
-        router: Router,
+        placement: PlacementMap,
         net: TransportHandle,
         inbox: Receiver<ToWorker>,
         row_len: HashMap<TableId, usize>,
         started: Instant,
     ) -> Self {
         let cache_capacity = cfg.cache_capacity;
-        let n_shards = router.n_shards();
-        let policy = cfg.consistency.client_policy(n_shards);
+        // Policy state that is per-shard (bound grants) covers the
+        // primaries: replicas never push, report or grant.
+        let policy = cfg.consistency.client_policy(placement.primaries());
+        let total = placement.total_shards();
         Self {
             worker,
             clock: 0,
             cfg,
             policy,
-            router,
+            placement,
+            pending_placement: None,
+            replica_rr: 0,
             net,
             inbox,
             cache: RowCache::new(cache_capacity),
             pending: UpdateMap::new(),
             row_len: row_len.into_iter().collect(),
             registered: FxHashSet::default(),
-            pulls_in_flight: FxHashSet::default(),
+            pulls_in_flight: FxHashMap::default(),
             last_refresh: FxHashMap::default(),
-            shard_announced: vec![super::types::NEVER; n_shards],
+            shard_announced: vec![super::types::NEVER; total],
             scratch: Vec::new(),
             finished: false,
             started,
@@ -211,8 +227,11 @@ impl PsClient {
                 vclock,
                 fresh,
             } => {
-                self.pulls_in_flight.remove(&key);
-                self.cache.insert(key, data, vclock, fresh);
+                let source = self
+                    .pulls_in_flight
+                    .remove(&key)
+                    .unwrap_or(super::cache::NO_SOURCE);
+                self.cache.insert(key, data, vclock, fresh, source);
             }
             ToWorker::Push {
                 shard,
@@ -222,7 +241,7 @@ impl PsClient {
                 self.stats.pushes_received += 1;
                 self.stats.rows_pushed_in += rows.len() as u64;
                 for row in rows {
-                    self.cache.insert(row.key, row.data, vclock, row.fresh);
+                    self.cache.insert(row.key, row.data, vclock, row.fresh, shard);
                 }
                 // Rows absent from the wave are certified unchanged by the
                 // shard through `vclock` (delta waves carry every dirtied
@@ -243,7 +262,7 @@ impl PsClient {
                 self.stats.pushes_received += 1;
                 self.stats.rows_pushed_in += rows.len() as u64;
                 for row in rows {
-                    self.cache.force_data(row.key, row.data, row.fresh);
+                    self.cache.force_data(row.key, row.data, row.fresh, shard);
                 }
                 self.send(
                     shard,
@@ -255,6 +274,50 @@ impl PsClient {
             }
             ToWorker::Bound { shard, granted } => {
                 self.policy.on_bound(shard, granted);
+            }
+            ToWorker::Placement { delta } => {
+                // Accept exactly the next epoch (duplicates idempotent,
+                // gaps impossible with one coordinator).
+                if delta.epoch == self.placement.epoch() + 1 {
+                    self.pending_placement = Some(delta);
+                    self.maybe_activate_placement();
+                }
+            }
+        }
+    }
+
+    /// Apply a pending placement epoch once this worker's clock has
+    /// reached its activation boundary: flushes and reads of clocks
+    /// >= `at_clock` route via the new map, and registered keys whose
+    /// owner changed re-register with the new owner (so eager waves
+    /// resume from there). Runs after `tick` advances the clock, and on
+    /// arrival (a late learner activates immediately; its earlier
+    /// flushes are conserved via the old owner's forward table).
+    fn maybe_activate_placement(&mut self) {
+        let activate = self
+            .pending_placement
+            .as_ref()
+            .is_some_and(|d| self.clock >= d.at_clock);
+        if !activate {
+            return;
+        }
+        let delta = self.pending_placement.take().unwrap();
+        let old_owners: Vec<(Key, usize)> = self
+            .registered
+            .iter()
+            .map(|k| (*k, self.placement.shard_of(k)))
+            .collect();
+        self.placement.apply(&delta);
+        for (key, old) in old_owners {
+            let now = self.placement.shard_of(&key);
+            if now != old {
+                self.send(
+                    now,
+                    ToShard::Register {
+                        key,
+                        worker: self.worker,
+                    },
+                );
             }
         }
     }
@@ -326,7 +389,7 @@ impl PsClient {
         // ESSP/VAP families: register for eager pushes on first access.
         if self.policy.eager_register() && self.registered.insert(key) {
             self.send(
-                self.router.shard_of(&key),
+                self.placement.shard_of(&key),
                 ToShard::Register {
                     key,
                     worker: self.worker,
@@ -339,7 +402,7 @@ impl PsClient {
         // holds).
         let min_vclock = self.policy.min_row_vclock(self.clock);
         let pull_floor = min_vclock.unwrap_or(Clock::MIN / 2);
-        let key_shard = self.router.shard_of(&key);
+        let key_shard = self.placement.shard_of(&key);
         let mut pulled = false;
         let mut stalled_since: Option<Instant> = None;
         loop {
@@ -347,9 +410,17 @@ impl PsClient {
             let announced = self.shard_announced[key_shard];
             if let Some(row) = self.cache.get(&key) {
                 // Effective guarantee: the copy's own vclock, or the
-                // shard's latest wave announcement if newer (the row was
-                // in no wave since, hence unchanged).
-                let vclock = row.vclock.max(announced);
+                // owner's latest wave announcement if newer (the row was
+                // in no wave since, hence unchanged) — applicable only
+                // when the copy actually came FROM the owner: a shard's
+                // announcements certify its own serving history, never a
+                // copy from a key's previous owner (live migration) or
+                // from a replica.
+                let vclock = if row.source == key_shard {
+                    row.vclock.max(announced)
+                } else {
+                    row.vclock
+                };
                 let ok = match min_vclock {
                     Some(mv) => vclock >= mv,
                     None => true,
@@ -370,7 +441,8 @@ impl PsClient {
                     // Opportunistic refresh (Async family).
                     if let Some(every) = self.policy.refresh_every() {
                         let last = *self.last_refresh.get(&key).unwrap_or(&(Clock::MIN / 2));
-                        if self.clock - last >= every && !self.pulls_in_flight.contains(&key) {
+                        if self.clock - last >= every && !self.pulls_in_flight.contains_key(&key)
+                        {
                             self.fire_pull(key, Clock::MIN / 2);
                             self.last_refresh.insert(key, self.clock);
                         }
@@ -379,7 +451,7 @@ impl PsClient {
                 }
             }
             // Cache miss or stale beyond the bound: pull and block.
-            if !self.pulls_in_flight.contains(&key) {
+            if !self.pulls_in_flight.contains_key(&key) {
                 self.fire_pull(key, pull_floor);
             }
             if !pulled {
@@ -464,9 +536,24 @@ impl PsClient {
 
     fn fire_pull(&mut self, key: Key, min_vclock: Clock) {
         self.stats.pulls += 1;
-        self.pulls_in_flight.insert(key);
+        // Replica read fan-out: policies whose whole admission is the
+        // clock window may round-robin pulls over the owner and its
+        // replicas — the replica enforces the same `min_vclock` wait on
+        // its own (identically fed) table clock.
+        let target = if self.placement.replicas_per() > 0 && self.policy.replica_reads() {
+            let pick = self.replica_rr;
+            self.replica_rr = self.replica_rr.wrapping_add(1);
+            let target = self.placement.read_target(&key, pick);
+            if self.placement.is_replica(target) {
+                self.stats.replica_pulls += 1;
+            }
+            target
+        } else {
+            self.placement.shard_of(&key)
+        };
+        self.pulls_in_flight.insert(key, target);
         self.send(
-            self.router.shard_of(&key),
+            target,
             ToShard::Get {
                 key,
                 worker: self.worker,
@@ -496,6 +583,9 @@ impl PsClient {
 
     /// CLOCK: flush coalesced updates, commit the tick, advance the clock.
     pub fn tick(&mut self) {
+        // Inbound traffic — placement announcements in particular — must
+        // be seen even by workers that never read between flushes.
+        self.drain_inbox();
         // Read-my-writes across the flush: fold the deltas into our cached
         // copies in place — borrowed from the coalescing map, no per-row
         // clone; `drain_routed` then *moves* the same deltas into the
@@ -510,9 +600,11 @@ impl PsClient {
                 self.cache.bump_fresh(key, clock);
             }
         }
-        let n_shards = self.router.n_shards();
-        let router = self.router;
-        let batches = self.pending.drain_routed(n_shards, |k| router.shard_of(k));
+        let primaries = self.placement.primaries();
+        let replicas = self.placement.replicas_per();
+        let total = self.placement.total_shards();
+        let placement = &self.placement;
+        let batches = self.pending.drain_routed(primaries, |k| placement.shard_of(k));
         // Value-bounded models: report each part's ∞-norm to its shard
         // ahead of the Update on the same FIFO link, so the shard
         // registers the in-transit mass before it can apply the part.
@@ -520,7 +612,8 @@ impl PsClient {
         // decay clock t must count every flush of every worker. The norm
         // scan costs O(batch) and runs only under these policies; a
         // sparse part is scanned directly off its stored pairs (implicit
-        // zeros cannot raise a max of absolute values).
+        // zeros cannot raise a max of absolute values). Reports cover the
+        // primaries only: replicas never grant or revoke.
         let report_norms = self.policy.reports_norms();
         for (shard, rows) in batches.into_iter().enumerate() {
             if report_norms {
@@ -538,6 +631,22 @@ impl PsClient {
                 );
             }
             if !rows.is_empty() {
+                // Replicas receive the same per-worker FIFO update
+                // stream, duplicated client-side — the honest cost of
+                // replication without server-side relays; replica reads
+                // then need no extra machinery to stay within the
+                // model's staleness bound.
+                for r in 0..replicas {
+                    let rep = primaries + shard * replicas + r;
+                    self.send(
+                        rep,
+                        ToShard::Update {
+                            worker: self.worker,
+                            clock: self.clock,
+                            rows: rows.clone(),
+                        },
+                    );
+                }
                 self.stats.update_batches += 1;
                 self.send(
                     shard,
@@ -549,8 +658,12 @@ impl PsClient {
                 );
             }
         }
-        // Commit tick to every shard (FIFO after the updates).
-        for shard in 0..n_shards {
+        // Commit tick to every shard node (FIFO after the updates) —
+        // active primaries, idle provisioned primaries and replicas
+        // alike: their table clocks advance in lockstep, which is what
+        // bounds replica read lag and lets an idle shard accept migrated
+        // keys mid-run with a live clock.
+        for shard in 0..total {
             self.send(
                 shard,
                 ToShard::ClockTick {
@@ -560,6 +673,9 @@ impl PsClient {
             );
         }
         self.clock += 1;
+        // A pending placement whose boundary this tick crossed becomes
+        // live before the next clock's reads and flushes.
+        self.maybe_activate_placement();
         self.timeline.finish_clock(self.clock_started.elapsed());
         self.clock_started = Instant::now();
     }
@@ -574,7 +690,7 @@ impl PsClient {
             return;
         }
         self.finished = true;
-        for shard in 0..self.router.n_shards() {
+        for shard in 0..self.placement.primaries() {
             self.send(
                 shard,
                 ToShard::Detach {

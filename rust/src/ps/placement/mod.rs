@@ -1,0 +1,511 @@
+//! Elastic shard plane: epoch-versioned key placement, migration planning,
+//! and replica addressing.
+//!
+//! Until this subsystem existed, key -> shard routing was a stateless hash
+//! (`Router`, absorbed here as epoch 0's strategy): every client and shard
+//! agreed on the mapping with zero coordination, but the mapping could
+//! never change. [`PlacementMap`] keeps that zero-coordination property
+//! *within* an epoch and makes the mapping itself a versioned object that
+//! a coordinator can advance mid-run:
+//!
+//!   * **Epoch 0** routes `key -> hash(key) % active` over the initially
+//!     active primaries (`active <= primaries` provisioned shard
+//!     processes; the rest idle with advancing table clocks, ready to
+//!     take load).
+//!   * A [`PlacementDelta`] advances the map to epoch N+1: it may *grow*
+//!     the active set (old count must divide the new one, so the modular
+//!     hash re-homes exactly the keys that land on the new shards — see
+//!     [`PlacementDelta::affects`]) and/or pin individual hot keys to
+//!     explicit owners via `moves`. Deltas are **conservative** by
+//!     construction: a key's owner changes only if the delta names it —
+//!     property-tested in `tests/proptest_invariants.rs`.
+//!   * **Replicas**: each primary `p` may have `replicas_per` replica
+//!     shards (ids `primaries + p*replicas_per + r`). Replicas receive
+//!     the same per-worker FIFO update/clock stream as their primary and
+//!     serve reads under the same SSP wait condition, so a replica read
+//!     carries exactly the model's staleness guarantee (see
+//!     `ClientPolicy::replica_reads`).
+//!
+//! # Live migration protocol (state machine)
+//!
+//! The coordinator announces one delta to every node; shards then move the
+//! affected rows between themselves while training continues:
+//!
+//! ```text
+//!            ToShard::MigrateBegin{epoch, at_clock, outgoing, incoming}
+//!            ToWorker::Placement{delta}                (coordinator, t0)
+//!                     |
+//!   CLIENT   pending --(flush clock reaches at_clock)--> active epoch:
+//!            flushes with clock >= at_clock route via the new map;
+//!            registered keys re-Register with their new owners.
+//!                     |
+//!   SOURCE   armed ----(table clock reaches at_clock-1)---> handed-off:
+//!            replay staged updates through at_clock-1, then per migrated
+//!            key send ToShard::RowHandoff{key, vclock, payload, staged}
+//!            to the new owner and drop the row; finish with
+//!            ToShard::MigrateCommit{epoch} per destination. Afterwards
+//!            the key set becomes a *forward table*: late GETs and
+//!            updates from clients that have not switched yet are relayed
+//!            to the new owner (conserving; the deterministic split is
+//!            exact whenever the announcement precedes at_clock, which
+//!            the coordinator guarantees by sending at launch).
+//!                     |
+//!   DEST     awaiting --(last RowHandoff arrives)--> settled:
+//!            until then the destination *fences* at table clock
+//!            at_clock-1 — staged updates with clock >= at_clock are not
+//!            replayed, GETs for in-flight keys are queued, and the
+//!            policy's commit hook is withheld — so the handed-off row
+//!            (the source's fold through at_clock-1) always lands before
+//!            any clock->at_clock update applies on top of it.
+//! ```
+//!
+//! # Invariants carried per consistency model
+//!
+//!   * **Clock models (BSP/SSP/ESSP)**: a served row always reflects
+//!     exactly the updates with clock <= served vclock. The source hands
+//!     off its fold through `at_clock-1`; the destination fences until it
+//!     holds that fold; every update with clock >= `at_clock` applies on
+//!     the destination in the same sorted (clock, worker) order the
+//!     deterministic replay would have used on the source — so a
+//!     migrated deterministic run is bit-identical to an unmigrated one.
+//!   * **Read-my-writes**: the overlay is keyed by `Key` client-side and
+//!     never consults the map; pending updates buffered across the epoch
+//!     switch flush to whichever shard owns the key at flush clock.
+//!   * **Value models (VAP/AVAP)**: visibility debt is per *wave*, not
+//!     per key — in-flight waves (and their revokes) stay with the shard
+//!     that issued them until acked/retired, and NormReports go to every
+//!     primary each flush, so every ledger's decay clock t keeps counting
+//!     every flush. Nothing per-key needs to move; post-switch updates
+//!     open waves on the new owner. Σ per-shard bounds still imply the
+//!     global bound.
+
+use super::types::{Clock, Key};
+use crate::util::hash::FxHashMap;
+
+/// Epoch-versioned key -> shard placement. Cheap to clone at migration
+/// planning time; every client and shard holds one and advances it by
+/// applying the same deltas in epoch order.
+#[derive(Debug, Clone)]
+pub struct PlacementMap {
+    epoch: u64,
+    /// Provisioned primary shards (fixed for the life of the cluster).
+    primaries: usize,
+    /// Primaries the hash currently routes over (<= primaries).
+    active: usize,
+    /// Replica shards per primary.
+    replicas_per: usize,
+    /// Keys pinned away from their hash home (explicit moves).
+    overrides: FxHashMap<Key, usize>,
+}
+
+impl PlacementMap {
+    /// A fresh epoch-0 map: hash routing over `active` of `primaries`
+    /// provisioned primaries, `replicas_per` replicas each.
+    pub fn new(primaries: usize, active: usize, replicas_per: usize) -> Self {
+        assert!(primaries > 0, "need at least one shard");
+        assert!(
+            (1..=primaries).contains(&active),
+            "active shard count {active} out of range 1..={primaries}"
+        );
+        Self {
+            epoch: 0,
+            primaries,
+            active,
+            replicas_per,
+            overrides: FxHashMap::default(),
+        }
+    }
+
+    /// Hash routing over all `n` shards, no elasticity — the drop-in for
+    /// the old `Router::new(n)`.
+    pub fn flat(n_shards: usize) -> Self {
+        Self::new(n_shards, n_shards, 0)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn primaries(&self) -> usize {
+        self.primaries
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn replicas_per(&self) -> usize {
+        self.replicas_per
+    }
+
+    /// Total shard nodes: primaries plus every replica.
+    pub fn total_shards(&self) -> usize {
+        self.primaries * (1 + self.replicas_per)
+    }
+
+    /// splitmix-style avalanche over (table, row) — epoch 0's strategy,
+    /// inherited verbatim from the absorbed hash `Router`.
+    #[inline]
+    pub fn hash(key: &Key) -> u64 {
+        let mut z = (key.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ key.1;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// The key's hash home under the current active set (ignoring moves).
+    #[inline]
+    pub fn hash_home(&self, key: &Key) -> usize {
+        (Self::hash(key) % self.active as u64) as usize
+    }
+
+    /// Primary shard owning `key` at this epoch.
+    #[inline]
+    pub fn shard_of(&self, key: &Key) -> usize {
+        self.overrides
+            .get(key)
+            .copied()
+            .unwrap_or_else(|| self.hash_home(key))
+    }
+
+    /// Shard id of replica `r` of primary `p`.
+    #[inline]
+    pub fn replica_of(&self, primary: usize, r: usize) -> usize {
+        debug_assert!(primary < self.primaries && r < self.replicas_per);
+        self.primaries + primary * self.replicas_per + r
+    }
+
+    /// The primary a shard id serves (itself for primaries).
+    #[inline]
+    pub fn primary_of(&self, shard: usize) -> usize {
+        if shard < self.primaries {
+            shard
+        } else {
+            (shard - self.primaries) / self.replicas_per
+        }
+    }
+
+    #[inline]
+    pub fn is_replica(&self, shard: usize) -> bool {
+        shard >= self.primaries
+    }
+
+    /// Read target for `key` under fan-out: `pick % (1 + replicas_per)`
+    /// selects the primary (0) or one of its replicas. With no replicas
+    /// this is `shard_of`.
+    #[inline]
+    pub fn read_target(&self, key: &Key, pick: u64) -> usize {
+        let owner = self.shard_of(key);
+        if self.replicas_per == 0 {
+            return owner;
+        }
+        match (pick % (self.replicas_per as u64 + 1)) as usize {
+            0 => owner,
+            r => self.replica_of(owner, r - 1),
+        }
+    }
+
+    /// Advance to the delta's epoch. Panics on a protocol violation
+    /// (epoch gap, non-divisible growth, out-of-range move target) — all
+    /// coordinator bugs, not runtime conditions.
+    pub fn apply(&mut self, delta: &PlacementDelta) {
+        assert_eq!(
+            delta.epoch,
+            self.epoch + 1,
+            "placement delta epoch {} applied to map at epoch {}",
+            delta.epoch,
+            self.epoch
+        );
+        if let Some(new_active) = delta.grow_active {
+            let new_active = new_active as usize;
+            assert!(
+                new_active >= self.active && new_active <= self.primaries,
+                "grow_active {new_active} out of range {}..={}",
+                self.active,
+                self.primaries
+            );
+            assert!(
+                new_active % self.active == 0,
+                "grow_active {new_active} must be a multiple of the current \
+                 active count {} (modular re-homing is only conservative for \
+                 divisible growth)",
+                self.active
+            );
+            self.active = new_active;
+        }
+        for &(key, dst) in &delta.moves {
+            let dst = dst as usize;
+            assert!(
+                dst < self.primaries,
+                "move of {key:?} targets shard {dst}, but only {} primaries exist",
+                self.primaries
+            );
+            self.overrides.insert(key, dst);
+        }
+        self.epoch = delta.epoch;
+    }
+}
+
+/// One epoch advance: the unit the coordinator announces (wire:
+/// `ToWorker::Placement`) and shards arm (`ToShard::MigrateBegin` carries
+/// the same epoch/at_clock plus each shard's slice of the key movement).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementDelta {
+    /// The epoch this delta creates (previous + 1).
+    pub epoch: u64,
+    /// First worker clock whose flushes route via the new map. Clients
+    /// switch exactly at this flush boundary; shards hand off once their
+    /// table clock commits `at_clock - 1`.
+    pub at_clock: Clock,
+    /// Grow the hash-active primary set to this count (divisible growth).
+    pub grow_active: Option<u32>,
+    /// Explicit per-key moves (hot-key pinning / forced re-homing).
+    pub moves: Vec<(Key, u32)>,
+}
+
+impl PlacementDelta {
+    /// Could this delta change `key`'s owner relative to `prev`? The
+    /// conservativeness contract is the converse: an owner change implies
+    /// `affects` (never the reverse — a move to the current owner is a
+    /// no-op yet "affected").
+    pub fn affects(&self, key: &Key, prev: &PlacementMap) -> bool {
+        if self.moves.iter().any(|(k, _)| k == key) {
+            return true;
+        }
+        match self.grow_active {
+            // A key already pinned by an override ignores hash growth.
+            Some(n) if !prev.overrides.contains_key(key) => {
+                (PlacementMap::hash(key) % n as u64) as usize >= prev.active
+            }
+            _ => false,
+        }
+    }
+}
+
+/// One shard's slice of a migration: what it must send away and what it
+/// must wait for (the payload of its `MigrateBegin`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardPlan {
+    /// Keys leaving this shard, with their destination shard ids.
+    pub outgoing: Vec<(Key, u32)>,
+    /// Keys arriving at this shard (gate replay/read admission on these).
+    pub incoming: Vec<Key>,
+}
+
+/// Plan a delta's row movement over an enumerable key universe: for every
+/// key whose owner changes, records the (source -> destination) transfer
+/// on the primary *and* on each replica chain (replica r of the old owner
+/// hands its copy to replica r of the new owner — each chain's contents
+/// stay internally consistent even in eager mode, where replica bits may
+/// drift from the primary's by arrival order).
+///
+/// Returns one [`ShardPlan`] per shard id (indices `0..total_shards`),
+/// empty plans included so every shard can be armed uniformly.
+pub fn plan_shards(
+    prev: &PlacementMap,
+    delta: &PlacementDelta,
+    keys: impl Iterator<Item = Key>,
+) -> Vec<ShardPlan> {
+    let mut next = prev.clone();
+    next.apply(delta);
+    let mut plans: Vec<ShardPlan> = vec![ShardPlan::default(); prev.total_shards()];
+    for key in keys {
+        let src = prev.shard_of(&key);
+        let dst = next.shard_of(&key);
+        if src == dst {
+            continue;
+        }
+        plans[src].outgoing.push((key, dst as u32));
+        plans[dst].incoming.push(key);
+        for r in 0..prev.replicas_per() {
+            let rsrc = prev.replica_of(src, r);
+            let rdst = prev.replica_of(dst, r);
+            plans[rsrc].outgoing.push((key, rdst as u32));
+            plans[rdst].incoming.push(key);
+        }
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_map_is_deterministic_and_balanced() {
+        let m = PlacementMap::flat(4);
+        let mut counts = [0usize; 4];
+        for t in 0..4u32 {
+            for i in 0..1000u64 {
+                let s = m.shard_of(&(t, i));
+                assert!(s < 4);
+                assert_eq!(s, m.shard_of(&(t, i)), "routing must be deterministic");
+                counts[s] += 1;
+            }
+        }
+        for &c in &counts {
+            // 4000 keys over 4 shards: each within ±25% of fair share.
+            assert!((750..=1250).contains(&c), "imbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_shard_and_zero_rejected() {
+        assert_eq!(PlacementMap::flat(1).shard_of(&(9, 1234)), 0);
+        assert!(std::panic::catch_unwind(|| PlacementMap::flat(0)).is_err());
+        assert!(std::panic::catch_unwind(|| PlacementMap::new(4, 0, 0)).is_err());
+        assert!(std::panic::catch_unwind(|| PlacementMap::new(4, 5, 0)).is_err());
+    }
+
+    #[test]
+    fn divisible_growth_rehomes_only_new_shard_keys() {
+        let before = PlacementMap::new(4, 2, 0);
+        let mut after = before.clone();
+        let delta = PlacementDelta {
+            epoch: 1,
+            at_clock: 5,
+            grow_active: Some(4),
+            moves: vec![],
+        };
+        after.apply(&delta);
+        assert_eq!(after.epoch(), 1);
+        assert_eq!(after.active(), 4);
+        let mut moved = 0;
+        for i in 0..4000u64 {
+            let key = (0u32, i);
+            let (a, b) = (before.shard_of(&key), after.shard_of(&key));
+            if a != b {
+                moved += 1;
+                assert!(b >= 2, "re-homed key must land on a new shard, got {b}");
+                assert!(delta.affects(&key, &before));
+            } else {
+                assert!(b < 2, "an unmoved key kept its old-active home");
+            }
+        }
+        // Roughly half the keys land on the two new shards.
+        assert!((1000..=3000).contains(&moved), "moved {moved} of 4000");
+    }
+
+    #[test]
+    fn non_divisible_growth_is_rejected() {
+        let mut m = PlacementMap::new(6, 2, 0);
+        let delta = PlacementDelta {
+            epoch: 1,
+            at_clock: 1,
+            grow_active: Some(3),
+            moves: vec![],
+        };
+        assert!(std::panic::catch_unwind(move || m.apply(&delta)).is_err());
+    }
+
+    #[test]
+    fn explicit_moves_override_hash_and_persist_across_growth() {
+        let mut m = PlacementMap::new(4, 2, 0);
+        let key = (7u32, 42u64);
+        m.apply(&PlacementDelta {
+            epoch: 1,
+            at_clock: 3,
+            grow_active: None,
+            moves: vec![(key, 3)],
+        });
+        assert_eq!(m.shard_of(&key), 3);
+        // Growth does not disturb a pinned key.
+        m.apply(&PlacementDelta {
+            epoch: 2,
+            at_clock: 9,
+            grow_active: Some(4),
+            moves: vec![],
+        });
+        assert_eq!(m.shard_of(&key), 3);
+    }
+
+    #[test]
+    fn epoch_gap_is_rejected() {
+        let mut m = PlacementMap::flat(2);
+        let delta = PlacementDelta {
+            epoch: 2, // map is at 0: epoch 1 is required next
+            at_clock: 1,
+            grow_active: None,
+            moves: vec![],
+        };
+        assert!(std::panic::catch_unwind(move || m.apply(&delta)).is_err());
+    }
+
+    #[test]
+    fn replica_addressing_roundtrips() {
+        let m = PlacementMap::new(3, 3, 2);
+        assert_eq!(m.total_shards(), 9);
+        for p in 0..3 {
+            assert_eq!(m.primary_of(p), p);
+            assert!(!m.is_replica(p));
+            for r in 0..2 {
+                let id = m.replica_of(p, r);
+                assert!(m.is_replica(id));
+                assert_eq!(m.primary_of(id), p);
+            }
+        }
+        // Replica ids are distinct and cover primaries..total.
+        let mut seen: Vec<usize> = (0..3)
+            .flat_map(|p| (0..2).map(move |r| (p, r)))
+            .map(|(p, r)| m.replica_of(p, r))
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (3..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn read_target_fans_over_primary_and_replicas() {
+        let m = PlacementMap::new(2, 2, 2);
+        let key = (0u32, 5u64);
+        let owner = m.shard_of(&key);
+        let targets: Vec<usize> = (0..6).map(|p| m.read_target(&key, p)).collect();
+        assert_eq!(targets[0], owner);
+        assert_eq!(targets[3], owner);
+        assert_eq!(targets[1], m.replica_of(owner, 0));
+        assert_eq!(targets[2], m.replica_of(owner, 1));
+        // No replicas: always the owner.
+        let flat = PlacementMap::flat(2);
+        for p in 0..5 {
+            assert_eq!(flat.read_target(&key, p), flat.shard_of(&key));
+        }
+    }
+
+    #[test]
+    fn plan_shards_pairs_sources_and_destinations() {
+        let prev = PlacementMap::new(4, 2, 1);
+        let forced = (9u32, 9u64);
+        let forced_src = prev.shard_of(&forced);
+        let delta = PlacementDelta {
+            epoch: 1,
+            at_clock: 4,
+            grow_active: Some(4),
+            moves: vec![(forced, 1 - forced_src as u32)], // hop 0<->1: a move growth would not cause
+        };
+        let keys: Vec<Key> = (0..64u64).map(|i| (0, i)).chain([forced]).collect();
+        let plans = plan_shards(&prev, &delta, keys.iter().copied());
+        assert_eq!(plans.len(), prev.total_shards());
+        let mut next = prev.clone();
+        next.apply(&delta);
+        // Every outgoing entry has a matching incoming entry, and the pair
+        // agrees with the before/after maps — on primaries and replicas.
+        let mut transfers = 0usize;
+        for (src, plan) in plans.iter().enumerate() {
+            for &(key, dst) in &plan.outgoing {
+                transfers += 1;
+                let dst = dst as usize;
+                assert!(plans[dst].incoming.contains(&key), "{key:?} not expected at {dst}");
+                assert_eq!(prev.primary_of(src), prev.shard_of(&key));
+                assert_eq!(prev.primary_of(dst), next.shard_of(&key));
+                // Replica chains map replica r -> replica r.
+                assert_eq!(prev.is_replica(src), prev.is_replica(dst));
+            }
+        }
+        assert!(transfers >= 2, "the forced move and its replica must transfer");
+        // The forced key moved on both its primary and its replica chain.
+        assert!(plans[forced_src].outgoing.iter().any(|(k, _)| *k == forced));
+        assert!(plans[prev.replica_of(forced_src, 0)]
+            .outgoing
+            .iter()
+            .any(|(k, _)| *k == forced));
+    }
+}

@@ -77,6 +77,19 @@ pub trait ClientPolicy: Send {
     fn detach_on_finish(&self) -> bool {
         false
     }
+
+    /// May pulls be fanned out to replicas of the owning shard? True only
+    /// for policies whose entire read admission is the clock window the
+    /// replica itself enforces on the Get (the lazy window family and
+    /// Async): a replica receives the same per-worker FIFO update/clock
+    /// stream as its primary and holds the reply until its own table
+    /// clock satisfies `min_vclock`, so a replica-served read carries
+    /// exactly the model's staleness guarantee. Eager and value-bounded
+    /// families read primary-only — their waves, visibility ledgers and
+    /// bound grants live on the primary.
+    fn replica_reads(&self) -> bool {
+        false
+    }
 }
 
 /// Shard-side consistency contract. One instance per [`ShardCore`]; the

@@ -49,6 +49,13 @@ impl ClientPolicy for WindowClient {
     fn eager_register(&self) -> bool {
         self.eager
     }
+
+    fn replica_reads(&self) -> bool {
+        // Lazy pulls carry the whole admission in `min_row_vclock`, which
+        // a replica enforces identically; ESSP's eager family reads off
+        // primary waves instead.
+        !self.eager
+    }
 }
 
 /// Client policy for Async (Hogwild-flavored baseline): reads never block
@@ -66,6 +73,12 @@ impl ClientPolicy for AsyncClient {
 
     fn refresh_every(&self) -> Option<Clock> {
         Some(self.refresh_every)
+    }
+
+    fn replica_reads(&self) -> bool {
+        // Unbounded reads admit any copy; a replica's is as good as the
+        // primary's.
+        true
     }
 }
 
@@ -116,6 +129,9 @@ mod tests {
         assert!(essp.eager_register());
         assert!(PushServer.pushes_on_commit());
         assert!(!PullServer.pushes_on_commit());
+        // Replica fan-out: lazy pulls may hit replicas, eager reads not.
+        assert!(ssp.replica_reads());
+        assert!(!essp.replica_reads());
     }
 
     #[test]
@@ -125,5 +141,6 @@ mod tests {
         assert_eq!(a.refresh_every(), Some(5));
         assert!(!a.eager_register());
         assert!(!a.reports_norms());
+        assert!(a.replica_reads());
     }
 }

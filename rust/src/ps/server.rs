@@ -28,6 +28,32 @@
 //! initial state. With `ClusterConfig::deterministic` (and the same
 //! seed), a BSP run produces bit-identical final parameters whether it
 //! runs in-process, over loopback TCP, or as a multi-process cluster.
+//!
+//! # Elasticity (the `ps::placement` shard plane)
+//!
+//! The assembled cluster is no longer a fixed shard set:
+//!
+//! * **Provisioned vs active.** `shards` primaries are launched; the
+//!   initial placement hash-routes over `active_shards` of them (default
+//!   all). Idle primaries still receive every ClockTick, so their table
+//!   clocks track the cluster and they can take ownership mid-run.
+//! * **Live migration.** `migration: Some(MigrationSpec)` schedules an
+//!   epoch advance: the coordinator arms every node at launch (direct
+//!   control-plane channels, like Shutdown), clients re-route at the
+//!   `at_clock` flush boundary, and source shards hand rows + staged
+//!   deltas to the new owners over the data plane once their table clock
+//!   commits `at_clock - 1`. Under `deterministic`, a migrated run's
+//!   final parameters are bit-identical to an unmigrated one's: each
+//!   key's updates fold in the same global (clock, worker) order, merely
+//!   on a different shard after the fence.
+//! * **Replicas.** `replicas: N` attaches N pull-only replicas per
+//!   primary (shard ids `shards..shards*(1+N)`), fed the same FIFO
+//!   update/clock stream client-side. Policies whose read admission is
+//!   the clock window fan pulls over primary + replicas
+//!   (`RunReport::replica_hits` counts the fan-out); the replica holds
+//!   each Get until its own table clock meets the model's bound, so the
+//!   staleness guarantee is unchanged. Final `table_rows` merge the
+//!   primaries only; `replica_rows` exposes the replica copies.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -36,7 +62,7 @@ use std::time::{Duration, Instant};
 use super::client::{ClientConfig, ClientStats, PsClient};
 use super::consistency::Consistency;
 use super::msg::{ToShard, ToWorker};
-use super::router::Router;
+use super::placement::{plan_shards, PlacementDelta, PlacementMap};
 use super::shard::{Shard, ShardFinal, ShardStats};
 use super::types::{Clock, Key, RowId, TableId};
 use crate::metrics::convergence::ConvergenceLog;
@@ -62,11 +88,41 @@ where
     }
 }
 
+/// A mid-run placement change (`ClusterConfig::migration`): announced by
+/// the coordinator at launch, it takes effect *live* — clients switch
+/// their routing at the `at_clock` flush boundary while source shards
+/// hand the affected rows (plus staged deltas and clock state) to their
+/// new owners over the data plane. See `ps::placement` for the protocol.
+#[derive(Debug, Clone)]
+pub struct MigrationSpec {
+    /// First worker clock owned by the new placement (must be >= 1).
+    pub at_clock: Clock,
+    /// Grow the hash-active primary set to this count (the current
+    /// active count must divide it, e.g. 2 -> 4).
+    pub grow_to: Option<usize>,
+    /// Explicit per-key moves (hot-key pinning / forced re-homing).
+    pub moves: Vec<(Key, usize)>,
+}
+
 /// Cluster-level configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     pub workers: usize,
+    /// Provisioned primary shards. All of them run (and their table
+    /// clocks advance) from launch; only the *active* ones own keys
+    /// under the initial placement.
     pub shards: usize,
+    /// Primaries the initial placement hash-routes over (0 = all). The
+    /// rest idle until a migration grows the active set onto them.
+    pub active_shards: usize,
+    /// Replica shards per primary. Replicas receive the same per-worker
+    /// FIFO update/clock stream (duplicated client-side) and serve pull
+    /// reads for policies whose admission is the clock window
+    /// (`ClientPolicy::replica_reads`) — hot-read fan-out at the model's
+    /// own staleness bound.
+    pub replicas: usize,
+    /// A live migration to run mid-run, if any.
+    pub migration: Option<MigrationSpec>,
     pub consistency: Consistency,
     pub net: NetConfig,
     pub straggler: StragglerModel,
@@ -101,6 +157,9 @@ impl Default for ClusterConfig {
         Self {
             workers: 4,
             shards: 2,
+            active_shards: 0,
+            replicas: 0,
+            migration: None,
             consistency: Consistency::Essp { s: 1 },
             net: NetConfig::instant(),
             straggler: StragglerModel::None,
@@ -157,8 +216,16 @@ pub struct RunReport {
     pub shard_stats: Vec<ShardStats>,
     pub net_messages: u64,
     pub net_bytes: u64,
-    /// Final table contents (merged across shards).
+    /// Final table contents (merged across the *primary* shards — the
+    /// authoritative copies).
     pub table_rows: HashMap<Key, Vec<f32>>,
+    /// Final contents of each replica shard (empty when `replicas == 0`;
+    /// index = replica shard id - primaries). Under deterministic mode a
+    /// replica's rows are bit-identical to its primary's.
+    pub replica_rows: Vec<HashMap<Key, Vec<f32>>>,
+    /// Pulls served by replica shards, summed over clients (replica read
+    /// fan-out; 0 without replicas).
+    pub replica_hits: u64,
     /// Value-bounded models (VAP/AVAP) only: total reader stall time and
     /// stalled read count, aggregated across the clients (the read gate
     /// is client-side; there is no process-global tracker).
@@ -249,9 +316,16 @@ impl Cluster {
             cfg.workers,
             "need exactly one app instance per worker"
         );
-        let router = Router::new(cfg.shards);
+        let active = if cfg.active_shards == 0 {
+            cfg.shards
+        } else {
+            cfg.active_shards
+        };
+        let placement = PlacementMap::new(cfg.shards, active, cfg.replicas);
+        let total_shards = placement.total_shards();
 
-        // Channels: per-worker and per-shard inboxes.
+        // Channels: per-worker and per-shard-node inboxes (every
+        // provisioned primary AND every replica is a live node).
         let mut worker_tx: Vec<Sender<ToWorker>> = Vec::new();
         let mut worker_rx: Vec<Receiver<ToWorker>> = Vec::new();
         for _ in 0..cfg.workers {
@@ -261,10 +335,48 @@ impl Cluster {
         }
         let mut shard_tx: Vec<Sender<ToShard>> = Vec::new();
         let mut shard_rx: Vec<Receiver<ToShard>> = Vec::new();
-        for _ in 0..cfg.shards {
+        for _ in 0..total_shards {
             let (tx, rx) = channel();
             shard_tx.push(tx);
             shard_rx.push(rx);
+        }
+
+        // Arm the scheduled migration BEFORE any traffic exists, so every
+        // node holds the delta ahead of clock 0 and the epoch switch is a
+        // pure function of worker clocks (the deterministic split). Like
+        // Shutdown, arming uses the coordinator's direct control-plane
+        // channels; the row handoffs themselves ride the data plane.
+        if let Some(mig) = &cfg.migration {
+            assert!(
+                mig.at_clock >= 1,
+                "migration at_clock must be >= 1 (clock-0 flushes route by epoch 0)"
+            );
+            let delta = PlacementDelta {
+                epoch: 1,
+                at_clock: mig.at_clock,
+                grow_active: mig.grow_to.map(|n| n as u32),
+                moves: mig.moves.iter().map(|&(k, d)| (k, d as u32)).collect(),
+            };
+            // The key universe is enumerable from the declared tables —
+            // exactly what the coordinator initializes rows from.
+            let keys = self
+                .tables
+                .iter()
+                .flat_map(|t| (0..t.rows).map(move |r| (t.table, r)));
+            let plans = plan_shards(&placement, &delta, keys);
+            for (id, plan) in plans.into_iter().enumerate() {
+                let _ = shard_tx[id].send(ToShard::MigrateBegin {
+                    epoch: delta.epoch,
+                    at_clock: delta.at_clock,
+                    outgoing: plan.outgoing,
+                    incoming: plan.incoming,
+                });
+            }
+            for tx in &worker_tx {
+                let _ = tx.send(ToWorker::Placement {
+                    delta: delta.clone(),
+                });
+            }
         }
 
         let fabric = Fabric::build(cfg.transport, cfg.net.clone(), worker_tx, shard_tx.clone())
@@ -275,23 +387,40 @@ impl Cluster {
         // length tables are excluded: no uniform length to synthesize).
         let row_len = table_row_lens(&self.tables);
 
-        // Build + initialize shards. Each shard derives its server policy
-        // (clock-gated waves, per-update waves + visibility ledger, or
-        // pull-only) from the consistency config; the core is identical.
-        let mut shards: Vec<Shard> = (0..cfg.shards)
+        // Build + initialize shards. Each primary derives its server
+        // policy (clock-gated waves, per-update waves + visibility
+        // ledger, or pull-only) from the consistency config; replicas run
+        // the same core behind a pull-only policy. Replica chains start
+        // from the same initial rows as their primary.
+        let mut shards: Vec<Shard> = (0..total_shards)
             .map(|id| {
-                Shard::new(
-                    id,
-                    cfg.workers,
-                    cfg.consistency,
-                    fabric.shard_handle(),
-                    row_len.clone(),
-                    cfg.deterministic,
-                )
+                if placement.is_replica(id) {
+                    Shard::replica(
+                        id,
+                        cfg.workers,
+                        fabric.shard_handle(),
+                        row_len.clone(),
+                        cfg.deterministic,
+                    )
+                } else {
+                    Shard::new(
+                        id,
+                        cfg.workers,
+                        cfg.consistency,
+                        fabric.shard_handle(),
+                        row_len.clone(),
+                        cfg.deterministic,
+                    )
+                }
             })
             .collect();
         init_rows(&self.tables, cfg.seed, |key, data| {
-            shards[router.shard_of(&key)].init_row(key, data)
+            let owner = placement.shard_of(&key);
+            for r in 0..placement.replicas_per() {
+                let rep = placement.replica_of(owner, r);
+                shards[rep].init_row(key, data.clone());
+            }
+            shards[owner].init_row(key, data);
         });
 
         // Launch shard threads.
@@ -321,6 +450,7 @@ impl Cluster {
                 let straggler = cfg.straggler.clone();
                 let virtual_clock = cfg.virtual_clock;
                 let seed = cfg.seed;
+                let placement = placement.clone();
                 std::thread::Builder::new()
                     .name(format!("worker-{w}"))
                     .spawn(move || {
@@ -328,7 +458,7 @@ impl Cluster {
                         let mut ps = PsClient::new(
                             w,
                             client_cfg,
-                            router,
+                            placement,
                             net_handle,
                             inbox,
                             row_len,
@@ -406,13 +536,24 @@ impl Cluster {
         for tx in &shard_tx {
             let _ = tx.send(ToShard::Shutdown);
         }
-        let mut shard_stats = vec![ShardStats::default(); cfg.shards];
+        let mut shard_stats = vec![ShardStats::default(); total_shards];
         let mut table_rows = HashMap::new();
-        for _ in 0..cfg.shards {
+        let mut replica_rows: Vec<HashMap<Key, Vec<f32>>> =
+            vec![HashMap::new(); total_shards - cfg.shards];
+        for _ in 0..total_shards {
             let fin = dump_rx.recv().expect("shard final state");
             shard_stats[fin.id] = fin.stats;
-            for (k, row) in fin.rows {
-                table_rows.insert(k, row.data.to_vec());
+            if fin.id < cfg.shards {
+                // Primaries are authoritative; key sets are disjoint
+                // (migration removes a handed-off row from its source).
+                for (k, row) in fin.rows {
+                    table_rows.insert(k, row.data.to_vec());
+                }
+            } else {
+                let slot = fin.id - cfg.shards;
+                for (k, row) in fin.rows {
+                    replica_rows[slot].insert(k, row.data.to_vec());
+                }
             }
         }
         for h in shard_handles {
@@ -432,6 +573,8 @@ impl Cluster {
             )
         });
 
+        let replica_hits = client_stats.iter().map(|s| s.replica_pulls).sum();
+
         RunReport {
             wall,
             staleness,
@@ -443,6 +586,8 @@ impl Cluster {
             net_messages,
             net_bytes,
             table_rows,
+            replica_rows,
+            replica_hits,
             vap_stall,
         }
     }
@@ -580,6 +725,103 @@ mod tests {
                 r.table_rows[&(0, 0)][0],
                 40.0,
                 "{consistency:?} lost updates under deterministic replay"
+            );
+        }
+    }
+
+    #[test]
+    fn replicated_counter_conserves_and_serves_replica_reads() {
+        // BSP re-pulls every clock (the cached copy is always one clock
+        // too stale), so the round-robin fan-out demonstrably reaches
+        // the replicas; conservation must be unaffected, and the final
+        // primaries must not include replica copies.
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers: 3,
+            shards: 2,
+            replicas: 1,
+            consistency: Consistency::Bsp,
+            deterministic: true,
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 4, 1));
+        let apps: Vec<Box<dyn PsApp>> = (0..3)
+            .map(|_| {
+                Box::new(|ps: &mut PsClient, _c: Clock| {
+                    let _ = ps.get((0, 0));
+                    ps.inc((0, 0), &[1.0]);
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let r = cluster.run(apps, 8);
+        assert_eq!(r.table_rows[&(0, 0)][0], 24.0);
+        assert!(r.replica_hits > 0, "no pull was served by a replica");
+        assert_eq!(r.shard_stats.len(), 4, "2 primaries + 2 replicas");
+        // Deterministic mode: a replica's copy of every row it holds is
+        // bit-identical to the primary's authoritative row.
+        assert_eq!(r.replica_rows.len(), 2);
+        let mut replicated = 0usize;
+        for rows in &r.replica_rows {
+            for (k, v) in rows {
+                replicated += 1;
+                let primary = &r.table_rows[k];
+                for (a, b) in v.iter().zip(primary) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "replica row {k:?} diverged");
+                }
+            }
+        }
+        assert!(replicated > 0, "replicas held no rows");
+    }
+
+    #[test]
+    fn migrated_counter_conserves_and_moves_rows() {
+        // 4 provisioned primaries, 2 initially active; at clock 3 the
+        // active set grows to 4 and one key is force-moved. Updates are
+        // conserved and rows demonstrably crossed shards — in
+        // deterministic mode (fenced replay) AND in eager mode, where a
+        // destination may apply post-switch updates before the base row
+        // arrives and the handoff must fold in, not overwrite.
+        for deterministic in [true, false] {
+            let mut cluster = Cluster::new(ClusterConfig {
+                workers: 4,
+                shards: 4,
+                active_shards: 2,
+                migration: Some(MigrationSpec {
+                    at_clock: 3,
+                    grow_to: Some(4),
+                    moves: vec![((0, 0), 3)],
+                }),
+                consistency: Consistency::Bsp,
+                deterministic,
+                ..Default::default()
+            });
+            cluster.add_table(TableSpec::zeros(0, 8, 1));
+            let apps: Vec<Box<dyn PsApp>> = (0..4)
+                .map(|_| {
+                    Box::new(|ps: &mut PsClient, _c: Clock| {
+                        for row in 0..8u64 {
+                            let _ = ps.get((0, row));
+                            ps.inc((0, row), &[1.0]);
+                        }
+                        None
+                    }) as Box<dyn PsApp>
+                })
+                .collect();
+            let r = cluster.run(apps, 8);
+            for row in 0..8u64 {
+                assert_eq!(
+                    r.table_rows[&(0, row)][0], 32.0,
+                    "row {row} lost updates (deterministic={deterministic})"
+                );
+            }
+            let moved_out: u64 = r.shard_stats.iter().map(|s| s.rows_migrated_out).sum();
+            let moved_in: u64 = r.shard_stats.iter().map(|s| s.rows_migrated_in).sum();
+            assert!(moved_out > 0, "migration moved nothing");
+            assert_eq!(moved_out, moved_in, "handoffs lost in flight");
+            // The forced move landed at shard 3.
+            assert!(
+                r.shard_stats[3].rows_migrated_in > 0,
+                "forced move to shard 3 never arrived"
             );
         }
     }

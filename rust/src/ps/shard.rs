@@ -25,6 +25,16 @@
 //!    interested readers) — the wave size — instead of scanning every
 //!    worker's full registration list, and `Register` idempotency is a
 //!    single O(1) bit test.
+//!  * Staged deterministic-replay batches carry a per-key generation
+//!    index, so VAP/AVAP wave previews (`staged_sums`) cost O(keys
+//!    touched x straggle depth) instead of rescanning the backlog.
+//!
+//! The shard is also a node of the elastic shard plane (`ps::placement`):
+//! it can be a live-migration *source* (replay to the fence, hand rows +
+//! staged tails to new owners, then relay late traffic via a forward
+//! table) and/or *destination* (fence replay and reads for in-flight keys
+//! until their `RowHandoff` lands), and [`Shard::replica`] builds the
+//! same core behind a pull-only policy for replica read fan-out.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc::{Receiver, Sender};
@@ -98,12 +108,39 @@ pub struct ShardStats {
     pub updates_applied: u64,
     pub rows_pushed: u64,
     pub push_waves: u64,
+    /// Elastic shard plane: rows this shard handed off / received in a
+    /// live migration, and late traffic relayed via the forward table.
+    pub rows_migrated_out: u64,
+    pub rows_migrated_in: u64,
+    pub gets_forwarded: u64,
+    pub updates_forwarded: u64,
 }
 
 struct PendingGet {
     key: Key,
     worker: WorkerId,
     min_vclock: Clock,
+}
+
+/// State of this shard's role in the (at most one) live migration —
+/// see `ps::placement` for the protocol state machine.
+struct Migration {
+    epoch: u64,
+    /// First clock owned by the new placement: this shard hands off once
+    /// its table clock commits `at_clock - 1`, and (as a destination)
+    /// fences replay/reads at `at_clock - 1` until every expected
+    /// handoff arrived.
+    at_clock: Clock,
+    /// Keys leaving this shard -> destination. After the handoff this
+    /// doubles as the forward table for late traffic.
+    outgoing: FxHashMap<Key, usize>,
+    /// Keys expected via RowHandoff before clock `at_clock` may commit.
+    awaiting: FxHashSet<Key>,
+    handed_off: bool,
+    /// A table-clock advance withheld while handoffs were outstanding;
+    /// released (replay + pending GETs + policy commit hook) by the last
+    /// RowHandoff.
+    held_min: Option<Clock>,
 }
 
 /// Policy-agnostic shard state and mechanism. Owned by its thread after
@@ -138,6 +175,22 @@ pub struct ShardCore {
     deterministic: bool,
     /// Staged (not yet applied) update batches, keyed for sorted replay.
     staged: BTreeMap<(Clock, WorkerId), Vec<(Key, RowDelta)>>,
+    /// Per-key generation index into `staged`: for each key, the
+    /// (clock, worker, row-position) of every staged delta touching it.
+    /// Entries are appended at staging time and pruned when their batch
+    /// replays, so a deterministic VAP/AVAP preview (`staged_sums`) costs
+    /// O(keys touched x straggle depth) instead of rescanning the whole
+    /// backlog per inbound Update (the ROADMAP-flagged quadratic).
+    /// Batches are only ever appended to or removed whole (the one
+    /// exception, the migration handoff extraction, rebuilds the index),
+    /// so stored positions never go stale.
+    staged_index: FxHashMap<Key, Vec<(Clock, WorkerId, u32)>>,
+    /// The live migration this shard participates in, if any.
+    migration: Option<Migration>,
+    /// Keys this shard handed off, permanently mapped to their owners:
+    /// late GETs/updates from clients that switched epochs after sending
+    /// are relayed here. Empty (and O(1) to consult) until a handoff.
+    forwards: FxHashMap<Key, usize>,
     net: TransportHandle,
     /// Uniform row length per table, for serving GETs of rows that no
     /// update or init has materialized yet (replied as zeros).
@@ -163,7 +216,47 @@ impl Shard {
         row_len: HashMap<TableId, usize>,
         deterministic: bool,
     ) -> Self {
-        let policy = consistency.server_policy(workers);
+        Self::with_policy(
+            id,
+            workers,
+            consistency.server_policy(workers),
+            net,
+            row_len,
+            deterministic,
+        )
+    }
+
+    /// A replica shard: the same core (same per-worker FIFO update/clock
+    /// stream, same deterministic replay) behind a pull-only policy
+    /// regardless of the run's consistency model. Replicas never push
+    /// and never track value bounds — they serve GETs under the core's
+    /// SSP wait condition, which is exactly the admission guarantee
+    /// `ClientPolicy::replica_reads` relies on.
+    pub fn replica(
+        id: usize,
+        workers: usize,
+        net: TransportHandle,
+        row_len: HashMap<TableId, usize>,
+        deterministic: bool,
+    ) -> Self {
+        Self::with_policy(
+            id,
+            workers,
+            Box::new(super::policy::window::PullServer),
+            net,
+            row_len,
+            deterministic,
+        )
+    }
+
+    fn with_policy(
+        id: usize,
+        workers: usize,
+        policy: Box<dyn ServerPolicy>,
+        net: TransportHandle,
+        row_len: HashMap<TableId, usize>,
+        deterministic: bool,
+    ) -> Self {
         let track_dirty = policy.pushes_on_commit();
         Self {
             core: ShardCore {
@@ -178,6 +271,9 @@ impl Shard {
                 pending: Vec::new(),
                 deterministic,
                 staged: BTreeMap::new(),
+                staged_index: FxHashMap::default(),
+                migration: None,
+                forwards: FxHashMap::default(),
                 net,
                 row_len,
                 zero_rows: HashMap::new(),
@@ -212,6 +308,11 @@ impl Shard {
                 break;
             }
         }
+        // Safety net: staged updates are normally all replayed by the
+        // final ClockTicks; anything left (e.g. a late forwarded update
+        // from a client that switched epochs after its last tick) is
+        // folded in sorted order rather than silently dropped.
+        self.core.replay_staged_through(Clock::MAX);
         let _ = dump.send(ShardFinal {
             id: self.core.id,
             rows: self.core.rows,
@@ -260,6 +361,32 @@ impl Shard {
                 .policy
                 .on_norm_report(&mut self.core, worker, clock, inf_norm),
             ToShard::Detach { worker } => self.policy.on_detach(&mut self.core, worker),
+            ToShard::MigrateBegin {
+                epoch,
+                at_clock,
+                outgoing,
+                incoming,
+            } => self.core.on_migrate_begin(epoch, at_clock, outgoing, incoming),
+            ToShard::RowHandoff {
+                epoch,
+                key,
+                vclock,
+                fresh,
+                exists,
+                data,
+                staged,
+            } => {
+                // The last expected handoff releases a withheld table-
+                // clock advance: run the policy's commit hook for it,
+                // exactly as a ClockTick-driven advance would.
+                if let Some(new_min) =
+                    self.core
+                        .on_row_handoff(epoch, key, vclock, fresh, exists, data, staged)
+                {
+                    self.policy.on_commit(&mut self.core, new_min);
+                }
+            }
+            ToShard::MigrateCommit { epoch } => self.core.on_migrate_commit(epoch),
             ToShard::Shutdown => return false,
         }
         true
@@ -299,6 +426,43 @@ impl ShardCore {
         );
     }
 
+    /// Send one message to a peer shard (migration handoffs/forwards).
+    pub(crate) fn send_to_shard(&self, shard: usize, msg: ToShard) {
+        self.net.send(
+            NodeId::Shard(self.id),
+            NodeId::Shard(shard),
+            Packet::ToShard(msg),
+        );
+    }
+
+    /// The table clock reads may be served at. Normally the MinClock
+    /// minimum; while this shard still awaits migration handoffs it is
+    /// capped at `at_clock - 1` — staged updates beyond the fence are
+    /// not applied yet, so no reply may claim their clocks.
+    fn visible_clock(&self) -> Clock {
+        let min = self.clocks.min();
+        match &self.migration {
+            Some(m) if !m.awaiting.is_empty() => min.min(m.at_clock - 1),
+            _ => min,
+        }
+    }
+
+    /// Destination shard for a key this shard has already handed off
+    /// (the forward table for late traffic), if any.
+    fn forward_of(&self, key: &Key) -> Option<usize> {
+        if self.forwards.is_empty() {
+            return None;
+        }
+        self.forwards.get(key).copied()
+    }
+
+    /// Is `key` still in flight toward this shard (handoff not arrived)?
+    fn awaiting_handoff(&self, key: &Key) -> bool {
+        self.migration
+            .as_ref()
+            .is_some_and(|m| m.awaiting.contains(key))
+    }
+
     /// All-zeros payload for `table`, shared across replies.
     fn zero_row(&mut self, table: TableId) -> Arc<[f32]> {
         if let Some(z) = self.zero_rows.get(&table) {
@@ -317,7 +481,7 @@ impl ShardCore {
     }
 
     fn reply_row(&mut self, key: Key, worker: WorkerId) {
-        let vclock = self.table_clock();
+        let vclock = self.visible_clock();
         // A GET may legitimately race ahead of row materialization (e.g.
         // the row will first exist when some worker's update creates it):
         // serve zeros of the table's row length rather than panicking.
@@ -338,10 +502,25 @@ impl ShardCore {
     }
 
     fn on_get(&mut self, key: Key, worker: WorkerId, min_vclock: Clock) {
-        if self.table_clock() >= min_vclock {
+        // A key this shard already handed off is answered by its new
+        // owner: relay the GET (the reply goes straight to the worker).
+        if let Some(dst) = self.forward_of(&key) {
+            self.stats.gets_forwarded += 1;
+            self.send_to_shard(
+                dst,
+                ToShard::Get {
+                    key,
+                    worker,
+                    min_vclock,
+                },
+            );
+            return;
+        }
+        if !self.awaiting_handoff(&key) && self.visible_clock() >= min_vclock {
             self.reply_row(key, worker);
         } else {
-            // SSP wait condition: hold the reply until enough clocks commit.
+            // SSP wait condition — or a migrated-in key whose handoff
+            // has not landed: hold the reply.
             self.stats.gets_queued += 1;
             self.pending.push(PendingGet {
                 key,
@@ -364,21 +543,64 @@ impl ShardCore {
 
     /// Process one inbound Update batch: apply it (eager path) or stage
     /// it for deterministic replay. Returns the touched keys (for the
-    /// policy's `on_update` hook).
+    /// policy's `on_update` hook). Rows for keys already handed off in a
+    /// migration are relayed to their new owner instead (a client that
+    /// learned the epoch late); their waves fire there.
     fn on_update(
         &mut self,
         source: WorkerId,
         clock: Clock,
-        rows: Vec<(Key, RowDelta)>,
+        mut rows: Vec<(Key, RowDelta)>,
     ) -> Vec<Key> {
+        if !self.forwards.is_empty() {
+            let mut forwarded: FxHashMap<usize, Vec<(Key, RowDelta)>> = FxHashMap::default();
+            let mut kept = Vec::with_capacity(rows.len());
+            for (key, delta) in rows {
+                match self.forward_of(&key) {
+                    Some(dst) => forwarded.entry(dst).or_default().push((key, delta)),
+                    None => kept.push((key, delta)),
+                }
+            }
+            for (dst, fwd) in forwarded {
+                self.stats.updates_forwarded += fwd.len() as u64;
+                self.send_to_shard(
+                    dst,
+                    ToShard::Update {
+                        worker: source,
+                        clock,
+                        rows: fwd,
+                    },
+                );
+            }
+            rows = kept;
+        }
         if self.deterministic {
             // Defer until the table clock commits `clock`; replay is then
             // sorted by (clock, worker), independent of arrival order.
             let keys: Vec<Key> = rows.iter().map(|(k, _)| *k).collect();
-            self.staged.entry((clock, source)).or_default().extend(rows);
+            self.stage_rows(clock, source, rows);
             return keys;
         }
         self.apply_rows(clock, rows)
+    }
+
+    /// Stage a batch's rows for deterministic replay, maintaining the
+    /// per-key generation index.
+    fn stage_rows(&mut self, clock: Clock, source: WorkerId, rows: Vec<(Key, RowDelta)>) {
+        if rows.is_empty() {
+            return;
+        }
+        let base = self.staged.entry((clock, source)).or_default().len();
+        for (i, (key, _)) in rows.iter().enumerate() {
+            self.staged_index
+                .entry(*key)
+                .or_default()
+                .push((clock, source, (base + i) as u32));
+        }
+        self.staged
+            .get_mut(&(clock, source))
+            .expect("batch just created")
+            .extend(rows);
     }
 
     /// Apply one update batch to the row store (copy-on-write per row).
@@ -437,53 +659,142 @@ impl ShardCore {
     /// so their waves carry everything the store will apply — including
     /// concurrent workers' staged parts, exactly like the eager path's
     /// accumulated store contents. Empty (and O(1)) outside deterministic
-    /// mode. Summation follows the staged map's sorted (clock, worker)
-    /// order, so previews are deterministic too; sparse parts accumulate
-    /// with the same hybrid fold the client's coalescing uses, so a
-    /// below-threshold sum stays sparse.
+    /// mode.
+    ///
+    /// Cost is O(keys touched x straggle depth) via the per-key
+    /// generation index — NOT a rescan of the whole staged backlog, which
+    /// degraded quadratically under a straggler (see the regression test
+    /// `staggered_staged_sums_cost_does_not_rescan_backlog`). Per key,
+    /// entries are folded in (clock, worker, row-position) order —
+    /// exactly the order the sorted commit replay applies them — so
+    /// previews stay bit-deterministic with zero float subtraction;
+    /// sparse parts accumulate with the same hybrid fold the client's
+    /// coalescing uses, so a below-threshold sum stays sparse.
     pub(crate) fn staged_sums(&self, keys: &[Key]) -> FxHashMap<Key, RowDelta> {
         let mut out: FxHashMap<Key, RowDelta> = FxHashMap::default();
         if self.staged.is_empty() {
             return out;
         }
-        let want: FxHashSet<Key> = keys.iter().copied().collect();
-        for rows in self.staged.values() {
-            for (k, d) in rows {
-                if !want.contains(k) {
-                    continue;
+        for key in keys {
+            let Some(entries) = self.staged_index.get(key) else {
+                continue;
+            };
+            if entries.is_empty() {
+                continue;
+            }
+            // Appended in arrival order; fold in replay order.
+            let mut ordered: Vec<(Clock, WorkerId, u32)> = entries.clone();
+            ordered.sort_unstable();
+            let mut acc: Option<RowDelta> = None;
+            for (c, w, i) in ordered {
+                let (k, d) = &self.staged[&(c, w)][i as usize];
+                debug_assert_eq!(k, key, "staged index points at the wrong row");
+                match &mut acc {
+                    Some(a) => a.add_assign(d),
+                    None => acc = Some(d.clone()),
                 }
-                out.entry(*k)
-                    .and_modify(|acc| acc.add_assign(d))
-                    .or_insert_with(|| d.clone());
+            }
+            if let Some(a) = acc {
+                out.insert(*key, a);
             }
         }
         out
     }
 
-    /// Commit `worker`'s `clock`; on a table-clock advance, replay staged
-    /// updates in sorted order and serve unblocked GETs, then report the
-    /// new minimum (the caller runs the policy's commit hook after).
+    /// Commit `worker`'s `clock`; on a table-clock advance, run the
+    /// commit-side effects (staged replay, pending GETs) subject to the
+    /// migration fences, and report the clock the policy's commit hook
+    /// should observe (None while the advance is withheld awaiting
+    /// handoffs — the final RowHandoff releases it).
     fn on_tick(&mut self, worker: WorkerId, clock: Clock) -> Option<Clock> {
         let new_min = self.clocks.commit(worker, clock)?;
+        self.advance(new_min)
+    }
+
+    fn advance(&mut self, new_min: Clock) -> Option<Clock> {
+        // Source fence: once every worker has committed at_clock-1, all
+        // pre-migration updates are here — replay through the fence,
+        // then hand the migrated rows (plus their staged tails) off.
+        let fence = self
+            .migration
+            .as_ref()
+            .filter(|m| !m.handed_off)
+            .map(|m| m.at_clock);
+        if let Some(at) = fence {
+            if new_min >= at - 1 {
+                self.replay_staged_through(at - 1);
+                self.do_handoff();
+            }
+        }
+        // Destination fence: hold the visible advance at at_clock-1
+        // while expected handoffs are outstanding; a staged update with
+        // clock >= at_clock must never apply before the base row it
+        // lands on has arrived. (Wave soundness for in-flight keys needs
+        // no hold: push_wave defers them, and a shard's announcements
+        // only ever certify copies that shard itself served — see
+        // `RowCache`'s source tag.)
+        let hold = match self.migration.as_mut() {
+            Some(m) if !m.awaiting.is_empty() && new_min >= m.at_clock => {
+                m.held_min = Some(m.held_min.unwrap_or(new_min).max(new_min));
+                Some(m.at_clock - 1)
+            }
+            _ => None,
+        };
+        if let Some(visible) = hold {
+            self.replay_staged_through(visible);
+            self.serve_pending(visible);
+            return None;
+        }
         // Deterministic mode: every update with clock <= new_min has
         // arrived (Update precedes ClockTick on each FIFO link), so
         // replay them in sorted (clock, worker) order before serving
         // reads or firing the wave for this advance.
+        self.replay_staged_through(new_min);
+        self.serve_pending(new_min);
+        Some(new_min)
+    }
+
+    /// Replay staged batches with clock <= `limit` in sorted
+    /// (clock, worker) order, pruning their index entries.
+    pub(crate) fn replay_staged_through(&mut self, limit: Clock) {
         while let Some((&(c, w), _)) = self.staged.first_key_value() {
-            if c > new_min {
+            if c > limit {
                 break;
             }
             let rows = self.staged.remove(&(c, w)).unwrap();
+            for (key, _) in &rows {
+                let mut emptied = false;
+                if let Some(ix) = self.staged_index.get_mut(key) {
+                    ix.retain(|e| !(e.0 == c && e.1 == w));
+                    emptied = ix.is_empty();
+                }
+                if emptied {
+                    self.staged_index.remove(key);
+                }
+            }
             self.apply_rows(c, rows);
         }
-        self.serve_pending(new_min);
-        Some(new_min)
+        debug_assert!(
+            !self.staged.is_empty() || self.staged_index.is_empty(),
+            "staged index leaked entries past an empty backlog"
+        );
     }
 
     fn serve_pending(&mut self, table_clock: Clock) {
         let mut still = Vec::new();
         for p in std::mem::take(&mut self.pending) {
-            if table_clock >= p.min_vclock {
+            if let Some(dst) = self.forward_of(&p.key) {
+                // The key moved while the GET waited: relay it.
+                self.stats.gets_forwarded += 1;
+                self.send_to_shard(
+                    dst,
+                    ToShard::Get {
+                        key: p.key,
+                        worker: p.worker,
+                        min_vclock: p.min_vclock,
+                    },
+                );
+            } else if !self.awaiting_handoff(&p.key) && table_clock >= p.min_vclock {
                 self.reply_row(p.key, p.worker);
             } else {
                 still.push(p);
@@ -501,7 +812,20 @@ impl ShardCore {
     pub fn push_wave(&mut self, vclock: Clock) {
         let mut per_worker: Vec<Vec<PushRow>> = Vec::new();
         per_worker.resize_with(self.workers, Vec::new);
+        let mut deferred: Vec<Key> = Vec::new();
         for key in self.dirty.drain() {
+            // A migrated-in key whose handoff has not landed holds only a
+            // partial fold (eager mode applies post-switch updates onto
+            // zeros): defer it to the post-handoff wave rather than
+            // pushing partial contents as authoritative.
+            if self
+                .migration
+                .as_ref()
+                .is_some_and(|m| m.awaiting.contains(&key))
+            {
+                deferred.push(key);
+                continue;
+            }
             let Some(readers) = self.readers.get(&key) else {
                 continue;
             };
@@ -516,6 +840,9 @@ impl ShardCore {
                     fresh,
                 });
             }
+        }
+        for key in deferred {
+            self.dirty.insert(key);
         }
         for (worker, rows) in per_worker.into_iter().enumerate() {
             if self.reg_count[worker] == 0 {
@@ -533,6 +860,227 @@ impl ShardCore {
                     rows,
                 },
             );
+        }
+    }
+
+    // ------------------------------------------------- live migration
+
+    /// Arm a migration (see `ps::placement` for the full state machine).
+    /// Idempotent for a repeated arm of the same epoch (the multi-process
+    /// bootstrap self-arms; an in-process coordinator may arm again).
+    fn on_migrate_begin(
+        &mut self,
+        epoch: u64,
+        at_clock: Clock,
+        outgoing: Vec<(Key, u32)>,
+        incoming: Vec<Key>,
+    ) {
+        if let Some(m) = &self.migration {
+            if m.epoch == epoch {
+                return;
+            }
+            assert!(
+                m.handed_off && m.awaiting.is_empty(),
+                "shard {}: migration to epoch {epoch} armed while epoch {} \
+                 is still in flight",
+                self.id,
+                m.epoch
+            );
+        }
+        self.migration = Some(Migration {
+            epoch,
+            at_clock,
+            outgoing: outgoing.into_iter().map(|(k, d)| (k, d as usize)).collect(),
+            awaiting: incoming.into_iter().collect(),
+            handed_off: false,
+            held_min: None,
+        });
+        // A Begin arriving after the fence already passed (late arm in a
+        // non-deterministic run): hand off immediately with whatever the
+        // rows hold now — conserving; the clean clock split additionally
+        // needs the announce to precede the fence, which the coordinator
+        // provides by arming at launch.
+        if self.clocks.min() >= at_clock - 1 {
+            self.do_handoff();
+        }
+    }
+
+    /// Source side of the fence: ship every outgoing key's row (the fold
+    /// through the fence), its freshness, and its staged tail (deltas
+    /// with clock >= at_clock) to the new owner; then turn the key set
+    /// into the permanent forward table for late traffic. Called exactly
+    /// once, with staged updates below the fence already replayed.
+    fn do_handoff(&mut self) {
+        let (epoch, outgoing) = match self.migration.as_mut() {
+            Some(m) if !m.handed_off => {
+                m.handed_off = true;
+                (m.epoch, m.outgoing.clone())
+            }
+            _ => return,
+        };
+        if outgoing.is_empty() {
+            return;
+        }
+        // Extract the staged tails of migrated keys; the destination
+        // merges them into its own (clock, worker)-sorted replay, so the
+        // global fold order per key is unchanged by the move.
+        let mut staged_out: FxHashMap<Key, Vec<(Clock, WorkerId, RowDelta)>> =
+            FxHashMap::default();
+        for (&(c, w), rows) in self.staged.iter_mut() {
+            if rows.iter().all(|(k, _)| !outgoing.contains_key(k)) {
+                continue;
+            }
+            let drained = std::mem::take(rows);
+            let mut kept = Vec::with_capacity(drained.len());
+            for (k, d) in drained {
+                if outgoing.contains_key(&k) {
+                    staged_out.entry(k).or_default().push((c, w, d));
+                } else {
+                    kept.push((k, d));
+                }
+            }
+            *rows = kept;
+        }
+        // Row positions shifted in the drained batches: rebuild the
+        // per-key index once (O(backlog); only ever paid at a handoff).
+        self.rebuild_staged_index();
+        // Deterministic send order (sorted keys), so two runs emit
+        // byte-identical handoff streams.
+        let mut ordered: Vec<(Key, usize)> = outgoing.iter().map(|(k, d)| (*k, *d)).collect();
+        ordered.sort_unstable();
+        let mut dsts: Vec<usize> = ordered.iter().map(|(_, d)| *d).collect();
+        dsts.sort_unstable();
+        dsts.dedup();
+        let vclock = self.visible_clock();
+        for (key, dst) in ordered {
+            let (exists, data, fresh) = match self.rows.remove(&key) {
+                Some(row) => (true, row.data, row.fresh),
+                None => (false, Vec::<f32>::new().into(), super::types::NEVER),
+            };
+            if let Some(readers) = self.readers.remove(&key) {
+                // Readers re-register with the new owner at their epoch
+                // switch; keep the per-worker counts consistent.
+                for w in readers.iter() {
+                    self.reg_count[w] -= 1;
+                }
+            }
+            self.dirty.remove(&key);
+            let staged = staged_out.remove(&key).unwrap_or_default();
+            self.stats.rows_migrated_out += 1;
+            self.forwards.insert(key, dst);
+            self.send_to_shard(
+                dst,
+                ToShard::RowHandoff {
+                    epoch,
+                    key,
+                    vclock,
+                    fresh,
+                    exists,
+                    data,
+                    staged,
+                },
+            );
+        }
+        for dst in dsts {
+            self.send_to_shard(dst, ToShard::MigrateCommit { epoch });
+        }
+        // GETs queued for migrated keys relay to the new owner (the
+        // forward table is live now); others re-evaluate harmlessly.
+        let visible = self.visible_clock();
+        self.serve_pending(visible);
+    }
+
+    /// Destination side: install one migrated key. Returns the released
+    /// table clock if this was the last awaited handoff and a commit
+    /// advance was withheld (the caller fires the policy's commit hook).
+    fn on_row_handoff(
+        &mut self,
+        epoch: u64,
+        key: Key,
+        _vclock: Clock,
+        fresh: Clock,
+        exists: bool,
+        data: Arc<[f32]>,
+        staged: Vec<(Clock, WorkerId, RowDelta)>,
+    ) -> Option<Clock> {
+        let expected = match self.migration.as_mut() {
+            Some(m) if m.epoch == epoch => m.awaiting.remove(&key),
+            _ => false,
+        };
+        if !expected {
+            eprintln!(
+                "shard {}: ignoring unexpected row handoff for {key:?} (epoch {epoch})",
+                self.id
+            );
+            return None;
+        }
+        // A key that once left this shard has come home: retire the
+        // stale forward so reads stop bouncing.
+        self.forwards.remove(&key);
+        self.stats.rows_migrated_in += 1;
+        if exists {
+            if self.track_dirty {
+                // The next clock wave must carry the row to (re-)
+                // registered readers here.
+                self.dirty.insert(key);
+            }
+            match self.rows.get_mut(&key) {
+                // Eager (non-deterministic) mode may already have applied
+                // post-switch updates to this key, materialized from
+                // zeros. Updates are additive, so the handed-off base
+                // FOLDS in rather than replacing — nothing is lost. In
+                // deterministic mode the fence guarantees this arm is
+                // never taken (staged updates beyond the fence have not
+                // replayed), so the install stays bit-exact.
+                Some(row) => {
+                    if Arc::get_mut(&mut row.data).is_none() {
+                        let detached: Arc<[f32]> = row.data.iter().copied().collect();
+                        row.data = detached;
+                    }
+                    let out = Arc::get_mut(&mut row.data).expect("unique after copy-on-write");
+                    for (a, b) in out.iter_mut().zip(data.iter()) {
+                        *a += b;
+                    }
+                    row.fresh = row.fresh.max(fresh);
+                }
+                None => {
+                    self.rows.insert(key, Row { data, fresh });
+                }
+            }
+        }
+        for (c, w, d) in staged {
+            self.stage_rows(c, w, vec![(key, d)]);
+        }
+        let release = match self.migration.as_mut() {
+            Some(m) if m.awaiting.is_empty() => m.held_min.take(),
+            _ => None,
+        };
+        match release {
+            Some(new_min) => self.advance(new_min),
+            None => {
+                // No withheld commit, but a queued GET for this key may
+                // be serveable now.
+                let visible = self.visible_clock();
+                self.serve_pending(visible);
+                None
+            }
+        }
+    }
+
+    /// End-marker after one source's last handoff (FIFO guarantees the
+    /// handoffs preceded it). The gate is keyed by individual handoffs,
+    /// so this is informational.
+    fn on_migrate_commit(&mut self, _epoch: u64) {}
+
+    fn rebuild_staged_index(&mut self) {
+        self.staged_index.clear();
+        for (&(c, w), rows) in self.staged.iter() {
+            for (i, (key, _)) in rows.iter().enumerate() {
+                self.staged_index
+                    .entry(*key)
+                    .or_default()
+                    .push((c, w, i as u32));
+            }
         }
     }
 }
@@ -995,6 +1543,239 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    /// Fixture with one worker inbox and TWO shard inboxes: the shard
+    /// under test is id 0; the second sink captures shard->shard
+    /// migration traffic addressed to shard 1.
+    fn mig_fixture(
+        workers: usize,
+        deterministic: bool,
+    ) -> (
+        Shard,
+        std::sync::mpsc::Receiver<ToWorker>,
+        std::sync::mpsc::Receiver<ToShard>,
+        SimNet,
+    ) {
+        let (wtx, wrx) = channel();
+        let (stx0, _srx0) = channel();
+        let (stx1, srx1) = channel();
+        let net = SimNet::new(NetConfig::instant(), vec![wtx], vec![stx0, stx1]);
+        let shard = Shard::new(
+            0,
+            workers,
+            Consistency::Ssp { s: 1 },
+            TransportHandle::new(net.handle()),
+            HashMap::new(),
+            deterministic,
+        );
+        (shard, wrx, srx1, net)
+    }
+
+    #[test]
+    fn migration_source_hands_off_row_and_staged_tail_then_forwards() {
+        let (mut shard, _wrx, srx1, _net) = mig_fixture(2, true);
+        shard.init_row((0, 7), vec![1.0]);
+        shard.init_row((0, 8), vec![5.0]);
+        // Arm: key (0,7) leaves for shard 1 at clock 2.
+        shard.handle(ToShard::MigrateBegin {
+            epoch: 1,
+            at_clock: 2,
+            outgoing: vec![((0, 7), 1)],
+            incoming: vec![],
+        });
+        // Pre-fence updates (clocks 0 and 1) for the migrating key...
+        for c in 0..2 {
+            shard.handle(ToShard::Update {
+                worker: 0,
+                clock: c,
+                rows: vec![((0, 7), vec![1.0].into())],
+            });
+        }
+        // ...plus a post-fence update from a client that has not switched
+        // epochs yet: it must travel as the handoff's staged tail.
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 2,
+            rows: vec![((0, 7), vec![100.0].into())],
+        });
+        for w in 0..2 {
+            shard.handle(ToShard::ClockTick { worker: w, clock: 1 });
+        }
+        match srx1.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToShard::RowHandoff {
+                epoch,
+                key,
+                vclock,
+                exists,
+                data,
+                staged,
+                ..
+            } => {
+                assert_eq!(epoch, 1);
+                assert_eq!(key, (0, 7));
+                assert_eq!(vclock, 1, "handoff must carry the fence fold's clock");
+                assert!(exists);
+                assert_eq!(&data[..], &[3.0], "fold through the fence: 1 + 1 + 1");
+                assert_eq!(staged.len(), 1);
+                assert_eq!((staged[0].0, staged[0].1), (2, 0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match srx1.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToShard::MigrateCommit { epoch } => assert_eq!(epoch, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        // The migrated row is gone, the kept row intact.
+        assert!(shard.row(&(0, 7)).is_none());
+        assert_eq!(&shard.row(&(0, 8)).unwrap().data[..], &[5.0]);
+        assert_eq!(shard.stats().rows_migrated_out, 1);
+        // Late traffic relays through the forward table.
+        shard.handle(ToShard::Get {
+            key: (0, 7),
+            worker: 0,
+            min_vclock: -1,
+        });
+        match srx1.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToShard::Get { key, worker, .. } => {
+                assert_eq!(key, (0, 7));
+                assert_eq!(worker, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        shard.handle(ToShard::Update {
+            worker: 1,
+            clock: 2,
+            rows: vec![
+                ((0, 7), vec![7.0].into()),
+                ((0, 8), vec![1.0].into()),
+            ],
+        });
+        match srx1.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToShard::Update { worker, clock, rows } => {
+                assert_eq!((worker, clock), (1, 2));
+                assert_eq!(rows.len(), 1, "only the migrated key is relayed");
+                assert_eq!(rows[0].0, (0, 7));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(shard.stats().gets_forwarded, 1);
+        assert_eq!(shard.stats().updates_forwarded, 1);
+    }
+
+    #[test]
+    fn migration_destination_fences_until_handoff_then_releases() {
+        let (mut shard, wrx, _srx1, _net) = mig_fixture(2, true);
+        shard.handle(ToShard::MigrateBegin {
+            epoch: 1,
+            at_clock: 2,
+            outgoing: vec![],
+            incoming: vec![(0, 7)],
+        });
+        // Post-switch updates from both workers for the incoming key.
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 2,
+            rows: vec![((0, 7), vec![10.0].into())],
+        });
+        shard.handle(ToShard::Update {
+            worker: 1,
+            clock: 2,
+            rows: vec![((0, 7), vec![1.0].into())],
+        });
+        // Every worker commits clock 2 — but the advance must be
+        // withheld: the base row has not arrived.
+        for w in 0..2 {
+            shard.handle(ToShard::ClockTick { worker: w, clock: 2 });
+        }
+        assert!(
+            shard.row(&(0, 7)).is_none(),
+            "staged clock-2 updates applied before the base row arrived"
+        );
+        // A read for the in-flight key queues regardless of its floor.
+        shard.handle(ToShard::Get {
+            key: (0, 7),
+            worker: 0,
+            min_vclock: -1,
+        });
+        assert!(wrx.try_recv().is_err(), "GET served before the handoff");
+        // The handoff lands: base row installs, the staged tail replays
+        // on top in sorted order, the held commit releases, the queued
+        // GET serves at the released clock.
+        shard.handle(ToShard::RowHandoff {
+            epoch: 1,
+            key: (0, 7),
+            vclock: 1,
+            fresh: 1,
+            exists: true,
+            data: vec![5.0].into(),
+            staged: vec![],
+        });
+        assert_eq!(&shard.row(&(0, 7)).unwrap().data[..], &[16.0]);
+        match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Row { data, vclock, .. } => {
+                assert_eq!(&data[..], &[16.0]);
+                assert_eq!(vclock, 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(shard.stats().rows_migrated_in, 1);
+    }
+
+    #[test]
+    fn staggered_staged_sums_cost_does_not_rescan_backlog() {
+        // Straggler shape: worker 0 never commits while worker 1 races
+        // ahead, growing the staged backlog to hundreds of batches (30k
+        // rows). Deterministic VAP/AVAP waves preview touched keys via
+        // staged_sums on EVERY inbound update; the old implementation
+        // rescanned the whole backlog per preview (quadratic under a
+        // straggler — this loop took minutes in a debug build), the
+        // per-key generation index makes it O(straggle depth).
+        let (mut shard, _wrx, _net) = det_shard(2, true);
+        let hot: Key = (0, 0);
+        shard.init_row(hot, vec![0.0]);
+        let batches: usize = 300;
+        let wide: usize = 100;
+        for c in 0..batches as Clock {
+            let mut rows: Vec<(Key, RowDelta)> = vec![(hot, vec![1.0].into())];
+            for r in 0..wide as u64 {
+                rows.push((
+                    (1, c as u64 * wide as u64 + r),
+                    RowDelta::sparse(16, vec![(3, 1.0)]),
+                ));
+            }
+            shard.handle(ToShard::Update {
+                worker: 1,
+                clock: c,
+                rows,
+            });
+        }
+        let t0 = std::time::Instant::now();
+        let mut last = 0.0f32;
+        for _ in 0..2000 {
+            let sums = shard.core().staged_sums(&[hot]);
+            last = match &sums[&hot] {
+                RowDelta::Dense(v) => v[0],
+                other => panic!("dense accumulation expected, got {other:?}"),
+            };
+        }
+        assert_eq!(last, batches as f32, "preview lost staged mass");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "staged preview is rescanning the backlog: {:?}",
+            t0.elapsed()
+        );
+        // Replay drains the index with nothing lost (no float
+        // subtraction anywhere: the commit applies the original deltas).
+        shard.handle(ToShard::ClockTick {
+            worker: 0,
+            clock: batches as Clock - 1,
+        });
+        shard.handle(ToShard::ClockTick {
+            worker: 1,
+            clock: batches as Clock - 1,
+        });
+        assert_eq!(shard.row(&hot).unwrap().data[0], batches as f32);
     }
 
     #[test]

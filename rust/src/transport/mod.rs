@@ -31,11 +31,14 @@ use crate::ps::msg::{ToShard, ToWorker};
 use crate::sim::net::{NetConfig, SimNet};
 use self::tcp::{LocalSink, TcpTransport};
 
-/// A network endpoint: worker `w` or shard `s`.
+/// A network endpoint: worker `w`, shard `s`, or the cluster coordinator
+/// (the launcher; source of migration control messages, never a
+/// destination).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum NodeId {
     Worker(usize),
     Shard(usize),
+    Coordinator,
 }
 
 /// Payload variants carried by any transport.

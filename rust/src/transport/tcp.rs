@@ -4,9 +4,12 @@
 //!
 //! Topology mirrors the PS protocol: workers dial shards (one connection
 //! per (worker, shard) link — the unit of FIFO ordering the protocol
-//! requires), shards never dial anyone. Each connection carries both
-//! directions: the dialing side's `ToShard` traffic and the accepting
-//! side's `ToWorker` replies/waves.
+//! requires). When a migration is armed, shards additionally dial their
+//! higher-indexed peers so `RowHandoff` traffic has a FIFO link; a
+//! destination hosted by the *same* process (the in-process TCP fabric
+//! hosts every shard on one endpoint) is delivered directly, no socket.
+//! Each connection carries both directions: the dialing side's `ToShard`
+//! traffic and the accepting side's replies.
 //!
 //! Threads per endpoint:
 //!   * server only: one acceptor (non-blocking poll so shutdown can join it),
@@ -150,6 +153,21 @@ impl Transport for Inner {
         self.stats
             .bytes
             .fetch_add(bytes as u64, Ordering::AcqRel);
+        // Same-process peer: deliver straight to the hosted inbox, no
+        // socket. This is what carries shard->shard migration handoffs
+        // and coordinator control messages inside the in-process TCP
+        // fabric (which hosts every shard on one endpoint); a given
+        // (src, dst) pair is always local or always remote, so FIFO per
+        // link is preserved.
+        if let Some(sink) = self.local.get(&dst) {
+            if sink.deliver(packet) {
+                self.stats.delivered.fetch_add(1, Ordering::AcqRel);
+            } else {
+                self.stats.dropped.fetch_add(1, Ordering::AcqRel);
+                eprintln!("transport: local packet for {dst:?} has mismatched direction");
+            }
+            return;
+        }
         let q = self.routes.read().unwrap().get(&(src, dst)).cloned();
         match q {
             // Blocking send = the backpressure path: a full peer queue
@@ -225,6 +243,17 @@ impl TcpTransport {
         conns: &[(usize, usize, SocketAddr)],
         timeout: Duration,
     ) -> Result<Self> {
+        let t = Self::endpoint(locals);
+        for &(w, s, addr) in conns {
+            t.dial(NodeId::Worker(w), NodeId::Shard(s), addr, timeout)
+                .with_context(|| format!("worker {w}: connecting to shard {s} at {addr}"))?;
+        }
+        Ok(t)
+    }
+
+    /// A dial-only endpoint with no listener (the client side above, and
+    /// shard processes dialing their migration peers).
+    pub fn endpoint(locals: Vec<(NodeId, LocalSink)>) -> Self {
         let inner = Arc::new(Inner {
             routes: RwLock::new(FxHashMap::default()),
             closed: AtomicBool::new(false),
@@ -233,30 +262,40 @@ impl TcpTransport {
             stats: Arc::new(TcpStats::default()),
             events: None,
         });
-        let threads = Arc::new(Mutex::new(Vec::new()));
-        for &(w, s, addr) in conns {
-            let mut stream = connect_with_retry(addr, timeout)
-                .with_context(|| format!("worker {w}: connecting to shard {s} at {addr}"))?;
-            stream.set_nodelay(true)?;
-            // Bound the ack wait: a connect can succeed against something
-            // that is not a shard and never answers.
-            stream.set_read_timeout(Some(HELLO_TIMEOUT))?;
-            wire::write_hello(&mut stream, NodeId::Worker(w), NodeId::Shard(s))?;
-            let (ack_src, ack_dst) = wire::read_hello(&mut stream)
-                .with_context(|| format!("handshake ack from shard {s} at {addr}"))?;
-            stream.set_read_timeout(None)?;
-            ensure!(
-                ack_src == NodeId::Shard(s) && ack_dst == NodeId::Worker(w),
-                "peer at {addr} identified as {ack_src:?} -> {ack_dst:?}, expected \
-                 shard {s} -> worker {w} (cluster address list mismatch?)"
-            );
-            register_conn(stream, NodeId::Worker(w), NodeId::Shard(s), &inner, &threads)?;
-        }
-        Ok(TcpTransport {
+        TcpTransport {
             inner,
-            threads,
+            threads: Arc::new(Mutex::new(Vec::new())),
             stop: Arc::new(AtomicBool::new(false)),
-        })
+        }
+    }
+
+    /// Dial one (src -> dst) link to a peer endpoint, with connect
+    /// retries until `timeout`. Used for every worker->shard link and —
+    /// when a migration is armed — for shard->shard handoff links (a
+    /// shard dials every higher-indexed peer, so each unordered pair
+    /// shares one connection carrying both directions).
+    pub fn dial(
+        &self,
+        src: NodeId,
+        dst: NodeId,
+        addr: SocketAddr,
+        timeout: Duration,
+    ) -> Result<()> {
+        let mut stream = connect_with_retry(addr, timeout)?;
+        stream.set_nodelay(true)?;
+        // Bound the ack wait: a connect can succeed against something
+        // that is not an essptable peer and never answers.
+        stream.set_read_timeout(Some(HELLO_TIMEOUT))?;
+        wire::write_hello(&mut stream, src, dst)?;
+        let (ack_src, ack_dst) = wire::read_hello(&mut stream)
+            .with_context(|| format!("handshake ack from {dst:?} at {addr}"))?;
+        stream.set_read_timeout(None)?;
+        ensure!(
+            ack_src == dst && ack_dst == src,
+            "peer at {addr} identified as {ack_src:?} -> {ack_dst:?}, expected \
+             {dst:?} -> {src:?} (cluster address list mismatch?)"
+        );
+        register_conn(stream, src, dst, &self.inner, &self.threads)
     }
 
     /// Cloneable send handle for clients/shards.
@@ -385,17 +424,40 @@ fn setup_server_conn(
     // connection (port scanner, health check) cannot stall the whole
     // cluster bootstrap behind one silent peer.
     stream.set_read_timeout(Some(HELLO_TIMEOUT))?;
-    let (peer, target) = wire::read_hello(&mut stream).context("reading peer handshake")?;
+    let (peer, target) = match wire::read_hello_outcome(&mut stream)
+        .context("reading peer handshake")?
+    {
+        wire::HelloOutcome::Peer(src, dst) => (src, dst),
+        wire::HelloOutcome::BadVersion(v) => {
+            // Loud negotiation: echo the dialer's version plus our
+            // supported range before closing, so the mixed-version
+            // cluster fails with a diagnosis on BOTH ends.
+            let _ = wire::write_version_reject(&mut stream, v);
+            anyhow::bail!(
+                "peer speaks wire v{v}, this binary supports v{}..v{}; \
+                 sent version reject",
+                wire::VERSION_MIN,
+                wire::VERSION_MAX
+            );
+        }
+    };
     ensure!(
         inner.local.contains_key(&target),
         "handshake targets {target:?}, which is not hosted here"
     );
     // Shard-side state (MinClock, registration counts) is sized for
     // `workers`: an out-of-range id must be refused at the door, not
-    // allowed to panic the shard thread later.
+    // allowed to panic the shard thread later. Shard peers (migration
+    // handoff links) are accepted as long as they are not impersonating
+    // a locally-hosted shard.
     ensure!(
-        matches!(peer, NodeId::Worker(w) if w < workers),
-        "handshake from {peer:?}, expected a worker id below {workers}"
+        match peer {
+            NodeId::Worker(w) => w < workers,
+            NodeId::Shard(_) => !inner.local.contains_key(&peer),
+            NodeId::Coordinator => false,
+        },
+        "handshake from {peer:?}, expected a worker id below {workers} or a \
+         remote shard peer"
     );
     // Clear the handshake timeout before the reader thread exists: the
     // option lives on the shared socket description, and a reader poll
@@ -670,6 +732,114 @@ mod tests {
         );
         assert_eq!(client.stats().dropped(), 1);
         teardown(client, server);
+    }
+
+    #[test]
+    fn version_mismatch_gets_a_loud_reject_from_the_acceptor() {
+        let (stx, _srx) = channel::<ToShard>();
+        let (server, addr) = TcpTransport::server(
+            "127.0.0.1:0",
+            vec![(NodeId::Shard(0), LocalSink::Shard(stx))],
+            None,
+            1,
+        )
+        .unwrap();
+        {
+            use std::io::Write as _;
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut hello = Vec::new();
+            wire::write_hello(&mut hello, NodeId::Worker(0), NodeId::Shard(0)).unwrap();
+            hello[8..10].copy_from_slice(&999u16.to_le_bytes());
+            s.write_all(&hello).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+            // The acceptor answers with the reject blob, which read_hello
+            // turns into an error naming both versions and our range.
+            let err = wire::read_hello(&mut s).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("rejected by peer"), "{msg}");
+            assert!(msg.contains("v999"), "{msg}");
+            assert!(
+                msg.contains(&format!("v{}..v{}", wire::VERSION_MIN, wire::VERSION_MAX)),
+                "{msg}"
+            );
+        }
+        server.close_send();
+        server.join();
+    }
+
+    #[test]
+    fn shard_peers_can_dial_and_exchange_handoff_traffic() {
+        // Two "shard processes": shard 1 dials shard 0 and sends a
+        // migration end-marker across the real socket.
+        let (stx0, srx0) = channel::<ToShard>();
+        let (server0, addr0) = TcpTransport::server(
+            "127.0.0.1:0",
+            vec![(NodeId::Shard(0), LocalSink::Shard(stx0))],
+            None,
+            4,
+        )
+        .unwrap();
+        let (stx1, _srx1) = channel::<ToShard>();
+        let (server1, _addr1) = TcpTransport::server(
+            "127.0.0.1:0",
+            vec![(NodeId::Shard(1), LocalSink::Shard(stx1))],
+            None,
+            4,
+        )
+        .unwrap();
+        server1
+            .dial(
+                NodeId::Shard(1),
+                NodeId::Shard(0),
+                addr0,
+                Duration::from_secs(5),
+            )
+            .unwrap();
+        server1.handle().send(
+            NodeId::Shard(1),
+            NodeId::Shard(0),
+            Packet::ToShard(ToShard::MigrateCommit { epoch: 7 }),
+        );
+        match srx0.recv_timeout(Duration::from_secs(5)).unwrap() {
+            ToShard::MigrateCommit { epoch: 7 } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        server0.close_send();
+        server1.close_send();
+        server0.join();
+        server1.join();
+    }
+
+    #[test]
+    fn local_destination_bypasses_the_socket() {
+        // An endpoint hosting both shards delivers shard->shard traffic
+        // straight to the inbox (the in-process TCP fabric's handoff
+        // path) and counts it settled.
+        let (stx0, srx0) = channel::<ToShard>();
+        let (stx1, _srx1) = channel::<ToShard>();
+        let (server, _addr) = TcpTransport::server(
+            "127.0.0.1:0",
+            vec![
+                (NodeId::Shard(0), LocalSink::Shard(stx0)),
+                (NodeId::Shard(1), LocalSink::Shard(stx1)),
+            ],
+            None,
+            4,
+        )
+        .unwrap();
+        server.handle().send(
+            NodeId::Shard(1),
+            NodeId::Shard(0),
+            Packet::ToShard(ToShard::MigrateCommit { epoch: 3 }),
+        );
+        match srx0.recv_timeout(Duration::from_secs(5)).unwrap() {
+            ToShard::MigrateCommit { epoch: 3 } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(server.stats().delivered(), 1);
+        assert_eq!(server.stats().messages(), 1);
+        server.close_send();
+        server.join();
     }
 
     #[test]

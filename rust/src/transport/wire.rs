@@ -10,13 +10,14 @@
 //!
 //! ```text
 //! frame := len:u32 | src:node | dst:node | kind:u8 | body
-//! node  := kind:u8 (0 = worker, 1 = shard) | id:u32
+//! node  := kind:u8 (0 = worker, 1 = shard, 2 = coordinator) | id:u32
 //! ```
 //!
-//! `len` counts every byte after the length prefix. Message kinds 0–8 are
-//! the `ToShard` variants (Get, Update, ClockTick, Register, PushAck,
-//! VapAck, Shutdown, NormReport, Detach), 16–19 the `ToWorker` variants
-//! (Row, Push, VapPush, Bound).
+//! `len` counts every byte after the length prefix. Message kinds 0–11
+//! are the `ToShard` variants (Get, Update, ClockTick, Register, PushAck,
+//! VapAck, Shutdown, NormReport, Detach, MigrateBegin, RowHandoff,
+//! MigrateCommit), 16–20 the `ToWorker` variants (Row, Push, VapPush,
+//! Bound, Placement).
 //! Row payloads are raw `f32` little-endian; on little-endian targets the
 //! encoder writes them straight from the shared `Arc<[f32]>` storage —
 //! encoding a push wave stages no intermediate payload copy.
@@ -42,8 +43,17 @@
 //! Connections start with a fixed-size handshake:
 //!
 //! ```text
-//! hello := magic "ESSPWIR1" (8) | version:u16 | src:node | dst:node
+//! hello  := magic "ESSPWIR1" (8) | version:u16 | src:node | dst:node
+//! reject := magic "ESSPREJ1" (8) | peer_version:u16 | min:u16 | max:u16
 //! ```
+//!
+//! A version mismatch is negotiated *loudly*: the acceptor answers a
+//! well-magic'd hello of an unsupported version with the `reject` blob —
+//! echoing the dialer's version and naming its own supported range — and
+//! closes; the dialer decodes the blob into an error carrying both peer
+//! versions plus this binary's range, so a mixed-version cluster fails
+//! with a diagnosis instead of a silent drop (the ROADMAP's negotiation
+//! stopgap until multi-version support exists).
 //!
 //! Decoding is defensive: every length field is bounds-checked against the
 //! bytes actually present *before* any allocation, so a truncated or
@@ -57,14 +67,22 @@ use anyhow::{bail, ensure, Context, Result};
 
 use super::{NodeId, Packet};
 use crate::ps::msg::{PushRow, ToShard, ToWorker};
-use crate::ps::types::{row_wire_bytes, Key, RowDelta};
+use crate::ps::placement::PlacementDelta;
+use crate::ps::types::{row_wire_bytes, Clock, Key, RowDelta, WorkerId};
 
 /// Handshake magic: protocol name + wire revision byte.
 pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
 /// Protocol version carried in the handshake; bumped on layout changes
 /// (v2: NormReport/Detach/Bound — the distributed value-bound protocol;
-/// v3: hybrid dense/sparse Update rows).
-pub const VERSION: u16 = 3;
+/// v3: hybrid dense/sparse Update rows; v4: the elastic shard plane —
+/// MigrateBegin/RowHandoff/MigrateCommit/Placement and the coordinator
+/// node kind).
+pub const VERSION: u16 = 4;
+/// Versions this binary can speak (currently exactly [`VERSION`]; kept a
+/// range so the reject blob's negotiation surface survives a future
+/// multi-version binary).
+pub const VERSION_MIN: u16 = VERSION;
+pub const VERSION_MAX: u16 = VERSION;
 /// Upper bound on one frame's encoded size (a push wave of ~16M f32s);
 /// anything larger is rejected as corrupt before allocation.
 pub const MAX_FRAME: usize = 1 << 28;
@@ -85,10 +103,14 @@ const K_VAP_ACK: u8 = 5;
 const K_SHUTDOWN: u8 = 6;
 const K_NORM_REPORT: u8 = 7;
 const K_DETACH: u8 = 8;
+const K_MIGRATE_BEGIN: u8 = 9;
+const K_ROW_HANDOFF: u8 = 10;
+const K_MIGRATE_COMMIT: u8 = 11;
 const K_ROW: u8 = 16;
 const K_PUSH: u8 = 17;
 const K_VAP_PUSH: u8 = 18;
 const K_BOUND: u8 = 19;
+const K_PLACEMENT: u8 = 20;
 
 /// Update-row representation tags (see module docs).
 const REPR_DENSE: u8 = 0;
@@ -111,6 +133,17 @@ pub fn to_shard_body_len(m: &ToShard) -> usize {
         ToShard::VapAck { .. } => 12,
         ToShard::NormReport { .. } => 16,
         ToShard::Detach { .. } => 4,
+        ToShard::MigrateBegin {
+            outgoing, incoming, ..
+        } => 24 + 16 * outgoing.len() + 12 * incoming.len(),
+        ToShard::RowHandoff { data, staged, .. } => {
+            // Per staged entry: clock (8) + worker (4) + repr-tagged delta
+            // body — numerically `row_wire_bytes` (its key header is also
+            // 12 bytes), reused so the two accountings cannot drift.
+            45 + 4 * data.len()
+                + staged.iter().map(|(_, _, d)| row_wire_bytes(d)).sum::<usize>()
+        }
+        ToShard::MigrateCommit { .. } => 8,
         ToShard::Shutdown => 0,
     }
 }
@@ -123,6 +156,7 @@ pub fn to_worker_body_len(m: &ToWorker) -> usize {
             16 + rows.iter().map(|r| 24 + 4 * r.data.len()).sum::<usize>()
         }
         ToWorker::Bound { .. } => 5,
+        ToWorker::Placement { delta } => 25 + 16 * delta.moves.len(),
     }
 }
 
@@ -182,6 +216,10 @@ fn write_node(w: &mut impl Write, n: NodeId) -> io::Result<()> {
             w8(w, 1)?;
             w32(w, i as u32)
         }
+        NodeId::Coordinator => {
+            w8(w, 2)?;
+            w32(w, 0)
+        }
     }
 }
 
@@ -204,6 +242,29 @@ pub fn write_f32s(w: &mut impl Write, xs: &[f32]) -> io::Result<()> {
             w.write_all(&x.to_le_bytes())?;
         }
         Ok(())
+    }
+}
+
+/// Write one repr-tagged row delta (`repr:u8 | dense(len|f32*) or
+/// sparse(len|nnz|(idx,val)*)`) — shared by Update rows and RowHandoff
+/// staged entries.
+fn write_row_delta(w: &mut impl Write, delta: &RowDelta) -> io::Result<()> {
+    match delta {
+        RowDelta::Dense(v) => {
+            w8(w, REPR_DENSE)?;
+            w32(w, v.len() as u32)?;
+            write_f32s(w, v)
+        }
+        RowDelta::Sparse { len, pairs } => {
+            w8(w, REPR_SPARSE)?;
+            w32(w, *len)?;
+            w32(w, pairs.len() as u32)?;
+            for (i, x) in pairs {
+                w32(w, *i)?;
+                w.write_all(&x.to_le_bytes())?;
+            }
+            Ok(())
+        }
     }
 }
 
@@ -230,22 +291,7 @@ fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
             w32(w, rows.len() as u32)?;
             for (key, delta) in rows {
                 wkey(w, key)?;
-                match delta {
-                    RowDelta::Dense(v) => {
-                        w8(w, REPR_DENSE)?;
-                        w32(w, v.len() as u32)?;
-                        write_f32s(w, v)?;
-                    }
-                    RowDelta::Sparse { len, pairs } => {
-                        w8(w, REPR_SPARSE)?;
-                        w32(w, *len)?;
-                        w32(w, pairs.len() as u32)?;
-                        for (i, x) in pairs {
-                            w32(w, *i)?;
-                            w.write_all(&x.to_le_bytes())?;
-                        }
-                    }
-                }
+                write_row_delta(w, delta)?;
             }
             Ok(())
         }
@@ -282,6 +328,55 @@ fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
         ToShard::Detach { worker } => {
             w8(w, K_DETACH)?;
             w32(w, *worker as u32)
+        }
+        ToShard::MigrateBegin {
+            epoch,
+            at_clock,
+            outgoing,
+            incoming,
+        } => {
+            w8(w, K_MIGRATE_BEGIN)?;
+            w64(w, *epoch)?;
+            wi64(w, *at_clock)?;
+            w32(w, outgoing.len() as u32)?;
+            for (key, dst) in outgoing {
+                wkey(w, key)?;
+                w32(w, *dst)?;
+            }
+            w32(w, incoming.len() as u32)?;
+            for key in incoming {
+                wkey(w, key)?;
+            }
+            Ok(())
+        }
+        ToShard::RowHandoff {
+            epoch,
+            key,
+            vclock,
+            fresh,
+            exists,
+            data,
+            staged,
+        } => {
+            w8(w, K_ROW_HANDOFF)?;
+            w64(w, *epoch)?;
+            wkey(w, key)?;
+            wi64(w, *vclock)?;
+            wi64(w, *fresh)?;
+            w8(w, u8::from(*exists))?;
+            w32(w, data.len() as u32)?;
+            write_f32s(w, data)?;
+            w32(w, staged.len() as u32)?;
+            for (clock, worker, delta) in staged {
+                wi64(w, *clock)?;
+                w32(w, *worker as u32)?;
+                write_row_delta(w, delta)?;
+            }
+            Ok(())
+        }
+        ToShard::MigrateCommit { epoch } => {
+            w8(w, K_MIGRATE_COMMIT)?;
+            w64(w, *epoch)
         }
         ToShard::Shutdown => w8(w, K_SHUTDOWN),
     }
@@ -333,6 +428,21 @@ fn write_to_worker(w: &mut impl Write, m: &ToWorker) -> io::Result<()> {
             w8(w, K_BOUND)?;
             w32(w, *shard as u32)?;
             w8(w, u8::from(*granted))
+        }
+        ToWorker::Placement { delta } => {
+            w8(w, K_PLACEMENT)?;
+            w64(w, delta.epoch)?;
+            wi64(w, delta.at_clock)?;
+            // grow flag + value (0 when absent): fixed-size for a simple
+            // body-length formula.
+            w8(w, u8::from(delta.grow_active.is_some()))?;
+            w32(w, delta.grow_active.unwrap_or(0))?;
+            w32(w, delta.moves.len() as u32)?;
+            for (key, dst) in &delta.moves {
+                wkey(w, key)?;
+                w32(w, *dst)?;
+            }
+            Ok(())
         }
     }
 }
@@ -446,6 +556,7 @@ impl<'a> Cur<'a> {
         match kind {
             0 => Ok(NodeId::Worker(id)),
             1 => Ok(NodeId::Shard(id)),
+            2 => Ok(NodeId::Coordinator),
             k => bail!("bad node kind {k}"),
         }
     }
@@ -593,6 +704,74 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
         K_DETACH => Packet::ToShard(ToShard::Detach {
             worker: c.worker()?,
         }),
+        K_MIGRATE_BEGIN => {
+            let epoch = c.u64()?;
+            let at_clock = c.i64()?;
+            let n_out = c.u32()? as usize;
+            // Each outgoing entry is 16 bytes (key 12 + dst 4): bound the
+            // count (and the Vec preallocation) by the bytes present.
+            ensure!(
+                n_out <= c.rem() / 16,
+                "migrate-begin claims {n_out} outgoing keys but only {} bytes remain",
+                c.rem()
+            );
+            let mut outgoing = Vec::with_capacity(n_out);
+            for i in 0..n_out {
+                let key = c.key().with_context(|| format!("outgoing key {i}"))?;
+                outgoing.push((key, c.u32()?));
+            }
+            let n_in = c.u32()? as usize;
+            ensure!(
+                n_in <= c.rem() / 12,
+                "migrate-begin claims {n_in} incoming keys but only {} bytes remain",
+                c.rem()
+            );
+            let mut incoming = Vec::with_capacity(n_in);
+            for i in 0..n_in {
+                incoming.push(c.key().with_context(|| format!("incoming key {i}"))?);
+            }
+            Packet::ToShard(ToShard::MigrateBegin {
+                epoch,
+                at_clock,
+                outgoing,
+                incoming,
+            })
+        }
+        K_ROW_HANDOFF => {
+            let epoch = c.u64()?;
+            let key = c.key()?;
+            let vclock = c.i64()?;
+            let fresh = c.i64()?;
+            let exists = c.bool()?;
+            let len = c.u32()? as usize;
+            let data: Arc<[f32]> = c.f32s(len).context("handoff payload")?.into();
+            let n_staged = c.u32()? as usize;
+            // Minimum staged entry: clock 8 + worker 4 + repr 1 + len 4.
+            ensure!(
+                n_staged <= c.rem() / 17,
+                "handoff claims {n_staged} staged deltas but only {} bytes remain",
+                c.rem()
+            );
+            let mut staged: Vec<(Clock, WorkerId, RowDelta)> = Vec::with_capacity(n_staged);
+            for i in 0..n_staged {
+                let clock = c.i64()?;
+                let worker = c.worker()?;
+                let delta = c
+                    .row_delta()
+                    .with_context(|| format!("handoff staged delta {i}"))?;
+                staged.push((clock, worker, delta));
+            }
+            Packet::ToShard(ToShard::RowHandoff {
+                epoch,
+                key,
+                vclock,
+                fresh,
+                exists,
+                data,
+                staged,
+            })
+        }
+        K_MIGRATE_COMMIT => Packet::ToShard(ToShard::MigrateCommit { epoch: c.u64()? }),
         K_SHUTDOWN => Packet::ToShard(ToShard::Shutdown),
         K_ROW => {
             let key = c.key()?;
@@ -620,6 +799,32 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
             shard: c.u32()? as usize,
             granted: c.bool()?,
         }),
+        K_PLACEMENT => {
+            let epoch = c.u64()?;
+            let at_clock = c.i64()?;
+            let has_grow = c.bool()?;
+            let grow = c.u32()?;
+            let grow_active = has_grow.then_some(grow);
+            let n_moves = c.u32()? as usize;
+            ensure!(
+                n_moves <= c.rem() / 16,
+                "placement claims {n_moves} moves but only {} bytes remain",
+                c.rem()
+            );
+            let mut moves = Vec::with_capacity(n_moves);
+            for i in 0..n_moves {
+                let key = c.key().with_context(|| format!("placement move {i}"))?;
+                moves.push((key, c.u32()?));
+            }
+            Packet::ToWorker(ToWorker::Placement {
+                delta: PlacementDelta {
+                    epoch,
+                    at_clock,
+                    grow_active,
+                    moves,
+                },
+            })
+        }
         k => bail!("unknown message kind {k}"),
     };
     ensure!(
@@ -677,6 +882,57 @@ fn read_full_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
 
 // -------------------------------------------------------------- handshake
 
+/// Magic of the version-reject blob an acceptor answers with (then
+/// closes) when a well-magic'd hello announces a version outside
+/// [`VERSION_MIN`]..=[`VERSION_MAX`].
+pub const REJECT_MAGIC: [u8; 8] = *b"ESSPREJ1";
+/// Total reject blob size: magic | peer_version (echoed) | min | max.
+pub const REJECT_LEN: usize = 8 + 3 * 2;
+
+/// Decoded version-reject blob: both sides' versions in one diagnosis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VersionReject {
+    /// The version the rejected dialer announced (echoed back so the
+    /// dialer's error can name what *it* said, even across restarts).
+    pub peer_version: u16,
+    /// The rejecting binary's supported range.
+    pub min_supported: u16,
+    pub max_supported: u16,
+}
+
+/// Write the reject blob for a peer that announced `peer_version`.
+pub fn write_version_reject(w: &mut impl Write, peer_version: u16) -> io::Result<()> {
+    w.write_all(&REJECT_MAGIC)?;
+    w.write_all(&peer_version.to_le_bytes())?;
+    w.write_all(&VERSION_MIN.to_le_bytes())?;
+    w.write_all(&VERSION_MAX.to_le_bytes())?;
+    w.flush()
+}
+
+/// Decode a reject blob's tail (the bytes after its 8-byte magic).
+pub fn decode_version_reject(tail: &[u8]) -> Result<VersionReject> {
+    ensure!(
+        tail.len() == REJECT_LEN - 8,
+        "version-reject blob has {} tail bytes, expected {}",
+        tail.len(),
+        REJECT_LEN - 8
+    );
+    Ok(VersionReject {
+        peer_version: u16::from_le_bytes(tail[0..2].try_into().unwrap()),
+        min_supported: u16::from_le_bytes(tail[2..4].try_into().unwrap()),
+        max_supported: u16::from_le_bytes(tail[4..6].try_into().unwrap()),
+    })
+}
+
+/// What an acceptor read off the wire: a speakable peer hello, or a
+/// correctly-magic'd hello of a version we cannot speak (the caller
+/// should answer with [`write_version_reject`] and close the socket).
+#[derive(Debug)]
+pub enum HelloOutcome {
+    Peer(NodeId, NodeId),
+    BadVersion(u16),
+}
+
 /// Write the connection handshake: magic, version, and the (src, dst)
 /// node pair this connection will carry.
 pub fn write_hello(w: &mut impl Write, src: NodeId, dst: NodeId) -> io::Result<()> {
@@ -687,8 +943,10 @@ pub fn write_hello(w: &mut impl Write, src: NodeId, dst: NodeId) -> io::Result<(
     w.flush()
 }
 
-/// Read and validate a handshake; returns the announced (src, dst).
-pub fn read_hello(r: &mut impl Read) -> Result<(NodeId, NodeId)> {
+/// Acceptor-side handshake read: surfaces a version mismatch as
+/// [`HelloOutcome::BadVersion`] instead of a bare error, so the acceptor
+/// can answer with the reject blob before dropping the connection.
+pub fn read_hello_outcome(r: &mut impl Read) -> Result<HelloOutcome> {
     let mut buf = [0u8; HELLO_LEN];
     r.read_exact(&mut buf).context("reading transport handshake")?;
     ensure!(
@@ -697,11 +955,46 @@ pub fn read_hello(r: &mut impl Read) -> Result<(NodeId, NodeId)> {
         &buf[..8]
     );
     let version = u16::from_le_bytes(buf[8..10].try_into().unwrap());
-    ensure!(
-        version == VERSION,
-        "wire protocol version mismatch: peer speaks v{version}, we speak v{VERSION}"
-    );
+    if !(VERSION_MIN..=VERSION_MAX).contains(&version) {
+        return Ok(HelloOutcome::BadVersion(version));
+    }
     let mut c = Cur { b: &buf[10..] };
+    Ok(HelloOutcome::Peer(c.node()?, c.node()?))
+}
+
+/// Dialer-side handshake read (also validates an acceptor's ack). A
+/// version mismatch — ours detected locally, or the peer's reject blob —
+/// produces an error naming BOTH sides' versions and this binary's
+/// supported range, never a silent drop.
+pub fn read_hello(r: &mut impl Read) -> Result<(NodeId, NodeId)> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("reading transport handshake")?;
+    if magic == REJECT_MAGIC {
+        let mut tail = [0u8; REJECT_LEN - 8];
+        r.read_exact(&mut tail).context("reading version-reject blob")?;
+        let rej = decode_version_reject(&tail)?;
+        bail!(
+            "wire protocol version rejected by peer: we announced \
+             v{}, peer supports v{}..v{} (this binary supports \
+             v{VERSION_MIN}..v{VERSION_MAX})",
+            rej.peer_version,
+            rej.min_supported,
+            rej.max_supported
+        );
+    }
+    ensure!(
+        magic == MAGIC,
+        "bad handshake magic {magic:02x?} (not an essptable peer?)"
+    );
+    let mut rest = [0u8; HELLO_LEN - 8];
+    r.read_exact(&mut rest).context("reading handshake body")?;
+    let version = u16::from_le_bytes(rest[..2].try_into().unwrap());
+    ensure!(
+        (VERSION_MIN..=VERSION_MAX).contains(&version),
+        "wire protocol version mismatch: peer speaks v{version}, this \
+         binary supports v{VERSION_MIN}..v{VERSION_MAX}"
+    );
+    let mut c = Cur { b: &rest[2..] };
     Ok((c.node()?, c.node()?))
 }
 
@@ -761,6 +1054,40 @@ mod tests {
                 inf_norm: 0.75,
             }),
             Packet::ToShard(ToShard::Detach { worker: 3 }),
+            Packet::ToShard(ToShard::MigrateBegin {
+                epoch: 1,
+                at_clock: 6,
+                outgoing: vec![((0, 1), 3), ((0, 9), 2)],
+                incoming: vec![(4, 4)],
+            }),
+            Packet::ToShard(ToShard::MigrateBegin {
+                epoch: 2,
+                at_clock: 0,
+                outgoing: vec![],
+                incoming: vec![],
+            }),
+            Packet::ToShard(ToShard::RowHandoff {
+                epoch: 1,
+                key: (2, 7),
+                vclock: 5,
+                fresh: 6,
+                exists: true,
+                data: vec![1.0f32, -2.5].into(),
+                staged: vec![
+                    (6, 0, RowDelta::Dense(vec![0.5, 0.5])),
+                    (7, 2, RowDelta::sparse(64, vec![(3, 1.0), (9, -1.0)])),
+                ],
+            }),
+            Packet::ToShard(ToShard::RowHandoff {
+                epoch: 3,
+                key: (2, 8),
+                vclock: -1,
+                fresh: -1,
+                exists: false,
+                data: Vec::<f32>::new().into(),
+                staged: vec![],
+            }),
+            Packet::ToShard(ToShard::MigrateCommit { epoch: 9 }),
             Packet::ToShard(ToShard::Shutdown),
             Packet::ToWorker(ToWorker::Row {
                 key: (3, 1),
@@ -785,6 +1112,22 @@ mod tests {
             Packet::ToWorker(ToWorker::Bound {
                 shard: 0,
                 granted: false,
+            }),
+            Packet::ToWorker(ToWorker::Placement {
+                delta: PlacementDelta {
+                    epoch: 1,
+                    at_clock: 6,
+                    grow_active: Some(4),
+                    moves: vec![((0, 1), 3)],
+                },
+            }),
+            Packet::ToWorker(ToWorker::Placement {
+                delta: PlacementDelta {
+                    epoch: 2,
+                    at_clock: 11,
+                    grow_active: None,
+                    moves: vec![],
+                },
             }),
         ];
         for p in &msgs {
@@ -813,6 +1156,65 @@ mod tests {
         let mut newer = buf.clone();
         newer[8] = 0xEE;
         assert!(read_hello(&mut &newer[..]).is_err());
+    }
+
+    #[test]
+    fn coordinator_node_roundtrips_on_frames() {
+        let p = Packet::ToShard(ToShard::MigrateCommit { epoch: 4 });
+        let bytes = encoded(NodeId::Coordinator, NodeId::Shard(2), &p);
+        assert_eq!(bytes.len(), p.wire_bytes());
+        let (src, dst, back) = decode_frame(&bytes[4..]).unwrap();
+        assert_eq!(src, NodeId::Coordinator);
+        assert_eq!(dst, NodeId::Shard(2));
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn version_mismatch_surfaces_as_outcome_and_reject_names_both_sides() {
+        // Acceptor side: a hello announcing an unsupported version is a
+        // BadVersion outcome (so the acceptor can answer), not a bare
+        // error and not a Peer.
+        let mut hello = Vec::new();
+        write_hello(&mut hello, NodeId::Worker(0), NodeId::Shard(1)).unwrap();
+        hello[8..10].copy_from_slice(&0xBEEFu16.to_le_bytes());
+        match read_hello_outcome(&mut &hello[..]).unwrap() {
+            HelloOutcome::BadVersion(v) => assert_eq!(v, 0xBEEF),
+            other => panic!("unexpected {other:?}"),
+        }
+        // The reject blob decodes back to both peer versions plus the
+        // rejecting binary's supported range...
+        let mut blob = Vec::new();
+        write_version_reject(&mut blob, 0xBEEF).unwrap();
+        assert_eq!(blob.len(), REJECT_LEN);
+        let rej = decode_version_reject(&blob[8..]).unwrap();
+        assert_eq!(
+            rej,
+            VersionReject {
+                peer_version: 0xBEEF,
+                min_supported: VERSION_MIN,
+                max_supported: VERSION_MAX,
+            }
+        );
+        // ...and the dialer reading it gets an error that names its own
+        // announced version AND the peer's supported range.
+        let err = read_hello(&mut &blob[..]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(&format!("v{}", 0xBEEFu16)), "{msg}");
+        assert!(
+            msg.contains(&format!("v{VERSION_MIN}..v{VERSION_MAX}")),
+            "{msg}"
+        );
+        // Local detection (no reject blob in play) still reports both
+        // the peer's version and our range.
+        let err = read_hello(&mut &hello[..]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(&format!("v{}", 0xBEEFu16)), "{msg}");
+        assert!(
+            msg.contains(&format!("v{VERSION_MIN}..v{VERSION_MAX}")),
+            "{msg}"
+        );
+        // A truncated blob tail is a clean error.
+        assert!(decode_version_reject(&blob[8..12]).is_err());
     }
 
     #[test]

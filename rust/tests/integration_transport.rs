@@ -23,7 +23,7 @@ use essptable::apps::logreg::{run_logreg, LogRegConfig, W_TABLE};
 use essptable::ps::checkpoint;
 use essptable::ps::client::PsClient;
 use essptable::ps::consistency::Consistency;
-use essptable::ps::server::{Cluster, ClusterConfig, PsApp, TableSpec};
+use essptable::ps::server::{Cluster, ClusterConfig, MigrationSpec, PsApp, TableSpec};
 use essptable::ps::types::{Clock, Key};
 use essptable::transport::TransportSel;
 
@@ -167,6 +167,133 @@ fn transport_matrix_every_model_deterministic_bit_identical() {
     }
 }
 
+// ------------------------------------------------------- live migration
+
+/// Deterministic logreg over 4 provisioned primaries (2 initially
+/// active); `elastic` additionally schedules a mid-run migration at
+/// clock 4 that grows the active set to 4 AND force-moves the weight row
+/// to shard 3. Returns final params and the migrated-row count.
+fn logreg_elastic_run(
+    transport: TransportSel,
+    consistency: Consistency,
+    clocks: u64,
+    elastic: bool,
+) -> (HashMap<Key, Vec<f32>>, u64) {
+    let migration = elastic.then(|| MigrationSpec {
+        at_clock: 4,
+        grow_to: Some(4),
+        moves: vec![((W_TABLE, 0), 3)],
+    });
+    let (report, _) = run_logreg(
+        ClusterConfig {
+            workers: WORKERS,
+            shards: 4,
+            active_shards: 2,
+            migration,
+            consistency,
+            transport,
+            deterministic: true,
+            ..Default::default()
+        },
+        LogRegConfig::default(),
+        clocks,
+    );
+    let moved: u64 = report.shard_stats.iter().map(|s| s.rows_migrated_in).sum();
+    (report.table_rows, moved)
+}
+
+#[test]
+fn migration_logreg_bit_identical_to_unmigrated_run() {
+    // The acceptance bar: a deterministic logreg run with a forced
+    // 2->4-shard migration mid-run produces final params bit-identical
+    // to the unmigrated run, over sim AND tcp. The clock-pinned read
+    // models (BSP, and the s=0 window of SSP/ESSP, whose every read is
+    // exactly the fold through c-1) make logreg's gradient stream —
+    // hence its updates — identical in both runs; the migration then
+    // merely changes WHERE each key's sorted fold happens, never its
+    // order. Wider windows / value bounds admit timing-dependent reads,
+    // so their bit-level proof runs on the read-independent counter
+    // below (the repo's established matrix methodology).
+    for consistency in [
+        Consistency::Bsp,
+        Consistency::Ssp { s: 0 },
+        Consistency::Essp { s: 0 },
+    ] {
+        for transport in [TransportSel::Sim, TransportSel::Tcp] {
+            let label = format!("{} over {}", consistency.label(), transport.label());
+            let (plain, moved_plain) = logreg_elastic_run(transport, consistency, 9, false);
+            let (migrated, moved) = logreg_elastic_run(transport, consistency, 9, true);
+            assert_eq!(moved_plain, 0, "{label}: unmigrated run moved rows");
+            assert!(moved > 0, "{label}: migration moved nothing");
+            assert_bit_identical(&label, &plain, &migrated);
+        }
+    }
+}
+
+/// The order-sensitive fractional counter (read-independent INCs) over
+/// the elastic plane: every consistency model — VAP/AVAP's value waves
+/// and Async's unbounded reads included — must fold bit-identically with
+/// and without a mid-run migration, over both transports.
+fn counter_elastic_run(
+    transport: TransportSel,
+    consistency: Consistency,
+    migrate: bool,
+) -> HashMap<Key, Vec<f32>> {
+    let workers = 3;
+    let migration = migrate.then(|| MigrationSpec {
+        at_clock: 3,
+        grow_to: Some(4),
+        moves: vec![((0, 0), 3), ((1, 0), 2)],
+    });
+    let mut cluster = Cluster::new(ClusterConfig {
+        workers,
+        shards: 4,
+        active_shards: 2,
+        migration,
+        consistency,
+        transport,
+        deterministic: true,
+        ..Default::default()
+    });
+    cluster.add_table(TableSpec::zeros(0, 4, 1));
+    cluster.add_table(TableSpec::zeros(1, 2, 64));
+    let apps: Vec<Box<dyn PsApp>> = (0..workers)
+        .map(|w| {
+            Box::new(move |ps: &mut PsClient, _c: Clock| {
+                let _ = ps.get((0, 0));
+                ps.inc((0, 0), &[0.1 * (w + 1) as f32]);
+                let _ = ps.get((1, 0));
+                ps.inc_sparse((1, 0), &[(w, 0.1 * (w + 1) as f32), (17 + w, 0.01)]);
+                None
+            }) as Box<dyn PsApp>
+        })
+        .collect();
+    cluster.run(apps, 6).table_rows
+}
+
+#[test]
+fn migration_matrix_every_model_counter_bit_identical() {
+    let models = [
+        Consistency::Bsp,
+        Consistency::Ssp { s: 2 },
+        Consistency::Essp { s: 2 },
+        Consistency::Async { refresh_every: 1 },
+        Consistency::Vap { v0: 100.0 },
+        Consistency::Avap { v0: 100.0, s: 2 },
+    ];
+    for consistency in models {
+        for transport in [TransportSel::Sim, TransportSel::Tcp] {
+            let label = format!("{} over {}", consistency.label(), transport.label());
+            let plain = counter_elastic_run(transport, consistency, false);
+            let migrated = counter_elastic_run(transport, consistency, true);
+            assert_bit_identical(&label, &plain, &migrated);
+            // Sanity: the 18 fractional increments all landed.
+            let v = migrated[&(0, 0)][0];
+            assert!((v - 3.6).abs() < 1e-3, "{label}: expected ~3.6, got {v}");
+        }
+    }
+}
+
 #[test]
 fn tcp_loopback_ssp_trains_to_completion() {
     let rows = run_logreg_once(TransportSel::Tcp, Consistency::Ssp { s: 2 }, 8);
@@ -273,6 +400,99 @@ fn multiprocess_ssp_and_essp_run_to_completion() {
             "{consistency}: weights never updated"
         );
     }
+}
+
+#[test]
+fn multiprocess_migration_matches_single_process_bit_exact() {
+    // Four shard processes, two initially active, grown to four at clock
+    // 4: the logreg weight row's hash home moves shard 0 -> 2, so its
+    // RowHandoff crosses a real shard->shard socket (shards dial their
+    // peers when a migration is armed). Deterministic BSP final params
+    // are placement-independent — each key is one sorted (clock, worker)
+    // fold wherever it lives — so the migrated multi-process run must
+    // match the plain in-process SimNet run to the bit.
+    let out = out_dir("mig");
+    std::fs::create_dir_all(&out).unwrap();
+    let status = Command::new(bin())
+        .args([
+            "run-cluster",
+            "--app",
+            "logreg",
+            "--workers",
+            &WORKERS.to_string(),
+            "--shards",
+            "4",
+            "--active",
+            "2",
+            "--migrate-at",
+            "4",
+            "--clocks",
+            "10",
+            "--consistency",
+            "bsp",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawning migrated run-cluster");
+    assert!(status.success(), "migrated run-cluster failed: {status}");
+    let mut rows = HashMap::new();
+    let mut weight_home = None;
+    for i in 0..4 {
+        let dump = out.join(format!("shard_{i}.ckp"));
+        let shard_rows = checkpoint::load(&dump).expect("loading shard dump");
+        if shard_rows.contains_key(&(W_TABLE, 0)) {
+            weight_home = Some(i);
+        }
+        rows.extend(shard_rows);
+    }
+    std::fs::remove_dir_all(&out).ok();
+    assert_eq!(
+        weight_home,
+        Some(2),
+        "the weight row's post-migration owner must hold it"
+    );
+    let local = run_logreg_once(TransportSel::Sim, Consistency::Bsp, 10);
+    assert_bit_identical("multiprocess migrated bsp", &local, &rows);
+}
+
+#[test]
+fn multiprocess_replicated_cluster_trains_and_conserves() {
+    // Replicas as real OS processes: 2 primaries x 1 replica each (4
+    // shard processes). SSP pulls fan out to the replica processes; the
+    // merged primary dumps must still train.
+    let out = out_dir("repl");
+    std::fs::create_dir_all(&out).unwrap();
+    let status = Command::new(bin())
+        .args([
+            "run-cluster",
+            "--app",
+            "logreg",
+            "--workers",
+            &WORKERS.to_string(),
+            "--shards",
+            &SHARDS.to_string(),
+            "--replicas",
+            "1",
+            "--clocks",
+            "8",
+            "--consistency",
+            "ssp:1",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawning replicated run-cluster");
+    assert!(status.success(), "replicated run-cluster failed: {status}");
+    let mut rows = HashMap::new();
+    for i in 0..SHARDS {
+        let dump = out.join(format!("shard_{i}.ckp"));
+        rows.extend(checkpoint::load(&dump).expect("loading shard dump"));
+    }
+    std::fs::remove_dir_all(&out).ok();
+    let w = rows.get(&(W_TABLE, 0)).expect("weight row missing");
+    assert!(w.iter().all(|x| x.is_finite()));
+    assert!(w.iter().any(|x| *x != 0.0), "weights never updated");
 }
 
 #[test]

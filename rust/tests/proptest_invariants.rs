@@ -7,7 +7,7 @@
 use essptable::ps::cache::RowCache;
 use essptable::ps::client::PsClient;
 use essptable::ps::consistency::Consistency;
-use essptable::ps::router::Router;
+use essptable::ps::placement::{plan_shards, PlacementDelta, PlacementMap};
 use essptable::ps::server::{Cluster, ClusterConfig, PsApp, TableSpec};
 use essptable::ps::types::{Clock, Key};
 use essptable::ps::update::UpdateMap;
@@ -50,12 +50,12 @@ fn prop_coalescing_lossless() {
                 m.inc_sparse((0, r), len, &[(idx, v)]);
             }
         }
-        let router = Router::new(shards);
-        let batches = m.drain_routed(shards, |k| router.shard_of(k));
+        let placement = PlacementMap::flat(shards);
+        let batches = m.drain_routed(shards, |k| placement.shard_of(k));
         let mut got = vec![vec![0.0f32; len]; rows as usize];
         for (shard, batch) in batches.iter().enumerate() {
             for (key, delta) in batch {
-                assert_eq!(router.shard_of(key), shard, "case {case}: misrouted");
+                assert_eq!(placement.shard_of(key), shard, "case {case}: misrouted");
                 delta.add_into(&mut got[key.1 as usize]);
             }
         }
@@ -149,10 +149,10 @@ fn prop_lru_never_exceeds_capacity_and_keeps_hot() {
         let cap = 1 + rng.usize_below(8);
         let mut cache = RowCache::new(cap);
         let hot: Key = (0, 999);
-        cache.insert(hot, vec![1.0], 0, 0);
+        cache.insert(hot, vec![1.0], 0, 0, 0);
         for i in 0..rng.usize_below(200) {
             let _ = cache.get(&hot); // keep hot row warm
-            cache.insert((0, i as u64), vec![0.0], 0, 0);
+            cache.insert((0, i as u64), vec![0.0], 0, 0, 0);
             assert!(cache.len() <= cap, "case {case}: over capacity");
         }
         if cap > 1 {
@@ -284,14 +284,146 @@ fn rng_f32(rng: &mut Rng) -> f32 {
 }
 
 #[test]
-fn prop_router_agrees_across_instances() {
+fn prop_placement_agrees_across_instances() {
+    // Zero-coordination property within an epoch: two independently
+    // constructed maps (a client's and a shard's) route identically.
     for_cases(30, |case, rng| {
         let shards = 1 + rng.usize_below(16);
-        let a = Router::new(shards);
-        let b = Router::new(shards);
+        let a = PlacementMap::flat(shards);
+        let b = PlacementMap::flat(shards);
         for _ in 0..100 {
             let key: Key = (rng.next_u32(), rng.next_u64());
             assert_eq!(a.shard_of(&key), b.shard_of(&key), "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_placement_delta_is_conservative() {
+    // Any epoch-N -> epoch-N+1 delta changes a key's owner ONLY if the
+    // delta names it (an explicit move, or a hash re-home onto the grown
+    // active set) — `PlacementDelta::affects` is a sound over-
+    // approximation of "owner changed".
+    for_cases(60, |case, rng| {
+        let primaries = 2 + rng.usize_below(6);
+        let active = 1 + rng.usize_below(primaries);
+        let replicas = rng.usize_below(3);
+        let mut map = PlacementMap::new(primaries, active, replicas);
+        // A random prior epoch of moves, so conservativeness is tested
+        // against maps with override state, not just fresh hash maps.
+        let pre_moves: Vec<(Key, u32)> = (0..rng.usize_below(5))
+            .map(|_| {
+                (
+                    (rng.next_u32() % 4, rng.below(64)),
+                    rng.usize_below(primaries) as u32,
+                )
+            })
+            .collect();
+        map.apply(&PlacementDelta {
+            epoch: 1,
+            at_clock: 1,
+            grow_active: None,
+            moves: pre_moves,
+        });
+        let before = map.clone();
+        let grow_active = if rng.f64() < 0.6 {
+            let max_mult = primaries / before.active();
+            let mult = 1 + rng.usize_below(max_mult);
+            Some((before.active() * mult) as u32)
+        } else {
+            None
+        };
+        let moves: Vec<(Key, u32)> = (0..rng.usize_below(4))
+            .map(|_| {
+                (
+                    (rng.next_u32() % 4, rng.below(64)),
+                    rng.usize_below(primaries) as u32,
+                )
+            })
+            .collect();
+        let delta = PlacementDelta {
+            epoch: 2,
+            at_clock: 5,
+            grow_active,
+            moves,
+        };
+        let mut after = before.clone();
+        after.apply(&delta);
+        assert_eq!(after.epoch(), 2);
+        for _ in 0..300 {
+            let key: Key = (rng.next_u32() % 4, rng.below(64));
+            if before.shard_of(&key) != after.shard_of(&key) {
+                assert!(
+                    delta.affects(&key, &before),
+                    "case {case}: owner of {key:?} changed without the delta \
+                     naming it ({} -> {})",
+                    before.shard_of(&key),
+                    after.shard_of(&key)
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_post_migration_routing_agrees_between_client_and_shards() {
+    // Shards never hold the map; they hold forward tables derived from
+    // the handoff plan. For any key in the universe, the shard a
+    // pre-switch client would hit either still owns it or forwards in
+    // ONE hop to exactly the owner the post-switch map names — on the
+    // primary and on every replica chain.
+    for_cases(40, |case, rng| {
+        let primaries = 2 + rng.usize_below(5);
+        let active = 1 + rng.usize_below(primaries);
+        let replicas = rng.usize_below(3);
+        let before = PlacementMap::new(primaries, active, replicas);
+        let keys: Vec<Key> = (0..64u64).map(|i| (rng.next_u32() % 3, i)).collect();
+        let moves: Vec<(Key, u32)> = (0..rng.usize_below(4))
+            .map(|_| {
+                (
+                    keys[rng.usize_below(keys.len())],
+                    rng.usize_below(primaries) as u32,
+                )
+            })
+            .collect();
+        let mult = 1 + rng.usize_below(primaries / active);
+        let delta = PlacementDelta {
+            epoch: 1,
+            at_clock: 3,
+            grow_active: Some((active * mult) as u32),
+            moves,
+        };
+        let plans = plan_shards(&before, &delta, keys.iter().copied());
+        let mut after = before.clone();
+        after.apply(&delta);
+        let mut fwd: Vec<std::collections::HashMap<Key, usize>> =
+            vec![std::collections::HashMap::new(); before.total_shards()];
+        for (id, plan) in plans.iter().enumerate() {
+            for &(k, d) in &plan.outgoing {
+                fwd[id].insert(k, d as usize);
+            }
+        }
+        for &key in &keys {
+            let old = before.shard_of(&key);
+            let new = after.shard_of(&key);
+            let landed = *fwd[old].get(&key).unwrap_or(&old);
+            assert_eq!(
+                landed, new,
+                "case {case}: key {key:?} routed {old} -> {landed}, map says {new}"
+            );
+            assert!(
+                !fwd[landed].contains_key(&key),
+                "case {case}: forward chains must be one hop"
+            );
+            for r in 0..replicas {
+                let old_r = before.replica_of(old, r);
+                let landed_r = *fwd[old_r].get(&key).unwrap_or(&old_r);
+                assert_eq!(
+                    landed_r,
+                    after.replica_of(new, r),
+                    "case {case}: replica chain {r} diverged for {key:?}"
+                );
+            }
         }
     });
 }

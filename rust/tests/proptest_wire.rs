@@ -12,6 +12,7 @@
 use std::sync::Arc;
 
 use essptable::ps::msg::{PushRow, ToShard, ToWorker};
+use essptable::ps::placement::PlacementDelta;
 use essptable::ps::types::{Key, RowDelta};
 use essptable::transport::wire;
 use essptable::transport::{NodeId, Packet};
@@ -65,7 +66,7 @@ fn gen_push_rows(rng: &mut Rng) -> Vec<PushRow> {
         .collect()
 }
 
-const TO_SHARD_VARIANTS: usize = 9;
+const TO_SHARD_VARIANTS: usize = 12;
 
 fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
     match variant {
@@ -105,11 +106,33 @@ fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
         7 => ToShard::Detach {
             worker: rng.usize_below(64),
         },
+        8 => ToShard::MigrateBegin {
+            epoch: rng.next_u64(),
+            at_clock: gen_clock(rng),
+            outgoing: (0..rng.usize_below(6))
+                .map(|_| (gen_key(rng), rng.next_u32() % 16))
+                .collect(),
+            incoming: (0..rng.usize_below(6)).map(|_| gen_key(rng)).collect(),
+        },
+        9 => ToShard::RowHandoff {
+            epoch: rng.next_u64(),
+            key: gen_key(rng),
+            vclock: gen_clock(rng),
+            fresh: gen_clock(rng),
+            exists: rng.f64() < 0.5,
+            data: gen_arc(rng),
+            staged: (0..rng.usize_below(4))
+                .map(|_| (gen_clock(rng), rng.usize_below(64), gen_delta(rng)))
+                .collect(),
+        },
+        10 => ToShard::MigrateCommit {
+            epoch: rng.next_u64(),
+        },
         _ => ToShard::Shutdown,
     }
 }
 
-const TO_WORKER_VARIANTS: usize = 4;
+const TO_WORKER_VARIANTS: usize = 5;
 
 fn gen_to_worker(rng: &mut Rng, variant: usize) -> ToWorker {
     match variant {
@@ -129,9 +152,19 @@ fn gen_to_worker(rng: &mut Rng, variant: usize) -> ToWorker {
             seq: rng.next_u64(),
             rows: gen_push_rows(rng),
         },
-        _ => ToWorker::Bound {
+        3 => ToWorker::Bound {
             shard: rng.usize_below(16),
             granted: rng.f64() < 0.5,
+        },
+        _ => ToWorker::Placement {
+            delta: PlacementDelta {
+                epoch: rng.next_u64(),
+                at_clock: gen_clock(rng),
+                grow_active: (rng.f64() < 0.5).then(|| 1 + rng.next_u32() % 64),
+                moves: (0..rng.usize_below(5))
+                    .map(|_| (gen_key(rng), rng.next_u32() % 16))
+                    .collect(),
+            },
         },
     }
 }
