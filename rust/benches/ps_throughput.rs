@@ -15,6 +15,7 @@ use std::collections::BTreeMap;
 
 use essptable::ps::client::PsClient;
 use essptable::ps::consistency::Consistency;
+use essptable::ps::durability::{DurabilityConfig, FsyncPolicy};
 use essptable::ps::server::{Cluster, ClusterConfig, MigrationSpec, PsApp, TableSpec};
 use essptable::ps::types::Clock;
 use essptable::ps::update::UpdateMap;
@@ -245,6 +246,55 @@ fn bench_migration_2to4(out: &mut Vec<Entry>) {
     ));
 }
 
+/// Durable-log overhead: the headline ESSP workload with the per-shard
+/// WAL enabled under the given fsync policy, directly comparable to the
+/// volatile `e2e_essp3_x4w_get_into` series — what crash tolerance costs
+/// on the update path (`wal=off` isolates the append/encode cost,
+/// `wal=commit` adds one fsync per committed table clock).
+fn bench_wal_overhead(fsync: FsyncPolicy, tag: &str, out: &mut Vec<Entry>) {
+    let workers = 4;
+    let label = format!("e2e essp:3 x{workers}w get_into wal={tag}: 64 rd+inc/clock, 200 clocks");
+    let dir = std::env::temp_dir().join(format!("esspt-bench-wal-{}-{tag}", std::process::id()));
+    let r = bench(&label, 1, 3, || {
+        // Fresh log dir every iteration: leftover generations would put
+        // the next run through recovery and skew the measurement.
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = DurabilityConfig::new(&dir);
+        cfg.fsync = fsync;
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers,
+            shards: 2,
+            consistency: Consistency::Essp { s: 3 },
+            net: NetConfig::instant(),
+            durability: Some(cfg),
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 256, 32));
+        let apps: Vec<Box<dyn PsApp>> = (0..workers)
+            .map(|w| {
+                let mut buf: Vec<f32> = Vec::new();
+                Box::new(move |ps: &mut PsClient, _c: Clock| {
+                    for i in 0..64u64 {
+                        let key = (0, (w as u64 * 64 + i) % 256);
+                        ps.get_into(key, &mut buf);
+                        ps.inc(key, &[0.001f32; 32]);
+                    }
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let _ = cluster.run(apps, 200);
+    });
+    std::fs::remove_dir_all(&dir).ok();
+    let ops = (workers * 64 * 200) as f64;
+    r.print_throughput(ops, "get+inc");
+    out.push((
+        format!("e2e_essp3_x{workers}w_get_into_wal_{tag}"),
+        r.mean.as_secs_f64(),
+        r.throughput(ops),
+    ));
+}
+
 /// Push (ESSP) vs pull (SSP) refresh traffic for the same workload:
 /// message counts + bytes (the batching claim).
 fn bench_push_vs_pull_traffic() {
@@ -431,6 +481,10 @@ fn main() {
     bench_sparse_flush_tcp(&mut entries);
     // Elastic shard plane: a live 2->4 rebalance mid-run.
     bench_migration_2to4(&mut entries);
+    // Crash tolerance: the WAL's cost at both ends of the fsync dial,
+    // versus the volatile e2e_essp3_x4w_get_into series.
+    bench_wal_overhead(FsyncPolicy::Off, "off", &mut entries);
+    bench_wal_overhead(FsyncPolicy::Commit, "commit", &mut entries);
     bench_push_vs_pull_traffic();
     write_json(&entries);
 }

@@ -41,6 +41,7 @@ pub mod util {
 }
 
 pub mod sim {
+    pub mod fault;
     pub mod net;
     pub mod priority;
     pub mod straggler;
@@ -50,9 +51,9 @@ pub mod transport;
 
 pub mod ps {
     pub mod cache;
-    pub mod checkpoint;
     pub mod client;
     pub mod consistency;
+    pub mod durability;
     pub mod msg;
     pub mod placement;
     pub mod policy;
@@ -63,6 +64,10 @@ pub mod ps {
     pub mod update;
     pub mod vap;
     pub mod vclock;
+
+    // `ps::checkpoint` moved under the durability plane; keep the old
+    // path alive for callers and docs.
+    pub use self::durability::checkpoint;
 }
 
 pub mod metrics {

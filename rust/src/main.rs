@@ -39,6 +39,7 @@ use essptable::metrics::export;
 use essptable::ps::checkpoint;
 use essptable::ps::client::{ClientConfig, PsClient};
 use essptable::ps::consistency::Consistency;
+use essptable::ps::durability::{DurabilityConfig, FsyncPolicy};
 use essptable::ps::msg::{ToShard, ToWorker};
 use essptable::ps::placement::{plan_shards, PlacementDelta, PlacementMap};
 use essptable::ps::server::{self, PsApp, RunReport, TableSpec};
@@ -46,6 +47,7 @@ use essptable::ps::shard::Shard;
 use essptable::ps::types::{Clock, Key};
 use essptable::runtime::artifact::ArtifactDir;
 use essptable::runtime::engine::RuntimeService;
+use essptable::sim::fault::{FaultInjector, FaultPlan, ShardAction};
 use essptable::sim::straggler::StragglerModel;
 use essptable::transport::tcp::{LocalSink, PeerEvent, TcpTransport};
 use essptable::transport::{NodeId, TransportSel};
@@ -97,15 +99,23 @@ const USAGE: &str = "usage: essptable <subcommand> [flags]
   cluster:      run-cluster --app logreg|counter --workers N --shards N
                   [--cluster host:p,...] [--clocks N] [--consistency C]
                   [--replicas R] [--active A] [--migrate-at C [--grow-to N]]
+                  [--wal DIR [--fsync always|commit|off]
+                   [--wal-compact-every N]] [--fault-plan SPEC]
                 serve-shard --index I --bind ADDR --shards N --workers N
                   [--dump FILE.ckp] [--replicas R] [--active A]
                   [--migrate-at C --cluster addr,... [--grow-to N]]
+                  [--wal DIR [--fsync P] [--wal-compact-every N]]
+                  [--fault-plan SPEC --cluster addr,...]
                 run-worker  --index W --cluster host:p,... --workers N
                   [--replicas R] [--active A] [--migrate-at C [--grow-to N]]
+                  [--fault-plan SPEC]
   common flags: --workers N --shards N --clocks N --seed N
                 --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0|avap:V0:S
                 --straggler none|uniform:F|... --net lan|instant
                 --transport sim|tcp --replicas R
+                --wal DIR --fsync always|commit|off --fault-plan SPEC
+                  (SPEC e.g. 'seed=7;kill=s0@5;drop=w*-s*:0.01', see
+                   sim::fault docs for the grammar)
                 --out DIR  (see README.md for per-command flags)";
 
 fn opts(args: &Args) -> anyhow::Result<ExpOpts> {
@@ -138,6 +148,7 @@ fn migration_delta(args: &Args, at_clock: Clock, shards: usize) -> PlacementDelt
         epoch: 1,
         at_clock,
         grow_active: Some(grow_to as u32),
+        promote: None,
         moves: vec![],
     }
 }
@@ -155,6 +166,24 @@ fn migrate_at(args: &Args) -> anyhow::Result<Option<Clock>> {
 
 fn consistency(args: &Args, default: &str) -> anyhow::Result<Consistency> {
     Consistency::parse(&args.str("consistency", default)).map_err(anyhow::Error::msg)
+}
+
+/// Parse the durability flags: `--wal DIR` enables the per-shard
+/// write-ahead log + checkpoint generations, `--fsync` picks the sync
+/// policy, `--wal-compact-every` the compaction cadence in commits.
+fn durability_config(args: &Args) -> anyhow::Result<Option<DurabilityConfig>> {
+    let Some(dir) = args.opt_str("wal") else {
+        return Ok(None);
+    };
+    let mut cfg = DurabilityConfig::new(dir);
+    cfg.fsync = FsyncPolicy::parse(&args.str("fsync", "commit")).map_err(anyhow::Error::msg)?;
+    cfg.compact_every = args.u64("wal-compact-every", 64);
+    Ok(Some(cfg))
+}
+
+/// Parse `--fault-plan` (absent or empty = no faults).
+fn fault_plan(args: &Args) -> anyhow::Result<FaultPlan> {
+    FaultPlan::parse(&args.str("fault-plan", "")).map_err(anyhow::Error::msg)
 }
 
 fn mf_config(args: &Args) -> MfConfig {
@@ -521,6 +550,32 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         "--index {index} out of range for {total} shard nodes \
          ({shards} primaries x (1 + {replicas} replicas))"
     );
+    let durability = durability_config(args)?;
+    let plan = fault_plan(args)?;
+    for f in &plan.shards {
+        ensure!(
+            f.shard < total,
+            "fault plan targets shard {} but only {total} shard nodes are configured",
+            f.shard
+        );
+    }
+    let my_kill = plan
+        .shards
+        .iter()
+        .find(|f| f.shard == index && f.action == ShardAction::Kill)
+        .copied();
+    if my_kill.is_some() {
+        ensure!(
+            replicas >= 1,
+            "kill faults need --replicas >= 1 (the dead primary's replica is promoted)"
+        );
+        ensure!(
+            migrate.is_none(),
+            "kill faults cannot combine with a migration: both planes advance \
+             the placement epoch and their fences are not ordered against each other"
+        );
+        ensure!(index < shards, "kill targets must be primaries, got shard {index}");
+    }
     let app = dist_app(args)?;
     let row_len = server::table_row_lens(&app.tables);
 
@@ -544,11 +599,18 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         });
     }
     let (events_tx, events_rx) = channel::<PeerEvent>();
-    let (transport, addr) = TcpTransport::server(
+    // Each process evaluates the same seeded plan, and writer threads see
+    // each link's packets in FIFO order — so probabilistic verdicts are
+    // identical across runs, process boundaries notwithstanding.
+    let injector = plan
+        .has_link_faults()
+        .then(|| Arc::new(FaultInjector::new(plan.clone())));
+    let (transport, addr) = TcpTransport::server_with_faults(
         &bind,
         vec![(NodeId::Shard(index), LocalSink::Shard(shard_tx.clone()))],
         Some(events_tx),
         workers,
+        injector,
     )?;
     let role = if placement.is_replica(index) {
         format!("replica of shard {}", placement.primary_of(index))
@@ -559,22 +621,28 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         "shard {index}/{total} ({role}) listening on {addr} ({workers} workers expected, {})",
         consistency.label()
     );
-    // Migration handoffs need shard->shard links: dial every
-    // higher-indexed peer (one connection per unordered pair, carrying
-    // both directions).
-    if migrate.is_some() {
+    // Shard->shard links. Migration handoffs dial every higher-indexed
+    // peer (one connection per unordered pair, carrying both directions);
+    // a kill-targeted primary dials its replica up front so the dying
+    // Promote message has a live link to travel.
+    let peers: Vec<usize> = if migrate.is_some() {
+        (index + 1..total).collect()
+    } else if my_kill.is_some() {
+        vec![placement.replica_of(index, 0)]
+    } else {
+        Vec::new()
+    };
+    if !peers.is_empty() {
         let cluster_addrs = args.strs("cluster");
         ensure!(
             cluster_addrs.len() == total,
-            "serve-shard --migrate-at needs --cluster listing all {total} shard \
-             addresses (got {})",
+            "serve-shard with --migrate-at or a kill fault needs --cluster \
+             listing all {total} shard addresses (got {})",
             cluster_addrs.len()
         );
         let timeout = Duration::from_secs(args.u64("connect-timeout-s", 30));
-        for (j, a) in cluster_addrs.iter().enumerate() {
-            if j <= index {
-                continue;
-            }
+        for j in peers {
+            let a = &cluster_addrs[j];
             let sa = a
                 .to_socket_addrs()
                 .with_context(|| format!("resolving peer shard {j} address {a:?}"))?
@@ -588,7 +656,14 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
 
     let my_primary = placement.primary_of(index);
     let mut shard = if placement.is_replica(index) {
-        Shard::replica(index, workers, transport.handle(), row_len, deterministic)
+        Shard::replica(
+            index,
+            workers,
+            consistency,
+            transport.handle(),
+            row_len,
+            deterministic,
+        )
     } else {
         Shard::new(
             index,
@@ -604,6 +679,32 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
             shard.init_row(key, data);
         }
     });
+    if let Some(dur) = &durability {
+        // On-disk paths embed the shard id, so every node of a local
+        // cluster may share one --wal directory without collisions.
+        let recovered = shard.enable_durability(dur.clone())?;
+        if recovered {
+            eprintln!("shard {index}: recovered durable state from {:?}", dur.dir);
+        }
+    }
+    let scheduled = plan.shard_faults(index);
+    if !scheduled.is_empty() {
+        shard.set_faults(scheduled);
+    }
+    shard.set_fsync_stall(plan.fsync_stall);
+    if let Some(f) = my_kill {
+        let node = placement.replica_of(index, 0);
+        shard.arm_promotion(
+            node,
+            PlacementDelta {
+                epoch: placement.epoch() + 1,
+                at_clock: f.at_clock,
+                grow_active: None,
+                promote: Some((index as u32, node as u32)),
+                moves: Vec::new(),
+            },
+        );
+    }
     let (dump_tx, dump_rx) = channel();
     let handle = essptable::ps::shard::spawn(shard, shard_rx, dump_tx);
 
@@ -656,6 +757,20 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
                 bail!("shard {index}: transport event stream ended early")
             }
         }
+    }
+    if my_kill.is_some() {
+        // The shard thread died at its kill clock, right after sending the
+        // Promote to its replica: there is no final state to dump here —
+        // the promoted replica is the authoritative copy now (run-cluster
+        // re-targets --dump at it), so this process just winds down.
+        let _ = handle.join();
+        println!(
+            "shard {index}: killed by fault plan (replica {} promoted)",
+            placement.replica_of(index, 0)
+        );
+        transport.close_send();
+        transport.join();
+        return Ok(());
     }
     let _ = shard_tx.send(ToShard::Shutdown);
     let fin = dump_rx
@@ -719,10 +834,17 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
         });
     }
     let timeout = Duration::from_secs(args.u64("connect-timeout-s", 30));
-    let transport = TcpTransport::client(
+    // Same seeded plan as every other process: this worker's outbound
+    // links get their deterministic share of the injected faults.
+    let plan = fault_plan(args)?;
+    let injector = plan
+        .has_link_faults()
+        .then(|| Arc::new(FaultInjector::new(plan.clone())));
+    let transport = TcpTransport::client_with_faults(
         vec![(NodeId::Worker(index), LocalSink::Worker(worker_tx))],
         &conns,
         timeout,
+        injector,
     )?;
     println!(
         "worker {index}/{workers}: connected to {total} shard node(s), {} clocks of {}",
@@ -813,6 +935,32 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
         None
     };
     let total = shards * (1 + replicas);
+    // Fault plan: validated HERE for the same reason as the migration
+    // geometry below — one actionable error beats N panicking children.
+    let fault_spec = args.str("fault-plan", "");
+    let plan = FaultPlan::parse(&fault_spec).map_err(anyhow::Error::msg)?;
+    let killed = plan.killed_shards();
+    for f in &plan.shards {
+        ensure!(
+            f.shard < total,
+            "fault plan targets shard {} but only {total} shard nodes are configured",
+            f.shard
+        );
+    }
+    if !killed.is_empty() {
+        ensure!(
+            replicas >= 1,
+            "kill faults need --replicas >= 1 (each dead primary promotes its replica)"
+        );
+        ensure!(
+            migrate.is_none(),
+            "kill faults cannot combine with --migrate-at: both planes advance \
+             the placement epoch and their fences are not ordered against each other"
+        );
+        for &k in &killed {
+            ensure!(k < shards, "kill targets must be primaries, got shard {k}");
+        }
+    }
     // Validate the migration geometry HERE, before N processes spawn:
     // every child derives the same delta and would otherwise hit the
     // PlacementMap asserts mid-run, leaving the operator with a pile of
@@ -893,6 +1041,17 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
         Vec::new()
     };
     let cluster_list = addrs.join(",");
+    // Durability flags forwarded verbatim to every shard process (paths
+    // embed the shard id, so one shared directory is safe).
+    let mut dur_flags: Vec<String> = Vec::new();
+    if let Some(dir) = args.opt_str("wal") {
+        dur_flags.extend(["--wal".into(), dir]);
+        dur_flags.extend(["--fsync".into(), args.str("fsync", "commit")]);
+        dur_flags.extend([
+            "--wal-compact-every".into(),
+            args.u64("wal-compact-every", 64).to_string(),
+        ]);
+    }
     // Migration flags shared verbatim by every process, so all derive the
     // identical placement delta.
     let mut mig_flags: Vec<String> = Vec::new();
@@ -929,21 +1088,35 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             "--deterministic".into(),
             (if deterministic { "true" } else { "false" }).to_string(),
         ];
-        if i < shards {
-            // Only primaries dump: they are the authoritative copies the
-            // launcher merges.
-            let dump = out.join(format!("shard_{i}.ckp"));
+        // Dump assignments: each surviving primary dumps its own state; a
+        // killed primary's dump is re-targeted at the replica promoted in
+        // its place (replica 0), which writes the same shard_<p>.ckp the
+        // merge step below expects.
+        let dump_owner = if i < shards {
+            (!killed.contains(&i)).then_some(i)
+        } else {
+            killed.iter().find(|&&p| shards + p * replicas == i).copied()
+        };
+        if let Some(owner) = dump_owner {
+            let dump = out.join(format!("shard_{owner}.ckp"));
             sargs.extend([
                 "--dump".into(),
                 dump.to_str().context("non-utf8 dump path")?.to_string(),
             ]);
             dumps.push(dump);
         }
-        if migrate.is_some() {
-            // Peer dials for handoff links need the full address list.
+        if migrate.is_some() || killed.contains(&i) {
+            // Peer dials (handoff links, the dying Promote) need the full
+            // address list.
             sargs.extend(["--cluster".into(), cluster_list.clone()]);
+        }
+        if migrate.is_some() {
             sargs.extend(mig_flags.iter().cloned());
         }
+        if !fault_spec.is_empty() {
+            sargs.extend(["--fault-plan".into(), fault_spec.clone()]);
+        }
+        sargs.extend(dur_flags.iter().cloned());
         sargs.extend(app_flags.iter().cloned());
         let child = Command::new(&exe).args(&sargs).spawn();
         let child = match child {
@@ -976,6 +1149,9 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             app_name.clone(),
         ];
         wargs.extend(mig_flags.iter().cloned());
+        if !fault_spec.is_empty() {
+            wargs.extend(["--fault-plan".into(), fault_spec.clone()]);
+        }
         wargs.extend(app_flags.iter().cloned());
         let child = Command::new(&exe).args(&wargs).spawn();
         let child = match child {

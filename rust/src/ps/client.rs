@@ -208,10 +208,13 @@ impl PsClient {
         self.started.elapsed().as_secs_f64()
     }
 
+    /// Send to a *logical* shard: the one chokepoint where logical ids
+    /// become physical addresses, so a failed-over primary transparently
+    /// re-routes to its promoted replica everywhere.
     fn send(&self, shard: usize, msg: ToShard) {
         self.net.send(
             NodeId::Worker(self.worker),
-            NodeId::Shard(shard),
+            NodeId::Shard(self.placement.node_of(shard)),
             Packet::ToShard(msg),
         );
     }
@@ -294,10 +297,13 @@ impl PsClient {
     /// arrival (a late learner activates immediately; its earlier
     /// flushes are conserved via the old owner's forward table).
     fn maybe_activate_placement(&mut self) {
+        // A fence-free delta (pure promotion) activates on arrival: it
+        // moves no keys, and waiting for a clock boundary could deadlock
+        // a worker blocked reading from the dead node.
         let activate = self
             .pending_placement
             .as_ref()
-            .is_some_and(|d| self.clock >= d.at_clock);
+            .is_some_and(|d| d.fence_free() || self.clock >= d.at_clock);
         if !activate {
             return;
         }
@@ -313,6 +319,34 @@ impl PsClient {
             if now != old {
                 self.send(
                     now,
+                    ToShard::Register {
+                        key,
+                        worker: self.worker,
+                    },
+                );
+            }
+        }
+        if let Some((primary, _)) = delta.promote {
+            let primary = primary as usize;
+            // The dead primary can never reply: un-track pulls sent to it
+            // so blocked reads re-fire (through the send boundary they now
+            // reach the promoted node)...
+            self.pulls_in_flight.retain(|_, target| *target != primary);
+            // ...clear any revoked value-bound grant the dead node left
+            // behind (the promoted node's fresh ledger re-revokes if it
+            // must)...
+            self.policy.on_bound(primary, true);
+            // ...and re-register this worker's keys with the promoted
+            // node, which never saw the registrations the primary held.
+            let keys: Vec<Key> = self
+                .registered
+                .iter()
+                .filter(|k| self.placement.shard_of(k) == primary)
+                .copied()
+                .collect();
+            for key in keys {
+                self.send(
+                    primary,
                     ToShard::Register {
                         key,
                         worker: self.worker,
@@ -638,6 +672,12 @@ impl PsClient {
                 // model's staleness bound.
                 for r in 0..replicas {
                     let rep = primaries + shard * replicas + r;
+                    // A promoted replica already receives the primary-
+                    // addressed copy (the send boundary re-routes it): a
+                    // duplicate here would double-apply every delta.
+                    if rep == self.placement.node_of(shard) {
+                        continue;
+                    }
                     self.send(
                         rep,
                         ToShard::Update {
@@ -664,6 +704,12 @@ impl PsClient {
         // bounds replica read lag and lets an idle shard accept migrated
         // keys mid-run with a live clock.
         for shard in 0..total {
+            // A failed-over primary's node is dead, and its promoted
+            // replica commits its OWN tick below — a re-routed second
+            // copy would double-commit the clock there.
+            if self.placement.node_of(shard) != shard {
+                continue;
+            }
             self.send(
                 shard,
                 ToShard::ClockTick {

@@ -2,54 +2,96 @@
 //!
 //! A production PS needs durable state (the paper's related-work section
 //! concedes fault tolerance to Hadoop/Spark; a real release closes that
-//! gap). Format: a small header, then per row: key (table u32, row u64),
-//! length u32, f32 payload — all little-endian, written via buffered I/O.
-//! Snapshots are taken from a `RunReport`'s final tables or injected into
-//! a `TableSpec` initializer to resume a run.
+//! gap). Two formats share one loader:
+//!
+//! * **v1** (`ESSPCKP1`): per row, key (table u32, row u64), length u32,
+//!   f32 payload — the final-dump format `main.rs` merges.
+//! * **v2** (`ESSPCKP2`): v1 plus a per-row `fresh` clock (best-effort
+//!   freshness) between the key and the length — the compaction snapshot
+//!   the WAL recovery path loads, so a recovered shard answers freshness
+//!   queries identically to the uncrashed one.
+//!
+//! All fields little-endian, written via buffered I/O. Every save is
+//! crash-atomic ([`super::write_atomic`]): a reader can observe the old
+//! checkpoint or the new one, never a torn hybrid. Snapshots are taken
+//! from a `RunReport`'s final tables or injected into a `TableSpec`
+//! initializer to resume a run.
 
 use std::collections::HashMap;
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::server::TableSpec;
-use super::types::{Key, RowId, TableId};
+use crate::ps::server::TableSpec;
+use crate::ps::types::{Clock, Key, RowId, TableId, NEVER};
 
 const MAGIC: &[u8; 8] = b"ESSPCKP1";
+const MAGIC2: &[u8; 8] = b"ESSPCKP2";
 
-/// Write a checkpoint of `rows` to `path`.
+/// Write a v1 checkpoint of `rows` to `path`, crash-atomically.
 pub fn save(path: &Path, rows: &HashMap<Key, Vec<f32>>) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
-    w.write_all(MAGIC)?;
-    w.write_all(&(rows.len() as u64).to_le_bytes())?;
     // Sort keys for deterministic output (useful for diffing checkpoints).
     let mut keys: Vec<&Key> = rows.keys().collect();
     keys.sort();
-    for key in keys {
-        let data = &rows[key];
-        w.write_all(&key.0.to_le_bytes())?;
-        w.write_all(&key.1.to_le_bytes())?;
-        w.write_all(&(data.len() as u32).to_le_bytes())?;
-        for x in data {
-            w.write_all(&x.to_le_bytes())?;
+    super::write_atomic(path, |w| {
+        w.write_all(MAGIC)?;
+        w.write_all(&(rows.len() as u64).to_le_bytes())?;
+        for key in keys {
+            let data = &rows[key];
+            w.write_all(&key.0.to_le_bytes())?;
+            w.write_all(&key.1.to_le_bytes())?;
+            w.write_all(&(data.len() as u32).to_le_bytes())?;
+            for x in data {
+                w.write_all(&x.to_le_bytes())?;
+            }
         }
-    }
-    w.flush()?;
-    Ok(())
+        Ok(())
+    })
 }
 
-/// Read a checkpoint back.
-///
-/// Hardened against corrupt/truncated files: the declared row count and
-/// every per-row payload length are validated against the file's actual
-/// size *before* any allocation, so a bad header yields a context-rich
-/// error instead of a multi-GB preallocation attempt.
+/// Write a v2 checkpoint (rows with their `fresh` clocks), crash-atomically
+/// and in deterministic key order.
+pub fn save_v2(path: &Path, rows: &[(Key, Vec<f32>, Clock)]) -> Result<()> {
+    let mut order: Vec<usize> = (0..rows.len()).collect();
+    order.sort_by_key(|&i| rows[i].0);
+    super::write_atomic(path, |w| {
+        w.write_all(MAGIC2)?;
+        w.write_all(&(rows.len() as u64).to_le_bytes())?;
+        for &i in &order {
+            let (key, data, fresh) = &rows[i];
+            w.write_all(&key.0.to_le_bytes())?;
+            w.write_all(&key.1.to_le_bytes())?;
+            w.write_all(&fresh.to_le_bytes())?;
+            w.write_all(&(data.len() as u32).to_le_bytes())?;
+            for x in data {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    })
+}
+
+/// Read a checkpoint back, dropping freshness (v1 or v2 on disk).
 pub fn load(path: &Path) -> Result<HashMap<Key, Vec<f32>>> {
+    Ok(load_rows(path)?
+        .into_iter()
+        .map(|(key, data, _)| (key, data))
+        .collect())
+}
+
+/// Read a checkpoint back with per-row `fresh` clocks. A v1 file loads
+/// with `fresh = NEVER` for every row.
+pub fn load_v2(path: &Path) -> Result<Vec<(Key, Vec<f32>, Clock)>> {
+    load_rows(path)
+}
+
+/// Shared loader, hardened against corrupt/truncated files: the declared
+/// row count and every per-row payload length are validated against the
+/// file's actual size *before* any allocation, so a bad header yields a
+/// context-rich error instead of a multi-GB preallocation attempt.
+fn load_rows(path: &Path) -> Result<Vec<(Key, Vec<f32>, Clock)>> {
     let file = File::open(path).with_context(|| format!("open {path:?}"))?;
     let file_len = file
         .metadata()
@@ -59,23 +101,26 @@ pub fn load(path: &Path) -> Result<HashMap<Key, Vec<f32>>> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)
         .with_context(|| format!("{path:?}: truncated before magic"))?;
-    if &magic != MAGIC {
+    let v2 = &magic == MAGIC2;
+    if !v2 && &magic != MAGIC {
         bail!("{path:?} is not an ESSPTable checkpoint (bad magic)");
     }
     let mut buf8 = [0u8; 8];
     r.read_exact(&mut buf8)
         .with_context(|| format!("{path:?}: truncated header"))?;
     let n = u64::from_le_bytes(buf8);
-    // Each row takes at least 16 bytes (table u32 + row u64 + length u32):
-    // a count the file cannot possibly hold is a corrupt header.
+    // Minimum bytes per row: key (u32 + u64) + length u32, plus the fresh
+    // clock (i64) in v2. A count the file cannot possibly hold is a
+    // corrupt header.
+    let min_row = if v2 { 24 } else { 16 };
     let body_len = file_len.saturating_sub(16);
-    if n > body_len / 16 {
+    if n > body_len / min_row {
         bail!(
             "{path:?}: header claims {n} rows but only {body_len} bytes of row data \
              follow — corrupt or truncated checkpoint"
         );
     }
-    let mut rows = HashMap::with_capacity(n as usize);
+    let mut rows = Vec::with_capacity(n as usize);
     let mut buf4 = [0u8; 4];
     let mut payload = Vec::new();
     for i in 0..n {
@@ -84,6 +129,12 @@ pub fn load(path: &Path) -> Result<HashMap<Key, Vec<f32>>> {
         let table = TableId::from_le_bytes(buf4);
         r.read_exact(&mut buf8).with_context(|| row_ctx("row id"))?;
         let row = RowId::from_le_bytes(buf8);
+        let fresh = if v2 {
+            r.read_exact(&mut buf8).with_context(|| row_ctx("fresh clock"))?;
+            Clock::from_le_bytes(buf8)
+        } else {
+            NEVER
+        };
         r.read_exact(&mut buf4).with_context(|| row_ctx("length"))?;
         let len = u32::from_le_bytes(buf4) as usize;
         if len as u64 * 4 > body_len {
@@ -101,7 +152,7 @@ pub fn load(path: &Path) -> Result<HashMap<Key, Vec<f32>>> {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        rows.insert((table, row), data);
+        rows.push(((table, row), data, fresh));
     }
     Ok(rows)
 }
@@ -133,7 +184,6 @@ mod tests {
     use crate::ps::client::PsClient;
     use crate::ps::consistency::Consistency;
     use crate::ps::server::{Cluster, ClusterConfig, PsApp};
-    use crate::ps::types::Clock;
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("esspt-ckp-{}-{name}", std::process::id()))
@@ -153,6 +203,60 @@ mod tests {
     }
 
     #[test]
+    fn v2_roundtrips_fresh_clocks() {
+        let rows = vec![
+            ((0u32, 7u64), vec![1.0f32, -2.5], 42i64),
+            ((0, 2), vec![0.5; 4], NEVER),
+            ((3, 0), vec![], 0),
+        ];
+        let path = tmp("v2rt.bin");
+        save_v2(&path, &rows).unwrap();
+        let mut back = load_v2(&path).unwrap();
+        back.sort_by_key(|r| r.0);
+        let mut want = rows.clone();
+        want.sort_by_key(|r| r.0);
+        assert_eq!(back, want);
+        // The clock-less loader reads the same file.
+        let flat = load(&path).unwrap();
+        assert_eq!(flat[&(0, 7)], vec![1.0, -2.5]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v1_loads_through_v2_with_never_freshness() {
+        let mut rows = HashMap::new();
+        rows.insert((0u32, 1u64), vec![2.0f32]);
+        let path = tmp("v1v2.bin");
+        save(&path, &rows).unwrap();
+        let back = load_v2(&path).unwrap();
+        assert_eq!(back, vec![((0, 1), vec![2.0], NEVER)]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_is_crash_atomic_over_a_previous_checkpoint() {
+        // A leftover temp file from a save that "crashed" before its
+        // rename must be invisible: the target file still loads the old
+        // state, and the next successful save simply replaces the temp.
+        let mut old = HashMap::new();
+        old.insert((0u32, 0u64), vec![1.0f32]);
+        let path = tmp("atomic.bin");
+        save(&path, &old).unwrap();
+        let tmp_path = path.with_file_name(format!(
+            "{}.tmp",
+            path.file_name().unwrap().to_string_lossy()
+        ));
+        std::fs::write(&tmp_path, b"torn half-written junk").unwrap();
+        assert_eq!(load(&path).unwrap(), old);
+        let mut new = HashMap::new();
+        new.insert((0u32, 0u64), vec![2.0f32]);
+        save(&path, &new).unwrap();
+        assert_eq!(load(&path).unwrap(), new);
+        assert!(!tmp_path.exists());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn rejects_garbage() {
         let path = tmp("garbage.bin");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
@@ -164,15 +268,17 @@ mod tests {
     fn rejects_absurd_row_count_without_allocating() {
         // Valid magic, then a row count the 0-byte body cannot hold: must
         // fail fast on the header check (a naive with_capacity here would
-        // try to reserve for u64::MAX entries).
-        let path = tmp("hugecount.bin");
-        let mut bytes = Vec::new();
-        bytes.extend_from_slice(MAGIC);
-        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
-        std::fs::write(&path, &bytes).unwrap();
-        let err = format!("{:#}", load(&path).unwrap_err());
-        assert!(err.contains("corrupt or truncated"), "{err}");
-        std::fs::remove_file(path).ok();
+        // try to reserve for u64::MAX entries). Same check for v2.
+        for magic in [MAGIC, MAGIC2] {
+            let path = tmp("hugecount.bin");
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(magic);
+            bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+            std::fs::write(&path, &bytes).unwrap();
+            let err = format!("{:#}", load(&path).unwrap_err());
+            assert!(err.contains("corrupt or truncated"), "{err}");
+            std::fs::remove_file(path).ok();
+        }
     }
 
     #[test]
@@ -251,5 +357,15 @@ mod tests {
         assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
         std::fs::remove_file(p1).ok();
         std::fs::remove_file(p2).ok();
+
+        let rows2 = vec![((0u32, 1u64), vec![1.0f32], 5i64), ((0, 0), vec![2.0], 3)];
+        let (p3, p4) = (tmp("det3.bin"), tmp("det4.bin"));
+        save_v2(&p3, &rows2).unwrap();
+        let mut reversed = rows2.clone();
+        reversed.reverse();
+        save_v2(&p4, &reversed).unwrap();
+        assert_eq!(std::fs::read(&p3).unwrap(), std::fs::read(&p4).unwrap());
+        std::fs::remove_file(p3).ok();
+        std::fs::remove_file(p4).ok();
     }
 }

@@ -1,0 +1,266 @@
+//! Durability plane: crash-atomic checkpoints ([`checkpoint`]), the
+//! per-shard write-ahead delta log ([`wal`]), and the generation-paired
+//! file layout that binds the two.
+//!
+//! ## File layout
+//!
+//! A durable shard owns one *generation* `g` of paired files inside the
+//! configured directory:
+//!
+//! ```text
+//! shard-<id>.gen<g>.ckpt   row snapshot taken at a commit boundary
+//! shard-<id>.gen<g>.wal    wire-encoded ToShard frames appended since
+//! ```
+//!
+//! Compaction at a commit boundary writes generation `g+1` (checkpoint
+//! first, then a seed WAL carrying the not-yet-committed staged tail),
+//! each file crash-atomically, and only then deletes generation `g` — so
+//! a crash at any instant leaves at least one complete pair on disk.
+//! Recovery loads the highest generation for which BOTH files exist and
+//! replays the WAL through the shard's normal deterministic
+//! (clock, worker)-sorted staged replay, which makes the recovered state
+//! bit-identical to the uncrashed run (see `ps::server`, *Durability &
+//! Failover*).
+
+pub mod checkpoint;
+pub mod wal;
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// When the write-ahead log calls `fsync`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Sync after every appended frame. Maximum durability, maximum
+    /// latency — an OS crash loses nothing that `append` returned for.
+    Always,
+    /// Sync once per committed table clock (the default). The durable
+    /// prefix always ends at a commit boundary, so recovery never sees a
+    /// half-committed clock; an OS crash can lose at most the clock in
+    /// progress.
+    Commit,
+    /// Never sync; the OS page cache decides. Survives process crashes
+    /// (the kernel still holds the writes) but not power loss — the
+    /// honest baseline for WAL-overhead benchmarks.
+    Off,
+}
+
+impl FsyncPolicy {
+    /// Parse a `--fsync` flag value: `always` | `commit` | `off`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "always" => Ok(Self::Always),
+            "commit" => Ok(Self::Commit),
+            "off" => Ok(Self::Off),
+            other => Err(format!(
+                "unknown fsync policy {other:?} (expected always|commit|off)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Always => "always",
+            Self::Commit => "commit",
+            Self::Off => "off",
+        }
+    }
+}
+
+/// Per-shard durability configuration (the `--wal` / `--fsync` /
+/// `--wal-compact-every` flags).
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    /// Directory holding the generation-paired files of every shard.
+    pub dir: PathBuf,
+    /// When WAL appends become durable.
+    pub fsync: FsyncPolicy,
+    /// Compact the log into a fresh checkpoint every this many table-clock
+    /// commits; `0` disables periodic compaction (the log only truncates
+    /// on shutdown).
+    pub compact_every: u64,
+}
+
+impl DurabilityConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            fsync: FsyncPolicy::Commit,
+            compact_every: 64,
+        }
+    }
+}
+
+/// Checkpoint path of `shard`'s generation `generation`.
+pub fn ckpt_path(dir: &Path, shard: usize, generation: u64) -> PathBuf {
+    dir.join(format!("shard-{shard}.gen{generation}.ckpt"))
+}
+
+/// WAL path of `shard`'s generation `generation`.
+pub fn wal_path(dir: &Path, shard: usize, generation: u64) -> PathBuf {
+    dir.join(format!("shard-{shard}.gen{generation}.wal"))
+}
+
+/// Highest generation for which BOTH the checkpoint and the WAL exist —
+/// the one recovery must load. An orphan half (a compaction that crashed
+/// between its two writes) is ignored; `None` means no durable state.
+pub fn latest_generation(dir: &Path, shard: usize) -> Option<u64> {
+    let (ckpts, wals) = scan_generations(dir, shard)?;
+    ckpts.into_iter().filter(|g| wals.contains(g)).max()
+}
+
+/// Best-effort removal of every generation of `shard`'s files strictly
+/// below `keep` (called after a compaction has produced generation
+/// `keep`). Leftovers are harmless — recovery always picks the highest
+/// complete pair — so deletion errors are ignored.
+pub fn purge_generations_below(dir: &Path, shard: usize, keep: u64) {
+    let Some((ckpts, wals)) = scan_generations(dir, shard) else {
+        return;
+    };
+    for g in ckpts.into_iter().filter(|&g| g < keep) {
+        let _ = std::fs::remove_file(ckpt_path(dir, shard, g));
+    }
+    for g in wals.into_iter().filter(|&g| g < keep) {
+        let _ = std::fs::remove_file(wal_path(dir, shard, g));
+    }
+}
+
+/// All generation numbers present for `shard`, split by file kind.
+fn scan_generations(dir: &Path, shard: usize) -> Option<(Vec<u64>, Vec<u64>)> {
+    let prefix = format!("shard-{shard}.gen");
+    let mut ckpts = Vec::new();
+    let mut wals = Vec::new();
+    for entry in std::fs::read_dir(dir).ok()?.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix(&prefix) else {
+            continue;
+        };
+        if let Some(g) = rest.strip_suffix(".ckpt").and_then(|s| s.parse().ok()) {
+            ckpts.push(g);
+        } else if let Some(g) = rest.strip_suffix(".wal").and_then(|s| s.parse().ok()) {
+            wals.push(g);
+        }
+    }
+    Some((ckpts, wals))
+}
+
+/// Crash-atomic file replacement: stream into `<path>.tmp`, flush and
+/// fsync it, rename over `path`, then fsync the parent directory so the
+/// rename itself survives power loss. If the write closure (or any I/O
+/// step before the rename) fails, the temp file is removed and the
+/// previous contents of `path`, if any, are untouched — a reader never
+/// observes a torn file under this helper.
+pub fn write_atomic(
+    path: &Path,
+    write: impl FnOnce(&mut BufWriter<File>) -> Result<()>,
+) -> Result<()> {
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    if let Some(d) = dir {
+        std::fs::create_dir_all(d).with_context(|| format!("create dir {d:?}"))?;
+    }
+    let name = path
+        .file_name()
+        .with_context(|| format!("atomic write target {path:?} has no file name"))?;
+    let tmp = path.with_file_name(format!("{}.tmp", name.to_string_lossy()));
+    let written = (|| -> Result<()> {
+        let file = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        let mut w = BufWriter::new(file);
+        write(&mut w)?;
+        w.flush().with_context(|| format!("flush {tmp:?}"))?;
+        w.get_ref()
+            .sync_all()
+            .with_context(|| format!("fsync {tmp:?}"))?;
+        Ok(())
+    })();
+    if let Err(e) = written {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    if let Some(d) = dir {
+        // Directory fsync makes the rename durable; best-effort on
+        // filesystems that refuse to open directories.
+        if let Ok(f) = File::open(d) {
+            let _ = f.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("esspt-dur-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_labels() {
+        for s in ["always", "commit", "off"] {
+            assert_eq!(FsyncPolicy::parse(s).unwrap().label(), s);
+        }
+        assert!(FsyncPolicy::parse("sometimes").unwrap_err().contains("sometimes"));
+    }
+
+    #[test]
+    fn latest_generation_requires_a_complete_pair() {
+        let dir = tmp_dir("gens");
+        assert_eq!(latest_generation(&dir, 0), None);
+        std::fs::write(ckpt_path(&dir, 0, 1), b"x").unwrap();
+        std::fs::write(wal_path(&dir, 0, 1), b"x").unwrap();
+        std::fs::write(ckpt_path(&dir, 0, 2), b"x").unwrap();
+        std::fs::write(wal_path(&dir, 0, 2), b"x").unwrap();
+        // Generation 3's compaction "crashed" between its two writes.
+        std::fs::write(ckpt_path(&dir, 0, 3), b"x").unwrap();
+        // Another shard's files must not leak into shard 0's scan.
+        std::fs::write(ckpt_path(&dir, 1, 9), b"x").unwrap();
+        std::fs::write(wal_path(&dir, 1, 9), b"x").unwrap();
+        assert_eq!(latest_generation(&dir, 0), Some(2));
+        assert_eq!(latest_generation(&dir, 1), Some(9));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn purge_keeps_the_named_generation() {
+        let dir = tmp_dir("purge");
+        for g in 1..=3 {
+            std::fs::write(ckpt_path(&dir, 0, g), b"x").unwrap();
+            std::fs::write(wal_path(&dir, 0, g), b"x").unwrap();
+        }
+        purge_generations_below(&dir, 0, 3);
+        assert_eq!(latest_generation(&dir, 0), Some(3));
+        assert!(!ckpt_path(&dir, 0, 1).exists());
+        assert!(!wal_path(&dir, 0, 2).exists());
+        assert!(ckpt_path(&dir, 0, 3).exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn failed_atomic_write_leaves_original_intact() {
+        let dir = tmp_dir("atomic");
+        let path = dir.join("state.bin");
+        write_atomic(&path, |w| {
+            w.write_all(b"good state")?;
+            Ok(())
+        })
+        .unwrap();
+        let err = write_atomic(&path, |w| {
+            w.write_all(b"half-writ")?;
+            bail!("disk exploded mid-write");
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("disk exploded"));
+        assert_eq!(std::fs::read(&path).unwrap(), b"good state");
+        // The torn temp file must not linger.
+        assert!(!dir.join("state.bin.tmp").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

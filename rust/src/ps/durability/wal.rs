@@ -1,0 +1,418 @@
+//! Per-shard write-ahead delta log.
+//!
+//! The on-disk format is a 22-byte header followed by a stream of
+//! wire-encoded [`ToShard`] frames — the *same* `transport::wire` codec
+//! that frames the TCP stream. There is exactly one row encoding in the
+//! system, and the log reader inherits the codec's defensive decoding
+//! (bounded lengths, strictly validated sparse pairs) for free. Frames
+//! are written with `src = Coordinator, dst = Shard(logical)` as a fixed
+//! convention; the addressing bytes are part of the frame layout but are
+//! not consulted on replay.
+//!
+//! The log is append-only. [`FsyncPolicy`] decides when appends become
+//! durable: per frame (`always`), per committed table clock (`commit`),
+//! or never (`off`). Reading comes in two flavors: [`replay`] is lenient
+//! — a torn tail, the expected artifact of a crash mid-append, truncates
+//! the log at the last whole frame and reports the dropped byte count —
+//! while [`replay_strict`] treats any trailing garbage as an error.
+//! Neither allocates from an attacker-controlled length: a frame whose
+//! declared length overruns the file is rejected *before* any buffer is
+//! sized to it.
+
+use std::fs::File;
+use std::io::{BufWriter, Cursor, Write};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::ps::msg::ToShard;
+use crate::transport::{wire, NodeId, Packet};
+
+use super::FsyncPolicy;
+
+/// Magic prefix of every shard WAL.
+pub const WAL_MAGIC: &[u8; 8] = b"ESSPWAL1";
+/// On-disk format version (frames inside follow `wire::VERSION`).
+pub const WAL_VERSION: u16 = 1;
+/// Header layout: magic (8) | version u16 | shard u32 | generation u64.
+pub const WAL_HEADER_LEN: usize = 8 + 2 + 4 + 8;
+
+/// Decoded WAL header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalHeader {
+    pub version: u16,
+    pub shard: u32,
+    pub generation: u64,
+}
+
+/// Append side of one shard's log for one generation.
+pub struct WalWriter {
+    w: BufWriter<File>,
+    path: PathBuf,
+    shard: usize,
+    fsync: FsyncPolicy,
+    fsync_stall: Option<Duration>,
+    frames: u64,
+}
+
+impl WalWriter {
+    /// Create (truncating) the generation file and write its header. The
+    /// header is synced immediately under `always`/`commit` so recovery
+    /// can never find a zero-byte latest generation.
+    pub fn create(
+        path: &Path,
+        shard: usize,
+        generation: u64,
+        fsync: FsyncPolicy,
+    ) -> Result<Self> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir).with_context(|| format!("create dir {dir:?}"))?;
+        }
+        let file = File::create(path).with_context(|| format!("create WAL {path:?}"))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(WAL_MAGIC)?;
+        w.write_all(&WAL_VERSION.to_le_bytes())?;
+        w.write_all(&(shard as u32).to_le_bytes())?;
+        w.write_all(&generation.to_le_bytes())?;
+        let mut this = Self {
+            w,
+            path: path.to_path_buf(),
+            shard,
+            fsync,
+            fsync_stall: None,
+            frames: 0,
+        };
+        if this.fsync != FsyncPolicy::Off {
+            this.sync()?;
+        }
+        Ok(this)
+    }
+
+    /// Install a fault-injected fsync stall (a slow disk): every
+    /// subsequent sync sleeps this long before the real fsync.
+    pub fn set_fsync_stall(&mut self, stall: Option<Duration>) {
+        self.fsync_stall = stall;
+    }
+
+    /// Frames appended so far (excluding the header).
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one message. Durable immediately under
+    /// [`FsyncPolicy::Always`], at the next [`Self::commit`] under
+    /// `Commit`, whenever the OS flushes under `Off`.
+    pub fn append(&mut self, m: &ToShard) -> Result<()> {
+        wire::write_to_shard_frame(
+            &mut self.w,
+            NodeId::Coordinator,
+            NodeId::Shard(self.shard),
+            m,
+        )
+        .with_context(|| format!("append frame {} to {:?}", self.frames, self.path))?;
+        self.frames += 1;
+        if self.fsync == FsyncPolicy::Always {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Commit boundary (a table-clock advance): make the appended prefix
+    /// durable per policy.
+    pub fn commit(&mut self) -> Result<()> {
+        match self.fsync {
+            FsyncPolicy::Always => Ok(()), // every append already synced
+            FsyncPolicy::Commit => self.sync(),
+            FsyncPolicy::Off => self.flush(),
+        }
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.w.flush().with_context(|| format!("flush {:?}", self.path))
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.flush()?;
+        if let Some(stall) = self.fsync_stall {
+            std::thread::sleep(stall);
+        }
+        self.w
+            .get_ref()
+            .sync_data()
+            .with_context(|| format!("fsync {:?}", self.path))
+    }
+}
+
+/// Result of reading a log back.
+#[derive(Debug)]
+pub struct WalReplay {
+    pub header: WalHeader,
+    /// Whole frames, in append order.
+    pub records: Vec<ToShard>,
+    /// Bytes discarded from a torn tail (lenient mode only; 0 = the log
+    /// ended cleanly at a frame boundary).
+    pub dropped_bytes: u64,
+}
+
+/// Lenient read: decode whole frames until the first torn/corrupt one,
+/// report the dropped tail. This is the recovery path — a crash
+/// mid-append legitimately leaves a partial final frame.
+pub fn replay(path: &Path) -> Result<WalReplay> {
+    replay_impl(path, false)
+}
+
+/// Strict read: any undecodable tail is an error naming the offending
+/// frame. For integrity checks and tests.
+pub fn replay_strict(path: &Path) -> Result<WalReplay> {
+    replay_impl(path, true)
+}
+
+fn replay_impl(path: &Path, strict: bool) -> Result<WalReplay> {
+    let bytes = std::fs::read(path).with_context(|| format!("read WAL {path:?}"))?;
+    let header = decode_header(&bytes).with_context(|| format!("{path:?}: bad WAL header"))?;
+    let mut cur = Cursor::new(&bytes[..]);
+    cur.set_position(WAL_HEADER_LEN as u64);
+    let mut records = Vec::new();
+    let mut scratch = Vec::new();
+    loop {
+        let pos = cur.position() as usize;
+        // Reject a declared frame length that overruns the file BEFORE
+        // wire::read_frame sizes a buffer to it: a corrupt length field
+        // must cost an error, not a giant allocation.
+        let rem = &bytes[pos..];
+        let overrun = rem.len() >= 4 && {
+            let len = u32::from_le_bytes(rem[..4].try_into().unwrap()) as usize;
+            len > rem.len() - 4
+        };
+        let err = if overrun {
+            let len = u32::from_le_bytes(rem[..4].try_into().unwrap());
+            anyhow!(
+                "frame {}: declared length {len} overruns the log ({} bytes remain)",
+                records.len(),
+                rem.len() - 4
+            )
+        } else {
+            match wire::read_frame(&mut cur, &mut scratch) {
+                Ok(None) => {
+                    return Ok(WalReplay {
+                        header,
+                        records,
+                        dropped_bytes: 0,
+                    })
+                }
+                Ok(Some((_, _, Packet::ToShard(m)))) => {
+                    records.push(m);
+                    continue;
+                }
+                Ok(Some((_, _, Packet::ToWorker(_)))) => anyhow!(
+                    "frame {}: a ToWorker frame has no business in a shard WAL",
+                    records.len()
+                ),
+                Err(e) => e,
+            }
+        };
+        let dropped = (bytes.len() - pos) as u64;
+        if strict {
+            return Err(err.context(format!(
+                "{path:?}: corrupt tail after {} whole frames ({dropped} trailing bytes)",
+                records.len()
+            )));
+        }
+        return Ok(WalReplay {
+            header,
+            records,
+            dropped_bytes: dropped,
+        });
+    }
+}
+
+fn decode_header(bytes: &[u8]) -> Result<WalHeader> {
+    ensure!(
+        bytes.len() >= WAL_HEADER_LEN,
+        "truncated before header end ({} of {WAL_HEADER_LEN} bytes)",
+        bytes.len()
+    );
+    if &bytes[..8] != WAL_MAGIC {
+        bail!("bad magic (not an ESSPTable WAL)");
+    }
+    let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+    ensure!(
+        version == WAL_VERSION,
+        "unsupported WAL version {version} (this binary speaks {WAL_VERSION})"
+    );
+    Ok(WalHeader {
+        version,
+        shard: u32::from_le_bytes(bytes[10..14].try_into().unwrap()),
+        generation: u64::from_le_bytes(bytes[14..22].try_into().unwrap()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::placement::PlacementDelta;
+    use crate::ps::types::RowDelta;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("esspt-wal-{}-{name}", std::process::id()))
+    }
+
+    fn sample_records() -> Vec<ToShard> {
+        vec![
+            ToShard::Update {
+                worker: 1,
+                clock: 4,
+                rows: vec![
+                    ((0, 7), vec![1.0f32, -2.5, 3.25].into()),
+                    ((0, 9), RowDelta::sparse(1024, vec![(3, 1.0), (900, -2.25)])),
+                ],
+            },
+            ToShard::ClockTick { worker: 1, clock: 4 },
+            ToShard::MigrateCommit { epoch: 2 },
+            ToShard::Promote {
+                delta: PlacementDelta {
+                    epoch: 3,
+                    at_clock: 5,
+                    grow_active: None,
+                    promote: Some((1, 4)),
+                    moves: vec![],
+                },
+            },
+        ]
+    }
+
+    fn write_log(path: &Path, fsync: FsyncPolicy) -> Vec<ToShard> {
+        let records = sample_records();
+        let mut w = WalWriter::create(path, 1, 7, fsync).unwrap();
+        for m in &records {
+            w.append(m).unwrap();
+        }
+        w.commit().unwrap();
+        records
+    }
+
+    #[test]
+    fn roundtrips_every_frame_kind() {
+        let path = tmp("roundtrip.wal");
+        let records = write_log(&path, FsyncPolicy::Commit);
+        for read in [replay(&path).unwrap(), replay_strict(&path).unwrap()] {
+            assert_eq!(
+                read.header,
+                WalHeader {
+                    version: WAL_VERSION,
+                    shard: 1,
+                    generation: 7
+                }
+            );
+            assert_eq!(read.records, records);
+            assert_eq!(read.dropped_bytes, 0);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn fsync_off_still_readable_after_commit_flush() {
+        let path = tmp("off.wal");
+        let records = write_log(&path, FsyncPolicy::Off);
+        assert_eq!(replay(&path).unwrap().records, records);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_log_replays_to_zero_records() {
+        let path = tmp("empty.wal");
+        let mut w = WalWriter::create(&path, 3, 0, FsyncPolicy::Always).unwrap();
+        w.commit().unwrap();
+        assert_eq!(w.frames(), 0);
+        drop(w);
+        let read = replay_strict(&path).unwrap();
+        assert!(read.records.is_empty());
+        assert_eq!(read.header.shard, 3);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn torn_tail_truncates_leniently_and_fails_strictly() {
+        let path = tmp("torn.wal");
+        let records = write_log(&path, FsyncPolicy::Commit);
+        let full = std::fs::read(&path).unwrap();
+        // Chop into the final frame: a crash mid-append.
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let read = replay(&path).unwrap();
+        assert_eq!(read.records, records[..records.len() - 1]);
+        assert!(read.dropped_bytes > 0);
+        let err = format!("{:#}", replay_strict(&path).unwrap_err());
+        assert!(err.contains("corrupt tail after 3 whole frames"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_length_field_is_rejected_without_allocating() {
+        // Header + a 4-byte prefix claiming a near-MAX_FRAME body that the
+        // file does not hold: the reader must refuse before sizing any
+        // buffer to the lie.
+        let path = tmp("hugelen.wal");
+        {
+            let w = WalWriter::create(&path, 0, 1, FsyncPolicy::Off);
+            drop(w.unwrap());
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&0x0FFF_FFF0u32.to_le_bytes());
+        bytes.extend_from_slice(b"stub");
+        std::fs::write(&path, &bytes).unwrap();
+        let read = replay(&path).unwrap();
+        assert!(read.records.is_empty());
+        assert_eq!(read.dropped_bytes, 8);
+        let err = format!("{:#}", replay_strict(&path).unwrap_err());
+        assert!(err.contains("overruns the log"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn header_corruption_is_an_error_in_both_modes() {
+        let path = tmp("hdr.wal");
+        write_log(&path, FsyncPolicy::Off);
+        let good = std::fs::read(&path).unwrap();
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        std::fs::write(&path, &bad_magic).unwrap();
+        let err = format!("{:#}", replay(&path).unwrap_err());
+        assert!(err.contains("bad magic"), "{err}");
+
+        let mut bad_version = good.clone();
+        bad_version[8] = 99;
+        std::fs::write(&path, &bad_version).unwrap();
+        let err = format!("{:#}", replay(&path).unwrap_err());
+        assert!(err.contains("unsupported WAL version 99"), "{err}");
+
+        std::fs::write(&path, &good[..10]).unwrap();
+        let err = format!("{:#}", replay_strict(&path).unwrap_err());
+        assert!(err.contains("truncated before header end"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mid_log_bitflip_keeps_the_prefix() {
+        let path = tmp("flip.wal");
+        let records = write_log(&path, FsyncPolicy::Commit);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Corrupt the SECOND frame's length prefix (first frame starts at
+        // the header end; its length prefix tells us where frame 2 begins).
+        let f1_len =
+            u32::from_le_bytes(bytes[WAL_HEADER_LEN..WAL_HEADER_LEN + 4].try_into().unwrap());
+        let f2_at = WAL_HEADER_LEN + 4 + f1_len as usize;
+        bytes[f2_at + 3] = 0xFF; // declared length now > MAX_FRAME
+        std::fs::write(&path, &bytes).unwrap();
+        let read = replay(&path).unwrap();
+        assert_eq!(read.records, records[..1]);
+        assert!(read.dropped_bytes > 0);
+        assert!(replay_strict(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

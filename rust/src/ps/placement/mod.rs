@@ -96,6 +96,10 @@ pub struct PlacementMap {
     replicas_per: usize,
     /// Keys pinned away from their hash home (explicit moves).
     overrides: FxHashMap<Key, usize>,
+    /// Failed-over primaries: logical primary -> shard node now serving
+    /// it (a promoted replica). Logical routing (`shard_of`) is unchanged
+    /// by promotion; only the node address (`node_of`) moves.
+    promoted: FxHashMap<usize, usize>,
 }
 
 impl PlacementMap {
@@ -113,6 +117,7 @@ impl PlacementMap {
             active,
             replicas_per,
             overrides: FxHashMap::default(),
+            promoted: FxHashMap::default(),
         }
     }
 
@@ -159,13 +164,29 @@ impl PlacementMap {
         (Self::hash(key) % self.active as u64) as usize
     }
 
-    /// Primary shard owning `key` at this epoch.
+    /// Primary shard owning `key` at this epoch. This is the *logical*
+    /// owner — stable across replica promotion; resolve the serving node
+    /// with [`node_of`](Self::node_of) before addressing a message.
     #[inline]
     pub fn shard_of(&self, key: &Key) -> usize {
         self.overrides
             .get(key)
             .copied()
             .unwrap_or_else(|| self.hash_home(key))
+    }
+
+    /// The shard node currently serving logical shard `shard`: itself,
+    /// unless a promotion redirected the primary to its replica. Applied
+    /// at the client's send boundary, so all logical routing (hashing,
+    /// per-primary arrays, wave `shard` fields) stays promotion-agnostic.
+    #[inline]
+    pub fn node_of(&self, shard: usize) -> usize {
+        self.promoted.get(&shard).copied().unwrap_or(shard)
+    }
+
+    /// True if any primary has failed over to a replica.
+    pub fn has_promotions(&self) -> bool {
+        !self.promoted.is_empty()
     }
 
     /// Shard id of replica `r` of primary `p`.
@@ -242,6 +263,15 @@ impl PlacementMap {
             );
             self.overrides.insert(key, dst);
         }
+        if let Some((primary, node)) = delta.promote {
+            let (primary, node) = (primary as usize, node as usize);
+            assert!(
+                self.is_replica(node) && self.primary_of(node) == primary,
+                "promotion of shard {primary} targets node {node}, which is not \
+                 one of its replicas"
+            );
+            self.promoted.insert(primary, node);
+        }
         self.epoch = delta.epoch;
     }
 }
@@ -259,11 +289,26 @@ pub struct PlacementDelta {
     pub at_clock: Clock,
     /// Grow the hash-active primary set to this count (divisible growth).
     pub grow_active: Option<u32>,
+    /// Fail logical primary `.0` over to its replica node `.1`: all
+    /// traffic for that primary re-addresses to the node, logical routing
+    /// unchanged.
+    pub promote: Option<(u32, u32)>,
     /// Explicit per-key moves (hot-key pinning / forced re-homing).
     pub moves: Vec<(Key, u32)>,
 }
 
 impl PlacementDelta {
+    /// True when this delta needs no migration fence: it moves no keys
+    /// between logical owners, only re-addresses a dead primary to its
+    /// replica. Such a delta activates *immediately* on arrival — waiting
+    /// for a fence clock could deadlock a client blocked reading from the
+    /// dead node — and is safe fence-free because the replica has been fed
+    /// the complete per-worker FIFO update/clock stream all along (there
+    /// is no row state to move, hence nothing to fence).
+    pub fn fence_free(&self) -> bool {
+        self.promote.is_some() && self.grow_active.is_none() && self.moves.is_empty()
+    }
+
     /// Could this delta change `key`'s owner relative to `prev`? The
     /// conservativeness contract is the converse: an owner change implies
     /// `affects` (never the reverse — a move to the current owner is a
@@ -365,6 +410,7 @@ mod tests {
             epoch: 1,
             at_clock: 5,
             grow_active: Some(4),
+            promote: None,
             moves: vec![],
         };
         after.apply(&delta);
@@ -393,6 +439,7 @@ mod tests {
             epoch: 1,
             at_clock: 1,
             grow_active: Some(3),
+            promote: None,
             moves: vec![],
         };
         assert!(std::panic::catch_unwind(move || m.apply(&delta)).is_err());
@@ -406,6 +453,7 @@ mod tests {
             epoch: 1,
             at_clock: 3,
             grow_active: None,
+            promote: None,
             moves: vec![(key, 3)],
         });
         assert_eq!(m.shard_of(&key), 3);
@@ -414,6 +462,7 @@ mod tests {
             epoch: 2,
             at_clock: 9,
             grow_active: Some(4),
+            promote: None,
             moves: vec![],
         });
         assert_eq!(m.shard_of(&key), 3);
@@ -426,6 +475,7 @@ mod tests {
             epoch: 2, // map is at 0: epoch 1 is required next
             at_clock: 1,
             grow_active: None,
+            promote: None,
             moves: vec![],
         };
         assert!(std::panic::catch_unwind(move || m.apply(&delta)).is_err());
@@ -471,6 +521,68 @@ mod tests {
     }
 
     #[test]
+    fn promotion_redirects_node_but_not_logical_owner() {
+        let mut m = PlacementMap::new(2, 2, 1);
+        let key = (0u32, 5u64);
+        let owner = m.shard_of(&key);
+        assert_eq!(m.node_of(owner), owner);
+        assert!(!m.has_promotions());
+        let replica = m.replica_of(owner, 0);
+        let delta = PlacementDelta {
+            epoch: 1,
+            at_clock: 0,
+            grow_active: None,
+            promote: Some((owner as u32, replica as u32)),
+            moves: vec![],
+        };
+        assert!(delta.fence_free());
+        assert!(!delta.affects(&key, &m), "promotion moves no keys");
+        m.apply(&delta);
+        assert!(m.has_promotions());
+        // Logical routing unchanged; the serving node moved.
+        assert_eq!(m.shard_of(&key), owner);
+        assert_eq!(m.node_of(owner), replica);
+        // Other shards are untouched.
+        assert_eq!(m.node_of(1 - owner), 1 - owner);
+    }
+
+    #[test]
+    fn promotion_to_foreign_replica_is_rejected() {
+        let mut m = PlacementMap::new(2, 2, 1);
+        // Node 3 is shard 1's replica, not shard 0's.
+        let delta = PlacementDelta {
+            epoch: 1,
+            at_clock: 0,
+            grow_active: None,
+            promote: Some((0, 3)),
+            moves: vec![],
+        };
+        assert!(std::panic::catch_unwind(move || m.apply(&delta)).is_err());
+    }
+
+    #[test]
+    fn fence_free_only_for_pure_promotions() {
+        let pure = PlacementDelta {
+            epoch: 1,
+            at_clock: 0,
+            grow_active: None,
+            promote: Some((0, 2)),
+            moves: vec![],
+        };
+        assert!(pure.fence_free());
+        let mixed = PlacementDelta {
+            grow_active: Some(4),
+            ..pure.clone()
+        };
+        assert!(!mixed.fence_free());
+        let migration = PlacementDelta {
+            promote: None,
+            ..pure
+        };
+        assert!(!migration.fence_free());
+    }
+
+    #[test]
     fn plan_shards_pairs_sources_and_destinations() {
         let prev = PlacementMap::new(4, 2, 1);
         let forced = (9u32, 9u64);
@@ -479,6 +591,7 @@ mod tests {
             epoch: 1,
             at_clock: 4,
             grow_active: Some(4),
+            promote: None,
             moves: vec![(forced, 1 - forced_src as u32)], // hop 0<->1: a move growth would not cause
         };
         let keys: Vec<Key> = (0..64u64).map(|i| (0, i)).chain([forced]).collect();

@@ -131,7 +131,7 @@ impl ValueServer {
             core.send_to_worker(
                 worker,
                 ToWorker::Bound {
-                    shard: core.id,
+                    shard: core.logical,
                     granted: false,
                 },
             );
@@ -151,7 +151,7 @@ impl ValueServer {
                 core.send_to_worker(
                     w,
                     ToWorker::Bound {
-                        shard: core.id,
+                        shard: core.logical,
                         granted: ok,
                     },
                 );
@@ -218,7 +218,7 @@ impl ValueServer {
             core.send_to_worker(
                 w,
                 ToWorker::VapPush {
-                    shard: core.id,
+                    shard: core.logical,
                     seq,
                     rows,
                 },

@@ -54,13 +54,57 @@
 //!   each Get until its own table clock meets the model's bound, so the
 //!   staleness guarantee is unchanged. Final `table_rows` merge the
 //!   primaries only; `replica_rows` exposes the replica copies.
+//!
+//! # Durability & Failover (`ps::durability` + `sim::fault`)
+//!
+//! With `ClusterConfig::durability` set, every shard node — primaries and
+//! replicas alike — owns a *generation pair* on disk: a crash-atomic row
+//! checkpoint plus a write-ahead log of every state-bearing `ToShard`
+//! message appended **before** it is processed. WAL frames use the
+//! transport's wire codec verbatim, so the on-disk format and the
+//! on-the-wire format are one source of truth (and the WAL reader
+//! inherits the codec's defensive decoding). The fsync policy
+//! (`always` | `commit` | `off`) decides when appends become durable;
+//! `commit` (the default) syncs once per table-clock commit so the
+//! durable prefix always ends at a commit boundary. Compaction every
+//! `compact_every` commits folds the log into a fresh checkpoint
+//! generation and deletes the old pair — a crash at any instant leaves at
+//! least one complete pair to recover from.
+//!
+//! **Crash recovery.** A `crash=sI@C` fault (see [`crate::sim::fault`]
+//! for the full `--fault-plan` grammar) makes shard `I` drop all volatile
+//! state at table clock `C` and rebuild itself from checkpoint + WAL
+//! tail. Under `deterministic`, replayed updates fold in the same global
+//! (clock, worker) order as live ones, so a crashed-and-recovered run's
+//! final parameters are bit-identical to an undisturbed run's — for every
+//! consistency model. Each model's staleness bound is a property of the
+//! *client* read gate and the server's clock bookkeeping, both of which
+//! the log reconstructs exactly: BSP/SSP/ESSP window bounds, the Async
+//! free-running contract, and the VAP/AVAP value bounds all hold across a
+//! recovery (recovered rows re-enter VAP certification conservatively —
+//! every row is re-pushed dirty, never silently under-certified).
+//!
+//! **Replica promotion.** A `kill=sI@C` fault makes primary `I` die
+//! permanently at clock `C` *without* dumping. Its dying act is a
+//! pre-armed, fence-free placement delta promoting its first replica:
+//! the replica adopts the dead primary's logical shard id, swaps its
+//! pull-only policy for the model's real server policy, marks every row
+//! dirty (conservative re-certification), and relays the delta to all
+//! workers. Clients re-route the partition at the next inbox drain —
+//! updates they duplicated to the replica all along mean the switch
+//! loses nothing — and the promoted node's final dump is authoritative
+//! for the partition. Promotion requires `replicas >= 1` and (for now)
+//! no concurrent migration: both planes advance the placement epoch and
+//! their fences are not ordered against each other.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::client::{ClientConfig, ClientStats, PsClient};
 use super::consistency::Consistency;
+use super::durability::DurabilityConfig;
 use super::msg::{ToShard, ToWorker};
 use super::placement::{plan_shards, PlacementDelta, PlacementMap};
 use super::shard::{Shard, ShardFinal, ShardStats};
@@ -68,6 +112,7 @@ use super::types::{Clock, Key, RowId, TableId};
 use crate::metrics::convergence::ConvergenceLog;
 use crate::metrics::staleness::StalenessHist;
 use crate::metrics::timeline::Timeline;
+use crate::sim::fault::{FaultInjector, FaultPlan, ShardAction};
 use crate::sim::net::NetConfig;
 use crate::sim::straggler::StragglerModel;
 use crate::transport::{Fabric, TransportSel};
@@ -149,6 +194,15 @@ pub struct ClusterConfig {
     /// reproducibility genuinely outranks the Hogwild dynamics (the CLI
     /// cluster subcommands default it off for Async for this reason).
     pub deterministic: bool,
+    /// Durability plane: when set, every shard node (primaries and
+    /// replicas) keeps a generation-paired checkpoint + write-ahead log
+    /// under `dir` and can recover `crash` faults from it (see module
+    /// docs, § Durability & Failover).
+    pub durability: Option<DurabilityConfig>,
+    /// Seeded, replayable fault schedule (`sim::fault`): link faults
+    /// apply inside the data plane, shard faults fire at table-clock
+    /// commit boundaries.
+    pub faults: FaultPlan,
     pub seed: u64,
 }
 
@@ -168,6 +222,8 @@ impl Default for ClusterConfig {
             virtual_clock: None,
             transport: TransportSel::Sim,
             deterministic: false,
+            durability: None,
+            faults: FaultPlan::default(),
             seed: 42,
         }
     }
@@ -324,6 +380,32 @@ impl Cluster {
         let placement = PlacementMap::new(cfg.shards, active, cfg.replicas);
         let total_shards = placement.total_shards();
 
+        // Validate the fault schedule up front: a plan naming an unknown
+        // shard is a configuration error, not a runtime surprise.
+        for f in &cfg.faults.shards {
+            assert!(
+                f.shard < total_shards,
+                "fault plan targets unknown shard {} ({} nodes)",
+                f.shard,
+                total_shards
+            );
+        }
+        let killed = cfg.faults.killed_shards();
+        if !killed.is_empty() {
+            assert!(
+                cfg.replicas >= 1,
+                "kill faults need replicas >= 1 (each dead primary promotes its replica)"
+            );
+            assert!(
+                cfg.migration.is_none(),
+                "kill faults cannot combine with a migration: both advance the \
+                 placement epoch and their fences are unordered"
+            );
+            for &k in &killed {
+                assert!(k < cfg.shards, "kill targets must be primaries, got shard {k}");
+            }
+        }
+
         // Channels: per-worker and per-shard-node inboxes (every
         // provisioned primary AND every replica is a live node).
         let mut worker_tx: Vec<Sender<ToWorker>> = Vec::new();
@@ -355,6 +437,7 @@ impl Cluster {
                 epoch: 1,
                 at_clock: mig.at_clock,
                 grow_active: mig.grow_to.map(|n| n as u32),
+                promote: None,
                 moves: mig.moves.iter().map(|&(k, d)| (k, d as u32)).collect(),
             };
             // The key universe is enumerable from the declared tables —
@@ -379,8 +462,18 @@ impl Cluster {
             }
         }
 
-        let fabric = Fabric::build(cfg.transport, cfg.net.clone(), worker_tx, shard_tx.clone())
-            .expect("transport bootstrap failed");
+        let injector = cfg
+            .faults
+            .has_link_faults()
+            .then(|| Arc::new(FaultInjector::new(cfg.faults.clone())));
+        let fabric = Fabric::build_with_faults(
+            cfg.transport,
+            cfg.net.clone(),
+            worker_tx,
+            shard_tx.clone(),
+            injector,
+        )
+        .expect("transport bootstrap failed");
 
         // Table row-length registry, shared with shards so a GET racing
         // ahead of row materialization can be served zeros (variable-
@@ -398,6 +491,7 @@ impl Cluster {
                     Shard::replica(
                         id,
                         cfg.workers,
+                        cfg.consistency,
                         fabric.shard_handle(),
                         row_len.clone(),
                         cfg.deterministic,
@@ -422,6 +516,43 @@ impl Cluster {
             }
             shards[owner].init_row(key, data);
         });
+
+        // Durability comes up after row init so a fresh generation's base
+        // checkpoint captures the initialized rows; fault schedules and
+        // the fsync stall arm at the same point.
+        for (id, shard) in shards.iter_mut().enumerate() {
+            if let Some(dur) = &cfg.durability {
+                let recovered = shard
+                    .enable_durability(dur.clone())
+                    .expect("enable durability");
+                if recovered {
+                    eprintln!("shard {id}: recovered durable state from {:?}", dur.dir);
+                }
+            }
+            let scheduled = cfg.faults.shard_faults(id);
+            if !scheduled.is_empty() {
+                shard.set_faults(scheduled);
+            }
+            shard.set_fsync_stall(cfg.faults.fsync_stall);
+        }
+        // Pre-arm each killed primary's dying act: a fence-free placement
+        // delta promoting its first replica, sent over the data plane at
+        // the kill boundary like any other message.
+        for f in &cfg.faults.shards {
+            if f.action == ShardAction::Kill {
+                let node = placement.replica_of(f.shard, 0);
+                shards[f.shard].arm_promotion(
+                    node,
+                    PlacementDelta {
+                        epoch: placement.epoch() + 1,
+                        at_clock: f.at_clock,
+                        grow_active: None,
+                        promote: Some((f.shard as u32, node as u32)),
+                        moves: Vec::new(),
+                    },
+                );
+            }
+        }
 
         // Launch shard threads.
         let (dump_tx, dump_rx) = channel::<ShardFinal>();
@@ -540,7 +671,13 @@ impl Cluster {
         let mut table_rows = HashMap::new();
         let mut replica_rows: Vec<HashMap<Key, Vec<f32>>> =
             vec![HashMap::new(); total_shards - cfg.shards];
-        for _ in 0..total_shards {
+        // Killed shards die without dumping; their promoted replicas dump
+        // the partition's authoritative rows instead.
+        let promoted_nodes: HashMap<usize, usize> = killed
+            .iter()
+            .map(|&p| (placement.replica_of(p, 0), p))
+            .collect();
+        for _ in 0..total_shards - killed.len() {
             let fin = dump_rx.recv().expect("shard final state");
             shard_stats[fin.id] = fin.stats;
             if fin.id < cfg.shards {
@@ -551,8 +688,13 @@ impl Cluster {
                 }
             } else {
                 let slot = fin.id - cfg.shards;
+                let authoritative = promoted_nodes.contains_key(&fin.id);
                 for (k, row) in fin.rows {
-                    replica_rows[slot].insert(k, row.data.to_vec());
+                    let data = row.data.to_vec();
+                    if authoritative {
+                        table_rows.insert(k, data.clone());
+                    }
+                    replica_rows[slot].insert(k, data);
                 }
             }
         }

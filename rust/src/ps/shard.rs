@@ -35,18 +35,37 @@
 //! table) and/or *destination* (fence replay and reads for in-flight keys
 //! until their `RowHandoff` lands), and [`Shard::replica`] builds the
 //! same core behind a pull-only policy for replica read fan-out.
+//!
+//! Crash tolerance (`ps::durability`, and see `ps::server`'s *Durability
+//! & Failover* docs): with [`Shard::enable_durability`] every state-
+//! bearing inbound message is appended to a per-shard write-ahead log
+//! *before* it is processed, fsync'd per the configured policy, and
+//! periodically compacted into a checkpoint + log-tail generation pair.
+//! [`Shard::crash_and_recover`] (also fired by a fault plan's `crash`
+//! action) rebuilds the durable state from disk through the same handler
+//! code paths — bit-identical under deterministic replay. A `kill` fault
+//! makes the shard die permanently, sending a pre-armed
+//! [`ToShard::Promote`] to its replica as its last act; the replica
+//! adopts the dead primary's logical identity and the run's full server
+//! policy (handled like any other inbound message).
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
 
 use super::consistency::Consistency;
+use super::durability::{self, checkpoint, wal, DurabilityConfig};
 use super::msg::{PushRow, ToShard, ToWorker};
+use super::placement::PlacementDelta;
 use super::policy::ServerPolicy;
-use super::types::{Clock, Key, RowDelta, TableId, WorkerId};
+use super::types::{Clock, Key, RowDelta, TableId, WorkerId, NEVER};
 use super::vclock::MinClock;
-use crate::transport::{NodeId, Packet, TransportHandle};
+use crate::sim::fault::{ShardAction, ShardFault};
+use crate::transport::{NodeId, Packet, Transport, TransportHandle};
 use crate::util::hash::{FxHashMap, FxHashSet};
 
 /// A stored row: shared immutable payload plus best-effort freshness.
@@ -149,6 +168,12 @@ struct Migration {
 /// mechanism through its fields and helpers.
 pub struct ShardCore {
     pub(crate) id: usize,
+    /// The logical shard this node currently serves. Equal to `id` for a
+    /// primary; a promoted replica adopts its dead primary's logical id,
+    /// so client-visible `shard:` fields (waves, bounds) keep naming the
+    /// partition while transport addressing (`NodeId::Shard(id)`) keeps
+    /// naming the physical node.
+    pub(crate) logical: usize,
     pub(crate) workers: usize,
     pub(crate) rows: FxHashMap<Key, Row>,
     clocks: MinClock,
@@ -200,11 +225,32 @@ pub struct ShardCore {
     pub(crate) stats: ShardStats,
 }
 
+/// Live write-ahead-log state of a durable shard (one generation).
+struct Durability {
+    cfg: DurabilityConfig,
+    generation: u64,
+    wal: wal::WalWriter,
+    commits_since_compact: u64,
+}
+
 /// A shard = the policy-agnostic core plus the consistency policy its
 /// config selects.
 pub struct Shard {
     core: ShardCore,
     policy: Box<dyn ServerPolicy>,
+    /// The run's consistency model, kept so a promoted replica can
+    /// install the full server policy it must start enforcing.
+    consistency: Consistency,
+    durability: Option<Durability>,
+    /// Scheduled faults for this shard, clock-sorted; `next_fault`
+    /// indexes the first not-yet-fired one.
+    faults: Vec<ShardFault>,
+    next_fault: usize,
+    /// Fault-injected slow-fsync stall, applied to every WAL generation.
+    fsync_stall: Option<Duration>,
+    /// Pre-armed promotion: (replica's physical node, the placement
+    /// delta), sent as this shard's dying act under a `kill` fault.
+    promote_on_kill: Option<(usize, PlacementDelta)>,
 }
 
 impl Shard {
@@ -220,6 +266,7 @@ impl Shard {
             id,
             workers,
             consistency.server_policy(workers),
+            consistency,
             net,
             row_len,
             deterministic,
@@ -231,10 +278,13 @@ impl Shard {
     /// regardless of the run's consistency model. Replicas never push
     /// and never track value bounds — they serve GETs under the core's
     /// SSP wait condition, which is exactly the admission guarantee
-    /// `ClientPolicy::replica_reads` relies on.
+    /// `ClientPolicy::replica_reads` relies on. The run's `consistency`
+    /// is still carried: a [`ToShard::Promote`] swaps in its full server
+    /// policy when this replica takes over a dead primary.
     pub fn replica(
         id: usize,
         workers: usize,
+        consistency: Consistency,
         net: TransportHandle,
         row_len: HashMap<TableId, usize>,
         deterministic: bool,
@@ -243,6 +293,7 @@ impl Shard {
             id,
             workers,
             Box::new(super::policy::window::PullServer),
+            consistency,
             net,
             row_len,
             deterministic,
@@ -253,6 +304,7 @@ impl Shard {
         id: usize,
         workers: usize,
         policy: Box<dyn ServerPolicy>,
+        consistency: Consistency,
         net: TransportHandle,
         row_len: HashMap<TableId, usize>,
         deterministic: bool,
@@ -261,6 +313,7 @@ impl Shard {
         Self {
             core: ShardCore {
                 id,
+                logical: id,
                 workers,
                 rows: FxHashMap::default(),
                 clocks: MinClock::new(workers),
@@ -280,6 +333,12 @@ impl Shard {
                 stats: ShardStats::default(),
             },
             policy,
+            consistency,
+            durability: None,
+            faults: Vec::new(),
+            next_fault: 0,
+            fsync_stall: None,
+            promote_on_kill: None,
         }
     }
 
@@ -307,6 +366,12 @@ impl Shard {
             if !self.handle(msg) {
                 break;
             }
+            if !self.poll_faults() {
+                // Killed by the fault plan: die without dumping — the
+                // promoted replica's dump is authoritative for this
+                // partition.
+                return;
+            }
         }
         // Safety net: staged updates are normally all replayed by the
         // final ClockTicks; anything left (e.g. a late forwarded update
@@ -324,6 +389,14 @@ impl Shard {
     /// core mechanism first, then the matching policy hook — no model-
     /// specific branching.
     pub fn handle(&mut self, msg: ToShard) -> bool {
+        // Write-ahead: every state-bearing message hits the log before it
+        // is processed, so the durable history is never behind the live
+        // state it produced.
+        if let Some(d) = self.durability.as_mut() {
+            if wal_loggable(&msg) {
+                d.wal.append(&msg).expect("WAL append");
+            }
+        }
         match msg {
             ToShard::Get {
                 key,
@@ -341,6 +414,7 @@ impl Shard {
             ToShard::ClockTick { worker, clock } => {
                 if let Some(new_min) = self.core.on_tick(worker, clock) {
                     self.policy.on_commit(&mut self.core, new_min);
+                    self.after_commit();
                 }
             }
             ToShard::Register { key, worker } => {
@@ -384,18 +458,388 @@ impl Shard {
                         .on_row_handoff(epoch, key, vclock, fresh, exists, data, staged)
                 {
                     self.policy.on_commit(&mut self.core, new_min);
+                    self.after_commit();
                 }
             }
             ToShard::MigrateCommit { epoch } => self.core.on_migrate_commit(epoch),
+            ToShard::Promote { delta } => self.on_promote(delta),
             ToShard::Shutdown => return false,
         }
         true
+    }
+
+    // --------------------------------------------- durability & faults
+
+    /// Turn on the write-ahead log under `cfg`, recovering from the
+    /// latest complete on-disk generation first if one exists. Call after
+    /// row initialization: the fresh generation's checkpoint snapshots
+    /// the current rows, so recovery never depends on re-running init.
+    /// Returns true iff prior durable state was recovered.
+    pub fn enable_durability(&mut self, cfg: DurabilityConfig) -> Result<bool> {
+        let existing = durability::latest_generation(&cfg.dir, self.core.id);
+        if let Some(g) = existing {
+            let recovered = self.rebuild_core(&cfg, g)?;
+            self.graft(recovered);
+        }
+        let next = existing.map_or(0, |g| g + 1);
+        self.start_generation(cfg, next)?;
+        Ok(existing.is_some())
+    }
+
+    /// Simulate a process crash plus restart: discard the volatile state
+    /// the log covers, reload checkpoint + WAL tail from disk, and roll a
+    /// fresh generation. Under deterministic replay the rebuilt state is
+    /// bit-identical to the pre-crash state, so the run continues as if
+    /// nothing happened. Session state (registrations, queued GETs,
+    /// policy ledgers) survives in-process — the fault models losing the
+    /// *durable* plane, which is what the WAL exists to cover.
+    pub fn crash_and_recover(&mut self) -> Result<()> {
+        let Some(cfg) = self.durability.as_ref().map(|d| d.cfg.clone()) else {
+            eprintln!(
+                "shard {}: crash fault ignored — durability is not enabled",
+                self.core.id
+            );
+            return Ok(());
+        };
+        // Amnesia: abandon the live writer before re-reading disk, the
+        // way a restarted process would find it.
+        self.durability = None;
+        let g = durability::latest_generation(&cfg.dir, self.core.id)
+            .with_context(|| format!("shard {}: no durable generation to recover", self.core.id))?;
+        let recovered = self.rebuild_core(&cfg, g)?;
+        self.graft(recovered);
+        self.start_generation(cfg, g + 1)
+    }
+
+    /// Install this shard's slice of a fault plan (clock-ordered).
+    pub fn set_faults(&mut self, faults: Vec<ShardFault>) {
+        self.faults = faults;
+        self.next_fault = 0;
+    }
+
+    /// Fault-injected slow fsync applied to the WAL (current and future
+    /// generations).
+    pub fn set_fsync_stall(&mut self, stall: Option<Duration>) {
+        self.fsync_stall = stall;
+        if let Some(d) = self.durability.as_mut() {
+            d.wal.set_fsync_stall(stall);
+        }
+    }
+
+    /// Pre-arm the promotion a `kill` fault fires as this shard's dying
+    /// act: `replica_node` is the physical node of this shard's replica,
+    /// `delta` the placement epoch that redirects the partition to it.
+    pub fn arm_promotion(&mut self, replica_node: usize, delta: PlacementDelta) {
+        self.promote_on_kill = Some((replica_node, delta));
+    }
+
+    /// Fire armed faults whose clock the table clock has reached. False =
+    /// the shard was killed and must die without dumping.
+    fn poll_faults(&mut self) -> bool {
+        while self.next_fault < self.faults.len()
+            && self.core.table_clock() >= self.faults[self.next_fault].at_clock
+        {
+            let fault = self.faults[self.next_fault];
+            self.next_fault += 1;
+            match fault.action {
+                ShardAction::Pause(d) => {
+                    eprintln!(
+                        "shard {}: fault plan: pausing {d:?} at clock {}",
+                        self.core.id, fault.at_clock
+                    );
+                    std::thread::sleep(d);
+                }
+                ShardAction::Crash => {
+                    eprintln!(
+                        "shard {}: fault plan: crash + recover at clock {}",
+                        self.core.id, fault.at_clock
+                    );
+                    self.crash_and_recover().expect("fault-plan crash recovery");
+                }
+                ShardAction::Kill => {
+                    eprintln!(
+                        "shard {}: fault plan: killed at clock {}",
+                        self.core.id, fault.at_clock
+                    );
+                    if let Some((node, delta)) = self.promote_on_kill.take() {
+                        self.core.send_to_shard(node, ToShard::Promote { delta });
+                    }
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Commit-boundary durability work: fsync the log per policy, and
+    /// compact into a fresh generation when due. Compaction is skipped
+    /// while this shard has migration state (forwards, fences): the
+    /// arming frames live in the current log and a seed WAL does not
+    /// re-encode them — the log simply keeps growing until the next
+    /// migration-quiet window.
+    fn after_commit(&mut self) {
+        let Some(d) = self.durability.as_mut() else {
+            return;
+        };
+        d.wal.commit().expect("WAL commit fsync");
+        d.commits_since_compact += 1;
+        let due = d.cfg.compact_every > 0 && d.commits_since_compact >= d.cfg.compact_every;
+        if due && self.core.migration.is_none() && self.core.forwards.is_empty() {
+            let cfg = d.cfg.clone();
+            let next = d.generation + 1;
+            self.start_generation(cfg, next).expect("WAL compaction");
+        }
+    }
+
+    /// Write generation `generation` from the current core state (the
+    /// compaction step) and make it the live one, then purge older
+    /// generations. Checkpoint first, seed WAL second — recovery requires
+    /// BOTH, so a crash between the two leaves the previous pair intact.
+    fn start_generation(&mut self, cfg: DurabilityConfig, generation: u64) -> Result<()> {
+        let wal = write_generation(&self.core, &cfg, generation, self.fsync_stall)?;
+        self.durability = Some(Durability {
+            cfg,
+            generation,
+            wal,
+            commits_since_compact: 0,
+        });
+        let d = self.durability.as_ref().unwrap();
+        durability::purge_generations_below(&d.cfg.dir, self.core.id, generation);
+        Ok(())
+    }
+
+    /// Rebuild a core from generation `g` on disk: load the checkpoint,
+    /// then feed the WAL tail through the normal core handlers (no policy
+    /// hooks, sends dropped). Deterministic mode re-stages exactly; eager
+    /// mode re-applies in log order, which IS the original arrival order.
+    fn rebuild_core(&self, cfg: &DurabilityConfig, g: u64) -> Result<ShardCore> {
+        let mut core = ShardCore {
+            id: self.core.id,
+            logical: self.core.id,
+            workers: self.core.workers,
+            rows: FxHashMap::default(),
+            clocks: MinClock::new(self.core.workers),
+            readers: FxHashMap::default(),
+            reg_count: vec![0; self.core.workers],
+            dirty: FxHashSet::default(),
+            track_dirty: false,
+            pending: Vec::new(),
+            deterministic: self.core.deterministic,
+            staged: BTreeMap::new(),
+            staged_index: FxHashMap::default(),
+            migration: None,
+            forwards: FxHashMap::default(),
+            net: TransportHandle::new(NullTransport),
+            row_len: self.core.row_len.clone(),
+            zero_rows: HashMap::new(),
+            stats: ShardStats::default(),
+        };
+        let ckpt = durability::ckpt_path(&cfg.dir, core.id, g);
+        for (key, data, fresh) in checkpoint::load_v2(&ckpt)? {
+            core.rows.insert(
+                key,
+                Row {
+                    data: data.into(),
+                    fresh,
+                },
+            );
+        }
+        let wal_file = durability::wal_path(&cfg.dir, core.id, g);
+        let replayed = wal::replay(&wal_file)?;
+        ensure!(
+            replayed.header.shard as usize == core.id,
+            "{wal_file:?} belongs to shard {}, not {}",
+            replayed.header.shard,
+            core.id
+        );
+        if replayed.dropped_bytes > 0 {
+            eprintln!(
+                "shard {}: WAL {wal_file:?}: dropped a {}-byte torn tail (crash mid-append)",
+                core.id, replayed.dropped_bytes
+            );
+        }
+        for m in replayed.records {
+            match m {
+                ToShard::Update {
+                    worker,
+                    clock,
+                    rows,
+                } => {
+                    core.on_update(worker, clock, rows);
+                }
+                ToShard::ClockTick { worker, clock } => {
+                    core.on_tick(worker, clock);
+                }
+                ToShard::MigrateBegin {
+                    epoch,
+                    at_clock,
+                    outgoing,
+                    incoming,
+                } => core.on_migrate_begin(epoch, at_clock, outgoing, incoming),
+                ToShard::RowHandoff {
+                    epoch,
+                    key,
+                    vclock,
+                    fresh,
+                    exists,
+                    data,
+                    staged,
+                } => {
+                    core.on_row_handoff(epoch, key, vclock, fresh, exists, data, staged);
+                }
+                ToShard::MigrateCommit { epoch } => core.on_migrate_commit(epoch),
+                ToShard::Promote { delta } => {
+                    if let Some((primary, _)) = delta.promote {
+                        core.logical = primary as usize;
+                    }
+                }
+                other => eprintln!(
+                    "shard {}: ignoring non-loggable frame in WAL: {other:?}",
+                    core.id
+                ),
+            }
+        }
+        Ok(core)
+    }
+
+    /// Adopt a rebuilt core's durable fields, keeping this shard's
+    /// session state (registrations, queued GETs, policy, stats, network)
+    /// untouched. If the policy pushes on commit, every row is marked
+    /// dirty so the next wave re-certifies all client copies — pushing
+    /// more than necessary is always sound.
+    fn graft(&mut self, recovered: ShardCore) {
+        let c = &mut self.core;
+        c.rows = recovered.rows;
+        c.staged = recovered.staged;
+        c.staged_index = recovered.staged_index;
+        c.clocks = recovered.clocks;
+        c.forwards = recovered.forwards;
+        c.migration = recovered.migration;
+        c.logical = recovered.logical;
+        c.dirty.clear();
+        if c.track_dirty {
+            let keys: Vec<Key> = c.rows.keys().copied().collect();
+            c.dirty.extend(keys);
+        }
+        let visible = c.visible_clock();
+        c.serve_pending(visible);
+    }
+
+    /// A replica takes over its dead primary's partition: adopt the
+    /// logical identity, install the run's full server policy, mark every
+    /// row dirty (the first post-promotion wave re-certifies all client
+    /// copies), and relay the placement delta to every worker so clients
+    /// re-route.
+    fn on_promote(&mut self, delta: PlacementDelta) {
+        let Some((primary, node)) = delta.promote else {
+            eprintln!(
+                "shard {}: ignoring Promote without a promotion pair",
+                self.core.id
+            );
+            return;
+        };
+        assert_eq!(
+            node as usize, self.core.id,
+            "Promote for node {node} delivered to shard {}",
+            self.core.id
+        );
+        self.core.logical = primary as usize;
+        self.policy = self.consistency.server_policy(self.core.workers);
+        self.core.track_dirty = self.policy.pushes_on_commit();
+        if self.core.track_dirty {
+            let keys: Vec<Key> = self.core.rows.keys().copied().collect();
+            self.core.dirty.extend(keys);
+        }
+        for w in 0..self.core.workers {
+            self.core.send_to_worker(w, ToWorker::Placement { delta: delta.clone() });
+        }
     }
 
     #[cfg(test)]
     fn core(&self) -> &ShardCore {
         &self.core
     }
+}
+
+/// Messages the WAL records: everything that mutates durable state
+/// (rows, clocks, staged replay, migration/forward tables, logical
+/// identity). Session traffic — GETs, registrations, acks, norm reports,
+/// detaches — is rebuilt by live clients, not by recovery.
+fn wal_loggable(m: &ToShard) -> bool {
+    matches!(
+        m,
+        ToShard::Update { .. }
+            | ToShard::ClockTick { .. }
+            | ToShard::MigrateBegin { .. }
+            | ToShard::RowHandoff { .. }
+            | ToShard::MigrateCommit { .. }
+            | ToShard::Promote { .. }
+    )
+}
+
+/// Write generation `generation`'s checkpoint + seed WAL from `core`'s
+/// current state. The seed WAL re-seeds the per-worker committed clocks
+/// (one ClockTick each; `MinClock` accepts forward jumps) and carries the
+/// staged-but-uncommitted tail as ordinary Update frames, plus a Promote
+/// marker when the node serves an adopted logical id — everything
+/// recovery needs beyond the row snapshot.
+fn write_generation(
+    core: &ShardCore,
+    cfg: &DurabilityConfig,
+    generation: u64,
+    stall: Option<Duration>,
+) -> Result<wal::WalWriter> {
+    let rows: Vec<(Key, Vec<f32>, Clock)> = core
+        .rows
+        .iter()
+        .map(|(k, r)| (*k, r.data.to_vec(), r.fresh))
+        .collect();
+    checkpoint::save_v2(&durability::ckpt_path(&cfg.dir, core.id, generation), &rows)?;
+    let mut w = wal::WalWriter::create(
+        &durability::wal_path(&cfg.dir, core.id, generation),
+        core.id,
+        generation,
+        cfg.fsync,
+    )?;
+    w.set_fsync_stall(stall);
+    if core.logical != core.id {
+        w.append(&ToShard::Promote {
+            delta: PlacementDelta {
+                epoch: 0,
+                at_clock: 0,
+                grow_active: None,
+                promote: Some((core.logical as u32, core.id as u32)),
+                moves: vec![],
+            },
+        })?;
+    }
+    for worker in 0..core.workers {
+        let clock = core.clocks.committed(worker);
+        if clock > NEVER {
+            w.append(&ToShard::ClockTick { worker, clock })?;
+        }
+    }
+    for (&(clock, worker), rows) in core.staged.iter() {
+        if rows.is_empty() {
+            continue;
+        }
+        w.append(&ToShard::Update {
+            worker,
+            clock,
+            rows: rows.clone(),
+        })?;
+    }
+    w.commit()?;
+    Ok(w)
+}
+
+/// Transport that drops every send: recovery replays WAL frames through
+/// the live handler code paths, whose side-channel sends (forward relays,
+/// handoffs) already happened in the original run.
+struct NullTransport;
+
+impl Transport for NullTransport {
+    fn send(&self, _src: NodeId, _dst: NodeId, _packet: Packet) {}
 }
 
 impl ShardCore {
@@ -855,7 +1299,7 @@ impl ShardCore {
             self.send_to_worker(
                 worker,
                 ToWorker::Push {
-                    shard: self.id,
+                    shard: self.logical,
                     vclock,
                     rows,
                 },
@@ -1789,5 +2233,137 @@ mod tests {
         });
         assert!(!shard.handle(ToShard::Shutdown));
         assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[4.0]);
+    }
+
+    fn dur_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("esspt-shard-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn crash_recovery_is_bit_identical_mid_run() {
+        // Non-associative sum (see deterministic_mode_applies_updates_in_
+        // worker_order): any deviation in recovery's fold order would
+        // change the bits, so equality here is a real replay check.
+        let dir = dur_dir("crash");
+        let (mut shard, _wrx, _net) = det_shard(2, true);
+        shard.init_row((0, 0), vec![1e8]);
+        let recovered = shard.enable_durability(DurabilityConfig::new(&dir)).unwrap();
+        assert!(!recovered, "fresh directory must not claim prior state");
+        shard.handle(ToShard::Update {
+            worker: 1,
+            clock: 0,
+            rows: vec![((0, 0), vec![-1e8].into())],
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 0), vec![1.0].into())],
+        });
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
+        // A staged tail beyond the table clock must survive the crash too.
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 1,
+            rows: vec![((0, 0), vec![2.5].into())],
+        });
+        let before = shard.row(&(0, 0)).unwrap().data.to_vec();
+        assert_eq!(before, vec![0.0], "sorted replay absorbs worker 0's +1");
+        shard.crash_and_recover().unwrap();
+        assert_eq!(shard.row(&(0, 0)).unwrap().data.to_vec(), before);
+        assert_eq!(shard.row(&(0, 0)).unwrap().fresh, 0);
+        assert_eq!(shard.table_clock(), 0);
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 1 });
+        shard.handle(ToShard::ClockTick { worker: 1, clock: 1 });
+        assert_eq!(shard.row(&(0, 0)).unwrap().data.to_vec(), vec![2.5]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn compaction_rolls_generations_and_purges_old_pairs() {
+        let dir = dur_dir("compact");
+        let (mut shard, _wrx, _net) = det_shard(1, true);
+        shard.init_row((0, 0), vec![0.0]);
+        let mut cfg = DurabilityConfig::new(&dir);
+        cfg.compact_every = 2;
+        shard.enable_durability(cfg).unwrap();
+        assert_eq!(durability::latest_generation(&dir, 0), Some(0));
+        for c in 0..4 {
+            shard.handle(ToShard::Update {
+                worker: 0,
+                clock: c,
+                rows: vec![((0, 0), vec![1.0].into())],
+            });
+            shard.handle(ToShard::ClockTick { worker: 0, clock: c });
+        }
+        // Two compactions (one per two commits); only the newest pair may
+        // remain on disk.
+        assert_eq!(durability::latest_generation(&dir, 0), Some(2));
+        assert!(!durability::ckpt_path(&dir, 0, 0).exists());
+        assert!(!durability::wal_path(&dir, 0, 1).exists());
+        let before = shard.row(&(0, 0)).unwrap().data.to_vec();
+        shard.crash_and_recover().unwrap();
+        assert_eq!(shard.row(&(0, 0)).unwrap().data.to_vec(), before);
+        assert_eq!(durability::latest_generation(&dir, 0), Some(3));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn promotion_swaps_logical_identity_and_policy() {
+        // Replica node 1 of logical shard 0 under ESSP: pull-only until
+        // the Promote lands, then full clock waves stamped with the dead
+        // primary's logical id.
+        let (wtx, wrx) = channel();
+        let (stx0, _srx0) = channel();
+        let (stx1, _srx1) = channel();
+        let net = SimNet::new(NetConfig::instant(), vec![wtx], vec![stx0, stx1]);
+        let mut shard = Shard::replica(
+            1,
+            1,
+            Consistency::Essp { s: 1 },
+            TransportHandle::new(net.handle()),
+            HashMap::new(),
+            false,
+        );
+        shard.init_row((0, 1), vec![7.0]);
+        shard.handle(ToShard::Register { key: (0, 1), worker: 0 });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![1.0].into())],
+        });
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
+        assert!(wrx.try_recv().is_err(), "replicas never push");
+        let delta = PlacementDelta {
+            epoch: 9,
+            at_clock: 1,
+            grow_active: None,
+            promote: Some((0, 1)),
+            moves: vec![],
+        };
+        shard.handle(ToShard::Promote {
+            delta: delta.clone(),
+        });
+        // The promotion relays the placement delta to every worker...
+        match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Placement { delta: d } => assert_eq!(d, delta),
+            other => panic!("unexpected {other:?}"),
+        }
+        // ...and the next commit fires a full wave re-certifying ALL rows,
+        // carrying the logical shard id so clients fold it into the right
+        // partition's guarantees.
+        shard.handle(ToShard::ClockTick { worker: 0, clock: 1 });
+        match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Push { shard: s, vclock, rows } => {
+                assert_eq!(s, 0, "wave must carry the logical shard id");
+                assert_eq!(vclock, 1);
+                assert_eq!(rows.len(), 1);
+                assert_eq!(&rows[0].data[..], &[8.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 }

@@ -1,0 +1,476 @@
+//! Deterministic, replayable fault injection (the adversity plane).
+//!
+//! A [`FaultPlan`] is a seeded schedule of failures parsed from one flag
+//! string (`--fault-plan`), so every failure an experiment observes is
+//! reproducible from the command line alone:
+//!
+//! ```text
+//!   seed=7;crash=s0@5;pause=s1@3:10ms;delay=w*-s0:200us;drop=w*-s*:0.01
+//! ```
+//!
+//! Clause grammar (`;`-separated, order-insensitive):
+//!
+//! | clause                  | meaning                                        |
+//! |-------------------------|------------------------------------------------|
+//! | `seed=N`                | seed for all probabilistic link decisions      |
+//! | `kill=sI@C`             | shard `I` dies permanently at table clock `C`  |
+//! | `crash=sI@C`            | shard `I` loses volatile state at clock `C` and recovers from its WAL |
+//! | `pause=sI@C:DUR`        | shard `I` stalls for `DUR` at clock `C`        |
+//! | `delay=SRC-DST:DUR`     | add `DUR` latency on matching links            |
+//! | `drop=SRC-DST:P`        | drop each matching packet with probability `P` |
+//! | `reorder=SRC-DST:P`     | re-queue each matching packet with fresh       |
+//! |                         | jitter, escaping the link FIFO clamp (sim only)|
+//! | `fsync-stall=DUR`       | every WAL/checkpoint fsync stalls for `DUR`    |
+//!
+//! Node selectors: `w3` / `s0` (one node), `w*` / `s*` (any worker/shard),
+//! `*` (any node). Durations take a `us`/`ms`/`s` suffix.
+//!
+//! Probabilistic decisions are pure functions of `(seed, src, dst, seq)`
+//! where `seq` counts packets per link — the same plan over the same
+//! traffic drops the same packets, every run. `kill`/`crash`/`pause` fire
+//! at a *table-clock commit boundary*, the one point every deterministic
+//! run passes through in the same state regardless of thread scheduling;
+//! this is what makes a crash-recover run comparable bit-for-bit against
+//! an undisturbed one.
+//!
+//! Caveats by transport: `delay`, `drop` and `fsync-stall` apply to both
+//! SimNet and TCP; `reorder` is sim-only (a TCP stream cannot reorder).
+//! `drop`/`reorder` deliberately violate the FIFO-reliable contract the
+//! PS protocol assumes — they exist to probe behaviour beyond the
+//! supported envelope, not for the equivalence tests.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::ps::types::Clock;
+use crate::transport::NodeId;
+use crate::util::hash::FxHashMap;
+use crate::util::rng::splitmix64;
+
+/// One side of a link pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeSel {
+    Any,
+    AnyWorker,
+    AnyShard,
+    Worker(usize),
+    Shard(usize),
+}
+
+impl NodeSel {
+    pub fn matches(&self, node: NodeId) -> bool {
+        match (self, node) {
+            (NodeSel::Any, _) => true,
+            (NodeSel::AnyWorker, NodeId::Worker(_)) => true,
+            (NodeSel::AnyShard, NodeId::Shard(_)) => true,
+            (NodeSel::Worker(w), NodeId::Worker(n)) => *w == n,
+            (NodeSel::Shard(s), NodeId::Shard(n)) => *s == n,
+            _ => false,
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "*" => Ok(NodeSel::Any),
+            "w*" => Ok(NodeSel::AnyWorker),
+            "s*" => Ok(NodeSel::AnyShard),
+            _ => {
+                let (kind, idx) = s.split_at(1);
+                let n: usize = idx
+                    .parse()
+                    .map_err(|_| format!("bad node selector {s:?} (want w3, s0, w*, s*, *)"))?;
+                match kind {
+                    "w" => Ok(NodeSel::Worker(n)),
+                    "s" => Ok(NodeSel::Shard(n)),
+                    _ => Err(format!("bad node selector {s:?} (want w3, s0, w*, s*, *)")),
+                }
+            }
+        }
+    }
+}
+
+/// A per-link network fault: fixed extra delay and/or probabilistic
+/// drop/reorder on packets whose (src, dst) match the selectors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkFault {
+    pub src: NodeSel,
+    pub dst: NodeSel,
+    pub delay: Option<Duration>,
+    pub drop: f64,
+    pub reorder: f64,
+}
+
+/// What a shard does when its fault clock arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardAction {
+    /// Die permanently: the shard stops processing and never dumps; its
+    /// replica is promoted to cover the partition.
+    Kill,
+    /// Amnesia: drop all volatile state, then recover from checkpoint +
+    /// WAL tail and keep serving.
+    Crash,
+    /// Stall the shard thread for the duration (a transient gray failure).
+    Pause(Duration),
+}
+
+/// One scheduled shard fault, fired at the first table-clock commit with
+/// `new_min >= at_clock`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardFault {
+    pub shard: usize,
+    pub at_clock: Clock,
+    pub action: ShardAction,
+}
+
+/// The full seeded fault schedule for one run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub links: Vec<LinkFault>,
+    pub shards: Vec<ShardFault>,
+    pub fsync_stall: Option<Duration>,
+}
+
+fn parse_duration(s: &str) -> Result<Duration, String> {
+    let (num, mul_us) = if let Some(n) = s.strip_suffix("us") {
+        (n, 1u64)
+    } else if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000)
+    } else {
+        return Err(format!("bad duration {s:?} (want e.g. 200us, 10ms, 2s)"));
+    };
+    let v: u64 = num
+        .parse()
+        .map_err(|_| format!("bad duration {s:?} (want e.g. 200us, 10ms, 2s)"))?;
+    Ok(Duration::from_micros(v * mul_us))
+}
+
+fn parse_link(rest: &str) -> Result<(NodeSel, NodeSel, &str), String> {
+    // SRC-DST:VALUE
+    let (pair, value) = rest
+        .split_once(':')
+        .ok_or_else(|| format!("bad link clause {rest:?} (want SRC-DST:VALUE)"))?;
+    let (src, dst) = pair
+        .split_once('-')
+        .ok_or_else(|| format!("bad link pattern {pair:?} (want SRC-DST)"))?;
+    Ok((NodeSel::parse(src)?, NodeSel::parse(dst)?, value))
+}
+
+fn parse_shard_at(rest: &str) -> Result<(usize, Clock, Option<&str>), String> {
+    // sI@C[:EXTRA]
+    let (sel, at) = rest
+        .split_once('@')
+        .ok_or_else(|| format!("bad shard clause {rest:?} (want sI@CLOCK)"))?;
+    let shard = match NodeSel::parse(sel)? {
+        NodeSel::Shard(s) => s,
+        _ => return Err(format!("shard faults need a concrete shard, got {sel:?}")),
+    };
+    let (clock, extra) = match at.split_once(':') {
+        Some((c, e)) => (c, Some(e)),
+        None => (at, None),
+    };
+    let at_clock: Clock = clock
+        .parse()
+        .map_err(|_| format!("bad fault clock {clock:?}"))?;
+    if at_clock < 0 {
+        return Err(format!("fault clock must be >= 0, got {at_clock}"));
+    }
+    Ok((shard, at_clock, extra))
+}
+
+fn parse_prob(s: &str) -> Result<f64, String> {
+    let p: f64 = s.parse().map_err(|_| format!("bad probability {s:?}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("probability {p} outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+impl FaultPlan {
+    /// Parse the `--fault-plan` clause string. Empty string = empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(';').filter(|c| !c.trim().is_empty()) {
+            let (key, rest) = clause
+                .trim()
+                .split_once('=')
+                .ok_or_else(|| format!("bad fault clause {clause:?} (want key=value)"))?;
+            match key {
+                "seed" => {
+                    plan.seed = rest.parse().map_err(|_| format!("bad seed {rest:?}"))?;
+                }
+                "kill" | "crash" => {
+                    let (shard, at_clock, extra) = parse_shard_at(rest)?;
+                    if extra.is_some() {
+                        return Err(format!("{key}={rest}: unexpected trailing value"));
+                    }
+                    let action = if key == "kill" {
+                        ShardAction::Kill
+                    } else {
+                        ShardAction::Crash
+                    };
+                    plan.shards.push(ShardFault { shard, at_clock, action });
+                }
+                "pause" => {
+                    let (shard, at_clock, extra) = parse_shard_at(rest)?;
+                    let dur = parse_duration(
+                        extra.ok_or_else(|| format!("pause={rest}: missing :DURATION"))?,
+                    )?;
+                    plan.shards.push(ShardFault {
+                        shard,
+                        at_clock,
+                        action: ShardAction::Pause(dur),
+                    });
+                }
+                "delay" => {
+                    let (src, dst, v) = parse_link(rest)?;
+                    plan.links.push(LinkFault {
+                        src,
+                        dst,
+                        delay: Some(parse_duration(v)?),
+                        drop: 0.0,
+                        reorder: 0.0,
+                    });
+                }
+                "drop" => {
+                    let (src, dst, v) = parse_link(rest)?;
+                    plan.links.push(LinkFault {
+                        src,
+                        dst,
+                        delay: None,
+                        drop: parse_prob(v)?,
+                        reorder: 0.0,
+                    });
+                }
+                "reorder" => {
+                    let (src, dst, v) = parse_link(rest)?;
+                    plan.links.push(LinkFault {
+                        src,
+                        dst,
+                        delay: None,
+                        drop: 0.0,
+                        reorder: parse_prob(v)?,
+                    });
+                }
+                "fsync-stall" => plan.fsync_stall = Some(parse_duration(rest)?),
+                other => return Err(format!("unknown fault clause {other:?}")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The scheduled faults for one shard, in clock order.
+    pub fn shard_faults(&self, shard: usize) -> Vec<ShardFault> {
+        let mut v: Vec<ShardFault> = self
+            .shards
+            .iter()
+            .filter(|f| f.shard == shard)
+            .copied()
+            .collect();
+        v.sort_by_key(|f| f.at_clock);
+        v
+    }
+
+    /// Shards scheduled to die permanently (their dumps never arrive).
+    pub fn killed_shards(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .filter(|f| f.action == ShardAction::Kill)
+            .map(|f| f.shard)
+            .collect()
+    }
+
+    /// True if any link fault could touch traffic.
+    pub fn has_link_faults(&self) -> bool {
+        !self.links.is_empty()
+    }
+}
+
+/// Verdict for one packet on one link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LinkVerdict {
+    pub delay: Duration,
+    pub drop: bool,
+    pub reorder: bool,
+}
+
+/// Stateful evaluator of a [`FaultPlan`]'s link faults: a per-link packet
+/// counter makes each probabilistic decision a pure function of
+/// `(seed, src, dst, seq)` — deterministic and replayable, independent of
+/// wall-clock or thread scheduling (given the transport presents packets
+/// per link in a deterministic order, which FIFO links do).
+pub struct FaultInjector {
+    plan: FaultPlan,
+    seqs: Mutex<FxHashMap<(NodeId, NodeId), u64>>,
+}
+
+fn node_word(n: NodeId) -> u64 {
+    match n {
+        NodeId::Worker(w) => 0x1000_0000_0000 | w as u64,
+        NodeId::Shard(s) => 0x2000_0000_0000 | s as u64,
+        NodeId::Coordinator => 0x3000_0000_0000,
+    }
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            plan,
+            seqs: Mutex::new(FxHashMap::default()),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Evaluate the plan against one packet. Advances the link's sequence
+    /// counter only when some fault matches the link, so fault-free links
+    /// stay contention-free in spirit (one map lookup, no decisions).
+    pub fn on_packet(&self, src: NodeId, dst: NodeId) -> LinkVerdict {
+        let mut verdict = LinkVerdict::default();
+        let matching: Vec<&LinkFault> = self
+            .plan
+            .links
+            .iter()
+            .filter(|f| f.src.matches(src) && f.dst.matches(dst))
+            .collect();
+        if matching.is_empty() {
+            return verdict;
+        }
+        let seq = {
+            let mut seqs = self.seqs.lock().unwrap();
+            let c = seqs.entry((src, dst)).or_insert(0);
+            let s = *c;
+            *c += 1;
+            s
+        };
+        for (i, f) in matching.iter().enumerate() {
+            if let Some(d) = f.delay {
+                verdict.delay += d;
+            }
+            // Independent streams per (link, seq, fault index, kind).
+            if f.drop > 0.0 && self.decide(src, dst, seq, (i as u64) << 1, f.drop) {
+                verdict.drop = true;
+            }
+            if f.reorder > 0.0 && self.decide(src, dst, seq, ((i as u64) << 1) | 1, f.reorder) {
+                verdict.reorder = true;
+            }
+        }
+        verdict
+    }
+
+    /// The configured fsync stall, if any.
+    pub fn fsync_stall(&self) -> Option<Duration> {
+        self.plan.fsync_stall
+    }
+
+    fn decide(&self, src: NodeId, dst: NodeId, seq: u64, stream: u64, p: f64) -> bool {
+        let mut s = self.plan.seed
+            ^ node_word(src).rotate_left(17)
+            ^ node_word(dst).rotate_left(41)
+            ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ stream.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+        let x = splitmix64(&mut s);
+        // Map to [0, 1) with 53-bit precision, same construction as Rng::f64.
+        let u = (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed=7;kill=s0@5;crash=s1@3;pause=s2@4:10ms;\
+             delay=w*-s0:200us;drop=w1-s*:0.25;reorder=*-*:0.5;fsync-stall=2ms",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.shards.len(), 3);
+        assert_eq!(
+            p.shards[0],
+            ShardFault { shard: 0, at_clock: 5, action: ShardAction::Kill }
+        );
+        assert_eq!(p.shards[1].action, ShardAction::Crash);
+        assert_eq!(
+            p.shards[2].action,
+            ShardAction::Pause(Duration::from_millis(10))
+        );
+        assert_eq!(p.links.len(), 3);
+        assert_eq!(p.links[0].delay, Some(Duration::from_micros(200)));
+        assert_eq!(p.links[1].drop, 0.25);
+        assert_eq!(p.links[2].reorder, 0.5);
+        assert_eq!(p.fsync_stall, Some(Duration::from_millis(2)));
+        assert_eq!(p.killed_shards(), vec![0]);
+        assert_eq!(p.shard_faults(1).len(), 1);
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        let p = FaultPlan::parse("").unwrap();
+        assert_eq!(p, FaultPlan::default());
+        assert!(!p.has_link_faults());
+    }
+
+    #[test]
+    fn rejects_malformed_clauses() {
+        for bad in [
+            "boom",
+            "kill=w0@5",     // faults target shards, not workers
+            "kill=s0",       // missing @clock
+            "kill=s0@-1",    // negative clock
+            "pause=s0@3",    // missing duration
+            "drop=w0-s0:1.5",// probability out of range
+            "delay=w0:10ms", // missing -DST
+            "delay=w0-s0:10",// missing duration suffix
+            "seed=x",
+            "frob=1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_per_link() {
+        let plan = FaultPlan::parse("seed=9;drop=w*-s*:0.5").unwrap();
+        let a = FaultInjector::new(plan.clone());
+        let b = FaultInjector::new(plan);
+        let w0 = NodeId::Worker(0);
+        let s0 = NodeId::Shard(0);
+        let s1 = NodeId::Shard(1);
+        let seq_a: Vec<bool> = (0..64).map(|_| a.on_packet(w0, s0).drop).collect();
+        let seq_b: Vec<bool> = (0..64).map(|_| b.on_packet(w0, s0).drop).collect();
+        assert_eq!(seq_a, seq_b, "same plan, same traffic, same drops");
+        assert!(seq_a.iter().any(|&d| d) && seq_a.iter().any(|&d| !d));
+        // An unmatched link is untouched and consumes no randomness.
+        let v = a.on_packet(s0, s1);
+        assert_eq!(v, LinkVerdict::default());
+    }
+
+    #[test]
+    fn delay_applies_without_randomness() {
+        let plan = FaultPlan::parse("delay=w1-s0:300us").unwrap();
+        let inj = FaultInjector::new(plan);
+        let v = inj.on_packet(NodeId::Worker(1), NodeId::Shard(0));
+        assert_eq!(v.delay, Duration::from_micros(300));
+        assert!(!v.drop && !v.reorder);
+        let v = inj.on_packet(NodeId::Worker(0), NodeId::Shard(0));
+        assert_eq!(v.delay, Duration::ZERO);
+    }
+
+    #[test]
+    fn selector_matching() {
+        use NodeSel::*;
+        assert!(Any.matches(NodeId::Coordinator));
+        assert!(AnyWorker.matches(NodeId::Worker(3)));
+        assert!(!AnyWorker.matches(NodeId::Shard(3)));
+        assert!(Shard(2).matches(NodeId::Shard(2)));
+        assert!(!Shard(2).matches(NodeId::Shard(1)));
+    }
+}

@@ -26,6 +26,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::ps::msg::{ToShard, ToWorker};
+use crate::sim::fault::FaultInjector;
 use crate::util::hash::FxHashMap;
 use crate::util::rng::Rng;
 
@@ -132,6 +133,19 @@ impl SimNet {
         worker_inboxes: Vec<Sender<ToWorker>>,
         shard_inboxes: Vec<Sender<ToShard>>,
     ) -> Self {
+        Self::with_faults(cfg, worker_inboxes, shard_inboxes, None)
+    }
+
+    /// Like [`SimNet::new`], with a fault injector evaluated against every
+    /// packet at the router: `delay` adds to the scheduled delivery time,
+    /// `drop` discards the packet (still counted settled, so `flush`
+    /// terminates), `reorder` re-jitters it outside the FIFO clamp.
+    pub fn with_faults(
+        cfg: NetConfig,
+        worker_inboxes: Vec<Sender<ToWorker>>,
+        shard_inboxes: Vec<Sender<ToShard>>,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Self {
         let (tx, rx) = channel::<Wire>();
         let stats = Arc::new(NetStats::default());
         let router_stats = stats.clone();
@@ -139,7 +153,7 @@ impl SimNet {
             .name("simnet-router".into())
             .spawn(move || {
                 crate::sim::priority::infrastructure_thread();
-                route_loop(cfg, rx, worker_inboxes, shard_inboxes, router_stats)
+                route_loop(cfg, rx, worker_inboxes, shard_inboxes, router_stats, faults)
             })
             .expect("spawn simnet router");
         SimNet {
@@ -244,9 +258,12 @@ fn route_loop(
     workers: Vec<Sender<ToWorker>>,
     shards: Vec<Sender<ToShard>>,
     stats: Arc<NetStats>,
+    faults: Option<Arc<FaultInjector>>,
 ) {
-    if cfg.is_instant() {
-        // Fast path: synchronous forwarding.
+    if cfg.is_instant() && faults.is_none() {
+        // Fast path: synchronous forwarding. (Link faults need the
+        // scheduling loop even on an instant net — injected delays must
+        // land in the heap.)
         while let Ok(wire) = rx.recv() {
             deliver(wire, &workers, &shards, &stats);
         }
@@ -283,6 +300,16 @@ fn route_loop(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(wire) => {
+                let verdict = faults
+                    .as_deref()
+                    .map(|inj| inj.on_packet(wire.src, wire.dst))
+                    .unwrap_or_default();
+                if verdict.drop {
+                    // A dropped packet still settles — flush must not
+                    // wait forever for a delivery that will never come.
+                    stats.delivered.fetch_add(1, Ordering::Release);
+                    continue;
+                }
                 let now = Instant::now();
                 let bytes = wire.packet.wire_bytes() as f64;
                 let ser = if cfg.bandwidth.is_finite() {
@@ -294,12 +321,19 @@ fn route_loop(
                 let link = (wire.src, wire.dst);
                 let free_at = link_free.get(&link).copied().unwrap_or(now).max(now) + ser;
                 link_free.insert(link, free_at);
-                let mut at = free_at + cfg.latency + jit;
-                // FIFO per link: never deliver before an earlier message.
-                if let Some(&last) = link_last.get(&link) {
-                    at = at.max(last + Duration::from_nanos(1));
+                let mut at = free_at + cfg.latency + jit + verdict.delay;
+                if verdict.reorder {
+                    // Escape the FIFO clamp: fresh jitter, no clamp, and
+                    // link_last untouched so later traffic may overtake.
+                    at += cfg.jitter.mul_f64(rng.f64());
+                } else {
+                    // FIFO per link: never deliver before an earlier
+                    // message.
+                    if let Some(&last) = link_last.get(&link) {
+                        at = at.max(last + Duration::from_nanos(1));
+                    }
+                    link_last.insert(link, at);
                 }
-                link_last.insert(link, at);
                 seq += 1;
                 heap.push(Reverse(Scheduled { at, seq, wire }));
             }
@@ -461,6 +495,37 @@ mod tests {
             .send(NodeId::Worker(0), NodeId::Shard(0), Packet::ToShard(big));
         srx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(80), "{:?}", t0.elapsed());
+        net.shutdown();
+    }
+
+    #[test]
+    fn fault_drop_discards_but_settles() {
+        // Every packet dropped: nothing arrives, yet flush terminates
+        // because drops count as settled.
+        let plan = crate::sim::fault::FaultPlan::parse("seed=1;drop=w*-s*:1.0").unwrap();
+        let inj = Arc::new(FaultInjector::new(plan));
+        let (stx, srx) = channel();
+        let net = SimNet::with_faults(NetConfig::instant(), vec![], vec![stx], Some(inj));
+        for c in 0..10 {
+            net.handle()
+                .send(NodeId::Worker(0), NodeId::Shard(0), tick(0, c));
+        }
+        net.flush();
+        assert_eq!(srx.try_iter().count(), 0);
+        net.shutdown();
+    }
+
+    #[test]
+    fn fault_delay_postpones_delivery() {
+        let plan = crate::sim::fault::FaultPlan::parse("delay=w0-s0:30ms").unwrap();
+        let inj = Arc::new(FaultInjector::new(plan));
+        let (stx, srx) = channel();
+        let net = SimNet::with_faults(NetConfig::instant(), vec![], vec![stx], Some(inj));
+        let t0 = Instant::now();
+        net.handle()
+            .send(NodeId::Worker(0), NodeId::Shard(0), tick(0, 1));
+        srx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(25), "{:?}", t0.elapsed());
         net.shutdown();
     }
 

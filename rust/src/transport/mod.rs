@@ -28,6 +28,7 @@ use std::time::Duration;
 use anyhow::{Context as _, Result};
 
 use crate::ps::msg::{ToShard, ToWorker};
+use crate::sim::fault::FaultInjector;
 use crate::sim::net::{NetConfig, SimNet};
 use self::tcp::{LocalSink, TcpTransport};
 
@@ -134,8 +135,23 @@ impl Fabric {
         worker_tx: Vec<Sender<ToWorker>>,
         shard_tx: Vec<Sender<ToShard>>,
     ) -> Result<Fabric> {
+        Self::build_with_faults(sel, net, worker_tx, shard_tx, None)
+    }
+
+    /// [`Fabric::build`] with a link-fault injector threaded into the
+    /// backend: the SimNet router or the TCP per-connection writers
+    /// evaluate it against every packet (see `sim::fault`).
+    pub fn build_with_faults(
+        sel: TransportSel,
+        net: NetConfig,
+        worker_tx: Vec<Sender<ToWorker>>,
+        shard_tx: Vec<Sender<ToShard>>,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Result<Fabric> {
         match sel {
-            TransportSel::Sim => Ok(Fabric::Sim(SimNet::new(net, worker_tx, shard_tx))),
+            TransportSel::Sim => Ok(Fabric::Sim(SimNet::with_faults(
+                net, worker_tx, shard_tx, faults,
+            ))),
             TransportSel::Tcp => {
                 if !net.is_instant() {
                     eprintln!(
@@ -150,9 +166,14 @@ impl Fabric {
                     .map(|(s, tx)| (NodeId::Shard(s), LocalSink::Shard(tx)))
                     .collect();
                 let workers = worker_tx.len();
-                let (server, addr) =
-                    TcpTransport::server("127.0.0.1:0", server_locals, None, workers)
-                        .context("binding loopback shard endpoint")?;
+                let (server, addr) = TcpTransport::server_with_faults(
+                    "127.0.0.1:0",
+                    server_locals,
+                    None,
+                    workers,
+                    faults.clone(),
+                )
+                .context("binding loopback shard endpoint")?;
                 let client_locals: Vec<(NodeId, LocalSink)> = worker_tx
                     .into_iter()
                     .enumerate()
@@ -161,9 +182,13 @@ impl Fabric {
                 let conns: Vec<(usize, usize, std::net::SocketAddr)> = (0..workers)
                     .flat_map(|w| (0..n_shards).map(move |s| (w, s, addr)))
                     .collect();
-                let client =
-                    TcpTransport::client(client_locals, &conns, Duration::from_secs(10))
-                        .context("dialing loopback shard endpoint")?;
+                let client = TcpTransport::client_with_faults(
+                    client_locals,
+                    &conns,
+                    Duration::from_secs(10),
+                    faults,
+                )
+                .context("dialing loopback shard endpoint")?;
                 Ok(Fabric::Tcp { client, server })
             }
         }

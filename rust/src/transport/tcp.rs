@@ -36,6 +36,7 @@ use anyhow::{ensure, Context, Result};
 use super::wire;
 use super::{NodeId, Packet, Transport, TransportHandle};
 use crate::ps::msg::{ToShard, ToWorker};
+use crate::sim::fault::FaultInjector;
 use crate::util::hash::FxHashMap;
 
 /// Bounded depth of each per-peer writer queue. A full queue blocks the
@@ -134,6 +135,11 @@ struct Inner {
     local: FxHashMap<NodeId, LocalSink>,
     stats: Arc<TcpStats>,
     events: Option<Sender<PeerEvent>>,
+    /// Link-fault injector (`--fault-plan`): writers consult it per frame
+    /// — `delay` stalls the link (FIFO preserved), `drop` discards the
+    /// frame (counted, so flush converges). `reorder` is sim-only; a TCP
+    /// stream cannot reorder.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl Transport for Inner {
@@ -205,6 +211,18 @@ impl TcpTransport {
         events: Option<Sender<PeerEvent>>,
         workers: usize,
     ) -> Result<(Self, SocketAddr)> {
+        Self::server_with_faults(addr, locals, events, workers, None)
+    }
+
+    /// [`TcpTransport::server`] with a link-fault injector wired into the
+    /// per-connection writers.
+    pub fn server_with_faults(
+        addr: &str,
+        locals: Vec<(NodeId, LocalSink)>,
+        events: Option<Sender<PeerEvent>>,
+        workers: usize,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Result<(Self, SocketAddr)> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
         let bound = listener.local_addr()?;
@@ -216,6 +234,7 @@ impl TcpTransport {
             local: locals.into_iter().collect(),
             stats: Arc::new(TcpStats::default()),
             events,
+            faults,
         });
         let stop = Arc::new(AtomicBool::new(false));
         let threads = Arc::new(Mutex::new(Vec::new()));
@@ -243,7 +262,18 @@ impl TcpTransport {
         conns: &[(usize, usize, SocketAddr)],
         timeout: Duration,
     ) -> Result<Self> {
-        let t = Self::endpoint(locals);
+        Self::client_with_faults(locals, conns, timeout, None)
+    }
+
+    /// [`TcpTransport::client`] with a link-fault injector wired into the
+    /// per-connection writers.
+    pub fn client_with_faults(
+        locals: Vec<(NodeId, LocalSink)>,
+        conns: &[(usize, usize, SocketAddr)],
+        timeout: Duration,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Result<Self> {
+        let t = Self::endpoint_with_faults(locals, faults);
         for &(w, s, addr) in conns {
             t.dial(NodeId::Worker(w), NodeId::Shard(s), addr, timeout)
                 .with_context(|| format!("worker {w}: connecting to shard {s} at {addr}"))?;
@@ -254,6 +284,15 @@ impl TcpTransport {
     /// A dial-only endpoint with no listener (the client side above, and
     /// shard processes dialing their migration peers).
     pub fn endpoint(locals: Vec<(NodeId, LocalSink)>) -> Self {
+        Self::endpoint_with_faults(locals, None)
+    }
+
+    /// [`TcpTransport::endpoint`] with a link-fault injector wired into
+    /// the per-connection writers.
+    pub fn endpoint_with_faults(
+        locals: Vec<(NodeId, LocalSink)>,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Self {
         let inner = Arc::new(Inner {
             routes: RwLock::new(FxHashMap::default()),
             closed: AtomicBool::new(false),
@@ -261,6 +300,7 @@ impl TcpTransport {
             local: locals.into_iter().collect(),
             stats: Arc::new(TcpStats::default()),
             events: None,
+            faults,
         });
         TcpTransport {
             inner,
@@ -281,7 +321,7 @@ impl TcpTransport {
         addr: SocketAddr,
         timeout: Duration,
     ) -> Result<()> {
-        let mut stream = connect_with_retry(addr, timeout)?;
+        let mut stream = connect_with_retry(addr, dst, timeout)?;
         stream.set_nodelay(true)?;
         // Bound the ack wait: a connect can succeed against something
         // that is not an essptable peer and never answers.
@@ -354,19 +394,36 @@ impl TcpTransport {
     }
 }
 
-fn connect_with_retry(addr: SocketAddr, timeout: Duration) -> Result<TcpStream> {
+/// Dial with bounded exponential backoff: waits start at 10 ms, double up
+/// to a 500 ms cap, and carry deterministic jitter (0.5x–1.5x, derived
+/// from the attempt count and port — no shared rng) so a fleet of workers
+/// restarting together doesn't re-dial in lockstep. On exhaustion the
+/// error names the peer, the address, the attempt count, and the last
+/// OS error.
+fn connect_with_retry(addr: SocketAddr, dst: NodeId, timeout: Duration) -> Result<TcpStream> {
     let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(10);
+    let mut attempts = 0u32;
     loop {
-        match TcpStream::connect(addr) {
+        attempts += 1;
+        let err = match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
-            Err(e) => {
-                if Instant::now() >= deadline {
-                    return Err(anyhow::Error::from(e)
-                        .context(format!("no server reachable at {addr} after {timeout:?}")));
-                }
-                std::thread::sleep(Duration::from_millis(50));
-            }
+            Err(e) => e,
+        };
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(anyhow::Error::from(err).context(format!(
+                "peer {dst:?} at {addr} unreachable after {attempts} connect \
+                 attempts over {timeout:?}"
+            )));
         }
+        let mut s = (attempts as u64) ^ ((addr.port() as u64) << 32);
+        let jitter = 0.5 + (crate::util::rng::splitmix64(&mut s) % 1024) as f64 / 1024.0;
+        let wait = backoff
+            .mul_f64(jitter)
+            .min(deadline.saturating_duration_since(now));
+        std::thread::sleep(wait);
+        backoff = (backoff * 2).min(Duration::from_millis(500));
     }
 }
 
@@ -513,9 +570,10 @@ fn register_conn(
     }
     let wstream = stream.try_clone().context("cloning stream for writer")?;
     let wstats = inner.stats.clone();
+    let wfaults = inner.faults.clone();
     let wh = std::thread::Builder::new()
         .name(format!("tcp-w-{peer:?}"))
-        .spawn(move || writer_loop(wstream, qrx, wstats))
+        .spawn(move || writer_loop(wstream, qrx, wstats, wfaults))
         .context("spawning writer")?;
     let rinner = inner.clone();
     let rh = std::thread::Builder::new()
@@ -528,7 +586,12 @@ fn register_conn(
     Ok(())
 }
 
-fn writer_loop(stream: TcpStream, rx: Receiver<Frame>, stats: Arc<TcpStats>) {
+fn writer_loop(
+    stream: TcpStream,
+    rx: Receiver<Frame>,
+    stats: Arc<TcpStats>,
+    faults: Option<Arc<FaultInjector>>,
+) {
     crate::sim::priority::infrastructure_thread();
     let shutdown_handle = stream.try_clone().ok();
     let mut w = BufWriter::with_capacity(SOCK_BUF, stream);
@@ -542,6 +605,26 @@ fn writer_loop(stream: TcpStream, rx: Receiver<Frame>, stats: Arc<TcpStats>) {
         };
         let mut next = Some(first);
         while let Some((src, dst, packet)) = next.take() {
+            // Link faults apply at the writer: this thread owns the FIFO
+            // link, so the per-link packet sequence (and with it every
+            // probabilistic verdict) is deterministic.
+            if let Some(inj) = &faults {
+                let verdict = inj.on_packet(src, dst);
+                if verdict.drop {
+                    stats.dropped.fetch_add(1, Ordering::AcqRel);
+                    next = rx.try_recv().ok();
+                    continue;
+                }
+                if !verdict.delay.is_zero() {
+                    // Flush queued frames first, then stall the link —
+                    // the delay must postpone this packet, not batch it
+                    // with earlier traffic.
+                    if !dead && w.flush().is_err() {
+                        dead = true;
+                    }
+                    std::thread::sleep(verdict.delay);
+                }
+            }
             if dead {
                 stats.dropped.fetch_add(1, Ordering::AcqRel);
             } else {
@@ -731,6 +814,64 @@ mod tests {
             Packet::ToShard(ToShard::Shutdown),
         );
         assert_eq!(client.stats().dropped(), 1);
+        teardown(client, server);
+    }
+
+    #[test]
+    fn exhausted_dial_names_the_peer() {
+        let t = TcpTransport::endpoint(vec![]);
+        // The discard port: nothing listens there, so every connect is
+        // refused and the backoff loop runs to exhaustion.
+        let addr: SocketAddr = "127.0.0.1:9".parse().unwrap();
+        let err = t
+            .dial(
+                NodeId::Worker(0),
+                NodeId::Shard(3),
+                addr,
+                Duration::from_millis(200),
+            )
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("Shard(3)"), "{msg}");
+        assert!(msg.contains("connect attempts"), "{msg}");
+        t.close_send();
+        t.join();
+    }
+
+    #[test]
+    fn fault_drop_over_tcp_counts_dropped_and_settles() {
+        let plan = crate::sim::fault::FaultPlan::parse("seed=3;drop=w*-s*:1.0").unwrap();
+        let (stx, srx) = channel();
+        let (server, addr) = TcpTransport::server(
+            "127.0.0.1:0",
+            vec![(NodeId::Shard(0), LocalSink::Shard(stx))],
+            None,
+            4,
+        )
+        .unwrap();
+        let (wtx, _wrx) = channel();
+        let client = TcpTransport::client_with_faults(
+            vec![(NodeId::Worker(0), LocalSink::Worker(wtx))],
+            &[(0, 0, addr)],
+            Duration::from_secs(5),
+            Some(Arc::new(FaultInjector::new(plan))),
+        )
+        .unwrap();
+        for c in 0..5 {
+            client.handle().send(
+                NodeId::Worker(0),
+                NodeId::Shard(0),
+                Packet::ToShard(ToShard::ClockTick { worker: 0, clock: c }),
+            );
+        }
+        // Every frame dies at the writer, yet all of them settle — the
+        // flush contract survives a fully black-holed link.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while client.stats().settled() < 5 {
+            assert!(Instant::now() < deadline, "drops never settled");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(srx.try_iter().count(), 0);
         teardown(client, server);
     }
 

@@ -13,11 +13,11 @@
 //! node  := kind:u8 (0 = worker, 1 = shard, 2 = coordinator) | id:u32
 //! ```
 //!
-//! `len` counts every byte after the length prefix. Message kinds 0–11
+//! `len` counts every byte after the length prefix. Message kinds 0–12
 //! are the `ToShard` variants (Get, Update, ClockTick, Register, PushAck,
 //! VapAck, Shutdown, NormReport, Detach, MigrateBegin, RowHandoff,
-//! MigrateCommit), 16–20 the `ToWorker` variants (Row, Push, VapPush,
-//! Bound, Placement).
+//! MigrateCommit, Promote), 16–20 the `ToWorker` variants (Row, Push,
+//! VapPush, Bound, Placement).
 //! Row payloads are raw `f32` little-endian; on little-endian targets the
 //! encoder writes them straight from the shared `Arc<[f32]>` storage —
 //! encoding a push wave stages no intermediate payload copy.
@@ -76,8 +76,9 @@ pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
 /// (v2: NormReport/Detach/Bound — the distributed value-bound protocol;
 /// v3: hybrid dense/sparse Update rows; v4: the elastic shard plane —
 /// MigrateBegin/RowHandoff/MigrateCommit/Placement and the coordinator
-/// node kind).
-pub const VERSION: u16 = 4;
+/// node kind; v5: crash tolerance — the Promote control message and the
+/// placement delta's replica-promotion field).
+pub const VERSION: u16 = 5;
 /// Versions this binary can speak (currently exactly [`VERSION`]; kept a
 /// range so the reject blob's negotiation surface survives a future
 /// multi-version binary).
@@ -106,6 +107,7 @@ const K_DETACH: u8 = 8;
 const K_MIGRATE_BEGIN: u8 = 9;
 const K_ROW_HANDOFF: u8 = 10;
 const K_MIGRATE_COMMIT: u8 = 11;
+const K_PROMOTE: u8 = 12;
 const K_ROW: u8 = 16;
 const K_PUSH: u8 = 17;
 const K_VAP_PUSH: u8 = 18;
@@ -144,8 +146,17 @@ pub fn to_shard_body_len(m: &ToShard) -> usize {
                 + staged.iter().map(|(_, _, d)| row_wire_bytes(d)).sum::<usize>()
         }
         ToShard::MigrateCommit { .. } => 8,
+        ToShard::Promote { delta } => placement_delta_body_len(delta),
         ToShard::Shutdown => 0,
     }
+}
+
+/// Encoded size of a `PlacementDelta` body (shared by the `ToWorker::
+/// Placement` broadcast and the `ToShard::Promote` control message):
+/// epoch 8 + at_clock 8 + grow flag/value 5 + promote flag/pair 9 +
+/// move count 4, then 16 bytes per move.
+fn placement_delta_body_len(delta: &PlacementDelta) -> usize {
+    34 + 16 * delta.moves.len()
 }
 
 /// Exact body size of a `ToWorker` message.
@@ -156,7 +167,7 @@ pub fn to_worker_body_len(m: &ToWorker) -> usize {
             16 + rows.iter().map(|r| 24 + 4 * r.data.len()).sum::<usize>()
         }
         ToWorker::Bound { .. } => 5,
-        ToWorker::Placement { delta } => 25 + 16 * delta.moves.len(),
+        ToWorker::Placement { delta } => placement_delta_body_len(delta),
     }
 }
 
@@ -378,8 +389,33 @@ fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
             w8(w, K_MIGRATE_COMMIT)?;
             w64(w, *epoch)
         }
+        ToShard::Promote { delta } => {
+            w8(w, K_PROMOTE)?;
+            write_placement_delta(w, delta)
+        }
         ToShard::Shutdown => w8(w, K_SHUTDOWN),
     }
+}
+
+/// Write a `PlacementDelta` body — shared by `ToWorker::Placement` and
+/// `ToShard::Promote` so the two cannot drift.
+fn write_placement_delta(w: &mut impl Write, delta: &PlacementDelta) -> io::Result<()> {
+    w64(w, delta.epoch)?;
+    wi64(w, delta.at_clock)?;
+    // grow flag + value (0 when absent): fixed-size for a simple
+    // body-length formula; likewise the promote flag + pair.
+    w8(w, u8::from(delta.grow_active.is_some()))?;
+    w32(w, delta.grow_active.unwrap_or(0))?;
+    let (primary, node) = delta.promote.unwrap_or((0, 0));
+    w8(w, u8::from(delta.promote.is_some()))?;
+    w32(w, primary)?;
+    w32(w, node)?;
+    w32(w, delta.moves.len() as u32)?;
+    for (key, dst) in &delta.moves {
+        wkey(w, key)?;
+        w32(w, *dst)?;
+    }
+    Ok(())
 }
 
 fn write_push_rows(w: &mut impl Write, rows: &[PushRow]) -> io::Result<()> {
@@ -431,18 +467,7 @@ fn write_to_worker(w: &mut impl Write, m: &ToWorker) -> io::Result<()> {
         }
         ToWorker::Placement { delta } => {
             w8(w, K_PLACEMENT)?;
-            w64(w, delta.epoch)?;
-            wi64(w, delta.at_clock)?;
-            // grow flag + value (0 when absent): fixed-size for a simple
-            // body-length formula.
-            w8(w, u8::from(delta.grow_active.is_some()))?;
-            w32(w, delta.grow_active.unwrap_or(0))?;
-            w32(w, delta.moves.len() as u32)?;
-            for (key, dst) in &delta.moves {
-                wkey(w, key)?;
-                w32(w, *dst)?;
-            }
-            Ok(())
+            write_placement_delta(w, delta)
         }
     }
 }
@@ -479,6 +504,33 @@ pub fn write_frame(
         Packet::ToShard(m) => write_to_shard(w, m),
         Packet::ToWorker(m) => write_to_worker(w, m),
     }
+}
+
+/// Encode one full `ToShard` frame without a wrapping [`Packet`] — the
+/// WAL appends borrowed messages straight off the shard's inbox, so this
+/// avoids cloning row payloads just to frame them. Layout and limits are
+/// identical to [`write_frame`].
+pub fn write_to_shard_frame(
+    w: &mut impl Write,
+    src: NodeId,
+    dst: NodeId,
+    m: &ToShard,
+) -> io::Result<()> {
+    let total = to_shard_frame_len(m);
+    if total > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "frame of {total} bytes exceeds MAX_FRAME ({MAX_FRAME}); \
+                 split the wave/update into smaller batches"
+            ),
+        ));
+    }
+    let len = (total - 4) as u32;
+    w32(w, len)?;
+    write_node(w, src)?;
+    write_node(w, dst)?;
+    write_to_shard(w, m)
 }
 
 // ----------------------------------------------------------------- decode
@@ -617,6 +669,36 @@ impl<'a> Cur<'a> {
             r => bail!("bad row representation byte {r}"),
         }
     }
+}
+
+fn decode_placement_delta(c: &mut Cur) -> Result<PlacementDelta> {
+    let epoch = c.u64()?;
+    let at_clock = c.i64()?;
+    let has_grow = c.bool()?;
+    let grow = c.u32()?;
+    let grow_active = has_grow.then_some(grow);
+    let has_promote = c.bool()?;
+    let primary = c.u32()?;
+    let node = c.u32()?;
+    let promote = has_promote.then_some((primary, node));
+    let n_moves = c.u32()? as usize;
+    ensure!(
+        n_moves <= c.rem() / 16,
+        "placement claims {n_moves} moves but only {} bytes remain",
+        c.rem()
+    );
+    let mut moves = Vec::with_capacity(n_moves);
+    for i in 0..n_moves {
+        let key = c.key().with_context(|| format!("placement move {i}"))?;
+        moves.push((key, c.u32()?));
+    }
+    Ok(PlacementDelta {
+        epoch,
+        at_clock,
+        grow_active,
+        promote,
+        moves,
+    })
 }
 
 fn decode_push_rows(c: &mut Cur) -> Result<Vec<PushRow>> {
@@ -772,6 +854,9 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
             })
         }
         K_MIGRATE_COMMIT => Packet::ToShard(ToShard::MigrateCommit { epoch: c.u64()? }),
+        K_PROMOTE => Packet::ToShard(ToShard::Promote {
+            delta: decode_placement_delta(&mut c)?,
+        }),
         K_SHUTDOWN => Packet::ToShard(ToShard::Shutdown),
         K_ROW => {
             let key = c.key()?;
@@ -799,32 +884,9 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
             shard: c.u32()? as usize,
             granted: c.bool()?,
         }),
-        K_PLACEMENT => {
-            let epoch = c.u64()?;
-            let at_clock = c.i64()?;
-            let has_grow = c.bool()?;
-            let grow = c.u32()?;
-            let grow_active = has_grow.then_some(grow);
-            let n_moves = c.u32()? as usize;
-            ensure!(
-                n_moves <= c.rem() / 16,
-                "placement claims {n_moves} moves but only {} bytes remain",
-                c.rem()
-            );
-            let mut moves = Vec::with_capacity(n_moves);
-            for i in 0..n_moves {
-                let key = c.key().with_context(|| format!("placement move {i}"))?;
-                moves.push((key, c.u32()?));
-            }
-            Packet::ToWorker(ToWorker::Placement {
-                delta: PlacementDelta {
-                    epoch,
-                    at_clock,
-                    grow_active,
-                    moves,
-                },
-            })
-        }
+        K_PLACEMENT => Packet::ToWorker(ToWorker::Placement {
+            delta: decode_placement_delta(&mut c)?,
+        }),
         k => bail!("unknown message kind {k}"),
     };
     ensure!(
@@ -1088,6 +1150,15 @@ mod tests {
                 staged: vec![],
             }),
             Packet::ToShard(ToShard::MigrateCommit { epoch: 9 }),
+            Packet::ToShard(ToShard::Promote {
+                delta: PlacementDelta {
+                    epoch: 1,
+                    at_clock: 0,
+                    grow_active: None,
+                    promote: Some((0, 2)),
+                    moves: vec![],
+                },
+            }),
             Packet::ToShard(ToShard::Shutdown),
             Packet::ToWorker(ToWorker::Row {
                 key: (3, 1),
@@ -1118,6 +1189,7 @@ mod tests {
                     epoch: 1,
                     at_clock: 6,
                     grow_active: Some(4),
+                    promote: None,
                     moves: vec![((0, 1), 3)],
                 },
             }),
@@ -1126,6 +1198,7 @@ mod tests {
                     epoch: 2,
                     at_clock: 11,
                     grow_active: None,
+                    promote: Some((1, 3)),
                     moves: vec![],
                 },
             }),
@@ -1138,6 +1211,32 @@ mod tests {
             assert_eq!(dst, NodeId::Shard(0));
             assert_eq!(&back, p);
         }
+    }
+
+    #[test]
+    fn borrowing_to_shard_writer_matches_packet_writer() {
+        // The WAL's borrowing encoder must be byte-identical to the
+        // Packet-wrapping one — they are the same on-disk format.
+        let m = ToShard::Update {
+            worker: 2,
+            clock: 9,
+            rows: vec![
+                ((1, 4), vec![1.0f32, 2.0].into()),
+                ((1, 5), RowDelta::sparse(128, vec![(7, 0.5)])),
+            ],
+        };
+        let mut via_packet = Vec::new();
+        write_frame(
+            &mut via_packet,
+            NodeId::Coordinator,
+            NodeId::Shard(1),
+            &Packet::ToShard(m.clone()),
+        )
+        .unwrap();
+        let mut borrowed = Vec::new();
+        write_to_shard_frame(&mut borrowed, NodeId::Coordinator, NodeId::Shard(1), &m)
+            .unwrap();
+        assert_eq!(via_packet, borrowed);
     }
 
     #[test]

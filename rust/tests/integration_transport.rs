@@ -496,6 +496,96 @@ fn multiprocess_replicated_cluster_trains_and_conserves() {
 }
 
 #[test]
+fn multiprocess_kill_promotes_replica_bit_exact() {
+    // A real OS process dies: primary 0's serve-shard process is killed
+    // by the seeded fault plan at clock 4, its dying act a Promote frame
+    // over the shard->replica socket it dialed at startup. run-cluster
+    // hands the killed primary's --dump to the replica process instead,
+    // so shard_0.ckp below is written by the *promoted* node. The fold is
+    // placement-independent under deterministic BSP: the merged result
+    // must match the undisturbed single-process run to the bit.
+    let out = out_dir("kill");
+    std::fs::create_dir_all(&out).unwrap();
+    let status = Command::new(bin())
+        .args([
+            "run-cluster",
+            "--app",
+            "logreg",
+            "--workers",
+            &WORKERS.to_string(),
+            "--shards",
+            &SHARDS.to_string(),
+            "--replicas",
+            "1",
+            "--fault-plan",
+            "kill=s0@4",
+            "--clocks",
+            "10",
+            "--consistency",
+            "bsp",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawning kill-faulted run-cluster");
+    assert!(status.success(), "kill-faulted run-cluster failed: {status}");
+    let mut rows = HashMap::new();
+    for i in 0..SHARDS {
+        let dump = out.join(format!("shard_{i}.ckp"));
+        rows.extend(checkpoint::load(&dump).expect("loading shard dump"));
+    }
+    std::fs::remove_dir_all(&out).ok();
+    let local = run_logreg_once(TransportSel::Sim, Consistency::Bsp, 10);
+    assert_bit_identical("multiprocess kill+promotion bsp", &local, &rows);
+}
+
+#[test]
+fn multiprocess_wal_crash_recovers_bit_exact() {
+    // The durable plane across OS processes: every shard process logs to
+    // a WAL (--fsync commit), shard 0 loses its volatile state at clock 4
+    // and recovers from checkpoint + log tail. Final params must match
+    // the undisturbed single-process run to the bit.
+    let out = out_dir("crash");
+    let wal = out_dir("crash-wal");
+    std::fs::create_dir_all(&out).unwrap();
+    std::fs::create_dir_all(&wal).unwrap();
+    let status = Command::new(bin())
+        .args([
+            "run-cluster",
+            "--app",
+            "logreg",
+            "--workers",
+            &WORKERS.to_string(),
+            "--shards",
+            &SHARDS.to_string(),
+            "--wal",
+            wal.to_str().unwrap(),
+            "--fsync",
+            "commit",
+            "--fault-plan",
+            "crash=s0@4",
+            "--clocks",
+            "10",
+            "--consistency",
+            "bsp",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawning crash-faulted run-cluster");
+    assert!(status.success(), "crash-faulted run-cluster failed: {status}");
+    let mut rows = HashMap::new();
+    for i in 0..SHARDS {
+        let dump = out.join(format!("shard_{i}.ckp"));
+        rows.extend(checkpoint::load(&dump).expect("loading shard dump"));
+    }
+    std::fs::remove_dir_all(&out).ok();
+    std::fs::remove_dir_all(&wal).ok();
+    let local = run_logreg_once(TransportSel::Sim, Consistency::Bsp, 10);
+    assert_bit_identical("multiprocess wal crash-recover bsp", &local, &rows);
+}
+
+#[test]
 fn multiprocess_vap_and_avap_run_to_completion() {
     // The PR-2 rejection path is gone: value-bounded models run as real
     // OS processes over TCP. The shard-local ledgers + NormReport/Bound/

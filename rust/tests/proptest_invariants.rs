@@ -323,6 +323,7 @@ fn prop_placement_delta_is_conservative() {
             epoch: 1,
             at_clock: 1,
             grow_active: None,
+            promote: None,
             moves: pre_moves,
         });
         let before = map.clone();
@@ -345,6 +346,7 @@ fn prop_placement_delta_is_conservative() {
             epoch: 2,
             at_clock: 5,
             grow_active,
+            promote: None,
             moves,
         };
         let mut after = before.clone();
@@ -391,6 +393,7 @@ fn prop_post_migration_routing_agrees_between_client_and_shards() {
             epoch: 1,
             at_clock: 3,
             grow_active: Some((active * mult) as u32),
+            promote: None,
             moves,
         };
         let plans = plan_shards(&before, &delta, keys.iter().copied());
