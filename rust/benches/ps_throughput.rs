@@ -295,6 +295,50 @@ fn bench_wal_overhead(fsync: FsyncPolicy, tag: &str, out: &mut Vec<Entry>) {
     ));
 }
 
+/// Telemetry-plane overhead: the headline ESSP workload with the full
+/// observability stack on — relaxed-atomic registries always record, and
+/// this run adds wire-shipped StatsPull polling every 4 clocks plus the
+/// event-trace ring — directly comparable to `e2e_essp3_x4w_get_into`.
+/// The claim is "out-of-band costs noise, not throughput".
+fn bench_telemetry_overhead(out: &mut Vec<Entry>) {
+    use essptable::telemetry::trace::TraceRing;
+    let workers = 4;
+    let label = "e2e essp:3 x4w get_into telemetry-on: 64 rd+inc/clock, 200 clocks";
+    let r = bench(label, 1, 5, || {
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers,
+            shards: 2,
+            consistency: Consistency::Essp { s: 3 },
+            net: NetConfig::instant(),
+            stats_pull_every: 4,
+            trace: Some(std::sync::Arc::new(TraceRing::new(65536))),
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 256, 32));
+        let apps: Vec<Box<dyn PsApp>> = (0..workers)
+            .map(|w| {
+                let mut buf: Vec<f32> = Vec::new();
+                Box::new(move |ps: &mut PsClient, _c: Clock| {
+                    for i in 0..64u64 {
+                        let key = (0, (w as u64 * 64 + i) % 256);
+                        ps.get_into(key, &mut buf);
+                        ps.inc(key, &[0.001f32; 32]);
+                    }
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let _ = cluster.run(apps, 200);
+    });
+    let ops = (workers * 64 * 200) as f64;
+    r.print_throughput(ops, "get+inc");
+    out.push((
+        "e2e_essp3_x4w_telemetry_on".into(),
+        r.mean.as_secs_f64(),
+        r.throughput(ops),
+    ));
+}
+
 /// Push (ESSP) vs pull (SSP) refresh traffic for the same workload:
 /// message counts + bytes (the batching claim).
 fn bench_push_vs_pull_traffic() {
@@ -485,6 +529,8 @@ fn main() {
     // versus the volatile e2e_essp3_x4w_get_into series.
     bench_wal_overhead(FsyncPolicy::Off, "off", &mut entries);
     bench_wal_overhead(FsyncPolicy::Commit, "commit", &mut entries);
+    // Observability: wire-shipped stats + tracing vs the bare series.
+    bench_telemetry_overhead(&mut entries);
     bench_push_vs_pull_traffic();
     write_json(&entries);
 }

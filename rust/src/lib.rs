@@ -17,6 +17,9 @@
 //! * [`apps`] — the paper's workloads (MF-SGD, LDA Gibbs) plus the LM
 //!   trainer and logistic regression.
 //! * [`metrics`] — staleness histograms, comm/comp timelines, convergence.
+//! * [`telemetry`] — the live plane: per-node atomic metrics registries,
+//!   wire-shipped stats snapshots, `--metrics-addr` admin scrape sockets,
+//!   and the bounded event-trace ring (`--trace-out`).
 //! * [`harness`] — experiment drivers regenerating each paper figure.
 
 // Crate lint policy (CI runs `cargo clippy -- -D warnings`): these style
@@ -76,6 +79,8 @@ pub mod metrics {
     pub mod staleness;
     pub mod timeline;
 }
+
+pub mod telemetry;
 
 pub mod runtime {
     pub mod artifact;

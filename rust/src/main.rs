@@ -12,6 +12,7 @@
 //!   serve-shard                 — host one PS shard as a TCP server process
 //!   run-worker                  — run one worker process against a cluster
 //!   run-cluster                 — spawn shards + workers as OS processes
+//!   ps-top                      — poll admin scrape endpoints, render tables
 //!
 //! Common flags: --workers N --shards N --clocks N --seed N
 //!   --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0|avap:V0:S
@@ -49,9 +50,13 @@ use essptable::runtime::artifact::ArtifactDir;
 use essptable::runtime::engine::RuntimeService;
 use essptable::sim::fault::{FaultInjector, FaultPlan, ShardAction};
 use essptable::sim::straggler::StragglerModel;
+use essptable::telemetry::admin;
+use essptable::telemetry::registry::MetricsSource;
+use essptable::telemetry::trace::TraceRing;
 use essptable::transport::tcp::{LocalSink, PeerEvent, TcpTransport};
 use essptable::transport::{NodeId, TransportSel};
 use essptable::util::cli::Args;
+use essptable::util::json::Json;
 
 fn main() -> ExitCode {
     let args = Args::from_env();
@@ -70,6 +75,7 @@ fn main() -> ExitCode {
         Some("serve-shard") => cmd_serve_shard(&args),
         Some("run-worker") => cmd_run_worker(&args),
         Some("run-cluster") => cmd_run_cluster(&args),
+        Some("ps-top") => cmd_ps_top(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
@@ -108,7 +114,13 @@ const USAGE: &str = "usage: essptable <subcommand> [flags]
                   [--fault-plan SPEC --cluster addr,...]
                 run-worker  --index W --cluster host:p,... --workers N
                   [--replicas R] [--active A] [--migrate-at C [--grow-to N]]
-                  [--fault-plan SPEC]
+                  [--fault-plan SPEC] [--stats-pull-every N]
+                ps-top --scrape host:p,... [--interval-ms N] [--iters N]
+  telemetry:    serve-shard/run-worker: [--metrics-addr ADDR]
+                  [--trace-out FILE.jsonl [--trace-debug true]]
+                run-cluster: [--metrics true] [--trace-dir DIR]
+                  [--stats-pull-every N]  (admin endpoints serve GET /json
+                  and GET /metrics; ps-top polls them)
   common flags: --workers N --shards N --clocks N --seed N
                 --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0|avap:V0:S
                 --straggler none|uniform:F|... --net lan|instant
@@ -186,6 +198,66 @@ fn fault_plan(args: &Args) -> anyhow::Result<FaultPlan> {
     FaultPlan::parse(&args.str("fault-plan", "")).map_err(anyhow::Error::msg)
 }
 
+/// Per-node telemetry flags shared by `serve-shard` and `run-worker`:
+/// `--metrics-addr ADDR` binds the admin scrape socket, `--trace-out
+/// FILE.jsonl` collects structured events into a ring dumped at exit,
+/// `--trace-debug true` additionally records debug-level events (e.g.
+/// per-link backpressure). All strictly out-of-band: absent flags cost
+/// the data plane nothing.
+struct Telemetry {
+    metrics_addr: Option<String>,
+    trace_out: Option<PathBuf>,
+    ring: Option<Arc<TraceRing>>,
+}
+
+fn telemetry(args: &Args) -> Telemetry {
+    let trace_out = args.opt_str("trace-out").map(PathBuf::from);
+    let ring = trace_out.as_ref().map(|_| {
+        Arc::new(TraceRing::with_debug(
+            args.usize("trace-cap", 65536),
+            args.bool("trace-debug", false),
+        ))
+    });
+    Telemetry {
+        metrics_addr: args.opt_str("metrics-addr"),
+        trace_out,
+        ring,
+    }
+}
+
+impl Telemetry {
+    /// Start the admin endpoint if `--metrics-addr` was given. The handle
+    /// must stay alive for the process lifetime (drop stops serving).
+    fn serve(
+        &self,
+        sources: Vec<Arc<dyn MetricsSource>>,
+    ) -> anyhow::Result<Option<admin::AdminHandle>> {
+        let Some(addr) = &self.metrics_addr else {
+            return Ok(None);
+        };
+        let h = admin::serve(addr, sources)
+            .with_context(|| format!("binding --metrics-addr {addr}"))?;
+        println!("metrics: admin endpoint on {}", h.addr);
+        Ok(Some(h))
+    }
+
+    /// Dump the event ring to `--trace-out` (call on every exit path that
+    /// should preserve the trace, including fault-kill wind-downs).
+    fn dump(&self) -> anyhow::Result<()> {
+        if let (Some(path), Some(ring)) = (&self.trace_out, &self.ring) {
+            ring.dump_jsonl(path)
+                .with_context(|| format!("writing trace to {}", path.display()))?;
+            println!(
+                "trace: {} events ({} dropped) -> {}",
+                ring.len(),
+                ring.dropped(),
+                path.display()
+            );
+        }
+        Ok(())
+    }
+}
+
 fn mf_config(args: &Args) -> MfConfig {
     MfConfig {
         rows: args.usize("rows", 512),
@@ -233,6 +305,27 @@ fn print_report(label: &str, report: &RunReport, final_value: f64, value_name: &
         println!(
             "  vap stalls      {:.2}s across {reads} reads",
             stall.as_secs_f64()
+        );
+    }
+    if report.read_latency.count > 0 {
+        println!(
+            "  read latency    p50 {}us  p99 {}us  p999 {}us  ({} reads)",
+            report.read_latency.quantile(0.50) / 1_000,
+            report.read_latency.quantile(0.99) / 1_000,
+            report.read_latency.quantile(0.999) / 1_000,
+            report.read_latency.count,
+        );
+    }
+    if !report.shard_queue_hwm.is_empty() {
+        let hwm: Vec<String> = report
+            .shard_queue_hwm
+            .iter()
+            .map(|v| v.to_string())
+            .collect();
+        println!(
+            "  shard queue hwm [{}]   staleness violations {}",
+            hwm.join(", "),
+            report.staleness_violations
         );
     }
 }
@@ -610,8 +703,12 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         vec![(NodeId::Shard(index), LocalSink::Shard(shard_tx.clone()))],
         Some(events_tx),
         workers,
-        injector,
+        injector.clone(),
     )?;
+    let telem = telemetry(args);
+    if let Some(ring) = &telem.ring {
+        transport.set_trace(ring.clone());
+    }
     let role = if placement.is_replica(index) {
         format!("replica of shard {}", placement.primary_of(index))
     } else {
@@ -705,6 +802,20 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
             },
         );
     }
+    if let Some(ring) = &telem.ring {
+        shard.set_trace(ring.clone());
+    }
+    // Admin scrape sources: this shard's registry, the transport's
+    // endpoint + per-link counters, and (when faulted) the injector's
+    // verdict tallies. Grabbed before `spawn` moves the shard; the Arcs
+    // stay valid for the process lifetime.
+    let mut sources: Vec<Arc<dyn MetricsSource>> = Vec::new();
+    sources.push(shard.metrics());
+    sources.push(transport.metrics_source());
+    if let Some(inj) = &injector {
+        sources.push(inj.clone());
+    }
+    let _admin = telem.serve(sources)?;
     let (dump_tx, dump_rx) = channel();
     let handle = essptable::ps::shard::spawn(shard, shard_rx, dump_tx);
 
@@ -770,6 +881,8 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         );
         transport.close_send();
         transport.join();
+        // The kill is exactly what the trace exists to document.
+        telem.dump()?;
         return Ok(());
     }
     let _ = shard_tx.send(ToShard::Shutdown);
@@ -788,6 +901,7 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
     }
     transport.close_send();
     transport.join();
+    telem.dump()?;
     Ok(())
 }
 
@@ -844,7 +958,7 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
         vec![(NodeId::Worker(index), LocalSink::Worker(worker_tx))],
         &conns,
         timeout,
-        injector,
+        injector.clone(),
     )?;
     println!(
         "worker {index}/{workers}: connected to {total} shard node(s), {} clocks of {}",
@@ -852,11 +966,16 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
         consistency.label()
     );
 
+    let telem = telemetry(args);
+    if let Some(ring) = &telem.ring {
+        transport.set_trace(ring.clone());
+    }
     let client_cfg = ClientConfig {
         consistency,
         cache_capacity: 0,
         read_my_writes: true,
         virtual_clock: None,
+        stats_pull_every: args.u64("stats-pull-every", 0) as Clock,
     };
     let mut ps = PsClient::new(
         index,
@@ -867,6 +986,20 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
         row_len,
         Instant::now(),
     );
+    if let Some(ring) = &telem.ring {
+        ps.set_trace(ring.clone());
+    }
+    // Admin scrape sources: this worker's registry, its wire-shipped
+    // mirror of shard stats (populated by StatsReport replies when
+    // --stats-pull-every > 0), the transport, and any fault injector.
+    let mut sources: Vec<Arc<dyn MetricsSource>> = Vec::new();
+    sources.push(ps.metrics());
+    sources.push(ps.shard_reports());
+    sources.push(transport.metrics_source());
+    if let Some(inj) = &injector {
+        sources.push(inj.clone());
+    }
+    let _admin = telem.serve(sources)?;
     let mut worker = (app.make)(index, workers);
     let mut last_metric = None;
     for c in 0..clocks as Clock {
@@ -886,8 +1019,19 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
             .map(|v| format!(", final local metric {v:.4}"))
             .unwrap_or_default()
     );
+    let lat = ps.metrics().read_latency_ns.snapshot();
+    if lat.count > 0 {
+        println!(
+            "worker {index}: read latency p50 {}us p99 {}us p999 {}us ({} reads)",
+            lat.quantile(0.50) / 1_000,
+            lat.quantile(0.99) / 1_000,
+            lat.quantile(0.999) / 1_000,
+            lat.count,
+        );
+    }
     transport.close_send();
     transport.join();
+    telem.dump()?;
     Ok(())
 }
 
@@ -1017,6 +1161,40 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
         }
     };
 
+    // Telemetry plumbing. `--metrics true` gives every child process its
+    // own admin scrape socket; the launcher picks the ports and prints
+    // the full map BEFORE spawning, so an operator (or test) can scrape
+    // any node mid-run. `--trace-dir DIR` hands each child a private
+    // `--trace-out` JSONL file inside DIR. `--stats-pull-every N` makes
+    // workers poll shard registries over the wire (StatsPull/StatsReport)
+    // every N clocks — it defaults on with metrics so worker endpoints
+    // also expose live per-shard state.
+    let metrics = args.bool("metrics", false);
+    let trace_dir = args.opt_str("trace-dir").map(PathBuf::from);
+    if let Some(d) = &trace_dir {
+        std::fs::create_dir_all(d).with_context(|| format!("creating {d:?}"))?;
+    }
+    let trace_debug = args.bool("trace-debug", false);
+    let stats_pull_every = args.u64("stats-pull-every", if metrics { 4 } else { 0 });
+    let metrics_addrs = if metrics {
+        let picked = pick_local_ports(total + workers)?;
+        for (i, a) in picked.iter().take(total).enumerate() {
+            println!("metrics: shard {i} -> {a}");
+        }
+        for (w, a) in picked.iter().skip(total).enumerate() {
+            println!("metrics: worker {w} -> {a}");
+        }
+        picked
+    } else {
+        Vec::new()
+    };
+    let trace_file = |d: &PathBuf, name: String| -> anyhow::Result<String> {
+        Ok(d.join(name)
+            .to_str()
+            .context("non-utf8 trace path")?
+            .to_string())
+    };
+
     let exe = std::env::current_exe().context("locating own binary")?;
     // On any spawn failure, kill what was already launched: dropped Child
     // handles do NOT terminate the processes, and shards wait on their
@@ -1116,6 +1294,18 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
         if !fault_spec.is_empty() {
             sargs.extend(["--fault-plan".into(), fault_spec.clone()]);
         }
+        if metrics {
+            sargs.extend(["--metrics-addr".into(), metrics_addrs[i].clone()]);
+        }
+        if let Some(d) = &trace_dir {
+            sargs.extend([
+                "--trace-out".into(),
+                trace_file(d, format!("trace_shard_{i}.jsonl"))?,
+            ]);
+            if trace_debug {
+                sargs.extend(["--trace-debug".into(), "true".into()]);
+            }
+        }
         sargs.extend(dur_flags.iter().cloned());
         sargs.extend(app_flags.iter().cloned());
         let child = Command::new(&exe).args(&sargs).spawn();
@@ -1151,6 +1341,24 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
         wargs.extend(mig_flags.iter().cloned());
         if !fault_spec.is_empty() {
             wargs.extend(["--fault-plan".into(), fault_spec.clone()]);
+        }
+        if metrics {
+            wargs.extend(["--metrics-addr".into(), metrics_addrs[total + w].clone()]);
+        }
+        if stats_pull_every > 0 {
+            wargs.extend([
+                "--stats-pull-every".into(),
+                stats_pull_every.to_string(),
+            ]);
+        }
+        if let Some(d) = &trace_dir {
+            wargs.extend([
+                "--trace-out".into(),
+                trace_file(d, format!("trace_worker_{w}.jsonl"))?,
+            ]);
+            if trace_debug {
+                wargs.extend(["--trace-debug".into(), "true".into()]);
+            }
         }
         wargs.extend(app_flags.iter().cloned());
         let child = Command::new(&exe).args(&wargs).spawn();
@@ -1228,6 +1436,99 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
         _ => {}
     }
     Ok(())
+}
+
+/// `ps-top`: poll one or more admin scrape endpoints (`--scrape a,b,...`)
+/// and render per-node tables. A worker endpoint whose client runs with
+/// `--stats-pull-every` also carries wire-shipped shard rows (its
+/// [`ShardReportMirror`]), so pointing ps-top at a single worker shows
+/// live cluster-wide state. `--iters N` bounds the loop (0 = run until
+/// interrupted); `--interval-ms` sets the poll cadence.
+///
+/// [`ShardReportMirror`]: essptable::ps::client::ShardReportMirror
+fn cmd_ps_top(args: &Args) -> anyhow::Result<()> {
+    let addrs = args.strs("scrape");
+    ensure!(
+        !addrs.is_empty(),
+        "ps-top needs --scrape host:port[,host:port...] (each node's \
+         --metrics-addr; `run-cluster --metrics true` prints the full map)"
+    );
+    let interval = Duration::from_millis(args.u64("interval-ms", 1000));
+    let iters = args.u64("iters", 0);
+    let timeout = Duration::from_secs(2);
+    let mut round = 0u64;
+    loop {
+        round += 1;
+        println!("== ps-top round {round}");
+        println!(
+            "  {:<22} {:<14} {:>10} {:>10} {:>8} {:>7} {:>9} {:>9}",
+            "endpoint", "node", "reads", "upd/pull", "commits", "queue", "p50(us)", "p99(us)"
+        );
+        for addr in &addrs {
+            match admin::scrape(addr, "/json", timeout) {
+                Ok(body) => match Json::parse(&body) {
+                    Ok(doc) => print_top_rows(addr, &doc),
+                    Err(e) => println!("  {addr:<22} <bad json: {e:?}>"),
+                },
+                Err(e) => println!("  {addr:<22} <unreachable: {e}>"),
+            }
+        }
+        if iters != 0 && round >= iters {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// One table row per node in one endpoint's JSON snapshot. Shard and
+/// worker registries use different metric names for the analogous idea
+/// (a shard *serves* gets, a worker *issues* them); each cell takes the
+/// first name the node actually has, and stays blank otherwise (tcp and
+/// fault rows mostly show blanks — their numbers live in `/json`).
+fn print_top_rows(addr: &str, doc: &Json) {
+    let nodes = match doc.get("nodes").and_then(|n| n.as_arr()) {
+        Ok(n) => n,
+        Err(e) => {
+            println!("  {addr:<22} <unexpected document: {e:?}>");
+            return;
+        }
+    };
+    for node in nodes {
+        let name = node.get("node").and_then(|n| n.as_str()).unwrap_or("?");
+        let metric = |keys: &[&str]| -> String {
+            keys.iter()
+                .find_map(|k| {
+                    node.get("metrics")
+                        .and_then(|o| o.get(k))
+                        .and_then(|v| v.as_u64())
+                        .ok()
+                })
+                .map(|v| v.to_string())
+                .unwrap_or_default()
+        };
+        let quant = |hists: &[&str], p: &str| -> String {
+            hists
+                .iter()
+                .find_map(|h| {
+                    node.get("hists")
+                        .and_then(|o| o.get(h))
+                        .and_then(|o| o.get(p))
+                        .and_then(|v| v.as_f64())
+                        .ok()
+                })
+                .map(|ns| format!("{:.0}", ns / 1_000.0))
+                .unwrap_or_default()
+        };
+        println!(
+            "  {addr:<22} {name:<14} {:>10} {:>10} {:>8} {:>7} {:>9} {:>9}",
+            metric(&["gets_served", "gets"]),
+            metric(&["updates_applied", "pulls"]),
+            metric(&["commits"]),
+            metric(&["queue_depth"]),
+            quant(&["read_latency_ns", "wal_append_ns"], "p50"),
+            quant(&["read_latency_ns", "wal_append_ns"], "p99"),
+        );
+    }
 }
 
 fn parse_list<T: std::str::FromStr>(s: &str) -> anyhow::Result<Vec<T>>

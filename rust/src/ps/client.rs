@@ -27,7 +27,7 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::cache::RowCache;
@@ -39,6 +39,8 @@ use super::types::{Clock, Key, TableId, WorkerId};
 use super::update::UpdateMap;
 use crate::metrics::staleness::StalenessHist;
 use crate::metrics::timeline::Timeline;
+use crate::telemetry::registry::{Counter, LogHist, MetricsSource, Snapshot};
+use crate::telemetry::trace::TraceRing;
 use crate::transport::{NodeId, Packet, TransportHandle};
 use crate::util::hash::{FxHashMap, FxHashSet};
 
@@ -53,6 +55,10 @@ pub struct ClientConfig {
     /// Virtual per-clock compute duration for `pace()` (see
     /// ClusterConfig::virtual_clock).
     pub virtual_clock: Option<std::time::Duration>,
+    /// Telemetry: every `n` CLOCKs this worker sends a `StatsPull` to
+    /// every live shard node and stashes the replies in its shard-report
+    /// mirror (0 = never; out-of-band, see `ps::server` § Observability).
+    pub stats_pull_every: Clock,
 }
 
 impl Default for ClientConfig {
@@ -62,6 +68,7 @@ impl Default for ClientConfig {
             cache_capacity: 0,
             read_my_writes: true,
             virtual_clock: None,
+            stats_pull_every: 0,
         }
     }
 }
@@ -103,6 +110,135 @@ pub struct ClientStats {
     /// bound grants, and the number of reads that blocked at least once.
     pub vap_stall_ns: u64,
     pub vap_stalled_reads: u64,
+    /// Tripwire (see `ps::server` § Observability): reads *admitted* with
+    /// a guaranteed clock below the model's bound. Provably zero for the
+    /// clock-bounded models — the admission loop enforces exactly that
+    /// bound — so any nonzero value is a consistency bug, not load.
+    pub staleness_violations: u64,
+}
+
+/// Live telemetry registry of one worker node (`Arc`-shared with the
+/// admin scrape thread; see `ps::server` § Observability). Mirrors the
+/// plain [`ClientStats`] counters that matter live and adds the read
+/// latency histogram and stall-time counters only the live plane needs.
+#[derive(Debug)]
+pub struct ClientMetrics {
+    /// Node label for snapshots, e.g. `"worker0"`.
+    pub node: String,
+    pub gets: Counter,
+    pub cache_hits: Counter,
+    /// Reads that missed (or were stale beyond the bound) and blocked on
+    /// at least one pull round-trip.
+    pub cache_misses: Counter,
+    pub pulls: Counter,
+    pub replica_pulls: Counter,
+    pub pushes_received: Counter,
+    pub rows_pushed_in: Counter,
+    /// See [`ClientStats::staleness_violations`].
+    pub staleness_violations: Counter,
+    /// `StatsReport` snapshots received into the shard-report mirror.
+    pub stats_reports: Counter,
+    /// Wall time of every admitted read, miss round-trips included.
+    pub read_latency_ns: LogHist,
+    /// Total wall time blocked in the SSP/miss pull loop.
+    pub read_stall_ns: Counter,
+    /// Total wall time blocked on revoked value-bound grants (VAP).
+    pub vap_stall_ns: Counter,
+}
+
+impl ClientMetrics {
+    pub fn new(worker: WorkerId) -> Self {
+        Self {
+            node: format!("worker{worker}"),
+            gets: Counter::new(),
+            cache_hits: Counter::new(),
+            cache_misses: Counter::new(),
+            pulls: Counter::new(),
+            replica_pulls: Counter::new(),
+            pushes_received: Counter::new(),
+            rows_pushed_in: Counter::new(),
+            staleness_violations: Counter::new(),
+            stats_reports: Counter::new(),
+            read_latency_ns: LogHist::new(),
+            read_stall_ns: Counter::new(),
+            vap_stall_ns: Counter::new(),
+        }
+    }
+
+    /// Flatten to snapshot entries (`telemetry::registry` convention).
+    pub fn entries(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = vec![
+            ("gets".into(), self.gets.get()),
+            ("cache_hits".into(), self.cache_hits.get()),
+            ("cache_misses".into(), self.cache_misses.get()),
+            ("pulls".into(), self.pulls.get()),
+            ("replica_pulls".into(), self.replica_pulls.get()),
+            ("pushes_received".into(), self.pushes_received.get()),
+            ("rows_pushed_in".into(), self.rows_pushed_in.get()),
+            ("staleness_violations".into(), self.staleness_violations.get()),
+            ("stats_reports".into(), self.stats_reports.get()),
+            ("read_stall_ns".into(), self.read_stall_ns.get()),
+            ("vap_stall_ns".into(), self.vap_stall_ns.get()),
+        ];
+        self.read_latency_ns.snapshot().entries("read_latency_ns", &mut out);
+        out
+    }
+}
+
+impl MetricsSource for ClientMetrics {
+    fn snapshots(&self) -> Vec<Snapshot> {
+        vec![Snapshot {
+            node: self.node.clone(),
+            entries: self.entries(),
+        }]
+    }
+}
+
+/// The latest `StatsReport` snapshot per shard node, as received by one
+/// worker's `StatsPull` polling. `Arc`-shared with the admin scrape
+/// thread, so a worker process's `--metrics-addr` endpoint exposes the
+/// shards it observes alongside its own counters — which is how
+/// `run-cluster` (and `ps-top`) see live *cluster-wide* state without
+/// any side channel beyond the data plane itself.
+#[derive(Debug, Default)]
+pub struct ShardReportMirror {
+    inner: Mutex<HashMap<usize, Vec<(String, u64)>>>,
+}
+
+impl ShardReportMirror {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn store(&self, shard: usize, entries: Vec<(String, u64)>) {
+        self.inner.lock().unwrap().insert(shard, entries);
+    }
+
+    /// Latest snapshot entries for `shard`, if any report arrived yet.
+    pub fn get(&self, shard: usize) -> Option<Vec<(String, u64)>> {
+        self.inner.lock().unwrap().get(&shard).cloned()
+    }
+
+    /// Shard ids with at least one report, ascending.
+    pub fn shards(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.inner.lock().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+impl MetricsSource for ShardReportMirror {
+    fn snapshots(&self) -> Vec<Snapshot> {
+        let g = self.inner.lock().unwrap();
+        let mut ids: Vec<usize> = g.keys().copied().collect();
+        ids.sort_unstable();
+        ids.into_iter()
+            .map(|id| Snapshot {
+                node: format!("shard{id}"),
+                entries: g[&id].clone(),
+            })
+            .collect()
+    }
 }
 
 /// The per-worker PS client.
@@ -147,6 +283,12 @@ pub struct PsClient {
     pub timeline: Timeline,
     pub stats: ClientStats,
     clock_started: Instant,
+    /// Live telemetry registry (`Arc`-shared with the scrape thread).
+    metrics: Arc<ClientMetrics>,
+    /// Latest wire-shipped shard snapshots (`StatsPull` polling).
+    shard_reports: Arc<ShardReportMirror>,
+    /// Event-trace flight recorder, when enabled (`--trace-out`).
+    trace: Option<Arc<TraceRing>>,
 }
 
 impl PsClient {
@@ -188,6 +330,33 @@ impl PsClient {
             timeline: Timeline::new(),
             stats: ClientStats::default(),
             clock_started: Instant::now(),
+            metrics: Arc::new(ClientMetrics::new(worker)),
+            shard_reports: Arc::new(ShardReportMirror::new()),
+            trace: None,
+        }
+    }
+
+    /// The live telemetry registry (share with an admin scrape socket).
+    pub fn metrics(&self) -> Arc<ClientMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// The shard-report mirror this worker's `StatsPull` polling fills
+    /// (share with an admin scrape socket).
+    pub fn shard_reports(&self) -> Arc<ShardReportMirror> {
+        Arc::clone(&self.shard_reports)
+    }
+
+    /// Attach the event-trace flight recorder.
+    pub fn set_trace(&mut self, ring: Arc<TraceRing>) {
+        self.trace = Some(ring);
+    }
+
+    /// Record one lifecycle event on the attached trace ring (no-op when
+    /// tracing is off), stamped with this worker's clock.
+    fn trace_event(&self, kind: &str, detail: String) {
+        if let Some(t) = &self.trace {
+            t.record(&self.metrics.node, self.clock, kind, detail);
         }
     }
 
@@ -243,6 +412,8 @@ impl PsClient {
             } => {
                 self.stats.pushes_received += 1;
                 self.stats.rows_pushed_in += rows.len() as u64;
+                self.metrics.pushes_received.inc();
+                self.metrics.rows_pushed_in.add(rows.len() as u64);
                 for row in rows {
                     self.cache.insert(row.key, row.data, vclock, row.fresh, shard);
                 }
@@ -264,6 +435,8 @@ impl PsClient {
             ToWorker::VapPush { shard, seq, rows } => {
                 self.stats.pushes_received += 1;
                 self.stats.rows_pushed_in += rows.len() as u64;
+                self.metrics.pushes_received.inc();
+                self.metrics.rows_pushed_in.add(rows.len() as u64);
                 for row in rows {
                     self.cache.force_data(row.key, row.data, row.fresh, shard);
                 }
@@ -282,9 +455,17 @@ impl PsClient {
                 // Accept exactly the next epoch (duplicates idempotent,
                 // gaps impossible with one coordinator).
                 if delta.epoch == self.placement.epoch() + 1 {
+                    self.trace_event(
+                        "placement_announced",
+                        format!("epoch {} (activates at clock {})", delta.epoch, delta.at_clock),
+                    );
                     self.pending_placement = Some(delta);
                     self.maybe_activate_placement();
                 }
+            }
+            ToWorker::StatsReport { shard, entries } => {
+                self.metrics.stats_reports.inc();
+                self.shard_reports.store(shard, entries);
             }
         }
     }
@@ -308,6 +489,17 @@ impl PsClient {
             return;
         }
         let delta = self.pending_placement.take().unwrap();
+        self.trace_event(
+            "placement_activate",
+            format!(
+                "epoch {} live{}",
+                delta.epoch,
+                match delta.promote {
+                    Some((p, n)) => format!(" (promotion: partition {p} -> node {n})"),
+                    None => String::new(),
+                }
+            ),
+        );
         let old_owners: Vec<(Key, usize)> = self
             .registered
             .iter()
@@ -408,7 +600,9 @@ impl PsClient {
                 );
             }
         }
-        self.stats.vap_stall_ns += t0.elapsed().as_nanos() as u64;
+        let stalled = t0.elapsed().as_nanos() as u64;
+        self.stats.vap_stall_ns += stalled;
+        self.metrics.vap_stall_ns.add(stalled);
     }
 
     /// Core of every read: enforce the policy's read conditions, then
@@ -417,6 +611,8 @@ impl PsClient {
     /// wrappers.
     fn get_snapshot(&mut self, key: Key) -> Arc<[f32]> {
         self.stats.gets += 1;
+        self.metrics.gets.inc();
+        let read_started = Instant::now();
         self.drain_inbox();
         self.value_gate();
 
@@ -469,8 +665,23 @@ impl PsClient {
                     let differential = vclock - self.clock;
                     let data = Arc::clone(&row.data);
                     self.staleness.record(differential);
+                    // Tripwire, not flow control: the admission above just
+                    // enforced the bound, so this counter is provably zero
+                    // unless a wave/announcement/migration path certifies a
+                    // copy it shouldn't — which is exactly what we want a
+                    // first-class, asserted-on counter for.
+                    if min_vclock.is_some_and(|mv| vclock < mv) {
+                        self.stats.staleness_violations += 1;
+                        self.metrics.staleness_violations.inc();
+                    }
+                    let elapsed = read_started.elapsed().as_nanos() as u64;
+                    self.metrics.read_latency_ns.record(elapsed);
                     if !pulled {
                         self.stats.cache_hits += 1;
+                        self.metrics.cache_hits.inc();
+                    } else {
+                        self.metrics.cache_misses.inc();
+                        self.metrics.read_stall_ns.add(elapsed);
                     }
                     // Opportunistic refresh (Async family).
                     if let Some(every) = self.policy.refresh_every() {
@@ -570,6 +781,7 @@ impl PsClient {
 
     fn fire_pull(&mut self, key: Key, min_vclock: Clock) {
         self.stats.pulls += 1;
+        self.metrics.pulls.inc();
         // Replica read fan-out: policies whose whole admission is the
         // clock window may round-robin pulls over the owner and its
         // replicas — the replica enforces the same `min_vclock` wait on
@@ -580,6 +792,7 @@ impl PsClient {
             let target = self.placement.read_target(&key, pick);
             if self.placement.is_replica(target) {
                 self.stats.replica_pulls += 1;
+                self.metrics.replica_pulls.inc();
             }
             target
         } else {
@@ -719,6 +932,22 @@ impl PsClient {
             );
         }
         self.clock += 1;
+        // Telemetry polling (out-of-band): ask every live shard node for
+        // its metrics snapshot. Same dead-node skip as the tick loop —
+        // a failed-over primary's node can never reply.
+        if self.cfg.stats_pull_every > 0 && self.clock % self.cfg.stats_pull_every == 0 {
+            for shard in 0..total {
+                if self.placement.node_of(shard) != shard {
+                    continue;
+                }
+                self.send(
+                    shard,
+                    ToShard::StatsPull {
+                        worker: self.worker,
+                    },
+                );
+            }
+        }
         // A pending placement whose boundary this tick crossed becomes
         // live before the next clock's reads and flushes.
         self.maybe_activate_placement();

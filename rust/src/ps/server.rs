@@ -96,6 +96,58 @@
 //! for the partition. Promotion requires `replicas >= 1` and (for now)
 //! no concurrent migration: both planes advance the placement epoch and
 //! their fences are not ordered against each other.
+//!
+//! # Observability (the `crate::telemetry` live plane)
+//!
+//! Every node carries a fixed-layout registry of relaxed atomic
+//! counters/gauges/log2-histograms, updated inline on the hot paths
+//! (one relaxed RMW per event, no locks, no allocation) and readable
+//! from any thread:
+//!
+//! * **Shards** ([`crate::ps::shard::ShardMetrics`], node `shardN`):
+//!   GETs served/queued/forwarded, updates applied/staged/forwarded,
+//!   commits, push waves + `wave_fanout` histogram, migration row
+//!   counts, promotions, the `queue_depth` gauge (staged batches +
+//!   queued GETs, with high-water mark) and `wal_append_ns` /
+//!   `wal_fsync_ns` latency histograms.
+//! * **Workers** ([`crate::ps::client::ClientMetrics`], node
+//!   `workerN`): GETs, cache hits/misses, pulls (replica fan-out
+//!   included), pushes, the `read_latency_ns` histogram,
+//!   `read_stall_ns` / `vap_stall_ns` blocked time, and the
+//!   `staleness_violations` tripwire — reads *admitted* below the
+//!   model's bound, provably zero for the clock-bounded models and
+//!   asserted zero in the integration suites.
+//! * **Transports**: per-link frame/byte counters, dial retries,
+//!   writer-queue backpressure events, and fault-plan verdict counts.
+//!
+//! Snapshots are flattened to `(name, value)` pairs (histograms as
+//! `name#count` / `name#sum` / `name#b<i>` buckets — see
+//! `telemetry::registry`) and travel three ways: end-of-run into
+//! [`RunReport`] (read-latency quantiles, per-shard queue high-water
+//! marks), over the wire as `ToShard::StatsPull` →
+//! `ToWorker::StatsReport` (wire v6) so `run-cluster` aggregates live
+//! cluster-wide state, and through the `--metrics-addr` admin socket
+//! (`GET /json`, Prometheus-style `GET /metrics`) that `ps-top` polls.
+//!
+//! The event-trace ring (`--trace-out`, `telemetry::trace`) is the
+//! flight recorder for *rare* lifecycle events, JSONL-dumped at exit:
+//!
+//! | kind | node | meaning |
+//! |------|------|---------|
+//! | `placement_announced` / `placement_activate` | worker | epoch held / made live |
+//! | `migrate_begin` / `migrate_handoff` / `migrate_release` | shard | fence armed / rows shipped / held commit released |
+//! | `promotion_sent` / `promotion` | shard | dying act / replica takeover |
+//! | `wal_generation` / `crash_recover` | shard | log roll / rebuild from disk |
+//! | `fault_pause` / `fault_crash` / `fault_kill` | shard | fault-plan firings |
+//! | `peer_up` / `peer_down` / `backpressure` (debug) | tcp | transport lifecycle |
+//!
+//! **Determinism guarantee.** Telemetry is strictly out-of-band:
+//! `StatsPull`/`StatsReport` are never WAL-logged, never staged, and
+//! touch no protocol state; registries and traces only *observe*. A
+//! deterministic run's final parameters are bit-identical with
+//! telemetry and tracing enabled (proven by
+//! `tests/integration_telemetry.rs` against the transport-matrix and
+//! durability suites).
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -115,6 +167,8 @@ use crate::metrics::timeline::Timeline;
 use crate::sim::fault::{FaultInjector, FaultPlan, ShardAction};
 use crate::sim::net::NetConfig;
 use crate::sim::straggler::StragglerModel;
+use crate::telemetry::registry::HistSnapshot;
+use crate::telemetry::trace::TraceRing;
 use crate::transport::{Fabric, TransportSel};
 use crate::util::rng::Rng;
 
@@ -204,6 +258,13 @@ pub struct ClusterConfig {
     /// commit boundaries.
     pub faults: FaultPlan,
     pub seed: u64,
+    /// Telemetry: every `n` CLOCKs each worker polls every live shard
+    /// node with a `StatsPull` (0 = never). Out-of-band; see module
+    /// docs, § Observability.
+    pub stats_pull_every: Clock,
+    /// Event-trace flight recorder shared by every node of this
+    /// in-process cluster (`None` = tracing off); see § Observability.
+    pub trace: Option<Arc<TraceRing>>,
 }
 
 impl Default for ClusterConfig {
@@ -225,6 +286,8 @@ impl Default for ClusterConfig {
             durability: None,
             faults: FaultPlan::default(),
             seed: 42,
+            stats_pull_every: 0,
+            trace: None,
         }
     }
 }
@@ -286,6 +349,20 @@ pub struct RunReport {
     /// stalled read count, aggregated across the clients (the read gate
     /// is client-side; there is no process-global tracker).
     pub vap_stall: Option<(Duration, u64)>,
+    /// Read-latency histogram merged across all clients (wall ns per
+    /// admitted GET, miss round-trips included); p50/p99/p999 via
+    /// [`HistSnapshot::quantile`]. See module docs, § Observability.
+    pub read_latency: HistSnapshot,
+    /// Staleness-bound tripwire, summed over clients — reads admitted
+    /// below the model's bound. Provably zero for BSP/SSP/ESSP.
+    pub staleness_violations: u64,
+    /// Per shard node: high-water mark of the backlog gauge (staged
+    /// batches + queued GETs). Killed nodes report 0 (they never dump).
+    pub shard_queue_hwm: Vec<u64>,
+    /// Per shard node: the full flattened end-of-run registry snapshot
+    /// (`telemetry::registry` entry convention) — WAL latency
+    /// histograms and the rest, for consumers beyond the summary line.
+    pub shard_metrics: Vec<Vec<(String, u64)>>,
 }
 
 impl RunReport {
@@ -534,6 +611,9 @@ impl Cluster {
                 shard.set_faults(scheduled);
             }
             shard.set_fsync_stall(cfg.faults.fsync_stall);
+            if let Some(ring) = &cfg.trace {
+                shard.set_trace(Arc::clone(ring));
+            }
         }
         // Pre-arm each killed primary's dying act: a fence-free placement
         // delta promoting its first replica, sent over the data plane at
@@ -575,7 +655,9 @@ impl Cluster {
                     cache_capacity: cfg.cache_capacity,
                     read_my_writes: cfg.read_my_writes,
                     virtual_clock: cfg.virtual_clock,
+                    stats_pull_every: cfg.stats_pull_every,
                 };
+                let trace = cfg.trace.clone();
                 let net_handle = fabric.worker_handle();
                 let row_len = row_len.clone();
                 let straggler = cfg.straggler.clone();
@@ -595,6 +677,9 @@ impl Cluster {
                             row_len,
                             started,
                         );
+                        if let Some(ring) = trace {
+                            ps.set_trace(ring);
+                        }
                         let mut log = ConvergenceLog::new();
                         let trace = std::env::var_os("ESSPTABLE_TRACE").is_some();
                         for c in 0..clocks as Clock {
@@ -648,12 +733,14 @@ impl Cluster {
         let mut timelines = Vec::new();
         let mut convergence = ConvergenceLog::new();
         let mut client_stats = Vec::new();
+        let mut read_latency = HistSnapshot::default();
         for h in worker_handles {
             let (ps, log) = h.join().expect("worker panicked");
             staleness.merge(&ps.staleness);
             per_worker_staleness.push(ps.staleness.clone());
             timelines.push(ps.timeline.clone());
             convergence.merge(&log);
+            read_latency.merge(&ps.metrics().read_latency_ns.snapshot());
             client_stats.push(ps.stats.clone());
         }
         let wall = started.elapsed();
@@ -668,6 +755,8 @@ impl Cluster {
             let _ = tx.send(ToShard::Shutdown);
         }
         let mut shard_stats = vec![ShardStats::default(); total_shards];
+        let mut shard_queue_hwm = vec![0u64; total_shards];
+        let mut shard_metrics = vec![Vec::new(); total_shards];
         let mut table_rows = HashMap::new();
         let mut replica_rows: Vec<HashMap<Key, Vec<f32>>> =
             vec![HashMap::new(); total_shards - cfg.shards];
@@ -680,6 +769,12 @@ impl Cluster {
         for _ in 0..total_shards - killed.len() {
             let fin = dump_rx.recv().expect("shard final state");
             shard_stats[fin.id] = fin.stats;
+            shard_queue_hwm[fin.id] = fin
+                .metrics
+                .iter()
+                .find(|(n, _)| n == "queue_hwm")
+                .map_or(0, |&(_, v)| v);
+            shard_metrics[fin.id] = fin.metrics;
             if fin.id < cfg.shards {
                 // Primaries are authoritative; key sets are disjoint
                 // (migration removes a handed-off row from its source).
@@ -716,6 +811,7 @@ impl Cluster {
         });
 
         let replica_hits = client_stats.iter().map(|s| s.replica_pulls).sum();
+        let staleness_violations = client_stats.iter().map(|s| s.staleness_violations).sum();
 
         RunReport {
             wall,
@@ -731,6 +827,10 @@ impl Cluster {
             replica_rows,
             replica_hits,
             vap_stall,
+            read_latency,
+            staleness_violations,
+            shard_queue_hwm,
+            shard_metrics,
         }
     }
 }

@@ -65,6 +65,8 @@ use super::policy::ServerPolicy;
 use super::types::{Clock, Key, RowDelta, TableId, WorkerId, NEVER};
 use super::vclock::MinClock;
 use crate::sim::fault::{ShardAction, ShardFault};
+use crate::telemetry::registry::{Counter, Gauge, LogHist, MetricsSource, Snapshot};
+use crate::telemetry::trace::TraceRing;
 use crate::transport::{NodeId, Packet, Transport, TransportHandle};
 use crate::util::hash::{FxHashMap, FxHashSet};
 
@@ -116,6 +118,104 @@ impl ReaderSet {
                 Some(base + t)
             })
         })
+    }
+}
+
+/// Live telemetry registry of one shard node (see `ps::server`
+/// § Observability). Fixed-layout relaxed atomics shared (`Arc`) with the
+/// admin scrape thread; the counters mirror [`ShardStats`] — the plain
+/// end-of-run dump — while also being safely readable mid-run from any
+/// thread, and add the latency histograms and queue gauges only the live
+/// plane needs. Updates are single relaxed RMWs on the message-handling
+/// path; never locks, never allocation.
+#[derive(Debug)]
+pub struct ShardMetrics {
+    /// Node label for snapshots, e.g. `"shard0"` (physical node id).
+    pub node: String,
+    pub gets_served: Counter,
+    pub gets_queued: Counter,
+    pub updates_applied: Counter,
+    /// Update rows buffered for deterministic replay (before they apply).
+    pub updates_staged: Counter,
+    /// Table-clock advances (commit boundaries).
+    pub commits: Counter,
+    pub rows_pushed: Counter,
+    pub push_waves: Counter,
+    pub gets_forwarded: Counter,
+    pub updates_forwarded: Counter,
+    pub rows_migrated_out: Counter,
+    pub rows_migrated_in: Counter,
+    /// Promotions this node performed (replica takeover).
+    pub promotions: Counter,
+    /// Telemetry snapshots served over the wire (StatsPull).
+    pub stats_pulls: Counter,
+    /// Staged batches + queued GETs after each handled message; the
+    /// high-water mark is the per-shard backlog figure `RunReport` cites.
+    pub queue_depth: Gauge,
+    /// WAL append / fsync wall latency in ns (durable shards only).
+    pub wal_append_ns: LogHist,
+    pub wal_fsync_ns: LogHist,
+    /// Rows per push wave (fan-out shape of the eager plane).
+    pub wave_fanout: LogHist,
+}
+
+impl ShardMetrics {
+    pub fn new(id: usize) -> Self {
+        Self {
+            node: format!("shard{id}"),
+            gets_served: Counter::new(),
+            gets_queued: Counter::new(),
+            updates_applied: Counter::new(),
+            updates_staged: Counter::new(),
+            commits: Counter::new(),
+            rows_pushed: Counter::new(),
+            push_waves: Counter::new(),
+            gets_forwarded: Counter::new(),
+            updates_forwarded: Counter::new(),
+            rows_migrated_out: Counter::new(),
+            rows_migrated_in: Counter::new(),
+            promotions: Counter::new(),
+            stats_pulls: Counter::new(),
+            queue_depth: Gauge::new(),
+            wal_append_ns: LogHist::new(),
+            wal_fsync_ns: LogHist::new(),
+            wave_fanout: LogHist::new(),
+        }
+    }
+
+    /// Flatten to snapshot entries — the `StatsReport` payload and the
+    /// admin socket's render source.
+    pub fn entries(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = vec![
+            ("gets_served".into(), self.gets_served.get()),
+            ("gets_queued".into(), self.gets_queued.get()),
+            ("updates_applied".into(), self.updates_applied.get()),
+            ("updates_staged".into(), self.updates_staged.get()),
+            ("commits".into(), self.commits.get()),
+            ("rows_pushed".into(), self.rows_pushed.get()),
+            ("push_waves".into(), self.push_waves.get()),
+            ("gets_forwarded".into(), self.gets_forwarded.get()),
+            ("updates_forwarded".into(), self.updates_forwarded.get()),
+            ("rows_migrated_out".into(), self.rows_migrated_out.get()),
+            ("rows_migrated_in".into(), self.rows_migrated_in.get()),
+            ("promotions".into(), self.promotions.get()),
+            ("stats_pulls".into(), self.stats_pulls.get()),
+            ("queue_depth".into(), self.queue_depth.get()),
+            ("queue_hwm".into(), self.queue_depth.hwm()),
+        ];
+        self.wal_append_ns.snapshot().entries("wal_append_ns", &mut out);
+        self.wal_fsync_ns.snapshot().entries("wal_fsync_ns", &mut out);
+        self.wave_fanout.snapshot().entries("wave_fanout", &mut out);
+        out
+    }
+}
+
+impl MetricsSource for ShardMetrics {
+    fn snapshots(&self) -> Vec<Snapshot> {
+        vec![Snapshot {
+            node: self.node.clone(),
+            entries: self.entries(),
+        }]
     }
 }
 
@@ -223,6 +323,11 @@ pub struct ShardCore {
     /// Cached all-zeros payloads per table (shared, never mutated).
     zero_rows: HashMap<TableId, Arc<[f32]>>,
     pub(crate) stats: ShardStats,
+    /// Live telemetry registry, `Arc`-shared with the admin scrape thread
+    /// (strictly out-of-band; see `ps::server` § Observability).
+    pub(crate) metrics: Arc<ShardMetrics>,
+    /// Event-trace flight recorder, when enabled (`--trace-out`).
+    trace: Option<Arc<TraceRing>>,
 }
 
 /// Live write-ahead-log state of a durable shard (one generation).
@@ -331,6 +436,8 @@ impl Shard {
                 row_len,
                 zero_rows: HashMap::new(),
                 stats: ShardStats::default(),
+                metrics: Arc::new(ShardMetrics::new(id)),
+                trace: None,
             },
             policy,
             consistency,
@@ -359,6 +466,16 @@ impl Shard {
         &self.core.stats
     }
 
+    /// The live telemetry registry (share with an admin scrape socket).
+    pub fn metrics(&self) -> Arc<ShardMetrics> {
+        Arc::clone(&self.core.metrics)
+    }
+
+    /// Attach the event-trace flight recorder.
+    pub fn set_trace(&mut self, ring: Arc<TraceRing>) {
+        self.core.trace = Some(ring);
+    }
+
     /// Drive the shard from its inbox until Shutdown. Returns final stats
     /// and the row store (for end-of-run evaluation by the harness).
     pub fn run(mut self, inbox: Receiver<ToShard>, dump: Sender<ShardFinal>) {
@@ -378,10 +495,12 @@ impl Shard {
         // from a client that switched epochs after its last tick) is
         // folded in sorted order rather than silently dropped.
         self.core.replay_staged_through(Clock::MAX);
+        let metrics = self.core.metrics.entries();
         let _ = dump.send(ShardFinal {
             id: self.core.id,
             rows: self.core.rows,
             stats: self.core.stats,
+            metrics,
         });
     }
 
@@ -394,7 +513,12 @@ impl Shard {
         // state it produced.
         if let Some(d) = self.durability.as_mut() {
             if wal_loggable(&msg) {
+                let t0 = std::time::Instant::now();
                 d.wal.append(&msg).expect("WAL append");
+                self.core
+                    .metrics
+                    .wal_append_ns
+                    .record(t0.elapsed().as_nanos() as u64);
             }
         }
         match msg {
@@ -463,8 +587,15 @@ impl Shard {
             }
             ToShard::MigrateCommit { epoch } => self.core.on_migrate_commit(epoch),
             ToShard::Promote { delta } => self.on_promote(delta),
+            ToShard::StatsPull { worker } => self.core.on_stats_pull(worker),
             ToShard::Shutdown => return false,
         }
+        // One relaxed store + fetch_max per message: the backlog gauge
+        // the scrape plane (and RunReport's high-water mark) reads.
+        self.core
+            .metrics
+            .queue_depth
+            .set((self.core.staged.len() + self.core.pending.len()) as u64);
         true
     }
 
@@ -508,6 +639,10 @@ impl Shard {
             .with_context(|| format!("shard {}: no durable generation to recover", self.core.id))?;
         let recovered = self.rebuild_core(&cfg, g)?;
         self.graft(recovered);
+        self.core.trace_event(
+            "crash_recover",
+            format!("rebuilt from generation {g}, table clock {}", self.core.table_clock()),
+        );
         self.start_generation(cfg, g + 1)
     }
 
@@ -547,12 +682,20 @@ impl Shard {
                         "shard {}: fault plan: pausing {d:?} at clock {}",
                         self.core.id, fault.at_clock
                     );
+                    self.core.trace_event(
+                        "fault_pause",
+                        format!("pause {d:?} armed at clock {}", fault.at_clock),
+                    );
                     std::thread::sleep(d);
                 }
                 ShardAction::Crash => {
                     eprintln!(
                         "shard {}: fault plan: crash + recover at clock {}",
                         self.core.id, fault.at_clock
+                    );
+                    self.core.trace_event(
+                        "fault_crash",
+                        format!("crash + recover armed at clock {}", fault.at_clock),
                     );
                     self.crash_and_recover().expect("fault-plan crash recovery");
                 }
@@ -561,7 +704,15 @@ impl Shard {
                         "shard {}: fault plan: killed at clock {}",
                         self.core.id, fault.at_clock
                     );
+                    self.core.trace_event(
+                        "fault_kill",
+                        format!("killed at clock {}", fault.at_clock),
+                    );
                     if let Some((node, delta)) = self.promote_on_kill.take() {
+                        self.core.trace_event(
+                            "promotion_sent",
+                            format!("dying act: Promote -> node {node}"),
+                        );
                         self.core.send_to_shard(node, ToShard::Promote { delta });
                     }
                     return false;
@@ -581,7 +732,12 @@ impl Shard {
         let Some(d) = self.durability.as_mut() else {
             return;
         };
+        let t0 = std::time::Instant::now();
         d.wal.commit().expect("WAL commit fsync");
+        self.core
+            .metrics
+            .wal_fsync_ns
+            .record(t0.elapsed().as_nanos() as u64);
         d.commits_since_compact += 1;
         let due = d.cfg.compact_every > 0 && d.commits_since_compact >= d.cfg.compact_every;
         if due && self.core.migration.is_none() && self.core.forwards.is_empty() {
@@ -596,6 +752,8 @@ impl Shard {
     /// generations. Checkpoint first, seed WAL second — recovery requires
     /// BOTH, so a crash between the two leaves the previous pair intact.
     fn start_generation(&mut self, cfg: DurabilityConfig, generation: u64) -> Result<()> {
+        self.core
+            .trace_event("wal_generation", format!("rolling to generation {generation}"));
         let wal = write_generation(&self.core, &cfg, generation, self.fsync_stall)?;
         self.durability = Some(Durability {
             cfg,
@@ -633,6 +791,10 @@ impl Shard {
             row_len: self.core.row_len.clone(),
             zero_rows: HashMap::new(),
             stats: ShardStats::default(),
+            // Recovery replays history through a throwaway core: its
+            // counters must not double into the live registry.
+            metrics: Arc::new(ShardMetrics::new(self.core.id)),
+            trace: None,
         };
         let ckpt = durability::ckpt_path(&cfg.dir, core.id, g);
         for (key, data, fresh) in checkpoint::load_v2(&ckpt)? {
@@ -742,6 +904,11 @@ impl Shard {
             node as usize, self.core.id,
             "Promote for node {node} delivered to shard {}",
             self.core.id
+        );
+        self.core.metrics.promotions.inc();
+        self.core.trace_event(
+            "promotion",
+            format!("replica node {node} takes over partition {primary}"),
         );
         self.core.logical = primary as usize;
         self.policy = self.consistency.server_policy(self.core.workers);
@@ -879,6 +1046,23 @@ impl ShardCore {
         );
     }
 
+    /// Record one lifecycle event on the attached trace ring (no-op when
+    /// tracing is off), stamped with the current table clock.
+    pub(crate) fn trace_event(&self, kind: &str, detail: String) {
+        if let Some(t) = &self.trace {
+            t.record(&self.metrics.node, self.table_clock(), kind, detail);
+        }
+    }
+
+    /// Telemetry pull (out-of-band): reply immediately with this node's
+    /// flattened metrics snapshot. Never staged, never WAL-logged, no
+    /// protocol state touched — see `ps::server` § Observability.
+    fn on_stats_pull(&mut self, worker: WorkerId) {
+        self.metrics.stats_pulls.inc();
+        let entries = self.metrics.entries();
+        self.send_to_worker(worker, ToWorker::StatsReport { shard: self.id, entries });
+    }
+
     /// The table clock reads may be served at. Normally the MinClock
     /// minimum; while this shard still awaits migration handoffs it is
     /// capped at `at_clock - 1` — staged updates beyond the fence are
@@ -934,6 +1118,7 @@ impl ShardCore {
             None => (self.zero_row(key.0), super::types::NEVER),
         };
         self.stats.gets_served += 1;
+        self.metrics.gets_served.inc();
         self.send_to_worker(
             worker,
             ToWorker::Row {
@@ -950,6 +1135,7 @@ impl ShardCore {
         // owner: relay the GET (the reply goes straight to the worker).
         if let Some(dst) = self.forward_of(&key) {
             self.stats.gets_forwarded += 1;
+            self.metrics.gets_forwarded.inc();
             self.send_to_shard(
                 dst,
                 ToShard::Get {
@@ -966,6 +1152,7 @@ impl ShardCore {
             // SSP wait condition — or a migrated-in key whose handoff
             // has not landed: hold the reply.
             self.stats.gets_queued += 1;
+            self.metrics.gets_queued.inc();
             self.pending.push(PendingGet {
                 key,
                 worker,
@@ -1007,6 +1194,7 @@ impl ShardCore {
             }
             for (dst, fwd) in forwarded {
                 self.stats.updates_forwarded += fwd.len() as u64;
+                self.metrics.updates_forwarded.add(fwd.len() as u64);
                 self.send_to_shard(
                     dst,
                     ToShard::Update {
@@ -1034,6 +1222,7 @@ impl ShardCore {
         if rows.is_empty() {
             return;
         }
+        self.metrics.updates_staged.add(rows.len() as u64);
         let base = self.staged.entry((clock, source)).or_default().len();
         for (i, (key, _)) in rows.iter().enumerate() {
             self.staged_index
@@ -1054,6 +1243,7 @@ impl ShardCore {
         let mut touched = Vec::with_capacity(rows.len());
         for (key, delta) in rows {
             self.stats.updates_applied += 1;
+            self.metrics.updates_applied.inc();
             if self.track_dirty {
                 self.dirty.insert(key);
             }
@@ -1195,6 +1385,7 @@ impl ShardCore {
         // reads or firing the wave for this advance.
         self.replay_staged_through(new_min);
         self.serve_pending(new_min);
+        self.metrics.commits.inc();
         Some(new_min)
     }
 
@@ -1230,6 +1421,7 @@ impl ShardCore {
             if let Some(dst) = self.forward_of(&p.key) {
                 // The key moved while the GET waited: relay it.
                 self.stats.gets_forwarded += 1;
+            self.metrics.gets_forwarded.inc();
                 self.send_to_shard(
                     dst,
                     ToShard::Get {
@@ -1296,6 +1488,9 @@ impl ShardCore {
             // can advance their copies' guarantees without re-pulling.
             self.stats.rows_pushed += rows.len() as u64;
             self.stats.push_waves += 1;
+            self.metrics.rows_pushed.add(rows.len() as u64);
+            self.metrics.push_waves.inc();
+            self.metrics.wave_fanout.record(rows.len() as u64);
             self.send_to_worker(
                 worker,
                 ToWorker::Push {
@@ -1331,6 +1526,14 @@ impl ShardCore {
                 m.epoch
             );
         }
+        self.trace_event(
+            "migrate_begin",
+            format!(
+                "epoch {epoch} armed: fence at clock {at_clock}, {} outgoing, {} incoming",
+                outgoing.len(),
+                incoming.len()
+            ),
+        );
         self.migration = Some(Migration {
             epoch,
             at_clock,
@@ -1365,6 +1568,10 @@ impl ShardCore {
         if outgoing.is_empty() {
             return;
         }
+        self.trace_event(
+            "migrate_handoff",
+            format!("epoch {epoch}: handing off {} keys", outgoing.len()),
+        );
         // Extract the staged tails of migrated keys; the destination
         // merges them into its own (clock, worker)-sorted replay, so the
         // global fold order per key is unchanged by the move.
@@ -1411,6 +1618,7 @@ impl ShardCore {
             self.dirty.remove(&key);
             let staged = staged_out.remove(&key).unwrap_or_default();
             self.stats.rows_migrated_out += 1;
+            self.metrics.rows_migrated_out.inc();
             self.forwards.insert(key, dst);
             self.send_to_shard(
                 dst,
@@ -1462,6 +1670,7 @@ impl ShardCore {
         // stale forward so reads stop bouncing.
         self.forwards.remove(&key);
         self.stats.rows_migrated_in += 1;
+        self.metrics.rows_migrated_in.inc();
         if exists {
             if self.track_dirty {
                 // The next clock wave must carry the row to (re-)
@@ -1499,6 +1708,12 @@ impl ShardCore {
             Some(m) if m.awaiting.is_empty() => m.held_min.take(),
             _ => None,
         };
+        if release.is_some() {
+            self.trace_event(
+                "migrate_release",
+                format!("epoch {epoch}: last handoff landed, releasing held commit"),
+            );
+        }
         match release {
             Some(new_min) => self.advance(new_min),
             None => {
@@ -1534,6 +1749,10 @@ pub struct ShardFinal {
     pub id: usize,
     pub rows: FxHashMap<Key, Row>,
     pub stats: ShardStats,
+    /// Flattened end-of-run metrics snapshot (`telemetry::registry`
+    /// entry convention) — the harness folds these into `RunReport`
+    /// (queue high-water marks, WAL latency quantiles).
+    pub metrics: Vec<(String, u64)>,
 }
 
 /// Spawn a shard thread. Returns its join handle.

@@ -39,10 +39,12 @@
 //! PS protocol assumes — they exist to probe behaviour beyond the
 //! supported envelope, not for the equivalence tests.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::ps::types::Clock;
+use crate::telemetry::registry::{MetricsSource, Snapshot};
 use crate::transport::NodeId;
 use crate::util::hash::FxHashMap;
 use crate::util::rng::splitmix64;
@@ -304,6 +306,13 @@ pub struct LinkVerdict {
 pub struct FaultInjector {
     plan: FaultPlan,
     seqs: Mutex<FxHashMap<(NodeId, NodeId), u64>>,
+    /// Verdict tallies: how often the plan actually touched traffic.
+    /// Deterministic given deterministic traffic (they count verdicts,
+    /// not wall-clock effects), so two replayed runs agree on them.
+    evaluated: AtomicU64,
+    drop_verdicts: AtomicU64,
+    delay_verdicts: AtomicU64,
+    reorder_verdicts: AtomicU64,
 }
 
 fn node_word(n: NodeId) -> u64 {
@@ -319,6 +328,10 @@ impl FaultInjector {
         Self {
             plan,
             seqs: Mutex::new(FxHashMap::default()),
+            evaluated: AtomicU64::new(0),
+            drop_verdicts: AtomicU64::new(0),
+            delay_verdicts: AtomicU64::new(0),
+            reorder_verdicts: AtomicU64::new(0),
         }
     }
 
@@ -359,7 +372,38 @@ impl FaultInjector {
                 verdict.reorder = true;
             }
         }
+        self.evaluated.fetch_add(1, Ordering::Relaxed);
+        if verdict.drop {
+            self.drop_verdicts.fetch_add(1, Ordering::Relaxed);
+        }
+        if !verdict.delay.is_zero() {
+            self.delay_verdicts.fetch_add(1, Ordering::Relaxed);
+        }
+        if verdict.reorder {
+            self.reorder_verdicts.fetch_add(1, Ordering::Relaxed);
+        }
         verdict
+    }
+
+    /// Packets a link fault was evaluated against (fault-free links are
+    /// never counted — they take the early return above).
+    pub fn evaluated(&self) -> u64 {
+        self.evaluated.load(Ordering::Relaxed)
+    }
+
+    /// Packets the plan decided to drop.
+    pub fn drop_verdicts(&self) -> u64 {
+        self.drop_verdicts.load(Ordering::Relaxed)
+    }
+
+    /// Packets the plan decided to delay.
+    pub fn delay_verdicts(&self) -> u64 {
+        self.delay_verdicts.load(Ordering::Relaxed)
+    }
+
+    /// Packets the plan decided to reorder (sim only).
+    pub fn reorder_verdicts(&self) -> u64 {
+        self.reorder_verdicts.load(Ordering::Relaxed)
     }
 
     /// The configured fsync stall, if any.
@@ -377,6 +421,22 @@ impl FaultInjector {
         // Map to [0, 1) with 53-bit precision, same construction as Rng::f64.
         let u = (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
         u < p
+    }
+}
+
+impl MetricsSource for FaultInjector {
+    /// Scrape view of the verdict tallies (node `faults`), so a faulted
+    /// run's admin endpoint shows how much adversity actually fired.
+    fn snapshots(&self) -> Vec<Snapshot> {
+        vec![Snapshot {
+            node: "faults".into(),
+            entries: vec![
+                ("evaluated".into(), self.evaluated()),
+                ("drop_verdicts".into(), self.drop_verdicts()),
+                ("delay_verdicts".into(), self.delay_verdicts()),
+                ("reorder_verdicts".into(), self.reorder_verdicts()),
+            ],
+        }]
     }
 }
 
@@ -462,6 +522,28 @@ mod tests {
         assert!(!v.drop && !v.reorder);
         let v = inj.on_packet(NodeId::Worker(0), NodeId::Shard(0));
         assert_eq!(v.delay, Duration::ZERO);
+    }
+
+    #[test]
+    fn verdict_tallies_count_what_fired() {
+        let plan = FaultPlan::parse("seed=9;drop=w*-s*:0.5;delay=w*-s0:100us").unwrap();
+        let inj = FaultInjector::new(plan);
+        let w0 = NodeId::Worker(0);
+        let s0 = NodeId::Shard(0);
+        let drops = (0..64).filter(|_| inj.on_packet(w0, s0).drop).count() as u64;
+        assert_eq!(inj.evaluated(), 64);
+        assert_eq!(inj.drop_verdicts(), drops);
+        assert!(drops > 0);
+        // Every matching packet carried the fixed delay.
+        assert_eq!(inj.delay_verdicts(), 64);
+        assert_eq!(inj.reorder_verdicts(), 0);
+        // Fault-free links take the early return: nothing is tallied.
+        inj.on_packet(s0, NodeId::Shard(1));
+        assert_eq!(inj.evaluated(), 64);
+        // The scrape view mirrors the accessors.
+        let snaps = inj.snapshots();
+        assert_eq!(snaps[0].node, "faults");
+        assert_eq!(snaps[0].get("drop_verdicts"), Some(drops));
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Per-node admin scrape socket.
+//!
+//! A tiny dependency-free TCP server bound to `--metrics-addr` that
+//! answers two read-only endpoints and closes the connection:
+//!
+//!   * `GET /json`    → JSON snapshot document ([`registry::to_json`])
+//!   * `GET /metrics` → Prometheus-style text exposition
+//!                      ([`registry::to_prometheus`])
+//!
+//! Requests are a single HTTP/1.0-shaped line (anything `curl` or
+//! `ps-top` sends); any path other than `/metrics` serves JSON, so a
+//! bare `nc` works too. Responses carry minimal HTTP headers so both
+//! browsers and scripts parse them.
+//!
+//! The server owns a list of [`MetricsSource`]s and snapshots them per
+//! request — scraping reads the same relaxed atomics the hot paths
+//! write, so a scrape never blocks or perturbs the data plane. Sources
+//! sharing a node label are merged ([`registry::merge_snapshots`]),
+//! letting e.g. a shard registry and the transport stats render as one
+//! node.
+//!
+//! [`registry::to_json`]: crate::telemetry::registry::to_json
+//! [`registry::to_prometheus`]: crate::telemetry::registry::to_prometheus
+//! [`registry::merge_snapshots`]: crate::telemetry::registry::merge_snapshots
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::{merge_snapshots, to_json, to_prometheus, MetricsSource, Snapshot};
+
+/// Running admin server. Dropping the handle leaves the thread serving
+/// until process exit; call [`shutdown`] for an orderly stop (tests).
+///
+/// [`shutdown`]: AdminHandle::shutdown
+pub struct AdminHandle {
+    /// The bound address (useful with port 0).
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl AdminHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for AdminHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Do not join in drop: the accept loop notices within one poll
+        // interval and exits on its own.
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:0`) and serve the sources until
+/// shutdown. Returns once the listener is bound, so a caller printing
+/// `handle.addr` is immediately scrapeable.
+pub fn serve(addr: &str, sources: Vec<Arc<dyn MetricsSource>>) -> io::Result<AdminHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let bound = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let join = std::thread::Builder::new()
+        .name("telemetry-admin".into())
+        .spawn(move || accept_loop(listener, sources, stop2))?;
+    Ok(AdminHandle {
+        addr: bound,
+        stop,
+        join: Some(join),
+    })
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    sources: Vec<Arc<dyn MetricsSource>>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = handle_conn(stream, &sources);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+fn gather(sources: &[Arc<dyn MetricsSource>]) -> Vec<Snapshot> {
+    let mut snaps = Vec::new();
+    for s in sources {
+        snaps.extend(s.snapshots());
+    }
+    merge_snapshots(snaps)
+}
+
+fn handle_conn(mut stream: TcpStream, sources: &[Arc<dyn MetricsSource>]) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    // Read the request line; tolerate clients that send nothing more.
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf).unwrap_or(0);
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let first = req.lines().next().unwrap_or("");
+    let snaps = gather(sources);
+    let (body, ctype) = if first.contains("/metrics") {
+        (to_prometheus(&snaps), "text/plain; version=0.0.4")
+    } else {
+        (
+            to_json(&snaps).to_string_pretty(2),
+            "application/json",
+        )
+    };
+    let resp = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+/// One admin-socket scrape as a client: connect, request `path`
+/// (`"/json"` or `"/metrics"`), return the response body with HTTP
+/// headers stripped. Used by `ps-top` and the telemetry tests.
+pub fn scrape(addr: &str, path: &str, timeout: Duration) -> io::Result<String> {
+    let sock: SocketAddr = addr
+        .parse()
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidInput, format!("{addr}: {e}")))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())?;
+    let mut out = String::new();
+    stream.read_to_string(&mut out)?;
+    match out.find("\r\n\r\n") {
+        Some(i) => Ok(out[i + 4..].to_string()),
+        None => Ok(out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::Counter;
+    use crate::util::json::Json;
+
+    struct FakeSource {
+        c: Counter,
+    }
+
+    impl MetricsSource for FakeSource {
+        fn snapshots(&self) -> Vec<Snapshot> {
+            vec![Snapshot {
+                node: "shard0".into(),
+                entries: vec![("gets_served".into(), self.c.get())],
+            }]
+        }
+    }
+
+    #[test]
+    fn serves_json_and_text() {
+        let src = Arc::new(FakeSource { c: Counter::new() });
+        src.c.add(11);
+        let h = serve("127.0.0.1:0", vec![src.clone()]).unwrap();
+        let addr = h.addr.to_string();
+        let json = scrape(&addr, "/json", Duration::from_secs(5)).unwrap();
+        let j = Json::parse(&json).unwrap();
+        let nodes = j.get("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(
+            nodes[0]
+                .get("metrics")
+                .unwrap()
+                .get("gets_served")
+                .unwrap()
+                .as_u64()
+                .unwrap(),
+            11
+        );
+        src.c.add(1);
+        let text = scrape(&addr, "/metrics", Duration::from_secs(5)).unwrap();
+        assert!(
+            text.contains("esspt_gets_served{node=\"shard0\"} 12"),
+            "{text}"
+        );
+        h.shutdown();
+    }
+}

@@ -1,0 +1,39 @@
+//! Live telemetry plane: per-node metrics registries, wire-shipped
+//! snapshots, admin scrape sockets, and structured event tracing.
+//!
+//! Three pieces, each usable alone:
+//!
+//!   * [`registry`] — the measurement primitives: relaxed atomic
+//!     [`Counter`]s/[`Gauge`]s and log2-bucket [`LogHist`]ograms with
+//!     p50/p99/p999 readout, flattened into uniform `(name, value)`
+//!     [`Snapshot`]s that merge associatively across nodes. Hot-path
+//!     cost is one relaxed RMW per event; snapshots happen on the
+//!     scrape path only.
+//!   * [`admin`] — the `--metrics-addr` TCP socket serving a JSON
+//!     snapshot (`GET /json`) and a Prometheus-style text exposition
+//!     (`GET /metrics`), plus the client-side [`scrape`] used by the
+//!     `ps-top` subcommand.
+//!   * [`trace`] — the bounded per-node [`TraceRing`] flight recorder
+//!     for rare lifecycle events (placement epochs, migration fences,
+//!     promotions, WAL rolls, fault firings, peer transitions), dumped
+//!     as JSONL via `--trace-out`.
+//!
+//! Registries live inside `ShardCore` / `PsClient` / the transports and
+//! snapshots additionally travel the data plane as
+//! `ToShard::StatsPull` / `ToWorker::StatsReport` (wire v6), so a
+//! worker — or `run-cluster` across real processes — can aggregate live
+//! cluster-wide state. Telemetry is strictly out-of-band: it never
+//! feeds back into protocol decisions, and the deterministic replay
+//! suites are bit-identical with it enabled (proven by
+//! `tests/integration_telemetry.rs`).
+//!
+//! [`Counter`]: registry::Counter
+//! [`Gauge`]: registry::Gauge
+//! [`LogHist`]: registry::LogHist
+//! [`Snapshot`]: registry::Snapshot
+//! [`scrape`]: admin::scrape
+//! [`TraceRing`]: trace::TraceRing
+
+pub mod admin;
+pub mod registry;
+pub mod trace;

@@ -1,0 +1,560 @@
+//! The metrics registry primitives: relaxed atomic counters/gauges and
+//! fixed-bucket log2 latency histograms.
+//!
+//! Design constraints (see `ps::server` § Observability):
+//!
+//!   * **No locks or allocation on hot paths.** Every update is one (or
+//!     two) relaxed atomic RMW ops on a fixed-layout struct. Registries
+//!     are *structs with named fields*, not name-keyed maps — the names
+//!     only materialize at snapshot time, on the scrape path.
+//!   * **Scrape-safe sharing.** A registry lives behind an `Arc`; the
+//!     admin socket thread reads the same atomics the hot path writes.
+//!     Relaxed ordering is sufficient: a scrape is a statistical sample,
+//!     not a synchronization point, and monotonicity per counter is
+//!     guaranteed by the RMW itself.
+//!   * **Uniform snapshot form.** Every registry flattens to
+//!     `Vec<(String, u64)>` entries — the exact payload of the
+//!     `ToWorker::StatsReport` wire message — with histograms encoded as
+//!     `name#b<i>` / `name#count` / `name#sum` entries so per-worker
+//!     snapshots merge into cluster aggregates by bucket addition
+//!     (associative, order-free).
+//!
+//! The histogram buckets by `bit_width(value)` — bucket `i` holds values
+//! in `[2^(i-1), 2^i - 1]` (bucket 0 holds exactly 0) — so a recorded
+//! quantile *brackets* the true quantile within a factor of 2, which is
+//! the right fidelity for p50/p99/p999 latency at nanosecond resolution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::{arr, num, obj, str as jstr, Json};
+
+/// Number of log2 buckets: one per possible `u64::bit_width` (0..=64).
+pub const HIST_BUCKETS: usize = 65;
+
+/// A monotone counter. Relaxed increments; safe to read from any thread.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A non-negative level gauge with a high-water mark. `set` records the
+/// current level and folds it into the high-water mark in one pass.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    cur: AtomicU64,
+    hwm: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.cur.store(v, Ordering::Relaxed);
+        self.hwm.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cur.load(Ordering::Relaxed)
+    }
+
+    pub fn hwm(&self) -> u64 {
+        self.hwm.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log2 histogram over `u64` samples (latencies in ns, wave
+/// fan-out counts, ...). Recording is two relaxed RMWs plus a bucket RMW;
+/// no locks, no allocation, no floating point.
+pub struct LogHist {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl std::fmt::Debug for LogHist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        write!(f, "LogHist(count={}, sum={})", s.count, s.sum)
+    }
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHist {
+    pub fn new() -> Self {
+        Self {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Bucket index for a sample: its bit width (0 for 0, 64 for MSB-set).
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Inclusive value range covered by bucket `i`.
+    pub fn bucket_bounds(i: usize) -> (u64, u64) {
+        match i {
+            0 => (0, 0),
+            64 => (1u64 << 63, u64::MAX),
+            _ => (1u64 << (i - 1), (1u64 << i) - 1),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A consistent-enough copy for scraping (buckets are read one by
+    /// one; a concurrent record may straddle the read, which is fine for
+    /// a statistical sample).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (i, b) in self.buckets.iter().enumerate() {
+            buckets[i] = b.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// A plain (non-atomic) histogram copy: what travels in snapshots, merges
+/// across workers, and answers quantile queries.
+#[derive(Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            sum: 0,
+            buckets: [0; HIST_BUCKETS],
+        }
+    }
+}
+
+impl std::fmt::Debug for HistSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "HistSnapshot(count={}, sum={}, p50<={}, p99<={})",
+            self.count,
+            self.sum,
+            self.quantile(0.50),
+            self.quantile(0.99)
+        )
+    }
+}
+
+impl HistSnapshot {
+    /// Bucket-wise merge. Addition per bucket, so merging is commutative
+    /// and associative: per-worker snapshots fold into a global aggregate
+    /// in any order with the same result.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.count += 1;
+        self.sum += v;
+        self.buckets[LogHist::bucket_of(v)] += 1;
+    }
+
+    /// The inclusive value range of the bucket holding the q-quantile
+    /// (rank `ceil(q * count)`, so q=0.5 of 2 samples is the 1st). The
+    /// true quantile of the recorded stream lies within these bounds.
+    pub fn quantile_bounds(&self, q: f64) -> (u64, u64) {
+        if self.count == 0 {
+            return (0, 0);
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return LogHist::bucket_bounds(i);
+            }
+        }
+        LogHist::bucket_bounds(HIST_BUCKETS - 1)
+    }
+
+    /// Conservative (upper-bound) quantile estimate.
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.quantile_bounds(q).1
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Flatten into snapshot entries under `name`: `name#count`,
+    /// `name#sum`, and one `name#b<i>` per non-empty bucket. `#` cannot
+    /// occur in a plain metric name, so the grouping is unambiguous.
+    pub fn entries(&self, name: &str, out: &mut Vec<(String, u64)>) {
+        out.push((format!("{name}#count"), self.count));
+        out.push((format!("{name}#sum"), self.sum));
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                out.push((format!("{name}#b{i}"), c));
+            }
+        }
+    }
+}
+
+/// One node's flattened metrics: the unit the admin socket renders and
+/// the `StatsReport` wire message carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Node label, e.g. `"shard0"`, `"worker2"`.
+    pub node: String,
+    /// Flat `(name, value)` pairs; histogram entries use the `#` suffix
+    /// convention of [`HistSnapshot::entries`].
+    pub entries: Vec<(String, u64)>,
+}
+
+impl Snapshot {
+    /// Value of a plain (non-histogram) entry.
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
+    }
+
+    /// Reassemble the histogram flattened under `name` (empty histogram
+    /// if no entries carry the prefix).
+    pub fn hist(&self, name: &str) -> HistSnapshot {
+        let mut h = HistSnapshot::default();
+        for (n, v) in &self.entries {
+            let Some(suffix) = n.strip_prefix(name).and_then(|r| r.strip_prefix('#')) else {
+                continue;
+            };
+            match suffix {
+                "count" => h.count = *v,
+                "sum" => h.sum = *v,
+                s => {
+                    if let Some(i) = s.strip_prefix('b').and_then(|d| d.parse::<usize>().ok()) {
+                        if i < HIST_BUCKETS {
+                            h.buckets[i] = *v;
+                        }
+                    }
+                }
+            }
+        }
+        h
+    }
+
+    /// Names (prefixes) of the histograms present in this snapshot, in
+    /// first-appearance order.
+    pub fn hist_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for (n, _) in &self.entries {
+            if let Some((prefix, _)) = n.split_once('#') {
+                if !names.iter().any(|x| x == prefix) {
+                    names.push(prefix.to_string());
+                }
+            }
+        }
+        names
+    }
+}
+
+/// Anything that can be scraped: a registry (or a group of them) that
+/// yields per-node snapshots on demand. Implemented by the shard/client
+/// registries, the transport stats, and the worker-side mirror of pulled
+/// shard reports.
+pub trait MetricsSource: Send + Sync {
+    fn snapshots(&self) -> Vec<Snapshot>;
+}
+
+/// Merge snapshots that share a node label: plain entries from the same
+/// node are summed (they are disjoint in practice), histogram entries add
+/// bucket-wise — which is exactly histogram merge.
+pub fn merge_snapshots(snaps: Vec<Snapshot>) -> Vec<Snapshot> {
+    let mut out: Vec<Snapshot> = Vec::new();
+    for s in snaps {
+        match out.iter_mut().find(|o| o.node == s.node) {
+            None => out.push(s),
+            Some(o) => {
+                for (n, v) in s.entries {
+                    match o.entries.iter_mut().find(|(en, _)| *en == n) {
+                        Some((_, ev)) => *ev += v,
+                        None => o.entries.push((n, v)),
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- rendering
+
+/// JSON scrape document: `{"nodes": [{"node": ..., "metrics": {...},
+/// "hists": {name: {count, sum, mean, p50, p99, p999}}}]}`. Quantiles are
+/// the conservative upper bounds of [`HistSnapshot::quantile`].
+pub fn to_json(snaps: &[Snapshot]) -> Json {
+    let nodes: Vec<Json> = snaps
+        .iter()
+        .map(|s| {
+            let mut metrics: Vec<(String, Json)> = Vec::new();
+            for (n, v) in &s.entries {
+                if !n.contains('#') {
+                    metrics.push((n.clone(), num(*v as f64)));
+                }
+            }
+            let mut hists: Vec<(String, Json)> = Vec::new();
+            for name in s.hist_names() {
+                let h = s.hist(&name);
+                hists.push((
+                    name.clone(),
+                    obj(vec![
+                        ("count", num(h.count as f64)),
+                        ("sum", num(h.sum as f64)),
+                        ("mean", num(h.mean())),
+                        ("p50", num(h.quantile(0.50) as f64)),
+                        ("p99", num(h.quantile(0.99) as f64)),
+                        ("p999", num(h.quantile(0.999) as f64)),
+                    ]),
+                ));
+            }
+            obj(vec![
+                ("node", jstr(s.node.clone())),
+                (
+                    "metrics",
+                    Json::Obj(metrics.into_iter().collect()),
+                ),
+                ("hists", Json::Obj(hists.into_iter().collect())),
+            ])
+        })
+        .collect();
+    obj(vec![("nodes", arr(nodes))])
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// Prometheus-style text exposition: `esspt_<name>{node="..."} <value>`
+/// per plain entry; histograms expand to cumulative `_bucket{le="..."}`
+/// lines plus `_count` / `_sum`.
+pub fn to_prometheus(snaps: &[Snapshot]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for s in snaps {
+        for (n, v) in &s.entries {
+            if !n.contains('#') {
+                let _ = writeln!(out, "esspt_{}{{node=\"{}\"}} {v}", sanitize(n), s.node);
+            }
+        }
+        for name in s.hist_names() {
+            let h = s.hist(&name);
+            let base = sanitize(&name);
+            let mut cum = 0u64;
+            for (i, &c) in h.buckets.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                cum += c;
+                let (_, hi) = LogHist::bucket_bounds(i);
+                let _ = writeln!(
+                    out,
+                    "esspt_{base}_bucket{{node=\"{}\",le=\"{hi}\"}} {cum}",
+                    s.node
+                );
+            }
+            let _ = writeln!(
+                out,
+                "esspt_{base}_bucket{{node=\"{}\",le=\"+Inf\"}} {}",
+                s.node, h.count
+            );
+            let _ = writeln!(out, "esspt_{base}_count{{node=\"{}\"}} {}", s.node, h.count);
+            let _ = writeln!(out, "esspt_{base}_sum{{node=\"{}\"}} {}", s.node, h.sum);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+        assert_eq!(g.hwm(), 7);
+    }
+
+    #[test]
+    fn hist_buckets_cover_the_u64_range() {
+        assert_eq!(LogHist::bucket_of(0), 0);
+        assert_eq!(LogHist::bucket_of(1), 1);
+        assert_eq!(LogHist::bucket_of(2), 2);
+        assert_eq!(LogHist::bucket_of(3), 2);
+        assert_eq!(LogHist::bucket_of(u64::MAX), 64);
+        for i in 0..HIST_BUCKETS {
+            let (lo, hi) = LogHist::bucket_bounds(i);
+            assert!(lo <= hi);
+            assert_eq!(LogHist::bucket_of(lo), i, "lo of bucket {i}");
+            assert_eq!(LogHist::bucket_of(hi), i, "hi of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn hist_quantiles_bracket_known_values() {
+        let h = LogHist::new();
+        for v in [1u64, 2, 3, 100, 1000, 100_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        let (lo, hi) = s.quantile_bounds(0.5);
+        // True p50 (rank 3 of 6) is 3.
+        assert!(lo <= 3 && 3 <= hi, "p50 bounds [{lo}, {hi}]");
+        let (lo, hi) = s.quantile_bounds(1.0);
+        assert!(lo <= 100_000 && 100_000 <= hi, "max bounds [{lo}, {hi}]");
+        assert_eq!(s.quantile_bounds(0.0).0, 0); // rank clamps to 1 -> value 1's bucket
+    }
+
+    #[test]
+    fn hist_entry_flattening_roundtrips() {
+        let h = LogHist::new();
+        for v in [0u64, 5, 5, 900] {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        let mut entries = Vec::new();
+        snap.entries("lat_ns", &mut entries);
+        let s = Snapshot {
+            node: "n".into(),
+            entries,
+        };
+        assert_eq!(s.hist("lat_ns"), snap);
+        assert_eq!(s.hist_names(), vec!["lat_ns".to_string()]);
+        // A different prefix reassembles empty.
+        assert_eq!(s.hist("other").count, 0);
+    }
+
+    #[test]
+    fn snapshot_merge_sums_entries() {
+        let a = Snapshot {
+            node: "w0".into(),
+            entries: vec![("gets".into(), 3), ("lat#count".into(), 1)],
+        };
+        let b = Snapshot {
+            node: "w0".into(),
+            entries: vec![("gets".into(), 2), ("pulls".into(), 9)],
+        };
+        let c = Snapshot {
+            node: "w1".into(),
+            entries: vec![("gets".into(), 1)],
+        };
+        let merged = merge_snapshots(vec![a, b, c]);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].get("gets"), Some(5));
+        assert_eq!(merged[0].get("pulls"), Some(9));
+        assert_eq!(merged[1].get("gets"), Some(1));
+    }
+
+    #[test]
+    fn renders_json_and_prometheus() {
+        let h = LogHist::new();
+        h.record(10);
+        h.record(1000);
+        let mut entries = vec![("gets_served".into(), 42u64)];
+        h.snapshot().entries("read_ns", &mut entries);
+        let snaps = vec![Snapshot {
+            node: "shard0".into(),
+            entries,
+        }];
+        let j = to_json(&snaps);
+        let nodes = j.get("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes[0].get("node").unwrap().as_str().unwrap(), "shard0");
+        assert_eq!(
+            nodes[0]
+                .get("metrics")
+                .unwrap()
+                .get("gets_served")
+                .unwrap()
+                .as_u64()
+                .unwrap(),
+            42
+        );
+        assert_eq!(
+            nodes[0]
+                .get("hists")
+                .unwrap()
+                .get("read_ns")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_u64()
+                .unwrap(),
+            2
+        );
+        let text = to_prometheus(&snaps);
+        assert!(text.contains("esspt_gets_served{node=\"shard0\"} 42"), "{text}");
+        assert!(text.contains("esspt_read_ns_count{node=\"shard0\"} 2"), "{text}");
+        assert!(text.contains("le=\"+Inf\""), "{text}");
+        // Both parse: JSON through the parser, text line-by-line.
+        assert!(Json::parse(&j.to_string_pretty(0)).is_ok());
+        for line in text.lines() {
+            assert!(line.contains(' '), "malformed line {line:?}");
+        }
+    }
+}

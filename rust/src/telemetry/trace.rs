@@ -1,0 +1,213 @@
+//! Structured event tracing: a bounded per-node ring buffer of rare,
+//! high-signal lifecycle events — the flight recorder for postmortems.
+//!
+//! What gets recorded (the event catalog lives in `ps::server`
+//! § Observability): placement epoch activations, migration fences,
+//! replica promotions, WAL generation rolls, fault-plan firings
+//! (pause/crash/kill), and transport peer lifecycle transitions. These
+//! are *rare* events — a handful per run — so the ring takes a plain
+//! mutex: it is never on the GET/update/apply hot path. Per-packet
+//! fault verdicts (drop/delay/reorder) are deliberately counters, not
+//! trace events, so a lossy link cannot flood the ring.
+//!
+//! Events carry a logical-clock timestamp (the shard's table clock or
+//! the client's work clock; -1 when no clock applies, e.g. transport
+//! events) rather than wall time, so traces from a deterministic run
+//! are themselves deterministic and diffable across runs.
+//!
+//! The ring is bounded: when full, the oldest event is evicted and a
+//! drop counter increments, so a chatty debug trace can never exhaust
+//! memory. `dump_jsonl` writes one JSON object per line, oldest first.
+
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::util::json::{num, obj, str as jstr};
+
+/// One recorded event. `seq` is a per-ring monotone sequence number
+/// assigned at record time (survives eviction, so gaps in a dump reveal
+/// how much history was lost).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    /// Node label, e.g. `"shard0"`, `"worker2"`, `"tcp"`.
+    pub node: String,
+    /// Logical clock at record time; -1 when no logical clock applies.
+    pub clock: i64,
+    /// Event kind, e.g. `"promotion"`, `"migrate_commit"`, `"peer_up"`.
+    pub kind: String,
+    /// Free-form human-readable detail.
+    pub detail: String,
+}
+
+struct RingInner {
+    next_seq: u64,
+    dropped: u64,
+    buf: VecDeque<TraceEvent>,
+}
+
+/// Bounded event ring. Shared via `Arc` by every component of one node
+/// (in multi-process runs, one ring per OS process; in-process clusters
+/// share one ring with the `node` field telling events apart).
+pub struct TraceRing {
+    cap: usize,
+    debug: bool,
+    inner: Mutex<RingInner>,
+}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.inner.lock().unwrap();
+        write!(
+            f,
+            "TraceRing(cap={}, len={}, dropped={})",
+            self.cap,
+            g.buf.len(),
+            g.dropped
+        )
+    }
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        Self::with_debug(cap, false)
+    }
+
+    /// `debug = true` additionally admits high-volume diagnostics
+    /// (e.g. per-event TCP writer backpressure) via [`record_debug`].
+    ///
+    /// [`record_debug`]: TraceRing::record_debug
+    pub fn with_debug(cap: usize, debug: bool) -> Self {
+        Self {
+            cap: cap.max(1),
+            debug,
+            inner: Mutex::new(RingInner {
+                next_seq: 0,
+                dropped: 0,
+                buf: VecDeque::new(),
+            }),
+        }
+    }
+
+    pub fn debug_enabled(&self) -> bool {
+        self.debug
+    }
+
+    pub fn record(&self, node: &str, clock: i64, kind: &str, detail: String) {
+        let mut g = self.inner.lock().unwrap();
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        if g.buf.len() == self.cap {
+            g.buf.pop_front();
+            g.dropped += 1;
+        }
+        g.buf.push_back(TraceEvent {
+            seq,
+            node: node.to_string(),
+            clock,
+            kind: kind.to_string(),
+            detail,
+        });
+    }
+
+    /// Debug-level event: recorded only when the ring was built with
+    /// `debug = true`; otherwise a no-op (and callers should avoid even
+    /// formatting `detail` by checking [`debug_enabled`] first).
+    ///
+    /// [`debug_enabled`]: TraceRing::debug_enabled
+    pub fn record_debug(&self, node: &str, clock: i64, kind: &str, detail: String) {
+        if self.debug {
+            self.record(node, clock, kind, detail);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted due to the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Copy of the retained events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.inner.lock().unwrap().buf.iter().cloned().collect()
+    }
+
+    /// Write the retained events as JSONL (one object per line, oldest
+    /// first) to `w`.
+    pub fn write_jsonl(&self, w: &mut impl Write) -> io::Result<()> {
+        for ev in self.events() {
+            let line = obj(vec![
+                ("seq", num(ev.seq as f64)),
+                ("node", jstr(ev.node)),
+                ("clock", num(ev.clock as f64)),
+                ("kind", jstr(ev.kind)),
+                ("detail", jstr(ev.detail)),
+            ]);
+            writeln!(w, "{}", line.to_string_pretty(0))?;
+        }
+        Ok(())
+    }
+
+    /// Dump to a file path (created or truncated).
+    pub fn dump_jsonl(&self, path: &Path) -> io::Result<()> {
+        let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_jsonl(&mut f)?;
+        f.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn ring_bounds_and_sequences() {
+        let r = TraceRing::new(3);
+        for i in 0..5 {
+            r.record("shard0", i, "ev", format!("e{i}"));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let evs = r.events();
+        assert_eq!(evs[0].seq, 2); // oldest two evicted
+        assert_eq!(evs[2].seq, 4);
+        assert_eq!(evs[2].clock, 4);
+    }
+
+    #[test]
+    fn debug_events_gated() {
+        let quiet = TraceRing::new(8);
+        quiet.record_debug("tcp", -1, "backpressure", "w0->s1".into());
+        assert!(quiet.is_empty());
+        let loud = TraceRing::with_debug(8, true);
+        loud.record_debug("tcp", -1, "backpressure", "w0->s1".into());
+        assert_eq!(loud.len(), 1);
+    }
+
+    #[test]
+    fn jsonl_lines_parse() {
+        let r = TraceRing::new(8);
+        r.record("shard1", 7, "promotion", "replica 0 -> primary".into());
+        r.record("worker0", 9, "placement", "epoch 2".into());
+        let mut out = Vec::new();
+        r.write_jsonl(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "promotion");
+        assert_eq!(j.get("clock").unwrap().as_u64().unwrap(), 7);
+        let j = Json::parse(lines[1]).unwrap();
+        assert_eq!(j.get("node").unwrap().as_str().unwrap(), "worker0");
+    }
+}

@@ -22,11 +22,18 @@
 //! socket; the remote reader then sees a clean EOF at a frame boundary.
 //! `serve-shard` uses the [`PeerEvent`] stream to exit once every
 //! expected worker has connected and later disconnected.
+//!
+//! Telemetry: besides the endpoint-wide [`TcpStats`], every registered
+//! link carries a [`LinkStats`] (frames/bytes written, writer-queue depth
+//! and high-water mark, backpressure stalls); [`TcpTransport::metrics_source`]
+//! exposes both to the admin scrape endpoint, and an attached
+//! [`TraceRing`] records peer lifecycle transitions plus (debug level)
+//! per-link backpressure events.
 
 use std::io::{self, BufReader, BufWriter};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -37,12 +44,16 @@ use super::wire;
 use super::{NodeId, Packet, Transport, TransportHandle};
 use crate::ps::msg::{ToShard, ToWorker};
 use crate::sim::fault::FaultInjector;
+use crate::telemetry::registry::{MetricsSource, Snapshot};
+use crate::telemetry::trace::TraceRing;
 use crate::util::hash::FxHashMap;
 
 /// Bounded depth of each per-peer writer queue. A full queue blocks the
 /// producing thread (client/shard), which is the backpressure that keeps
 /// a fast producer from buffering unbounded memory behind a slow link.
-const WRITER_QUEUE: usize = 4096;
+/// (Unit tests shrink the bound so the backpressure path is exercisable
+/// without queueing thousands of frames.)
+const WRITER_QUEUE: usize = if cfg!(test) { 8 } else { 4096 };
 /// Socket buffer size for the buffered writer/reader pair.
 const SOCK_BUF: usize = 64 * 1024;
 /// How long either side of the handshake may keep the other waiting.
@@ -92,6 +103,8 @@ pub struct TcpStats {
     bytes: AtomicU64,
     delivered: AtomicU64,
     dropped: AtomicU64,
+    backpressure: AtomicU64,
+    dial_retries: AtomicU64,
 }
 
 impl TcpStats {
@@ -111,6 +124,20 @@ impl TcpStats {
         self.dropped.load(Ordering::Acquire)
     }
 
+    /// Sends that found their writer queue full and had to block. Before
+    /// this counter existed, a producer stalling behind a slow link was
+    /// invisible — the run just got slower with nothing to scrape.
+    pub fn backpressure(&self) -> u64 {
+        self.backpressure.load(Ordering::Acquire)
+    }
+
+    /// Failed connect attempts that were retried by the dial backoff
+    /// loop. Nonzero during normal any-order startup; steadily climbing
+    /// afterwards means a peer address is wrong or a peer is flapping.
+    pub fn dial_retries(&self) -> u64 {
+        self.dial_retries.load(Ordering::Acquire)
+    }
+
     /// Messages that finished their journey: delivered to an inbox, or
     /// dropped on a dead/unknown route (error paths only).
     pub fn settled(&self) -> u64 {
@@ -118,12 +145,61 @@ impl TcpStats {
     }
 }
 
+/// Per-link traffic counters, one per registered (src -> dst) route.
+/// Registered at connection setup and kept for the endpoint's lifetime
+/// (a disconnected link's final counters stay scrapeable).
+#[derive(Default)]
+pub struct LinkStats {
+    /// Frames actually written to the socket by this link's writer.
+    frames: AtomicU64,
+    /// Encoded bytes of those frames.
+    bytes: AtomicU64,
+    /// Sends that found this link's writer queue full.
+    backpressure: AtomicU64,
+    /// Frames currently sitting in the writer queue.
+    queue_depth: AtomicU64,
+    /// Deepest the writer queue ever got.
+    queue_hwm: AtomicU64,
+}
+
+impl LinkStats {
+    fn note_enqueued(&self) {
+        let depth = self.queue_depth.fetch_add(1, Ordering::AcqRel) + 1;
+        self.queue_hwm.fetch_max(depth, Ordering::AcqRel);
+    }
+
+    fn note_dequeued(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Short human name for a node, used in link labels and trace details
+/// (`w0`, `s3`, `coord`).
+fn node_name(n: NodeId) -> String {
+    match n {
+        NodeId::Worker(w) => format!("w{w}"),
+        NodeId::Shard(s) => format!("s{s}"),
+        NodeId::Coordinator => "coord".into(),
+    }
+}
+
+fn link_name(src: NodeId, dst: NodeId) -> String {
+    format!("{}->{}", node_name(src), node_name(dst))
+}
+
 type Frame = (NodeId, NodeId, Packet);
+
+/// A registered outbound link: the writer queue plus its counters.
+#[derive(Clone)]
+struct Route {
+    q: SyncSender<Frame>,
+    link: Arc<LinkStats>,
+}
 
 struct Inner {
     /// (src, dst) -> the writer queue of the connection carrying that
     /// link. One entry per direction per connection.
-    routes: RwLock<FxHashMap<(NodeId, NodeId), SyncSender<Frame>>>,
+    routes: RwLock<FxHashMap<(NodeId, NodeId), Route>>,
     /// Latched by `close_send` (under the routes write lock): no new
     /// connection may register afterwards, so a dial that races shutdown
     /// cannot resurrect a route whose writer would then never be joined.
@@ -140,6 +216,31 @@ struct Inner {
     /// frame (counted, so flush converges). `reorder` is sim-only; a TCP
     /// stream cannot reorder.
     faults: Option<Arc<FaultInjector>>,
+    /// Every link ever registered, in registration order, kept past
+    /// disconnect so the scrape endpoint can report final counters.
+    links: Mutex<Vec<((NodeId, NodeId), Arc<LinkStats>)>>,
+    /// Structured event ring (`--trace-out`): peer lifecycle transitions
+    /// and (debug level) per-link backpressure stalls. Attached after
+    /// construction via [`TcpTransport::set_trace`], hence the lock —
+    /// only touched on rare events, never on the per-frame path.
+    trace: Mutex<Option<Arc<TraceRing>>>,
+}
+
+impl Inner {
+    fn trace_event(&self, kind: &str, detail: String) {
+        let ring = self.trace.lock().unwrap().clone();
+        if let Some(t) = ring {
+            // -1: the transport has no logical clock.
+            t.record("tcp", -1, kind, detail);
+        }
+    }
+
+    fn trace_debug(&self, kind: &str, detail: String) {
+        let ring = self.trace.lock().unwrap().clone();
+        if let Some(t) = ring {
+            t.record_debug("tcp", -1, kind, detail);
+        }
+    }
 }
 
 impl Transport for Inner {
@@ -174,15 +275,38 @@ impl Transport for Inner {
             }
             return;
         }
-        let q = self.routes.read().unwrap().get(&(src, dst)).cloned();
-        match q {
-            // Blocking send = the backpressure path: a full peer queue
-            // stalls the producing thread instead of growing memory.
-            Some(q) => {
-                if q.send((src, dst, packet)).is_err() {
+        let route = self.routes.read().unwrap().get(&(src, dst)).cloned();
+        match route {
+            Some(Route { q, link }) => match q.try_send((src, dst, packet)) {
+                Ok(()) => link.note_enqueued(),
+                // Queue full: this send is about to block (the
+                // backpressure that keeps a fast producer from buffering
+                // unbounded memory behind a slow link). Make the stall
+                // visible — count it per endpoint and per link, and at
+                // debug trace level name the link — then block.
+                Err(TrySendError::Full(frame)) => {
+                    self.stats.backpressure.fetch_add(1, Ordering::AcqRel);
+                    link.backpressure.fetch_add(1, Ordering::AcqRel);
+                    self.trace_debug(
+                        "backpressure",
+                        format!(
+                            "writer queue full ({WRITER_QUEUE} frames) on link {}; \
+                             sender blocking",
+                            link_name(src, dst)
+                        ),
+                    );
+                    if q.send(frame).is_err() {
+                        self.stats.dropped.fetch_add(1, Ordering::AcqRel);
+                    } else {
+                        link.note_enqueued();
+                    }
+                }
+                // Writer gone mid-send: the link died between the route
+                // lookup and the enqueue.
+                Err(TrySendError::Disconnected(_)) => {
                     self.stats.dropped.fetch_add(1, Ordering::AcqRel);
                 }
-            }
+            },
             // No route: the peer disconnected (or never existed). Count
             // the drop so flush() still converges.
             None => {
@@ -235,6 +359,8 @@ impl TcpTransport {
             stats: Arc::new(TcpStats::default()),
             events,
             faults,
+            links: Mutex::new(Vec::new()),
+            trace: Mutex::new(None),
         });
         let stop = Arc::new(AtomicBool::new(false));
         let threads = Arc::new(Mutex::new(Vec::new()));
@@ -301,6 +427,8 @@ impl TcpTransport {
             stats: Arc::new(TcpStats::default()),
             events: None,
             faults,
+            links: Mutex::new(Vec::new()),
+            trace: Mutex::new(None),
         });
         TcpTransport {
             inner,
@@ -321,7 +449,8 @@ impl TcpTransport {
         addr: SocketAddr,
         timeout: Duration,
     ) -> Result<()> {
-        let mut stream = connect_with_retry(addr, dst, timeout)?;
+        let mut stream =
+            connect_with_retry(addr, dst, timeout, &self.inner.stats.dial_retries)?;
         stream.set_nodelay(true)?;
         // Bound the ack wait: a connect can succeed against something
         // that is not an essptable peer and never answers.
@@ -345,6 +474,23 @@ impl TcpTransport {
 
     pub fn stats(&self) -> Arc<TcpStats> {
         self.inner.stats.clone()
+    }
+
+    /// Attach a structured event ring: peer lifecycle transitions
+    /// (`peer_up`/`peer_down`) are recorded at normal level, per-link
+    /// backpressure stalls at debug level.
+    pub fn set_trace(&self, ring: Arc<TraceRing>) {
+        *self.inner.trace.lock().unwrap() = Some(ring);
+    }
+
+    /// Scrape adapter for the admin endpoint: one snapshot for the
+    /// endpoint-wide [`TcpStats`] (node `tcp`) plus one per registered
+    /// link (node `tcp:w0->s1` style) with frames/bytes/backpressure and
+    /// writer-queue depth/high-water mark.
+    pub fn metrics_source(&self) -> Arc<TcpMetrics> {
+        Arc::new(TcpMetrics {
+            inner: self.inner.clone(),
+        })
     }
 
     /// Stop outbound traffic: drop every writer queue. Writers drain what
@@ -400,7 +546,12 @@ impl TcpTransport {
 /// restarting together doesn't re-dial in lockstep. On exhaustion the
 /// error names the peer, the address, the attempt count, and the last
 /// OS error.
-fn connect_with_retry(addr: SocketAddr, dst: NodeId, timeout: Duration) -> Result<TcpStream> {
+fn connect_with_retry(
+    addr: SocketAddr,
+    dst: NodeId,
+    timeout: Duration,
+    retries: &AtomicU64,
+) -> Result<TcpStream> {
     let deadline = Instant::now() + timeout;
     let mut backoff = Duration::from_millis(10);
     let mut attempts = 0u32;
@@ -410,6 +561,9 @@ fn connect_with_retry(addr: SocketAddr, dst: NodeId, timeout: Duration) -> Resul
             Ok(s) => return Ok(s),
             Err(e) => e,
         };
+        // Every failed attempt counts, whether or not it will be retried:
+        // the counter is a liveness signal, not a success predictor.
+        retries.fetch_add(1, Ordering::AcqRel);
         let now = Instant::now();
         if now >= deadline {
             return Err(anyhow::Error::from(err).context(format!(
@@ -545,6 +699,7 @@ fn register_conn(
     threads: &Mutex<Vec<JoinHandle<()>>>,
 ) -> Result<()> {
     let (qtx, qrx) = sync_channel::<Frame>(WRITER_QUEUE);
+    let link = Arc::new(LinkStats::default());
     {
         // Same lock `close_send` clears under: a dial racing shutdown is
         // either registered-then-cleared or rejected here, never leaked.
@@ -560,20 +715,36 @@ fn register_conn(
             !routes.contains_key(&(local, peer)),
             "duplicate connection for live link {local:?} -> {peer:?}; rejecting"
         );
-        routes.insert((local, peer), qtx);
+        routes.insert(
+            (local, peer),
+            Route {
+                q: qtx,
+                link: link.clone(),
+            },
+        );
     }
+    inner
+        .links
+        .lock()
+        .unwrap()
+        .push(((local, peer), link.clone()));
     if let Ok(clone) = stream.try_clone() {
         inner.socks.lock().unwrap().push(clone);
     }
     if let Some(ev) = &inner.events {
         let _ = ev.send(PeerEvent::Connected(peer));
     }
+    inner.trace_event(
+        "peer_up",
+        format!("link {} registered", link_name(local, peer)),
+    );
     let wstream = stream.try_clone().context("cloning stream for writer")?;
     let wstats = inner.stats.clone();
     let wfaults = inner.faults.clone();
+    let wlink = link;
     let wh = std::thread::Builder::new()
         .name(format!("tcp-w-{peer:?}"))
-        .spawn(move || writer_loop(wstream, qrx, wstats, wfaults))
+        .spawn(move || writer_loop(wstream, qrx, wstats, wfaults, wlink))
         .context("spawning writer")?;
     let rinner = inner.clone();
     let rh = std::thread::Builder::new()
@@ -591,6 +762,7 @@ fn writer_loop(
     rx: Receiver<Frame>,
     stats: Arc<TcpStats>,
     faults: Option<Arc<FaultInjector>>,
+    link: Arc<LinkStats>,
 ) {
     crate::sim::priority::infrastructure_thread();
     let shutdown_handle = stream.try_clone().ok();
@@ -605,6 +777,9 @@ fn writer_loop(
         };
         let mut next = Some(first);
         while let Some((src, dst, packet)) = next.take() {
+            // Every frame taken off the queue — written, faulted, or
+            // swallowed on a dead link — leaves the depth gauge here.
+            link.note_dequeued();
             // Link faults apply at the writer: this thread owns the FIFO
             // link, so the per-link packet sequence (and with it every
             // probabilistic verdict) is deterministic.
@@ -629,7 +804,11 @@ fn writer_loop(
                 stats.dropped.fetch_add(1, Ordering::AcqRel);
             } else {
                 match wire::write_frame(&mut w, src, dst, &packet) {
-                    Ok(()) => {}
+                    Ok(()) => {
+                        link.frames.fetch_add(1, Ordering::AcqRel);
+                        link.bytes
+                            .fetch_add(packet.wire_bytes() as u64, Ordering::AcqRel);
+                    }
                     // Oversized frame: normally unreachable — the sender
                     // asserts the MAX_FRAME bound in `Inner::send` before
                     // enqueueing — kept as defense in depth for frames
@@ -690,6 +869,55 @@ fn reader_loop(stream: TcpStream, local: NodeId, peer: NodeId, inner: Arc<Inner>
     inner.routes.write().unwrap().remove(&(local, peer));
     if let Some(ev) = &inner.events {
         let _ = ev.send(PeerEvent::Disconnected { node: peer, clean });
+    }
+    inner.trace_event(
+        "peer_down",
+        format!(
+            "link {} closed ({})",
+            link_name(local, peer),
+            if clean { "clean eof" } else { "error" }
+        ),
+    );
+}
+
+/// Scrape adapter returned by [`TcpTransport::metrics_source`].
+pub struct TcpMetrics {
+    inner: Arc<Inner>,
+}
+
+impl MetricsSource for TcpMetrics {
+    fn snapshots(&self) -> Vec<Snapshot> {
+        let s = &self.inner.stats;
+        let mut out = vec![Snapshot {
+            node: "tcp".into(),
+            entries: vec![
+                ("messages".into(), s.messages()),
+                ("bytes".into(), s.bytes()),
+                ("delivered".into(), s.delivered()),
+                ("dropped".into(), s.dropped()),
+                ("backpressure".into(), s.backpressure()),
+                ("dial_retries".into(), s.dial_retries()),
+            ],
+        }];
+        for ((src, dst), link) in self.inner.links.lock().unwrap().iter() {
+            out.push(Snapshot {
+                node: format!("tcp:{}", link_name(*src, *dst)),
+                entries: vec![
+                    ("frames".into(), link.frames.load(Ordering::Acquire)),
+                    ("bytes".into(), link.bytes.load(Ordering::Acquire)),
+                    (
+                        "backpressure".into(),
+                        link.backpressure.load(Ordering::Acquire),
+                    ),
+                    (
+                        "queue_depth".into(),
+                        link.queue_depth.load(Ordering::Acquire),
+                    ),
+                    ("queue_hwm".into(), link.queue_hwm.load(Ordering::Acquire)),
+                ],
+            });
+        }
+        out
     }
 }
 
@@ -834,8 +1062,96 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("Shard(3)"), "{msg}");
         assert!(msg.contains("connect attempts"), "{msg}");
+        // Every refused connect is a visible retry on the counter.
+        assert!(t.stats().dial_retries() > 0);
         t.close_send();
         t.join();
+    }
+
+    #[test]
+    fn metrics_source_exposes_endpoint_and_link_counters() {
+        let (client, server, srx, _wrx) = pair();
+        client.handle().send(
+            NodeId::Worker(0),
+            NodeId::Shard(0),
+            Packet::ToShard(ToShard::ClockTick { worker: 0, clock: 1 }),
+        );
+        srx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let snaps = client.metrics_source().snapshots();
+        let tcp = snaps.iter().find(|s| s.node == "tcp").unwrap();
+        assert_eq!(tcp.get("messages"), Some(1));
+        assert!(tcp.get("bytes").unwrap() > 0);
+        assert_eq!(tcp.get("backpressure"), Some(0));
+        // The receiver saw the frame, so the writer counted it (increment
+        // precedes the flush the receive depends on).
+        let link = snaps.iter().find(|s| s.node == "tcp:w0->s0").unwrap();
+        assert_eq!(link.get("frames"), Some(1));
+        assert!(link.get("bytes").unwrap() > 0);
+        assert!(link.get("queue_hwm").unwrap() >= 1);
+        teardown(client, server);
+    }
+
+    #[test]
+    fn writer_queue_full_is_counted_and_traced() {
+        // A 5ms per-frame link delay stalls the writer; the test-sized
+        // writer queue (8 frames) must then overrun, and every overrun
+        // be visible: endpoint counter, link counter, debug trace event
+        // naming the link. Before this path existed the producer just
+        // silently blocked.
+        let plan = crate::sim::fault::FaultPlan::parse("delay=w0-s0:5ms").unwrap();
+        let (stx, srx) = channel();
+        let (server, addr) = TcpTransport::server(
+            "127.0.0.1:0",
+            vec![(NodeId::Shard(0), LocalSink::Shard(stx))],
+            None,
+            4,
+        )
+        .unwrap();
+        let (wtx, _wrx) = channel();
+        let client = TcpTransport::client_with_faults(
+            vec![(NodeId::Worker(0), LocalSink::Worker(wtx))],
+            &[(0, 0, addr)],
+            Duration::from_secs(5),
+            Some(Arc::new(FaultInjector::new(plan))),
+        )
+        .unwrap();
+        let ring = Arc::new(TraceRing::with_debug(64, true));
+        client.set_trace(ring.clone());
+        for c in 0..40 {
+            client.handle().send(
+                NodeId::Worker(0),
+                NodeId::Shard(0),
+                Packet::ToShard(ToShard::ClockTick { worker: 0, clock: c }),
+            );
+        }
+        assert!(
+            client.stats().backpressure() > 0,
+            "40 sends through an 8-deep queue behind a 5ms/frame link \
+             never tripped backpressure"
+        );
+        let events = ring.events();
+        assert!(
+            events
+                .iter()
+                .any(|e| e.kind == "backpressure" && e.detail.contains("w0->s0")),
+            "no backpressure trace event naming the link: {events:?}"
+        );
+        let link = client
+            .metrics_source()
+            .snapshots()
+            .into_iter()
+            .find(|s| s.node == "tcp:w0->s0")
+            .unwrap();
+        assert!(link.get("backpressure").unwrap() > 0);
+        // All 40 frames still arrive, in order: backpressure slows the
+        // producer, it never drops.
+        for expect in 0..40 {
+            match srx.recv_timeout(Duration::from_secs(10)).unwrap() {
+                ToShard::ClockTick { clock, .. } => assert_eq!(clock, expect),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        teardown(client, server);
     }
 
     #[test]

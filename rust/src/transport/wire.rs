@@ -13,11 +13,11 @@
 //! node  := kind:u8 (0 = worker, 1 = shard, 2 = coordinator) | id:u32
 //! ```
 //!
-//! `len` counts every byte after the length prefix. Message kinds 0–12
+//! `len` counts every byte after the length prefix. Message kinds 0–13
 //! are the `ToShard` variants (Get, Update, ClockTick, Register, PushAck,
 //! VapAck, Shutdown, NormReport, Detach, MigrateBegin, RowHandoff,
-//! MigrateCommit, Promote), 16–20 the `ToWorker` variants (Row, Push,
-//! VapPush, Bound, Placement).
+//! MigrateCommit, Promote, StatsPull), 16–21 the `ToWorker` variants
+//! (Row, Push, VapPush, Bound, Placement, StatsReport).
 //! Row payloads are raw `f32` little-endian; on little-endian targets the
 //! encoder writes them straight from the shared `Arc<[f32]>` storage —
 //! encoding a push wave stages no intermediate payload copy.
@@ -77,8 +77,9 @@ pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
 /// v3: hybrid dense/sparse Update rows; v4: the elastic shard plane —
 /// MigrateBegin/RowHandoff/MigrateCommit/Placement and the coordinator
 /// node kind; v5: crash tolerance — the Promote control message and the
-/// placement delta's replica-promotion field).
-pub const VERSION: u16 = 5;
+/// placement delta's replica-promotion field; v6: the telemetry plane —
+/// the out-of-band StatsPull/StatsReport snapshot pair).
+pub const VERSION: u16 = 6;
 /// Versions this binary can speak (currently exactly [`VERSION`]; kept a
 /// range so the reject blob's negotiation surface survives a future
 /// multi-version binary).
@@ -108,11 +109,18 @@ const K_MIGRATE_BEGIN: u8 = 9;
 const K_ROW_HANDOFF: u8 = 10;
 const K_MIGRATE_COMMIT: u8 = 11;
 const K_PROMOTE: u8 = 12;
+const K_STATS_PULL: u8 = 13;
 const K_ROW: u8 = 16;
 const K_PUSH: u8 = 17;
 const K_VAP_PUSH: u8 = 18;
 const K_BOUND: u8 = 19;
 const K_PLACEMENT: u8 = 20;
+const K_STATS_REPORT: u8 = 21;
+
+/// Longest metric name a `StatsReport` entry may carry: generous for the
+/// fixed registries (names are `shard.wal_fsync_ns#b33`-shaped) while
+/// keeping a corrupt length field from masquerading as a name.
+const MAX_STAT_NAME: usize = 256;
 
 /// Update-row representation tags (see module docs).
 const REPR_DENSE: u8 = 0;
@@ -147,6 +155,7 @@ pub fn to_shard_body_len(m: &ToShard) -> usize {
         }
         ToShard::MigrateCommit { .. } => 8,
         ToShard::Promote { delta } => placement_delta_body_len(delta),
+        ToShard::StatsPull { .. } => 4,
         ToShard::Shutdown => 0,
     }
 }
@@ -168,6 +177,11 @@ pub fn to_worker_body_len(m: &ToWorker) -> usize {
         }
         ToWorker::Bound { .. } => 5,
         ToWorker::Placement { delta } => placement_delta_body_len(delta),
+        ToWorker::StatsReport { entries, .. } => {
+            // shard 4 + count 4, then per entry: name-len u16 + bytes +
+            // value u64.
+            8 + entries.iter().map(|(n, _)| 10 + n.len()).sum::<usize>()
+        }
     }
 }
 
@@ -393,6 +407,10 @@ fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
             w8(w, K_PROMOTE)?;
             write_placement_delta(w, delta)
         }
+        ToShard::StatsPull { worker } => {
+            w8(w, K_STATS_PULL)?;
+            w32(w, *worker as u32)
+        }
         ToShard::Shutdown => w8(w, K_SHUTDOWN),
     }
 }
@@ -468,6 +486,18 @@ fn write_to_worker(w: &mut impl Write, m: &ToWorker) -> io::Result<()> {
         ToWorker::Placement { delta } => {
             w8(w, K_PLACEMENT)?;
             write_placement_delta(w, delta)
+        }
+        ToWorker::StatsReport { shard, entries } => {
+            w8(w, K_STATS_REPORT)?;
+            w32(w, *shard as u32)?;
+            w32(w, entries.len() as u32)?;
+            for (name, value) in entries {
+                debug_assert!(name.len() <= MAX_STAT_NAME);
+                w.write_all(&(name.len() as u16).to_le_bytes())?;
+                w.write_all(name.as_bytes())?;
+                w64(w, *value)?;
+            }
+            Ok(())
         }
     }
 }
@@ -558,6 +588,10 @@ impl<'a> Cur<'a> {
 
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
     fn u32(&mut self) -> Result<u32> {
@@ -857,6 +891,9 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
         K_PROMOTE => Packet::ToShard(ToShard::Promote {
             delta: decode_placement_delta(&mut c)?,
         }),
+        K_STATS_PULL => Packet::ToShard(ToShard::StatsPull {
+            worker: c.worker()?,
+        }),
         K_SHUTDOWN => Packet::ToShard(ToShard::Shutdown),
         K_ROW => {
             let key = c.key()?;
@@ -887,6 +924,30 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
         K_PLACEMENT => Packet::ToWorker(ToWorker::Placement {
             delta: decode_placement_delta(&mut c)?,
         }),
+        K_STATS_REPORT => {
+            let shard = c.u32()? as usize;
+            let n = c.u32()? as usize;
+            // Each entry needs >= 10 bytes (name-len 2 + value 8): bound
+            // the count (and the Vec preallocation) by the bytes present.
+            ensure!(
+                n <= c.rem() / 10,
+                "stats report claims {n} entries but only {} bytes remain",
+                c.rem()
+            );
+            let mut entries = Vec::with_capacity(n);
+            for i in 0..n {
+                let len = c.u16()? as usize;
+                ensure!(
+                    len <= MAX_STAT_NAME,
+                    "stats entry {i}: name of {len} bytes (> {MAX_STAT_NAME})"
+                );
+                let name = std::str::from_utf8(c.take(len)?)
+                    .with_context(|| format!("stats entry {i} name"))?
+                    .to_string();
+                entries.push((name, c.u64()?));
+            }
+            Packet::ToWorker(ToWorker::StatsReport { shard, entries })
+        }
         k => bail!("unknown message kind {k}"),
     };
     ensure!(
@@ -1159,6 +1220,7 @@ mod tests {
                     moves: vec![],
                 },
             }),
+            Packet::ToShard(ToShard::StatsPull { worker: 3 }),
             Packet::ToShard(ToShard::Shutdown),
             Packet::ToWorker(ToWorker::Row {
                 key: (3, 1),
@@ -1201,6 +1263,18 @@ mod tests {
                     promote: Some((1, 3)),
                     moves: vec![],
                 },
+            }),
+            Packet::ToWorker(ToWorker::StatsReport {
+                shard: 1,
+                entries: vec![
+                    ("shard.gets_served".into(), 42),
+                    ("shard.read_ns#b12".into(), u64::MAX),
+                    (String::new(), 0),
+                ],
+            }),
+            Packet::ToWorker(ToWorker::StatsReport {
+                shard: 0,
+                entries: vec![],
             }),
         ];
         for p in &msgs {

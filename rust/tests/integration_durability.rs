@@ -11,7 +11,8 @@
 //!     bit-invisible in the final params, for every model over both
 //!     transports;
 //!   * staleness bounds survive the faults: the recorded clock
-//!     differential never exceeds the model's window in any faulted run;
+//!     differential never exceeds the model's window in any faulted run,
+//!     and the first-class violation counter stays zero;
 //!   * compaction rolls generations forward and purges stale pairs.
 //!
 //! The workload is the repo's order-sensitive fractional counter (dense
@@ -103,6 +104,13 @@ fn assert_bit_identical(ctx: &str, a: &HashMap<Key, Vec<f32>>, b: &HashMap<Key, 
 /// promised window: a crash-recover or promotion is not allowed to leak
 /// a read staler than `s` (differential below -(s+1)).
 fn assert_bound_survives(ctx: &str, report: &RunReport, consistency: Consistency) {
+    // The first-class tripwire (ps::server § Observability): no faulted
+    // run may admit a single read below its certified clock bound. Zero
+    // for the unbounded models too — they never certify a bound at all.
+    assert_eq!(
+        report.staleness_violations, 0,
+        "{ctx}: staleness-violation counter tripped"
+    );
     let s = match consistency {
         Consistency::Bsp => 0,
         Consistency::Ssp { s } | Consistency::Essp { s } | Consistency::Avap { s, .. } => s,

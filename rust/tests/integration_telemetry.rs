@@ -1,0 +1,414 @@
+//! Telemetry-plane integration: the observability layer must be strictly
+//! out-of-band — and actually observable.
+//!
+//!   * deterministic runs are bit-identical with the full telemetry
+//!     stack on (StatsPull polling, event tracing) vs off, over both
+//!     transports and across consistency models — the sensors never
+//!     steer the protocol;
+//!   * `RunReport` surfaces the new signals: read-latency quantiles,
+//!     per-shard queue high-water marks, harvested shard registries, and
+//!     a zero staleness-violation tripwire;
+//!   * a genuine multi-process cluster (`run-cluster --metrics true`) is
+//!     scrapeable MID-RUN: the launcher prints the admin-port map before
+//!     spawning, both the JSON and Prometheus renderings parse, counters
+//!     are monotone and nonzero, and the final params still match the
+//!     single-process run to the bit;
+//!   * `--trace-dir` leaves a JSONL flight record naming migrations,
+//!     placement activations, fault firings, and replica promotions.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use essptable::apps::logreg::{run_logreg, LogRegConfig, W_TABLE};
+use essptable::ps::checkpoint;
+use essptable::ps::client::PsClient;
+use essptable::ps::consistency::Consistency;
+use essptable::ps::server::{Cluster, ClusterConfig, PsApp, TableSpec};
+use essptable::ps::types::{Clock, Key};
+use essptable::telemetry::admin::scrape;
+use essptable::telemetry::trace::TraceRing;
+use essptable::transport::TransportSel;
+use essptable::util::json::Json;
+
+const WORKERS: usize = 4;
+const SHARDS: usize = 2;
+
+fn assert_bit_identical(ctx: &str, a: &HashMap<Key, Vec<f32>>, b: &HashMap<Key, Vec<f32>>) {
+    assert_eq!(a.len(), b.len(), "{ctx}: row sets differ");
+    for (k, va) in a {
+        let vb = b
+            .get(k)
+            .unwrap_or_else(|| panic!("{ctx}: row {k:?} missing"));
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: row {k:?} elem {i} differs: {x} vs {y}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------ out-of-band, in-process
+
+/// The order-sensitive fractional counter from the transport matrix, with
+/// the telemetry plane optionally at full blast: per-clock StatsPull
+/// polling and an event-trace ring shared by every node.
+fn counter_run(
+    transport: TransportSel,
+    consistency: Consistency,
+    telemetry: bool,
+) -> HashMap<Key, Vec<f32>> {
+    let workers = 3;
+    let mut cluster = Cluster::new(ClusterConfig {
+        workers,
+        shards: SHARDS,
+        consistency,
+        transport,
+        deterministic: true,
+        stats_pull_every: if telemetry { 1 } else { 0 },
+        trace: telemetry.then(|| Arc::new(TraceRing::new(4096))),
+        ..Default::default()
+    });
+    cluster.add_table(TableSpec::zeros(0, 4, 1));
+    let apps: Vec<Box<dyn PsApp>> = (0..workers)
+        .map(|w| {
+            Box::new(move |ps: &mut PsClient, _c: Clock| {
+                let _ = ps.get((0, 0));
+                ps.inc((0, 0), &[0.1 * (w + 1) as f32]);
+                None
+            }) as Box<dyn PsApp>
+        })
+        .collect();
+    cluster.run(apps, 6).table_rows
+}
+
+#[test]
+fn telemetry_at_full_blast_is_bit_identical_to_telemetry_off() {
+    // The tentpole's out-of-band claim, as a test: per-clock wire-shipped
+    // stats polling plus event tracing must not perturb a single bit of
+    // the deterministic result, for every model class over both planes.
+    let models = [
+        Consistency::Bsp,
+        Consistency::Ssp { s: 2 },
+        Consistency::Essp { s: 2 },
+        Consistency::Vap { v0: 100.0 },
+    ];
+    for consistency in models {
+        for transport in [TransportSel::Sim, TransportSel::Tcp] {
+            let label = format!("{} over {}", consistency.label(), transport.label());
+            let plain = counter_run(transport, consistency, false);
+            let telemetered = counter_run(transport, consistency, true);
+            assert_bit_identical(&label, &plain, &telemetered);
+        }
+    }
+}
+
+#[test]
+fn run_report_surfaces_latency_backlog_and_staleness_signals() {
+    let mut cluster = Cluster::new(ClusterConfig {
+        workers: WORKERS,
+        shards: SHARDS,
+        consistency: Consistency::Essp { s: 2 },
+        transport: TransportSel::Tcp,
+        stats_pull_every: 2,
+        trace: Some(Arc::new(TraceRing::new(1024))),
+        ..Default::default()
+    });
+    cluster.add_table(TableSpec::zeros(0, 4, 1));
+    let apps: Vec<Box<dyn PsApp>> = (0..WORKERS)
+        .map(|_| {
+            Box::new(|ps: &mut PsClient, _c: Clock| {
+                let _ = ps.get((0, 0));
+                ps.inc((0, 0), &[1.0]);
+                None
+            }) as Box<dyn PsApp>
+        })
+        .collect();
+    let report = cluster.run(apps, 8);
+    // Reads happened and their latency distribution is well-formed.
+    assert!(report.read_latency.count > 0, "no read latencies recorded");
+    assert!(report.read_latency.quantile(0.50) <= report.read_latency.quantile(0.999));
+    // One backlog high-water mark per shard.
+    assert_eq!(report.shard_queue_hwm.len(), SHARDS);
+    // The satellite-1 tripwire: a healthy run bounds every read.
+    assert_eq!(report.staleness_violations, 0, "staleness bound violated");
+    // Harvested registries carry live counters (served GETs, commits).
+    assert_eq!(report.shard_metrics.len(), SHARDS);
+    for (i, entries) in report.shard_metrics.iter().enumerate() {
+        let get = |name: &str| {
+            entries
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|&(_, v)| v)
+                .unwrap_or_else(|| panic!("shard {i}: metric {name} missing"))
+        };
+        assert!(get("gets_served") > 0, "shard {i} served no GETs");
+        assert!(get("commits") > 0, "shard {i} committed no clocks");
+        assert!(get("stats_pulls") > 0, "shard {i} was never polled");
+    }
+}
+
+// ---------------------------------------------- multi-process scrapeable
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_essptable")
+}
+
+fn out_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("esspt-telem-{}-{tag}", std::process::id()))
+}
+
+/// Read one JSON counter off a scraped `/json` document:
+/// `nodes[] -> {node, metrics: {name: value}}`.
+fn json_counter(doc: &Json, node: &str, name: &str) -> Option<u64> {
+    for n in doc.get("nodes").and_then(|n| n.as_arr()).ok()? {
+        if n.get("node").and_then(|s| s.as_str()).ok() == Some(node) {
+            return n
+                .get("metrics")
+                .and_then(|m| m.get(name))
+                .and_then(|v| v.as_u64())
+                .ok();
+        }
+    }
+    None
+}
+
+#[test]
+fn multiprocess_cluster_is_scrapeable_mid_run_and_stays_bit_exact() {
+    // 2 shard + 4 worker OS processes with admin sockets. A seeded pause
+    // fault holds shard 1 for 2.5s at clock 3, guaranteeing the run is
+    // still in flight while this test scrapes; the pause only stretches
+    // wall time, so deterministic BSP params must still match the
+    // undisturbed single-process run to the bit.
+    let out = out_dir("scrape");
+    std::fs::create_dir_all(&out).unwrap();
+    let mut child = Command::new(bin())
+        .args([
+            "run-cluster",
+            "--app",
+            "logreg",
+            "--workers",
+            &WORKERS.to_string(),
+            "--shards",
+            &SHARDS.to_string(),
+            "--clocks",
+            "10",
+            "--consistency",
+            "bsp",
+            "--metrics",
+            "true",
+            "--fault-plan",
+            "pause=s1@3:2500ms",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawning run-cluster");
+
+    // The launcher prints the full admin-port map before spawning any
+    // child process; collect it, then keep draining stdout on a thread so
+    // the child can never block on a full pipe.
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = BufReader::new(stdout);
+    let mut shard_addrs: Vec<String> = Vec::new();
+    let mut worker_addrs: Vec<String> = Vec::new();
+    let mut line = String::new();
+    while shard_addrs.len() + worker_addrs.len() < SHARDS + WORKERS {
+        line.clear();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "run-cluster exited before printing the admin-port map"
+        );
+        if let Some(rest) = line.trim().strip_prefix("metrics: shard ") {
+            shard_addrs.push(rest.split(" -> ").nth(1).unwrap().to_string());
+        } else if let Some(rest) = line.trim().strip_prefix("metrics: worker ") {
+            worker_addrs.push(rest.split(" -> ").nth(1).unwrap().to_string());
+        }
+    }
+    let drain = std::thread::spawn(move || {
+        let mut rest = String::new();
+        use std::io::Read;
+        let _ = reader.read_to_string(&mut rest);
+        rest
+    });
+
+    // Poll shard 0's JSON endpoint until the run is visibly under way.
+    let tick = Duration::from_millis(400);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let shard0 = &shard_addrs[0];
+    let mut first = None;
+    while first.is_none() {
+        assert!(Instant::now() < deadline, "shard 0 never became scrapeable");
+        if let Ok(body) = scrape(shard0, "/json", tick) {
+            let doc = Json::parse(&body).expect("shard /json must parse");
+            match json_counter(&doc, "shard0", "gets_served") {
+                Some(g) if g > 0 => first = Some(g),
+                _ => std::thread::sleep(Duration::from_millis(30)),
+            }
+        } else {
+            std::thread::sleep(Duration::from_millis(30));
+        }
+    }
+    // Counters are monotone across scrapes of a live process.
+    let body = scrape(shard0, "/json", tick).expect("second scrape failed");
+    let doc = Json::parse(&body).expect("second /json must parse");
+    let second = json_counter(&doc, "shard0", "gets_served").unwrap();
+    assert!(
+        second >= first.unwrap(),
+        "gets_served went backwards: {} -> {second}",
+        first.unwrap()
+    );
+    // The Prometheus rendering of the same registry.
+    let text = scrape(shard0, "/metrics", tick).expect("text scrape failed");
+    assert!(
+        text.contains("esspt_gets_served{node=\"shard0\"}"),
+        "prometheus text missing the shard counter:\n{text}"
+    );
+    // Worker endpoints are live too, with the worker's own registry.
+    let wbody = scrape(&worker_addrs[0], "/json", tick).expect("worker scrape failed");
+    let wdoc = Json::parse(&wbody).expect("worker /json must parse");
+    assert!(
+        json_counter(&wdoc, "worker0", "gets").is_some(),
+        "worker0 registry missing from its own endpoint:\n{wbody}"
+    );
+
+    let status = child.wait().expect("waiting for run-cluster");
+    let tail = drain.join().unwrap();
+    assert!(status.success(), "run-cluster failed: {status}\n{tail}");
+
+    // The observed run still folds to the exact single-process result.
+    let mut rows = HashMap::new();
+    for i in 0..SHARDS {
+        rows.extend(checkpoint::load(&out.join(format!("shard_{i}.ckp"))).unwrap());
+    }
+    std::fs::remove_dir_all(&out).ok();
+    let (report, _) = run_logreg(
+        ClusterConfig {
+            workers: WORKERS,
+            shards: SHARDS,
+            consistency: Consistency::Bsp,
+            transport: TransportSel::Sim,
+            deterministic: true,
+            ..Default::default()
+        },
+        LogRegConfig::default(),
+        10,
+    );
+    assert_bit_identical("scraped multiprocess bsp", &report.table_rows, &rows);
+    let w = &rows[&(W_TABLE, 0)];
+    assert!(w.iter().any(|x| *x != 0.0), "weights never updated");
+}
+
+// --------------------------------------------------- JSONL flight records
+
+/// Concatenated contents of every trace file in `dir` matching `prefix`,
+/// with each non-empty line checked to be a well-formed trace record.
+fn read_traces(dir: &Path, prefix: &str) -> String {
+    let mut all = String::new();
+    let mut found = 0;
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_str().unwrap().to_string();
+        if !name.starts_with(prefix) {
+            continue;
+        }
+        found += 1;
+        let body = std::fs::read_to_string(&path).unwrap();
+        for l in body.lines().filter(|l| !l.trim().is_empty()) {
+            let rec =
+                Json::parse(l).unwrap_or_else(|e| panic!("{name}: bad JSONL line {l}: {e}"));
+            rec.get("kind")
+                .and_then(|k| k.as_str())
+                .unwrap_or_else(|e| panic!("{name}: record without kind: {e}"));
+            rec.get("node")
+                .unwrap_or_else(|e| panic!("{name}: record without node: {e}"));
+        }
+        all.push_str(&body);
+    }
+    assert!(found > 0, "no {prefix}* files in {dir:?}");
+    all
+}
+
+fn run_cluster_traced(tag: &str, extra: &[&str]) -> PathBuf {
+    let out = out_dir(&format!("{tag}-out"));
+    let traces = out_dir(&format!("{tag}-traces"));
+    std::fs::create_dir_all(&out).unwrap();
+    let mut args = vec![
+        "run-cluster",
+        "--app",
+        "logreg",
+        "--workers",
+        "4",
+        "--clocks",
+        "10",
+        "--consistency",
+        "bsp",
+    ];
+    args.extend_from_slice(extra);
+    let traces_s = traces.to_str().unwrap().to_string();
+    let out_s = out.to_str().unwrap().to_string();
+    args.extend_from_slice(&["--trace-dir", traces_s.as_str(), "--out", out_s.as_str()]);
+    let status = Command::new(bin())
+        .args(&args)
+        .stdout(Stdio::null())
+        .status()
+        .expect("spawning traced run-cluster");
+    assert!(status.success(), "traced run-cluster {tag} failed: {status}");
+    std::fs::remove_dir_all(&out).ok();
+    traces
+}
+
+#[test]
+fn trace_out_documents_a_live_migration() {
+    // 4 provisioned shards, 2 active, grown at clock 4: the shard-side
+    // flight records must name the fence protocol, and the worker-side
+    // ones the placement epoch they switched to.
+    let traces = run_cluster_traced(
+        "mig",
+        &["--shards", "4", "--active", "2", "--migrate-at", "4"],
+    );
+    let shard_log = read_traces(&traces, "trace_shard_");
+    for kind in ["migrate_begin", "migrate_handoff"] {
+        assert!(
+            shard_log.contains(&format!("\"kind\":\"{kind}\"")),
+            "shard traces missing {kind}:\n{shard_log}"
+        );
+    }
+    let worker_log = read_traces(&traces, "trace_worker_");
+    assert!(
+        worker_log.contains("\"kind\":\"placement_activate\""),
+        "worker traces missing placement_activate:\n{worker_log}"
+    );
+    std::fs::remove_dir_all(&traces).ok();
+}
+
+#[test]
+fn trace_out_documents_a_kill_and_the_replica_promotion() {
+    // The seeded kill at clock 4 fires on primary 0; its dying trace dump
+    // must record the fault, and the replica's must record the takeover.
+    let traces = run_cluster_traced(
+        "kill",
+        &[
+            "--shards",
+            &SHARDS.to_string(),
+            "--replicas",
+            "1",
+            "--fault-plan",
+            "kill=s0@4",
+        ],
+    );
+    let shard_log = read_traces(&traces, "trace_shard_");
+    for kind in ["fault_kill", "promotion_sent", "promotion"] {
+        assert!(
+            shard_log.contains(&format!("\"kind\":\"{kind}\"")),
+            "shard traces missing {kind}:\n{shard_log}"
+        );
+    }
+    std::fs::remove_dir_all(&traces).ok();
+}

@@ -66,7 +66,7 @@ fn gen_push_rows(rng: &mut Rng) -> Vec<PushRow> {
         .collect()
 }
 
-const TO_SHARD_VARIANTS: usize = 13;
+const TO_SHARD_VARIANTS: usize = 14;
 
 fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
     match variant {
@@ -140,11 +140,32 @@ fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
                     .collect(),
             },
         },
+        12 => ToShard::StatsPull {
+            worker: rng.usize_below(64),
+        },
         _ => ToShard::Shutdown,
     }
 }
 
-const TO_WORKER_VARIANTS: usize = 5;
+/// Random flattened stats entries — the `StatsReport` payload: plain
+/// counter names, `#`-suffixed histogram-bucket names, names right at the
+/// 256-byte decode bound, and the empty name (legal, if useless).
+fn gen_stat_entries(rng: &mut Rng) -> Vec<(String, u64)> {
+    (0..rng.usize_below(13))
+        .map(|_| {
+            let name = match rng.usize_below(8) {
+                0 => String::new(),
+                1 => "n".repeat(1 + rng.usize_below(256)),
+                2 => format!("read_latency_ns#b{}", rng.usize_below(65)),
+                3 => format!("wal_append_ns#{}", ["count", "sum"][rng.usize_below(2)]),
+                _ => format!("gets_served_{}", rng.usize_below(100)),
+            };
+            (name, rng.next_u64())
+        })
+        .collect()
+}
+
+const TO_WORKER_VARIANTS: usize = 6;
 
 fn gen_to_worker(rng: &mut Rng, variant: usize) -> ToWorker {
     match variant {
@@ -168,7 +189,7 @@ fn gen_to_worker(rng: &mut Rng, variant: usize) -> ToWorker {
             shard: rng.usize_below(16),
             granted: rng.f64() < 0.5,
         },
-        _ => ToWorker::Placement {
+        4 => ToWorker::Placement {
             delta: PlacementDelta {
                 epoch: rng.next_u64(),
                 at_clock: gen_clock(rng),
@@ -179,6 +200,10 @@ fn gen_to_worker(rng: &mut Rng, variant: usize) -> ToWorker {
                     .map(|_| (gen_key(rng), rng.next_u32() % 16))
                     .collect(),
             },
+        },
+        _ => ToWorker::StatsReport {
+            shard: rng.usize_below(16),
+            entries: gen_stat_entries(rng),
         },
     }
 }
@@ -490,6 +515,46 @@ fn garbage_bound_bool_byte_is_rejected() {
     assert!(format!("{err:#}").contains("bad bool"), "{err:#}");
 }
 
+#[test]
+fn lying_stats_entry_count_is_bounded_before_allocation() {
+    // StatsReport layout after the kind byte (offset 15): shard u32 |
+    // n u32 | entries. A count claiming 2^31 entries in an empty body
+    // must fail on the remaining-bytes bound, never touch the allocator.
+    let mut bytes = encode(&Packet::ToWorker(ToWorker::StatsReport {
+        shard: 0,
+        entries: vec![],
+    }));
+    bytes[19..23].copy_from_slice(&(1u32 << 31).to_le_bytes());
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("claims"), "{err:#}");
+}
+
+#[test]
+fn oversized_stat_name_is_rejected_at_the_length_bound() {
+    // One entry with a 1-byte name; patch its name length (u16 at offset
+    // 23) past MAX_STAT_NAME: the explicit bound rejects it first.
+    let mut bytes = encode(&Packet::ToWorker(ToWorker::StatsReport {
+        shard: 1,
+        entries: vec![("x".to_string(), 7)],
+    }));
+    bytes[23..25].copy_from_slice(&300u16.to_le_bytes());
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("name of 300 bytes"), "{err:#}");
+}
+
+#[test]
+fn non_utf8_stat_name_is_rejected_with_the_entry_index() {
+    // Corrupt the single name byte (offset 25) into an invalid UTF-8
+    // lead: the error names which entry was bad.
+    let mut bytes = encode(&Packet::ToWorker(ToWorker::StatsReport {
+        shard: 1,
+        entries: vec![("x".to_string(), 7)],
+    }));
+    bytes[25] = 0xFF;
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("stats entry 0 name"), "{err:#}");
+}
+
 // ----------------------------------------------- on-disk WAL format fuzz
 //
 // The shard WAL is a 22-byte header plus a stream of the same wire
@@ -666,5 +731,130 @@ fn special_float_bit_patterns_survive_roundtrip() {
             }
         }
         other => panic!("unexpected {other:?}"),
+    }
+}
+
+// ------------------------------------------ histogram snapshot properties
+//
+// `StatsReport` ships flattened `HistSnapshot`s and the admin plane merges
+// them across nodes; these properties pin down what consumers may assume:
+// the bucket bounds bracket the true rank-order statistic of the recorded
+// stream, and bucket-wise merge is order-insensitive, so per-node
+// snapshots fold into one global histogram in any order.
+
+use essptable::telemetry::registry::{HistSnapshot, LogHist, Snapshot};
+
+/// Mixed-magnitude samples: full-width draws shifted down by a random
+/// amount so every bucket band gets traffic, capped below 2^55 so a few
+/// hundred of them cannot overflow the running sum.
+fn gen_samples(rng: &mut Rng) -> Vec<u64> {
+    let n = 1 + rng.usize_below(200);
+    (0..n)
+        .map(|_| rng.next_u64() >> (9 + rng.usize_below(55)))
+        .collect()
+}
+
+fn hist_of(samples: &[u64]) -> HistSnapshot {
+    let mut h = HistSnapshot::default();
+    for &v in samples {
+        h.record(v);
+    }
+    h
+}
+
+#[test]
+fn prop_hist_quantile_bounds_bracket_the_true_quantile() {
+    for case in 0..200 {
+        let mut rng = Rng::with_stream(0xb1a5, case);
+        let samples = gen_samples(&mut rng);
+        let h = hist_of(&samples);
+        let mut sorted = samples;
+        sorted.sort_unstable();
+        for &q in &[0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            // Same rank convention as quantile_bounds: ceil(q*n), 1-based.
+            let rank = ((q * sorted.len() as f64).ceil() as u64).clamp(1, sorted.len() as u64);
+            let truth = sorted[(rank - 1) as usize];
+            let (lo, hi) = h.quantile_bounds(q);
+            assert!(
+                lo <= truth && truth <= hi,
+                "case {case} q={q}: true quantile {truth} outside [{lo}, {hi}]"
+            );
+            assert_eq!(h.quantile(q), hi, "quantile() is the upper bound");
+        }
+    }
+}
+
+#[test]
+fn hist_extremes_land_in_the_terminal_buckets() {
+    // 0 and u64::MAX occupy the closed end buckets and the bounds still
+    // bracket them (the sum stays exactly u64::MAX: no overflow).
+    let h = hist_of(&[0, u64::MAX]);
+    assert_eq!(h.quantile_bounds(0.0), (0, 0));
+    assert_eq!(h.quantile_bounds(1.0), (1u64 << 63, u64::MAX));
+    assert_eq!(h.sum, u64::MAX);
+}
+
+#[test]
+fn prop_hist_merge_is_associative_and_commutative() {
+    for case in 0..100 {
+        let mut rng = Rng::with_stream(0xb1a6, case);
+        let a = hist_of(&gen_samples(&mut rng));
+        let b = hist_of(&gen_samples(&mut rng));
+        let c = hist_of(&gen_samples(&mut rng));
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "case {case}: merge is not commutative");
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "case {case}: merge is not associative");
+        assert_eq!(ab_c.count, a.count + b.count + c.count);
+        assert_eq!(ab_c.sum, a.sum + b.sum + c.sum);
+    }
+}
+
+#[test]
+fn prop_atomic_and_plain_recording_agree() {
+    // The lock-free LogHist a node records into and the plain snapshot a
+    // report reassembles must describe the same distribution.
+    for case in 0..50 {
+        let mut rng = Rng::with_stream(0xb1a7, case);
+        let samples = gen_samples(&mut rng);
+        let atomic = LogHist::new();
+        for &v in &samples {
+            atomic.record(v);
+        }
+        assert_eq!(atomic.snapshot(), hist_of(&samples), "case {case}");
+    }
+}
+
+#[test]
+fn prop_hist_survives_flatten_and_wire_reassembly() {
+    // entries() -> StatsReport wire roundtrip -> Snapshot::hist() is
+    // lossless: what the worker-side mirror of shard reports relies on.
+    for case in 0..50 {
+        let mut rng = Rng::with_stream(0xb1a8, case);
+        let h = hist_of(&gen_samples(&mut rng));
+        let mut entries = Vec::new();
+        h.entries("read_latency_ns", &mut entries);
+        let p = Packet::ToWorker(ToWorker::StatsReport { shard: 2, entries });
+        let bytes = encode(&p);
+        let (_, _, back) = wire::read_frame(&mut &bytes[..], &mut Vec::new())
+            .unwrap()
+            .unwrap();
+        let Packet::ToWorker(ToWorker::StatsReport { entries, .. }) = back else {
+            panic!("unexpected {back:?}");
+        };
+        let snap = Snapshot {
+            node: "shard2".to_string(),
+            entries,
+        };
+        assert_eq!(snap.hist_names(), ["read_latency_ns"]);
+        assert_eq!(snap.hist("read_latency_ns"), h, "case {case}");
     }
 }

@@ -9,9 +9,11 @@
 # before and once after a perf change therefore records both numbers —
 # the cross-PR perf ratchet.
 #
-# Series recorded: in-process e2e_* numbers (SimNet data plane) plus the
+# Series recorded: in-process e2e_* numbers (SimNet data plane), the
 # e2e_*_tcp_loopback series — the same workload over the real TCP
-# transport (wire codec + socket hops), for the sim-vs-real comparison.
+# transport (wire codec + socket hops), for the sim-vs-real comparison —
+# and e2e_essp3_x4w_telemetry_on, the headline workload with wire-shipped
+# stats polling + event tracing enabled, vs its bare get_into twin.
 #
 # Usage: scripts/bench.sh
 set -euo pipefail
