@@ -210,6 +210,95 @@ fn bench_sparse_flush_tcp(out: &mut Vec<Entry>) {
     ));
 }
 
+/// LDA-shaped eager waves over the real loopback-TCP data plane, with
+/// disjoint writer/reader sets so the wire-v7 delta chains actually
+/// engage: worker w owns 16 of 64 wide rows (K=1024, sparse inc2) and
+/// reads the next worker's partition, so every row has one writer (wave
+/// snapshots, read-my-writes) and one pure reader (wave delta chains,
+/// O(nnz) per push instead of O(K)). The companion byte-level claim is
+/// pinned by the shard-level 8x framed-bytes test; this series watches
+/// the wall-clock side of the same win.
+fn bench_delta_push_tcp(out: &mut Vec<Entry>) {
+    let workers = 4;
+    let label = "e2e essp:3 x4w delta-push tcp_loopback: K=1024, 16 wr + 16 rd/clock, 100 clocks";
+    let r = bench(label, 1, 3, || {
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers,
+            shards: 2,
+            consistency: Consistency::Essp { s: 3 },
+            net: NetConfig::instant(),
+            transport: TransportSel::Tcp,
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 64, 1024));
+        let apps: Vec<Box<dyn PsApp>> = (0..workers)
+            .map(|w| {
+                let mut buf: Vec<f32> = Vec::new();
+                Box::new(move |ps: &mut PsClient, _c: Clock| {
+                    let mine = w as u64 * 16;
+                    let theirs = ((w + 1) % 4) as u64 * 16;
+                    for i in 0..16u64 {
+                        let idx = ((w as u64 * 37 + i * 3) % 1024) as usize;
+                        ps.inc_sparse((0, mine + i), &[(idx, 1.0), ((idx + 5) % 1024, -1.0)]);
+                        ps.get_into((0, theirs + i), &mut buf);
+                    }
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let _ = cluster.run(apps, 100);
+    });
+    let ops = (workers * 32 * 100) as f64;
+    r.print_throughput(ops, "inc2+rd");
+    out.push((
+        "e2e_essp3_x4w_delta_push".into(),
+        r.mean.as_secs_f64(),
+        r.throughput(ops),
+    ));
+}
+
+/// The vectored frame-batching hot loop in isolation: encode a stream of
+/// delta-chain push frames back-to-back into one reusable batch buffer,
+/// "flushing" (clearing) at the TCP writer's 64 KiB coalescing boundary —
+/// the per-frame cost of the writer's encode+coalesce path with the
+/// socket write taken out of the picture.
+fn bench_wire_batch_flush(out: &mut Vec<Entry>) {
+    use essptable::ps::msg::{PushRow, ToWorker};
+    use essptable::ps::types::RowDelta;
+    use essptable::transport::{wire, NodeId, Packet};
+    const COALESCE: usize = 64 * 1024;
+    const FRAMES: u64 = 4096;
+    let rows: Vec<PushRow> = (0..8)
+        .map(|i| {
+            let chain: std::sync::Arc<[RowDelta]> =
+                vec![RowDelta::sparse(1024, vec![(3, 1.0), (700, -0.5)])].into();
+            PushRow::deltas((0, i), 6, chain, 7)
+        })
+        .collect();
+    let packet = Packet::ToWorker(ToWorker::Push {
+        shard: 0,
+        vclock: 7,
+        rows,
+    });
+    let mut batch: Vec<u8> = Vec::with_capacity(COALESCE);
+    let r = bench("wire batch flush: 4096 delta-push frames, 64 KiB batches", 2, 10, || {
+        for _ in 0..FRAMES {
+            wire::write_frame(&mut batch, NodeId::Shard(0), NodeId::Worker(1), &packet)
+                .expect("encode");
+            if batch.len() >= COALESCE {
+                batch.clear();
+            }
+        }
+        batch.clear();
+    });
+    r.print_throughput(FRAMES as f64, "frames");
+    out.push((
+        "wire_batch_flush".into(),
+        r.mean.as_secs_f64(),
+        r.throughput(FRAMES as f64),
+    ));
+}
+
 /// Elastic shard plane: the same logreg workload over 4 provisioned
 /// shards with 2 initially active, migrating 2 -> 4 mid-run (grow at
 /// clock 100 of 200, deterministic) — what a live rebalance costs in
@@ -498,9 +587,19 @@ fn write_json(entries: &[Entry]) {
 
 fn main() {
     println!("== ps_throughput (paper §ESSPTable system claims) ==");
+    // Quick mode (scripts/bench.sh --quick, the CI smoke): the cheap
+    // microbenchmarks plus one e2e series — enough to catch a panic or a
+    // gross regression in the hot paths without CI-scale runtimes.
+    let quick = std::env::var("ESSPTABLE_BENCH_QUICK").is_ok();
     let mut entries = Vec::new();
     bench_coalescing(&mut entries);
     bench_coalescing_sparse(&mut entries);
+    bench_wire_batch_flush(&mut entries);
+    if quick {
+        bench_delta_push_tcp(&mut entries);
+        write_json(&entries);
+        return;
+    }
     for c in [
         Consistency::Bsp,
         Consistency::Ssp { s: 3 },
@@ -523,6 +622,8 @@ fn main() {
     bench_get_inc_clock_tcp(Consistency::Vap { v0: 1000.0 }, 4, &mut entries);
     // Sparse flushes of wide rows over TCP (the hybrid delta plane win).
     bench_sparse_flush_tcp(&mut entries);
+    // Eager waves with pure readers: the wire-v7 delta-chain win.
+    bench_delta_push_tcp(&mut entries);
     // Elastic shard plane: a live 2->4 rebalance mid-run.
     bench_migration_2to4(&mut entries);
     // Crash tolerance: the WAL's cost at both ends of the fsync dial,

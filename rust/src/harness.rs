@@ -87,6 +87,7 @@ impl ExpOpts {
             transport: self.transport,
             deterministic: false,
             seed: self.seed,
+            ..ClusterConfig::default()
         }
     }
 

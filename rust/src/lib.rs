@@ -57,6 +57,7 @@ pub mod ps {
     pub mod client;
     pub mod consistency;
     pub mod durability;
+    pub mod kernels;
     pub mod msg;
     pub mod placement;
     pub mod policy;

@@ -30,7 +30,7 @@
 
 use std::sync::Arc;
 
-use super::types::{Clock, Key, RowDelta};
+use super::types::{Clock, Key, RowDelta, NEVER};
 use crate::util::hash::FxHashMap;
 
 /// `source` value for a copy whose serving shard is unknown (e.g. a pull
@@ -46,6 +46,15 @@ pub struct CachedRow {
     /// Shard that served this copy (see module docs; [`NO_SOURCE`] if
     /// unknown).
     pub source: usize,
+    /// Delta-chain token (wire v7): the wave id at which this copy last
+    /// matched the serving shard's row bit-for-bit — the table vclock of
+    /// the last ESSP wave folded/installed, or the sequence number of the
+    /// last VAP preview. [`NEVER`] means the chain is broken (the copy
+    /// came from a pull, or a wave was missed): the next wave for this
+    /// key must be a full snapshot, and an arriving delta whose `base`
+    /// does not equal this token is discarded (the row is dropped and
+    /// re-pulled) rather than folded onto the wrong base.
+    pub wave: Clock,
     /// LRU tick of the last access.
     last_used: u64,
 }
@@ -101,6 +110,12 @@ impl RowCache {
     ///
     /// Replacement keeps the *newer* clock pair: an in-flight pull reply
     /// must not clobber a fresher pushed copy that arrived first.
+    ///
+    /// Pull-path installs break the delta chain (`wave = NEVER`): the
+    /// shard clears its seeded bit when it serves a pull, so the next
+    /// wave arrives as a snapshot and re-seeds the chain. A stale
+    /// arrival that keeps the existing copy keeps its token too — the
+    /// data is unchanged, so the token still describes it exactly.
     pub fn insert(
         &mut self,
         key: Key,
@@ -108,6 +123,33 @@ impl RowCache {
         vclock: Clock,
         fresh: Clock,
         source: usize,
+    ) {
+        self.insert_with_wave(key, data, vclock, fresh, source, NEVER);
+    }
+
+    /// [`RowCache::insert`] for push-wave snapshot installs: on install
+    /// the chain token is set to `wave` (the wave's table vclock for
+    /// ESSP pushes), arming the row for delta folds on later waves.
+    pub fn insert_pushed(
+        &mut self,
+        key: Key,
+        data: impl Into<Arc<[f32]>>,
+        vclock: Clock,
+        fresh: Clock,
+        source: usize,
+        wave: Clock,
+    ) {
+        self.insert_with_wave(key, data, vclock, fresh, source, wave);
+    }
+
+    fn insert_with_wave(
+        &mut self,
+        key: Key,
+        data: impl Into<Arc<[f32]>>,
+        vclock: Clock,
+        fresh: Clock,
+        source: usize,
+        wave: Clock,
     ) {
         self.tick += 1;
         match self.rows.get_mut(&key) {
@@ -126,6 +168,7 @@ impl RowCache {
                 vclock,
                 fresh,
                 source,
+                wave,
                 last_used: self.tick,
             },
         );
@@ -134,10 +177,68 @@ impl RowCache {
         }
     }
 
+    /// Fold a push-wave delta chain onto the cached copy (wire v7).
+    ///
+    /// Succeeds only when the chain certifiably continues this copy: the
+    /// row is cached, was served by `source`, and its token equals the
+    /// wave's `base` (with `base != NEVER` — a chainless base certifies
+    /// nothing). The deltas are then folded **in wire order** — the exact
+    /// ordered sequence the shard applied, never a coalesced sum — so
+    /// the result is bit-identical to the shard row, and the token
+    /// advances to `wave`. `vclock` is `Some(v)` for clock-carrying
+    /// waves (ESSP pushes: the copy is now guaranteed through `v`) and
+    /// `None` for VAP previews (fresher data, no new clock guarantee).
+    ///
+    /// Returns `false` without touching the row when the chain does not
+    /// continue; the caller discards the copy and re-pulls.
+    pub fn fold_wave(
+        &mut self,
+        key: &Key,
+        source: usize,
+        base: Clock,
+        deltas: &[RowDelta],
+        wave: Clock,
+        vclock: Option<Clock>,
+        fresh: Clock,
+    ) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        let Some(r) = self.rows.get_mut(key) else {
+            return false;
+        };
+        if r.source != source || base == NEVER || r.wave != base {
+            return false;
+        }
+        if Arc::get_mut(&mut r.data).is_none() {
+            let detached: Arc<[f32]> = r.data.iter().copied().collect();
+            r.data = detached;
+        }
+        let data = Arc::get_mut(&mut r.data).expect("unique after copy-on-write");
+        for d in deltas {
+            d.add_into(data);
+        }
+        if let Some(v) = vclock {
+            if v > r.vclock {
+                r.vclock = v;
+            }
+        }
+        r.wave = wave;
+        r.fresh = r.fresh.max(fresh);
+        r.last_used = tick;
+        true
+    }
+
     /// Apply a local delta to the cached copy (read-my-writes support).
     /// Copies-on-write: a snapshot shared with an in-flight message or the
     /// shard is detached before mutation. Sparse deltas fold in place,
     /// touching only their nnz indices.
+    ///
+    /// Breaks the delta chain (`wave = NEVER`): the copy no longer equals
+    /// the shard row at any wave, and the *next* wave's deltas will
+    /// include this worker's own update once the shard applies it —
+    /// folding them onto a copy that already contains it would
+    /// double-count. The mismatch makes the client discard and re-pull
+    /// instead.
     pub fn apply_delta(&mut self, key: &Key, delta: &RowDelta) {
         if let Some(r) = self.rows.get_mut(key) {
             if Arc::get_mut(&mut r.data).is_none() {
@@ -146,6 +247,7 @@ impl RowCache {
             }
             let data = Arc::get_mut(&mut r.data).expect("unique after copy-on-write");
             delta.add_into(data);
+            r.wave = NEVER;
         }
     }
 
@@ -179,12 +281,15 @@ impl RowCache {
     /// Replace a row's *contents* without touching its guaranteed clock
     /// (VAP eager waves: the data is fresher, but no new clock guarantee
     /// is implied). Inserts with no guarantee if the row is not cached.
+    /// `wave` is the new chain token (the VAP wave's sequence number);
+    /// pass [`NEVER`] when no delta chain should continue from this copy.
     pub fn force_data(
         &mut self,
         key: Key,
         data: impl Into<Arc<[f32]>>,
         fresh: Clock,
         source: usize,
+        wave: Clock,
     ) {
         self.tick += 1;
         match self.rows.get_mut(&key) {
@@ -192,10 +297,11 @@ impl RowCache {
                 r.data = data.into();
                 r.fresh = r.fresh.max(fresh);
                 r.source = source;
+                r.wave = wave;
                 r.last_used = self.tick;
             }
             None => {
-                self.insert(key, data, super::types::NEVER, fresh, source);
+                self.insert_with_wave(key, data, NEVER, fresh, source, wave);
             }
         }
     }
@@ -355,9 +461,90 @@ mod tests {
             "stale arrival must not retag"
         );
         // force_data retags: the contents are now the pushing shard's.
-        c.force_data(k(1), vec![4.0], 8, 1);
+        c.force_data(k(1), vec![4.0], 8, 1, NEVER);
         assert_eq!(c.peek(&k(1)).unwrap().source, 1);
         assert_eq!(NO_SOURCE, usize::MAX);
+    }
+
+    #[test]
+    fn fold_wave_continues_a_seeded_chain() {
+        let mut c = RowCache::new(0);
+        c.insert_pushed(k(1), vec![1.0, 2.0], 5, 5, 0, 5);
+        assert_eq!(c.peek(&k(1)).unwrap().wave, 5);
+        // Chain continues: two ordered deltas fold, token advances, the
+        // guaranteed clock rises.
+        let folded = c.fold_wave(
+            &k(1),
+            0,
+            5,
+            &[
+                RowDelta::Dense(vec![0.5, 0.0]),
+                RowDelta::sparse(2, vec![(1, -1.0)]),
+            ],
+            7,
+            Some(7),
+            7,
+        );
+        assert!(folded);
+        let r = c.peek(&k(1)).unwrap();
+        assert_eq!(&r.data[..], &[1.5, 1.0]);
+        assert_eq!((r.vclock, r.fresh, r.wave), (7, 7, 7));
+    }
+
+    #[test]
+    fn fold_wave_rejects_broken_or_mismatched_chains() {
+        let mut c = RowCache::new(0);
+        // Missing row.
+        assert!(!c.fold_wave(&k(9), 0, 5, &[], 7, Some(7), 7));
+        // Pull-installed row: wave = NEVER, never continues a chain.
+        c.insert(k(1), vec![1.0], 5, 5, 0);
+        assert!(!c.fold_wave(&k(1), 0, 5, &[], 7, Some(7), 7));
+        // A lying base of NEVER must not match the broken token either.
+        assert!(!c.fold_wave(&k(1), 0, super::NEVER, &[], 7, Some(7), 7));
+        // Wrong source shard.
+        c.insert_pushed(k(2), vec![1.0], 5, 5, 0, 5);
+        assert!(!c.fold_wave(&k(2), 3, 5, &[], 7, Some(7), 7));
+        // Wrong base token.
+        assert!(!c.fold_wave(&k(2), 0, 4, &[], 7, Some(7), 7));
+        // Rejections leave the row untouched.
+        let r = c.peek(&k(2)).unwrap();
+        assert_eq!((r.vclock, r.wave), (5, 5));
+        assert_eq!(&r.data[..], &[1.0]);
+    }
+
+    #[test]
+    fn fold_wave_detaches_shared_snapshots() {
+        let mut c = RowCache::new(0);
+        let shared: Arc<[f32]> = vec![1.0].into();
+        c.insert_pushed(k(1), Arc::clone(&shared), 5, 5, 0, 5);
+        assert!(c.fold_wave(&k(1), 0, 5, &[RowDelta::Dense(vec![1.0])], 6, Some(6), 6));
+        assert_eq!(&shared[..], &[1.0], "copy-on-write must protect sharers");
+        assert_eq!(&c.peek(&k(1)).unwrap().data[..], &[2.0]);
+    }
+
+    #[test]
+    fn local_fold_breaks_the_chain() {
+        // A read-my-writes fold makes the copy diverge from the shard row
+        // (and the next wave will re-ship this worker's own update): the
+        // token must drop to NEVER so the delta path cannot double-count.
+        let mut c = RowCache::new(0);
+        c.insert_pushed(k(1), vec![1.0], 5, 5, 0, 5);
+        c.apply_delta(&k(1), &vec![0.25].into());
+        assert_eq!(c.peek(&k(1)).unwrap().wave, super::NEVER);
+        assert!(!c.fold_wave(&k(1), 0, 5, &[], 7, Some(7), 7));
+    }
+
+    #[test]
+    fn vap_fold_leaves_the_guarantee_alone() {
+        let mut c = RowCache::new(0);
+        c.insert(k(1), vec![1.0], 3, 3, 1);
+        // Seed the chain via a VAP preview snapshot (seq 10), then fold
+        // the next preview's delta: vclock must stay at the pull's 3.
+        c.force_data(k(1), vec![2.0], 4, 1, 10);
+        assert!(c.fold_wave(&k(1), 1, 10, &[RowDelta::Dense(vec![1.0])], 11, None, 5));
+        let r = c.peek(&k(1)).unwrap();
+        assert_eq!(&r.data[..], &[3.0]);
+        assert_eq!((r.vclock, r.fresh, r.wave), (3, 5, 11));
     }
 
     #[test]

@@ -32,7 +32,7 @@ use std::time::{Duration, Instant};
 
 use super::cache::RowCache;
 use super::consistency::Consistency;
-use super::msg::{ToShard, ToWorker};
+use super::msg::{PushPayload, ToShard, ToWorker};
 use super::placement::{PlacementDelta, PlacementMap};
 use super::policy::ClientPolicy;
 use super::types::{Clock, Key, TableId, WorkerId};
@@ -106,6 +106,11 @@ pub struct ClientStats {
     /// Pulls fanned out to a replica shard instead of the primary
     /// (policies with `replica_reads`, replicated clusters only).
     pub replica_pulls: u64,
+    /// Wire-v7 delta push waves: rows whose delta chain folded onto the
+    /// cached copy, and rows whose chain did not continue (copy dropped
+    /// and re-pulled from the primary).
+    pub rows_delta_folded: u64,
+    pub rows_delta_discarded: u64,
     /// Value-bounded models: total time reads spent blocked on revoked
     /// bound grants, and the number of reads that blocked at least once.
     pub vap_stall_ns: u64,
@@ -267,6 +272,13 @@ pub struct PsClient {
     pulls_in_flight: FxHashMap<Key, usize>,
     /// Async mode: last clock at which a refresh pull was fired per key.
     last_refresh: FxHashMap<Key, Clock>,
+    /// Keys whose last delta wave did not continue the cached chain: the
+    /// next pull for such a key must hit the *primary* (whose reply
+    /// clears its seeded bit, forcing the next wave back to a snapshot)
+    /// rather than round-robin to a replica — a replica-served pull
+    /// leaves the primary believing the chain is intact, which would
+    /// re-break on every subsequent wave.
+    force_primary: FxHashSet<Key>,
     /// Per shard: the latest wave vclock announced (ESSP). A cached row
     /// from shard s is guaranteed through max(row.vclock, announced[s]):
     /// delta waves carry every row dirtied since the previous wave, so a
@@ -322,6 +334,7 @@ impl PsClient {
             registered: FxHashSet::default(),
             pulls_in_flight: FxHashMap::default(),
             last_refresh: FxHashMap::default(),
+            force_primary: FxHashSet::default(),
             shard_announced: vec![super::types::NEVER; total],
             scratch: Vec::new(),
             finished: false,
@@ -415,7 +428,39 @@ impl PsClient {
                 self.metrics.pushes_received.inc();
                 self.metrics.rows_pushed_in.add(rows.len() as u64);
                 for row in rows {
-                    self.cache.insert(row.key, row.data, vclock, row.fresh, shard);
+                    match row.payload {
+                        // Snapshot: install and arm the delta chain at
+                        // this wave's vclock (the shard's `last_wave`
+                        // records the same token).
+                        PushPayload::Snapshot(data) => {
+                            self.cache
+                                .insert_pushed(row.key, data, vclock, row.fresh, shard, vclock);
+                        }
+                        // Delta chain: fold the ordered deltas onto the
+                        // cached copy iff it certifiably continues the
+                        // chain (same source, token == base). On any
+                        // mismatch — evicted copy, missed wave, pull or
+                        // local write in between — drop the copy and
+                        // route the re-pull to the primary, whose reply
+                        // clears its seeded bit (next wave: snapshot).
+                        PushPayload::Deltas { base, deltas } => {
+                            if self.cache.fold_wave(
+                                &row.key,
+                                shard,
+                                base,
+                                &deltas,
+                                vclock,
+                                Some(vclock),
+                                row.fresh,
+                            ) {
+                                self.stats.rows_delta_folded += 1;
+                            } else {
+                                self.stats.rows_delta_discarded += 1;
+                                self.cache.remove(&row.key);
+                                self.force_primary.insert(row.key);
+                            }
+                        }
+                    }
                 }
                 // Rows absent from the wave are certified unchanged by the
                 // shard through `vclock` (delta waves carry every dirtied
@@ -437,8 +482,33 @@ impl PsClient {
                 self.stats.rows_pushed_in += rows.len() as u64;
                 self.metrics.pushes_received.inc();
                 self.metrics.rows_pushed_in.add(rows.len() as u64);
+                // VAP eager previews: the chain token is the wave
+                // sequence number, and folds carry no clock guarantee
+                // (`vclock: None` — exactly force_data's contract).
+                let wave = seq as Clock;
                 for row in rows {
-                    self.cache.force_data(row.key, row.data, row.fresh, shard);
+                    match row.payload {
+                        PushPayload::Snapshot(data) => {
+                            self.cache.force_data(row.key, data, row.fresh, shard, wave);
+                        }
+                        PushPayload::Deltas { base, deltas } => {
+                            if self.cache.fold_wave(
+                                &row.key,
+                                shard,
+                                base,
+                                &deltas,
+                                wave,
+                                None,
+                                row.fresh,
+                            ) {
+                                self.stats.rows_delta_folded += 1;
+                            } else {
+                                self.stats.rows_delta_discarded += 1;
+                                self.cache.remove(&row.key);
+                                self.force_primary.insert(row.key);
+                            }
+                        }
+                    }
                 }
                 self.send(
                     shard,
@@ -782,11 +852,19 @@ impl PsClient {
     fn fire_pull(&mut self, key: Key, min_vclock: Clock) {
         self.stats.pulls += 1;
         self.metrics.pulls.inc();
+        // A key flagged by a failed delta fold must pull from the
+        // primary: only the primary's reply clears its seeded bit, so a
+        // replica-served pull would leave it shipping doomed deltas on
+        // every wave.
+        let force_primary = self.force_primary.remove(&key);
         // Replica read fan-out: policies whose whole admission is the
         // clock window may round-robin pulls over the owner and its
         // replicas — the replica enforces the same `min_vclock` wait on
         // its own (identically fed) table clock.
-        let target = if self.placement.replicas_per() > 0 && self.policy.replica_reads() {
+        let target = if !force_primary
+            && self.placement.replicas_per() > 0
+            && self.policy.replica_reads()
+        {
             let pick = self.replica_rr;
             self.replica_rr = self.replica_rr.wrapping_add(1);
             let target = self.placement.read_target(&key, pick);

@@ -1,0 +1,208 @@
+//! Unrolled apply/norm kernels for the hot fold loops.
+//!
+//! The three folds that dominate the serve path — dense delta apply
+//! (`RowDelta::add_into` under `ShardCore::apply_rows` and the client
+//! overlay), sparse scatter-add, and the ∞-norm reduction the
+//! value-bounded policies report — are all memory-bound once the
+//! allocator is out of the way. This module gives each a manually
+//! unrolled multi-accumulator variant (8-wide adds, 4-way max trees)
+//! that the compiler auto-vectorizes to SSE/AVX/NEON, plus the plain
+//! scalar loop as both the fallback and the reference for the
+//! equivalence property tests.
+//!
+//! Bit-identity is a hard requirement (the transport-matrix tests
+//! compare runs elementwise as bits), so only reassociations that are
+//! exact in IEEE-754 are used:
+//!
+//! * `out[i] += d[i]` is lane-independent — any evaluation order gives
+//!   the same bits per lane.
+//! * `fold(0.0, |m, x| m.max(x.abs()))` is association-independent:
+//!   `abs` maps -0.0 to +0.0 so the operands are non-negative or NaN,
+//!   `f32::max` drops NaN symmetrically, and max over non-negative
+//!   values yields the same bit pattern under any tree shape (an
+//!   all-NaN input returns the 0.0 seed either way). Note this relies
+//!   on `f32::max` semantics — an explicit `_mm_max_ps` would NOT be
+//!   bit-safe (it returns the second operand on NaN).
+//!
+//! The unrolled variants are gated behind the `unrolled-kernels` cargo
+//! feature (on by default, zero dependencies); disabling it routes
+//! every call through the scalar reference.
+
+/// Scalar reference: `out[i] += d[i]` over the common prefix.
+#[inline]
+pub fn add_dense_scalar(out: &mut [f32], d: &[f32]) {
+    for (a, b) in out.iter_mut().zip(d) {
+        *a += b;
+    }
+}
+
+/// Unrolled dense apply: 8 independent lanes per iteration so the
+/// backend vectorizes without a reduction dependency.
+#[inline]
+pub fn add_dense_unrolled(out: &mut [f32], d: &[f32]) {
+    let n = out.len().min(d.len());
+    let (head, tail) = (n / 8 * 8, n);
+    let mut i = 0;
+    while i < head {
+        // Safety-free unroll: indices are < head <= out.len(), d.len().
+        out[i] += d[i];
+        out[i + 1] += d[i + 1];
+        out[i + 2] += d[i + 2];
+        out[i + 3] += d[i + 3];
+        out[i + 4] += d[i + 4];
+        out[i + 5] += d[i + 5];
+        out[i + 6] += d[i + 6];
+        out[i + 7] += d[i + 7];
+        i += 8;
+    }
+    while i < tail {
+        out[i] += d[i];
+        i += 1;
+    }
+}
+
+/// Scalar reference for the dense ∞-norm fold.
+#[inline]
+pub fn inf_norm_dense_scalar(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+}
+
+/// Unrolled dense ∞-norm: four independent accumulators, merged by a
+/// max tree (exact under reassociation — see module docs).
+#[inline]
+pub fn inf_norm_dense_unrolled(v: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let chunks = v.chunks_exact(4);
+    let rest = chunks.remainder();
+    for c in chunks {
+        acc[0] = acc[0].max(c[0].abs());
+        acc[1] = acc[1].max(c[1].abs());
+        acc[2] = acc[2].max(c[2].abs());
+        acc[3] = acc[3].max(c[3].abs());
+    }
+    let mut m = acc[0].max(acc[1]).max(acc[2].max(acc[3]));
+    for x in rest {
+        m = m.max(x.abs());
+    }
+    m
+}
+
+/// Scalar reference for the sparse-pair ∞-norm fold.
+#[inline]
+pub fn inf_norm_pairs_scalar(pairs: &[(u32, f32)]) -> f32 {
+    pairs.iter().fold(0.0f32, |m, (_, x)| m.max(x.abs()))
+}
+
+/// Unrolled sparse-pair ∞-norm (two accumulators: pair lists are short).
+#[inline]
+pub fn inf_norm_pairs_unrolled(pairs: &[(u32, f32)]) -> f32 {
+    let mut a = 0.0f32;
+    let mut b = 0.0f32;
+    let chunks = pairs.chunks_exact(2);
+    let rest = chunks.remainder();
+    for c in chunks {
+        a = a.max(c[0].1.abs());
+        b = b.max(c[1].1.abs());
+    }
+    for (_, x) in rest {
+        a = a.max(x.abs());
+    }
+    a.max(b)
+}
+
+/// Dense apply dispatch: unrolled when the feature is on, scalar otherwise.
+#[inline]
+pub fn add_dense(out: &mut [f32], d: &[f32]) {
+    #[cfg(feature = "unrolled-kernels")]
+    add_dense_unrolled(out, d);
+    #[cfg(not(feature = "unrolled-kernels"))]
+    add_dense_scalar(out, d);
+}
+
+/// Dense ∞-norm dispatch.
+#[inline]
+pub fn inf_norm_dense(v: &[f32]) -> f32 {
+    #[cfg(feature = "unrolled-kernels")]
+    return inf_norm_dense_unrolled(v);
+    #[cfg(not(feature = "unrolled-kernels"))]
+    return inf_norm_dense_scalar(v);
+}
+
+/// Sparse-pair ∞-norm dispatch.
+#[inline]
+pub fn inf_norm_pairs(pairs: &[(u32, f32)]) -> f32 {
+    #[cfg(feature = "unrolled-kernels")]
+    return inf_norm_pairs_unrolled(pairs);
+    #[cfg(not(feature = "unrolled-kernels"))]
+    return inf_norm_pairs_scalar(pairs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Adversarial f32 generator: NaNs (varied payloads), ±0.0,
+    /// denormals, ±inf, and ordinary magnitudes.
+    fn gen_f32(rng: &mut Rng) -> f32 {
+        match rng.next_u64() % 8 {
+            0 => f32::from_bits(0x7fc0_0000 | (rng.next_u64() as u32 & 0x003f_ffff)), // NaN
+            1 => -0.0,
+            2 => 0.0,
+            3 => f32::from_bits(rng.next_u64() as u32 & 0x007f_ffff), // +denormal
+            4 => f32::from_bits(0x8000_0001 | (rng.next_u64() as u32 & 0x007f_ffff)), // -denormal
+            5 => f32::INFINITY,
+            6 => f32::NEG_INFINITY,
+            _ => (rng.next_u64() as i32 as f32) * 1e-3,
+        }
+    }
+
+    fn gen_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| gen_f32(rng)).collect()
+    }
+
+    #[test]
+    fn unrolled_add_matches_scalar_bitwise() {
+        let mut rng = Rng::new(0xadd5_eed);
+        for case in 0..200 {
+            let n = (case % 67) as usize; // covers 0, sub-unroll, odd tails
+            let base = gen_vec(&mut rng, n);
+            let d = gen_vec(&mut rng, n);
+            let mut a = base.clone();
+            let mut b = base.clone();
+            add_dense_scalar(&mut a, &d);
+            add_dense_unrolled(&mut b, &d);
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "dense apply diverged at n={n}");
+        }
+    }
+
+    #[test]
+    fn unrolled_inf_norm_matches_scalar_bitwise() {
+        let mut rng = Rng::new(0x1f2e_3d4c);
+        for case in 0..200 {
+            let n = (case % 67) as usize;
+            let v = gen_vec(&mut rng, n);
+            assert_eq!(
+                inf_norm_dense_scalar(&v).to_bits(),
+                inf_norm_dense_unrolled(&v).to_bits(),
+                "dense norm diverged at n={n} ({v:?})"
+            );
+            let pairs: Vec<(u32, f32)> =
+                v.iter().enumerate().map(|(i, x)| (i as u32, *x)).collect();
+            assert_eq!(
+                inf_norm_pairs_scalar(&pairs).to_bits(),
+                inf_norm_pairs_unrolled(&pairs).to_bits(),
+                "pair norm diverged at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_nan_input_returns_the_zero_seed() {
+        let v = vec![f32::NAN; 9];
+        assert_eq!(inf_norm_dense_scalar(&v).to_bits(), 0.0f32.to_bits());
+        assert_eq!(inf_norm_dense_unrolled(&v).to_bits(), 0.0f32.to_bits());
+    }
+}

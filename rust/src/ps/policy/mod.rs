@@ -103,6 +103,17 @@ pub trait ServerPolicy: Send {
         false
     }
 
+    /// Does the policy fire a wave per inbound Update batch (VAP family)?
+    /// Queried once at shard construction: together with
+    /// `pushes_on_commit` it decides whether `apply_rows` keeps per-key
+    /// `WaveLog`s so waves can ship wire-v7 delta chains instead of
+    /// snapshots. (In deterministic mode per-update waves preview staged
+    /// state instead of applied state, so the logs would go unconsumed —
+    /// the core gates on that itself.)
+    fn waves_per_update(&self) -> bool {
+        false
+    }
+
     /// `worker` registered for eager pushes of a key (the core has
     /// already recorded it in the inverted index). The first policy-
     /// visible proof that a route to `worker` exists — value-bounded

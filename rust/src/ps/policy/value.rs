@@ -37,7 +37,7 @@ use std::sync::Arc;
 use super::{ClientPolicy, ServerPolicy};
 use crate::ps::msg::{PushRow, ToWorker};
 use crate::ps::shard::ShardCore;
-use crate::ps::types::{Clock, Key, WorkerId};
+use crate::ps::types::{Clock, Key, RowDelta, WorkerId, NEVER};
 use crate::ps::vap::ShardVisibility;
 
 /// Client policy for the value-bounded family.
@@ -174,11 +174,29 @@ impl ValueServer {
     /// update whose norm is in transit, while the store itself stays
     /// untouched until the sorted commit replay — final parameters
     /// remain bit-deterministic.
+    /// Payload selection per (key, reader) mirrors the ESSP clock wave:
+    /// in eager mode, a reader whose chain token (`core.shipped`, holding
+    /// wave seqs here) is live gets the triggering update's ordered delta
+    /// log (wire v7) on a `base` of the last wave it received; everyone
+    /// else gets the full preview snapshot. Readers a wave *skips* (the
+    /// writer itself, detached workers) have their token broken — their
+    /// cached copy missed this wave's content, so the next wave they do
+    /// receive must re-seed with a snapshot. Deterministic mode keeps no
+    /// wave logs (previews are staged compositions, not applied state)
+    /// and always snapshots.
     fn wave(&mut self, core: &mut ShardCore, source: WorkerId, clock: Clock, touched: &[Key]) {
         let mut per_worker: Vec<Vec<PushRow>> = Vec::new();
         per_worker.resize_with(core.workers, Vec::new);
+        // Chain tokens of rows shipped this wave are set to the wave's
+        // seq — which is only assigned once the receiver set is known, so
+        // collect the (key, reader) pairs and stamp them after.
+        let mut stamp: Vec<(Key, WorkerId)> = Vec::new();
         let staged = core.staged_sums(touched);
+        let mut delta_rows: u64 = 0;
         for key in touched {
+            // Consume the delta log up front (even on the skip paths
+            // below) so it never outlives the wave it describes.
+            let log = core.wave_log.remove(key);
             let Some(readers) = core.readers.get(key) else {
                 continue;
             };
@@ -197,21 +215,41 @@ impl ValueServer {
                 (None, Some(d)) => (d.clone().to_dense().into(), clock),
                 (None, None) => continue,
             };
+            let deltas: Option<(Arc<[RowDelta]>, Vec<WorkerId>)> =
+                log.map(|l| (l.deltas.into(), l.writers));
+            let workers = core.workers;
+            let tokens = core
+                .shipped
+                .entry(*key)
+                .or_insert_with(|| vec![NEVER; workers]);
             for w in readers.iter() {
                 if w == source || self.vis.is_detached(w) {
-                    continue; // the writer reads-its-own-writes locally
+                    // The writer reads-its-own-writes locally; either way
+                    // a skipped reader's copy misses this wave, so any
+                    // chain it held is dead.
+                    tokens[w] = NEVER;
+                    continue;
                 }
-                per_worker[w].push(PushRow {
-                    key: *key,
-                    data: Arc::clone(&data),
-                    fresh,
-                });
+                let push = match &deltas {
+                    Some((d, writers)) if tokens[w] != NEVER && !writers.contains(&w) => {
+                        delta_rows += 1;
+                        PushRow::deltas(*key, tokens[w], Arc::clone(d), fresh)
+                    }
+                    _ => PushRow::snapshot(*key, Arc::clone(&data), fresh),
+                };
+                per_worker[w].push(push);
+                stamp.push((*key, w));
             }
         }
         let awaiting: HashSet<WorkerId> = (0..core.workers)
             .filter(|&w| !per_worker[w].is_empty())
             .collect();
         let seq = self.vis.assign_wave((source, clock), awaiting.clone());
+        for (key, w) in stamp {
+            core.shipped.get_mut(&key).expect("stamped above")[w] = seq as Clock;
+        }
+        core.stats.rows_pushed_delta += delta_rows;
+        core.metrics.rows_pushed_delta.add(delta_rows);
         for w in awaiting {
             let rows = std::mem::take(&mut per_worker[w]);
             core.stats.rows_pushed += rows.len() as u64;
@@ -228,6 +266,10 @@ impl ValueServer {
 }
 
 impl ServerPolicy for ValueServer {
+    fn waves_per_update(&self) -> bool {
+        true
+    }
+
     fn on_update(
         &mut self,
         core: &mut ShardCore,
@@ -344,7 +386,7 @@ mod tests {
                 ToWorker::VapPush { shard: s, rows, .. } => {
                     assert_eq!(s, 0);
                     assert_eq!(rows.len(), 1);
-                    assert_eq!(&rows[0].data[..], &[1.0]);
+                    assert_eq!(&rows[0].snapshot_data()[..], &[1.0]);
                 }
                 other => panic!("worker {w}: unexpected {other:?}"),
             }
@@ -446,7 +488,7 @@ mod tests {
         let mut later_wave = false;
         while let Ok(msg) = wrxs[1].try_recv() {
             if let ToWorker::VapPush { rows, .. } = &msg {
-                if rows[0].data[0] > 5.0 {
+                if rows[0].snapshot_data()[0] > 5.0 {
                     later_wave = true;
                 }
             }
@@ -481,7 +523,7 @@ mod tests {
         match recv(&wrxs[1]) {
             ToWorker::VapPush { rows, .. } => {
                 assert_eq!(rows.len(), 1);
-                assert_eq!(&rows[0].data[..], &[11.0, 22.0]);
+                assert_eq!(&rows[0].snapshot_data()[..], &[11.0, 22.0]);
                 assert_eq!(rows[0].fresh, 0);
             }
             other => panic!("unexpected {other:?}"),
@@ -501,7 +543,7 @@ mod tests {
         });
         match recv(&wrxs[0]) {
             ToWorker::VapPush { rows, .. } => {
-                assert_eq!(&rows[0].data[..], &[111.0, 22.0]);
+                assert_eq!(&rows[0].snapshot_data()[..], &[111.0, 22.0]);
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -537,13 +579,105 @@ mod tests {
         assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[10.0, 20.0, 30.0]);
         match recv(&wrxs[1]) {
             ToWorker::VapPush { rows, .. } => {
-                assert_eq!(&rows[0].data[..], &[10.0, 20.0, 32.0]);
+                assert_eq!(&rows[0].snapshot_data()[..], &[10.0, 20.0, 32.0]);
             }
             other => panic!("unexpected {other:?}"),
         }
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
         assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[10.0, 20.0, 32.0]);
+    }
+
+    #[test]
+    fn eager_waves_ship_delta_chains_after_the_seeding_snapshot() {
+        use crate::ps::msg::PushPayload;
+        let (mut shard, wrxs, _net) = vap_fixture(3, 100.0);
+        shard.init_row((0, 1), vec![0.0, 0.0]);
+        for w in 0..3 {
+            shard.handle(ToShard::Register { key: (0, 1), worker: w });
+        }
+        shard.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 0,
+            inf_norm: 1.0,
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![1.0, 2.0].into())],
+        });
+        // First contact: readers 1 and 2 are seeded with snapshots.
+        let mut seed_seq = 0;
+        for w in [1usize, 2] {
+            match recv(&wrxs[w]) {
+                ToWorker::VapPush { seq, rows, .. } => {
+                    assert_eq!(&rows[0].snapshot_data()[..], &[1.0, 2.0]);
+                    seed_seq = seq;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Second update: the chain is live, so the wave carries only the
+        // triggering delta on top of the seeded base.
+        shard.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 1,
+            inf_norm: 3.0,
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 1,
+            rows: vec![((0, 1), RowDelta::sparse(2, vec![(1, 3.0)]))],
+        });
+        for w in [1usize, 2] {
+            match recv(&wrxs[w]) {
+                ToWorker::VapPush { rows, .. } => match &rows[0].payload {
+                    PushPayload::Deltas { base, deltas } => {
+                        assert_eq!(*base, seed_seq as Clock, "base names the seeding wave");
+                        assert_eq!(deltas.len(), 1);
+                        let mut v = [1.0f32, 2.0];
+                        deltas[0].add_into(&mut v);
+                        assert_eq!(v, [1.0, 5.0]);
+                    }
+                    other => panic!("expected a delta chain, got {other:?}"),
+                },
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // A pull reply replaces worker 1's copy outside the chain: its
+        // next wave re-seeds with a snapshot while worker 2 stays on the
+        // delta chain.
+        shard.handle(ToShard::Get {
+            key: (0, 1),
+            worker: 1,
+            min_vclock: crate::ps::types::NEVER,
+        });
+        match recv(&wrxs[1]) {
+            ToWorker::Row { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        shard.handle(ToShard::NormReport {
+            worker: 0,
+            clock: 2,
+            inf_norm: 1.0,
+        });
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 2,
+            rows: vec![((0, 1), vec![0.5, 0.0].into())],
+        });
+        match recv(&wrxs[1]) {
+            ToWorker::VapPush { rows, .. } => {
+                assert_eq!(&rows[0].snapshot_data()[..], &[1.5, 5.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match recv(&wrxs[2]) {
+            ToWorker::VapPush { rows, .. } => {
+                assert!(rows[0].payload.is_deltas(), "unbroken chain keeps shipping deltas");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

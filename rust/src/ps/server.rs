@@ -19,7 +19,44 @@
 //!   body`, little-endian, preceded per connection by an `"ESSPWIR1"`
 //!   magic + version handshake (see `transport::wire` for the full
 //!   layout). Byte accounting is identical in both modes because the
-//!   SimNet model charges the codec's exact frame sizes.
+//!   SimNet model charges the codec's exact frame sizes; both planes also
+//!   coalesce frames the same way (the TCP per-peer writer batches each
+//!   queue drain into one vectored write, the SimNet router drains its
+//!   intake in matching batches — see their module docs).
+//!
+//! # Delta push waves (wire v7)
+//!
+//! Eager pushes (`ToWorker::Push` / `VapPush`) are no longer
+//! snapshot-only. Each shard keeps, per pushed key, a *chain token* per
+//! reader — the vclock (ESSP) or wave seq (VAP) of the last wave that
+//! carried the key to that worker — plus a `WaveLog` of the exact ordered
+//! [`crate::ps::types::RowDelta`]s folded into the row since the last
+//! wave consumed it. A reader holding an intact chain receives just those
+//! deltas tagged with the base token; the client replays them onto its
+//! cached copy in wire order, reproducing the shard row **bit-for-bit**
+//! (the sequence is never coalesced — f32 addition is order-sensitive).
+//! For sparse updates this ships `O(nnz)` instead of `O(row_len)` bytes,
+//! which is the paper's LDA/MF regime.
+//!
+//! The downgrade rules keep the chain honest — any event that makes a
+//! reader's cached copy unknowable breaks its chain (token reset), and
+//! the next wave re-seeds it with a full snapshot:
+//!
+//! * first contact (no token yet), pull replies, fresh registrations,
+//! * the wave's own *writers* (their read-my-writes fold already holds
+//!   their update locally; a delta would double-count it),
+//! * VAP waves that *skip* a reader (the skipped copy missed that wave's
+//!   content, so a later delta base would be stale),
+//! * migration departure/arrival of the key, crash rebuild, promotion.
+//!
+//! Clients certify each delta wave against the cached row's own chain
+//! token and source-shard tag (the PR-5 placement tags); a mismatched or
+//! missing base discards the cached copy and falls back to a primary
+//! pull. Deterministic-mode per-update waves preview *staged* state and
+//! always ship snapshots, so staged-replay bit-reproducibility is
+//! untouched. `rows_pushed_delta` (per shard) and
+//! `rows_delta_folded` / `rows_delta_discarded` (per client) count the
+//! fast path and its fallbacks.
 //!
 //! Fully separate OS processes (one per shard / worker, the paper's
 //! actual deployment shape) are launched via the `serve-shard` /
@@ -248,6 +285,12 @@ pub struct ClusterConfig {
     /// reproducibility genuinely outranks the Hogwild dynamics (the CLI
     /// cluster subcommands default it off for Async for this reason).
     pub deterministic: bool,
+    /// Force every push wave to ship full row snapshots instead of
+    /// wire-v7 delta chains (see module docs, § Delta push waves). A
+    /// delta run must be bit-identical to a forced-snapshot run — this
+    /// flag is the A/B control of that equivalence suite, and the escape
+    /// hatch if a workload ever prefers snapshot traffic.
+    pub snapshot_waves: bool,
     /// Durability plane: when set, every shard node (primaries and
     /// replicas) keeps a generation-paired checkpoint + write-ahead log
     /// under `dir` and can recover `crash` faults from it (see module
@@ -283,6 +326,7 @@ impl Default for ClusterConfig {
             virtual_clock: None,
             transport: TransportSel::Sim,
             deterministic: false,
+            snapshot_waves: false,
             durability: None,
             faults: FaultPlan::default(),
             seed: 42,
@@ -598,6 +642,9 @@ impl Cluster {
         // checkpoint captures the initialized rows; fault schedules and
         // the fsync stall arm at the same point.
         for (id, shard) in shards.iter_mut().enumerate() {
+            if cfg.snapshot_waves {
+                shard.force_snapshot_waves();
+            }
             if let Some(dur) = &cfg.durability {
                 let recovered = shard
                     .enable_durability(dur.clone())

@@ -140,6 +140,9 @@ pub struct ShardMetrics {
     /// Table-clock advances (commit boundaries).
     pub commits: Counter,
     pub rows_pushed: Counter,
+    /// Subset of `rows_pushed` that shipped as delta chains (wire v7)
+    /// rather than full snapshots.
+    pub rows_pushed_delta: Counter,
     pub push_waves: Counter,
     pub gets_forwarded: Counter,
     pub updates_forwarded: Counter,
@@ -169,6 +172,7 @@ impl ShardMetrics {
             updates_staged: Counter::new(),
             commits: Counter::new(),
             rows_pushed: Counter::new(),
+            rows_pushed_delta: Counter::new(),
             push_waves: Counter::new(),
             gets_forwarded: Counter::new(),
             updates_forwarded: Counter::new(),
@@ -193,6 +197,7 @@ impl ShardMetrics {
             ("updates_staged".into(), self.updates_staged.get()),
             ("commits".into(), self.commits.get()),
             ("rows_pushed".into(), self.rows_pushed.get()),
+            ("rows_pushed_delta".into(), self.rows_pushed_delta.get()),
             ("push_waves".into(), self.push_waves.get()),
             ("gets_forwarded".into(), self.gets_forwarded.get()),
             ("updates_forwarded".into(), self.updates_forwarded.get()),
@@ -226,6 +231,8 @@ pub struct ShardStats {
     pub gets_queued: u64,
     pub updates_applied: u64,
     pub rows_pushed: u64,
+    /// Subset of `rows_pushed` shipped as delta chains instead of snapshots.
+    pub rows_pushed_delta: u64,
     pub push_waves: u64,
     /// Elastic shard plane: rows this shard handed off / received in a
     /// live migration, and late traffic relayed via the forward table.
@@ -262,6 +269,21 @@ struct Migration {
     held_min: Option<Clock>,
 }
 
+/// The ordered delta sequence a key's row absorbed since the last wave
+/// that consumed it — the raw material of a wire-v7 delta push. Order is
+/// exactly application order (f32 addition is non-associative, so the
+/// client must replay the same sequence to land on the same bits), and
+/// deltas are *moved* in from `apply_rows`, never cloned.
+#[derive(Default)]
+pub(crate) struct WaveLog {
+    pub(crate) deltas: Vec<RowDelta>,
+    /// Workers that contributed an update in this interval. They fold
+    /// their own pending updates into their cache locally (read-my-writes
+    /// at tick), so shipping them a delta chain that includes their own
+    /// contribution would double-count it; they get a snapshot instead.
+    pub(crate) writers: Vec<WorkerId>,
+}
+
 /// Policy-agnostic shard state and mechanism. Owned by its thread after
 /// `spawn`; constructed (and row-initialized) by the coordinator before
 /// launch. Policies receive `&mut ShardCore` in every hook and drive the
@@ -289,6 +311,31 @@ pub struct ShardCore {
     /// Maintained only when the policy pushes on commit.
     dirty: FxHashSet<Key>,
     track_dirty: bool,
+    /// Whether `apply_rows` records per-key [`WaveLog`]s for delta waves.
+    /// True when the policy waves (ESSP on commit, eager VAP per update);
+    /// false on pull-only cores and during WAL replay, where logs would
+    /// accumulate with no wave to consume them.
+    log_wave_deltas: bool,
+    /// Sticky override forcing every wave to ship full snapshots
+    /// ([`Shard::force_snapshot_waves`]): the A/B control proving delta
+    /// waves are bit-equivalent to snapshot waves, and a diagnostic
+    /// escape hatch. Survives promotion.
+    snapshot_waves_only: bool,
+    /// Delta-wave chain state, per (key, worker): the vclock (ESSP) or
+    /// wave seq (VAP) of the last wave that carried `key`'s row to that
+    /// worker, `NEVER` if none — mirroring the client's per-row `wave`
+    /// token. A key ships as a delta chain to exactly the readers whose
+    /// token is live; anything that invalidates the client copy (pull
+    /// reply, re-register, migration) resets the token to `NEVER` and the
+    /// next wave re-seeds with a snapshot.
+    pub(crate) shipped: FxHashMap<Key, Vec<Clock>>,
+    /// Pending per-key delta logs, consumed (removed) by the next wave.
+    pub(crate) wave_log: FxHashMap<Key, WaveLog>,
+    /// Reusable per-worker wave assembly buffers (alloc-free steady
+    /// state: `mem::take` of an empty Vec allocates nothing).
+    wave_scratch: Vec<Vec<PushRow>>,
+    /// Reusable buffer for dirty keys a wave defers (migration fence).
+    wave_deferred: Vec<Key>,
     pending: Vec<PendingGet>,
     /// Deterministic application: buffer updates per (clock, worker) and
     /// apply them in that sorted order when the table clock commits, so
@@ -415,6 +462,7 @@ impl Shard {
         deterministic: bool,
     ) -> Self {
         let track_dirty = policy.pushes_on_commit();
+        let log_wave_deltas = track_dirty || (policy.waves_per_update() && !deterministic);
         Self {
             core: ShardCore {
                 id,
@@ -426,6 +474,12 @@ impl Shard {
                 reg_count: vec![0; workers],
                 dirty: FxHashSet::default(),
                 track_dirty,
+                log_wave_deltas,
+                snapshot_waves_only: false,
+                shipped: FxHashMap::default(),
+                wave_log: FxHashMap::default(),
+                wave_scratch: vec![Vec::new(); workers],
+                wave_deferred: Vec::new(),
                 pending: Vec::new(),
                 deterministic,
                 staged: BTreeMap::new(),
@@ -474,6 +528,17 @@ impl Shard {
     /// Attach the event-trace flight recorder.
     pub fn set_trace(&mut self, ring: Arc<TraceRing>) {
         self.core.trace = Some(ring);
+    }
+
+    /// Force every push wave to ship full row snapshots, never wire-v7
+    /// delta chains. Deltas replay the exact ordered fold the shard
+    /// applied, so a forced-snapshot run must be bit-identical to a
+    /// delta run — this is the A/B control the equivalence tests (and
+    /// `ClusterConfig::snapshot_waves`) flip. Sticky: survives
+    /// promotion and crash recovery.
+    pub fn force_snapshot_waves(&mut self) {
+        self.core.snapshot_waves_only = true;
+        self.core.log_wave_deltas = false;
     }
 
     /// Drive the shard from its inbox until Shutdown. Returns final stats
@@ -781,6 +846,12 @@ impl Shard {
             reg_count: vec![0; self.core.workers],
             dirty: FxHashSet::default(),
             track_dirty: false,
+            log_wave_deltas: false,
+            snapshot_waves_only: false,
+            shipped: FxHashMap::default(),
+            wave_log: FxHashMap::default(),
+            wave_scratch: vec![Vec::new(); self.core.workers],
+            wave_deferred: Vec::new(),
             pending: Vec::new(),
             deterministic: self.core.deterministic,
             staged: BTreeMap::new(),
@@ -879,6 +950,11 @@ impl Shard {
         c.migration = recovered.migration;
         c.logical = recovered.logical;
         c.dirty.clear();
+        // Every delta chain is suspect after a rebuild: clients may hold
+        // copies the replayed history never shipped. Drop all chain state
+        // so the next wave re-seeds with snapshots (always sound).
+        c.shipped.clear();
+        c.wave_log.clear();
         if c.track_dirty {
             let keys: Vec<Key> = c.rows.keys().copied().collect();
             c.dirty.extend(keys);
@@ -913,6 +989,14 @@ impl Shard {
         self.core.logical = primary as usize;
         self.policy = self.consistency.server_policy(self.core.workers);
         self.core.track_dirty = self.policy.pushes_on_commit();
+        self.core.log_wave_deltas = !self.core.snapshot_waves_only
+            && (self.core.track_dirty
+                || (self.policy.waves_per_update() && !self.core.deterministic));
+        // Chain state learned as a replica (there is none — replicas
+        // never wave) or left over from a past life is void; snapshots
+        // re-seed every reader on the first post-promotion wave.
+        self.core.shipped.clear();
+        self.core.wave_log.clear();
         if self.core.track_dirty {
             let keys: Vec<Key> = self.core.rows.keys().copied().collect();
             self.core.dirty.extend(keys);
@@ -1110,6 +1194,12 @@ impl ShardCore {
 
     fn reply_row(&mut self, key: Key, worker: WorkerId) {
         let vclock = self.visible_clock();
+        // A pull reply replaces the worker's cached copy outside the wave
+        // chain (the client installs it with a broken token), so the next
+        // wave must re-seed it with a snapshot.
+        if let Some(tokens) = self.shipped.get_mut(&key) {
+            tokens[worker] = super::types::NEVER;
+        }
         // A GET may legitimately race ahead of row materialization (e.g.
         // the row will first exist when some worker's update creates it):
         // serve zeros of the table's row length rather than panicking.
@@ -1169,6 +1259,13 @@ impl ShardCore {
             .or_insert_with(|| ReaderSet::for_workers(workers));
         if set.insert(worker) {
             self.reg_count[worker] += 1;
+            // A fresh registration (or a re-registration after eviction)
+            // means we cannot assume the worker still holds any copy a
+            // past wave shipped: break the delta chain so the next wave
+            // re-seeds with a snapshot.
+            if let Some(tokens) = self.shipped.get_mut(&key) {
+                tokens[worker] = super::types::NEVER;
+            }
         }
     }
 
@@ -1213,7 +1310,7 @@ impl ShardCore {
             self.stage_rows(clock, source, rows);
             return keys;
         }
-        self.apply_rows(clock, rows)
+        self.apply_rows(clock, source, rows)
     }
 
     /// Stage a batch's rows for deterministic replay, maintaining the
@@ -1239,7 +1336,15 @@ impl ShardCore {
     /// Apply one update batch to the row store (copy-on-write per row).
     /// Each delta is folded in its own representation: a sparse delta
     /// touches only its nnz indices — no densification on the apply path.
-    fn apply_rows(&mut self, clock: Clock, rows: Vec<(Key, RowDelta)>) -> Vec<Key> {
+    /// When the policy waves, each delta is then *moved* into the key's
+    /// [`WaveLog`] (tagged with the contributing `source`), so the next
+    /// wave can ship the exact ordered fold instead of a snapshot.
+    fn apply_rows(
+        &mut self,
+        clock: Clock,
+        source: WorkerId,
+        rows: Vec<(Key, RowDelta)>,
+    ) -> Vec<Key> {
         let mut touched = Vec::with_capacity(rows.len());
         for (key, delta) in rows {
             self.stats.updates_applied += 1;
@@ -1283,6 +1388,13 @@ impl ShardCore {
             delta.add_into(data);
             row.fresh = row.fresh.max(clock);
             touched.push(key);
+            if self.log_wave_deltas {
+                let log = self.wave_log.entry(key).or_default();
+                if !log.writers.contains(&source) {
+                    log.writers.push(source);
+                }
+                log.deltas.push(delta);
+            }
         }
         touched
     }
@@ -1407,7 +1519,7 @@ impl ShardCore {
                     self.staged_index.remove(key);
                 }
             }
-            self.apply_rows(c, rows);
+            self.apply_rows(c, w, rows);
         }
         debug_assert!(
             !self.staged.is_empty() || self.staged_index.is_empty(),
@@ -1443,25 +1555,42 @@ impl ShardCore {
     /// hook): push the registered rows *updated since the last wave* to
     /// each registered client, batched per client into one wave message.
     /// Cost is O(dirty rows x interested readers) — the total wave size —
-    /// thanks to the inverted index; payloads are `Arc`-shared, so a wave
-    /// to P readers performs zero payload deep-copies.
+    /// thanks to the inverted index.
+    ///
+    /// Payload selection is per (key, reader). A reader whose chain token
+    /// (`shipped[key]`) is live — its cached copy is exactly the last
+    /// shipment — gets the interval's ordered [`WaveLog`] delta sequence
+    /// (wire v7): typically a few sparse pairs instead of the full row,
+    /// and bit-identical by construction since the client replays the
+    /// same fold the store performed. Everyone else gets the `Arc`-shared
+    /// snapshot, which is always sound: readers with a broken chain
+    /// (first wave, post-pull, re-registered) and this interval's
+    /// *writers*, whose local read-my-writes fold already holds their own
+    /// contribution — a delta chain would double-count it. Delta payloads
+    /// are shared per key (`Arc<[RowDelta]>`), so fan-out to P readers
+    /// still performs zero payload deep-copies, and the per-worker
+    /// assembly buffers are reused across waves.
     pub fn push_wave(&mut self, vclock: Clock) {
-        let mut per_worker: Vec<Vec<PushRow>> = Vec::new();
-        per_worker.resize_with(self.workers, Vec::new);
-        let mut deferred: Vec<Key> = Vec::new();
+        let workers = self.workers;
+        let mut delta_rows: u64 = 0;
         for key in self.dirty.drain() {
             // A migrated-in key whose handoff has not landed holds only a
             // partial fold (eager mode applies post-switch updates onto
             // zeros): defer it to the post-handoff wave rather than
-            // pushing partial contents as authoritative.
+            // pushing partial contents as authoritative. Its WaveLog
+            // keeps accumulating meanwhile; chain tokens are untouched,
+            // so a multi-interval chain stays consistent.
             if self
                 .migration
                 .as_ref()
                 .is_some_and(|m| m.awaiting.contains(&key))
             {
-                deferred.push(key);
+                self.wave_deferred.push(key);
                 continue;
             }
+            // Consume the interval's delta log unconditionally (even on
+            // the skip paths below) so it never outlives its wave.
+            let log = self.wave_log.remove(&key);
             let Some(readers) = self.readers.get(&key) else {
                 continue;
             };
@@ -1469,23 +1598,39 @@ impl ShardCore {
                 continue;
             };
             let fresh = row.fresh.max(vclock);
+            let deltas: Option<(Arc<[RowDelta]>, Vec<WorkerId>)> =
+                log.map(|l| (l.deltas.into(), l.writers));
+            let tokens = self
+                .shipped
+                .entry(key)
+                .or_insert_with(|| vec![super::types::NEVER; workers]);
             for w in readers.iter() {
-                per_worker[w].push(PushRow {
-                    key,
-                    data: Arc::clone(&row.data),
-                    fresh,
-                });
+                let base = tokens[w];
+                tokens[w] = vclock;
+                let push = match &deltas {
+                    Some((d, writers)) if base != super::types::NEVER && !writers.contains(&w) => {
+                        delta_rows += 1;
+                        PushRow::deltas(key, base, Arc::clone(d), fresh)
+                    }
+                    _ => PushRow::snapshot(key, Arc::clone(&row.data), fresh),
+                };
+                self.wave_scratch[w].push(push);
             }
         }
-        for key in deferred {
+        for key in self.wave_deferred.drain(..) {
             self.dirty.insert(key);
         }
-        for (worker, rows) in per_worker.into_iter().enumerate() {
+        self.stats.rows_pushed_delta += delta_rows;
+        self.metrics.rows_pushed_delta.add(delta_rows);
+        for worker in 0..workers {
             if self.reg_count[worker] == 0 {
+                debug_assert!(self.wave_scratch[worker].is_empty());
                 continue;
             }
             // Empty waves still announce the new table clock so clients
             // can advance their copies' guarantees without re-pulling.
+            // `mem::take` of an empty scratch Vec allocates nothing.
+            let rows = std::mem::take(&mut self.wave_scratch[worker]);
             self.stats.rows_pushed += rows.len() as u64;
             self.stats.push_waves += 1;
             self.metrics.rows_pushed.add(rows.len() as u64);
@@ -1616,6 +1761,11 @@ impl ShardCore {
                 }
             }
             self.dirty.remove(&key);
+            // Chain state leaves with the key: the new owner must seed
+            // every reader with a snapshot before it can ship deltas, and
+            // if the key ever comes home the same applies here.
+            self.shipped.remove(&key);
+            self.wave_log.remove(&key);
             let staged = staged_out.remove(&key).unwrap_or_default();
             self.stats.rows_migrated_out += 1;
             self.metrics.rows_migrated_out.inc();
@@ -1677,6 +1827,12 @@ impl ShardCore {
                 // registered readers here.
                 self.dirty.insert(key);
             }
+            // Any delta log accumulated while awaiting the handoff
+            // described a fold onto zeros, not onto the handed-off base:
+            // drop it so the post-handoff wave ships the full row. (No
+            // reader can hold a live chain for a key we never waved, so
+            // this only forces the snapshot that was due anyway.)
+            self.wave_log.remove(&key);
             match self.rows.get_mut(&key) {
                 // Eager (non-deterministic) mode may already have applied
                 // post-switch updates to this key, materialized from
@@ -2000,7 +2156,7 @@ mod tests {
                 assert_eq!(vclock, 0);
                 assert_eq!(rows.len(), 1);
                 assert_eq!(rows[0].key, (0, 1));
-                assert_eq!(&rows[0].data[..], &[8.0]);
+                assert_eq!(&rows[0].snapshot_data()[..], &[8.0]);
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -2041,7 +2197,7 @@ mod tests {
             match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
                 ToWorker::Push { rows, .. } => {
                     assert_eq!(rows.len(), 1);
-                    received.push(Arc::clone(&rows[0].data));
+                    received.push(Arc::clone(rows[0].snapshot_data()));
                 }
                 other => panic!("unexpected {other:?}"),
             }
@@ -2070,7 +2226,7 @@ mod tests {
         });
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         let pushed = match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
-            ToWorker::Push { mut rows, .. } => rows.remove(0).data,
+            ToWorker::Push { mut rows, .. } => Arc::clone(rows.remove(0).snapshot_data()),
             other => panic!("unexpected {other:?}"),
         };
         assert_eq!(&pushed[..], &[1.0]);
@@ -2083,6 +2239,178 @@ mod tests {
         assert_eq!(&pushed[..], &[1.0]);
         assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[2.0]);
         assert!(!Arc::ptr_eq(&pushed, &shard.row(&(0, 1)).unwrap().data));
+    }
+
+    #[test]
+    fn second_wave_ships_delta_chain_to_pure_readers() {
+        use super::super::msg::PushPayload;
+        let (mut shard, wrxs, _net) = fixture_n(2, Consistency::Essp { s: 1 }, HashMap::new());
+        shard.init_row((0, 1), vec![0.0]);
+        for w in 0..2 {
+            shard.handle(ToShard::Register { key: (0, 1), worker: w });
+        }
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 0,
+            rows: vec![((0, 1), vec![1.0].into())],
+        });
+        for w in 0..2 {
+            shard.handle(ToShard::ClockTick { worker: w, clock: 0 });
+        }
+        // First wave: no reader holds a certified copy — snapshots seed
+        // the chains.
+        for wrx in &wrxs {
+            match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
+                ToWorker::Push { rows, .. } => {
+                    assert_eq!(&rows[0].snapshot_data()[..], &[1.0]);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(shard.stats().rows_pushed_delta, 0);
+        shard.handle(ToShard::Update {
+            worker: 0,
+            clock: 1,
+            rows: vec![((0, 1), RowDelta::sparse(1, vec![(0, 2.0)]))],
+        });
+        for w in 0..2 {
+            shard.handle(ToShard::ClockTick { worker: w, clock: 1 });
+        }
+        // Second wave: the writer re-seeds with a snapshot (its local
+        // read-my-writes fold already holds the +2); the pure reader gets
+        // the interval's delta chain based on the seeding wave's vclock.
+        match wrxs[0].recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Push { rows, .. } => {
+                assert_eq!(&rows[0].snapshot_data()[..], &[3.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match wrxs[1].recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Push { vclock, rows, .. } => {
+                assert_eq!(vclock, 1);
+                match &rows[0].payload {
+                    PushPayload::Deltas { base, deltas } => {
+                        assert_eq!(*base, 0, "base names the wave that seeded the chain");
+                        assert_eq!(deltas.len(), 1);
+                        let mut v = [1.0f32];
+                        deltas[0].add_into(&mut v);
+                        assert_eq!(v, [3.0], "replaying the chain lands on the store's bits");
+                    }
+                    other => panic!("expected a delta chain, got {other:?}"),
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(shard.stats().rows_pushed_delta, 1);
+    }
+
+    #[test]
+    fn pull_and_reregistration_break_the_chain() {
+        use super::super::msg::PushPayload;
+        let (mut shard, wrxs, _net) = fixture_n(2, Consistency::Essp { s: 1 }, HashMap::new());
+        shard.init_row((0, 1), vec![0.0]);
+        for w in 0..2 {
+            shard.handle(ToShard::Register { key: (0, 1), worker: w });
+        }
+        let wave = |shard: &mut Shard, clock: Clock| {
+            shard.handle(ToShard::Update {
+                worker: 0,
+                clock,
+                rows: vec![((0, 1), vec![1.0].into())],
+            });
+            for w in 0..2 {
+                shard.handle(ToShard::ClockTick { worker: w, clock });
+            }
+        };
+        wave(&mut shard, 0);
+        for wrx in &wrxs {
+            let _ = wrx.recv_timeout(Duration::from_secs(1)).unwrap();
+        }
+        // Worker 1 re-pulls the row: its cached copy now came from the
+        // reply, not the wave, so the chain must re-seed.
+        shard.handle(ToShard::Get {
+            key: (0, 1),
+            worker: 1,
+            min_vclock: -1,
+        });
+        match wrxs[1].recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Row { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        wave(&mut shard, 1);
+        match wrxs[1].recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Push { rows, .. } => {
+                assert!(
+                    !rows[0].payload.is_deltas(),
+                    "post-pull wave must re-seed with a snapshot"
+                );
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // With the chain re-seeded, the next interval ships deltas again.
+        wave(&mut shard, 2);
+        match wrxs[1].recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToWorker::Push { rows, .. } => match &rows[0].payload {
+                PushPayload::Deltas { base, .. } => assert_eq!(*base, 1),
+                other => panic!("expected a delta chain, got {other:?}"),
+            },
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// Acceptance: an LDA-shaped ESSP wave (K=1024 topic rows, sparse
+    /// updates with nnz<=8, several pure readers) must ship at least 8x
+    /// fewer framed bytes via delta chains than forced full snapshots.
+    /// Both arms run the identical message sequence; the only difference
+    /// is [`Shard::force_snapshot_waves`] on the control shard.
+    #[test]
+    fn lda_shaped_delta_wave_ships_8x_fewer_framed_bytes() {
+        use crate::transport::Packet;
+        const K: usize = 1024;
+        const WORKERS: usize = 5; // one writer + four pure readers
+        let run = |force_snapshots: bool| -> usize {
+            let row_len: HashMap<TableId, usize> = std::iter::once((0, K)).collect();
+            let (mut shard, wrxs, _net) = fixture_n(WORKERS, Consistency::Essp { s: 1 }, row_len);
+            if force_snapshots {
+                shard.force_snapshot_waves();
+            }
+            shard.init_row((0, 1), vec![0.0; K]);
+            for w in 0..WORKERS {
+                shard.handle(ToShard::Register { key: (0, 1), worker: w });
+            }
+            let sparse = || RowDelta::sparse(K, (0..8u32).map(|i| (i * 100, 0.5)).collect());
+            let wave = |shard: &mut Shard, clock: Clock| {
+                shard.handle(ToShard::Update {
+                    worker: 0,
+                    clock,
+                    rows: vec![((0, 1), sparse())],
+                });
+                for w in 0..WORKERS {
+                    shard.handle(ToShard::ClockTick { worker: w, clock });
+                }
+            };
+            // Wave 1 seeds every chain with a snapshot in both arms.
+            wave(&mut shard, 0);
+            for wrx in &wrxs {
+                let _ = wrx.recv_timeout(Duration::from_secs(1)).unwrap();
+            }
+            // Wave 2 is the measured steady-state wave. The writer always
+            // re-seeds (read-my-writes), so only the pure readers count.
+            wave(&mut shard, 1);
+            let mut bytes = 0;
+            for wrx in wrxs.iter().skip(1) {
+                let msg = wrx.recv_timeout(Duration::from_secs(1)).unwrap();
+                assert!(matches!(msg, ToWorker::Push { .. }), "unexpected {msg:?}");
+                bytes += Packet::ToWorker(msg).wire_bytes();
+            }
+            bytes
+        };
+        let delta = run(false);
+        let snapshot = run(true);
+        assert!(
+            snapshot >= 8 * delta,
+            "delta waves must ship >=8x fewer framed bytes: snapshot={snapshot} delta={delta}"
+        );
     }
 
     #[test]
@@ -2580,7 +2908,7 @@ mod tests {
                 assert_eq!(s, 0, "wave must carry the logical shard id");
                 assert_eq!(vclock, 1);
                 assert_eq!(rows.len(), 1);
-                assert_eq!(&rows[0].data[..], &[8.0]);
+                assert_eq!(&rows[0].snapshot_data()[..], &[8.0]);
             }
             other => panic!("unexpected {other:?}"),
         }

@@ -100,26 +100,23 @@ impl RowDelta {
 
     /// Max |element| — the ∞-norm the value-bounded policies report. A
     /// sparse delta scans only its pairs: implicit zeros cannot raise a
-    /// max over absolute values.
+    /// max over absolute values. Routed through `ps::kernels` (unrolled
+    /// multi-accumulator fold, bit-identical to the scalar reference).
     pub fn inf_norm(&self) -> f32 {
         match self {
-            Self::Dense(v) => v.iter().fold(0.0f32, |m, x| m.max(x.abs())),
-            Self::Sparse { pairs, .. } => {
-                pairs.iter().fold(0.0f32, |m, (_, x)| m.max(x.abs()))
-            }
+            Self::Dense(v) => super::kernels::inf_norm_dense(v),
+            Self::Sparse { pairs, .. } => super::kernels::inf_norm_pairs(pairs),
         }
     }
 
     /// Fold this delta into a dense buffer: `out[i] += delta[i]`. Sparse
     /// deltas touch only their nnz indices (out-of-range pairs, which the
-    /// wire decoder already rejects, are skipped defensively).
+    /// wire decoder already rejects, are skipped defensively). The dense
+    /// arm runs the unrolled `ps::kernels` apply (lane-independent, so
+    /// bit-identical to the scalar loop).
     pub fn add_into(&self, out: &mut [f32]) {
         match self {
-            Self::Dense(v) => {
-                for (a, d) in out.iter_mut().zip(v) {
-                    *a += d;
-                }
-            }
+            Self::Dense(v) => super::kernels::add_dense(out, v),
             Self::Sparse { pairs, .. } => {
                 for &(i, v) in pairs {
                     if let Some(a) = out.get_mut(i as usize) {
@@ -227,10 +224,49 @@ impl From<Vec<f32>> for RowDelta {
 /// real TCP framing agree byte-for-byte.
 #[inline]
 pub fn row_wire_bytes(delta: &RowDelta) -> usize {
-    13 + match delta {
+    12 + delta_wire_bytes(delta)
+}
+
+/// Exact wire footprint of a *keyless* delta payload: representation tag
+/// (1) + body. This is the unit the v7 hybrid row encodings (delta push
+/// waves, `RowHandoff`) compose — the key travels once per row, not once
+/// per delta.
+#[inline]
+pub fn delta_wire_bytes(delta: &RowDelta) -> usize {
+    1 + match delta {
         RowDelta::Dense(v) => 4 + 4 * v.len(),
         RowDelta::Sparse { pairs, .. } => 8 + 8 * pairs.len(),
     }
+}
+
+/// Pick the smaller wire representation for a dense row snapshot: the
+/// sparse pair encoding (8 bytes/nnz + 8 header) iff it beats the dense
+/// one (4 bytes/element + 4 header). Used by the v7 `RowHandoff` hybrid
+/// row payload; the encoder and the body-length function both call this
+/// so frame sizes stay exact.
+#[inline]
+pub fn hybrid_snapshot_delta(data: &[f32]) -> RowDelta {
+    let nnz = data.iter().filter(|x| x.to_bits() != 0).count();
+    if 8 + 8 * nnz < 4 + 4 * data.len() {
+        RowDelta::Sparse {
+            len: data.len() as u32,
+            pairs: data
+                .iter()
+                .enumerate()
+                .filter(|(_, x)| x.to_bits() != 0)
+                .map(|(i, x)| (i as u32, *x))
+                .collect(),
+        }
+    } else {
+        RowDelta::Dense(data.to_vec())
+    }
+}
+
+/// Byte size [`hybrid_snapshot_delta`] will encode to, without building it.
+#[inline]
+pub fn hybrid_snapshot_wire_bytes(data: &[f32]) -> usize {
+    let nnz = data.iter().filter(|x| x.to_bits() != 0).count();
+    1 + (8 + 8 * nnz).min(4 + 4 * data.len())
 }
 
 #[cfg(test)]

@@ -11,6 +11,15 @@
 //!     so this model and the real TCP framing agree byte-for-byte,
 //!   * FIFO delivery (TCP-like; delivery times are made monotone per link).
 //!
+//! Intake is vectored, mirroring the TCP writer's coalesced batches: each
+//! router wakeup drains everything queued (up to [`INTAKE_BATCH`], the
+//! explicit coalescing boundary) into a reusable scratch buffer and
+//! schedules the whole batch in one pass against a single arrival
+//! timestamp. Coalescing changes neither determinism nor byte accounting:
+//! messages are processed in intake (FIFO) order, so per-link clamps and
+//! jitter rng draws happen in exactly the order they would one-at-a-time,
+//! and every message is still charged its own exact frame size.
+//!
 //! Consistency-model behavior depends on the *ordering and delay* of
 //! messages, not on physical NICs — this is exactly the phenomenon that
 //! produces staleness, so it is the part we must reproduce faithfully.
@@ -33,6 +42,13 @@ use crate::util::rng::Rng;
 // The addressing and packet types live in the transport layer (shared
 // with the real TCP backend); re-exported here for existing importers.
 pub use crate::transport::{NodeId, Packet};
+
+/// Coalescing boundary of the router's vectored intake: at most this many
+/// messages are drained and scheduled per wakeup before the loop returns
+/// to dispatching due deliveries, so an intake flood cannot starve the
+/// heap. Large enough that a full push wave or update fan-out coalesces
+/// into one drain in practice.
+const INTAKE_BATCH: usize = 256;
 
 /// Link model parameters.
 #[derive(Debug, Clone)]
@@ -282,6 +298,10 @@ fn route_loop(
     let mut link_last: FxHashMap<(NodeId, NodeId), Instant> = FxHashMap::default();
     let mut seq = 0u64;
     let mut closed = false;
+    // Reusable vectored-intake scratch: drained messages land here and
+    // are scheduled in one pass, so steady-state wakeups allocate nothing
+    // (drain keeps the capacity).
+    let mut intake: Vec<Wire> = Vec::new();
 
     loop {
         // Dispatch everything due.
@@ -299,43 +319,62 @@ fn route_loop(
             .map(|Reverse(s)| s.at.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(wire) => {
-                let verdict = faults
-                    .as_deref()
-                    .map(|inj| inj.on_packet(wire.src, wire.dst))
-                    .unwrap_or_default();
-                if verdict.drop {
-                    // A dropped packet still settles — flush must not
-                    // wait forever for a delivery that will never come.
-                    stats.delivered.fetch_add(1, Ordering::Release);
-                    continue;
-                }
-                let now = Instant::now();
-                let bytes = wire.packet.wire_bytes() as f64;
-                let ser = if cfg.bandwidth.is_finite() {
-                    Duration::from_secs_f64(bytes / cfg.bandwidth)
-                } else {
-                    Duration::ZERO
-                };
-                let jit = cfg.jitter.mul_f64(rng.f64());
-                let link = (wire.src, wire.dst);
-                let free_at = link_free.get(&link).copied().unwrap_or(now).max(now) + ser;
-                link_free.insert(link, free_at);
-                let mut at = free_at + cfg.latency + jit + verdict.delay;
-                if verdict.reorder {
-                    // Escape the FIFO clamp: fresh jitter, no clamp, and
-                    // link_last untouched so later traffic may overtake.
-                    at += cfg.jitter.mul_f64(rng.f64());
-                } else {
-                    // FIFO per link: never deliver before an earlier
-                    // message.
-                    if let Some(&last) = link_last.get(&link) {
-                        at = at.max(last + Duration::from_nanos(1));
+            Ok(first) => {
+                // Vectored intake: coalesce everything queued at this
+                // wakeup (up to the boundary) and schedule the batch in
+                // one pass. Intake order — and with it the per-link FIFO
+                // clamps and the jitter rng draw sequence — is exactly
+                // what one-message-at-a-time processing would see.
+                intake.push(first);
+                while intake.len() < INTAKE_BATCH {
+                    match rx.try_recv() {
+                        Ok(w) => intake.push(w),
+                        Err(_) => break,
                     }
-                    link_last.insert(link, at);
                 }
-                seq += 1;
-                heap.push(Reverse(Scheduled { at, seq, wire }));
+                // One arrival timestamp for the whole coalesced batch —
+                // the frames "hit the NIC" together, like one writev.
+                let now = Instant::now();
+                for wire in intake.drain(..) {
+                    let verdict = faults
+                        .as_deref()
+                        .map(|inj| inj.on_packet(wire.src, wire.dst))
+                        .unwrap_or_default();
+                    if verdict.drop {
+                        // A dropped packet still settles — flush must not
+                        // wait forever for a delivery that will never
+                        // come.
+                        stats.delivered.fetch_add(1, Ordering::Release);
+                        continue;
+                    }
+                    let bytes = wire.packet.wire_bytes() as f64;
+                    let ser = if cfg.bandwidth.is_finite() {
+                        Duration::from_secs_f64(bytes / cfg.bandwidth)
+                    } else {
+                        Duration::ZERO
+                    };
+                    let jit = cfg.jitter.mul_f64(rng.f64());
+                    let link = (wire.src, wire.dst);
+                    let free_at =
+                        link_free.get(&link).copied().unwrap_or(now).max(now) + ser;
+                    link_free.insert(link, free_at);
+                    let mut at = free_at + cfg.latency + jit + verdict.delay;
+                    if verdict.reorder {
+                        // Escape the FIFO clamp: fresh jitter, no clamp,
+                        // and link_last untouched so later traffic may
+                        // overtake.
+                        at += cfg.jitter.mul_f64(rng.f64());
+                    } else {
+                        // FIFO per link: never deliver before an earlier
+                        // message.
+                        if let Some(&last) = link_last.get(&link) {
+                            at = at.max(last + Duration::from_nanos(1));
+                        }
+                        link_last.insert(link, at);
+                    }
+                    seq += 1;
+                    heap.push(Reverse(Scheduled { at, seq, wire }));
+                }
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => closed = true,

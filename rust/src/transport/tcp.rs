@@ -14,8 +14,11 @@
 //! Threads per endpoint:
 //!   * server only: one acceptor (non-blocking poll so shutdown can join it),
 //!   * per connection: one writer — owns the (src, dst) route's bounded
-//!     queue, encodes with `wire`, flushes when the queue drains — and one
-//!     reader — decodes frames and demuxes them into local node inboxes.
+//!     queue; each wakeup drains every queued frame, encodes them
+//!     back-to-back into one reusable batch buffer, and pushes the whole
+//!     coalesced batch to the socket in a single `write_all` (flushing
+//!     early at the [`COALESCE`] boundary) — and one reader — decodes
+//!     frames and demuxes them into local node inboxes.
 //!
 //! Lifecycle: a process stops sending by dropping its writer queues
 //! (`close_send`), which flushes and closes the write half of every
@@ -30,7 +33,7 @@
 //! [`TraceRing`] records peer lifecycle transitions plus (debug level)
 //! per-link backpressure events.
 
-use std::io::{self, BufReader, BufWriter};
+use std::io::{self, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
@@ -54,8 +57,16 @@ use crate::util::hash::FxHashMap;
 /// (Unit tests shrink the bound so the backpressure path is exercisable
 /// without queueing thousands of frames.)
 const WRITER_QUEUE: usize = if cfg!(test) { 8 } else { 4096 };
-/// Socket buffer size for the buffered writer/reader pair.
+/// Socket buffer size for the reader side's `BufReader`.
 const SOCK_BUF: usize = 64 * 1024;
+/// Frame-coalescing boundary of the per-peer writer: frames drained at
+/// one wakeup are encoded back-to-back into a reusable batch buffer and
+/// hit the socket in a single `write_all` — but once the batch crosses
+/// this size it is flushed immediately, bounding both the writer's
+/// memory and how long the first coalesced frame waits behind the rest.
+/// (A batch may exceed the boundary by at most one frame: the check runs
+/// after each encode.)
+const COALESCE: usize = 64 * 1024;
 /// How long either side of the handshake may keep the other waiting.
 const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
 
@@ -757,8 +768,22 @@ fn register_conn(
     Ok(())
 }
 
+/// Push the coalesced batch onto the wire in one `write_all` and reset
+/// it for reuse. A dead link swallows the bytes (their frames were
+/// already counted when encoded — same semantics as a buffered write
+/// whose later flush fails).
+fn flush_batch(stream: &mut TcpStream, batch: &mut Vec<u8>, dead: &mut bool) {
+    if batch.is_empty() {
+        return;
+    }
+    if !*dead && stream.write_all(batch).is_err() {
+        *dead = true;
+    }
+    batch.clear();
+}
+
 fn writer_loop(
-    stream: TcpStream,
+    mut stream: TcpStream,
     rx: Receiver<Frame>,
     stats: Arc<TcpStats>,
     faults: Option<Arc<FaultInjector>>,
@@ -766,7 +791,11 @@ fn writer_loop(
 ) {
     crate::sim::priority::infrastructure_thread();
     let shutdown_handle = stream.try_clone().ok();
-    let mut w = BufWriter::with_capacity(SOCK_BUF, stream);
+    // One reusable encode buffer for the connection's lifetime: frames
+    // drained at a wakeup coalesce here and reach the socket as a single
+    // vectored-style write per batch, alloc-free in steady state (the
+    // buffer keeps its high-water capacity across wakeups).
+    let mut batch: Vec<u8> = Vec::with_capacity(COALESCE);
     // After an io error the peer is gone: swallow (and count) the rest so
     // producers never block on a dead link.
     let mut dead = false;
@@ -791,29 +820,33 @@ fn writer_loop(
                     continue;
                 }
                 if !verdict.delay.is_zero() {
-                    // Flush queued frames first, then stall the link —
-                    // the delay must postpone this packet, not batch it
-                    // with earlier traffic.
-                    if !dead && w.flush().is_err() {
-                        dead = true;
-                    }
+                    // Flush the coalesced batch first, then stall the
+                    // link — the delay must postpone this packet, not
+                    // the traffic batched ahead of it.
+                    flush_batch(&mut stream, &mut batch, &mut dead);
                     std::thread::sleep(verdict.delay);
                 }
             }
             if dead {
                 stats.dropped.fetch_add(1, Ordering::AcqRel);
             } else {
-                match wire::write_frame(&mut w, src, dst, &packet) {
+                match wire::write_frame(&mut batch, src, dst, &packet) {
                     Ok(()) => {
                         link.frames.fetch_add(1, Ordering::AcqRel);
                         link.bytes
                             .fetch_add(packet.wire_bytes() as u64, Ordering::AcqRel);
+                        // Coalescing boundary: a batch past the limit is
+                        // flushed now rather than growing unbounded.
+                        if batch.len() >= COALESCE {
+                            flush_batch(&mut stream, &mut batch, &mut dead);
+                        }
                     }
                     // Oversized frame: normally unreachable — the sender
                     // asserts the MAX_FRAME bound in `Inner::send` before
                     // enqueueing — kept as defense in depth for frames
-                    // that reach a writer some other way. Rejected before
-                    // any byte hit the stream, so the link stays healthy.
+                    // that reach a writer some other way. `write_frame`
+                    // validates the length before emitting a byte, so
+                    // the batch is untouched and the link stays healthy.
                     Err(e) if e.kind() == io::ErrorKind::InvalidInput => {
                         eprintln!("transport: dropping oversized frame: {e}");
                         stats.dropped.fetch_add(1, Ordering::AcqRel);
@@ -826,13 +859,10 @@ fn writer_loop(
             }
             next = rx.try_recv().ok();
         }
-        // Queue drained: push everything onto the wire.
-        if !dead && w.flush().is_err() {
-            dead = true;
-        }
+        // Queue drained: one write pushes the whole coalesced batch.
+        flush_batch(&mut stream, &mut batch, &mut dead);
     }
-    let _ = w.flush();
-    drop(w);
+    flush_batch(&mut stream, &mut batch, &mut dead);
     if let Some(s) = shutdown_handle {
         let _ = s.shutdown(Shutdown::Write);
     }

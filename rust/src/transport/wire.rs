@@ -26,8 +26,9 @@
 //! the `RowDelta` the client coalesced, never densified in transit:
 //!
 //! ```text
-//! row    := key | repr:u8 | body
+//! row    := key | delta
 //! key    := table:u32 | row:u64
+//! delta  := repr:u8 | body
 //! dense  (repr 0): len:u32 | f32 * len
 //! sparse (repr 1): len:u32 | nnz:u32 | (idx:u32 | val:f32) * nnz
 //! ```
@@ -39,6 +40,39 @@
 //! delegates to: one function is the source of truth for the client's
 //! pending-bytes estimate, the SimNet serialization-time model, and the
 //! TCP frames on the socket, so the three can never drift apart.
+//!
+//! ## Delta push waves (wire v7)
+//!
+//! Eager wave rows (`Push` / `VapPush`) are *hybrid*: each row ships
+//! either a full snapshot or the ordered deltas applied since the wave
+//! the reader last certified:
+//!
+//! ```text
+//! pushrow  := key | fresh:i64 | payload:u8 | body
+//! snapshot (payload 0): len:u32 | f32 * len
+//! deltas   (payload 1): base:i64 | m:u32 | delta * m
+//! ```
+//!
+//! `base` names the reader's expected starting point — the vclock of the
+//! previous clock wave (ESSP) or the per-key seq of the previous eager
+//! wave (VAP). The deltas are the exact sequence the shard folded into
+//! its own row, in order, never a coalesced sum: f32 addition is
+//! non-associative, so only replaying the identical sequence keeps the
+//! client's cached copy bit-for-bit equal to the shard's row. A client
+//! whose cached copy is not exactly at `base` (evicted, freshly pulled,
+//! sourced from a different shard after a migration — the PR-5
+//! source-shard tag is part of the check) discards the row and re-pulls;
+//! the shard, which clears its seeded-reader bit whenever it serves that
+//! reader a pull, answers the next wave for that key with a snapshot.
+//! Snapshots are also sent on first push after registration and after
+//! migration/promotion/crash-recovery (the shard's delta log is
+//! conservative: when in doubt, re-seed). A lying `base` therefore never
+//! corrupts state — at worst it forces a snapshot round-trip.
+//!
+//! `RowHandoff` row payloads use the same hybrid idea spatially: the
+//! migrated row snapshot is encoded as a keyless `delta` (sparse iff
+//! that is smaller), decoded back to a dense row by *placing* pairs into
+//! a zero fill, which preserves every bit pattern.
 //!
 //! Connections start with a fixed-size handshake:
 //!
@@ -66,9 +100,11 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 
 use super::{NodeId, Packet};
-use crate::ps::msg::{PushRow, ToShard, ToWorker};
+use crate::ps::msg::{PushPayload, PushRow, ToShard, ToWorker};
 use crate::ps::placement::PlacementDelta;
-use crate::ps::types::{row_wire_bytes, Clock, Key, RowDelta, WorkerId};
+use crate::ps::types::{
+    delta_wire_bytes, hybrid_snapshot_wire_bytes, row_wire_bytes, Clock, Key, RowDelta, WorkerId,
+};
 
 /// Handshake magic: protocol name + wire revision byte.
 pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
@@ -78,8 +114,10 @@ pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
 /// MigrateBegin/RowHandoff/MigrateCommit/Placement and the coordinator
 /// node kind; v5: crash tolerance — the Promote control message and the
 /// placement delta's replica-promotion field; v6: the telemetry plane —
-/// the out-of-band StatsPull/StatsReport snapshot pair).
-pub const VERSION: u16 = 6;
+/// the out-of-band StatsPull/StatsReport snapshot pair; v7: delta push
+/// waves — hybrid snapshot/delta payloads on Push/VapPush rows and the
+/// sparse-capable RowHandoff row encoding).
+pub const VERSION: u16 = 7;
 /// Versions this binary can speak (currently exactly [`VERSION`]; kept a
 /// range so the reject blob's negotiation surface survives a future
 /// multi-version binary).
@@ -126,6 +164,10 @@ const MAX_STAT_NAME: usize = 256;
 const REPR_DENSE: u8 = 0;
 const REPR_SPARSE: u8 = 1;
 
+/// Push-row payload tags (wire v7, see module docs).
+const PAYLOAD_SNAPSHOT: u8 = 0;
+const PAYLOAD_DELTAS: u8 = 1;
+
 // ------------------------------------------------------------------ sizes
 
 /// Exact body size of a `ToShard` message.
@@ -147,10 +189,13 @@ pub fn to_shard_body_len(m: &ToShard) -> usize {
             outgoing, incoming, ..
         } => 24 + 16 * outgoing.len() + 12 * incoming.len(),
         ToShard::RowHandoff { data, staged, .. } => {
-            // Per staged entry: clock (8) + worker (4) + repr-tagged delta
-            // body — numerically `row_wire_bytes` (its key header is also
-            // 12 bytes), reused so the two accountings cannot drift.
-            45 + 4 * data.len()
+            // Header 41 = epoch 8 + key 12 + vclock 8 + fresh 8 + exists 1
+            // + staged count 4; the row snapshot travels as a keyless
+            // hybrid delta (sparse iff smaller — wire v7). Per staged
+            // entry: clock (8) + worker (4) + repr-tagged delta body —
+            // numerically `row_wire_bytes` (its key header is also 12
+            // bytes), reused so the two accountings cannot drift.
+            41 + hybrid_snapshot_wire_bytes(data)
                 + staged.iter().map(|(_, _, d)| row_wire_bytes(d)).sum::<usize>()
         }
         ToShard::MigrateCommit { .. } => 8,
@@ -173,7 +218,7 @@ pub fn to_worker_body_len(m: &ToWorker) -> usize {
     match m {
         ToWorker::Row { data, .. } => 32 + 4 * data.len(),
         ToWorker::Push { rows, .. } | ToWorker::VapPush { rows, .. } => {
-            16 + rows.iter().map(|r| 24 + 4 * r.data.len()).sum::<usize>()
+            16 + rows.iter().map(push_row_wire_bytes).sum::<usize>()
         }
         ToWorker::Bound { .. } => 5,
         ToWorker::Placement { delta } => placement_delta_body_len(delta),
@@ -181,6 +226,19 @@ pub fn to_worker_body_len(m: &ToWorker) -> usize {
             // shard 4 + count 4, then per entry: name-len u16 + bytes +
             // value u64.
             8 + entries.iter().map(|(n, _)| 10 + n.len()).sum::<usize>()
+        }
+    }
+}
+
+/// Exact encoded size of one hybrid push-wave row (wire v7): key 12 +
+/// fresh 8 + payload tag 1, then either a dense snapshot (`len:u32` +
+/// 4 bytes/element) or the delta chain (`base:i64 | m:u32` + each delta's
+/// keyless `delta_wire_bytes`).
+pub fn push_row_wire_bytes(r: &PushRow) -> usize {
+    21 + match &r.payload {
+        PushPayload::Snapshot(data) => 4 + 4 * data.len(),
+        PushPayload::Deltas { deltas, .. } => {
+            12 + deltas.iter().map(delta_wire_bytes).sum::<usize>()
         }
     }
 }
@@ -293,6 +351,32 @@ fn write_row_delta(w: &mut impl Write, delta: &RowDelta) -> io::Result<()> {
     }
 }
 
+/// Write a dense row snapshot as a keyless hybrid delta: the sparse pair
+/// encoding iff it is smaller (same break-even as
+/// `ps::types::hybrid_snapshot_wire_bytes`, which sizes this function's
+/// output — keep the two in lockstep). -0.0 counts as nonzero (its bits
+/// differ from the implicit zero fill), so the decoded dense row is
+/// bit-identical to `data`.
+fn write_hybrid_snapshot(w: &mut impl Write, data: &[f32]) -> io::Result<()> {
+    let nnz = data.iter().filter(|x| x.to_bits() != 0).count();
+    if 8 + 8 * nnz < 4 + 4 * data.len() {
+        w8(w, REPR_SPARSE)?;
+        w32(w, data.len() as u32)?;
+        w32(w, nnz as u32)?;
+        for (i, x) in data.iter().enumerate() {
+            if x.to_bits() != 0 {
+                w32(w, i as u32)?;
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    } else {
+        w8(w, REPR_DENSE)?;
+        w32(w, data.len() as u32)?;
+        write_f32s(w, data)
+    }
+}
+
 fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
     match m {
         ToShard::Get {
@@ -389,8 +473,7 @@ fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
             wi64(w, *vclock)?;
             wi64(w, *fresh)?;
             w8(w, u8::from(*exists))?;
-            w32(w, data.len() as u32)?;
-            write_f32s(w, data)?;
+            write_hybrid_snapshot(w, data)?;
             w32(w, staged.len() as u32)?;
             for (clock, worker, delta) in staged {
                 wi64(w, *clock)?;
@@ -441,8 +524,21 @@ fn write_push_rows(w: &mut impl Write, rows: &[PushRow]) -> io::Result<()> {
     for r in rows {
         wkey(w, &r.key)?;
         wi64(w, r.fresh)?;
-        w32(w, r.data.len() as u32)?;
-        write_f32s(w, &r.data)?;
+        match &r.payload {
+            PushPayload::Snapshot(data) => {
+                w8(w, PAYLOAD_SNAPSHOT)?;
+                w32(w, data.len() as u32)?;
+                write_f32s(w, data)?;
+            }
+            PushPayload::Deltas { base, deltas } => {
+                w8(w, PAYLOAD_DELTAS)?;
+                wi64(w, *base)?;
+                w32(w, deltas.len() as u32)?;
+                for d in deltas.iter() {
+                    write_row_delta(w, d)?;
+                }
+            }
+        }
     }
     Ok(())
 }
@@ -636,6 +732,21 @@ impl<'a> Cur<'a> {
             .collect())
     }
 
+    /// Read `n` f32s straight into their final shared allocation: the
+    /// chunk iterator is exact-size, so collecting into `Arc<[f32]>`
+    /// allocates the Arc storage once and writes every element in place —
+    /// no staging `Vec`, no Vec→Arc re-copy. With this, a decoded row
+    /// reaching the client cache costs exactly one payload copy (frame
+    /// buffer → Arc). The byte bound is still checked before any
+    /// allocation, as in [`Cur::f32s`].
+    fn f32s_arc(&mut self, n: usize) -> Result<Arc<[f32]>> {
+        let bytes = self.take(n.checked_mul(4).context("payload length overflow")?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
     fn node(&mut self) -> Result<NodeId> {
         let kind = self.u8()?;
         let id = self.u32()? as usize;
@@ -737,10 +848,11 @@ fn decode_placement_delta(c: &mut Cur) -> Result<PlacementDelta> {
 
 fn decode_push_rows(c: &mut Cur) -> Result<Vec<PushRow>> {
     let n = c.u32()? as usize;
-    // Each row needs >= 24 header bytes: bound the count (and hence the
-    // Vec preallocation) by what the frame can actually hold.
+    // Each row needs >= 25 header bytes (key 12 + fresh 8 + tag 1 + the
+    // smaller arm's 4-byte length): bound the count (and hence the Vec
+    // preallocation) by what the frame can actually hold.
     ensure!(
-        n <= c.rem() / 24,
+        n <= c.rem() / 25,
         "push wave claims {n} rows but only {} bytes remain",
         c.rem()
     );
@@ -748,12 +860,39 @@ fn decode_push_rows(c: &mut Cur) -> Result<Vec<PushRow>> {
     for i in 0..n {
         let key = c.key().with_context(|| format!("push row {i}"))?;
         let fresh = c.i64()?;
-        let len = c.u32()? as usize;
-        let data: Arc<[f32]> = c
-            .f32s(len)
-            .with_context(|| format!("push row {i} payload"))?
-            .into();
-        rows.push(PushRow { key, data, fresh });
+        let payload = match c.u8().with_context(|| format!("push row {i} payload tag"))? {
+            PAYLOAD_SNAPSHOT => {
+                let len = c.u32()? as usize;
+                PushPayload::Snapshot(
+                    c.f32s_arc(len)
+                        .with_context(|| format!("push row {i} payload"))?,
+                )
+            }
+            PAYLOAD_DELTAS => {
+                let base = c.i64()?;
+                let m = c.u32()? as usize;
+                // Each delta needs >= 5 bytes (repr 1 + len 4): bound the
+                // chain length by the bytes present before preallocating.
+                ensure!(
+                    m <= c.rem() / 5,
+                    "push row {i} claims {m} deltas but only {} bytes remain",
+                    c.rem()
+                );
+                let mut deltas = Vec::with_capacity(m);
+                for j in 0..m {
+                    deltas.push(
+                        c.row_delta()
+                            .with_context(|| format!("push row {i} delta {j}"))?,
+                    );
+                }
+                PushPayload::Deltas {
+                    base,
+                    deltas: deltas.into(),
+                }
+            }
+            t => bail!("push row {i}: bad payload tag {t}"),
+        };
+        rows.push(PushRow { key, payload, fresh });
     }
     Ok(rows)
 }
@@ -859,8 +998,13 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
             let vclock = c.i64()?;
             let fresh = c.i64()?;
             let exists = c.bool()?;
-            let len = c.u32()? as usize;
-            let data: Arc<[f32]> = c.f32s(len).context("handoff payload")?.into();
+            // The row snapshot travels as a keyless hybrid delta (wire
+            // v7). Sparse payloads expand by *placing* pairs into a zero
+            // fill (`to_dense`), so every bit pattern survives.
+            let data: Arc<[f32]> = match c.row_delta().context("handoff payload")? {
+                RowDelta::Dense(v) => v.into(),
+                sparse => sparse.to_dense().into(),
+            };
             let n_staged = c.u32()? as usize;
             // Minimum staged entry: clock 8 + worker 4 + repr 1 + len 4.
             ensure!(
@@ -902,7 +1046,7 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
             let len = c.u32()? as usize;
             Packet::ToWorker(ToWorker::Row {
                 key,
-                data: c.f32s(len).context("row payload")?.into(),
+                data: c.f32s_arc(len).context("row payload")?,
                 vclock,
                 fresh,
             })
@@ -1134,16 +1278,20 @@ mod tests {
     #[test]
     fn frame_len_is_exact_for_every_variant() {
         let rows = vec![
-            PushRow {
-                key: (1, 2),
-                data: vec![1.0f32, 2.0, 3.0].into(),
-                fresh: 7,
-            },
-            PushRow {
-                key: (1, 3),
-                data: Vec::<f32>::new().into(),
-                fresh: -1,
-            },
+            PushRow::snapshot((1, 2), vec![1.0f32, 2.0, 3.0].into(), 7),
+            PushRow::snapshot((1, 3), Vec::<f32>::new().into(), -1),
+            PushRow::deltas(
+                (1, 4),
+                5,
+                vec![
+                    RowDelta::Dense(vec![0.25, -0.5]),
+                    RowDelta::sparse(4096, vec![(0, 1.5), (17, -0.25)]),
+                    RowDelta::sparse(8, vec![]),
+                ]
+                .into(),
+                9,
+            ),
+            PushRow::deltas((1, 5), -1, Vec::new().into(), -1),
         ];
         let msgs: Vec<Packet> = vec![
             Packet::ToShard(ToShard::Get {
@@ -1200,6 +1348,23 @@ mod tests {
                     (6, 0, RowDelta::Dense(vec![0.5, 0.5])),
                     (7, 2, RowDelta::sparse(64, vec![(3, 1.0), (9, -1.0)])),
                 ],
+            }),
+            Packet::ToShard(ToShard::RowHandoff {
+                // Mostly-zero wide row: the hybrid snapshot encoder must
+                // pick the sparse arm (and -0.0 must survive as an
+                // explicit pair — to_bits() != 0).
+                epoch: 2,
+                key: (2, 9),
+                vclock: 8,
+                fresh: 9,
+                exists: true,
+                data: {
+                    let mut v = vec![0.0f32; 1024];
+                    v[3] = 1.5;
+                    v[900] = -0.0;
+                    v.into()
+                },
+                staged: vec![],
             }),
             Packet::ToShard(ToShard::RowHandoff {
                 epoch: 3,

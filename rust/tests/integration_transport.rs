@@ -7,6 +7,10 @@
 //!     value-bounded VAP/AVAP, whose enforcement is now wire-distributed
 //!     — produces bit-identical final parameters under `deterministic`
 //!     mode over both `sim` and `tcp`;
+//!   * the wire-v7 delta-wave A/B: for every model, over both planes, a
+//!     run whose eager waves ship delta chains matches the same run with
+//!     `snapshot_waves` forcing full snapshots bit-for-bit — with and
+//!     without a mid-run migration (RowHandoff chain resets included);
 //!   * a genuine multi-process cluster (OS processes spawned via the
 //!     `serve-shard` / `run-worker` / `run-cluster` subcommands) runs
 //!     logreg to completion under BSP, SSP, ESSP, VAP and AVAP, and the
@@ -23,7 +27,7 @@ use essptable::apps::logreg::{run_logreg, LogRegConfig, W_TABLE};
 use essptable::ps::checkpoint;
 use essptable::ps::client::PsClient;
 use essptable::ps::consistency::Consistency;
-use essptable::ps::server::{Cluster, ClusterConfig, MigrationSpec, PsApp, TableSpec};
+use essptable::ps::server::{Cluster, ClusterConfig, MigrationSpec, PsApp, RunReport, TableSpec};
 use essptable::ps::types::{Clock, Key};
 use essptable::transport::TransportSel;
 
@@ -87,11 +91,14 @@ fn tcp_loopback_matches_simnet_bit_exact_under_bsp() {
 /// the matrix also proves the sparse delta path — pair coalescing, the
 /// wire-v3 sparse row arm, sparse apply, sparse staged previews, and
 /// sparse-part norm reports under VAP/AVAP — is bit-deterministic across
-/// both transports.
+/// both transports. A third row, written only by worker 0 and read by
+/// everyone else, gives ESSP's wire-v7 delta chains pure readers to ship
+/// to; `snapshot_waves` is the A/B control forcing full-snapshot waves.
 fn fractional_counter_run(
     transport: TransportSel,
     consistency: Consistency,
-) -> HashMap<Key, Vec<f32>> {
+    snapshot_waves: bool,
+) -> RunReport {
     let workers = 3;
     let mut cluster = Cluster::new(ClusterConfig {
         workers,
@@ -99,10 +106,12 @@ fn fractional_counter_run(
         consistency,
         transport,
         deterministic: true,
+        snapshot_waves,
         ..Default::default()
     });
     cluster.add_table(TableSpec::zeros(0, 4, 1));
     cluster.add_table(TableSpec::zeros(1, 2, 64));
+    cluster.add_table(TableSpec::zeros(2, 2, 8));
     let apps: Vec<Box<dyn PsApp>> = (0..workers)
         .map(|w| {
             Box::new(move |ps: &mut PsClient, _c: Clock| {
@@ -113,11 +122,15 @@ fn fractional_counter_run(
                     (1, 0),
                     &[(w, 0.1 * (w + 1) as f32), (17 + w, 0.01)],
                 );
+                let _ = ps.get((2, 0));
+                if w == 0 {
+                    ps.inc_sparse((2, 0), &[(0, 0.5), (3, 0.25)]);
+                }
                 None
             }) as Box<dyn PsApp>
         })
         .collect();
-    cluster.run(apps, 6).table_rows
+    cluster.run(apps, 6)
 }
 
 #[test]
@@ -138,8 +151,8 @@ fn transport_matrix_every_model_deterministic_bit_identical() {
     ];
     for consistency in models {
         let label = consistency.label();
-        let sim = fractional_counter_run(TransportSel::Sim, consistency);
-        let tcp = fractional_counter_run(TransportSel::Tcp, consistency);
+        let sim = fractional_counter_run(TransportSel::Sim, consistency, false).table_rows;
+        let tcp = fractional_counter_run(TransportSel::Tcp, consistency, false).table_rows;
         assert_bit_identical(&label, &sim, &tcp);
         // Sanity: all 18 increments of 0.1/0.2/0.3 landed.
         let v = sim[&(0, 0)][0];
@@ -164,6 +177,54 @@ fn transport_matrix_every_model_deterministic_bit_identical() {
             (mass - (3.6 + 0.18)).abs() < 1e-2,
             "{label}: sparse row mass {mass}"
         );
+    }
+}
+
+#[test]
+fn delta_wave_matrix_every_model_bit_identical_to_snapshot_waves() {
+    // The wire-v7 acceptance matrix: for every consistency model, over
+    // both data planes, a run whose eager waves ship delta chains must
+    // land on final parameters bit-identical to the same run with
+    // `snapshot_waves` forcing every wave to a full snapshot. Chains
+    // carry the interval's exact ordered deltas (never coalesced), so the
+    // client fold replays the shard's own float summation order — the two
+    // arms are the same computation expressed in two encodings.
+    let models = [
+        Consistency::Bsp,
+        Consistency::Ssp { s: 2 },
+        Consistency::Essp { s: 2 },
+        Consistency::Async { refresh_every: 1 },
+        Consistency::Vap { v0: 100.0 },
+        Consistency::Avap { v0: 100.0, s: 2 },
+    ];
+    for consistency in models {
+        for transport in [TransportSel::Sim, TransportSel::Tcp] {
+            let label = format!("{} over {}", consistency.label(), transport.label());
+            let delta = fractional_counter_run(transport, consistency, false);
+            let snap = fractional_counter_run(transport, consistency, true);
+            assert_bit_identical(&label, &delta.table_rows, &snap.table_rows);
+            let pushed = |r: &RunReport| -> u64 {
+                r.shard_stats.iter().map(|s| s.rows_pushed_delta).sum()
+            };
+            // In deterministic mode only ESSP's commit waves ship chains
+            // (VAP/AVAP's staged per-update previews stay snapshots); the
+            // other models are controls proving the flag is inert there.
+            if matches!(consistency, Consistency::Essp { .. }) {
+                assert!(
+                    pushed(&delta) > 0,
+                    "{label}: delta arm never shipped a delta chain"
+                );
+            }
+            assert_eq!(
+                pushed(&snap),
+                0,
+                "{label}: snapshot_waves arm shipped delta chains"
+            );
+            // The pure-reader row saw all of worker 0's increments.
+            let row = &delta.table_rows[&(2, 0)];
+            assert!((row[0] - 3.0).abs() < 1e-3, "{label}: row[0] = {}", row[0]);
+            assert!((row[3] - 1.5).abs() < 1e-3, "{label}: row[3] = {}", row[3]);
+        }
     }
 }
 
@@ -238,12 +299,13 @@ fn counter_elastic_run(
     transport: TransportSel,
     consistency: Consistency,
     migrate: bool,
+    snapshot_waves: bool,
 ) -> HashMap<Key, Vec<f32>> {
     let workers = 3;
     let migration = migrate.then(|| MigrationSpec {
         at_clock: 3,
         grow_to: Some(4),
-        moves: vec![((0, 0), 3), ((1, 0), 2)],
+        moves: vec![((0, 0), 3), ((1, 0), 2), ((2, 0), 3)],
     });
     let mut cluster = Cluster::new(ClusterConfig {
         workers,
@@ -253,10 +315,12 @@ fn counter_elastic_run(
         consistency,
         transport,
         deterministic: true,
+        snapshot_waves,
         ..Default::default()
     });
     cluster.add_table(TableSpec::zeros(0, 4, 1));
     cluster.add_table(TableSpec::zeros(1, 2, 64));
+    cluster.add_table(TableSpec::zeros(2, 2, 8));
     let apps: Vec<Box<dyn PsApp>> = (0..workers)
         .map(|w| {
             Box::new(move |ps: &mut PsClient, _c: Clock| {
@@ -264,6 +328,13 @@ fn counter_elastic_run(
                 ps.inc((0, 0), &[0.1 * (w + 1) as f32]);
                 let _ = ps.get((1, 0));
                 ps.inc_sparse((1, 0), &[(w, 0.1 * (w + 1) as f32), (17 + w, 0.01)]);
+                // Pure-reader row for workers 1 and 2: ESSP waves ship it
+                // as wire-v7 delta chains, re-seeded across its mid-run
+                // move to shard 3 (RowHandoff carries the live chain).
+                let _ = ps.get((2, 0));
+                if w == 0 {
+                    ps.inc_sparse((2, 0), &[(0, 0.5), (3, 0.25)]);
+                }
                 None
             }) as Box<dyn PsApp>
         })
@@ -284,12 +355,40 @@ fn migration_matrix_every_model_counter_bit_identical() {
     for consistency in models {
         for transport in [TransportSel::Sim, TransportSel::Tcp] {
             let label = format!("{} over {}", consistency.label(), transport.label());
-            let plain = counter_elastic_run(transport, consistency, false);
-            let migrated = counter_elastic_run(transport, consistency, true);
+            let plain = counter_elastic_run(transport, consistency, false, false);
+            let migrated = counter_elastic_run(transport, consistency, true, false);
             assert_bit_identical(&label, &plain, &migrated);
             // Sanity: the 18 fractional increments all landed.
             let v = migrated[&(0, 0)][0];
             assert!((v - 3.6).abs() < 1e-3, "{label}: expected ~3.6, got {v}");
+        }
+    }
+}
+
+#[test]
+fn delta_wave_migration_matrix_bit_identical_to_snapshot_waves() {
+    // Wire-v7 chains across a mid-run migration: the pure-reader row
+    // (2, 0) moves to shard 3 at clock 3, exercising the RowHandoff
+    // chain-reset rules (departure and arrival both downgrade to a
+    // seeding snapshot, then chains resume on the new owner). The delta
+    // arm must match the forced-snapshot arm to the bit for every model,
+    // over both transports.
+    let models = [
+        Consistency::Bsp,
+        Consistency::Ssp { s: 2 },
+        Consistency::Essp { s: 2 },
+        Consistency::Async { refresh_every: 1 },
+        Consistency::Vap { v0: 100.0 },
+        Consistency::Avap { v0: 100.0, s: 2 },
+    ];
+    for consistency in models {
+        for transport in [TransportSel::Sim, TransportSel::Tcp] {
+            let label = format!("{} over {} migrated", consistency.label(), transport.label());
+            let delta = counter_elastic_run(transport, consistency, true, false);
+            let snap = counter_elastic_run(transport, consistency, true, true);
+            assert_bit_identical(&label, &delta, &snap);
+            let row = &delta[&(2, 0)];
+            assert!((row[0] - 3.0).abs() < 1e-3, "{label}: row[0] = {}", row[0]);
         }
     }
 }

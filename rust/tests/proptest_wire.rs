@@ -7,11 +7,16 @@
 //!   * every proper prefix of a frame fails cleanly (no panic, no bogus
 //!     decode) — the truncation fuzz;
 //!   * garbage kind/node bytes, trailing bytes, and lying payload-length
-//!     fields are rejected before any oversized allocation.
+//!     fields are rejected before any oversized allocation;
+//!   * the wire-v7 hybrid push rows specifically: snapshot and
+//!     delta-chain payloads roundtrip (special float bits included),
+//!     garbage payload/repr tags and lying chain counts are rejected, and
+//!     a lying base vclock decodes verbatim — certifying it is the
+//!     client's job, not the codec's.
 
 use std::sync::Arc;
 
-use essptable::ps::msg::{PushRow, ToShard, ToWorker};
+use essptable::ps::msg::{PushPayload, PushRow, ToShard, ToWorker};
 use essptable::ps::placement::PlacementDelta;
 use essptable::ps::types::{Key, RowDelta};
 use essptable::transport::wire;
@@ -56,12 +61,20 @@ fn gen_delta(rng: &mut Rng) -> RowDelta {
     }
 }
 
+/// Random wire-v7 hybrid push rows: full snapshots mixed with delta
+/// chains (any base, zero or more dense/sparse deltas per chain).
 fn gen_push_rows(rng: &mut Rng) -> Vec<PushRow> {
     (0..rng.usize_below(9))
-        .map(|_| PushRow {
-            key: gen_key(rng),
-            data: gen_arc(rng),
-            fresh: gen_clock(rng),
+        .map(|_| {
+            let key = gen_key(rng);
+            let fresh = gen_clock(rng);
+            if rng.f64() < 0.5 {
+                PushRow::snapshot(key, gen_arc(rng), fresh)
+            } else {
+                let deltas: Arc<[RowDelta]> =
+                    (0..rng.usize_below(5)).map(|_| gen_delta(rng)).collect();
+                PushRow::deltas(key, gen_clock(rng), deltas, fresh)
+            }
         })
         .collect()
 }
@@ -363,6 +376,118 @@ fn lying_row_count_is_bounded_before_allocation() {
     bytes[n_off..n_off + 4].copy_from_slice(&(1u32 << 31).to_le_bytes());
     let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
     assert!(format!("{err:#}").contains("claims"), "{err:#}");
+}
+
+/// Offset of a Push frame's first row, after the row count. Layout after
+/// the kind byte (offset 15): shard u32 | vclock i64 | nrows u32 | rows.
+/// Each wire-v7 row: key (u32+u64) | fresh i64 | payload tag u8 | body;
+/// a delta-chain body: base i64 | m u32 | m keyless repr-tagged deltas.
+const PUSH_ROW0: usize = 15 + 4 + 8 + 4;
+
+fn encoded_delta_push(deltas: Vec<RowDelta>) -> Vec<u8> {
+    encode(&Packet::ToWorker(ToWorker::Push {
+        shard: 1,
+        vclock: 5,
+        rows: vec![PushRow::deltas((0, 0), 3, deltas.into(), 4)],
+    }))
+}
+
+#[test]
+fn garbage_push_payload_tag_is_rejected() {
+    let mut bytes = encoded_delta_push(vec![RowDelta::Dense(vec![1.0])]);
+    bytes[PUSH_ROW0 + 20] = 9;
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("bad payload tag"), "{err:#}");
+}
+
+#[test]
+fn lying_delta_chain_count_is_bounded_before_allocation() {
+    // A chain claiming 2^31 deltas in a tiny body must fail on the
+    // remaining-bytes bound, never attempt the allocation.
+    let mut bytes = encoded_delta_push(vec![]);
+    let m_off = PUSH_ROW0 + 21 + 8;
+    bytes[m_off..m_off + 4].copy_from_slice(&(1u32 << 31).to_le_bytes());
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("claims"), "{err:#}");
+}
+
+#[test]
+fn garbage_delta_repr_byte_in_a_chain_is_rejected() {
+    // Chain deltas reuse the update-row hybrid codec; a garbage repr tag
+    // inside a chain is stream corruption like anywhere else.
+    let mut bytes = encoded_delta_push(vec![RowDelta::Dense(vec![1.0])]);
+    bytes[PUSH_ROW0 + 21 + 12] = 9;
+    let err = wire::read_frame(&mut &bytes[..], &mut Vec::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("representation"), "{err:#}");
+}
+
+#[test]
+fn lying_base_vclock_is_decoded_verbatim_for_the_client_to_judge() {
+    // The chain base is a claim, not a checksum: any i64 decodes cleanly
+    // and arrives verbatim — certification (discard + re-pull on a cached
+    // copy that is not exactly at `base`) is the client fold's job, so a
+    // lying base must never corrupt the stream or kill the connection.
+    let mut bytes = encoded_delta_push(vec![RowDelta::sparse(8, vec![(2, 1.5)])]);
+    let base_off = PUSH_ROW0 + 21;
+    bytes[base_off..base_off + 8].copy_from_slice(&(-12345i64).to_le_bytes());
+    let (_, _, back) = wire::read_frame(&mut &bytes[..], &mut Vec::new())
+        .unwrap()
+        .unwrap();
+    match back {
+        Packet::ToWorker(ToWorker::Push { rows, .. }) => match &rows[0].payload {
+            PushPayload::Deltas { base, deltas } => {
+                assert_eq!(*base, -12345, "patched base must arrive verbatim");
+                assert_eq!(deltas.len(), 1);
+            }
+            other => panic!("unexpected payload {other:?}"),
+        },
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn delta_chain_special_float_bits_survive_roundtrip() {
+    // NaN payloads, signed zero and denormals ride chain deltas
+    // bit-exactly — the client fold replays the shard's exact arithmetic,
+    // which only holds if the wire never normalizes a float.
+    let specials = vec![
+        f32::NAN,
+        f32::from_bits(0x7FC0_1234), // payloaded NaN
+        -0.0,
+        f32::MIN_POSITIVE / 2.0, // denormal
+        f32::NEG_INFINITY,
+    ];
+    let chain = vec![
+        RowDelta::Dense(specials.clone()),
+        RowDelta::sparse(specials.len(), vec![(0, f32::from_bits(0x8000_0001))]),
+    ];
+    let bytes = encoded_delta_push(chain.clone());
+    let (_, _, back) = wire::read_frame(&mut &bytes[..], &mut Vec::new())
+        .unwrap()
+        .unwrap();
+    match back {
+        Packet::ToWorker(ToWorker::Push { rows, .. }) => match &rows[0].payload {
+            PushPayload::Deltas { deltas, .. } => {
+                assert_eq!(deltas.len(), 2);
+                match (&deltas[0], &chain[0]) {
+                    (RowDelta::Dense(got), RowDelta::Dense(sent)) => {
+                        for (a, b) in sent.iter().zip(got) {
+                            assert_eq!(a.to_bits(), b.to_bits(), "{a} lost its bit pattern");
+                        }
+                    }
+                    other => panic!("representation not preserved: {other:?}"),
+                }
+                match &deltas[1] {
+                    RowDelta::Sparse { pairs, .. } => {
+                        assert_eq!(pairs[0].1.to_bits(), 0x8000_0001);
+                    }
+                    other => panic!("representation not preserved: {other:?}"),
+                }
+            }
+            other => panic!("unexpected payload {other:?}"),
+        },
+        other => panic!("unexpected {other:?}"),
+    }
 }
 
 /// Offset of an Update frame's first row, after the row count. Layout

@@ -15,11 +15,19 @@
 # and e2e_essp3_x4w_telemetry_on, the headline workload with wire-shipped
 # stats polling + event tracing enabled, vs its bare get_into twin.
 #
-# Usage: scripts/bench.sh
+# Usage: scripts/bench.sh [--quick]
+#
+# --quick runs the smoke subset (microbenchmarks + one e2e series): what
+# CI executes to catch panics and gross hot-path regressions without
+# full-bench runtimes. The JSON bookkeeping is identical.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 export ESSPTABLE_BENCH_JSON="$ROOT/BENCH_ps_throughput.json"
+
+if [[ "${1:-}" == "--quick" ]]; then
+  export ESSPTABLE_BENCH_QUICK=1
+fi
 
 cd "$ROOT"
 cargo bench --bench ps_throughput
