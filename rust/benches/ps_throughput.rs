@@ -16,9 +16,11 @@ use std::collections::BTreeMap;
 use essptable::ps::client::PsClient;
 use essptable::ps::consistency::Consistency;
 use essptable::ps::durability::{DurabilityConfig, FsyncPolicy};
+use essptable::ps::failover::FailoverConfig;
 use essptable::ps::server::{Cluster, ClusterConfig, MigrationSpec, PsApp, TableSpec};
 use essptable::ps::types::Clock;
 use essptable::ps::update::UpdateMap;
+use essptable::sim::fault::FaultPlan;
 use essptable::sim::net::NetConfig;
 use essptable::transport::TransportSel;
 use essptable::util::benchkit::bench;
@@ -428,6 +430,64 @@ fn bench_telemetry_overhead(out: &mut Vec<Entry>) {
     ));
 }
 
+/// Self-healing failover end-to-end: the headline ESSP workload with a
+/// replicated table losing primary 0 at mid-run — the detector confirms
+/// the death, promotes the replica, workers repoint mid-flight, and a
+/// fresh spare is caught up behind the attach fence (`re_replicate`).
+/// Comparable to `e2e_essp3_x4w_get_into`: the delta is what one full
+/// detect→promote→repoint→re-replicate cycle costs a 200-clock run.
+/// The measured detection window (victim's last proof of life to
+/// promotion) is printed alongside.
+fn bench_failover_recovery(out: &mut Vec<Entry>) {
+    let workers = 4;
+    let clocks = 200u64;
+    let label = "e2e essp:3 x4w failover-recovery: kill s0@100, 64 rd+inc/clock, 200 clocks";
+    let mut windows: Vec<u64> = Vec::new();
+    let r = bench(label, 1, 3, || {
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers,
+            shards: 2,
+            replicas: 1,
+            consistency: Consistency::Essp { s: 3 },
+            net: NetConfig::instant(),
+            faults: FaultPlan::parse("kill=s0@100").unwrap(),
+            failover: FailoverConfig {
+                re_replicate: true,
+                ..FailoverConfig::default()
+            },
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 256, 32));
+        let apps: Vec<Box<dyn PsApp>> = (0..workers)
+            .map(|w| {
+                let mut buf: Vec<f32> = Vec::new();
+                Box::new(move |ps: &mut PsClient, _c: Clock| {
+                    for i in 0..64u64 {
+                        let key = (0, (w as u64 * 64 + i) % 256);
+                        ps.get_into(key, &mut buf);
+                        ps.inc(key, &[0.001f32; 32]);
+                    }
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let rep = cluster.run(apps, clocks);
+        if let Some(ms) = rep.failover_ms {
+            windows.push(ms);
+        }
+    });
+    let ops = (workers as u64 * 64 * clocks) as f64;
+    r.print_throughput(ops, "get+inc");
+    if let Some(&ms) = windows.iter().max() {
+        println!("    detection->promotion window: <= {ms} ms");
+    }
+    out.push((
+        "e2e_essp3_x4w_failover_recovery".into(),
+        r.mean.as_secs_f64(),
+        r.throughput(ops),
+    ));
+}
+
 /// Push (ESSP) vs pull (SSP) refresh traffic for the same workload:
 /// message counts + bytes (the batching claim).
 fn bench_push_vs_pull_traffic() {
@@ -632,6 +692,8 @@ fn main() {
     bench_wal_overhead(FsyncPolicy::Commit, "commit", &mut entries);
     // Observability: wire-shipped stats + tracing vs the bare series.
     bench_telemetry_overhead(&mut entries);
+    // Self-healing failover: one detect->promote->repoint cycle mid-run.
+    bench_failover_recovery(&mut entries);
     bench_push_vs_pull_traffic();
     write_json(&entries);
 }

@@ -19,6 +19,7 @@ use crate::apps::mf::MfConfig;
 use crate::metrics::convergence::Sample;
 use crate::metrics::export;
 use crate::ps::consistency::Consistency;
+use crate::ps::failover::FailoverConfig;
 use crate::ps::server::{ClusterConfig, RunReport};
 use crate::sim::net::NetConfig;
 use crate::sim::straggler::StragglerModel;
@@ -46,6 +47,14 @@ pub struct ExpOpts {
     /// Replica shards per primary (0 = none): hot-read fan-out for the
     /// pull-admission models (see ClusterConfig::replicas).
     pub replicas: usize,
+    /// Failure-detector tuning for runs that inject shard deaths
+    /// (`--heartbeat-every` / `--suspect-after` / `--re-replicate`).
+    pub failover: FailoverConfig,
+    /// Idle spare nodes provisioned for re-replication targets.
+    pub spare_nodes: usize,
+    /// Client resend window (clocks of buffered deltas replayed into a
+    /// WAL-recovered spare after an unreplicated primary death).
+    pub resend_window: i64,
 }
 
 impl Default for ExpOpts {
@@ -61,6 +70,9 @@ impl Default for ExpOpts {
             transport: TransportSel::Sim,
             virtual_clock_ms: 25,
             replicas: 0,
+            failover: FailoverConfig::default(),
+            spare_nodes: 0,
+            resend_window: 0,
         }
     }
 }
@@ -87,6 +99,9 @@ impl ExpOpts {
             transport: self.transport,
             deterministic: false,
             seed: self.seed,
+            failover: self.failover.clone(),
+            spare_nodes: self.spare_nodes,
+            resend_window: self.resend_window,
             ..ClusterConfig::default()
         }
     }

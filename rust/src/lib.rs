@@ -57,6 +57,7 @@ pub mod ps {
     pub mod client;
     pub mod consistency;
     pub mod durability;
+    pub mod failover;
     pub mod kernels;
     pub mod msg;
     pub mod placement;

@@ -23,6 +23,7 @@ use std::collections::HashMap;
 use std::net::ToSocketAddrs;
 use std::path::{Path, PathBuf};
 use std::process::{Command, ExitCode};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -41,6 +42,7 @@ use essptable::ps::checkpoint;
 use essptable::ps::client::{ClientConfig, PsClient};
 use essptable::ps::consistency::Consistency;
 use essptable::ps::durability::{DurabilityConfig, FsyncPolicy};
+use essptable::ps::failover::{Detector, FailoverConfig};
 use essptable::ps::msg::{ToShard, ToWorker};
 use essptable::ps::placement::{plan_shards, PlacementDelta, PlacementMap};
 use essptable::ps::server::{self, PsApp, RunReport, TableSpec};
@@ -109,13 +111,22 @@ const USAGE: &str = "usage: essptable <subcommand> [flags]
                    [--wal-compact-every N]] [--fault-plan SPEC]
                 serve-shard --index I --bind ADDR --shards N --workers N
                   [--dump FILE.ckp] [--replicas R] [--active A]
+                  [--spares N [--replica-of P]]
                   [--migrate-at C --cluster addr,... [--grow-to N]]
                   [--wal DIR [--fsync P] [--wal-compact-every N]]
                   [--fault-plan SPEC --cluster addr,...]
                 run-worker  --index W --cluster host:p,... --workers N
-                  [--replicas R] [--active A] [--migrate-at C [--grow-to N]]
+                  [--replicas R] [--spares N] [--active A]
+                  [--migrate-at C [--grow-to N]] [--resend-window N]
                   [--fault-plan SPEC] [--stats-pull-every N]
                 ps-top --scrape host:p,... [--interval-ms N] [--iters N]
+  failover:     run-cluster with kill faults runs the coordinator's
+                failure detector in the launcher:
+                  [--heartbeat-every MS] [--suspect-after MS] [--missed-k N]
+                  [--re-replicate true [--spares N] [--attach-slack CLOCKS]]
+                  [--failover-deadline MS] [--resend-window N]
+                (kills need --replicas >= 1, or --wal + a spare for
+                 WAL-fallback recovery; see ps::failover docs)
   telemetry:    serve-shard/run-worker: [--metrics-addr ADDR]
                   [--trace-out FILE.jsonl [--trace-debug true]]
                 run-cluster: [--metrics true] [--trace-dir DIR]
@@ -144,7 +155,33 @@ fn opts(args: &Args) -> anyhow::Result<ExpOpts> {
             .map_err(anyhow::Error::msg)?,
         virtual_clock_ms: args.u64("virtual-clock-ms", 25),
         replicas: args.usize("replicas", 0),
+        failover: failover_config(args),
+        spare_nodes: args.usize("spares", 0),
+        resend_window: args.u64("resend-window", 0) as Clock,
     })
+}
+
+/// Parse the failure-detector flags shared by the in-process harness and
+/// `run-cluster`: `--heartbeat-every MS`, `--suspect-after MS`,
+/// `--missed-k N`, `--re-replicate true`, `--attach-slack CLOCKS`, and
+/// `--failover-deadline MS` (0 = unbounded).
+fn failover_config(args: &Args) -> FailoverConfig {
+    let d = FailoverConfig::default();
+    FailoverConfig {
+        heartbeat_every: Duration::from_millis(
+            args.u64("heartbeat-every", d.heartbeat_every.as_millis() as u64),
+        ),
+        suspect_after: Duration::from_millis(
+            args.u64("suspect-after", d.suspect_after.as_millis() as u64),
+        ),
+        missed_k: args.u64("missed-k", d.missed_k as u64) as u32,
+        re_replicate: args.bool("re-replicate", false),
+        attach_slack: args.u64("attach-slack", d.attach_slack as u64) as Clock,
+        deadline: {
+            let ms = args.u64("failover-deadline", 0);
+            (ms > 0).then(|| Duration::from_millis(ms))
+        },
+    }
 }
 
 /// The statically derived migration delta for the cluster subcommands:
@@ -161,6 +198,8 @@ fn migration_delta(args: &Args, at_clock: Clock, shards: usize) -> PlacementDelt
         at_clock,
         grow_active: Some(grow_to as u32),
         promote: None,
+        attach: None,
+        dead: vec![],
         moves: vec![],
     }
 }
@@ -628,6 +667,7 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
     let shards = args.usize("shards", 2);
     let workers = args.usize("workers", 4);
     let replicas = args.usize("replicas", 0);
+    let spares = args.usize("spares", 0);
     let active = args.usize("active", 0);
     let migrate = migrate_at(args)?;
     let bind = args.str("bind", "127.0.0.1:0");
@@ -638,17 +678,31 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
     let active = if active == 0 { shards } else { active };
     let placement = PlacementMap::new(shards, active, replicas);
     let total = placement.total_shards();
+    let total_nodes = total + spares;
     ensure!(
-        index < total,
-        "--index {index} out of range for {total} shard nodes \
-         ({shards} primaries x (1 + {replicas} replicas))"
+        index < total_nodes,
+        "--index {index} out of range for {total_nodes} shard nodes \
+         ({shards} primaries x (1 + {replicas} replicas) + {spares} spares)"
     );
+    // Spare nodes (ids past the provisioned set) start empty and idle;
+    // the coordinator's detector grafts state onto them at failover or
+    // re-replication time. `--replica-of` additionally names the primary
+    // this spare was provisioned to replace (informational — the binding
+    // itself arrives in the coordinator's attach/promote delta).
+    let is_spare = index >= total;
+    let replica_of = args.opt_str("replica-of");
+    if replica_of.is_some() {
+        ensure!(
+            is_spare,
+            "--replica-of marks a spare node: --index must be >= {total}"
+        );
+    }
     let durability = durability_config(args)?;
     let plan = fault_plan(args)?;
     for f in &plan.shards {
         ensure!(
-            f.shard < total,
-            "fault plan targets shard {} but only {total} shard nodes are configured",
+            f.shard < total_nodes,
+            "fault plan targets shard {} but only {total_nodes} shard nodes are configured",
             f.shard
         );
     }
@@ -659,8 +713,9 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         .copied();
     if my_kill.is_some() {
         ensure!(
-            replicas >= 1,
-            "kill faults need --replicas >= 1 (the dead primary's replica is promoted)"
+            replicas >= 1 || (durability.is_some() && spares >= 1),
+            "kill faults need --replicas >= 1 (live replica promotion) or \
+             --wal plus --spares >= 1 (WAL-fallback rebuild on a spare)"
         );
         ensure!(
             migrate.is_none(),
@@ -709,32 +764,40 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
     if let Some(ring) = &telem.ring {
         transport.set_trace(ring.clone());
     }
-    let role = if placement.is_replica(index) {
+    let role = if is_spare {
+        match &replica_of {
+            Some(p) => format!("spare, re-replication target for shard {p}"),
+            None => "spare".to_string(),
+        }
+    } else if placement.is_replica(index) {
         format!("replica of shard {}", placement.primary_of(index))
     } else {
         "primary".to_string()
     };
     println!(
-        "shard {index}/{total} ({role}) listening on {addr} ({workers} workers expected, {})",
+        "shard {index}/{total_nodes} ({role}) listening on {addr} ({workers} workers expected, {})",
         consistency.label()
     );
     // Shard->shard links. Migration handoffs dial every higher-indexed
-    // peer (one connection per unordered pair, carrying both directions);
-    // a kill-targeted primary dials its replica up front so the dying
-    // Promote message has a live link to travel.
-    let peers: Vec<usize> = if migrate.is_some() {
+    // peer (one connection per unordered pair, carrying both directions).
+    // When spare nodes are provisioned, every serving candidate also
+    // dials each spare up front, so a re-replication row cut has a live
+    // link the moment the coordinator arms it (this transport does not
+    // dial mid-run; workers likewise dial spares at launch).
+    let mut peers: Vec<usize> = if migrate.is_some() {
         (index + 1..total).collect()
-    } else if my_kill.is_some() {
-        vec![placement.replica_of(index, 0)]
     } else {
         Vec::new()
     };
+    if !is_spare {
+        peers.extend(total..total_nodes);
+    }
     if !peers.is_empty() {
         let cluster_addrs = args.strs("cluster");
         ensure!(
-            cluster_addrs.len() == total,
-            "serve-shard with --migrate-at or a kill fault needs --cluster \
-             listing all {total} shard addresses (got {})",
+            cluster_addrs.len() == total_nodes,
+            "serve-shard with --migrate-at or spare nodes needs --cluster \
+             listing all {total_nodes} shard addresses (got {})",
             cluster_addrs.len()
         );
         let timeout = Duration::from_secs(args.u64("connect-timeout-s", 30));
@@ -751,8 +814,7 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         }
     }
 
-    let my_primary = placement.primary_of(index);
-    let mut shard = if placement.is_replica(index) {
+    let mut shard = if is_spare || placement.is_replica(index) {
         Shard::replica(
             index,
             workers,
@@ -771,11 +833,16 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
             deterministic,
         )
     };
-    server::init_rows(&app.tables, seed, |key, data| {
-        if placement.shard_of(&key) == my_primary {
-            shard.init_row(key, data);
-        }
-    });
+    // Spares start with no rows: their state arrives via a WAL rebuild
+    // (from-disk catch-up) or a re-replication row cut.
+    if !is_spare {
+        let my_primary = placement.primary_of(index);
+        server::init_rows(&app.tables, seed, |key, data| {
+            if placement.shard_of(&key) == my_primary {
+                shard.init_row(key, data);
+            }
+        });
+    }
     if let Some(dur) = &durability {
         // On-disk paths embed the shard id, so every node of a local
         // cluster may share one --wal directory without collisions.
@@ -789,19 +856,6 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         shard.set_faults(scheduled);
     }
     shard.set_fsync_stall(plan.fsync_stall);
-    if let Some(f) = my_kill {
-        let node = placement.replica_of(index, 0);
-        shard.arm_promotion(
-            node,
-            PlacementDelta {
-                epoch: placement.epoch() + 1,
-                at_clock: f.at_clock,
-                grow_active: None,
-                promote: Some((index as u32, node as u32)),
-                moves: Vec::new(),
-            },
-        );
-    }
     if let Some(ring) = &telem.ring {
         shard.set_trace(ring.clone());
     }
@@ -870,15 +924,13 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         }
     }
     if my_kill.is_some() {
-        // The shard thread died at its kill clock, right after sending the
-        // Promote to its replica: there is no final state to dump here —
-        // the promoted replica is the authoritative copy now (run-cluster
-        // re-targets --dump at it), so this process just winds down.
+        // The shard thread died at its kill clock with no dying act: the
+        // coordinator's failure detector notices the silence (or the dead
+        // inbox) and promotes a replacement, so there is no final state
+        // to dump here — run-cluster re-targets --dump at the promoted
+        // node, and this process just winds down with its workers.
         let _ = handle.join();
-        println!(
-            "shard {index}: killed by fault plan (replica {} promoted)",
-            placement.replica_of(index, 0)
-        );
+        println!("shard {index}: killed by fault plan (coordinator-driven failover)");
         transport.close_send();
         transport.join();
         // The kill is exactly what the trace exists to document.
@@ -913,6 +965,7 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
     let active = args.usize("active", 0);
     let migrate = migrate_at(args)?;
     let consistency = consistency(args, "bsp")?;
+    let spares = args.usize("spares", 0);
     let shard_addrs = args.strs("cluster");
     ensure!(
         !shard_addrs.is_empty(),
@@ -920,10 +973,18 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
     );
     let total = shard_addrs.len();
     ensure!(
-        total % (1 + replicas) == 0,
-        "--cluster lists {total} addresses, not divisible by 1 + --replicas {replicas}"
+        total > spares,
+        "--spares {spares} leaves no serving shard nodes in the {total} --cluster addresses"
     );
-    let shards = total / (1 + replicas);
+    // Trailing addresses are idle spares: dialed at launch like any other
+    // node (so coordinator-driven failover can repoint here mid-run), but
+    // outside the placement geometry until an attach/promote delta lands.
+    let serving = total - spares;
+    ensure!(
+        serving % (1 + replicas) == 0,
+        "--cluster lists {serving} non-spare addresses, not divisible by 1 + --replicas {replicas}"
+    );
+    let shards = serving / (1 + replicas);
     let active = if active == 0 { shards } else { active };
     let placement = PlacementMap::new(shards, active, replicas);
     ensure!(index < workers, "--index {index} out of range for --workers {workers}");
@@ -976,6 +1037,7 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
         read_my_writes: true,
         virtual_clock: None,
         stats_pull_every: args.u64("stats-pull-every", 0) as Clock,
+        resend_window: args.u64("resend-window", 0) as Clock,
     };
     let mut ps = PsClient::new(
         index,
@@ -1084,18 +1146,40 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
     let fault_spec = args.str("fault-plan", "");
     let plan = FaultPlan::parse(&fault_spec).map_err(anyhow::Error::msg)?;
     let killed = plan.killed_shards();
+    // Failure-detector tuning + spare provisioning. `--re-replicate true`
+    // with no explicit `--spares` provisions one spare per planned kill.
+    let failover = failover_config(args);
+    let spares = {
+        let s = args.usize("spares", 0);
+        if s == 0 && failover.re_replicate {
+            killed.len()
+        } else {
+            s
+        }
+    };
+    let total_nodes = total + spares;
     for f in &plan.shards {
         ensure!(
-            f.shard < total,
-            "fault plan targets shard {} but only {total} shard nodes are configured",
+            f.shard < total_nodes,
+            "fault plan targets shard {} but only {total_nodes} shard nodes are configured",
             f.shard
         );
     }
     if !killed.is_empty() {
         ensure!(
-            replicas >= 1,
-            "kill faults need --replicas >= 1 (each dead primary promotes its replica)"
+            replicas >= 1 || (args.opt_str("wal").is_some() && spares >= 1),
+            "kill faults need --replicas >= 1 (live replica promotion) or --wal \
+             plus a spare node (--spares N / --re-replicate true) for \
+             WAL-fallback recovery"
         );
+        if replicas == 0 {
+            ensure!(
+                killed.len() == 1,
+                "WAL-fallback recovery re-targets the dead primary's dump onto \
+                 the promoted spare; with --replicas 0 only one kill per run \
+                 is supported"
+            );
+        }
         ensure!(
             migrate.is_none(),
             "kill faults cannot combine with --migrate-at: both planes advance \
@@ -1149,12 +1233,13 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
     let addrs = {
         let given = args.strs("cluster");
         if given.is_empty() {
-            pick_local_ports(total)?
+            pick_local_ports(total_nodes)?
         } else {
             ensure!(
-                given.len() == total,
-                "--cluster lists {} addresses but {total} shard nodes are \
-                 configured ({shards} primaries x (1 + {replicas} replicas))",
+                given.len() == total_nodes,
+                "--cluster lists {} addresses but {total_nodes} shard nodes are \
+                 configured ({shards} primaries x (1 + {replicas} replicas) + \
+                 {spares} spares)",
                 given.len()
             );
             given
@@ -1177,11 +1262,11 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
     let trace_debug = args.bool("trace-debug", false);
     let stats_pull_every = args.u64("stats-pull-every", if metrics { 4 } else { 0 });
     let metrics_addrs = if metrics {
-        let picked = pick_local_ports(total + workers)?;
-        for (i, a) in picked.iter().take(total).enumerate() {
+        let picked = pick_local_ports(total_nodes + workers)?;
+        for (i, a) in picked.iter().take(total_nodes).enumerate() {
             println!("metrics: shard {i} -> {a}");
         }
-        for (w, a) in picked.iter().skip(total).enumerate() {
+        for (w, a) in picked.iter().skip(total_nodes).enumerate() {
             println!("metrics: worker {w} -> {a}");
         }
         picked
@@ -1242,7 +1327,7 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
         }
     }
     let mut dumps = Vec::new();
-    for i in 0..total {
+    for i in 0..total_nodes {
         let mut sargs: Vec<String> = vec![
             "serve-shard".into(),
             "--index".into(),
@@ -1253,6 +1338,8 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             workers.to_string(),
             "--replicas".into(),
             replicas.to_string(),
+            "--spares".into(),
+            spares.to_string(),
             "--active".into(),
             active.to_string(),
             "--bind".into(),
@@ -1267,13 +1354,20 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             (if deterministic { "true" } else { "false" }).to_string(),
         ];
         // Dump assignments: each surviving primary dumps its own state; a
-        // killed primary's dump is re-targeted at the replica promoted in
-        // its place (replica 0), which writes the same shard_<p>.ckp the
+        // killed primary's dump is re-targeted at the node the detector
+        // will promote in its place — its replica 0 when configured, else
+        // (WAL fallback) the spare the detector pops (LIFO, so the
+        // highest spare id serves the single kill --replicas 0 allows).
+        // Either way the promoted node writes the same shard_<p>.ckp the
         // merge step below expects.
         let dump_owner = if i < shards {
             (!killed.contains(&i)).then_some(i)
-        } else {
+        } else if i < total {
             killed.iter().find(|&&p| shards + p * replicas == i).copied()
+        } else if replicas == 0 && i == total_nodes - 1 {
+            killed.first().copied()
+        } else {
+            None
         };
         if let Some(owner) = dump_owner {
             let dump = out.join(format!("shard_{owner}.ckp"));
@@ -1283,9 +1377,14 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             ]);
             dumps.push(dump);
         }
-        if migrate.is_some() || killed.contains(&i) {
-            // Peer dials (handoff links, the dying Promote) need the full
-            // address list.
+        if i >= total {
+            if let Some(&p) = killed.get(i - total) {
+                sargs.extend(["--replica-of".into(), p.to_string()]);
+            }
+        }
+        if migrate.is_some() || spares > 0 {
+            // Peer dials (handoff links, re-replication row cuts) need
+            // the full address list.
             sargs.extend(["--cluster".into(), cluster_list.clone()]);
         }
         if migrate.is_some() {
@@ -1318,6 +1417,13 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
         };
         children.push(("shard", i, child));
     }
+    // WAL-fallback promotion lands on a spare with a possibly un-fsynced
+    // tail gap; workers close it by re-sending their recent flushes, so
+    // the resend window defaults on for that shape.
+    let resend_window = args.u64(
+        "resend-window",
+        if !killed.is_empty() && replicas == 0 { 16 } else { 0 },
+    );
     for w in 0..workers {
         let mut wargs: Vec<String> = vec![
             "run-worker".into(),
@@ -1327,6 +1433,8 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             workers.to_string(),
             "--replicas".into(),
             replicas.to_string(),
+            "--spares".into(),
+            spares.to_string(),
             "--active".into(),
             active.to_string(),
             "--cluster".into(),
@@ -1339,6 +1447,9 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             app_name.clone(),
         ];
         wargs.extend(mig_flags.iter().cloned());
+        if resend_window > 0 {
+            wargs.extend(["--resend-window".into(), resend_window.to_string()]);
+        }
         if !fault_spec.is_empty() {
             wargs.extend(["--fault-plan".into(), fault_spec.clone()]);
         }
@@ -1372,9 +1483,69 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
         children.push(("worker", w, child));
     }
 
+    // The launcher IS the coordinator: when the run can lose a node
+    // (kill faults) or heal one (spares), it runs the failure-detecting
+    // control loop (`ps::failover::Detector`) over its own TCP endpoint,
+    // dialing every shard node for heartbeats (StatsPull/StatsReport)
+    // and emitting the recovery deltas itself. No process is pre-armed
+    // with the failure schedule — death is observed, not announced.
+    let failover_active = !killed.is_empty() || spares > 0;
+    let mut coordinator = None;
+    if failover_active {
+        let (coord_tx, coord_rx) = channel::<ToWorker>();
+        let (ev_tx, ev_rx) = channel::<PeerEvent>();
+        let coord_net = TcpTransport::endpoint_with_events(
+            vec![(NodeId::Coordinator, LocalSink::Worker(coord_tx))],
+            Some(ev_tx),
+            None,
+        );
+        let timeout = Duration::from_secs(args.u64("connect-timeout-s", 30));
+        for (n, a) in addrs.iter().enumerate() {
+            let sa = match a
+                .to_socket_addrs()
+                .ok()
+                .and_then(|mut it| it.next())
+                .with_context(|| format!("resolving shard {n} address {a:?}"))
+            {
+                Ok(sa) => sa,
+                Err(e) => {
+                    kill_all(&mut children);
+                    return Err(e);
+                }
+            };
+            if let Err(e) = coord_net.dial(NodeId::Coordinator, NodeId::Shard(n), sa, timeout) {
+                kill_all(&mut children);
+                return Err(e.context(format!("coordinator dialing shard {n}")));
+            }
+        }
+        let active_eff = if active == 0 { shards } else { active };
+        let stop = Arc::new(AtomicBool::new(false));
+        let det = Detector::new(
+            failover.clone(),
+            PlacementMap::new(shards, active_eff, replicas),
+            (total..total_nodes).collect(),
+            args.opt_str("wal").is_some(),
+            coord_net.handle(),
+            ev_rx,
+            coord_rx,
+            None,
+            Arc::clone(&stop),
+        );
+        let resolved = det.resolved_handle();
+        let handle = std::thread::Builder::new()
+            .name("coordinator".into())
+            .spawn(move || det.run())
+            .context("spawning coordinator thread")?;
+        coordinator = Some((coord_net, handle, resolved, stop));
+    }
+
     // Poll rather than wait sequentially: when one process fails, the
     // survivors must be killed (they would otherwise block forever on
     // their dead peer) instead of being waited on indefinitely.
+    let fo_deadline = failover
+        .deadline
+        .filter(|_| !killed.is_empty())
+        .map(|d| Instant::now() + d);
     let mut failed = false;
     while !children.is_empty() && !failed {
         let mut still = Vec::new();
@@ -1393,6 +1564,24 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             }
         }
         children = still;
+        // The bounded failover window: a planned kill whose recovery has
+        // not been emitted by the deadline aborts the whole run with a
+        // named error rather than letting stalled workers hang CI.
+        if let (Some(dl), Some((_, _, resolved, _))) = (fo_deadline, coordinator.as_ref()) {
+            if Instant::now() > dl && resolved.load(Ordering::Acquire) < killed.len() {
+                kill_all(&mut children);
+                let (_, handle, resolved, stop) = coordinator.take().unwrap();
+                stop.store(true, Ordering::Release);
+                let _ = handle.join();
+                bail!(
+                    "failover_deadline_exceeded: {} of {} failed shard(s) recovered \
+                     within {:?}; cluster terminated",
+                    resolved.load(Ordering::Acquire),
+                    killed.len(),
+                    failover.deadline.unwrap()
+                );
+            }
+        }
         if !failed && !children.is_empty() {
             std::thread::sleep(Duration::from_millis(50));
         }
@@ -1400,6 +1589,51 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
     if failed {
         kill_all(&mut children);
         bail!("cluster run had failing processes; survivors were terminated");
+    }
+
+    // Harvest the detector. A kill on the run's final clocks may be
+    // confirmed only after the workers finish, so give any planned death
+    // a short drain before stopping — then stop promptly, before the
+    // shard processes' own exits start looking like fresh failures.
+    let failover_report = coordinator.take().map(|(coord_net, handle, resolved, stop)| {
+        let drain = Instant::now() + Duration::from_secs(5);
+        while resolved.load(Ordering::Acquire) < killed.len() && Instant::now() < drain {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop.store(true, Ordering::Release);
+        let report = handle.join().expect("coordinator thread panicked");
+        coord_net.close_send();
+        coord_net.join();
+        report
+    });
+    if let Some(rep) = &failover_report {
+        if !rep.dead.is_empty() {
+            println!(
+                "failover: dead {:?}, promotions {:?}, re-attached {:?}{} \
+                 ({} heartbeats, epoch {})",
+                rep.dead,
+                rep.promotions,
+                rep.attached,
+                rep.failover_ms
+                    .map(|ms| format!(", first window {ms}ms"))
+                    .unwrap_or_default(),
+                rep.heartbeats,
+                rep.final_epoch,
+            );
+        }
+        // End-of-run teardown can race a final heartbeat into a closing
+        // socket; only planned kills count toward the loud verdict.
+        let lost: Vec<usize> = rep
+            .unreplicated
+            .iter()
+            .copied()
+            .filter(|p| killed.contains(p))
+            .collect();
+        ensure!(
+            lost.is_empty(),
+            "failover_unreplicated: partition(s) {lost:?} died with no live \
+             replica and no durable spare; parameter state was lost"
+        );
     }
 
     let mut table_rows: HashMap<Key, Vec<f32>> = HashMap::new();

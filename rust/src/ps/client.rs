@@ -35,7 +35,7 @@ use super::consistency::Consistency;
 use super::msg::{PushPayload, ToShard, ToWorker};
 use super::placement::{PlacementDelta, PlacementMap};
 use super::policy::ClientPolicy;
-use super::types::{Clock, Key, TableId, WorkerId};
+use super::types::{Clock, Key, RowDelta, TableId, WorkerId};
 use super::update::UpdateMap;
 use crate::metrics::staleness::StalenessHist;
 use crate::metrics::timeline::Timeline;
@@ -59,6 +59,15 @@ pub struct ClientConfig {
     /// every live shard node and stashes the replies in its shard-report
     /// mirror (0 = never; out-of-band, see `ps::server` § Observability).
     pub stats_pull_every: Clock,
+    /// Failover replay buffer: keep the last `n` flushed clocks' update
+    /// batches so that, when the coordinator promotes a *fresh spare*
+    /// (WAL-fallback, no live replica survived), this worker can re-send
+    /// its recent tail and close the dead primary's un-fsynced gap. The
+    /// spare's one-shot replay floors drop whatever its disk rebuild
+    /// already contains. 0 disables (no per-flush clone cost); replicated
+    /// or durable clusters should set it to at least the model's
+    /// staleness bound + 1.
+    pub resend_window: Clock,
 }
 
 impl Default for ClientConfig {
@@ -69,6 +78,7 @@ impl Default for ClientConfig {
             read_my_writes: true,
             virtual_clock: None,
             stats_pull_every: 0,
+            resend_window: 0,
         }
     }
 }
@@ -115,6 +125,10 @@ pub struct ClientStats {
     /// bound grants, and the number of reads that blocked at least once.
     pub vap_stall_ns: u64,
     pub vap_stalled_reads: u64,
+    /// Reads caught mid-flight by a failover: their in-flight pull
+    /// targeted the node a promotion just declared dead, so the blocked
+    /// read had to re-fire against the promoted owner.
+    pub failover_stalls: u64,
     /// Tripwire (see `ps::server` § Observability): reads *admitted* with
     /// a guaranteed clock below the model's bound. Provably zero for the
     /// clock-bounded models — the admission loop enforces exactly that
@@ -149,6 +163,8 @@ pub struct ClientMetrics {
     pub read_stall_ns: Counter,
     /// Total wall time blocked on revoked value-bound grants (VAP).
     pub vap_stall_ns: Counter,
+    /// See [`ClientStats::failover_stalls`].
+    pub failover_stall: Counter,
 }
 
 impl ClientMetrics {
@@ -167,6 +183,7 @@ impl ClientMetrics {
             read_latency_ns: LogHist::new(),
             read_stall_ns: Counter::new(),
             vap_stall_ns: Counter::new(),
+            failover_stall: Counter::new(),
         }
     }
 
@@ -184,6 +201,7 @@ impl ClientMetrics {
             ("stats_reports".into(), self.stats_reports.get()),
             ("read_stall_ns".into(), self.read_stall_ns.get()),
             ("vap_stall_ns".into(), self.vap_stall_ns.get()),
+            ("failover_stall".into(), self.failover_stall.get()),
         ];
         self.read_latency_ns.snapshot().entries("read_latency_ns", &mut out);
         out
@@ -285,6 +303,11 @@ pub struct PsClient {
     /// row absent from all waves up to T is certified unchanged through T.
     /// This makes wave processing O(rows in wave) instead of O(cache).
     shard_announced: Vec<Clock>,
+    /// Failover replay buffer (`ClientConfig::resend_window`): the last
+    /// n flushed clocks' per-primary update batches, oldest first, kept
+    /// so a WAL-fallback promotion can be re-fed this worker's recent
+    /// tail (the dead primary's un-fsynced gap).
+    replay: std::collections::VecDeque<(Clock, Vec<Vec<(Key, RowDelta)>>)>,
     /// Reusable overlay buffer for `with_row` (read-my-writes composition
     /// without per-read allocation).
     scratch: Vec<f32>,
@@ -336,6 +359,7 @@ impl PsClient {
             last_refresh: FxHashMap::default(),
             force_primary: FxHashSet::default(),
             shard_announced: vec![super::types::NEVER; total],
+            replay: std::collections::VecDeque::new(),
             scratch: Vec::new(),
             finished: false,
             started,
@@ -397,6 +421,17 @@ impl PsClient {
         self.net.send(
             NodeId::Worker(self.worker),
             NodeId::Shard(self.placement.node_of(shard)),
+            Packet::ToShard(msg),
+        );
+    }
+
+    /// Send to a *physical* node directly. Attached spares live outside
+    /// the logical shard id space, so `send`'s logical routing cannot
+    /// address them.
+    fn send_node(&self, node: usize, msg: ToShard) {
+        self.net.send(
+            NodeId::Worker(self.worker),
+            NodeId::Shard(node),
             Packet::ToShard(msg),
         );
     }
@@ -575,6 +610,19 @@ impl PsClient {
             .iter()
             .map(|k| (*k, self.placement.shard_of(k)))
             .collect();
+        // A promotion onto a node outside the logical shard id space is a
+        // WAL-fallback spare (double failure: no live replica survived).
+        // Its disk rebuild may miss the dead primary's un-fsynced tail;
+        // decide — before the map mutates — whether this worker must
+        // re-feed its replay buffer. A spare that was *attached* already
+        // receives the live duplicated stream and must not get it twice.
+        let wal_fallback = delta.promote.is_some_and(|(p, n)| {
+            (n as usize) >= self.placement.total_shards()
+                && !self
+                    .placement
+                    .attached_of(p as usize)
+                    .contains(&(n as usize))
+        });
         self.placement.apply(&delta);
         for (key, old) in old_owners {
             let now = self.placement.shard_of(&key);
@@ -592,8 +640,19 @@ impl PsClient {
             let primary = primary as usize;
             // The dead primary can never reply: un-track pulls sent to it
             // so blocked reads re-fire (through the send boundary they now
-            // reach the promoted node)...
+            // reach the promoted node). Each cleared pull is a read the
+            // failover caught mid-flight — the `failover_stall` metric.
+            let before = self.pulls_in_flight.len();
             self.pulls_in_flight.retain(|_, target| *target != primary);
+            let stalled = (before - self.pulls_in_flight.len()) as u64;
+            if stalled > 0 {
+                self.stats.failover_stalls += stalled;
+                self.metrics.failover_stall.add(stalled);
+                self.trace_event(
+                    "failover_stall",
+                    format!("{stalled} in-flight pulls re-aimed at promoted partition {primary}"),
+                );
+            }
             // ...clear any revoked value-bound grant the dead node left
             // behind (the promoted node's fresh ledger re-revokes if it
             // must)...
@@ -609,6 +668,70 @@ impl PsClient {
             for key in keys {
                 self.send(
                     primary,
+                    ToShard::Register {
+                        key,
+                        worker: self.worker,
+                    },
+                );
+            }
+            // WAL-fallback: re-feed the replay tail (updates, then ticks,
+            // FIFO-ordered per clock) so the spare closes the un-fsynced
+            // gap; its one-shot replay floors drop what its disk rebuild
+            // already holds.
+            if wal_fallback {
+                let mut resent = 0u64;
+                for (c, batches) in self.replay.iter() {
+                    let rows = &batches[primary];
+                    if !rows.is_empty() {
+                        resent += 1;
+                        self.send(
+                            primary,
+                            ToShard::Update {
+                                worker: self.worker,
+                                clock: *c,
+                                rows: rows.clone(),
+                            },
+                        );
+                    }
+                    self.send(
+                        primary,
+                        ToShard::ClockTick {
+                            worker: self.worker,
+                            clock: *c,
+                        },
+                    );
+                }
+                self.trace_event(
+                    "failover_resend",
+                    format!(
+                        "partition {primary}: replayed {} buffered clocks ({resent} update batches)",
+                        self.replay.len()
+                    ),
+                );
+            }
+        }
+        if let Some((primary, node)) = delta.attach {
+            let primary = primary as usize;
+            let node = node as usize;
+            // A fresh replica joined this partition: register this
+            // worker's keys with it (it has no reader state), so its
+            // pull-serving — and any later promotion's first wave — sees
+            // the same readership as the primary. Updates and ticks are
+            // duplicated to it from this flush on (the attach fence
+            // `at_clock` has passed; see `tick`).
+            self.trace_event(
+                "replica_attach",
+                format!("node {node} joins partition {primary}'s read fan-out"),
+            );
+            let keys: Vec<Key> = self
+                .registered
+                .iter()
+                .filter(|k| self.placement.shard_of(k) == primary)
+                .copied()
+                .collect();
+            for key in keys {
+                self.send_node(
+                    node,
                     ToShard::Register {
                         key,
                         worker: self.worker,
@@ -940,6 +1063,15 @@ impl PsClient {
         // zeros cannot raise a max of absolute values). Reports cover the
         // primaries only: replicas never grant or revoke.
         let report_norms = self.policy.reports_norms();
+        // Failover replay buffer: keep this flush's per-primary batches
+        // for `resend_window` clocks (see `maybe_activate_placement`'s
+        // WAL-fallback path). Cloned before the sends consume them.
+        if self.cfg.resend_window > 0 {
+            self.replay.push_back((self.clock, batches.clone()));
+            while self.replay.len() as Clock > self.cfg.resend_window {
+                self.replay.pop_front();
+            }
+        }
         for (shard, rows) in batches.into_iter().enumerate() {
             if report_norms {
                 let inf_norm = rows
@@ -965,12 +1097,26 @@ impl PsClient {
                     let rep = primaries + shard * replicas + r;
                     // A promoted replica already receives the primary-
                     // addressed copy (the send boundary re-routes it): a
-                    // duplicate here would double-apply every delta.
-                    if rep == self.placement.node_of(shard) {
+                    // duplicate here would double-apply every delta. A
+                    // dead replica can never receive one.
+                    if rep == self.placement.node_of(shard) || self.placement.is_dead(rep) {
                         continue;
                     }
                     self.send(
                         rep,
+                        ToShard::Update {
+                            worker: self.worker,
+                            clock: self.clock,
+                            rows: rows.clone(),
+                        },
+                    );
+                }
+                // Attached spares (re-replication) get the same
+                // duplicated per-worker FIFO stream as configured
+                // replicas, from the attach fence on.
+                for &a in self.placement.attached_of(shard) {
+                    self.send_node(
+                        a,
                         ToShard::Update {
                             worker: self.worker,
                             clock: self.clock,
@@ -997,8 +1143,9 @@ impl PsClient {
         for shard in 0..total {
             // A failed-over primary's node is dead, and its promoted
             // replica commits its OWN tick below — a re-routed second
-            // copy would double-commit the clock there.
-            if self.placement.node_of(shard) != shard {
+            // copy would double-commit the clock there. A dead replica
+            // (detected, not promoted from) can never receive one.
+            if self.placement.node_of(shard) != shard || self.placement.is_dead(shard) {
                 continue;
             }
             self.send(
@@ -1009,13 +1156,27 @@ impl PsClient {
                 },
             );
         }
+        // Attached spares commit the same per-worker tick stream (FIFO
+        // after their duplicated updates above), keeping their table
+        // clocks in lockstep for pull admission and later promotion.
+        for shard in 0..primaries {
+            for &a in self.placement.attached_of(shard) {
+                self.send_node(
+                    a,
+                    ToShard::ClockTick {
+                        worker: self.worker,
+                        clock: self.clock,
+                    },
+                );
+            }
+        }
         self.clock += 1;
         // Telemetry polling (out-of-band): ask every live shard node for
         // its metrics snapshot. Same dead-node skip as the tick loop —
         // a failed-over primary's node can never reply.
         if self.cfg.stats_pull_every > 0 && self.clock % self.cfg.stats_pull_every == 0 {
             for shard in 0..total {
-                if self.placement.node_of(shard) != shard {
+                if self.placement.node_of(shard) != shard || self.placement.is_dead(shard) {
                     continue;
                 }
                 self.send(

@@ -280,6 +280,8 @@ mod tests {
                     at_clock: 5,
                     grow_active: None,
                     promote: Some((1, 4)),
+                    attach: None,
+                    dead: vec![1],
                     moves: vec![],
                 },
             },

@@ -1,0 +1,775 @@
+//! Detection-driven failover: the coordinator's failure detector and
+//! self-healing control loop.
+//!
+//! Earlier revisions of the failover plane pre-armed each doomed primary
+//! with a "dying act" — the kill fault itself emitted the promotion
+//! delta, which only works when the failure schedule is known up front.
+//! This module replaces that with an *observing* coordinator: a
+//! [`Detector`] thread that learns about shard death the way a real
+//! cluster does, and then drives the same recovery machinery the armed
+//! path used.
+//!
+//! # Evidence
+//!
+//! Two independent signals feed the detector:
+//!
+//! * **Heartbeats.** Every `heartbeat_every` the detector polls each
+//!   live shard node with `ToShard::StatsPull { worker:
+//!   COORD_STATS_WORKER }`; the shard replies with a `StatsReport`
+//!   addressed to [`NodeId::Coordinator`]. The reply's arrival is the
+//!   liveness proof; its payload doubles as a telemetry snapshot (the
+//!   detector reads the synthetic `table_clock` entry to plan
+//!   re-replication fences). A node that misses `missed_k` consecutive
+//!   polls *and* has been silent for `suspect_after` becomes
+//!   **suspected**.
+//! * **Peer events.** Both transports surface a dead inbox as
+//!   [`PeerEvent::Disconnected`]`{ clean: false }` — the TCP reader sees
+//!   the socket drop, the SimNet router sees the mpsc receiver hung up.
+//!   An unclean disconnect **confirms** death immediately; a suspected
+//!   node with no event is confirmed once its silence reaches
+//!   `2 * suspect_after` (so a heartbeat-only plane still heals).
+//!
+//! # Recovery (per confirmed death)
+//!
+//! ```text
+//! healthy --> suspected --> dead
+//!                            |-- node served a partition?
+//!                            |     no:  fence-free `dead` delta (clients
+//!                            |          drop it from the read fan-out)
+//!                            |     yes: promote, in preference order:
+//!                            |       1. a live configured replica  -> Promote
+//!                            |       2. a spare + durable WAL      -> ReplicaCatchUp
+//!                            |          (from_disk) then Promote; clients
+//!                            |          re-send their in-window tail
+//!                            |       3. nothing                    -> loud
+//!                            |          `failover_unreplicated` verdict
+//!                            `-- re_replicate && a spare is free?
+//!                                  gate spare (ReplicaCatchUp), announce the
+//!                                  fenced attach delta, arm the serving
+//!                                  node's cut (ReplicaSync)
+//! ```
+//!
+//! Promotion deltas are fence-free (`at_clock: 0`): the replica has been
+//! fed the complete per-worker FIFO stream all along, so the switch is
+//! pure re-addressing. Attach deltas are fenced at `observed table clock
+//! + attach_slack`, aligning the client-side stream duplication with the
+//! serving node's `ReplicaSync` row cut.
+//!
+//! The detector has no direct channel to the workers in a multi-process
+//! cluster, so promotion-less deltas (attach / dead-only) are relayed
+//! through a live serving shard (`ToShard::Promote` with `promote:
+//! None`); promotion deltas reach the workers via the promoted node's
+//! own relay.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::msg::{ToShard, ToWorker, COORD_STATS_WORKER};
+use super::placement::{PlacementDelta, PlacementMap};
+use super::types::Clock;
+use crate::telemetry::trace::TraceRing;
+use crate::transport::{NodeId, Packet, PeerEvent, TransportHandle};
+
+/// Failure-detector tuning. The defaults favor fast in-process tests;
+/// `run-cluster` maps `--heartbeat-every` / `--suspect-after` /
+/// `--re-replicate` / `--failover-deadline` onto these.
+#[derive(Debug, Clone)]
+pub struct FailoverConfig {
+    /// Heartbeat poll period.
+    pub heartbeat_every: Duration,
+    /// Minimum silence before a node missing `missed_k` polls is
+    /// suspected; twice this confirms death without a peer event.
+    pub suspect_after: Duration,
+    /// Consecutive missed heartbeats required for suspicion.
+    pub missed_k: u32,
+    /// After promoting, catch a fresh spare up from the serving node and
+    /// attach it as a replacement replica.
+    pub re_replicate: bool,
+    /// Clocks of headroom between the highest observed table clock and a
+    /// re-replication attach fence. Must exceed the staleness bound plus
+    /// the announce latency (in clocks) or the cut misses flushes.
+    pub attach_slack: Clock,
+    /// Abort budget for the `run-cluster` driver: a confirmed death with
+    /// no recovery path (or a recovery that never completes) past this
+    /// deadline fails the run with a named error. The detector itself
+    /// only records the verdict; enforcement is the driver's.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for FailoverConfig {
+    fn default() -> Self {
+        Self {
+            heartbeat_every: Duration::from_millis(25),
+            suspect_after: Duration::from_millis(150),
+            missed_k: 3,
+            re_replicate: false,
+            attach_slack: 8,
+            deadline: None,
+        }
+    }
+}
+
+/// Liveness state of one shard node, as the detector believes it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Suspected,
+    Dead,
+}
+
+struct NodeState {
+    health: Health,
+    /// Last proof of life (heartbeat reply; detector start initially).
+    last_seen: Instant,
+    /// Consecutive heartbeat polls without a reply.
+    missed: u32,
+}
+
+/// What the detector did, harvested after its thread joins.
+#[derive(Debug, Clone, Default)]
+pub struct FailoverReport {
+    /// Every promotion emitted: (logical primary, new serving node).
+    pub promotions: Vec<(usize, usize)>,
+    /// Every re-replication attach emitted: (logical primary, spare).
+    pub attached: Vec<(usize, usize)>,
+    /// Nodes confirmed dead, in detection order.
+    pub dead: Vec<usize>,
+    /// Primaries that died with no live replica, no usable spare, and no
+    /// durable WAL — the unreplicated-promotion window. A nonzero list
+    /// is a failed run.
+    pub unreplicated: Vec<usize>,
+    /// First failover's window: ms from the victim's last proof of life
+    /// to the promotion being emitted.
+    pub failover_ms: Option<u64>,
+    /// Heartbeat polls sent.
+    pub heartbeats: u64,
+    /// Placement epoch after all emitted deltas.
+    pub final_epoch: u64,
+}
+
+/// The coordinator's failure-detecting control loop. Owns its copy of
+/// the placement map and advances it with every delta it emits; sends
+/// through the transport as [`NodeId::Coordinator`].
+pub struct Detector {
+    cfg: FailoverConfig,
+    placement: PlacementMap,
+    net: TransportHandle,
+    events: Receiver<PeerEvent>,
+    inbox: Receiver<ToWorker>,
+    nodes: Vec<NodeState>,
+    /// Free spare node ids (>= the provisioned total), LIFO.
+    spares: Vec<usize>,
+    /// Whether shard nodes run the durability plane (enables the
+    /// from-disk double-failure fallback).
+    durable: bool,
+    trace: Option<Arc<TraceRing>>,
+    stop: Arc<AtomicBool>,
+    /// Deaths fully *resolved* (promotion emitted, verdict recorded, or
+    /// dead-only delta relayed) — the launcher polls this after the
+    /// workers finish to wait out any in-flight recovery before
+    /// harvesting.
+    resolved: Arc<AtomicUsize>,
+    /// Highest table clock observed in any heartbeat reply.
+    max_clock: Clock,
+    report: FailoverReport,
+}
+
+impl Detector {
+    pub fn new(
+        cfg: FailoverConfig,
+        placement: PlacementMap,
+        spares: Vec<usize>,
+        durable: bool,
+        net: TransportHandle,
+        events: Receiver<PeerEvent>,
+        inbox: Receiver<ToWorker>,
+        trace: Option<Arc<TraceRing>>,
+        stop: Arc<AtomicBool>,
+    ) -> Self {
+        let now = Instant::now();
+        let tracked = placement.total_shards() + spares.len();
+        Self {
+            cfg,
+            placement,
+            net,
+            events,
+            inbox,
+            nodes: (0..tracked)
+                .map(|_| NodeState {
+                    health: Health::Healthy,
+                    last_seen: now,
+                    missed: 0,
+                })
+                .collect(),
+            spares,
+            durable,
+            trace,
+            stop,
+            resolved: Arc::new(AtomicUsize::new(0)),
+            max_clock: 0,
+            report: FailoverReport::default(),
+        }
+    }
+
+    /// Handle the launcher polls to wait for in-flight recoveries: the
+    /// count of confirmed deaths whose recovery action has been emitted.
+    pub fn resolved_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.resolved)
+    }
+
+    fn trace_event(&self, kind: &str, detail: String) {
+        if let Some(t) = &self.trace {
+            t.record("coordinator", self.max_clock, kind, detail);
+        }
+    }
+
+    /// Run until the stop flag is raised; returns what happened.
+    pub fn run(mut self) -> FailoverReport {
+        // First poll fires immediately so short tests get a baseline.
+        let mut last_poll = Instant::now() - self.cfg.heartbeat_every;
+        while !self.stop.load(Ordering::Acquire) {
+            self.drain_events();
+            self.drain_inbox();
+            if last_poll.elapsed() >= self.cfg.heartbeat_every {
+                self.poll();
+                last_poll = Instant::now();
+            }
+            self.check_silence();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.report.final_epoch = self.placement.epoch();
+        self.report
+    }
+
+    fn drain_events(&mut self) {
+        while let Ok(ev) = self.events.try_recv() {
+            match ev {
+                PeerEvent::Disconnected {
+                    node: NodeId::Shard(n),
+                    clean: false,
+                } => self.confirm_dead(n, "peer_down"),
+                // Worker completion and clean teardown are not failures.
+                PeerEvent::Disconnected { .. } | PeerEvent::Connected(_) => {}
+            }
+        }
+    }
+
+    fn drain_inbox(&mut self) {
+        while let Ok(msg) = self.inbox.try_recv() {
+            if let ToWorker::StatsReport { shard, entries } = msg {
+                if let Some(s) = self.nodes.get_mut(shard) {
+                    if s.health != Health::Dead {
+                        s.health = Health::Healthy;
+                        s.last_seen = Instant::now();
+                        s.missed = 0;
+                    }
+                }
+                if let Some(&(_, clk)) =
+                    entries.iter().find(|(name, _)| name == "table_clock")
+                {
+                    self.max_clock = self.max_clock.max(clk as Clock);
+                }
+            }
+        }
+    }
+
+    /// One heartbeat round: charge a miss to every live node, then poll
+    /// it. The reply (drained next iterations) zeroes the counter.
+    fn poll(&mut self) {
+        for n in 0..self.nodes.len() {
+            if self.nodes[n].health == Health::Dead {
+                continue;
+            }
+            self.nodes[n].missed = self.nodes[n].missed.saturating_add(1);
+            self.report.heartbeats += 1;
+            self.net.send(
+                NodeId::Coordinator,
+                NodeId::Shard(n),
+                Packet::ToShard(ToShard::StatsPull {
+                    worker: COORD_STATS_WORKER,
+                }),
+            );
+        }
+    }
+
+    /// Escalate silent nodes: suspect at (`missed_k` misses AND
+    /// `suspect_after` silence); confirm at twice the silence bound if no
+    /// peer event arrived first.
+    fn check_silence(&mut self) {
+        for n in 0..self.nodes.len() {
+            let silent = self.nodes[n].last_seen.elapsed();
+            match self.nodes[n].health {
+                Health::Healthy
+                    if self.nodes[n].missed >= self.cfg.missed_k
+                        && silent >= self.cfg.suspect_after =>
+                {
+                    self.nodes[n].health = Health::Suspected;
+                    self.trace_event(
+                        "failover_suspect",
+                        format!(
+                            "node {n}: {} missed polls, silent {silent:?}",
+                            self.nodes[n].missed
+                        ),
+                    );
+                }
+                Health::Suspected if silent >= 2 * self.cfg.suspect_after => {
+                    self.confirm_dead(n, "heartbeat_timeout");
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// A node is confirmed dead: record it, then fail its partition over
+    /// (if it was serving one) or just drop it from the fan-out.
+    fn confirm_dead(&mut self, node: usize, why: &str) {
+        match self.nodes.get(node) {
+            Some(s) if s.health != Health::Dead => {}
+            _ => return,
+        }
+        let window = self.nodes[node].last_seen.elapsed();
+        self.nodes[node].health = Health::Dead;
+        self.spares.retain(|&s| s != node);
+        self.report.dead.push(node);
+        self.trace_event(
+            "failover_dead",
+            format!("node {node} confirmed dead via {why} after {window:?}"),
+        );
+        // Which logical partition (if any) was this node serving?
+        let served = (0..self.placement.primaries())
+            .find(|&p| self.placement.node_of(p) == node);
+        match served {
+            Some(p) => self.fail_over(p, node, window),
+            None => self.emit_dead_only(node),
+        }
+        self.resolved.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Promote a replacement for logical primary `p`, whose serving node
+    /// `dead_node` just died.
+    fn fail_over(&mut self, p: usize, dead_node: usize, window: Duration) {
+        // Preference 1: a configured replica of p that is still alive.
+        let live_replica = (0..self.placement.replicas_per())
+            .map(|r| self.placement.replica_of(p, r))
+            .find(|&rep| {
+                rep != dead_node
+                    && self
+                        .nodes
+                        .get(rep)
+                        .is_some_and(|s| s.health != Health::Dead)
+            });
+        let target = match live_replica {
+            Some(rep) => rep,
+            None => {
+                // Preference 2: a spare rebuilt from the dead node's WAL.
+                match (self.durable, self.spares.pop()) {
+                    (true, Some(spare)) => {
+                        // Gate + graft before the Promote arrives (FIFO on
+                        // the coordinator->spare link): the spare rebuilds
+                        // the dead node's durable generation, then the
+                        // Promote installs the real policy over live rows.
+                        self.net.send(
+                            NodeId::Coordinator,
+                            NodeId::Shard(spare),
+                            Packet::ToShard(ToShard::ReplicaCatchUp {
+                                epoch: self.placement.epoch() + 1,
+                                at_clock: 0,
+                                source: dead_node as u32,
+                                from_disk: true,
+                            }),
+                        );
+                        spare
+                    }
+                    _ => {
+                        // The unreplicated-promotion window: nothing can
+                        // serve this partition. Record the loud verdict;
+                        // the driver turns it into a nonzero exit.
+                        self.report.unreplicated.push(p);
+                        self.trace_event(
+                            "failover_unreplicated",
+                            format!(
+                                "partition {p}: node {dead_node} died with no live \
+                                 replica and no usable spare (durable={})",
+                                self.durable
+                            ),
+                        );
+                        eprintln!(
+                            "coordinator: partition {p} is DOWN — node {dead_node} \
+                             died unreplicated (no replica, no spare/WAL)"
+                        );
+                        self.emit_dead_only(dead_node);
+                        return;
+                    }
+                }
+            }
+        };
+        let delta = PlacementDelta {
+            epoch: self.placement.epoch() + 1,
+            at_clock: 0,
+            grow_active: None,
+            promote: Some((p as u32, target as u32)),
+            attach: None,
+            dead: vec![dead_node as u32],
+            moves: vec![],
+        };
+        self.placement.apply(&delta);
+        self.trace_event(
+            "failover_promote",
+            format!("partition {p}: node {dead_node} -> node {target} ({window:?} window)"),
+        );
+        self.net.send(
+            NodeId::Coordinator,
+            NodeId::Shard(target),
+            Packet::ToShard(ToShard::Promote { delta }),
+        );
+        self.report
+            .failover_ms
+            .get_or_insert(window.as_millis() as u64);
+        self.report.promotions.push((p, target));
+        if self.cfg.re_replicate {
+            self.re_replicate(p);
+        }
+    }
+
+    /// Record a death that moved no partition (a replica or idle spare):
+    /// a fence-free dead-only delta so clients drop the node from the
+    /// read fan-out and stop duplicating updates to it.
+    fn emit_dead_only(&mut self, node: usize) {
+        let delta = PlacementDelta {
+            epoch: self.placement.epoch() + 1,
+            at_clock: 0,
+            grow_active: None,
+            promote: None,
+            attach: None,
+            dead: vec![node as u32],
+            moves: vec![],
+        };
+        self.placement.apply(&delta);
+        self.relay_to_workers(delta);
+    }
+
+    /// Catch a fresh spare up from partition `p`'s serving node and
+    /// attach it as a replacement replica.
+    fn re_replicate(&mut self, p: usize) {
+        let Some(spare) = self.spares.pop() else {
+            self.trace_event(
+                "failover_no_spare",
+                format!("partition {p} stays under-replicated: spare pool empty"),
+            );
+            return;
+        };
+        let serving = self.placement.node_of(p);
+        // The fence must land ahead of every client's next flush: observed
+        // table clock + slack. Clients activate the attach at that flush
+        // boundary, exactly where the serving node cuts its row copy.
+        let at_clock = (self.max_clock + self.cfg.attach_slack).max(1);
+        let delta = PlacementDelta {
+            epoch: self.placement.epoch() + 1,
+            at_clock,
+            grow_active: None,
+            promote: None,
+            attach: Some((p as u32, spare as u32)),
+            dead: vec![],
+            moves: vec![],
+        };
+        self.placement.apply(&delta);
+        self.trace_event(
+            "failover_rereplicate",
+            format!("partition {p}: spare {spare} catching up from node {serving} at clock {at_clock}"),
+        );
+        // Order matters, all on FIFO control links: gate the spare first,
+        // then announce the fenced delta (via the serving relay), then arm
+        // the source cut. The spare's gate must exist before any handoff
+        // or duplicated update can reach it.
+        self.net.send(
+            NodeId::Coordinator,
+            NodeId::Shard(spare),
+            Packet::ToShard(ToShard::ReplicaCatchUp {
+                epoch: delta.epoch,
+                at_clock,
+                source: serving as u32,
+                from_disk: false,
+            }),
+        );
+        self.relay_to_workers(delta.clone());
+        self.net.send(
+            NodeId::Coordinator,
+            NodeId::Shard(serving),
+            Packet::ToShard(ToShard::ReplicaSync {
+                epoch: delta.epoch,
+                at_clock,
+                target: spare as u32,
+            }),
+        );
+        self.report.attached.push((p, spare));
+    }
+
+    /// Ship a promotion-less delta to the workers through a live serving
+    /// shard (`Promote { promote: None }` is a pure relay there).
+    fn relay_to_workers(&mut self, delta: PlacementDelta) {
+        let relay = (0..self.placement.primaries())
+            .map(|p| self.placement.node_of(p))
+            .find(|&n| {
+                self.nodes
+                    .get(n)
+                    .is_some_and(|s| s.health != Health::Dead)
+            });
+        match relay {
+            Some(node) => self.net.send(
+                NodeId::Coordinator,
+                NodeId::Shard(node),
+                Packet::ToShard(ToShard::Promote { delta }),
+            ),
+            None => eprintln!(
+                "coordinator: no live shard left to relay placement epoch {}",
+                delta.epoch
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Mutex;
+    use crate::transport::Transport;
+
+    /// Transport stub capturing every send.
+    struct CaptureNet(Mutex<std::sync::mpsc::Sender<(NodeId, Packet)>>);
+    impl Transport for CaptureNet {
+        fn send(&self, _src: NodeId, dst: NodeId, packet: Packet) {
+            let _ = self.0.lock().unwrap().send((dst, packet));
+        }
+    }
+
+    fn harness(
+        placement: PlacementMap,
+        spares: Vec<usize>,
+        durable: bool,
+        cfg: FailoverConfig,
+    ) -> (
+        Detector,
+        std::sync::mpsc::Sender<PeerEvent>,
+        std::sync::mpsc::Sender<ToWorker>,
+        Receiver<(NodeId, Packet)>,
+        Arc<AtomicBool>,
+    ) {
+        let (ev_tx, ev_rx) = channel();
+        let (in_tx, in_rx) = channel();
+        let (cap_tx, cap_rx) = channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let det = Detector::new(
+            cfg,
+            placement,
+            spares,
+            durable,
+            TransportHandle::new(CaptureNet(Mutex::new(cap_tx))),
+            ev_rx,
+            in_rx,
+            None,
+            Arc::clone(&stop),
+        );
+        (det, ev_tx, in_tx, cap_rx, stop)
+    }
+
+    fn drain(rx: &Receiver<(NodeId, Packet)>) -> Vec<(NodeId, Packet)> {
+        let mut out = Vec::new();
+        while let Ok(x) = rx.try_recv() {
+            out.push(x);
+        }
+        out
+    }
+
+    #[test]
+    fn peer_down_promotes_live_replica() {
+        let placement = PlacementMap::new(2, 2, 1); // nodes 0,1 primaries; 2,3 replicas
+        let (mut det, ev_tx, _in_tx, cap_rx, _stop) =
+            harness(placement, vec![], false, FailoverConfig::default());
+        ev_tx
+            .send(PeerEvent::Disconnected {
+                node: NodeId::Shard(0),
+                clean: false,
+            })
+            .unwrap();
+        det.drain_events();
+        let sent = drain(&cap_rx);
+        let promote = sent
+            .iter()
+            .find_map(|(dst, p)| match p {
+                Packet::ToShard(ToShard::Promote { delta }) => Some((*dst, delta.clone())),
+                _ => None,
+            })
+            .expect("no Promote emitted");
+        assert_eq!(promote.0, NodeId::Shard(2), "must target shard 0's replica");
+        assert_eq!(promote.1.promote, Some((0, 2)));
+        assert_eq!(promote.1.dead, vec![0]);
+        assert!(promote.1.fence_free());
+        assert_eq!(det.report.promotions, vec![(0, 2)]);
+        assert!(det.report.failover_ms.is_some());
+        assert!(det.report.unreplicated.is_empty());
+    }
+
+    #[test]
+    fn double_failure_skips_dead_replica_and_falls_back_to_wal() {
+        // The replica (node 2) dies first, then the primary (node 0):
+        // promotion must NOT target the dead replica; with a durable
+        // spare the coordinator orders a from-disk rebuild instead.
+        let placement = PlacementMap::new(2, 2, 1);
+        let spare = placement.total_shards(); // 4
+        let (mut det, ev_tx, _in_tx, cap_rx, _stop) =
+            harness(placement, vec![spare], true, FailoverConfig::default());
+        for node in [2usize, 0] {
+            ev_tx
+                .send(PeerEvent::Disconnected {
+                    node: NodeId::Shard(node),
+                    clean: false,
+                })
+                .unwrap();
+        }
+        det.drain_events();
+        let sent = drain(&cap_rx);
+        // The spare is gated with a from-disk catch-up BEFORE its Promote.
+        let spare_msgs: Vec<&Packet> = sent
+            .iter()
+            .filter(|(dst, _)| *dst == NodeId::Shard(spare))
+            .map(|(_, p)| p)
+            .collect();
+        assert!(
+            matches!(
+                spare_msgs[0],
+                Packet::ToShard(ToShard::ReplicaCatchUp {
+                    from_disk: true,
+                    source: 0,
+                    ..
+                })
+            ),
+            "first spare message must be the from-disk catch-up, got {spare_msgs:?}"
+        );
+        assert!(matches!(
+            spare_msgs[1],
+            Packet::ToShard(ToShard::Promote { delta })
+                if delta.promote == Some((0, spare as u32))
+        ));
+        // Nothing was ever addressed to the dead replica after its death.
+        assert_eq!(det.report.promotions, vec![(0, spare)]);
+        assert!(det.report.unreplicated.is_empty());
+    }
+
+    #[test]
+    fn unreplicated_death_is_a_loud_verdict() {
+        let placement = PlacementMap::new(2, 2, 0); // no replicas
+        let (mut det, ev_tx, _in_tx, cap_rx, _stop) =
+            harness(placement, vec![], false, FailoverConfig::default());
+        ev_tx
+            .send(PeerEvent::Disconnected {
+                node: NodeId::Shard(1),
+                clean: false,
+            })
+            .unwrap();
+        det.drain_events();
+        assert_eq!(det.report.unreplicated, vec![1]);
+        assert!(det.report.promotions.is_empty());
+        // The death is still recorded for the clients (relayed dead-only
+        // delta through the surviving shard 0).
+        let sent = drain(&cap_rx);
+        assert!(sent.iter().any(|(dst, p)| *dst == NodeId::Shard(0)
+            && matches!(p, Packet::ToShard(ToShard::Promote { delta })
+                if delta.promote.is_none() && delta.dead == vec![1])));
+    }
+
+    #[test]
+    fn heartbeat_silence_escalates_to_promotion() {
+        let placement = PlacementMap::new(1, 1, 1);
+        let cfg = FailoverConfig {
+            heartbeat_every: Duration::from_millis(1),
+            suspect_after: Duration::from_millis(5),
+            missed_k: 2,
+            ..Default::default()
+        };
+        let (mut det, _ev_tx, in_tx, cap_rx, _stop) = harness(placement, vec![], false, cfg);
+        // The replica keeps replying; the primary never does.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut last_poll = Instant::now() - Duration::from_millis(1);
+        while det.report.promotions.is_empty() && Instant::now() < deadline {
+            in_tx
+                .send(ToWorker::StatsReport {
+                    shard: 1,
+                    entries: vec![("table_clock".into(), 3)],
+                })
+                .unwrap();
+            det.drain_inbox();
+            if last_poll.elapsed() >= det.cfg.heartbeat_every {
+                det.poll();
+                last_poll = Instant::now();
+            }
+            det.check_silence();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(det.report.promotions, vec![(0, 1)]);
+        assert_eq!(det.max_clock, 3, "table_clock entry must be harvested");
+        assert!(det.report.heartbeats > 0);
+        let sent = drain(&cap_rx);
+        assert!(sent
+            .iter()
+            .any(|(_, p)| matches!(p, Packet::ToShard(ToShard::StatsPull { worker })
+                if *worker == COORD_STATS_WORKER)));
+    }
+
+    #[test]
+    fn re_replication_orders_gate_announce_cut() {
+        let placement = PlacementMap::new(2, 2, 1);
+        let spare = placement.total_shards();
+        let cfg = FailoverConfig {
+            re_replicate: true,
+            attach_slack: 4,
+            ..Default::default()
+        };
+        let (mut det, ev_tx, in_tx, cap_rx, _stop) =
+            harness(placement, vec![spare], false, cfg);
+        in_tx
+            .send(ToWorker::StatsReport {
+                shard: 1,
+                entries: vec![("table_clock".into(), 10)],
+            })
+            .unwrap();
+        det.drain_inbox();
+        ev_tx
+            .send(PeerEvent::Disconnected {
+                node: NodeId::Shard(0),
+                clean: false,
+            })
+            .unwrap();
+        det.drain_events();
+        let sent = drain(&cap_rx);
+        // Expected order after the Promote: gate the spare, relay the
+        // fenced attach delta, arm the serving node's cut.
+        let idx = |pred: &dyn Fn(&Packet) -> bool| {
+            sent.iter().position(|(_, p)| pred(p)).expect("message missing")
+        };
+        let gate = idx(&|p| {
+            matches!(p, Packet::ToShard(ToShard::ReplicaCatchUp { from_disk: false, .. }))
+        });
+        let announce = idx(&|p| {
+            matches!(p, Packet::ToShard(ToShard::Promote { delta })
+                if delta.attach == Some((0, spare as u32)))
+        });
+        let cut = idx(&|p| {
+            matches!(p, Packet::ToShard(ToShard::ReplicaSync { target, .. })
+                if *target == spare as u32)
+        });
+        assert!(gate < announce && announce < cut, "gate={gate} announce={announce} cut={cut}");
+        // The fence clears the observed clock by the configured slack.
+        let Some((_, Packet::ToShard(ToShard::ReplicaSync { at_clock, .. }))) =
+            sent.iter().find(|(_, p)| matches!(p, Packet::ToShard(ToShard::ReplicaSync { .. })))
+        else {
+            unreachable!()
+        };
+        assert_eq!(*at_clock, 14);
+        assert_eq!(det.report.attached, vec![(0, spare)]);
+        // The spare left the pool.
+        assert!(det.spares.is_empty());
+    }
+}

@@ -80,7 +80,7 @@
 //!     global bound.
 
 use super::types::{Clock, Key};
-use crate::util::hash::FxHashMap;
+use crate::util::hash::{FxHashMap, FxHashSet};
 
 /// Epoch-versioned key -> shard placement. Cheap to clone at migration
 /// planning time; every client and shard holds one and advances it by
@@ -97,9 +97,18 @@ pub struct PlacementMap {
     /// Keys pinned away from their hash home (explicit moves).
     overrides: FxHashMap<Key, usize>,
     /// Failed-over primaries: logical primary -> shard node now serving
-    /// it (a promoted replica). Logical routing (`shard_of`) is unchanged
-    /// by promotion; only the node address (`node_of`) moves.
+    /// it (a promoted replica, or a spare node re-built from the WAL).
+    /// Logical routing (`shard_of`) is unchanged by promotion; only the
+    /// node address (`node_of`) moves.
     promoted: FxHashMap<usize, usize>,
+    /// Re-replication: logical primary -> extra replica nodes attached at
+    /// runtime (spares caught up from the serving node). Attached nodes
+    /// receive the same duplicated per-worker FIFO stream as configured
+    /// replicas and join the read fan-out.
+    attached: FxHashMap<usize, Vec<usize>>,
+    /// Nodes the coordinator has declared dead. Dead nodes are excluded
+    /// from the read fan-out and are never valid promotion/attach targets.
+    dead: FxHashSet<usize>,
 }
 
 impl PlacementMap {
@@ -118,6 +127,8 @@ impl PlacementMap {
             replicas_per,
             overrides: FxHashMap::default(),
             promoted: FxHashMap::default(),
+            attached: FxHashMap::default(),
+            dead: FxHashSet::default(),
         }
     }
 
@@ -189,6 +200,23 @@ impl PlacementMap {
         !self.promoted.is_empty()
     }
 
+    /// Every failover on record: (logical primary, serving node).
+    pub fn promotions(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.promoted.iter().map(|(&p, &n)| (p, n))
+    }
+
+    /// Runtime-attached replica nodes of logical primary `p` (empty for a
+    /// primary that never lost a replica).
+    pub fn attached_of(&self, primary: usize) -> &[usize] {
+        self.attached.get(&primary).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Has the coordinator declared `node` dead?
+    #[inline]
+    pub fn is_dead(&self, node: usize) -> bool {
+        self.dead.contains(&node)
+    }
+
     /// Shard id of replica `r` of primary `p`.
     #[inline]
     pub fn replica_of(&self, primary: usize, r: usize) -> usize {
@@ -211,18 +239,30 @@ impl PlacementMap {
         shard >= self.primaries
     }
 
-    /// Read target for `key` under fan-out: `pick % (1 + replicas_per)`
-    /// selects the primary (0) or one of its replicas. With no replicas
-    /// this is `shard_of`.
+    /// Read target for `key` under fan-out: `pick` selects round-robin
+    /// over the primary, its configured replicas, and any runtime-attached
+    /// replicas. A configured replica the coordinator has declared dead
+    /// falls back to the owner (whose address `node_of` redirects if the
+    /// owner itself failed over). With no replicas this is `shard_of`.
     #[inline]
     pub fn read_target(&self, key: &Key, pick: u64) -> usize {
         let owner = self.shard_of(key);
-        if self.replicas_per == 0 {
+        let extra = self.attached_of(owner);
+        let total = 1 + self.replicas_per + extra.len();
+        if total == 1 {
             return owner;
         }
-        match (pick % (self.replicas_per as u64 + 1)) as usize {
+        match (pick % total as u64) as usize {
             0 => owner,
-            r => self.replica_of(owner, r - 1),
+            r if r <= self.replicas_per => {
+                let rep = self.replica_of(owner, r - 1);
+                if self.dead.contains(&rep) {
+                    owner
+                } else {
+                    rep
+                }
+            }
+            r => extra[r - 1 - self.replicas_per],
         }
     }
 
@@ -263,14 +303,51 @@ impl PlacementMap {
             );
             self.overrides.insert(key, dst);
         }
+        for &node in &delta.dead {
+            let node = node as usize;
+            self.dead.insert(node);
+            // A dead node stops serving attached reads immediately.
+            for nodes in self.attached.values_mut() {
+                nodes.retain(|&n| n != node);
+            }
+        }
         if let Some((primary, node)) = delta.promote {
             let (primary, node) = (primary as usize, node as usize);
             assert!(
-                self.is_replica(node) && self.primary_of(node) == primary,
+                !self.dead.contains(&node),
+                "promotion of shard {primary} targets node {node}, which is dead"
+            );
+            // A configured node must be one of the primary's own replicas;
+            // ids past the provisioned set are spares (WAL crash-recovery
+            // fallback) and carry no chain constraint.
+            assert!(
+                node >= self.total_shards()
+                    || (self.is_replica(node) && self.primary_of(node) == primary),
                 "promotion of shard {primary} targets node {node}, which is not \
                  one of its replicas"
             );
             self.promoted.insert(primary, node);
+        }
+        if let Some((primary, node)) = delta.attach {
+            let (primary, node) = (primary as usize, node as usize);
+            assert!(
+                primary < self.primaries,
+                "attach names logical primary {primary}, but only {} exist",
+                self.primaries
+            );
+            assert!(
+                !self.dead.contains(&node),
+                "attach of node {node} to shard {primary}: node is dead"
+            );
+            assert_ne!(
+                node,
+                self.node_of(primary),
+                "attach of node {node} to shard {primary}: node already serves it"
+            );
+            let nodes = self.attached.entry(primary).or_default();
+            if !nodes.contains(&node) {
+                nodes.push(node);
+            }
         }
         self.epoch = delta.epoch;
     }
@@ -289,10 +366,18 @@ pub struct PlacementDelta {
     pub at_clock: Clock,
     /// Grow the hash-active primary set to this count (divisible growth).
     pub grow_active: Option<u32>,
-    /// Fail logical primary `.0` over to its replica node `.1`: all
-    /// traffic for that primary re-addresses to the node, logical routing
-    /// unchanged.
+    /// Fail logical primary `.0` over to node `.1` (one of its replicas,
+    /// or a spare node past the provisioned set): all traffic for that
+    /// primary re-addresses to the node, logical routing unchanged.
     pub promote: Option<(u32, u32)>,
+    /// Attach node `.1` as a runtime replica of logical primary `.0`
+    /// (re-replication). Fenced at `at_clock`: clients begin duplicating
+    /// the per-worker FIFO stream to the node exactly at that flush
+    /// boundary, matching the `ReplicaSync` cut the serving node ships.
+    pub attach: Option<(u32, u32)>,
+    /// Nodes the coordinator has confirmed dead (excluded from fan-out
+    /// and from future promote/attach targets).
+    pub dead: Vec<u32>,
     /// Explicit per-key moves (hot-key pinning / forced re-homing).
     pub moves: Vec<(Key, u32)>,
 }
@@ -300,13 +385,21 @@ pub struct PlacementDelta {
 impl PlacementDelta {
     /// True when this delta needs no migration fence: it moves no keys
     /// between logical owners, only re-addresses a dead primary to its
-    /// replica. Such a delta activates *immediately* on arrival — waiting
-    /// for a fence clock could deadlock a client blocked reading from the
-    /// dead node — and is safe fence-free because the replica has been fed
-    /// the complete per-worker FIFO update/clock stream all along (there
-    /// is no row state to move, hence nothing to fence).
+    /// replica (and/or records deaths). Such a delta activates
+    /// *immediately* on arrival — waiting for a fence clock could deadlock
+    /// a client blocked reading from the dead node — and is safe
+    /// fence-free because the replica has been fed the complete per-worker
+    /// FIFO update/clock stream all along (there is no row state to move,
+    /// hence nothing to fence). An `attach`, by contrast, is always fenced:
+    /// clients must begin duplicating the update stream to the new replica
+    /// exactly at `at_clock` so the `ReplicaSync` row cut (the serving
+    /// node's fold through `at_clock - 1`) composes with the live stream
+    /// without gaps or double-application.
     pub fn fence_free(&self) -> bool {
-        self.promote.is_some() && self.grow_active.is_none() && self.moves.is_empty()
+        self.moves.is_empty()
+            && self.grow_active.is_none()
+            && self.attach.is_none()
+            && (self.promote.is_some() || !self.dead.is_empty())
     }
 
     /// Could this delta change `key`'s owner relative to `prev`? The
@@ -411,6 +504,8 @@ mod tests {
             at_clock: 5,
             grow_active: Some(4),
             promote: None,
+            attach: None,
+            dead: vec![],
             moves: vec![],
         };
         after.apply(&delta);
@@ -440,6 +535,8 @@ mod tests {
             at_clock: 1,
             grow_active: Some(3),
             promote: None,
+            attach: None,
+            dead: vec![],
             moves: vec![],
         };
         assert!(std::panic::catch_unwind(move || m.apply(&delta)).is_err());
@@ -454,6 +551,8 @@ mod tests {
             at_clock: 3,
             grow_active: None,
             promote: None,
+            attach: None,
+            dead: vec![],
             moves: vec![(key, 3)],
         });
         assert_eq!(m.shard_of(&key), 3);
@@ -463,6 +562,8 @@ mod tests {
             at_clock: 9,
             grow_active: Some(4),
             promote: None,
+            attach: None,
+            dead: vec![],
             moves: vec![],
         });
         assert_eq!(m.shard_of(&key), 3);
@@ -476,6 +577,8 @@ mod tests {
             at_clock: 1,
             grow_active: None,
             promote: None,
+            attach: None,
+            dead: vec![],
             moves: vec![],
         };
         assert!(std::panic::catch_unwind(move || m.apply(&delta)).is_err());
@@ -533,6 +636,8 @@ mod tests {
             at_clock: 0,
             grow_active: None,
             promote: Some((owner as u32, replica as u32)),
+            attach: None,
+            dead: vec![],
             moves: vec![],
         };
         assert!(delta.fence_free());
@@ -555,6 +660,8 @@ mod tests {
             at_clock: 0,
             grow_active: None,
             promote: Some((0, 3)),
+            attach: None,
+            dead: vec![],
             moves: vec![],
         };
         assert!(std::panic::catch_unwind(move || m.apply(&delta)).is_err());
@@ -567,6 +674,8 @@ mod tests {
             at_clock: 0,
             grow_active: None,
             promote: Some((0, 2)),
+            attach: None,
+            dead: vec![],
             moves: vec![],
         };
         assert!(pure.fence_free());
@@ -577,9 +686,127 @@ mod tests {
         assert!(!mixed.fence_free());
         let migration = PlacementDelta {
             promote: None,
-            ..pure
+            ..pure.clone()
         };
         assert!(!migration.fence_free());
+        // Attach is always fenced, even alongside a promote.
+        let attach = PlacementDelta {
+            attach: Some((0, 4)),
+            ..pure.clone()
+        };
+        assert!(!attach.fence_free());
+        // A pure death record activates immediately.
+        let death = PlacementDelta {
+            promote: None,
+            dead: vec![2],
+            ..pure
+        };
+        assert!(death.fence_free());
+    }
+
+    fn delta(epoch: u64) -> PlacementDelta {
+        PlacementDelta {
+            epoch,
+            at_clock: 0,
+            grow_active: None,
+            promote: None,
+            attach: None,
+            dead: vec![],
+            moves: vec![],
+        }
+    }
+
+    #[test]
+    fn dead_replica_falls_back_to_owner_in_fanout() {
+        let mut m = PlacementMap::new(2, 2, 1);
+        let key = (0u32, 5u64);
+        let owner = m.shard_of(&key);
+        let rep = m.replica_of(owner, 0);
+        assert_eq!(m.read_target(&key, 1), rep);
+        m.apply(&PlacementDelta {
+            dead: vec![rep as u32],
+            ..delta(1)
+        });
+        assert!(m.is_dead(rep));
+        // Fan-out degree is unchanged; the dead slot resolves to the owner.
+        assert_eq!(m.read_target(&key, 0), owner);
+        assert_eq!(m.read_target(&key, 1), owner);
+    }
+
+    #[test]
+    fn attach_joins_read_fanout_and_survives_idempotent_reapply() {
+        let mut m = PlacementMap::new(2, 2, 1);
+        let key = (0u32, 5u64);
+        let owner = m.shard_of(&key);
+        let rep = m.replica_of(owner, 0);
+        let spare = m.total_shards(); // first id past the provisioned set
+        m.apply(&PlacementDelta {
+            dead: vec![owner as u32],
+            promote: Some((owner as u32, rep as u32)),
+            ..delta(1)
+        });
+        m.apply(&PlacementDelta {
+            attach: Some((owner as u32, spare as u32)),
+            ..delta(2)
+        });
+        assert_eq!(m.attached_of(owner), &[spare]);
+        // Round-robin now covers owner, configured replica, and the spare.
+        let targets: Vec<usize> = (0..3).map(|p| m.read_target(&key, p)).collect();
+        assert!(targets.contains(&spare));
+        // The other primary's fan-out is untouched by the attach.
+        let other_key = (0u32, (0..100).find(|i| m.shard_of(&(0, *i)) != owner).unwrap());
+        for p in 0..4 {
+            assert_ne!(m.read_target(&other_key, p), spare);
+        }
+        // Re-attaching the same node is idempotent.
+        m.apply(&PlacementDelta {
+            attach: Some((owner as u32, spare as u32)),
+            ..delta(3)
+        });
+        assert_eq!(m.attached_of(owner), &[spare]);
+    }
+
+    #[test]
+    fn spare_promotion_is_allowed_but_dead_target_is_rejected() {
+        let mut m = PlacementMap::new(2, 2, 1);
+        let spare = m.total_shards();
+        // WAL crash-recovery fallback: promote shard 0 to a spare node.
+        m.apply(&PlacementDelta {
+            promote: Some((0, spare as u32)),
+            ..delta(1)
+        });
+        assert_eq!(m.node_of(0), spare);
+        // A node on the dead list can never be a promotion target.
+        let mut m2 = PlacementMap::new(2, 2, 1);
+        m2.apply(&PlacementDelta {
+            dead: vec![2],
+            ..delta(1)
+        });
+        let bad = PlacementDelta {
+            promote: Some((0, 2)),
+            ..delta(2)
+        };
+        assert!(std::panic::catch_unwind(move || m2.apply(&bad)).is_err());
+    }
+
+    #[test]
+    fn death_detaches_a_previously_attached_node() {
+        let mut m = PlacementMap::new(2, 2, 0);
+        let spare = m.total_shards();
+        m.apply(&PlacementDelta {
+            attach: Some((0, spare as u32)),
+            ..delta(1)
+        });
+        assert_eq!(m.attached_of(0), &[spare]);
+        m.apply(&PlacementDelta {
+            dead: vec![spare as u32],
+            ..delta(2)
+        });
+        assert!(m.attached_of(0).is_empty());
+        let key = (0u32, 5u64);
+        for p in 0..4 {
+            assert_ne!(m.read_target(&key, p), spare);
+        }
     }
 
     #[test]
@@ -592,6 +819,8 @@ mod tests {
             at_clock: 4,
             grow_active: Some(4),
             promote: None,
+            attach: None,
+            dead: vec![],
             moves: vec![(forced, 1 - forced_src as u32)], // hop 0<->1: a move growth would not cause
         };
         let keys: Vec<Key> = (0..64u64).map(|i| (0, i)).chain([forced]).collect();

@@ -121,18 +121,40 @@
 //! recovery (recovered rows re-enter VAP certification conservatively —
 //! every row is re-pushed dirty, never silently under-certified).
 //!
-//! **Replica promotion.** A `kill=sI@C` fault makes primary `I` die
-//! permanently at clock `C` *without* dumping. Its dying act is a
-//! pre-armed, fence-free placement delta promoting its first replica:
-//! the replica adopts the dead primary's logical shard id, swaps its
-//! pull-only policy for the model's real server policy, marks every row
-//! dirty (conservative re-certification), and relays the delta to all
-//! workers. Clients re-route the partition at the next inbox drain —
+//! **Self-healing failover.** A `kill=sI@C` fault makes node `I` die
+//! permanently at clock `C` *without* dumping — and without any dying
+//! act. Recovery is driven entirely by the coordinator's failure
+//! detector ([`crate::ps::failover`]), a control loop that subscribes to
+//! the transport's `PeerEvent` stream and heartbeats every node with
+//! `StatsPull` probes. Each node walks the detector's state machine:
+//!
+//! ```text
+//!   healthy --(missed_k polls, suspect_after silent)--> suspected
+//!   suspected --(unclean peer_down | 2x suspect_after)--> dead
+//!   dead, was serving a partition --> promoted:
+//!       a live configured replica (fence-free Promote delta), else a
+//!       spare rebuilt from the dead node's WAL (double-failure path;
+//!       clients re-send their `resend_window` tail), else the loud
+//!       `failover_unreplicated` verdict (the partition is DOWN).
+//!   promoted --(re_replicate && a spare is free)--> re-replicated:
+//!       the spare gates (`ReplicaCatchUp`), clients start duplicating
+//!       the FIFO stream at the fenced attach boundary, the serving
+//!       node cuts its row copy (`ReplicaSync`) at the same clock, and
+//!       the spare joins the read fan-out.
+//! ```
+//!
+//! The promoted node adopts the dead primary's logical shard id, swaps
+//! its pull-only policy for the model's real server policy, marks every
+//! row dirty (conservative re-certification), and relays the delta to
+//! all workers. Clients re-route the partition at the next inbox drain —
 //! updates they duplicated to the replica all along mean the switch
 //! loses nothing — and the promoted node's final dump is authoritative
-//! for the partition. Promotion requires `replicas >= 1` and (for now)
-//! no concurrent migration: both planes advance the placement epoch and
-//! their fences are not ordered against each other.
+//! for the partition. In-flight GETs against the dead node are cleared
+//! and retried by the client (`failover_stall` counts them). Killing a
+//! primary requires a reachable failover target (`replicas >= 1`, or
+//! durability plus a provisioned spare) and no concurrent migration:
+//! both planes advance the placement epoch and their fences are not
+//! ordered against each other.
 //!
 //! # Observability (the `crate::telemetry` live plane)
 //!
@@ -173,10 +195,15 @@
 //! |------|------|---------|
 //! | `placement_announced` / `placement_activate` | worker | epoch held / made live |
 //! | `migrate_begin` / `migrate_handoff` / `migrate_release` | shard | fence armed / rows shipped / held commit released |
-//! | `promotion_sent` / `promotion` | shard | dying act / replica takeover |
+//! | `promotion` / `placement_relay` | shard | replica takeover / delta relayed to workers |
+//! | `replica_sync` / `replica_sync_cut` | shard | re-replication source armed / rows copied |
+//! | `replica_catchup` / `replica_catchup_done` | shard | spare gated (or WAL-grafted) / gate released |
+//! | `failover_suspect` / `failover_dead` | coordinator | detector escalations |
+//! | `failover_promote` / `failover_rereplicate` / `failover_unreplicated` | coordinator | recovery actions |
+//! | `failover_stall` / `failover_resend` / `replica_attach` | worker | cleared GETs / WAL-gap resend / fan-out join |
 //! | `wal_generation` / `crash_recover` | shard | log roll / rebuild from disk |
 //! | `fault_pause` / `fault_crash` / `fault_kill` | shard | fault-plan firings |
-//! | `peer_up` / `peer_down` / `backpressure` (debug) | tcp | transport lifecycle |
+//! | `peer_up` / `peer_down` / `backpressure` (debug) | transport | lifecycle (both backends emit `peer_down`) |
 //!
 //! **Determinism guarantee.** Telemetry is strictly out-of-band:
 //! `StatsPull`/`StatsReport` are never WAL-logged, never staged, and
@@ -187,6 +214,7 @@
 //! durability suites).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -194,6 +222,7 @@ use std::time::{Duration, Instant};
 use super::client::{ClientConfig, ClientStats, PsClient};
 use super::consistency::Consistency;
 use super::durability::DurabilityConfig;
+use super::failover::{Detector, FailoverConfig, FailoverReport};
 use super::msg::{ToShard, ToWorker};
 use super::placement::{plan_shards, PlacementDelta, PlacementMap};
 use super::shard::{Shard, ShardFinal, ShardStats};
@@ -201,7 +230,7 @@ use super::types::{Clock, Key, RowId, TableId};
 use crate::metrics::convergence::ConvergenceLog;
 use crate::metrics::staleness::StalenessHist;
 use crate::metrics::timeline::Timeline;
-use crate::sim::fault::{FaultInjector, FaultPlan, ShardAction};
+use crate::sim::fault::{FaultInjector, FaultPlan};
 use crate::sim::net::NetConfig;
 use crate::sim::straggler::StragglerModel;
 use crate::telemetry::registry::HistSnapshot;
@@ -300,6 +329,24 @@ pub struct ClusterConfig {
     /// apply inside the data plane, shard faults fire at table-clock
     /// commit boundaries.
     pub faults: FaultPlan,
+    /// Failure-detector tuning (heartbeat cadence, suspicion thresholds,
+    /// re-replication). The detector thread only runs when the fault
+    /// plan kills nodes or spares are provisioned — an undisturbed run
+    /// carries zero heartbeat traffic.
+    pub failover: FailoverConfig,
+    /// Spare shard nodes provisioned beyond the placement (ids
+    /// `total_shards..total_shards + spare_nodes`): empty, pull-only,
+    /// durability-enabled, available to the detector as WAL-fallback
+    /// promotion targets and re-replication attach targets. With
+    /// `failover.re_replicate` and `spare_nodes == 0`, one spare is
+    /// provisioned per kill fault.
+    pub spare_nodes: usize,
+    /// Clocks of flushed updates each client keeps re-sendable for
+    /// WAL-fallback failover (0 = keep nothing). Set it at least one
+    /// past the model's staleness bound when running with kill faults
+    /// over spares — the client re-sends this tail to a promoted spare,
+    /// whose replay floors drop whatever the disk already held.
+    pub resend_window: Clock,
     pub seed: u64,
     /// Telemetry: every `n` CLOCKs each worker polls every live shard
     /// node with a `StatsPull` (0 = never). Out-of-band; see module
@@ -329,6 +376,9 @@ impl Default for ClusterConfig {
             snapshot_waves: false,
             durability: None,
             faults: FaultPlan::default(),
+            failover: FailoverConfig::default(),
+            spare_nodes: 0,
+            resend_window: 0,
             seed: 42,
             stats_pull_every: 0,
             trace: None,
@@ -407,6 +457,14 @@ pub struct RunReport {
     /// (`telemetry::registry` entry convention) — WAL latency
     /// histograms and the rest, for consumers beyond the summary line.
     pub shard_metrics: Vec<Vec<(String, u64)>>,
+    /// First failover's window (ms from the victim's last proof of life
+    /// to the promotion being emitted); `None` when nothing failed over.
+    pub failover_ms: Option<u64>,
+    /// The failure detector's full account of the run (`None` when no
+    /// detector thread ran). `failover.unreplicated` being non-empty
+    /// means a partition was lost — callers should treat that as a
+    /// failed run.
+    pub failover: Option<FailoverReport>,
 }
 
 impl RunReport {
@@ -512,23 +570,36 @@ impl Cluster {
             );
         }
         let killed = cfg.faults.killed_shards();
-        if !killed.is_empty() {
+        // Spare pool: explicit, or (re-replication on) one per kill.
+        let spares_n = if cfg.spare_nodes > 0 {
+            cfg.spare_nodes
+        } else if cfg.failover.re_replicate {
+            killed.len()
+        } else {
+            0
+        };
+        let total_nodes = total_shards + spares_n;
+        let killed_primaries = killed.iter().any(|&k| k < cfg.shards);
+        if killed_primaries {
             assert!(
-                cfg.replicas >= 1,
-                "kill faults need replicas >= 1 (each dead primary promotes its replica)"
+                cfg.replicas >= 1 || (cfg.durability.is_some() && spares_n > 0),
+                "killing a primary needs a reachable failover target: \
+                 replicas >= 1, or durability plus a provisioned spare \
+                 (WAL-fallback promotion)"
             );
             assert!(
                 cfg.migration.is_none(),
                 "kill faults cannot combine with a migration: both advance the \
                  placement epoch and their fences are unordered"
             );
-            for &k in &killed {
-                assert!(k < cfg.shards, "kill targets must be primaries, got shard {k}");
-            }
         }
+        // The failure detector runs only when something can die or a
+        // spare waits for work; undisturbed runs carry no heartbeats.
+        let failover_active = !killed.is_empty() || spares_n > 0;
 
         // Channels: per-worker and per-shard-node inboxes (every
-        // provisioned primary AND every replica is a live node).
+        // provisioned primary, every replica, and every spare is a live
+        // node).
         let mut worker_tx: Vec<Sender<ToWorker>> = Vec::new();
         let mut worker_rx: Vec<Receiver<ToWorker>> = Vec::new();
         for _ in 0..cfg.workers {
@@ -538,7 +609,7 @@ impl Cluster {
         }
         let mut shard_tx: Vec<Sender<ToShard>> = Vec::new();
         let mut shard_rx: Vec<Receiver<ToShard>> = Vec::new();
-        for _ in 0..total_shards {
+        for _ in 0..total_nodes {
             let (tx, rx) = channel();
             shard_tx.push(tx);
             shard_rx.push(rx);
@@ -559,6 +630,8 @@ impl Cluster {
                 at_clock: mig.at_clock,
                 grow_active: mig.grow_to.map(|n| n as u32),
                 promote: None,
+                attach: None,
+                dead: vec![],
                 moves: mig.moves.iter().map(|&(k, d)| (k, d as u32)).collect(),
             };
             // The key universe is enumerable from the declared tables —
@@ -587,12 +660,19 @@ impl Cluster {
             .faults
             .has_link_faults()
             .then(|| Arc::new(FaultInjector::new(cfg.faults.clone())));
-        let fabric = Fabric::build_with_faults(
+        // Control plane: when the detector runs, the fabric routes
+        // `NodeId::Coordinator` packets (heartbeat replies) into its
+        // inbox and surfaces dead-inbox peer events to it.
+        let (coord_tx, coord_rx) = channel::<ToWorker>();
+        let (ev_tx, ev_rx) = channel::<crate::transport::PeerEvent>();
+        let fabric = Fabric::build_with_control(
             cfg.transport,
             cfg.net.clone(),
             worker_tx,
             shard_tx.clone(),
             injector,
+            failover_active.then_some(coord_tx),
+            failover_active.then_some(ev_tx),
         )
         .expect("transport bootstrap failed");
 
@@ -605,8 +685,10 @@ impl Cluster {
         // policy (clock-gated waves, per-update waves + visibility
         // ledger, or pull-only) from the consistency config; replicas run
         // the same core behind a pull-only policy. Replica chains start
-        // from the same initial rows as their primary.
-        let mut shards: Vec<Shard> = (0..total_shards)
+        // from the same initial rows as their primary. Spares (ids past
+        // the placement) start as empty pull-only nodes: a Promote or
+        // re-replication catch-up gives them content and identity.
+        let mut shards: Vec<Shard> = (0..total_nodes)
             .map(|id| {
                 if placement.is_replica(id) {
                     Shard::replica(
@@ -662,24 +744,29 @@ impl Cluster {
                 shard.set_trace(Arc::clone(ring));
             }
         }
-        // Pre-arm each killed primary's dying act: a fence-free placement
-        // delta promoting its first replica, sent over the data plane at
-        // the kill boundary like any other message.
-        for f in &cfg.faults.shards {
-            if f.action == ShardAction::Kill {
-                let node = placement.replica_of(f.shard, 0);
-                shards[f.shard].arm_promotion(
-                    node,
-                    PlacementDelta {
-                        epoch: placement.epoch() + 1,
-                        at_clock: f.at_clock,
-                        grow_active: None,
-                        promote: Some((f.shard as u32, node as u32)),
-                        moves: Vec::new(),
-                    },
-                );
-            }
-        }
+        // The failure detector: no kill is pre-armed anywhere — the
+        // coordinator thread observes peer events and heartbeat silence
+        // and emits every recovery delta itself (see ps::failover).
+        let stop = Arc::new(AtomicBool::new(false));
+        let detector = failover_active.then(|| {
+            let det = Detector::new(
+                cfg.failover.clone(),
+                placement.clone(),
+                (total_shards..total_nodes).collect(),
+                cfg.durability.is_some(),
+                fabric.shard_handle(),
+                ev_rx,
+                coord_rx,
+                cfg.trace.clone(),
+                Arc::clone(&stop),
+            );
+            let resolved = det.resolved_handle();
+            let handle = std::thread::Builder::new()
+                .name("coordinator".into())
+                .spawn(move || det.run())
+                .expect("spawn coordinator");
+            (handle, resolved)
+        });
 
         // Launch shard threads.
         let (dump_tx, dump_rx) = channel::<ShardFinal>();
@@ -703,6 +790,7 @@ impl Cluster {
                     read_my_writes: cfg.read_my_writes,
                     virtual_clock: cfg.virtual_clock,
                     stats_pull_every: cfg.stats_pull_every,
+                    resend_window: cfg.resend_window,
                 };
                 let trace = cfg.trace.clone();
                 let net_handle = fabric.worker_handle();
@@ -797,23 +885,39 @@ impl Cluster {
         // messages queued before Shutdown are processed before it).
         fabric.flush();
 
+        // Let the detector finish any in-flight recovery: a node killed
+        // on the run's last clock may only be detected by a post-run
+        // heartbeat, and its Promote must land before Shutdown (same FIFO
+        // inbox) or the partition's authoritative dump is lost.
+        let failover_report = detector.map(|(handle, resolved)| {
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while resolved.load(Ordering::Acquire) < killed.len()
+                && Instant::now() < deadline
+            {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            fabric.flush();
+            stop.store(true, Ordering::Release);
+            handle.join().expect("coordinator panicked")
+        });
+
         // Stop shards (direct control-plane path, bypassing the sim net).
         for tx in &shard_tx {
             let _ = tx.send(ToShard::Shutdown);
         }
-        let mut shard_stats = vec![ShardStats::default(); total_shards];
-        let mut shard_queue_hwm = vec![0u64; total_shards];
-        let mut shard_metrics = vec![Vec::new(); total_shards];
+        let mut shard_stats = vec![ShardStats::default(); total_nodes];
+        let mut shard_queue_hwm = vec![0u64; total_nodes];
+        let mut shard_metrics = vec![Vec::new(); total_nodes];
         let mut table_rows = HashMap::new();
         let mut replica_rows: Vec<HashMap<Key, Vec<f32>>> =
-            vec![HashMap::new(); total_shards - cfg.shards];
-        // Killed shards die without dumping; their promoted replicas dump
-        // the partition's authoritative rows instead.
-        let promoted_nodes: HashMap<usize, usize> = killed
-            .iter()
-            .map(|&p| (placement.replica_of(p, 0), p))
-            .collect();
-        for _ in 0..total_shards - killed.len() {
+            vec![HashMap::new(); total_nodes - cfg.shards];
+        // Killed shards die without dumping; the nodes the detector
+        // promoted dump their partitions' authoritative rows instead.
+        let promoted_nodes: HashMap<usize, usize> = failover_report
+            .as_ref()
+            .map(|r| r.promotions.iter().map(|&(p, n)| (n, p)).collect())
+            .unwrap_or_default();
+        for _ in 0..total_nodes - killed.len() {
             let fin = dump_rx.recv().expect("shard final state");
             shard_stats[fin.id] = fin.stats;
             shard_queue_hwm[fin.id] = fin
@@ -842,6 +946,15 @@ impl Cluster {
         }
         for h in shard_handles {
             let _ = h.join();
+        }
+        if let Some(r) = &failover_report {
+            if !r.unreplicated.is_empty() {
+                eprintln!(
+                    "cluster: partitions {:?} were lost unreplicated — results \
+                     below exclude their updates",
+                    r.unreplicated
+                );
+            }
         }
         let net_messages = fabric.messages();
         let net_bytes = fabric.bytes();
@@ -878,6 +991,8 @@ impl Cluster {
             staleness_violations,
             shard_queue_hwm,
             shard_metrics,
+            failover_ms: failover_report.as_ref().and_then(|r| r.failover_ms),
+            failover: failover_report,
         }
     }
 }

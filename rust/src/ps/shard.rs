@@ -44,10 +44,18 @@
 //! [`Shard::crash_and_recover`] (also fired by a fault plan's `crash`
 //! action) rebuilds the durable state from disk through the same handler
 //! code paths — bit-identical under deterministic replay. A `kill` fault
-//! makes the shard die permanently, sending a pre-armed
-//! [`ToShard::Promote`] to its replica as its last act; the replica
+//! makes the shard die permanently and *silently*: failover is
+//! detection-driven — the coordinator's failure detector (`ps::failover`)
+//! observes the death via missed `StatsPull` heartbeats and transport
+//! `PeerEvent`s and emits the [`ToShard::Promote`] itself; the replica
 //! adopts the dead primary's logical identity and the run's full server
-//! policy (handled like any other inbound message).
+//! policy (handled like any other inbound message). After promoting, the
+//! coordinator restores the replication factor by re-replicating onto a
+//! spare node: [`ToShard::ReplicaSync`] makes the serving node copy its
+//! row fold through a fence clock to the spare, whose
+//! [`ToShard::ReplicaCatchUp`] gate holds all replay until the stream's
+//! end-marker lands (or, double-failure fallback, rebuilds the dead
+//! primary's state from its on-disk WAL generation).
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc::{Receiver, Sender};
@@ -269,6 +277,54 @@ struct Migration {
     held_min: Option<Clock>,
 }
 
+/// Destination-side state of a re-replication catch-up
+/// ([`ToShard::ReplicaCatchUp`]): the *whole shard* is gated — staged
+/// updates never replay, commits never fire, reads stay queued — until
+/// the `MigrateCommit` ending the source's `ReplicaSync` row stream
+/// lands. Client traffic duplicated from the attach fence onward stages
+/// normally meanwhile, so once the gate clears the ordinary sorted replay
+/// composes it onto the synced base rows exactly.
+struct CatchUp {
+    epoch: u64,
+    /// First clock the duplicated client stream owns; the synced rows are
+    /// the source's fold through `at_clock - 1`.
+    at_clock: Clock,
+    /// A table-clock advance withheld while the gate is closed; released
+    /// by the stream's end-marker.
+    held_min: Option<Clock>,
+}
+
+/// One-shot ingress dedup installed after a spare rebuilds a dead
+/// primary's state from disk (`ReplicaCatchUp { from_disk: true }`):
+/// per-worker clock floors at or below which replayed client traffic
+/// (the bounded resend window, see `ClientConfig::resend_window`) is
+/// already reflected in the recovered state and must be dropped rather
+/// than double-applied. Exact for the clock models (one Update per
+/// (worker, clock) pair); VAP/AVAP may flush several Updates within one
+/// clock and are documented as excluded from WAL-fallback exactness.
+struct ReplayFloors {
+    /// Highest update clock per worker in the recovered state (committed,
+    /// or present as a staged batch).
+    update: Vec<Clock>,
+    /// Committed clock per worker.
+    tick: Vec<Clock>,
+}
+
+impl ReplayFloors {
+    fn of(core: &ShardCore) -> Self {
+        let mut tick = Vec::with_capacity(core.workers);
+        let mut update = Vec::with_capacity(core.workers);
+        for w in 0..core.workers {
+            tick.push(core.clocks.committed(w));
+        }
+        update.extend_from_slice(&tick);
+        for &(clock, worker) in core.staged.keys() {
+            update[worker] = update[worker].max(clock);
+        }
+        Self { update, tick }
+    }
+}
+
 /// The ordered delta sequence a key's row absorbed since the last wave
 /// that consumed it — the raw material of a wire-v7 delta push. Order is
 /// exactly application order (f32 addition is non-associative, so the
@@ -359,6 +415,13 @@ pub struct ShardCore {
     staged_index: FxHashMap<Key, Vec<(Clock, WorkerId, u32)>>,
     /// The live migration this shard participates in, if any.
     migration: Option<Migration>,
+    /// Armed re-replication cut (source side): (epoch, fence clock,
+    /// target node), fired once the table clock commits `at_clock - 1`.
+    replica_sync: Option<(u64, Clock, usize)>,
+    /// Re-replication catch-up gate (destination side), if closed.
+    catchup: Option<CatchUp>,
+    /// One-shot dedup floors after a disk rebuild (WAL-fallback spare).
+    replay_floors: Option<ReplayFloors>,
     /// Keys this shard handed off, permanently mapped to their owners:
     /// late GETs/updates from clients that switched epochs after sending
     /// are relayed here. Empty (and O(1) to consult) until a handoff.
@@ -400,9 +463,6 @@ pub struct Shard {
     next_fault: usize,
     /// Fault-injected slow-fsync stall, applied to every WAL generation.
     fsync_stall: Option<Duration>,
-    /// Pre-armed promotion: (replica's physical node, the placement
-    /// delta), sent as this shard's dying act under a `kill` fault.
-    promote_on_kill: Option<(usize, PlacementDelta)>,
 }
 
 impl Shard {
@@ -485,6 +545,9 @@ impl Shard {
                 staged: BTreeMap::new(),
                 staged_index: FxHashMap::default(),
                 migration: None,
+                replica_sync: None,
+                catchup: None,
+                replay_floors: None,
                 forwards: FxHashMap::default(),
                 net,
                 row_len,
@@ -499,7 +562,6 @@ impl Shard {
             faults: Vec::new(),
             next_fault: 0,
             fsync_stall: None,
-            promote_on_kill: None,
         }
     }
 
@@ -573,6 +635,22 @@ impl Shard {
     /// core mechanism first, then the matching policy hook — no model-
     /// specific branching.
     pub fn handle(&mut self, msg: ToShard) -> bool {
+        // One-shot replay dedup after a WAL-fallback rebuild: the disk
+        // history already contains every per-worker Update/ClockTick up
+        // to the recorded floors, and clients re-send their in-window
+        // tail unconditionally, so anything at or below a floor is a
+        // duplicate and must be dropped *before* it reaches the WAL.
+        if let Some(floors) = &self.core.replay_floors {
+            let dup = match &msg {
+                ToShard::Update { worker, clock, .. } => *clock <= floors.update[*worker],
+                ToShard::ClockTick { worker, clock } => *clock <= floors.tick[*worker],
+                ToShard::NormReport { worker, clock, .. } => *clock <= floors.tick[*worker],
+                _ => false,
+            };
+            if dup {
+                return true;
+            }
+        }
         // Write-ahead: every state-bearing message hits the log before it
         // is processed, so the durable history is never behind the live
         // state it produced.
@@ -650,7 +728,31 @@ impl Shard {
                     self.after_commit();
                 }
             }
-            ToShard::MigrateCommit { epoch } => self.core.on_migrate_commit(epoch),
+            ToShard::MigrateCommit { epoch } => {
+                // A catch-up commit can release a withheld table-clock
+                // advance exactly like the last expected handoff does.
+                if let Some(new_min) = self.core.on_migrate_commit(epoch) {
+                    self.policy.on_commit(&mut self.core, new_min);
+                    self.after_commit();
+                }
+            }
+            ToShard::ReplicaSync {
+                epoch,
+                at_clock,
+                target,
+            } => self.core.on_replica_sync(epoch, at_clock, target as usize),
+            ToShard::ReplicaCatchUp {
+                epoch,
+                at_clock,
+                source,
+                from_disk,
+            } => {
+                if from_disk {
+                    self.recover_as_spare(source as usize);
+                } else {
+                    self.core.on_replica_catch_up(epoch, at_clock, source as usize);
+                }
+            }
             ToShard::Promote { delta } => self.on_promote(delta),
             ToShard::StatsPull { worker } => self.core.on_stats_pull(worker),
             ToShard::Shutdown => return false,
@@ -726,13 +828,6 @@ impl Shard {
         }
     }
 
-    /// Pre-arm the promotion a `kill` fault fires as this shard's dying
-    /// act: `replica_node` is the physical node of this shard's replica,
-    /// `delta` the placement epoch that redirects the partition to it.
-    pub fn arm_promotion(&mut self, replica_node: usize, delta: PlacementDelta) {
-        self.promote_on_kill = Some((replica_node, delta));
-    }
-
     /// Fire armed faults whose clock the table clock has reached. False =
     /// the shard was killed and must die without dumping.
     fn poll_faults(&mut self) -> bool {
@@ -773,13 +868,10 @@ impl Shard {
                         "fault_kill",
                         format!("killed at clock {}", fault.at_clock),
                     );
-                    if let Some((node, delta)) = self.promote_on_kill.take() {
-                        self.core.trace_event(
-                            "promotion_sent",
-                            format!("dying act: Promote -> node {node}"),
-                        );
-                        self.core.send_to_shard(node, ToShard::Promote { delta });
-                    }
+                    // No dying act: the shard dies silently and the
+                    // coordinator's failure detector (missed heartbeats
+                    // confirmed by the transport's peer_down) notices
+                    // and emits the Promote itself.
                     return false;
                 }
             }
@@ -805,7 +897,12 @@ impl Shard {
             .record(t0.elapsed().as_nanos() as u64);
         d.commits_since_compact += 1;
         let due = d.cfg.compact_every > 0 && d.commits_since_compact >= d.cfg.compact_every;
-        if due && self.core.migration.is_none() && self.core.forwards.is_empty() {
+        if due
+            && self.core.migration.is_none()
+            && self.core.forwards.is_empty()
+            && self.core.catchup.is_none()
+            && self.core.replica_sync.is_none()
+        {
             let cfg = d.cfg.clone();
             let next = d.generation + 1;
             self.start_generation(cfg, next).expect("WAL compaction");
@@ -836,9 +933,18 @@ impl Shard {
     /// hooks, sends dropped). Deterministic mode re-stages exactly; eager
     /// mode re-applies in log order, which IS the original arrival order.
     fn rebuild_core(&self, cfg: &DurabilityConfig, g: u64) -> Result<ShardCore> {
+        self.rebuild_core_of(cfg, self.core.id, g)
+    }
+
+    /// [`rebuild_core`] generalized over whose generation is read: a
+    /// WAL-fallback spare rebuilds the *dead primary's* on-disk history
+    /// (`owner` != `self.core.id`) to take over its partition when no
+    /// live replica survived. The rebuilt core carries `owner` as both
+    /// physical and logical identity; [`graft`] then adopts it.
+    fn rebuild_core_of(&self, cfg: &DurabilityConfig, owner: usize, g: u64) -> Result<ShardCore> {
         let mut core = ShardCore {
-            id: self.core.id,
-            logical: self.core.id,
+            id: owner,
+            logical: owner,
             workers: self.core.workers,
             rows: FxHashMap::default(),
             clocks: MinClock::new(self.core.workers),
@@ -857,6 +963,9 @@ impl Shard {
             staged: BTreeMap::new(),
             staged_index: FxHashMap::default(),
             migration: None,
+            replica_sync: None,
+            catchup: None,
+            replay_floors: None,
             forwards: FxHashMap::default(),
             net: TransportHandle::new(NullTransport),
             row_len: self.core.row_len.clone(),
@@ -920,7 +1029,38 @@ impl Shard {
                 } => {
                     core.on_row_handoff(epoch, key, vclock, fresh, exists, data, staged);
                 }
-                ToShard::MigrateCommit { epoch } => core.on_migrate_commit(epoch),
+                ToShard::MigrateCommit { epoch } => {
+                    core.on_migrate_commit(epoch);
+                }
+                ToShard::ReplicaSync {
+                    epoch,
+                    at_clock,
+                    target,
+                } => {
+                    // Replayed against a NullTransport: the cut re-runs
+                    // but its handoffs go nowhere, leaving only the
+                    // (correct) cleared arming state behind.
+                    core.on_replica_sync(epoch, at_clock, target as usize);
+                }
+                ToShard::ReplicaCatchUp {
+                    epoch,
+                    at_clock,
+                    source,
+                    from_disk,
+                } => {
+                    if from_disk {
+                        // A disk rebuild inside a disk rebuild cannot
+                        // recurse; the post-graft generation roll seeds
+                        // a fresh log, so this frame is never re-read
+                        // in practice.
+                        eprintln!(
+                            "shard {}: ignoring from-disk ReplicaCatchUp during replay",
+                            core.id
+                        );
+                    } else {
+                        core.on_replica_catch_up(epoch, at_clock, source as usize);
+                    }
+                }
                 ToShard::Promote { delta } => {
                     if let Some((primary, _)) = delta.promote {
                         core.logical = primary as usize;
@@ -970,10 +1110,19 @@ impl Shard {
     /// re-route.
     fn on_promote(&mut self, delta: PlacementDelta) {
         let Some((primary, node)) = delta.promote else {
-            eprintln!(
-                "shard {}: ignoring Promote without a promotion pair",
-                self.core.id
+            // A promotion-less delta (a re-replication attach, or a pure
+            // death record) uses this serving node as the relay point:
+            // forward it to every worker unchanged. The coordinator has
+            // no direct channel to the workers in a multi-process
+            // cluster, but any live shard does.
+            self.core.trace_event(
+                "placement_relay",
+                format!("epoch {} relayed to {} workers", delta.epoch, self.core.workers),
             );
+            for w in 0..self.core.workers {
+                self.core
+                    .send_to_worker(w, ToWorker::Placement { delta: delta.clone() });
+            }
             return;
         };
         assert_eq!(
@@ -1006,6 +1155,55 @@ impl Shard {
         }
     }
 
+    /// WAL-fallback takeover (the double-failure path): this spare
+    /// rebuilds the dead primary `owner`'s partition from the latest
+    /// durable generation on shared storage — no live replica survived
+    /// to stream it. The rebuilt fold is exact through the last frame
+    /// the dead primary fsynced; clients close the gap by re-sending
+    /// their in-window tail unconditionally, and the one-shot
+    /// [`ReplayFloors`] recorded here drop the prefix the disk history
+    /// already contains (exact for the five models whose server fold is
+    /// a pure function of the committed update stream; VAP/AVAP value-
+    /// bound ledgers are session state and restart conservatively).
+    fn recover_as_spare(&mut self, owner: usize) {
+        let Some(cfg) = self.durability.as_ref().map(|d| d.cfg.clone()) else {
+            eprintln!(
+                "shard {}: ignoring from-disk ReplicaCatchUp — durability is not enabled",
+                self.core.id
+            );
+            return;
+        };
+        let Some(g) = durability::latest_generation(&cfg.dir, owner) else {
+            eprintln!(
+                "shard {}: ignoring from-disk ReplicaCatchUp — no durable generation for shard {owner}",
+                self.core.id
+            );
+            return;
+        };
+        let recovered = self
+            .rebuild_core_of(&cfg, owner, g)
+            .expect("WAL-fallback rebuild");
+        let floors = ReplayFloors::of(&recovered);
+        self.graft(recovered);
+        self.core.replay_floors = Some(floors);
+        self.core.trace_event(
+            "replica_catchup",
+            format!(
+                "from-disk: rebuilt partition {owner} from generation {g}, table clock {}",
+                self.core.table_clock()
+            ),
+        );
+        // Roll a fresh generation under this node's own id: the grafted
+        // checkpoint + the Promote marker (logical != id) make future
+        // crash recovery self-contained.
+        let next = self
+            .durability
+            .as_ref()
+            .map_or(0, |d| d.generation + 1);
+        self.start_generation(cfg, next)
+            .expect("WAL-fallback generation roll");
+    }
+
     #[cfg(test)]
     fn core(&self) -> &ShardCore {
         &self.core
@@ -1024,6 +1222,8 @@ fn wal_loggable(m: &ToShard) -> bool {
             | ToShard::MigrateBegin { .. }
             | ToShard::RowHandoff { .. }
             | ToShard::MigrateCommit { .. }
+            | ToShard::ReplicaSync { .. }
+            | ToShard::ReplicaCatchUp { .. }
             | ToShard::Promote { .. }
     )
 }
@@ -1060,6 +1260,8 @@ fn write_generation(
                 at_clock: 0,
                 grow_active: None,
                 promote: Some((core.logical as u32, core.id as u32)),
+                attach: None,
+                dead: vec![],
                 moves: vec![],
             },
         })?;
@@ -1143,20 +1345,42 @@ impl ShardCore {
     /// protocol state touched — see `ps::server` § Observability.
     fn on_stats_pull(&mut self, worker: WorkerId) {
         self.metrics.stats_pulls.inc();
-        let entries = self.metrics.entries();
-        self.send_to_worker(worker, ToWorker::StatsReport { shard: self.id, entries });
+        let mut entries = self.metrics.entries();
+        if worker == super::msg::COORD_STATS_WORKER {
+            // The detector plans re-replication fences from the observed
+            // table clock; ship it as a synthetic entry (the registry
+            // itself only carries counters/histograms).
+            entries.push(("table_clock".into(), self.table_clock().max(0) as u64));
+            // Heartbeat probe from the coordinator's failure detector:
+            // the reply routes back to the coordinator inbox, not to
+            // any worker. The reply's arrival IS the liveness signal;
+            // its payload doubles as the telemetry snapshot.
+            self.net.send(
+                NodeId::Shard(self.id),
+                NodeId::Coordinator,
+                Packet::ToWorker(ToWorker::StatsReport { shard: self.id, entries }),
+            );
+        } else {
+            self.send_to_worker(worker, ToWorker::StatsReport { shard: self.id, entries });
+        }
     }
 
     /// The table clock reads may be served at. Normally the MinClock
-    /// minimum; while this shard still awaits migration handoffs it is
-    /// capped at `at_clock - 1` — staged updates beyond the fence are
-    /// not applied yet, so no reply may claim their clocks.
+    /// minimum; while this shard still awaits migration handoffs — or a
+    /// re-replication catch-up stream — it is capped at `at_clock - 1`:
+    /// staged updates beyond the fence are not applied yet, so no reply
+    /// may claim their clocks.
     fn visible_clock(&self) -> Clock {
-        let min = self.clocks.min();
-        match &self.migration {
-            Some(m) if !m.awaiting.is_empty() => min.min(m.at_clock - 1),
-            _ => min,
+        let mut min = self.clocks.min();
+        if let Some(m) = &self.migration {
+            if !m.awaiting.is_empty() {
+                min = min.min(m.at_clock - 1);
+            }
         }
+        if let Some(cu) = &self.catchup {
+            min = min.min(cu.at_clock - 1);
+        }
+        min
     }
 
     /// Destination shard for a key this shard has already handed off
@@ -1458,6 +1682,18 @@ impl ShardCore {
     }
 
     fn advance(&mut self, new_min: Clock) -> Option<Clock> {
+        // Re-replication catch-up gate (destination side): this spare is
+        // a shard-wide migration destination — every row is "awaiting".
+        // Hold the whole advance until MigrateCommit opens the gate;
+        // updates duplicated from clients all carry clock >= at_clock,
+        // so nothing below the fence can be missing.
+        if let Some(cu) = self.catchup.as_mut() {
+            cu.held_min = Some(cu.held_min.unwrap_or(new_min).max(new_min));
+            let visible = cu.at_clock - 1;
+            self.replay_staged_through(visible);
+            self.serve_pending(visible);
+            return None;
+        }
         // Source fence: once every worker has committed at_clock-1, all
         // pre-migration updates are here — replay through the fence,
         // then hand the migrated rows (plus their staged tails) off.
@@ -1470,6 +1706,18 @@ impl ShardCore {
             if new_min >= at - 1 {
                 self.replay_staged_through(at - 1);
                 self.do_handoff();
+            }
+        }
+        // Re-replication cut (source side): at the commit of at_clock-1
+        // the rows are exactly the fold of every committed update — copy
+        // that fold to the spare. Unlike the migration fence this does
+        // not gate this shard's own progress: rows are copied, not
+        // moved, and updates from at_clock on are duplicated to the
+        // spare by the clients themselves.
+        if let Some((_, at, _)) = self.replica_sync {
+            if new_min >= at - 1 {
+                self.replay_staged_through(at - 1);
+                self.do_replica_sync();
             }
         }
         // Destination fence: hold the visible advance at at_clock-1
@@ -1805,6 +2053,21 @@ impl ShardCore {
         data: Arc<[f32]>,
         staged: Vec<(Clock, WorkerId, RowDelta)>,
     ) -> Option<Clock> {
+        // Re-replication install (spare under a catch-up gate): the
+        // whole shard is "awaiting", so every handoff of the gate's
+        // epoch installs directly — no per-key bookkeeping, no forward
+        // retirement (nothing ever left this node).
+        if self.catchup.as_ref().is_some_and(|cu| cu.epoch == epoch) {
+            self.stats.rows_migrated_in += 1;
+            self.metrics.rows_migrated_in.inc();
+            if exists {
+                self.rows.insert(key, Row { data, fresh });
+            }
+            for (c, w, d) in staged {
+                self.stage_rows(c, w, vec![(key, d)]);
+            }
+            return None;
+        }
         let expected = match self.migration.as_mut() {
             Some(m) if m.epoch == epoch => m.awaiting.remove(&key),
             _ => false,
@@ -1883,9 +2146,107 @@ impl ShardCore {
     }
 
     /// End-marker after one source's last handoff (FIFO guarantees the
-    /// handoffs preceded it). The gate is keyed by individual handoffs,
-    /// so this is informational.
-    fn on_migrate_commit(&mut self, _epoch: u64) {}
+    /// handoffs preceded it). For a plain key migration the gate is
+    /// keyed by individual handoffs, so this is informational; for a
+    /// re-replication catch-up it is the gate opener — the spare cannot
+    /// know the row count up front, so the commit frame (FIFO-ordered
+    /// after every RowHandoff of the stream) marks the stream complete.
+    /// Returns the released table clock if a commit advance was withheld
+    /// behind the gate (the caller fires the policy's commit hook).
+    fn on_migrate_commit(&mut self, epoch: u64) -> Option<Clock> {
+        let matches = self.catchup.as_ref().is_some_and(|cu| cu.epoch == epoch);
+        if !matches {
+            return None;
+        }
+        let cu = self.catchup.take().unwrap();
+        self.trace_event(
+            "replica_catchup_done",
+            format!(
+                "epoch {epoch}: caught up through clock {}, gate open",
+                cu.at_clock - 1
+            ),
+        );
+        match cu.held_min {
+            Some(new_min) => self.advance(new_min),
+            None => {
+                let visible = self.visible_clock();
+                self.serve_pending(visible);
+                None
+            }
+        }
+    }
+
+    /// Source side of a re-replication: arm the cut. At the commit of
+    /// `at_clock - 1` (possibly right now, if the table clock is already
+    /// there) the row fold is copied — not moved — to `target`, followed
+    /// by the MigrateCommit end-marker that opens the spare's gate.
+    fn on_replica_sync(&mut self, epoch: u64, at_clock: Clock, target: usize) {
+        self.trace_event(
+            "replica_sync",
+            format!("epoch {epoch} armed: copy cut at clock {at_clock} -> node {target}"),
+        );
+        self.replica_sync = Some((epoch, at_clock, target));
+        if self.clocks.min() >= at_clock - 1 {
+            self.replay_staged_through(at_clock - 1);
+            self.do_replica_sync();
+        }
+    }
+
+    /// Fire the armed re-replication cut: ship every row (sorted keys,
+    /// so two runs emit byte-identical streams) to the target, then the
+    /// end-marker. Rows stay; no forwards, no reader churn — the spare
+    /// is an addition, not a move.
+    fn do_replica_sync(&mut self) {
+        let Some((epoch, at_clock, target)) = self.replica_sync.take() else {
+            return;
+        };
+        let mut ordered: Vec<Key> = self.rows.keys().copied().collect();
+        ordered.sort_unstable();
+        self.trace_event(
+            "replica_sync_cut",
+            format!(
+                "epoch {epoch}: copying {} rows at clock {} -> node {target}",
+                ordered.len(),
+                at_clock - 1
+            ),
+        );
+        let vclock = self.visible_clock();
+        for key in ordered {
+            let row = &self.rows[&key];
+            self.stats.rows_migrated_out += 1;
+            self.metrics.rows_migrated_out.inc();
+            self.send_to_shard(
+                target,
+                ToShard::RowHandoff {
+                    epoch,
+                    key,
+                    vclock,
+                    fresh: row.fresh,
+                    exists: true,
+                    data: Arc::clone(&row.data),
+                    staged: vec![],
+                },
+            );
+        }
+        self.send_to_shard(target, ToShard::MigrateCommit { epoch });
+    }
+
+    /// Destination side of a re-replication: close the whole-shard gate.
+    /// Until the source's MigrateCommit opens it, every commit advance
+    /// is withheld at `at_clock - 1` — updates duplicated from clients
+    /// (all clock >= at_clock) stage behind the fence and must not apply
+    /// before the base rows they land on have arrived.
+    fn on_replica_catch_up(&mut self, epoch: u64, at_clock: Clock, source: usize) {
+        self.trace_event(
+            "replica_catchup",
+            format!("epoch {epoch}: gate closed, awaiting cut from node {source} at clock {at_clock}"),
+        );
+        self.catchup = Some(CatchUp {
+            epoch,
+            at_clock,
+            held_min: None,
+        });
+    }
 
     fn rebuild_staged_index(&mut self) {
         self.staged_index.clear();
@@ -2889,6 +3250,8 @@ mod tests {
             at_clock: 1,
             grow_active: None,
             promote: Some((0, 1)),
+            attach: None,
+            dead: vec![],
             moves: vec![],
         };
         shard.handle(ToShard::Promote {

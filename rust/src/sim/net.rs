@@ -43,6 +43,8 @@ use crate::util::rng::Rng;
 // with the real TCP backend); re-exported here for existing importers.
 pub use crate::transport::{NodeId, Packet};
 
+use crate::transport::PeerEvent;
+
 /// Coalescing boundary of the router's vectored intake: at most this many
 /// messages are drained and scheduled per wakeup before the loop returns
 /// to dispatching due deliveries, so an intake flood cannot starve the
@@ -162,6 +164,24 @@ impl SimNet {
         shard_inboxes: Vec<Sender<ToShard>>,
         faults: Option<Arc<FaultInjector>>,
     ) -> Self {
+        Self::with_control(cfg, worker_inboxes, shard_inboxes, faults, None, None)
+    }
+
+    /// Like [`SimNet::with_faults`], with the failover control plane
+    /// attached: packets addressed to [`NodeId::Coordinator`] (heartbeat
+    /// `StatsReport` replies) deliver into `coordinator` (dropped when
+    /// absent — a run without a failure detector), and a delivery into a
+    /// node whose inbox hung up (its thread died — a killed shard) emits
+    /// one unclean [`PeerEvent::Disconnected`] per node on `events`, the
+    /// sim's equivalent of the TCP reader's `peer_down`.
+    pub fn with_control(
+        cfg: NetConfig,
+        worker_inboxes: Vec<Sender<ToWorker>>,
+        shard_inboxes: Vec<Sender<ToShard>>,
+        faults: Option<Arc<FaultInjector>>,
+        coordinator: Option<Sender<ToWorker>>,
+        events: Option<Sender<PeerEvent>>,
+    ) -> Self {
         let (tx, rx) = channel::<Wire>();
         let stats = Arc::new(NetStats::default());
         let router_stats = stats.clone();
@@ -169,7 +189,16 @@ impl SimNet {
             .name("simnet-router".into())
             .spawn(move || {
                 crate::sim::priority::infrastructure_thread();
-                route_loop(cfg, rx, worker_inboxes, shard_inboxes, router_stats, faults)
+                route_loop(
+                    cfg,
+                    rx,
+                    worker_inboxes,
+                    shard_inboxes,
+                    coordinator,
+                    events,
+                    router_stats,
+                    faults,
+                )
             })
             .expect("spawn simnet router");
         SimNet {
@@ -226,19 +255,54 @@ impl SimNet {
     }
 }
 
-fn deliver(
-    wire: Wire,
-    workers: &[Sender<ToWorker>],
-    shards: &[Sender<ToShard>],
-    stats: &NetStats,
-) {
-    // Send errors mean the destination already exited (shutdown); drop.
+/// Delivery context threaded through the router: destination inboxes
+/// plus the failover control plane (coordinator inbox, peer-death event
+/// sink, and the per-node already-reported set backing its once-per-node
+/// guarantee).
+struct Sinks {
+    workers: Vec<Sender<ToWorker>>,
+    shards: Vec<Sender<ToShard>>,
+    coordinator: Option<Sender<ToWorker>>,
+    events: Option<Sender<PeerEvent>>,
+    downed: crate::util::hash::FxHashSet<NodeId>,
+}
+
+impl Sinks {
+    /// A send into a hung-up inbox means the node's thread exited — for
+    /// a shard, either orderly shutdown or a kill fault. Surface it once
+    /// per node as an unclean disconnect, exactly what the TCP reader
+    /// reports when a peer process dies mid-run.
+    fn note_down(&mut self, node: NodeId) {
+        if !self.downed.insert(node) {
+            return;
+        }
+        if let Some(ev) = &self.events {
+            let _ = ev.send(PeerEvent::Disconnected { node, clean: false });
+        }
+    }
+}
+
+fn deliver(wire: Wire, sinks: &mut Sinks, stats: &NetStats) {
+    // Send errors mean the destination already exited: shutdown, or a
+    // killed node — surfaced through the peer-event stream; the packet
+    // itself is dropped either way.
     match (wire.dst, wire.packet) {
         (NodeId::Worker(i), Packet::ToWorker(m)) => {
-            let _ = workers[i].send(m);
+            if sinks.workers[i].send(m).is_err() {
+                sinks.note_down(NodeId::Worker(i));
+            }
         }
         (NodeId::Shard(i), Packet::ToShard(m)) => {
-            let _ = shards[i].send(m);
+            if sinks.shards[i].send(m).is_err() {
+                sinks.note_down(NodeId::Shard(i));
+            }
+        }
+        // Heartbeat replies to the coordinator's failure detector; a run
+        // without one just drops them.
+        (NodeId::Coordinator, Packet::ToWorker(m)) => {
+            if let Some(c) = &sinks.coordinator {
+                let _ = c.send(m);
+            }
         }
         (dst, p) => panic!("packet {p:?} addressed to incompatible node {dst:?}"),
     }
@@ -268,20 +332,30 @@ impl Ord for Scheduled {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn route_loop(
     cfg: NetConfig,
     rx: Receiver<Wire>,
     workers: Vec<Sender<ToWorker>>,
     shards: Vec<Sender<ToShard>>,
+    coordinator: Option<Sender<ToWorker>>,
+    events: Option<Sender<PeerEvent>>,
     stats: Arc<NetStats>,
     faults: Option<Arc<FaultInjector>>,
 ) {
+    let mut sinks = Sinks {
+        workers,
+        shards,
+        coordinator,
+        events,
+        downed: crate::util::hash::FxHashSet::default(),
+    };
     if cfg.is_instant() && faults.is_none() {
         // Fast path: synchronous forwarding. (Link faults need the
         // scheduling loop even on an instant net — injected delays must
         // land in the heap.)
         while let Ok(wire) = rx.recv() {
-            deliver(wire, &workers, &shards, &stats);
+            deliver(wire, &mut sinks, &stats);
         }
         return;
     }
@@ -308,7 +382,7 @@ fn route_loop(
         let now = Instant::now();
         while heap.peek().is_some_and(|Reverse(s)| s.at <= now) {
             let Reverse(s) = heap.pop().unwrap();
-            deliver(s.wire, &workers, &shards, &stats);
+            deliver(s.wire, &mut sinks, &stats);
         }
         if closed && heap.is_empty() {
             return;

@@ -21,6 +21,8 @@
 pub mod tcp;
 pub mod wire;
 
+pub use self::tcp::PeerEvent;
+
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
@@ -33,8 +35,9 @@ use crate::sim::net::{NetConfig, SimNet};
 use self::tcp::{LocalSink, TcpTransport};
 
 /// A network endpoint: worker `w`, shard `s`, or the cluster coordinator
-/// (the launcher; source of migration control messages, never a
-/// destination).
+/// (the launcher; source of migration and failover control messages, and
+/// the destination of the heartbeat `StatsReport` replies its failure
+/// detector polls for — see `ps::failover`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum NodeId {
     Worker(usize),
@@ -148,9 +151,33 @@ impl Fabric {
         shard_tx: Vec<Sender<ToShard>>,
         faults: Option<Arc<FaultInjector>>,
     ) -> Result<Fabric> {
+        Self::build_with_control(sel, net, worker_tx, shard_tx, faults, None, None)
+    }
+
+    /// [`Fabric::build_with_faults`] with the failover control plane
+    /// attached: `coordinator` receives packets addressed to
+    /// [`NodeId::Coordinator`] (heartbeat `StatsReport` replies), and
+    /// `events` receives [`PeerEvent`]s — a node whose inbox hung up
+    /// (killed shard thread) surfaces as an unclean `Disconnected` on
+    /// both backends, feeding the coordinator's failure detector.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_with_control(
+        sel: TransportSel,
+        net: NetConfig,
+        worker_tx: Vec<Sender<ToWorker>>,
+        shard_tx: Vec<Sender<ToShard>>,
+        faults: Option<Arc<FaultInjector>>,
+        coordinator: Option<Sender<ToWorker>>,
+        events: Option<Sender<tcp::PeerEvent>>,
+    ) -> Result<Fabric> {
         match sel {
-            TransportSel::Sim => Ok(Fabric::Sim(SimNet::with_faults(
-                net, worker_tx, shard_tx, faults,
+            TransportSel::Sim => Ok(Fabric::Sim(SimNet::with_control(
+                net,
+                worker_tx,
+                shard_tx,
+                faults,
+                coordinator,
+                events,
             ))),
             TransportSel::Tcp => {
                 if !net.is_instant() {
@@ -160,16 +187,22 @@ impl Fabric {
                     );
                 }
                 let n_shards = shard_tx.len();
-                let server_locals: Vec<(NodeId, LocalSink)> = shard_tx
+                let mut server_locals: Vec<(NodeId, LocalSink)> = shard_tx
                     .into_iter()
                     .enumerate()
                     .map(|(s, tx)| (NodeId::Shard(s), LocalSink::Shard(tx)))
                     .collect();
+                // The in-process TCP fabric hosts every shard on one
+                // endpoint; the coordinator inbox rides the same endpoint
+                // so shard->coordinator heartbeat replies deliver locally.
+                if let Some(tx) = coordinator {
+                    server_locals.push((NodeId::Coordinator, LocalSink::Worker(tx)));
+                }
                 let workers = worker_tx.len();
                 let (server, addr) = TcpTransport::server_with_faults(
                     "127.0.0.1:0",
                     server_locals,
-                    None,
+                    events,
                     workers,
                     faults.clone(),
                 )

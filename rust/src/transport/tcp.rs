@@ -49,7 +49,7 @@ use crate::ps::msg::{ToShard, ToWorker};
 use crate::sim::fault::FaultInjector;
 use crate::telemetry::registry::{MetricsSource, Snapshot};
 use crate::telemetry::trace::TraceRing;
-use crate::util::hash::FxHashMap;
+use crate::util::hash::{FxHashMap, FxHashSet};
 
 /// Bounded depth of each per-peer writer queue. A full queue blocks the
 /// producing thread (client/shard), which is the backpressure that keeps
@@ -77,22 +77,30 @@ pub enum LocalSink {
     Shard(Sender<ToShard>),
 }
 
+/// Outcome of a local (same-process) delivery attempt.
+enum LocalDelivery {
+    Delivered,
+    /// The node's inbox hung up: its thread exited (orderly shutdown or
+    /// a kill fault). Surfaced once per node as an unclean peer-down, so
+    /// the in-process TCP fabric feeds the failure detector the same
+    /// signal a dead remote process would.
+    HungUp,
+    /// A `ToShard` addressed to a worker, or vice versa.
+    Mismatch,
+}
+
 impl LocalSink {
-    /// Deliver `packet` to the inbox; `false` on a direction mismatch
-    /// (a `ToShard` addressed to a worker, or vice versa).
-    fn deliver(&self, packet: Packet) -> bool {
+    fn deliver(&self, packet: Packet) -> LocalDelivery {
         match (self, packet) {
-            (LocalSink::Worker(tx), Packet::ToWorker(m)) => {
-                // Send errors mean the node already exited; drop, as the
-                // simulated network does.
-                let _ = tx.send(m);
-                true
-            }
-            (LocalSink::Shard(tx), Packet::ToShard(m)) => {
-                let _ = tx.send(m);
-                true
-            }
-            _ => false,
+            (LocalSink::Worker(tx), Packet::ToWorker(m)) => match tx.send(m) {
+                Ok(()) => LocalDelivery::Delivered,
+                Err(_) => LocalDelivery::HungUp,
+            },
+            (LocalSink::Shard(tx), Packet::ToShard(m)) => match tx.send(m) {
+                Ok(()) => LocalDelivery::Delivered,
+                Err(_) => LocalDelivery::HungUp,
+            },
+            _ => LocalDelivery::Mismatch,
         }
     }
 }
@@ -230,6 +238,9 @@ struct Inner {
     /// Every link ever registered, in registration order, kept past
     /// disconnect so the scrape endpoint can report final counters.
     links: Mutex<Vec<((NodeId, NodeId), Arc<LinkStats>)>>,
+    /// Locally-hosted nodes whose inbox hung up (thread exited), so the
+    /// unclean peer-down each one triggers fires exactly once.
+    local_down: Mutex<FxHashSet<NodeId>>,
     /// Structured event ring (`--trace-out`): peer lifecycle transitions
     /// and (debug level) per-link backpressure stalls. Attached after
     /// construction via [`TcpTransport::set_trace`], hence the lock —
@@ -251,6 +262,21 @@ impl Inner {
         if let Some(t) = ring {
             t.record_debug("tcp", -1, kind, detail);
         }
+    }
+
+    /// A locally-hosted node's inbox hung up: report it once, exactly as
+    /// the reader loop reports a dead remote peer.
+    fn note_local_down(&self, node: NodeId) {
+        if !self.local_down.lock().unwrap().insert(node) {
+            return;
+        }
+        if let Some(ev) = &self.events {
+            let _ = ev.send(PeerEvent::Disconnected { node, clean: false });
+        }
+        self.trace_event(
+            "peer_down",
+            format!("local node {node:?} inbox hung up (thread exited)"),
+        );
     }
 }
 
@@ -278,11 +304,18 @@ impl Transport for Inner {
         // (src, dst) pair is always local or always remote, so FIFO per
         // link is preserved.
         if let Some(sink) = self.local.get(&dst) {
-            if sink.deliver(packet) {
-                self.stats.delivered.fetch_add(1, Ordering::AcqRel);
-            } else {
-                self.stats.dropped.fetch_add(1, Ordering::AcqRel);
-                eprintln!("transport: local packet for {dst:?} has mismatched direction");
+            match sink.deliver(packet) {
+                LocalDelivery::Delivered => {
+                    self.stats.delivered.fetch_add(1, Ordering::AcqRel);
+                }
+                LocalDelivery::HungUp => {
+                    self.stats.dropped.fetch_add(1, Ordering::AcqRel);
+                    self.note_local_down(dst);
+                }
+                LocalDelivery::Mismatch => {
+                    self.stats.dropped.fetch_add(1, Ordering::AcqRel);
+                    eprintln!("transport: local packet for {dst:?} has mismatched direction");
+                }
             }
             return;
         }
@@ -371,6 +404,7 @@ impl TcpTransport {
             events,
             faults,
             links: Mutex::new(Vec::new()),
+            local_down: Mutex::new(FxHashSet::default()),
             trace: Mutex::new(None),
         });
         let stop = Arc::new(AtomicBool::new(false));
@@ -430,15 +464,28 @@ impl TcpTransport {
         locals: Vec<(NodeId, LocalSink)>,
         faults: Option<Arc<FaultInjector>>,
     ) -> Self {
+        Self::endpoint_with_events(locals, None, faults)
+    }
+
+    /// [`TcpTransport::endpoint_with_faults`] with a peer-event sink:
+    /// the coordinator's dialing endpoint subscribes its failure
+    /// detector to the lifecycle of every heartbeat connection it owns
+    /// (a dead shard process surfaces as an unclean `Disconnected`).
+    pub fn endpoint_with_events(
+        locals: Vec<(NodeId, LocalSink)>,
+        events: Option<Sender<PeerEvent>>,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Self {
         let inner = Arc::new(Inner {
             routes: RwLock::new(FxHashMap::default()),
             closed: AtomicBool::new(false),
             socks: Mutex::new(Vec::new()),
             local: locals.into_iter().collect(),
             stats: Arc::new(TcpStats::default()),
-            events: None,
+            events,
             faults,
             links: Mutex::new(Vec::new()),
+            local_down: Mutex::new(FxHashSet::default()),
             trace: Mutex::new(None),
         });
         TcpTransport {
@@ -670,16 +717,17 @@ fn setup_server_conn(
     // Shard-side state (MinClock, registration counts) is sized for
     // `workers`: an out-of-range id must be refused at the door, not
     // allowed to panic the shard thread later. Shard peers (migration
-    // handoff links) are accepted as long as they are not impersonating
-    // a locally-hosted shard.
+    // handoff links) and the coordinator (failure-detector heartbeat
+    // links: StatsPull in, StatsReport back on the same connection) are
+    // accepted as long as they are not impersonating a locally-hosted
+    // node.
     ensure!(
         match peer {
             NodeId::Worker(w) => w < workers,
-            NodeId::Shard(_) => !inner.local.contains_key(&peer),
-            NodeId::Coordinator => false,
+            NodeId::Shard(_) | NodeId::Coordinator => !inner.local.contains_key(&peer),
         },
-        "handshake from {peer:?}, expected a worker id below {workers} or a \
-         remote shard peer"
+        "handshake from {peer:?}, expected a worker id below {workers}, a \
+         remote shard peer, or the coordinator"
     );
     // Clear the handshake timeout before the reader thread exists: the
     // option lives on the shared socket description, and a reader poll

@@ -116,8 +116,10 @@ pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
 /// placement delta's replica-promotion field; v6: the telemetry plane —
 /// the out-of-band StatsPull/StatsReport snapshot pair; v7: delta push
 /// waves — hybrid snapshot/delta payloads on Push/VapPush rows and the
-/// sparse-capable RowHandoff row encoding).
-pub const VERSION: u16 = 7;
+/// sparse-capable RowHandoff row encoding; v8: self-healing failover —
+/// the ReplicaSync/ReplicaCatchUp re-replication pair and the placement
+/// delta's attach/dead fields).
+pub const VERSION: u16 = 8;
 /// Versions this binary can speak (currently exactly [`VERSION`]; kept a
 /// range so the reject blob's negotiation surface survives a future
 /// multi-version binary).
@@ -148,6 +150,8 @@ const K_ROW_HANDOFF: u8 = 10;
 const K_MIGRATE_COMMIT: u8 = 11;
 const K_PROMOTE: u8 = 12;
 const K_STATS_PULL: u8 = 13;
+const K_REPLICA_SYNC: u8 = 14;
+const K_REPLICA_CATCH_UP: u8 = 15;
 const K_ROW: u8 = 16;
 const K_PUSH: u8 = 17;
 const K_VAP_PUSH: u8 = 18;
@@ -200,6 +204,8 @@ pub fn to_shard_body_len(m: &ToShard) -> usize {
         }
         ToShard::MigrateCommit { .. } => 8,
         ToShard::Promote { delta } => placement_delta_body_len(delta),
+        ToShard::ReplicaSync { .. } => 20,
+        ToShard::ReplicaCatchUp { .. } => 21,
         ToShard::StatsPull { .. } => 4,
         ToShard::Shutdown => 0,
     }
@@ -208,9 +214,10 @@ pub fn to_shard_body_len(m: &ToShard) -> usize {
 /// Encoded size of a `PlacementDelta` body (shared by the `ToWorker::
 /// Placement` broadcast and the `ToShard::Promote` control message):
 /// epoch 8 + at_clock 8 + grow flag/value 5 + promote flag/pair 9 +
-/// move count 4, then 16 bytes per move.
+/// attach flag/pair 9 + dead count 4 + move count 4, then 4 bytes per
+/// dead id and 16 per move.
 fn placement_delta_body_len(delta: &PlacementDelta) -> usize {
-    34 + 16 * delta.moves.len()
+    47 + 4 * delta.dead.len() + 16 * delta.moves.len()
 }
 
 /// Exact body size of a `ToWorker` message.
@@ -490,6 +497,28 @@ fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
             w8(w, K_PROMOTE)?;
             write_placement_delta(w, delta)
         }
+        ToShard::ReplicaSync {
+            epoch,
+            at_clock,
+            target,
+        } => {
+            w8(w, K_REPLICA_SYNC)?;
+            w64(w, *epoch)?;
+            wi64(w, *at_clock)?;
+            w32(w, *target)
+        }
+        ToShard::ReplicaCatchUp {
+            epoch,
+            at_clock,
+            source,
+            from_disk,
+        } => {
+            w8(w, K_REPLICA_CATCH_UP)?;
+            w64(w, *epoch)?;
+            wi64(w, *at_clock)?;
+            w32(w, *source)?;
+            w8(w, u8::from(*from_disk))
+        }
         ToShard::StatsPull { worker } => {
             w8(w, K_STATS_PULL)?;
             w32(w, *worker as u32)
@@ -511,6 +540,14 @@ fn write_placement_delta(w: &mut impl Write, delta: &PlacementDelta) -> io::Resu
     w8(w, u8::from(delta.promote.is_some()))?;
     w32(w, primary)?;
     w32(w, node)?;
+    let (a_primary, a_node) = delta.attach.unwrap_or((0, 0));
+    w8(w, u8::from(delta.attach.is_some()))?;
+    w32(w, a_primary)?;
+    w32(w, a_node)?;
+    w32(w, delta.dead.len() as u32)?;
+    for node in &delta.dead {
+        w32(w, *node)?;
+    }
     w32(w, delta.moves.len() as u32)?;
     for (key, dst) in &delta.moves {
         wkey(w, key)?;
@@ -826,6 +863,20 @@ fn decode_placement_delta(c: &mut Cur) -> Result<PlacementDelta> {
     let primary = c.u32()?;
     let node = c.u32()?;
     let promote = has_promote.then_some((primary, node));
+    let has_attach = c.bool()?;
+    let a_primary = c.u32()?;
+    let a_node = c.u32()?;
+    let attach = has_attach.then_some((a_primary, a_node));
+    let n_dead = c.u32()? as usize;
+    ensure!(
+        n_dead <= c.rem() / 4,
+        "placement claims {n_dead} dead nodes but only {} bytes remain",
+        c.rem()
+    );
+    let mut dead = Vec::with_capacity(n_dead);
+    for _ in 0..n_dead {
+        dead.push(c.u32()?);
+    }
     let n_moves = c.u32()? as usize;
     ensure!(
         n_moves <= c.rem() / 16,
@@ -842,6 +893,8 @@ fn decode_placement_delta(c: &mut Cur) -> Result<PlacementDelta> {
         at_clock,
         grow_active,
         promote,
+        attach,
+        dead,
         moves,
     })
 }
@@ -1034,6 +1087,17 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
         K_MIGRATE_COMMIT => Packet::ToShard(ToShard::MigrateCommit { epoch: c.u64()? }),
         K_PROMOTE => Packet::ToShard(ToShard::Promote {
             delta: decode_placement_delta(&mut c)?,
+        }),
+        K_REPLICA_SYNC => Packet::ToShard(ToShard::ReplicaSync {
+            epoch: c.u64()?,
+            at_clock: c.i64()?,
+            target: c.u32()?,
+        }),
+        K_REPLICA_CATCH_UP => Packet::ToShard(ToShard::ReplicaCatchUp {
+            epoch: c.u64()?,
+            at_clock: c.i64()?,
+            source: c.u32()?,
+            from_disk: c.bool()?,
         }),
         K_STATS_PULL => Packet::ToShard(ToShard::StatsPull {
             worker: c.worker()?,
@@ -1382,10 +1446,32 @@ mod tests {
                     at_clock: 0,
                     grow_active: None,
                     promote: Some((0, 2)),
+                    attach: None,
+                    dead: vec![0, 7],
                     moves: vec![],
                 },
             }),
+            Packet::ToShard(ToShard::ReplicaSync {
+                epoch: 3,
+                at_clock: 12,
+                target: 4,
+            }),
+            Packet::ToShard(ToShard::ReplicaCatchUp {
+                epoch: 3,
+                at_clock: 12,
+                source: 2,
+                from_disk: false,
+            }),
+            Packet::ToShard(ToShard::ReplicaCatchUp {
+                epoch: 4,
+                at_clock: -1,
+                source: 0,
+                from_disk: true,
+            }),
             Packet::ToShard(ToShard::StatsPull { worker: 3 }),
+            Packet::ToShard(ToShard::StatsPull {
+                worker: crate::ps::msg::COORD_STATS_WORKER,
+            }),
             Packet::ToShard(ToShard::Shutdown),
             Packet::ToWorker(ToWorker::Row {
                 key: (3, 1),
@@ -1417,6 +1503,8 @@ mod tests {
                     at_clock: 6,
                     grow_active: Some(4),
                     promote: None,
+                    attach: None,
+                    dead: vec![],
                     moves: vec![((0, 1), 3)],
                 },
             }),
@@ -1426,6 +1514,8 @@ mod tests {
                     at_clock: 11,
                     grow_active: None,
                     promote: Some((1, 3)),
+                    attach: Some((1, 4)),
+                    dead: vec![1],
                     moves: vec![],
                 },
             }),

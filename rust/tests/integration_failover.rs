@@ -1,0 +1,339 @@
+//! Self-healing failover integration: the coordinator's failure
+//! detector driving promotion, mid-flight worker repoint, WAL-fallback
+//! recovery onto spares, and automatic re-replication.
+//!
+//! Unlike `integration_durability` (which proves the *placement
+//! mechanics* are bit-invisible), these tests pin the *detection-driven*
+//! properties of PR 9:
+//!
+//!   * nobody is pre-armed with the failure schedule — the run report
+//!     must carry the detector's own account (confirmed deaths, the
+//!     measured failover window, the emitted promotions);
+//!   * workers survive the kill mid-flight (bounded GET retry + repoint)
+//!     for every consistency model over both transports, with the
+//!     staleness-violation tripwire at zero;
+//!   * a double failure (replica first, then its primary) must not
+//!     promote the dead replica — the coordinator falls back to a WAL
+//!     rebuild on a fresh spare, and the clients' resend window closes
+//!     the un-fsynced tail;
+//!   * re-replication: after promotion a spare is caught up from the
+//!     promoted primary behind an attach fence and ends bit-equal to it;
+//!   * randomized chaos: seeded compound fault plans (kill + crash +
+//!     pause + delay) all complete conserving the counter, printing any
+//!     violating seed for replay.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use essptable::ps::client::PsClient;
+use essptable::ps::consistency::Consistency;
+use essptable::ps::durability::DurabilityConfig;
+use essptable::ps::failover::FailoverConfig;
+use essptable::ps::server::{Cluster, ClusterConfig, PsApp, RunReport, TableSpec};
+use essptable::ps::types::{Clock, Key};
+use essptable::sim::fault::FaultPlan;
+use essptable::transport::TransportSel;
+use essptable::util::rng::splitmix64;
+
+const MODELS: [Consistency; 6] = [
+    Consistency::Bsp,
+    Consistency::Ssp { s: 2 },
+    Consistency::Essp { s: 2 },
+    Consistency::Async { refresh_every: 1 },
+    Consistency::Vap { v0: 100.0 },
+    Consistency::Avap { v0: 100.0, s: 2 },
+];
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("esspt-failover-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The order-sensitive fractional counter (the repo's bit-determinism
+/// probe): worker `w` adds 0.1*(w+1) to a dense row and two sparse
+/// indices of a wide row each clock.
+fn counter_run(cfg: ClusterConfig, clocks: u64) -> RunReport {
+    let workers = cfg.workers;
+    let mut cluster = Cluster::new(cfg);
+    cluster.add_table(TableSpec::zeros(0, 4, 1));
+    cluster.add_table(TableSpec::zeros(1, 2, 64));
+    let apps: Vec<Box<dyn PsApp>> = (0..workers)
+        .map(|w| {
+            Box::new(move |ps: &mut PsClient, _c: Clock| {
+                let _ = ps.get((0, 0));
+                ps.inc((0, 0), &[0.1 * (w + 1) as f32]);
+                let _ = ps.get((1, 0));
+                ps.inc_sparse((1, 0), &[(w, 0.1 * (w + 1) as f32), (17 + w, 0.01)]);
+                None
+            }) as Box<dyn PsApp>
+        })
+        .collect();
+    cluster.run(apps, clocks)
+}
+
+fn base_cfg(transport: TransportSel, consistency: Consistency, faults: &str) -> ClusterConfig {
+    ClusterConfig {
+        workers: 3,
+        shards: 2,
+        consistency,
+        transport,
+        deterministic: true,
+        faults: FaultPlan::parse(faults).unwrap(),
+        ..Default::default()
+    }
+}
+
+fn assert_counter_landed(ctx: &str, rows: &HashMap<Key, Vec<f32>>, clocks: u64) {
+    // 3 workers x clocks x 0.1*(w+1) = 0.6/clock in the dense row: the
+    // run did the whole workload through the failover, nothing lost or
+    // double-applied.
+    let expect = 0.6 * clocks as f64;
+    let v = rows[&(0, 0)][0] as f64;
+    assert!(
+        (v - expect).abs() < 1e-2,
+        "{ctx}: expected ~{expect} total, got {v}"
+    );
+}
+
+fn assert_bit_identical(ctx: &str, a: &HashMap<Key, Vec<f32>>, b: &HashMap<Key, Vec<f32>>) {
+    assert_eq!(a.len(), b.len(), "{ctx}: row sets differ");
+    for (k, va) in a {
+        let vb = b
+            .get(k)
+            .unwrap_or_else(|| panic!("{ctx}: row {k:?} missing"));
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: row {k:?} elem {i} differs: {x} vs {y}"
+            );
+        }
+    }
+}
+
+// --------------------------------------------- detection-driven failover
+
+#[test]
+fn detector_driven_kill_matrix_every_model_both_transports() {
+    // Primary 0 dies at clock 3 with NO pre-armed promotion: the run
+    // report must show the coordinator detected the death and emitted
+    // the promotion itself, the workers must have finished the workload
+    // through the repoint, and the staleness tripwire must stay zero.
+    for consistency in MODELS {
+        for transport in [TransportSel::Sim, TransportSel::Tcp] {
+            let label = format!(
+                "detect {} over {}",
+                consistency.label(),
+                transport.label()
+            );
+            let mut cfg = base_cfg(transport, consistency, "kill=s0@3");
+            cfg.replicas = 1;
+            let r = counter_run(cfg, 6);
+            assert_counter_landed(&label, &r.table_rows, 6);
+            assert_eq!(
+                r.staleness_violations, 0,
+                "{label}: staleness-violation counter tripped"
+            );
+            let fo = r
+                .failover
+                .as_ref()
+                .unwrap_or_else(|| panic!("{label}: no detector report"));
+            assert!(
+                fo.dead.contains(&0),
+                "{label}: node 0's death never confirmed (dead={:?})",
+                fo.dead
+            );
+            assert_eq!(
+                fo.promotions,
+                vec![(0, 2)],
+                "{label}: expected partition 0 promoted to its replica"
+            );
+            assert!(fo.unreplicated.is_empty(), "{label}: lost a partition");
+            assert!(
+                r.failover_ms.is_some(),
+                "{label}: failover window not measured"
+            );
+        }
+    }
+}
+
+#[test]
+fn detected_promotion_is_bit_identical_to_undisturbed_run() {
+    // The kill is pinned to a table clock, the *detection* is wall-clock
+    // — yet under deterministic staged replay the promoted replica's
+    // sorted (clock, worker) fold is the same fold, so final params
+    // match the undisturbed run to the bit over both transports.
+    for transport in [TransportSel::Sim, TransportSel::Tcp] {
+        let label = format!("detected promote over {}", transport.label());
+        let mut plain_cfg = base_cfg(transport, Consistency::Essp { s: 2 }, "");
+        plain_cfg.replicas = 1;
+        let plain = counter_run(plain_cfg, 6);
+        let mut kill_cfg = base_cfg(transport, Consistency::Essp { s: 2 }, "kill=s0@3");
+        kill_cfg.replicas = 1;
+        let killed = counter_run(kill_cfg, 6);
+        assert_bit_identical(&label, &plain.table_rows, &killed.table_rows);
+    }
+}
+
+#[test]
+fn failover_stall_metric_counts_the_window() {
+    // Between the primary's death and the client seeing the promotion,
+    // in-window GET retries surface as the `failover_stall` client
+    // metric rather than as silent latency. (BSP re-pulls every clock,
+    // so at least one worker is guaranteed to be in the window.)
+    let mut cfg = base_cfg(TransportSel::Sim, Consistency::Bsp, "kill=s0@3");
+    cfg.replicas = 1;
+    let r = counter_run(cfg, 6);
+    let stalls: u64 = r.client_stats.iter().map(|s| s.failover_stalls).sum();
+    assert!(
+        stalls > 0,
+        "no client ever recorded a failover stall across the kill window"
+    );
+}
+
+// ------------------------------------- double failure -> WAL fallback
+
+#[test]
+fn double_failure_falls_back_to_wal_spare_not_dead_replica() {
+    // The replica (node 2) dies FIRST, then its primary (node 0): the
+    // promotion must not target the dead replica. With a durable WAL and
+    // a provisioned spare, the coordinator orders a from-disk rebuild on
+    // the spare (node 4), promotes it, and the clients' resend window
+    // closes the un-fsynced tail — conserving the counter exactly.
+    let dir = tmp_dir("double");
+    let mut cfg = base_cfg(TransportSel::Sim, Consistency::Essp { s: 2 }, "kill=s2@2;kill=s0@4");
+    cfg.replicas = 1;
+    cfg.spare_nodes = 1;
+    cfg.resend_window = 4;
+    cfg.durability = Some(DurabilityConfig::new(&dir));
+    let r = counter_run(cfg, 8);
+    assert_counter_landed("double failure", &r.table_rows, 8);
+    assert_eq!(r.staleness_violations, 0);
+    let fo = r.failover.as_ref().expect("no detector report");
+    assert!(
+        fo.dead.contains(&2) && fo.dead.contains(&0),
+        "both deaths must be confirmed (dead={:?})",
+        fo.dead
+    );
+    assert_eq!(
+        fo.promotions,
+        vec![(0, 4)],
+        "partition 0 must promote onto the spare, never the dead replica"
+    );
+    assert!(fo.unreplicated.is_empty(), "partition lost despite the spare");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+// ------------------------------------------------------ re-replication
+
+#[test]
+fn re_replication_restores_a_bit_equal_replica() {
+    // After promoting partition 0 onto its replica, `re_replicate`
+    // catches a fresh spare up from the promoted primary behind an
+    // attach fence. By end of run the spare's copy of every row it
+    // holds must be bit-equal to the authoritative (promoted) copy, and
+    // replica reads must have resumed.
+    for transport in [TransportSel::Sim, TransportSel::Tcp] {
+        let label = format!("re-replicate over {}", transport.label());
+        let mut cfg = base_cfg(transport, Consistency::Bsp, "kill=s0@3");
+        cfg.replicas = 1;
+        cfg.failover = FailoverConfig {
+            re_replicate: true,
+            attach_slack: 6,
+            ..FailoverConfig::default()
+        };
+        // clocks must clear the attach fence (observed clock + slack)
+        // with room for the cut and a few duplicated commits.
+        let clocks = 24;
+        let r = counter_run(cfg, clocks);
+        assert_counter_landed(&label, &r.table_rows, clocks);
+        let fo = r.failover.as_ref().expect("no detector report");
+        assert_eq!(fo.promotions, vec![(0, 2)], "{label}");
+        assert_eq!(
+            fo.attached,
+            vec![(0, 4)],
+            "{label}: spare never attached as the replacement replica"
+        );
+        // replica_rows is indexed by node - primaries: node 4 -> index 2.
+        let spare_rows = &r.replica_rows[2];
+        assert!(
+            !spare_rows.is_empty(),
+            "{label}: the attached spare holds no rows (cut never landed?)"
+        );
+        for (k, v) in spare_rows {
+            let auth = &r.table_rows[k];
+            for (i, (a, b)) in v.iter().zip(auth).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{label}: spare row {k:?} elem {i} diverged from promoted primary"
+                );
+            }
+        }
+        assert!(
+            r.replica_hits > 0,
+            "{label}: replica read fan-out never resumed"
+        );
+    }
+}
+
+// --------------------------------------------------------- chaos smoke
+
+/// Seeded compound fault plan: some subset of {link delay, shard pause,
+/// kill, crash} with randomized parameters, always replayable from the
+/// printed seed.
+fn chaos_plan(seed: u64) -> String {
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xC0FF_EE;
+    let mut r = move || splitmix64(&mut s);
+    let mut parts = vec![format!("seed={seed}")];
+    if r() % 2 == 0 {
+        parts.push(format!("delay=w*-s*:{}ms", 1 + r() % 3));
+    }
+    if r() % 2 == 0 {
+        parts.push(format!("pause=s1@{}:{}ms", 2 + r() % 3, 1 + r() % 5));
+    }
+    match r() % 3 {
+        0 => parts.push(format!("kill=s0@{}", 2 + r() % 3)),
+        1 => parts.push(format!("crash=s{}@{}", r() % 2, 2 + r() % 3)),
+        _ => {}
+    }
+    parts.join(";")
+}
+
+#[test]
+fn chaos_smoke_every_plan_completes_with_zero_violations() {
+    // ~20 randomized compound plans across the model set; CI runs a fast
+    // subset by default, ESSPT_CHAOS_FULL=1 runs them all. Any failing
+    // seed is printed with its full plan for deterministic replay.
+    let full = std::env::var("ESSPT_CHAOS_FULL").is_ok_and(|v| v == "1");
+    let seeds: Vec<u64> = if full { (0..20).collect() } else { (0..6).collect() };
+    for seed in seeds {
+        let plan = chaos_plan(seed);
+        let consistency = MODELS[seed as usize % MODELS.len()];
+        let dir = tmp_dir(&format!("chaos-{seed}"));
+        let mut cfg = base_cfg(TransportSel::Sim, consistency, &plan);
+        cfg.replicas = 1; // kills promote a live replica
+        cfg.durability = Some(DurabilityConfig::new(&dir)); // crashes recover
+        let clocks = 6;
+        let r = counter_run(cfg, clocks);
+        let ctx = format!(
+            "chaos seed {seed} ({}) plan {plan:?} — replay with \
+             FaultPlan::parse({plan:?})",
+            consistency.label()
+        );
+        if r.staleness_violations != 0 {
+            eprintln!("CHAOS VIOLATION: {ctx}");
+        }
+        assert_eq!(r.staleness_violations, 0, "{ctx}");
+        let v = r.table_rows[&(0, 0)][0] as f64;
+        if (v - 0.6 * clocks as f64).abs() >= 1e-2 {
+            eprintln!("CHAOS CONSERVATION FAILURE: {ctx}");
+        }
+        assert_counter_landed(&ctx, &r.table_rows, clocks);
+        if let Some(fo) = &r.failover {
+            assert!(fo.unreplicated.is_empty(), "{ctx}: partition lost");
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

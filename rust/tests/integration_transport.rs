@@ -597,12 +597,15 @@ fn multiprocess_replicated_cluster_trains_and_conserves() {
 #[test]
 fn multiprocess_kill_promotes_replica_bit_exact() {
     // A real OS process dies: primary 0's serve-shard process is killed
-    // by the seeded fault plan at clock 4, its dying act a Promote frame
-    // over the shard->replica socket it dialed at startup. run-cluster
-    // hands the killed primary's --dump to the replica process instead,
-    // so shard_0.ckp below is written by the *promoted* node. The fold is
-    // placement-independent under deterministic BSP: the merged result
-    // must match the undisturbed single-process run to the bit.
+    // by the seeded fault plan at clock 4. Nothing is pre-armed — the
+    // run-cluster launcher runs the coordinator's failure detector over
+    // a real TCP endpoint (heartbeat StatsPull polls to every shard
+    // process), notices the victim's silence, and emits the Promote
+    // delta itself. run-cluster hands the killed primary's --dump to
+    // the replica process instead, so shard_0.ckp below is written by
+    // the *promoted* node. The fold is placement-independent under
+    // deterministic BSP: the merged result must match the undisturbed
+    // single-process run to the bit.
     let out = out_dir("kill");
     std::fs::create_dir_all(&out).unwrap();
     let status = Command::new(bin())

@@ -324,6 +324,8 @@ fn prop_placement_delta_is_conservative() {
             at_clock: 1,
             grow_active: None,
             promote: None,
+            attach: None,
+            dead: vec![],
             moves: pre_moves,
         });
         let before = map.clone();
@@ -347,6 +349,8 @@ fn prop_placement_delta_is_conservative() {
             at_clock: 5,
             grow_active,
             promote: None,
+            attach: None,
+            dead: vec![],
             moves,
         };
         let mut after = before.clone();
@@ -394,6 +398,8 @@ fn prop_post_migration_routing_agrees_between_client_and_shards() {
             at_clock: 3,
             grow_active: Some((active * mult) as u32),
             promote: None,
+            attach: None,
+            dead: vec![],
             moves,
         };
         let plans = plan_shards(&before, &delta, keys.iter().copied());

@@ -79,7 +79,7 @@ fn gen_push_rows(rng: &mut Rng) -> Vec<PushRow> {
         .collect()
 }
 
-const TO_SHARD_VARIANTS: usize = 14;
+const TO_SHARD_VARIANTS: usize = 16;
 
 fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
     match variant {
@@ -148,6 +148,9 @@ fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
                 grow_active: (rng.f64() < 0.3).then(|| 1 + rng.next_u32() % 64),
                 promote: (rng.f64() < 0.7)
                     .then(|| (rng.next_u32() % 16, 16 + rng.next_u32() % 16)),
+                attach: (rng.f64() < 0.4)
+                    .then(|| (rng.next_u32() % 16, 32 + rng.next_u32() % 16)),
+                dead: (0..rng.usize_below(4)).map(|_| rng.next_u32() % 48).collect(),
                 moves: (0..rng.usize_below(5))
                     .map(|_| (gen_key(rng), rng.next_u32() % 16))
                     .collect(),
@@ -155,6 +158,17 @@ fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
         },
         12 => ToShard::StatsPull {
             worker: rng.usize_below(64),
+        },
+        13 => ToShard::ReplicaSync {
+            epoch: rng.next_u64(),
+            at_clock: gen_clock(rng),
+            target: rng.next_u32() % 48,
+        },
+        14 => ToShard::ReplicaCatchUp {
+            epoch: rng.next_u64(),
+            at_clock: gen_clock(rng),
+            source: rng.next_u32() % 48,
+            from_disk: rng.f64() < 0.5,
         },
         _ => ToShard::Shutdown,
     }
@@ -209,6 +223,9 @@ fn gen_to_worker(rng: &mut Rng, variant: usize) -> ToWorker {
                 grow_active: (rng.f64() < 0.5).then(|| 1 + rng.next_u32() % 64),
                 promote: (rng.f64() < 0.3)
                     .then(|| (rng.next_u32() % 16, 16 + rng.next_u32() % 16)),
+                attach: (rng.f64() < 0.3)
+                    .then(|| (rng.next_u32() % 16, 32 + rng.next_u32() % 16)),
+                dead: (0..rng.usize_below(4)).map(|_| rng.next_u32() % 48).collect(),
                 moves: (0..rng.usize_below(5))
                     .map(|_| (gen_key(rng), rng.next_u32() % 16))
                     .collect(),
