@@ -281,6 +281,7 @@ fn bench_wire_batch_flush(out: &mut Vec<Entry>) {
         shard: 0,
         vclock: 7,
         rows,
+        span: None,
     });
     let mut batch: Vec<u8> = Vec::with_capacity(COALESCE);
     let r = bench("wire batch flush: 4096 delta-push frames, 64 KiB batches", 2, 10, || {
@@ -425,6 +426,52 @@ fn bench_telemetry_overhead(out: &mut Vec<Entry>) {
     r.print_throughput(ops, "get+inc");
     out.push((
         "e2e_essp3_x4w_telemetry_on".into(),
+        r.mean.as_secs_f64(),
+        r.throughput(ops),
+    ));
+}
+
+/// Request-span overhead: the headline ESSP workload with causal
+/// tracing armed — every 64th eligible frame carries the 12-byte wire-v9
+/// span context and each hop records timed segments into the shared
+/// ring — plus the per-shard hot-key sketch. Directly comparable to
+/// `e2e_essp3_x4w_get_into`; unsampled frames encode byte-identically
+/// to wire v8, so the expected delta is sampling-rate noise.
+fn bench_spans_overhead(out: &mut Vec<Entry>) {
+    use essptable::telemetry::spans::SpanRing;
+    let workers = 4;
+    let label = "e2e essp:3 x4w get_into spans-on: 1/64 sampled, 64 rd+inc/clock, 200 clocks";
+    let r = bench(label, 1, 5, || {
+        let mut cluster = Cluster::new(ClusterConfig {
+            workers,
+            shards: 2,
+            consistency: Consistency::Essp { s: 3 },
+            net: NetConfig::instant(),
+            spans: Some(std::sync::Arc::new(SpanRing::new(65536))),
+            span_sample: 64,
+            hot_key_k: 8,
+            ..Default::default()
+        });
+        cluster.add_table(TableSpec::zeros(0, 256, 32));
+        let apps: Vec<Box<dyn PsApp>> = (0..workers)
+            .map(|w| {
+                let mut buf: Vec<f32> = Vec::new();
+                Box::new(move |ps: &mut PsClient, _c: Clock| {
+                    for i in 0..64u64 {
+                        let key = (0, (w as u64 * 64 + i) % 256);
+                        ps.get_into(key, &mut buf);
+                        ps.inc(key, &[0.001f32; 32]);
+                    }
+                    None
+                }) as Box<dyn PsApp>
+            })
+            .collect();
+        let _ = cluster.run(apps, 200);
+    });
+    let ops = (workers * 64 * 200) as f64;
+    r.print_throughput(ops, "get+inc");
+    out.push((
+        "e2e_essp3_x4w_spans_on".into(),
         r.mean.as_secs_f64(),
         r.throughput(ops),
     ));
@@ -657,6 +704,7 @@ fn main() {
     bench_wire_batch_flush(&mut entries);
     if quick {
         bench_delta_push_tcp(&mut entries);
+        bench_spans_overhead(&mut entries);
         write_json(&entries);
         return;
     }
@@ -692,6 +740,8 @@ fn main() {
     bench_wal_overhead(FsyncPolicy::Commit, "commit", &mut entries);
     // Observability: wire-shipped stats + tracing vs the bare series.
     bench_telemetry_overhead(&mut entries);
+    // Causal request spans + hot-key sketch vs the bare series.
+    bench_spans_overhead(&mut entries);
     // Self-healing failover: one detect->promote->repoint cycle mid-run.
     bench_failover_recovery(&mut entries);
     bench_push_vs_pull_traffic();

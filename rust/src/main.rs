@@ -54,6 +54,7 @@ use essptable::sim::fault::{FaultInjector, FaultPlan, ShardAction};
 use essptable::sim::straggler::StragglerModel;
 use essptable::telemetry::admin;
 use essptable::telemetry::registry::MetricsSource;
+use essptable::telemetry::spans::{merge_chrome_docs, SpanRing};
 use essptable::telemetry::trace::TraceRing;
 use essptable::transport::tcp::{LocalSink, PeerEvent, TcpTransport};
 use essptable::transport::{NodeId, TransportSel};
@@ -129,9 +130,13 @@ const USAGE: &str = "usage: essptable <subcommand> [flags]
                  WAL-fallback recovery; see ps::failover docs)
   telemetry:    serve-shard/run-worker: [--metrics-addr ADDR]
                   [--trace-out FILE.jsonl [--trace-debug true]]
+                  [--trace-spans FILE.json [--span-sample N] [--span-cap N]]
+                serve-shard: [--hot-keys K]  (top-K hot-key sketch)
                 run-cluster: [--metrics true] [--trace-dir DIR]
+                  [--trace-spans FILE.json [--span-sample N]] [--hot-keys K]
                   [--stats-pull-every N]  (admin endpoints serve GET /json
-                  and GET /metrics; ps-top polls them)
+                  and GET /metrics; ps-top polls them; merged Chrome trace
+                  written to FILE.json post-run)
   common flags: --workers N --shards N --clocks N --seed N
                 --consistency bsp|ssp:S|essp:S|async[:R]|vap:V0|avap:V0:S
                 --straggler none|uniform:F|... --net lan|instant
@@ -241,12 +246,19 @@ fn fault_plan(args: &Args) -> anyhow::Result<FaultPlan> {
 /// `--metrics-addr ADDR` binds the admin scrape socket, `--trace-out
 /// FILE.jsonl` collects structured events into a ring dumped at exit,
 /// `--trace-debug true` additionally records debug-level events (e.g.
-/// per-link backpressure). All strictly out-of-band: absent flags cost
-/// the data plane nothing.
+/// per-link backpressure). `--trace-spans FILE.json` turns on causal
+/// request tracing (wire v9): one of every `--span-sample` client-issued
+/// frames carries a span context, every hop appends a timed segment, and
+/// the ring dumps a Chrome trace-event document at exit (`--span-cap`
+/// bounds the raw-event ring). All strictly out-of-band: absent flags
+/// cost the data plane nothing.
 struct Telemetry {
     metrics_addr: Option<String>,
     trace_out: Option<PathBuf>,
     ring: Option<Arc<TraceRing>>,
+    trace_spans: Option<PathBuf>,
+    spans: Option<Arc<SpanRing>>,
+    span_sample: u64,
 }
 
 fn telemetry(args: &Args) -> Telemetry {
@@ -257,10 +269,17 @@ fn telemetry(args: &Args) -> Telemetry {
             args.bool("trace-debug", false),
         ))
     });
+    let trace_spans = args.opt_str("trace-spans").map(PathBuf::from);
+    let spans = trace_spans
+        .as_ref()
+        .map(|_| Arc::new(SpanRing::new(args.usize("span-cap", 65536))));
     Telemetry {
         metrics_addr: args.opt_str("metrics-addr"),
         trace_out,
         ring,
+        trace_spans,
+        spans,
+        span_sample: args.u64("span-sample", 64),
     }
 }
 
@@ -290,6 +309,23 @@ impl Telemetry {
                 "trace: {} events ({} dropped) -> {}",
                 ring.len(),
                 ring.dropped(),
+                path.display()
+            );
+        }
+        Ok(())
+    }
+
+    /// Dump sampled request spans to `--trace-spans` as a Chrome
+    /// trace-event document (one `pid` lane per process; `run-cluster`
+    /// merges the per-process parts into one loadable file).
+    fn dump_spans(&self, pid: u64) -> anyhow::Result<()> {
+        if let (Some(path), Some(ring)) = (&self.trace_spans, &self.spans) {
+            let p = path.to_str().context("non-utf8 --trace-spans path")?;
+            ring.dump_chrome(p, pid)
+                .with_context(|| format!("writing spans to {}", path.display()))?;
+            println!(
+                "spans: {} segment events -> {}",
+                ring.events().len(),
                 path.display()
             );
         }
@@ -366,6 +402,26 @@ fn print_report(label: &str, report: &RunReport, final_value: f64, value_name: &
             hwm.join(", "),
             report.staleness_violations
         );
+    }
+    if report.staleness_lag.count > 0 {
+        println!(
+            "  staleness lag   p50 {}  p99 {}  max-bucket {} clocks  ({} reads)",
+            report.staleness_lag.quantile(0.50),
+            report.staleness_lag.quantile(0.99),
+            report.staleness_lag.quantile(1.0),
+            report.staleness_lag.count,
+        );
+    }
+    if !report.span_segments.is_empty() {
+        println!("  span segments   (sampled causal traces)");
+        for (seg, h) in &report.span_segments {
+            println!(
+                "    {seg:<22} p50 {:>8}us  p99 {:>8}us  ({} spans)",
+                h.quantile(0.50),
+                h.quantile(0.99),
+                h.count,
+            );
+        }
     }
 }
 
@@ -764,6 +820,9 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
     if let Some(ring) = &telem.ring {
         transport.set_trace(ring.clone());
     }
+    if let Some(ring) = &telem.spans {
+        transport.set_spans(ring.clone());
+    }
     let role = if is_spare {
         match &replica_of {
             Some(p) => format!("spare, re-replication target for shard {p}"),
@@ -843,6 +902,16 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
             }
         });
     }
+    // Profiling hooks. Hot-key sketches resize through `Arc::get_mut`,
+    // so they must be installed before the metrics handle is ever
+    // shared (durability, admin sources); spans ride along here.
+    let hot_keys = args.usize("hot-keys", 0);
+    if hot_keys > 0 {
+        shard.set_hot_key_k(hot_keys);
+    }
+    if let Some(ring) = &telem.spans {
+        shard.set_spans(ring.clone(), telem.span_sample);
+    }
     if let Some(dur) = &durability {
         // On-disk paths embed the shard id, so every node of a local
         // cluster may share one --wal directory without collisions.
@@ -868,6 +937,9 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
     sources.push(transport.metrics_source());
     if let Some(inj) = &injector {
         sources.push(inj.clone());
+    }
+    if let Some(ring) = &telem.spans {
+        sources.push(ring.clone());
     }
     let _admin = telem.serve(sources)?;
     let (dump_tx, dump_rx) = channel();
@@ -935,6 +1007,7 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
         transport.join();
         // The kill is exactly what the trace exists to document.
         telem.dump()?;
+        telem.dump_spans(index as u64)?;
         return Ok(());
     }
     let _ = shard_tx.send(ToShard::Shutdown);
@@ -954,6 +1027,7 @@ fn cmd_serve_shard(args: &Args) -> anyhow::Result<()> {
     transport.close_send();
     transport.join();
     telem.dump()?;
+    telem.dump_spans(index as u64)?;
     Ok(())
 }
 
@@ -1031,6 +1105,9 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
     if let Some(ring) = &telem.ring {
         transport.set_trace(ring.clone());
     }
+    if let Some(ring) = &telem.spans {
+        transport.set_spans(ring.clone());
+    }
     let client_cfg = ClientConfig {
         consistency,
         cache_capacity: 0,
@@ -1038,6 +1115,7 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
         virtual_clock: None,
         stats_pull_every: args.u64("stats-pull-every", 0) as Clock,
         resend_window: args.u64("resend-window", 0) as Clock,
+        span_sample: if telem.spans.is_some() { telem.span_sample } else { 0 },
     };
     let mut ps = PsClient::new(
         index,
@@ -1051,6 +1129,9 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
     if let Some(ring) = &telem.ring {
         ps.set_trace(ring.clone());
     }
+    if let Some(ring) = &telem.spans {
+        ps.set_spans(ring.clone());
+    }
     // Admin scrape sources: this worker's registry, its wire-shipped
     // mirror of shard stats (populated by StatsReport replies when
     // --stats-pull-every > 0), the transport, and any fault injector.
@@ -1060,6 +1141,9 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
     sources.push(transport.metrics_source());
     if let Some(inj) = &injector {
         sources.push(inj.clone());
+    }
+    if let Some(ring) = &telem.spans {
+        sources.push(ring.clone());
     }
     let _admin = telem.serve(sources)?;
     let mut worker = (app.make)(index, workers);
@@ -1094,6 +1178,9 @@ fn cmd_run_worker(args: &Args) -> anyhow::Result<()> {
     transport.close_send();
     transport.join();
     telem.dump()?;
+    // Worker pid lanes sit past every plausible shard index, so a
+    // single-process Chrome trace load still reads unambiguously.
+    telem.dump_spans(1000 + index as u64)?;
     Ok(())
 }
 
@@ -1261,6 +1348,16 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
     }
     let trace_debug = args.bool("trace-debug", false);
     let stats_pull_every = args.u64("stats-pull-every", if metrics { 4 } else { 0 });
+    // Causal request tracing: `--trace-spans FILE.json` makes every child
+    // process collect sampled spans (`--span-sample N`, forwarded so the
+    // whole cluster samples identically) into a per-process part file
+    // under --out; the launcher merges the parts into FILE post-run, so
+    // one document shows request spans crossing process boundaries.
+    // `--hot-keys K` arms each shard's top-K space-saving key sketch.
+    let trace_spans = args.opt_str("trace-spans").map(PathBuf::from);
+    let span_sample = args.u64("span-sample", 64);
+    let hot_keys = args.usize("hot-keys", 0);
+    let mut span_parts: Vec<(String, PathBuf)> = Vec::new();
     let metrics_addrs = if metrics {
         let picked = pick_local_ports(total_nodes + workers)?;
         for (i, a) in picked.iter().take(total_nodes).enumerate() {
@@ -1405,6 +1502,19 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
                 sargs.extend(["--trace-debug".into(), "true".into()]);
             }
         }
+        if trace_spans.is_some() {
+            let part = out.join(format!("spans_shard_{i}.json"));
+            sargs.extend([
+                "--trace-spans".into(),
+                part.to_str().context("non-utf8 span path")?.to_string(),
+                "--span-sample".into(),
+                span_sample.to_string(),
+            ]);
+            span_parts.push((format!("shard {i}"), part));
+        }
+        if hot_keys > 0 {
+            sargs.extend(["--hot-keys".into(), hot_keys.to_string()]);
+        }
         sargs.extend(dur_flags.iter().cloned());
         sargs.extend(app_flags.iter().cloned());
         let child = Command::new(&exe).args(&sargs).spawn();
@@ -1470,6 +1580,16 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
             if trace_debug {
                 wargs.extend(["--trace-debug".into(), "true".into()]);
             }
+        }
+        if trace_spans.is_some() {
+            let part = out.join(format!("spans_worker_{w}.json"));
+            wargs.extend([
+                "--trace-spans".into(),
+                part.to_str().context("non-utf8 span path")?.to_string(),
+                "--span-sample".into(),
+                span_sample.to_string(),
+            ]);
+            span_parts.push((format!("worker {w}"), part));
         }
         wargs.extend(app_flags.iter().cloned());
         let child = Command::new(&exe).args(&wargs).spawn();
@@ -1669,6 +1789,29 @@ fn cmd_run_cluster(args: &Args) -> anyhow::Result<()> {
         }
         _ => {}
     }
+
+    // Merge the per-process span parts into one Chrome trace document:
+    // a sampled request's client-, transport-, and shard-side segments
+    // share one trace id, so the merged file shows individual requests
+    // crossing process boundaries.
+    if let Some(path) = &trace_spans {
+        let mut parts: Vec<(String, Json)> = Vec::new();
+        for (label, file) in &span_parts {
+            let body = std::fs::read_to_string(file)
+                .with_context(|| format!("reading span part {}", file.display()))?;
+            let doc = Json::parse(&body)
+                .map_err(|e| anyhow::anyhow!("span part {}: {e:?}", file.display()))?;
+            parts.push((label.clone(), doc));
+        }
+        let merged = merge_chrome_docs(&parts);
+        std::fs::write(path, merged.to_string_pretty(1))
+            .with_context(|| format!("writing merged spans to {}", path.display()))?;
+        println!(
+            "spans: merged {} process parts -> {}",
+            parts.len(),
+            path.display()
+        );
+    }
     Ok(())
 }
 
@@ -1691,17 +1834,29 @@ fn cmd_ps_top(args: &Args) -> anyhow::Result<()> {
     let iters = args.u64("iters", 0);
     let timeout = Duration::from_secs(2);
     let mut round = 0u64;
+    // Per-poll rates: previous counter values keyed "addr|node|metric";
+    // the delta over the measured inter-poll interval is the live rate.
+    let mut prev: HashMap<String, u64> = HashMap::new();
+    let mut last_poll = Instant::now();
     loop {
         round += 1;
+        // First round has no baseline — rate cells stay blank.
+        let elapsed = if round > 1 {
+            last_poll.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
+        last_poll = Instant::now();
         println!("== ps-top round {round}");
         println!(
-            "  {:<22} {:<14} {:>10} {:>10} {:>8} {:>7} {:>9} {:>9}",
-            "endpoint", "node", "reads", "upd/pull", "commits", "queue", "p50(us)", "p99(us)"
+            "  {:<22} {:<14} {:>10} {:>10} {:>8} {:>8} {:>8} {:>7} {:>9} {:>9}",
+            "endpoint", "node", "reads", "upd/pull", "reads/s", "upds/s", "commits", "queue",
+            "p50(us)", "p99(us)"
         );
         for addr in &addrs {
             match admin::scrape(addr, "/json", timeout) {
                 Ok(body) => match Json::parse(&body) {
-                    Ok(doc) => print_top_rows(addr, &doc),
+                    Ok(doc) => print_top_rows(addr, &doc, &mut prev, elapsed),
                     Err(e) => println!("  {addr:<22} <bad json: {e:?}>"),
                 },
                 Err(e) => println!("  {addr:<22} <unreachable: {e}>"),
@@ -1719,7 +1874,12 @@ fn cmd_ps_top(args: &Args) -> anyhow::Result<()> {
 /// (a shard *serves* gets, a worker *issues* them); each cell takes the
 /// first name the node actually has, and stays blank otherwise (tcp and
 /// fault rows mostly show blanks — their numbers live in `/json`).
-fn print_top_rows(addr: &str, doc: &Json) {
+///
+/// `prev` holds the last poll's counter values (keyed addr|node|metric)
+/// so the rate cells show the per-interval delta; a node carrying
+/// hot-key sketch entries (`hot.g.*` / `hot.u.*`) or span segment
+/// histograms (`span.*`) gets an extra panel line under its row.
+fn print_top_rows(addr: &str, doc: &Json, prev: &mut HashMap<String, u64>, elapsed: f64) {
     let nodes = match doc.get("nodes").and_then(|n| n.as_arr()) {
         Ok(n) => n,
         Err(e) => {
@@ -1729,16 +1889,29 @@ fn print_top_rows(addr: &str, doc: &Json) {
     };
     for node in nodes {
         let name = node.get("node").and_then(|n| n.as_str()).unwrap_or("?");
+        let lookup = |keys: &[&str]| -> Option<(String, u64)> {
+            keys.iter().find_map(|k| {
+                node.get("metrics")
+                    .and_then(|o| o.get(k))
+                    .and_then(|v| v.as_u64())
+                    .ok()
+                    .map(|v| (k.to_string(), v))
+            })
+        };
         let metric = |keys: &[&str]| -> String {
-            keys.iter()
-                .find_map(|k| {
-                    node.get("metrics")
-                        .and_then(|o| o.get(k))
-                        .and_then(|v| v.as_u64())
-                        .ok()
-                })
-                .map(|v| v.to_string())
-                .unwrap_or_default()
+            lookup(keys).map(|(_, v)| v.to_string()).unwrap_or_default()
+        };
+        let mut rate = |keys: &[&str]| -> String {
+            let Some((k, v)) = lookup(keys) else {
+                return String::new();
+            };
+            let before = prev.insert(format!("{addr}|{name}|{k}"), v);
+            match before {
+                Some(p) if elapsed > 0.0 => {
+                    format!("{:.0}", v.saturating_sub(p) as f64 / elapsed)
+                }
+                _ => String::new(),
+            }
         };
         let quant = |hists: &[&str], p: &str| -> String {
             hists
@@ -1753,8 +1926,11 @@ fn print_top_rows(addr: &str, doc: &Json) {
                 .map(|ns| format!("{:.0}", ns / 1_000.0))
                 .unwrap_or_default()
         };
+        let reads_rate = rate(&["gets_served", "gets"]);
+        let upds_rate = rate(&["updates_applied", "pulls"]);
         println!(
-            "  {addr:<22} {name:<14} {:>10} {:>10} {:>8} {:>7} {:>9} {:>9}",
+            "  {addr:<22} {name:<14} {:>10} {:>10} {reads_rate:>8} {upds_rate:>8} {:>8} {:>7} \
+             {:>9} {:>9}",
             metric(&["gets_served", "gets"]),
             metric(&["updates_applied", "pulls"]),
             metric(&["commits"]),
@@ -1762,6 +1938,61 @@ fn print_top_rows(addr: &str, doc: &Json) {
             quant(&["read_latency_ns", "wal_append_ns"], "p50"),
             quant(&["read_latency_ns", "wal_append_ns"], "p99"),
         );
+        // Hot-key panel: the shard's space-saving sketch ships its top-K
+        // entries as plain metrics named hot.g.<table>:<row> (GETs) and
+        // hot.u.<table>:<row> (updates).
+        let mut hot: Vec<(&str, &str, u64)> = node
+            .get("metrics")
+            .and_then(|o| o.as_obj())
+            .map(|m| {
+                m.iter()
+                    .filter_map(|(k, v)| {
+                        let (kind, key) = if let Some(r) = k.strip_prefix("hot.g.") {
+                            ("G", r)
+                        } else if let Some(r) = k.strip_prefix("hot.u.") {
+                            ("U", r)
+                        } else {
+                            return None;
+                        };
+                        v.as_u64().ok().map(|c| (kind, key, c))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        if !hot.is_empty() {
+            hot.sort_by(|a, b| b.2.cmp(&a.2).then(a.1.cmp(b.1)).then(a.0.cmp(b.0)));
+            let cells: Vec<String> = hot
+                .iter()
+                .take(8)
+                .map(|(kind, key, c)| format!("{kind}:{key}={c}"))
+                .collect();
+            println!("  {:<22} {name:<14} hot keys  {}", "", cells.join("  "));
+        }
+        // Span-segment panel: per-segment latency families recorded by
+        // the causal tracing plane (span.<segment>_us histograms).
+        let segs: Vec<String> = node
+            .get("hists")
+            .and_then(|o| o.as_obj())
+            .map(|m| {
+                m.iter()
+                    .filter(|(k, _)| k.starts_with("span."))
+                    .filter_map(|(k, v)| {
+                        let p50 = v.get("p50").and_then(|x| x.as_f64()).ok()?;
+                        let p99 = v.get("p99").and_then(|x| x.as_f64()).ok()?;
+                        let seg = k.strip_prefix("span.").unwrap_or(k);
+                        let seg = seg.strip_suffix("_us").unwrap_or(seg);
+                        Some(format!("{seg} {p50:.0}/{p99:.0}"))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        if !segs.is_empty() {
+            println!(
+                "  {:<22} {name:<14} spans p50/p99(us)  {}",
+                "",
+                segs.join("  ")
+            );
+        }
     }
 }
 

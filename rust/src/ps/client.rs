@@ -40,6 +40,7 @@ use super::update::UpdateMap;
 use crate::metrics::staleness::StalenessHist;
 use crate::metrics::timeline::Timeline;
 use crate::telemetry::registry::{Counter, LogHist, MetricsSource, Snapshot};
+use crate::telemetry::spans::{Mark, SpanCtx, SpanRing, SpanSampler};
 use crate::telemetry::trace::TraceRing;
 use crate::transport::{NodeId, Packet, TransportHandle};
 use crate::util::hash::{FxHashMap, FxHashSet};
@@ -68,6 +69,12 @@ pub struct ClientConfig {
     /// or durable clusters should set it to at least the model's
     /// staleness bound + 1.
     pub resend_window: Clock,
+    /// Causal request tracing: sample one of every `n` client-issued
+    /// frames (Get pulls and primary Update batches) with a wire-v9 span
+    /// context, so each hop can append a timed segment (`--span-sample`;
+    /// 0 disables — sampled-out frames carry zero extra wire bytes).
+    /// Strictly out-of-band: never consulted by any protocol decision.
+    pub span_sample: u64,
 }
 
 impl Default for ClientConfig {
@@ -79,6 +86,7 @@ impl Default for ClientConfig {
             virtual_clock: None,
             stats_pull_every: 0,
             resend_window: 0,
+            span_sample: 0,
         }
     }
 }
@@ -159,6 +167,13 @@ pub struct ClientMetrics {
     pub stats_reports: Counter,
     /// Wall time of every admitted read, miss round-trips included.
     pub read_latency_ns: LogHist,
+    /// Per-read staleness lag: this worker's clock minus the served
+    /// copy's guaranteed vclock, clamped at zero (log2 buckets). The
+    /// non-negative mirror of the paper's clock differential — BSP pins
+    /// it at 1, SSP spreads it over the window, ESSP's eager waves
+    /// concentrate it near 1. Surfaced per consistency model in
+    /// `RunReport` and Prometheus (see `ps::server` § Observability).
+    pub staleness_lag: LogHist,
     /// Total wall time blocked in the SSP/miss pull loop.
     pub read_stall_ns: Counter,
     /// Total wall time blocked on revoked value-bound grants (VAP).
@@ -181,6 +196,7 @@ impl ClientMetrics {
             staleness_violations: Counter::new(),
             stats_reports: Counter::new(),
             read_latency_ns: LogHist::new(),
+            staleness_lag: LogHist::new(),
             read_stall_ns: Counter::new(),
             vap_stall_ns: Counter::new(),
             failover_stall: Counter::new(),
@@ -204,6 +220,7 @@ impl ClientMetrics {
             ("failover_stall".into(), self.failover_stall.get()),
         ];
         self.read_latency_ns.snapshot().entries("read_latency_ns", &mut out);
+        self.staleness_lag.snapshot().entries("staleness_lag", &mut out);
         out
     }
 }
@@ -324,6 +341,15 @@ pub struct PsClient {
     shard_reports: Arc<ShardReportMirror>,
     /// Event-trace flight recorder, when enabled (`--trace-out`).
     trace: Option<Arc<TraceRing>>,
+    /// Request-span recorder (`--trace-spans`), when attached. Strictly
+    /// out-of-band: sampling only decides whether a frame carries the
+    /// 12-byte span tail, never how it is routed or admitted.
+    spans: Option<Arc<SpanRing>>,
+    /// Deterministic per-client sampling counter (`ClientConfig::
+    /// span_sample`): frame k of every `n` gets trace id
+    /// `(worker << 40) | seq` — unique across workers with no
+    /// coordination, and identical run-to-run.
+    span_sampler: SpanSampler,
 }
 
 impl PsClient {
@@ -337,6 +363,7 @@ impl PsClient {
         started: Instant,
     ) -> Self {
         let cache_capacity = cfg.cache_capacity;
+        let span_sample = cfg.span_sample;
         // Policy state that is per-shard (bound grants) covers the
         // primaries: replicas never push, report or grant.
         let policy = cfg.consistency.client_policy(placement.primaries());
@@ -370,6 +397,8 @@ impl PsClient {
             metrics: Arc::new(ClientMetrics::new(worker)),
             shard_reports: Arc::new(ShardReportMirror::new()),
             trace: None,
+            spans: None,
+            span_sampler: SpanSampler::new(span_sample),
         }
     }
 
@@ -387,6 +416,68 @@ impl PsClient {
     /// Attach the event-trace flight recorder.
     pub fn set_trace(&mut self, ring: Arc<TraceRing>) {
         self.trace = Some(ring);
+    }
+
+    /// Attach the request-span recorder (sampling rate comes from
+    /// [`ClientConfig::span_sample`]; with no ring attached the sampler
+    /// is never consulted and every frame ships span-free).
+    pub fn set_spans(&mut self, ring: Arc<SpanRing>) {
+        self.spans = Some(ring);
+    }
+
+    /// Draw the next sampling decision: `Some(ctx)` for one of every
+    /// `span_sample` issued frames when a recorder is attached.
+    fn span_sample(&mut self) -> Option<SpanCtx> {
+        if self.spans.is_none() {
+            return None;
+        }
+        self.span_sampler
+            .tick()
+            .map(|seq| SpanCtx::for_worker(self.worker as u32, seq))
+    }
+
+    /// Timestamp (µs) iff `span` is sampled and a recorder is attached —
+    /// zero otherwise, so unsampled paths never touch the clock.
+    fn span_ts(&self, span: Option<SpanCtx>) -> u64 {
+        if self.spans.is_some() && span.is_some() {
+            SpanRing::now_us()
+        } else {
+            0
+        }
+    }
+
+    /// Close a segment opened at `start_us` (no-op when unsampled).
+    fn span_record(&self, span: Option<SpanCtx>, seg: &'static str, start_us: u64) {
+        if let (Some(ring), Some(span)) = (&self.spans, span) {
+            let now = SpanRing::now_us();
+            ring.record(
+                span,
+                &self.metrics.node,
+                seg,
+                start_us,
+                now.saturating_sub(start_us),
+            );
+        }
+    }
+
+    /// Inbound frame carrying a span: close the inbox-wait segment the
+    /// transport's arrival mark opened (`reply_decode` for pull replies,
+    /// same name for push waves — both measure arrival-to-pickup).
+    fn span_arrive(&self, span: Option<SpanCtx>) {
+        let (Some(ring), Some(span)) = (&self.spans, span) else {
+            return;
+        };
+        let now = SpanRing::now_us();
+        let start = ring
+            .take_mark(span.trace_id, Mark::ArriveWorker)
+            .unwrap_or(now);
+        ring.record(
+            span,
+            &self.metrics.node,
+            "reply_decode",
+            start,
+            now.saturating_sub(start),
+        );
     }
 
     /// Record one lifecycle event on the attached trace ring (no-op when
@@ -446,18 +537,25 @@ impl PsClient {
                 data,
                 vclock,
                 fresh,
+                span,
             } => {
+                self.span_arrive(span);
+                let t0 = self.span_ts(span);
                 let source = self
                     .pulls_in_flight
                     .remove(&key)
                     .unwrap_or(super::cache::NO_SOURCE);
                 self.cache.insert(key, data, vclock, fresh, source);
+                self.span_record(span, "cache_install", t0);
             }
             ToWorker::Push {
                 shard,
                 vclock,
                 rows,
+                span,
             } => {
+                self.span_arrive(span);
+                let span_t0 = self.span_ts(span);
                 self.stats.pushes_received += 1;
                 self.stats.rows_pushed_in += rows.len() as u64;
                 self.metrics.pushes_received.inc();
@@ -504,6 +602,7 @@ impl PsClient {
                 if vclock > self.shard_announced[shard] {
                     self.shard_announced[shard] = vclock;
                 }
+                self.span_record(span, "cache_install", span_t0);
                 self.send(
                     shard,
                     ToShard::PushAck {
@@ -690,6 +789,7 @@ impl PsClient {
                                 worker: self.worker,
                                 clock: *c,
                                 rows: rows.clone(),
+                                span: None,
                             },
                         );
                     }
@@ -858,6 +958,13 @@ impl PsClient {
                     let differential = vclock - self.clock;
                     let data = Arc::clone(&row.data);
                     self.staleness.record(differential);
+                    // Staleness-lag observability: the same differential,
+                    // negated and clamped — how many clocks *behind* this
+                    // worker the served copy was guaranteed at, in log2
+                    // buckets for the live plane.
+                    self.metrics
+                        .staleness_lag
+                        .record((self.clock - vclock).max(0) as u64);
                     // Tripwire, not flow control: the admission above just
                     // enforced the bound, so this counter is provably zero
                     // unless a wave/announcement/migration path certifies a
@@ -1000,14 +1107,18 @@ impl PsClient {
             self.placement.shard_of(&key)
         };
         self.pulls_in_flight.insert(key, target);
+        let span = self.span_sample();
+        let t0 = self.span_ts(span);
         self.send(
             target,
             ToShard::Get {
                 key,
                 worker: self.worker,
                 min_vclock,
+                span,
             },
         );
+        self.span_record(span, "client_issue", t0);
     }
 
     /// INC: additive update, coalesced client-side until CLOCK.
@@ -1102,12 +1213,16 @@ impl PsClient {
                     if rep == self.placement.node_of(shard) || self.placement.is_dead(rep) {
                         continue;
                     }
+                    // Duplicated copies (replicas, spares) ship span-free:
+                    // one trace id must not ride several concurrent
+                    // frames, or their arrival marks would collide.
                     self.send(
                         rep,
                         ToShard::Update {
                             worker: self.worker,
                             clock: self.clock,
                             rows: rows.clone(),
+                            span: None,
                         },
                     );
                 }
@@ -1121,18 +1236,25 @@ impl PsClient {
                             worker: self.worker,
                             clock: self.clock,
                             rows: rows.clone(),
+                            span: None,
                         },
                     );
                 }
                 self.stats.update_batches += 1;
+                // Only the primary-bound copy is span-eligible: it is the
+                // frame whose apply the model's guarantees hang off.
+                let span = self.span_sample();
+                let t0 = self.span_ts(span);
                 self.send(
                     shard,
                     ToShard::Update {
                         worker: self.worker,
                         clock: self.clock,
                         rows,
+                        span,
                     },
                 );
+                self.span_record(span, "client_issue", t0);
             }
         }
         // Commit tick to every shard node (FIFO after the updates) —

@@ -271,6 +271,7 @@ mod tests {
                     ((0, 7), vec![1.0f32, -2.5, 3.25].into()),
                     ((0, 9), RowDelta::sparse(1024, vec![(3, 1.0), (900, -2.25)])),
                 ],
+                span: None,
             },
             ToShard::ClockTick { worker: 1, clock: 4 },
             ToShard::MigrateCommit { epoch: 2 },

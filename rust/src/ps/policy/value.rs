@@ -379,6 +379,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![1.0].into())],
+            span: None,
         });
         // The wave reaches readers 1 and 2 but never the writer.
         for w in [1usize, 2] {
@@ -418,6 +419,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![5.0].into())],
+            span: None,
         });
         // Worker 1 sees: revoke, then the wave.
         match recv(&wrxs[1]) {
@@ -459,6 +461,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![5.0].into())],
+            span: None,
         });
         // Worker 1 never acks — it finishes instead. The part must retire
         // and the grant return to worker 0 (the only attached worker).
@@ -481,6 +484,7 @@ mod tests {
             worker: 0,
             clock: 1,
             rows: vec![((0, 1), vec![0.1].into())],
+            span: None,
         });
         // Drain anything addressed to worker 1 before the update above:
         // only the pre-detach revoke/wave pair may be present.
@@ -516,6 +520,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![1.0, 2.0].into())],
+            span: None,
         });
         // The store is unchanged (staged until commit) ...
         assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[10.0, 20.0]);
@@ -540,6 +545,7 @@ mod tests {
             worker: 1,
             clock: 0,
             rows: vec![((0, 1), vec![100.0, 0.0].into())],
+            span: None,
         });
         match recv(&wrxs[0]) {
             ToWorker::VapPush { rows, .. } => {
@@ -574,6 +580,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), RowDelta::sparse(3, vec![(2, 2.0)]))],
+            span: None,
         });
         // Store untouched; wave previews the sparse overlay.
         assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[10.0, 20.0, 30.0]);
@@ -605,6 +612,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![1.0, 2.0].into())],
+            span: None,
         });
         // First contact: readers 1 and 2 are seeded with snapshots.
         let mut seed_seq = 0;
@@ -628,6 +636,7 @@ mod tests {
             worker: 0,
             clock: 1,
             rows: vec![((0, 1), RowDelta::sparse(2, vec![(1, 3.0)]))],
+            span: None,
         });
         for w in [1usize, 2] {
             match recv(&wrxs[w]) {
@@ -651,6 +660,7 @@ mod tests {
             key: (0, 1),
             worker: 1,
             min_vclock: crate::ps::types::NEVER,
+            span: None,
         });
         match recv(&wrxs[1]) {
             ToWorker::Row { .. } => {}
@@ -665,6 +675,7 @@ mod tests {
             worker: 0,
             clock: 2,
             rows: vec![((0, 1), vec![0.5, 0.0].into())],
+            span: None,
         });
         match recv(&wrxs[1]) {
             ToWorker::VapPush { rows, .. } => {

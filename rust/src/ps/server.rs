@@ -188,6 +188,34 @@
 //! cluster-wide state, and through the `--metrics-addr` admin socket
 //! (`GET /json`, Prometheus-style `GET /metrics`) that `ps-top` polls.
 //!
+//! **Causal request spans** (`telemetry::spans`, wire v9). With
+//! `ClusterConfig::spans` attached and `span_sample = n`, one of every
+//! `n` client-issued Get pulls and primary Update batches (plus
+//! shard-originated push frames) carries a 12-byte span context
+//! (`trace_id | parent`) on the wire; every hop appends a timed segment
+//! to the shared [`crate::telemetry::spans::SpanRing`] —
+//! `client_issue`, `transport_enqueue`, `transport_flush`,
+//! `shard_queue`, `policy_admission`, `apply`/`serve`, `reply_decode`,
+//! `cache_install` — giving a causal, cross-node timeline of where a
+//! sampled request spent its life. Rings dump as Chrome trace-event
+//! JSON (`--trace-spans`, viewable in `chrome://tracing` / Perfetto)
+//! and fold into [`RunReport::span_segments`] as per-segment
+//! histograms. Unsampled frames encode byte-identically to wire v8
+//! (zero overhead), and sampling itself is a deterministic per-node
+//! counter — never a protocol input.
+//!
+//! **Hot-key & staleness profiling.** `ClusterConfig::hot_key_k`
+//! arms a space-saving top-K sketch per shard
+//! ([`crate::telemetry::profile::HotKeySketch`]) counting per-key GET
+//! and update-row traffic; the top keys ride the ordinary registry
+//! snapshot (`hot.g.<t>:<r>` / `hot.u.<t>:<r>` entries) into
+//! `StatsReport`, the admin scrape, and `ps-top`'s hot-key panel.
+//! Client-side, every admitted read records its staleness *lag* (own
+//! clock minus the served copy's guaranteed vclock, clamped at zero)
+//! into a log2 histogram — [`RunReport::staleness_lag`] — so the per-
+//! model staleness distribution is observable live, not only from the
+//! end-of-run `StalenessHist`.
+//!
 //! The event-trace ring (`--trace-out`, `telemetry::trace`) is the
 //! flight recorder for *rare* lifecycle events, JSONL-dumped at exit:
 //!
@@ -234,6 +262,7 @@ use crate::sim::fault::{FaultInjector, FaultPlan};
 use crate::sim::net::NetConfig;
 use crate::sim::straggler::StragglerModel;
 use crate::telemetry::registry::HistSnapshot;
+use crate::telemetry::spans::SpanRing;
 use crate::telemetry::trace::TraceRing;
 use crate::transport::{Fabric, TransportSel};
 use crate::util::rng::Rng;
@@ -355,6 +384,16 @@ pub struct ClusterConfig {
     /// Event-trace flight recorder shared by every node of this
     /// in-process cluster (`None` = tracing off); see § Observability.
     pub trace: Option<Arc<TraceRing>>,
+    /// Request-span recorder shared by every node and both transports
+    /// (`None` = spans off); see § Observability. Strictly out-of-band.
+    pub spans: Option<Arc<SpanRing>>,
+    /// Sample one of every `n` span-eligible frames (0 = none even with
+    /// a ring attached). Deterministic per-node counters, so the same
+    /// run samples the same frames every time.
+    pub span_sample: u64,
+    /// Track the top-K hottest keys per shard (space-saving sketch;
+    /// 0 = off). See § Observability.
+    pub hot_key_k: usize,
 }
 
 impl Default for ClusterConfig {
@@ -382,6 +421,9 @@ impl Default for ClusterConfig {
             seed: 42,
             stats_pull_every: 0,
             trace: None,
+            spans: None,
+            span_sample: 0,
+            hot_key_k: 0,
         }
     }
 }
@@ -447,6 +489,15 @@ pub struct RunReport {
     /// admitted GET, miss round-trips included); p50/p99/p999 via
     /// [`HistSnapshot::quantile`]. See module docs, § Observability.
     pub read_latency: HistSnapshot,
+    /// Staleness-lag histogram merged across all clients: per admitted
+    /// read, this worker's clock minus the served copy's guaranteed
+    /// vclock, clamped at zero (log2 buckets). The live-plane mirror of
+    /// the signed `staleness` differential above, per consistency model.
+    pub staleness_lag: HistSnapshot,
+    /// Per-segment span-duration histograms (µs), name-sorted — present
+    /// only when `ClusterConfig::spans` was attached. See module docs,
+    /// § Observability.
+    pub span_segments: Vec<(String, HistSnapshot)>,
     /// Staleness-bound tripwire, summed over clients — reads admitted
     /// below the model's bound. Provably zero for BSP/SSP/ESSP.
     pub staleness_violations: u64,
@@ -675,6 +726,11 @@ impl Cluster {
             failover_active.then_some(ev_tx),
         )
         .expect("transport bootstrap failed");
+        // Span recorder: both transports hook it (enqueue/flush
+        // segments + arrival marks), every node appends its own hops.
+        if let Some(ring) = &cfg.spans {
+            fabric.set_spans(Arc::clone(ring));
+        }
 
         // Table row-length registry, shared with shards so a GET racing
         // ahead of row materialization can be served zeros (variable-
@@ -726,6 +782,14 @@ impl Cluster {
         for (id, shard) in shards.iter_mut().enumerate() {
             if cfg.snapshot_waves {
                 shard.force_snapshot_waves();
+            }
+            // Hot-key sketches must be sized before the metrics handle
+            // is ever shared (Arc::get_mut); this loop runs pre-launch.
+            if cfg.hot_key_k > 0 {
+                shard.set_hot_key_k(cfg.hot_key_k);
+            }
+            if let Some(ring) = &cfg.spans {
+                shard.set_spans(Arc::clone(ring), cfg.span_sample);
             }
             if let Some(dur) = &cfg.durability {
                 let recovered = shard
@@ -791,8 +855,10 @@ impl Cluster {
                     virtual_clock: cfg.virtual_clock,
                     stats_pull_every: cfg.stats_pull_every,
                     resend_window: cfg.resend_window,
+                    span_sample: cfg.span_sample,
                 };
                 let trace = cfg.trace.clone();
+                let spans = cfg.spans.clone();
                 let net_handle = fabric.worker_handle();
                 let row_len = row_len.clone();
                 let straggler = cfg.straggler.clone();
@@ -814,6 +880,9 @@ impl Cluster {
                         );
                         if let Some(ring) = trace {
                             ps.set_trace(ring);
+                        }
+                        if let Some(ring) = spans {
+                            ps.set_spans(ring);
                         }
                         let mut log = ConvergenceLog::new();
                         let trace = std::env::var_os("ESSPTABLE_TRACE").is_some();
@@ -869,6 +938,7 @@ impl Cluster {
         let mut convergence = ConvergenceLog::new();
         let mut client_stats = Vec::new();
         let mut read_latency = HistSnapshot::default();
+        let mut staleness_lag = HistSnapshot::default();
         for h in worker_handles {
             let (ps, log) = h.join().expect("worker panicked");
             staleness.merge(&ps.staleness);
@@ -876,6 +946,7 @@ impl Cluster {
             timelines.push(ps.timeline.clone());
             convergence.merge(&log);
             read_latency.merge(&ps.metrics().read_latency_ns.snapshot());
+            staleness_lag.merge(&ps.metrics().staleness_lag.snapshot());
             client_stats.push(ps.stats.clone());
         }
         let wall = started.elapsed();
@@ -972,6 +1043,13 @@ impl Cluster {
 
         let replica_hits = client_stats.iter().map(|s| s.replica_pulls).sum();
         let staleness_violations = client_stats.iter().map(|s| s.staleness_violations).sum();
+        // Per-segment span breakdown: every node recorded into the one
+        // shared ring, so this is already cluster-wide.
+        let span_segments = cfg
+            .spans
+            .as_ref()
+            .map(|ring| ring.segment_hists())
+            .unwrap_or_default();
 
         RunReport {
             wall,
@@ -988,6 +1066,8 @@ impl Cluster {
             replica_hits,
             vap_stall,
             read_latency,
+            staleness_lag,
+            span_segments,
             staleness_violations,
             shard_queue_hwm,
             shard_metrics,

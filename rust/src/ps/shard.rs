@@ -73,7 +73,9 @@ use super::policy::ServerPolicy;
 use super::types::{Clock, Key, RowDelta, TableId, WorkerId, NEVER};
 use super::vclock::MinClock;
 use crate::sim::fault::{ShardAction, ShardFault};
+use crate::telemetry::profile::HotKeySketch;
 use crate::telemetry::registry::{Counter, Gauge, LogHist, MetricsSource, Snapshot};
+use crate::telemetry::spans::{Mark, SpanCtx, SpanRing, SpanSampler};
 use crate::telemetry::trace::TraceRing;
 use crate::transport::{NodeId, Packet, Transport, TransportHandle};
 use crate::util::hash::{FxHashMap, FxHashSet};
@@ -168,10 +170,22 @@ pub struct ShardMetrics {
     pub wal_fsync_ns: LogHist,
     /// Rows per push wave (fan-out shape of the eager plane).
     pub wave_fanout: LogHist,
+    /// Sampled hot-key profiler: space-saving top-K sketches over GET
+    /// and update-row traffic (`--hot-keys K`; k = 0 disables). Mutex-
+    /// guarded rather than atomic, but taken only by the shard thread
+    /// and the rare scrape — see `telemetry::profile`.
+    pub hot_gets: HotKeySketch,
+    pub hot_updates: HotKeySketch,
 }
 
 impl ShardMetrics {
     pub fn new(id: usize) -> Self {
+        Self::with_hot_keys(id, 0)
+    }
+
+    /// Registry with the hot-key profiler tracking `k` heavy hitters per
+    /// sketch (`ClusterConfig::hot_key_k`; 0 disables).
+    pub fn with_hot_keys(id: usize, k: usize) -> Self {
         Self {
             node: format!("shard{id}"),
             gets_served: Counter::new(),
@@ -192,6 +206,8 @@ impl ShardMetrics {
             wal_append_ns: LogHist::new(),
             wal_fsync_ns: LogHist::new(),
             wave_fanout: LogHist::new(),
+            hot_gets: HotKeySketch::new(k),
+            hot_updates: HotKeySketch::new(k),
         }
     }
 
@@ -219,6 +235,11 @@ impl ShardMetrics {
         self.wal_append_ns.snapshot().entries("wal_append_ns", &mut out);
         self.wal_fsync_ns.snapshot().entries("wal_fsync_ns", &mut out);
         self.wave_fanout.snapshot().entries("wave_fanout", &mut out);
+        // Hot-key profiler entries ride the same flattened convention
+        // (`hot.g.<table>:<row>` / `hot.u.<table>:<row>`), so they reach
+        // StatsReport, both admin endpoints, and ps-top for free.
+        self.hot_gets.entries("hot.g.", &mut out);
+        self.hot_updates.entries("hot.u.", &mut out);
         out
     }
 }
@@ -254,6 +275,11 @@ struct PendingGet {
     key: Key,
     worker: WorkerId,
     min_vclock: Clock,
+    /// Sampled span riding the GET (wire v9), echoed on the reply; the
+    /// queue wait becomes its `policy_admission` segment.
+    span: Option<SpanCtx>,
+    /// When the GET queued (`SpanRing::now_us`), 0 when unsampled.
+    queued_us: u64,
 }
 
 /// State of this shard's role in the (at most one) live migration —
@@ -438,6 +464,15 @@ pub struct ShardCore {
     pub(crate) metrics: Arc<ShardMetrics>,
     /// Event-trace flight recorder, when enabled (`--trace-out`).
     trace: Option<Arc<TraceRing>>,
+    /// Request-span recorder (wire v9), when enabled (`--trace-spans` /
+    /// `--span-sample`): inbound sampled Get/Update frames get
+    /// `shard_queue` + `policy_admission` + `serve`/`apply` segments,
+    /// and sampled push waves originate shard-side spans. Strictly
+    /// out-of-band — never consulted by any protocol decision.
+    spans: Option<Arc<SpanRing>>,
+    /// Deterministic per-shard sampler for push-wave spans (one tick per
+    /// emitted Push frame, so each frame gets its own trace id).
+    span_sampler: SpanSampler,
 }
 
 /// Live write-ahead-log state of a durable shard (one generation).
@@ -555,6 +590,8 @@ impl Shard {
                 stats: ShardStats::default(),
                 metrics: Arc::new(ShardMetrics::new(id)),
                 trace: None,
+                spans: None,
+                span_sampler: SpanSampler::new(0),
             },
             policy,
             consistency,
@@ -590,6 +627,24 @@ impl Shard {
     /// Attach the event-trace flight recorder.
     pub fn set_trace(&mut self, ring: Arc<TraceRing>) {
         self.core.trace = Some(ring);
+    }
+
+    /// Attach the request-span recorder (wire v9) and set the push-wave
+    /// sampling rate (1-in-`sample`; 0 = record inbound sampled frames
+    /// but originate no shard-side spans).
+    pub fn set_spans(&mut self, ring: Arc<SpanRing>, sample: u64) {
+        self.core.spans = Some(ring);
+        self.core.span_sampler = SpanSampler::new(sample);
+    }
+
+    /// Size the hot-key profiler (`k` heavy hitters per sketch; 0
+    /// disables). Must be called before [`Shard::metrics`] shares the
+    /// registry handle (i.e. during cluster wiring).
+    pub fn set_hot_key_k(&mut self, k: usize) {
+        let m = Arc::get_mut(&mut self.core.metrics)
+            .expect("set_hot_key_k after the metrics handle was shared");
+        m.hot_gets = HotKeySketch::new(k);
+        m.hot_updates = HotKeySketch::new(k);
     }
 
     /// Force every push wave to ship full row snapshots, never wire-v7
@@ -669,13 +724,23 @@ impl Shard {
                 key,
                 worker,
                 min_vclock,
-            } => self.core.on_get(key, worker, min_vclock),
+                span,
+            } => {
+                self.core.span_arrive(span);
+                self.core.on_get(key, worker, min_vclock, span);
+            }
             ToShard::Update {
                 worker,
                 clock,
                 rows,
+                span,
             } => {
+                self.core.span_arrive(span);
+                let t0 = self.core.span_ts(span);
                 let touched = self.core.on_update(worker, clock, rows);
+                // In deterministic mode this times the staging step; the
+                // sorted commit replay is not attributable to one trace.
+                self.core.span_record(span, "apply", t0);
                 self.policy.on_update(&mut self.core, worker, clock, &touched);
             }
             ToShard::ClockTick { worker, clock } => {
@@ -975,6 +1040,8 @@ impl Shard {
             // counters must not double into the live registry.
             metrics: Arc::new(ShardMetrics::new(self.core.id)),
             trace: None,
+            spans: None,
+            span_sampler: SpanSampler::new(0),
         };
         let ckpt = durability::ckpt_path(&cfg.dir, core.id, g);
         for (key, data, fresh) in checkpoint::load_v2(&ckpt)? {
@@ -1006,6 +1073,7 @@ impl Shard {
                     worker,
                     clock,
                     rows,
+                    ..
                 } => {
                     core.on_update(worker, clock, rows);
                 }
@@ -1280,6 +1348,7 @@ fn write_generation(
             worker,
             clock,
             rows: rows.clone(),
+            span: None,
         })?;
     }
     w.commit()?;
@@ -1337,6 +1406,51 @@ impl ShardCore {
     pub(crate) fn trace_event(&self, kind: &str, detail: String) {
         if let Some(t) = &self.trace {
             t.record(&self.metrics.node, self.table_clock(), kind, detail);
+        }
+    }
+
+    /// Close a sampled frame's `shard_queue` segment: from the
+    /// transport's inbox-arrival mark (same-process rings only; cross-
+    /// process the mark is absent and the segment collapses to zero) to
+    /// the moment the shard thread picked the message up.
+    fn span_arrive(&self, span: Option<SpanCtx>) {
+        let (Some(ring), Some(span)) = (&self.spans, span) else {
+            return;
+        };
+        let now = SpanRing::now_us();
+        let start = ring.take_mark(span.trace_id, Mark::ArriveShard).unwrap_or(now);
+        ring.record(
+            span,
+            &self.metrics.node,
+            "shard_queue",
+            start,
+            now.saturating_sub(start),
+        );
+    }
+
+    /// Current span timestamp, or 0 when this frame records nothing here
+    /// (avoids the clock syscall on the unsampled hot path).
+    fn span_ts(&self, span: Option<SpanCtx>) -> u64 {
+        if self.spans.is_some() && span.is_some() {
+            SpanRing::now_us()
+        } else {
+            0
+        }
+    }
+
+    /// Record one segment `seg` for `span` running from `start_us` to
+    /// now. No-op unless both a ring is attached and the frame carried a
+    /// span.
+    fn span_record(&self, span: Option<SpanCtx>, seg: &'static str, start_us: u64) {
+        if let (Some(ring), Some(span)) = (&self.spans, span) {
+            let now = SpanRing::now_us();
+            ring.record(
+                span,
+                &self.metrics.node,
+                seg,
+                start_us,
+                now.saturating_sub(start_us),
+            );
         }
     }
 
@@ -1416,7 +1530,8 @@ impl ShardCore {
         z
     }
 
-    fn reply_row(&mut self, key: Key, worker: WorkerId) {
+    fn reply_row(&mut self, key: Key, worker: WorkerId, span: Option<SpanCtx>) {
+        let t0 = self.span_ts(span);
         let vclock = self.visible_clock();
         // A pull reply replaces the worker's cached copy outside the wave
         // chain (the client installs it with a broken token), so the next
@@ -1440,13 +1555,16 @@ impl ShardCore {
                 data,
                 vclock,
                 fresh: fresh.max(vclock),
+                span,
             },
         );
+        self.span_record(span, "serve", t0);
     }
 
-    fn on_get(&mut self, key: Key, worker: WorkerId, min_vclock: Clock) {
+    fn on_get(&mut self, key: Key, worker: WorkerId, min_vclock: Clock, span: Option<SpanCtx>) {
         // A key this shard already handed off is answered by its new
         // owner: relay the GET (the reply goes straight to the worker).
+        // The span rides along — its next segments record at the owner.
         if let Some(dst) = self.forward_of(&key) {
             self.stats.gets_forwarded += 1;
             self.metrics.gets_forwarded.inc();
@@ -1456,12 +1574,17 @@ impl ShardCore {
                     key,
                     worker,
                     min_vclock,
+                    span,
                 },
             );
             return;
         }
+        self.metrics.hot_gets.observe(key);
         if !self.awaiting_handoff(&key) && self.visible_clock() >= min_vclock {
-            self.reply_row(key, worker);
+            // Admitted on arrival: a zero-length admission segment keeps
+            // the per-segment histograms comparable across models.
+            self.span_record(span, "policy_admission", self.span_ts(span));
+            self.reply_row(key, worker, span);
         } else {
             // SSP wait condition — or a migrated-in key whose handoff
             // has not landed: hold the reply.
@@ -1471,6 +1594,8 @@ impl ShardCore {
                 key,
                 worker,
                 min_vclock,
+                span,
+                queued_us: self.span_ts(span),
             });
         }
     }
@@ -1516,12 +1641,16 @@ impl ShardCore {
             for (dst, fwd) in forwarded {
                 self.stats.updates_forwarded += fwd.len() as u64;
                 self.metrics.updates_forwarded.add(fwd.len() as u64);
+                // Relayed without the original span: an update can split
+                // toward several owners, and one trace id must not ride
+                // multiple concurrent frames (the arrival marks collide).
                 self.send_to_shard(
                     dst,
                     ToShard::Update {
                         worker: source,
                         clock,
                         rows: fwd,
+                        span: None,
                     },
                 );
             }
@@ -1573,6 +1702,7 @@ impl ShardCore {
         for (key, delta) in rows {
             self.stats.updates_applied += 1;
             self.metrics.updates_applied.inc();
+            self.metrics.hot_updates.observe(key);
             if self.track_dirty {
                 self.dirty.insert(key);
             }
@@ -1788,10 +1918,13 @@ impl ShardCore {
                         key: p.key,
                         worker: p.worker,
                         min_vclock: p.min_vclock,
+                        span: p.span,
                     },
                 );
             } else if !self.awaiting_handoff(&p.key) && table_clock >= p.min_vclock {
-                self.reply_row(p.key, p.worker);
+                // The whole queue wait is the admission segment.
+                self.span_record(p.span, "policy_admission", p.queued_us);
+                self.reply_row(p.key, p.worker, p.span);
             } else {
                 still.push(p);
             }
@@ -1884,12 +2017,23 @@ impl ShardCore {
             self.metrics.rows_pushed.add(rows.len() as u64);
             self.metrics.push_waves.inc();
             self.metrics.wave_fanout.record(rows.len() as u64);
+            // Shard-originated span, sampled per emitted frame (not per
+            // wave): each frame needs its own trace id, or the arrival
+            // marks of a fanned-out wave would collide.
+            let span = if self.spans.is_some() {
+                self.span_sampler
+                    .tick()
+                    .map(|seq| SpanCtx::for_shard(self.logical as u32, seq))
+            } else {
+                None
+            };
             self.send_to_worker(
                 worker,
                 ToWorker::Push {
                     shard: self.logical,
                     vclock,
                     rows,
+                    span,
                 },
             );
         }
@@ -2339,6 +2483,7 @@ mod tests {
             key: (0, 1),
             worker: 0,
             min_vclock: -1,
+            span: None,
         });
         match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
             ToWorker::Row { data, vclock, .. } => {
@@ -2361,6 +2506,7 @@ mod tests {
             key: (0, 99),
             worker: 0,
             min_vclock: -1,
+            span: None,
         });
         match wrxs[0].recv_timeout(Duration::from_secs(1)).unwrap() {
             ToWorker::Row { data, fresh, .. } => {
@@ -2376,6 +2522,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 99), vec![1.0, 2.0, 3.0].into())],
+            span: None,
         });
         assert_eq!(&shard.row(&(0, 99)).unwrap().data[..], &[1.0, 2.0, 3.0]);
     }
@@ -2389,6 +2536,7 @@ mod tests {
             key: (7, 0),
             worker: 0,
             min_vclock: -1,
+            span: None,
         });
     }
 
@@ -2400,6 +2548,7 @@ mod tests {
             key: (0, 1),
             worker: 0,
             min_vclock: 0,
+            span: None,
         });
         assert!(wrx.try_recv().is_err(), "must queue until table clock 0");
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
@@ -2419,11 +2568,13 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![0.5, -1.0].into())],
+            span: None,
         });
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 1,
             rows: vec![((0, 1), vec![0.5, 0.0].into())],
+            span: None,
         });
         let row = shard.row(&(0, 1)).unwrap();
         assert_eq!(&row.data[..], &[2.0, 0.0]);
@@ -2438,6 +2589,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), RowDelta::sparse(4, vec![(1, 0.5), (3, -4.0)]))],
+            span: None,
         });
         let row = shard.row(&(0, 1)).unwrap();
         assert_eq!(&row.data[..], &[1.0, 2.5, 3.0, 0.0]);
@@ -2447,6 +2599,7 @@ mod tests {
             worker: 0,
             clock: 1,
             rows: vec![((0, 9), RowDelta::sparse(3, vec![(2, 7.0)]))],
+            span: None,
         });
         assert_eq!(&shard.row(&(0, 9)).unwrap().data[..], &[0.0, 0.0, 7.0]);
     }
@@ -2465,6 +2618,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 42), RowDelta::sparse(1 << 20, vec![]))],
+            span: None,
         });
     }
 
@@ -2480,11 +2634,13 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 0), RowDelta::sparse(1024, vec![(3, 1.0), (900, 2.0)]))],
+            span: None,
         });
         shard.handle(ToShard::Update {
             worker: 1,
             clock: 0,
             rows: vec![((0, 0), RowDelta::sparse(1024, vec![(3, 0.5), (17, -1.0)]))],
+            span: None,
         });
         let sums = shard.core().staged_sums(&[(0, 0)]);
         let sum = &sums[&(0, 0)];
@@ -2510,6 +2666,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![1.0].into())],
+            span: None,
         });
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
@@ -2548,6 +2705,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![1.0, 2.0].into())],
+            span: None,
         });
         for w in 0..p {
             shard.handle(ToShard::ClockTick { worker: w, clock: 0 });
@@ -2584,6 +2742,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![1.0].into())],
+            span: None,
         });
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         let pushed = match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
@@ -2595,6 +2754,7 @@ mod tests {
             worker: 0,
             clock: 1,
             rows: vec![((0, 1), vec![1.0].into())],
+            span: None,
         });
         // The held snapshot is unchanged; the stored row advanced.
         assert_eq!(&pushed[..], &[1.0]);
@@ -2614,6 +2774,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![1.0].into())],
+            span: None,
         });
         for w in 0..2 {
             shard.handle(ToShard::ClockTick { worker: w, clock: 0 });
@@ -2633,6 +2794,7 @@ mod tests {
             worker: 0,
             clock: 1,
             rows: vec![((0, 1), RowDelta::sparse(1, vec![(0, 2.0)]))],
+            span: None,
         });
         for w in 0..2 {
             shard.handle(ToShard::ClockTick { worker: w, clock: 1 });
@@ -2678,6 +2840,7 @@ mod tests {
                 worker: 0,
                 clock,
                 rows: vec![((0, 1), vec![1.0].into())],
+                span: None,
             });
             for w in 0..2 {
                 shard.handle(ToShard::ClockTick { worker: w, clock });
@@ -2693,6 +2856,7 @@ mod tests {
             key: (0, 1),
             worker: 1,
             min_vclock: -1,
+            span: None,
         });
         match wrxs[1].recv_timeout(Duration::from_secs(1)).unwrap() {
             ToWorker::Row { .. } => {}
@@ -2745,6 +2909,7 @@ mod tests {
                     worker: 0,
                     clock,
                     rows: vec![((0, 1), sparse())],
+                    span: None,
                 });
                 for w in 0..WORKERS {
                     shard.handle(ToShard::ClockTick { worker: w, clock });
@@ -2799,6 +2964,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![1.0].into())],
+            span: None,
         });
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
@@ -2850,11 +3016,13 @@ mod tests {
                 worker: 1,
                 clock: 0,
                 rows: vec![((0, 0), vec![-1e8].into())],
+                span: None,
             });
             shard.handle(ToShard::Update {
                 worker: 0,
                 clock: 0,
                 rows: vec![((0, 0), vec![1.0].into())],
+                span: None,
             });
             shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
             shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
@@ -2875,6 +3043,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 0), vec![5.0].into())],
+            span: None,
         });
         // Not applied yet: worker 1 has not committed clock 0.
         assert_eq!(shard.row(&(0, 0)).unwrap().data[0], 0.0);
@@ -2887,6 +3056,7 @@ mod tests {
             key: (0, 0),
             worker: 0,
             min_vclock: 0,
+            span: None,
         });
         match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
             ToWorker::Row { data, vclock, .. } => {
@@ -2942,6 +3112,7 @@ mod tests {
                 worker: 0,
                 clock: c,
                 rows: vec![((0, 7), vec![1.0].into())],
+                span: None,
             });
         }
         // ...plus a post-fence update from a client that has not switched
@@ -2950,6 +3121,7 @@ mod tests {
             worker: 0,
             clock: 2,
             rows: vec![((0, 7), vec![100.0].into())],
+            span: None,
         });
         for w in 0..2 {
             shard.handle(ToShard::ClockTick { worker: w, clock: 1 });
@@ -2987,6 +3159,7 @@ mod tests {
             key: (0, 7),
             worker: 0,
             min_vclock: -1,
+            span: None,
         });
         match srx1.recv_timeout(Duration::from_secs(1)).unwrap() {
             ToShard::Get { key, worker, .. } => {
@@ -3002,9 +3175,10 @@ mod tests {
                 ((0, 7), vec![7.0].into()),
                 ((0, 8), vec![1.0].into()),
             ],
+            span: None,
         });
         match srx1.recv_timeout(Duration::from_secs(1)).unwrap() {
-            ToShard::Update { worker, clock, rows } => {
+            ToShard::Update { worker, clock, rows, .. } => {
                 assert_eq!((worker, clock), (1, 2));
                 assert_eq!(rows.len(), 1, "only the migrated key is relayed");
                 assert_eq!(rows[0].0, (0, 7));
@@ -3029,11 +3203,13 @@ mod tests {
             worker: 0,
             clock: 2,
             rows: vec![((0, 7), vec![10.0].into())],
+            span: None,
         });
         shard.handle(ToShard::Update {
             worker: 1,
             clock: 2,
             rows: vec![((0, 7), vec![1.0].into())],
+            span: None,
         });
         // Every worker commits clock 2 — but the advance must be
         // withheld: the base row has not arrived.
@@ -3049,6 +3225,7 @@ mod tests {
             key: (0, 7),
             worker: 0,
             min_vclock: -1,
+            span: None,
         });
         assert!(wrx.try_recv().is_err(), "GET served before the handoff");
         // The handoff lands: base row installs, the staged tail replays
@@ -3100,6 +3277,7 @@ mod tests {
                 worker: 1,
                 clock: c,
                 rows,
+                span: None,
             });
         }
         let t0 = std::time::Instant::now();
@@ -3138,6 +3316,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![1.0].into())],
+            span: None,
         });
         assert!(!shard.handle(ToShard::Shutdown));
         assert_eq!(&shard.row(&(0, 1)).unwrap().data[..], &[4.0]);
@@ -3164,11 +3343,13 @@ mod tests {
             worker: 1,
             clock: 0,
             rows: vec![((0, 0), vec![-1e8].into())],
+            span: None,
         });
         shard.handle(ToShard::Update {
             worker: 0,
             clock: 0,
             rows: vec![((0, 0), vec![1.0].into())],
+            span: None,
         });
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         shard.handle(ToShard::ClockTick { worker: 1, clock: 0 });
@@ -3177,6 +3358,7 @@ mod tests {
             worker: 0,
             clock: 1,
             rows: vec![((0, 0), vec![2.5].into())],
+            span: None,
         });
         let before = shard.row(&(0, 0)).unwrap().data.to_vec();
         assert_eq!(before, vec![0.0], "sorted replay absorbs worker 0's +1");
@@ -3204,6 +3386,7 @@ mod tests {
                 worker: 0,
                 clock: c,
                 rows: vec![((0, 0), vec![1.0].into())],
+                span: None,
             });
             shard.handle(ToShard::ClockTick { worker: 0, clock: c });
         }
@@ -3242,6 +3425,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 1), vec![1.0].into())],
+            span: None,
         });
         shard.handle(ToShard::ClockTick { worker: 0, clock: 0 });
         assert!(wrx.try_recv().is_err(), "replicas never push");
@@ -3267,7 +3451,7 @@ mod tests {
         // partition's guarantees.
         shard.handle(ToShard::ClockTick { worker: 0, clock: 1 });
         match wrx.recv_timeout(Duration::from_secs(1)).unwrap() {
-            ToWorker::Push { shard: s, vclock, rows } => {
+            ToWorker::Push { shard: s, vclock, rows, .. } => {
                 assert_eq!(s, 0, "wave must carry the logical shard id");
                 assert_eq!(vclock, 1);
                 assert_eq!(rows.len(), 1);

@@ -30,12 +30,13 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::ps::msg::{ToShard, ToWorker};
 use crate::sim::fault::FaultInjector;
+use crate::telemetry::spans::{Mark, SpanRing};
 use crate::util::hash::FxHashMap;
 use crate::util::rng::Rng;
 
@@ -108,6 +109,10 @@ pub struct NetStats {
     pub messages: AtomicU64,
     pub bytes: AtomicU64,
     pub delivered: AtomicU64,
+    /// Span recorder for sampled frames (wire v9), installed once after
+    /// construction via [`SimNet::set_spans`]; absent in untraced runs —
+    /// the hot path then pays one `OnceLock` load and nothing else.
+    spans: OnceLock<Arc<SpanRing>>,
 }
 
 /// Handle used by nodes to send through the simulated network.
@@ -125,6 +130,15 @@ impl NetHandle {
         self.stats
             .bytes
             .fetch_add(packet.wire_bytes() as u64, Ordering::AcqRel);
+        // A sampled frame stamps its enqueue: the delivery side turns the
+        // stamp into the in-transport `transport_flush` segment.
+        if let Some(ring) = self.stats.spans.get() {
+            if let Some(span) = packet.span() {
+                let now = SpanRing::now_us();
+                ring.record(span, "net", "transport_enqueue", now, 0);
+                ring.mark(span.trace_id, Mark::Enqueue, now);
+            }
+        }
         // Ignore send errors during shutdown (router already gone).
         let _ = self.intake.send(Wire { src, dst, packet });
     }
@@ -215,6 +229,13 @@ impl SimNet {
         self.handle.clone()
     }
 
+    /// Install the span recorder (wire v9). One-shot; a second call is
+    /// ignored. Installed after construction so the widely-used
+    /// constructors stay untouched.
+    pub fn set_spans(&self, ring: Arc<SpanRing>) {
+        let _ = self.stats.spans.set(ring);
+    }
+
     pub fn messages(&self) -> u64 {
         self.stats.messages.load(Ordering::Relaxed)
     }
@@ -283,6 +304,21 @@ impl Sinks {
 }
 
 fn deliver(wire: Wire, sinks: &mut Sinks, stats: &NetStats) {
+    // A sampled frame closes its in-transport segment (enqueue stamp ->
+    // now) and stamps its inbox arrival for the handler's queue-wait
+    // segment.
+    if let Some(ring) = stats.spans.get() {
+        if let Some(span) = wire.packet.span() {
+            let now = SpanRing::now_us();
+            let start = ring.take_mark(span.trace_id, Mark::Enqueue).unwrap_or(now);
+            ring.record(span, "net", "transport_flush", start, now.saturating_sub(start));
+            match wire.dst {
+                NodeId::Shard(_) => ring.mark(span.trace_id, Mark::ArriveShard, now),
+                NodeId::Worker(_) => ring.mark(span.trace_id, Mark::ArriveWorker, now),
+                NodeId::Coordinator => {}
+            }
+        }
+    }
     // Send errors mean the destination already exited: shutdown, or a
     // killed node — surfaced through the peer-event stream; the packet
     // itself is dropped either way.
@@ -602,6 +638,7 @@ mod tests {
             worker: 0,
             clock: 0,
             rows: vec![((0, 0), vec![0.0f32; 25_000].into())],
+            span: None,
         };
         let t0 = Instant::now();
         net.handle()

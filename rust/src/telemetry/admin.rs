@@ -133,16 +133,32 @@ fn handle_conn(mut stream: TcpStream, sources: &[Arc<dyn MetricsSource>]) -> io:
 /// One admin-socket scrape as a client: connect, request `path`
 /// (`"/json"` or `"/metrics"`), return the response body with HTTP
 /// headers stripped. Used by `ps-top` and the telemetry tests.
+///
+/// `timeout` bounds the connect AND each socket read/write, so a hung
+/// or half-dead endpoint costs a poller at most ~2x `timeout` rather
+/// than blocking it forever; every error names the endpoint and the
+/// stage that failed (`ps-top` polls many addrs — a bare "timed out"
+/// would leave the operator guessing which one).
 pub fn scrape(addr: &str, path: &str, timeout: Duration) -> io::Result<String> {
+    let stage = |what: &str| {
+        let addr = addr.to_string();
+        let what = what.to_string();
+        move |e: io::Error| io::Error::new(e.kind(), format!("scrape {addr}{what}: {e}"))
+    };
     let sock: SocketAddr = addr
         .parse()
         .map_err(|e| io::Error::new(io::ErrorKind::InvalidInput, format!("{addr}: {e}")))?;
-    let mut stream = TcpStream::connect_timeout(&sock, timeout)?;
-    stream.set_read_timeout(Some(timeout))?;
-    stream.set_write_timeout(Some(timeout))?;
-    stream.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)
+        .map_err(stage(": connect"))?;
+    stream.set_read_timeout(Some(timeout)).map_err(stage(": set read timeout"))?;
+    stream.set_write_timeout(Some(timeout)).map_err(stage(": set write timeout"))?;
+    stream
+        .write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())
+        .map_err(stage(&format!("{path}: send request")))?;
     let mut out = String::new();
-    stream.read_to_string(&mut out)?;
+    stream
+        .read_to_string(&mut out)
+        .map_err(stage(&format!("{path}: read response")))?;
     match out.find("\r\n\r\n") {
         Some(i) => Ok(out[i + 4..].to_string()),
         None => Ok(out),
@@ -194,5 +210,18 @@ mod tests {
             "{text}"
         );
         h.shutdown();
+    }
+
+    #[test]
+    fn scrape_errors_name_the_endpoint() {
+        // A dead endpoint (bind-then-drop guarantees nothing listens):
+        // the error must say which addr failed, not just "refused".
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let e = scrape(&addr, "/json", Duration::from_millis(500)).unwrap_err();
+        assert!(e.to_string().contains(&addr), "{e}");
+        assert!(e.to_string().contains("connect"), "{e}");
     }
 }

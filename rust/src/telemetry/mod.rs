@@ -1,7 +1,8 @@
 //! Live telemetry plane: per-node metrics registries, wire-shipped
-//! snapshots, admin scrape sockets, and structured event tracing.
+//! snapshots, admin scrape sockets, structured event tracing, causal
+//! request spans and the hot-key profiler.
 //!
-//! Three pieces, each usable alone:
+//! Five pieces, each usable alone:
 //!
 //!   * [`registry`] — the measurement primitives: relaxed atomic
 //!     [`Counter`]s/[`Gauge`]s and log2-bucket [`LogHist`]ograms with
@@ -11,12 +12,25 @@
 //!     scrape path only.
 //!   * [`admin`] — the `--metrics-addr` TCP socket serving a JSON
 //!     snapshot (`GET /json`) and a Prometheus-style text exposition
-//!     (`GET /metrics`), plus the client-side [`scrape`] used by the
-//!     `ps-top` subcommand.
+//!     (`GET /metrics`, real `_bucket{le=...}`/`_sum`/`_count`
+//!     histogram families with `# TYPE` headers), plus the client-side
+//!     [`scrape`] used by the `ps-top` subcommand.
 //!   * [`trace`] — the bounded per-node [`TraceRing`] flight recorder
 //!     for rare lifecycle events (placement epochs, migration fences,
 //!     promotions, WAL rolls, fault firings, peer transitions), dumped
 //!     as JSONL via `--trace-out`.
+//!   * [`spans`] — causal request tracing (wire v9): a deterministic
+//!     1-in-N sampler piggybacks a 12-byte [`SpanCtx`] on
+//!     `Get`/`Update`/`Row`/`Push` frames, every hop appends timed
+//!     segments (client issue, transport enqueue/flush, shard queue
+//!     wait, policy admission, apply/serve, reply decode, cache
+//!     install) to a [`SpanRing`], and the result exports as Chrome
+//!     trace-event JSON (`--trace-spans`) plus a live p50/p99
+//!     per-segment breakdown.
+//!   * [`profile`] — the space-saving top-K [`HotKeySketch`]: per-key
+//!     GET/update heavy hitters per shard in fixed memory, flattened as
+//!     `hot.g.<t>:<r>` / `hot.u.<t>:<r>` entries — the sensor half of
+//!     ROADMAP item 1's placement controller.
 //!
 //! Registries live inside `ShardCore` / `PsClient` / the transports and
 //! snapshots additionally travel the data plane as
@@ -25,7 +39,8 @@
 //! cluster-wide state. Telemetry is strictly out-of-band: it never
 //! feeds back into protocol decisions, and the deterministic replay
 //! suites are bit-identical with it enabled (proven by
-//! `tests/integration_telemetry.rs`).
+//! `tests/integration_telemetry.rs` and, for spans + profiling,
+//! `tests/integration_spans.rs`).
 //!
 //! [`Counter`]: registry::Counter
 //! [`Gauge`]: registry::Gauge
@@ -33,7 +48,12 @@
 //! [`Snapshot`]: registry::Snapshot
 //! [`scrape`]: admin::scrape
 //! [`TraceRing`]: trace::TraceRing
+//! [`SpanCtx`]: spans::SpanCtx
+//! [`SpanRing`]: spans::SpanRing
+//! [`HotKeySketch`]: profile::HotKeySketch
 
 pub mod admin;
+pub mod profile;
 pub mod registry;
+pub mod spans;
 pub mod trace;

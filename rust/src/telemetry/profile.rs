@@ -1,0 +1,253 @@
+//! Sampled hot-key profiler: a space-saving top-K heavy-hitters sketch
+//! per shard, counting per-key GET and update traffic in fixed memory.
+//!
+//! The sketch is the classic *space-saving* algorithm (Metwally et al.):
+//! at most `k` tracked entries; a hit increments its entry, a miss on a
+//! full sketch evicts the minimum-count entry and inherits its count as
+//! the new entry's error bound. Guarantees: every key with true
+//! frequency > N/k is present, estimates never undercount
+//! (`count - err <= true <= count`), and memory is O(k) regardless of
+//! the key universe — exactly the shape a placement controller needs to
+//! find hot keys without a per-key map (ROADMAP item 1's sensor half).
+//!
+//! Concurrency follows the registry spirit — scrape-safe sharing with
+//! hot-path cost bounded and allocation-free: the sketch lives behind a
+//! mutex that only the owning shard thread and the (rare) scrape path
+//! take, `observe` is O(1) on a hit and O(k) on a miss, and `k` is small
+//! (default 32). Entries flatten into the standard snapshot convention
+//! (`hot.g.<table>:<row>` / `hot.u.<table>:<row>`), so the counts travel
+//! the existing `StatsReport` wire path, surface on both admin endpoints
+//! and feed the `ps-top` hot-key panel with no new plumbing.
+//!
+//! Strictly out-of-band: observations never feed back into protocol
+//! decisions, and runs are bit-identical with profiling on or off
+//! (`tests/integration_spans.rs`).
+
+use std::sync::Mutex;
+
+use crate::ps::types::Key;
+use crate::util::hash::FxHashMap;
+
+/// One tracked heavy hitter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HotKey {
+    pub key: Key,
+    /// Estimated count (never an undercount of the true frequency).
+    pub count: u64,
+    /// Overestimation bound: `count - err <= true frequency <= count`.
+    pub err: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: Vec<HotKey>,
+    /// Key -> index into `entries` (kept in sync on eviction).
+    index: FxHashMap<Key, usize>,
+}
+
+/// Space-saving top-K sketch. `k == 0` disables (observe is a no-op).
+pub struct HotKeySketch {
+    k: usize,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for HotKeySketch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.inner.lock().unwrap();
+        write!(f, "HotKeySketch(k={}, tracked={})", self.k, g.entries.len())
+    }
+}
+
+impl HotKeySketch {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Whether the sketch tracks anything at all.
+    pub fn enabled(&self) -> bool {
+        self.k > 0
+    }
+
+    /// Count one observation of `key`.
+    pub fn observe(&self, key: Key) {
+        self.observe_n(key, 1);
+    }
+
+    /// Count `n` observations of `key` at once (batch updates).
+    pub fn observe_n(&self, key: Key, n: u64) {
+        if self.k == 0 || n == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if let Some(&i) = g.index.get(&key) {
+            g.entries[i].count += n;
+            return;
+        }
+        if g.entries.len() < self.k {
+            let i = g.entries.len();
+            g.entries.push(HotKey { key, count: n, err: 0 });
+            g.index.insert(key, i);
+            return;
+        }
+        // Full: replace the minimum-count entry, inheriting its count as
+        // the newcomer's error bound (the space-saving step).
+        let (i, min) = g
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.count)
+            .map(|(i, e)| (i, e.count))
+            .expect("k > 0");
+        let old = g.entries[i].key;
+        g.index.remove(&old);
+        g.entries[i] = HotKey {
+            key,
+            count: min + n,
+            err: min,
+        };
+        g.index.insert(key, i);
+    }
+
+    /// Tracked heavy hitters, estimated count descending (key-ordered
+    /// tiebreak, so output is deterministic).
+    pub fn top(&self) -> Vec<HotKey> {
+        let mut out = self.inner.lock().unwrap().entries.clone();
+        out.sort_by(|a, b| b.count.cmp(&a.count).then(a.key.cmp(&b.key)));
+        out
+    }
+
+    /// Flatten into snapshot entries as `<prefix><table>:<row>` counts
+    /// (e.g. `hot.g.0:17`), estimated count descending.
+    pub fn entries(&self, prefix: &str, out: &mut Vec<(String, u64)>) {
+        for h in self.top() {
+            out.push((format!("{prefix}{}:{}", h.key.0, h.key.1), h.count));
+        }
+    }
+}
+
+/// Parse a flattened sketch entry name back into its key: the inverse of
+/// [`HotKeySketch::entries`], used by the `ps-top` hot-key panel.
+pub fn parse_hot_entry(name: &str, prefix: &str) -> Option<Key> {
+    let rest = name.strip_prefix(prefix)?;
+    let (t, r) = rest.split_once(':')?;
+    Some((t.parse().ok()?, r.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_below_capacity() {
+        let s = HotKeySketch::new(8);
+        for _ in 0..5 {
+            s.observe((0, 1));
+        }
+        s.observe_n((0, 2), 3);
+        let top = s.top();
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0], HotKey { key: (0, 1), count: 5, err: 0 });
+        assert_eq!(top[1], HotKey { key: (0, 2), count: 3, err: 0 });
+    }
+
+    #[test]
+    fn disabled_sketch_is_a_noop() {
+        let s = HotKeySketch::new(0);
+        s.observe((0, 1));
+        assert!(s.top().is_empty());
+        assert!(!s.enabled());
+    }
+
+    #[test]
+    fn eviction_inherits_min_count_as_error() {
+        let s = HotKeySketch::new(2);
+        s.observe_n((0, 1), 10);
+        s.observe_n((0, 2), 4);
+        s.observe((0, 3)); // evicts (0,2): count 4+1, err 4
+        let top = s.top();
+        assert_eq!(top[0].key, (0, 1));
+        assert_eq!(top[1], HotKey { key: (0, 3), count: 5, err: 4 });
+    }
+
+    #[test]
+    fn zipfian_skew_survives_the_sketch() {
+        // Frequencies ~ 1/rank over 200 keys, k = 16: every true
+        // heavy hitter must surface, in order, with valid error bounds.
+        let s = HotKeySketch::new(16);
+        let n_keys = 200u64;
+        for r in 0..n_keys {
+            let freq = 2000 / (r + 1);
+            for _ in 0..freq {
+                s.observe((0, r));
+            }
+        }
+        let top = s.top();
+        assert_eq!(top.len(), 16);
+        // The top-4 true hitters (2000, 1000, 666, 500) dominate any
+        // possible overestimate of the tail; they must lead, in order.
+        for (i, h) in top.iter().take(4).enumerate() {
+            assert_eq!(h.key, (0, i as u64), "rank {i}: {top:?}");
+            let true_freq = 2000 / (i as u64 + 1);
+            assert!(h.count >= true_freq, "undercount at rank {i}");
+            assert!(h.count - h.err <= true_freq, "bound broken at rank {i}");
+        }
+    }
+
+    #[test]
+    fn entries_flatten_and_parse_back() {
+        let s = HotKeySketch::new(4);
+        s.observe_n((3, 99), 7);
+        let mut out = Vec::new();
+        s.entries("hot.g.", &mut out);
+        assert_eq!(out, vec![("hot.g.3:99".to_string(), 7)]);
+        assert_eq!(parse_hot_entry("hot.g.3:99", "hot.g."), Some((3, 99)));
+        assert_eq!(parse_hot_entry("hot.g.3:99", "hot.u."), None);
+        assert_eq!(parse_hot_entry("hot.g.x:99", "hot.g."), None);
+    }
+
+    #[test]
+    fn property_estimates_bracket_exact_counts() {
+        // Deterministic pseudo-random stream; sketch estimates must
+        // bracket exact counts for every tracked key, and every key with
+        // frequency > N/k must be tracked (the space-saving guarantee).
+        let mut x = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        };
+        let k = 24;
+        let s = HotKeySketch::new(k);
+        let mut exact: std::collections::HashMap<Key, u64> = std::collections::HashMap::new();
+        let n = 20_000u64;
+        for _ in 0..n {
+            // Skewed: half the stream hits 8 keys, half spreads over 256.
+            let r = next();
+            let key = if r % 2 == 0 {
+                (0u32, r % 8)
+            } else {
+                (0u32, 8 + r % 256)
+            };
+            s.observe(key);
+            *exact.entry(key).or_default() += 1;
+        }
+        let top = s.top();
+        for h in &top {
+            let t = exact.get(&h.key).copied().unwrap_or(0);
+            assert!(h.count >= t, "undercount for {:?}", h.key);
+            assert!(h.count - h.err <= t, "lower bound broken for {:?}", h.key);
+        }
+        for (key, &t) in &exact {
+            if t > n / k as u64 {
+                assert!(
+                    top.iter().any(|h| h.key == *key),
+                    "heavy hitter {key:?} (freq {t}) missing from sketch"
+                );
+            }
+        }
+    }
+}

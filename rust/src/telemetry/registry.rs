@@ -383,21 +383,50 @@ fn sanitize(name: &str) -> String {
         .collect()
 }
 
-/// Prometheus-style text exposition: `esspt_<name>{node="..."} <value>`
-/// per plain entry; histograms expand to cumulative `_bucket{le="..."}`
-/// lines plus `_count` / `_sum`.
+/// Prometheus text exposition. Samples are grouped into metric
+/// *families* first — the exposition format wants every sample of one
+/// family contiguous under a single `# TYPE` header, across all nodes —
+/// then rendered as `esspt_<name>{node="..."} <value>` gauges and real
+/// histogram families (cumulative `_bucket{le="..."}` lines plus
+/// `_sum` / `_count` per node). The JSON scrape document is unaffected.
 pub fn to_prometheus(snaps: &[Snapshot]) -> String {
     use std::fmt::Write as _;
-    let mut out = String::new();
+    // First-appearance order keeps the rendered family sequence stable
+    // across scrapes of an unchanged node set.
+    let mut plain: Vec<(String, Vec<(String, u64)>)> = Vec::new();
+    let mut hists: Vec<(String, Vec<(String, HistSnapshot)>)> = Vec::new();
     for s in snaps {
         for (n, v) in &s.entries {
-            if !n.contains('#') {
-                let _ = writeln!(out, "esspt_{}{{node=\"{}\"}} {v}", sanitize(n), s.node);
+            if n.contains('#') {
+                continue;
+            }
+            let fam = sanitize(n);
+            match plain.iter_mut().find(|(f, _)| *f == fam) {
+                Some((_, rows)) => rows.push((s.node.clone(), *v)),
+                None => plain.push((fam, vec![(s.node.clone(), *v)])),
             }
         }
         for name in s.hist_names() {
+            let fam = sanitize(&name);
             let h = s.hist(&name);
-            let base = sanitize(&name);
+            match hists.iter_mut().find(|(f, _)| *f == fam) {
+                Some((_, rows)) => rows.push((s.node.clone(), h)),
+                None => hists.push((fam, vec![(s.node.clone(), h)])),
+            }
+        }
+    }
+    let mut out = String::new();
+    for (fam, rows) in &plain {
+        let _ = writeln!(out, "# HELP esspt_{fam} essptable metric {fam}");
+        let _ = writeln!(out, "# TYPE esspt_{fam} gauge");
+        for (node, v) in rows {
+            let _ = writeln!(out, "esspt_{fam}{{node=\"{node}\"}} {v}");
+        }
+    }
+    for (fam, rows) in &hists {
+        let _ = writeln!(out, "# HELP esspt_{fam} essptable log2-bucket histogram {fam}");
+        let _ = writeln!(out, "# TYPE esspt_{fam} histogram");
+        for (node, h) in rows {
             let mut cum = 0u64;
             for (i, &c) in h.buckets.iter().enumerate() {
                 if c == 0 {
@@ -407,17 +436,16 @@ pub fn to_prometheus(snaps: &[Snapshot]) -> String {
                 let (_, hi) = LogHist::bucket_bounds(i);
                 let _ = writeln!(
                     out,
-                    "esspt_{base}_bucket{{node=\"{}\",le=\"{hi}\"}} {cum}",
-                    s.node
+                    "esspt_{fam}_bucket{{node=\"{node}\",le=\"{hi}\"}} {cum}"
                 );
             }
             let _ = writeln!(
                 out,
-                "esspt_{base}_bucket{{node=\"{}\",le=\"+Inf\"}} {}",
-                s.node, h.count
+                "esspt_{fam}_bucket{{node=\"{node}\",le=\"+Inf\"}} {}",
+                h.count
             );
-            let _ = writeln!(out, "esspt_{base}_count{{node=\"{}\"}} {}", s.node, h.count);
-            let _ = writeln!(out, "esspt_{base}_sum{{node=\"{}\"}} {}", s.node, h.sum);
+            let _ = writeln!(out, "esspt_{fam}_sum{{node=\"{node}\"}} {}", h.sum);
+            let _ = writeln!(out, "esspt_{fam}_count{{node=\"{node}\"}} {}", h.count);
         }
     }
     out
@@ -556,5 +584,46 @@ mod tests {
         for line in text.lines() {
             assert!(line.contains(' '), "malformed line {line:?}");
         }
+    }
+
+    #[test]
+    fn prometheus_groups_families_across_nodes() {
+        // Two nodes sharing metric names: every sample of one family
+        // must sit contiguously under a single # TYPE header.
+        let h = LogHist::new();
+        h.record(10);
+        let mk = |node: &str, v: u64| {
+            let mut entries = vec![("gets_served".into(), v)];
+            h.snapshot().entries("read_ns", &mut entries);
+            Snapshot {
+                node: node.into(),
+                entries,
+            }
+        };
+        let text = to_prometheus(&[mk("shard0", 42), mk("shard1", 7)]);
+        assert_eq!(text.matches("# TYPE esspt_gets_served gauge").count(), 1, "{text}");
+        assert_eq!(text.matches("# TYPE esspt_read_ns histogram").count(), 1, "{text}");
+        // Both node samples of the gauge family are contiguous: nothing
+        // but samples of that family between header and last sample.
+        let lines: Vec<&str> = text.lines().collect();
+        let hdr = lines
+            .iter()
+            .position(|l| *l == "# TYPE esspt_gets_served gauge")
+            .unwrap();
+        assert_eq!(lines[hdr + 1], "esspt_gets_served{node=\"shard0\"} 42");
+        assert_eq!(lines[hdr + 2], "esspt_gets_served{node=\"shard1\"} 7");
+        // Histogram families carry per-node _bucket/_sum/_count series.
+        assert!(text.contains("esspt_read_ns_sum{node=\"shard1\"}"), "{text}");
+        assert!(text.contains("esspt_read_ns_bucket{node=\"shard1\",le=\"+Inf\"} 1"), "{text}");
+        // Headers precede every sample of their family.
+        let first_sample = lines
+            .iter()
+            .position(|l| l.starts_with("esspt_read_ns_bucket"))
+            .unwrap();
+        let type_line = lines
+            .iter()
+            .position(|l| *l == "# TYPE esspt_read_ns histogram")
+            .unwrap();
+        assert!(type_line < first_sample, "{text}");
     }
 }

@@ -1,0 +1,474 @@
+//! Causal request spans: sampled, wire-propagated timing of individual
+//! PS requests across every hop they touch.
+//!
+//! A [`SpanCtx`] is 12 bytes — `trace_id: u64 | parent: u32` — carried
+//! as an optional trailing extension on `ToShard::Get` / `ToShard::Update`
+//! and `ToWorker::Row` / `ToWorker::Push` frames (wire v9). Sampling is
+//! client-side and **deterministic**: each endpoint runs a plain modular
+//! counter ([`SpanSampler`]), so the same ops of the same run are sampled
+//! every time — replayable runs stay replayable, and an unsampled frame
+//! is byte-identical to its wire-v8 encoding (zero overhead when off).
+//!
+//! Every hop that handles a sampled request appends a timed *segment* to
+//! its process-local [`SpanRing`]:
+//!
+//! | segment             | recorded by | meaning                                |
+//! |---------------------|-------------|----------------------------------------|
+//! | `client_issue`      | client      | building + sending the request         |
+//! | `transport_enqueue` | transport   | handing the frame to the send path     |
+//! | `transport_flush`   | transport   | frame left the sender (sim: delivered) |
+//! | `shard_queue`       | shard       | inbox wait: arrival -> handler start   |
+//! | `policy_admission`  | shard       | read admission wait (0 if immediate)   |
+//! | `serve`             | shard       | building + sending the Row reply       |
+//! | `apply`             | shard       | staging/applying an Update batch       |
+//! | `reply_decode`      | client      | reply arrival -> client apply          |
+//! | `cache_install`     | client      | installing the payload in the cache    |
+//!
+//! Segments are (a) accumulated into per-segment log2 histograms — the
+//! p50/p99 breakdown shown in `RunReport`, `ps-top` and the admin
+//! endpoints ([`SpanRing`] is a [`MetricsSource`]) — and (b) kept in a
+//! bounded ring of raw events exportable as Chrome trace-event JSON
+//! (`--trace-spans FILE`, loadable in `chrome://tracing` / Perfetto).
+//! Timestamps are wall-clock microseconds since the Unix epoch, so the
+//! per-process exports of a `run-cluster` merge on one timeline and the
+//! client/shard segments of one request share one `trace_id` across
+//! process boundaries.
+//!
+//! Like the rest of the telemetry plane the spans are strictly
+//! out-of-band: nothing here feeds back into protocol decisions, and
+//! final model state is bit-identical with sampling on or off (proven by
+//! `tests/integration_spans.rs` over both transports).
+
+use std::collections::HashMap;
+use std::io;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use super::registry::{HistSnapshot, MetricsSource, Snapshot};
+use crate::util::json::{arr, num, obj, str as jstr, Json};
+
+/// The wire-propagated span context (12 bytes on the wire; see
+/// `transport::wire` v9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanCtx {
+    /// Globally unique per sampled request: the originator's node id in
+    /// the high bits (shard-originated waves set the top bit), its local
+    /// sample sequence number in the low bits. Deterministic — no
+    /// randomness, so replayed runs produce identical ids.
+    pub trace_id: u64,
+    /// The originating endpoint's id (worker id, or shard id with the
+    /// top bit set), so a hop can label the origin without decoding
+    /// `trace_id`.
+    pub parent: u32,
+}
+
+/// Encoded size of a span context on the wire.
+pub const SPAN_WIRE_BYTES: usize = 12;
+
+/// Marks `parent` / `trace_id` as shard-originated (eager push waves).
+pub const SPAN_SHARD_ORIGIN: u32 = 1 << 31;
+
+impl SpanCtx {
+    /// Span for the `seq`-th sampled request of worker `worker`.
+    pub fn for_worker(worker: u32, seq: u64) -> Self {
+        Self {
+            trace_id: ((worker as u64) << 40) | (seq & ((1 << 40) - 1)),
+            parent: worker,
+        }
+    }
+
+    /// Span for the `seq`-th sampled push wave of shard `shard`.
+    pub fn for_shard(shard: u32, seq: u64) -> Self {
+        Self {
+            trace_id: (1 << 63) | ((shard as u64) << 40) | (seq & ((1 << 40) - 1)),
+            parent: shard | SPAN_SHARD_ORIGIN,
+        }
+    }
+}
+
+/// Deterministic 1-in-N sampler: a plain counter, no clocks, no rng —
+/// the same op sequence samples the same ops on every run.
+#[derive(Debug)]
+pub struct SpanSampler {
+    /// Sample every `every`-th op (0 = never).
+    every: u64,
+    /// Ops seen so far.
+    n: u64,
+}
+
+impl SpanSampler {
+    pub fn new(every: u64) -> Self {
+        Self { every, n: 0 }
+    }
+
+    /// Whether sampling is enabled at all.
+    pub fn enabled(&self) -> bool {
+        self.every > 0
+    }
+
+    /// Count one op; `Some(sample_index)` when this op is sampled.
+    pub fn tick(&mut self) -> Option<u64> {
+        if self.every == 0 {
+            return None;
+        }
+        let n = self.n;
+        self.n += 1;
+        (n % self.every == 0).then_some(n / self.every)
+    }
+}
+
+/// One recorded segment of a sampled request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    pub trace_id: u64,
+    pub parent: u32,
+    /// Node label, e.g. `"worker0"`, `"shard2"`.
+    pub node: String,
+    /// Segment name (one of the table in the module docs).
+    pub seg: &'static str,
+    /// Microseconds since the Unix epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// Cross-thread arrival marks: the transport stamps a sampled frame's
+/// arrival, the handler turns the stamp into a queue-wait segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mark {
+    /// Frame handed to the transport send path (consumed by the same
+    /// process's flush/delivery hook to time the in-transport segment).
+    Enqueue,
+    /// Frame delivered into a shard inbox.
+    ArriveShard,
+    /// Frame delivered into a worker inbox.
+    ArriveWorker,
+}
+
+/// Marks held at most this long before being garbage-collected (a mark
+/// whose consumer died — e.g. a reply to a finished worker — must not
+/// leak).
+const MARK_CAP: usize = 4096;
+
+#[derive(Default)]
+struct Inner {
+    ring: Vec<SpanEvent>,
+    /// Next overwrite position once the ring is full.
+    head: usize,
+    /// Per-segment duration histograms (µs), for the p50/p99 breakdown.
+    segs: Vec<(&'static str, HistSnapshot)>,
+    marks: HashMap<(u64, Mark), u64>,
+}
+
+/// Process-local bounded recorder of sampled request segments. Shared
+/// `Arc`-style between clients, shards, the transports and the admin
+/// scrape thread; recording locks a mutex, which only sampled (1-in-N)
+/// requests ever touch — the unsampled hot path never takes it.
+pub struct SpanRing {
+    cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for SpanRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.inner.lock().unwrap();
+        write!(f, "SpanRing(events={}, cap={})", g.ring.len(), self.cap)
+    }
+}
+
+impl SpanRing {
+    /// `cap` bounds the raw-event ring (oldest events overwritten); the
+    /// per-segment histograms aggregate everything regardless.
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Wall-clock microseconds since the Unix epoch — the shared
+    /// timeline that lets per-process exports merge.
+    pub fn now_us() -> u64 {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or_default()
+            .as_micros() as u64
+    }
+
+    /// Append one timed segment.
+    pub fn record(&self, span: SpanCtx, node: &str, seg: &'static str, start_us: u64, dur_us: u64) {
+        let ev = SpanEvent {
+            trace_id: span.trace_id,
+            parent: span.parent,
+            node: node.to_string(),
+            seg,
+            start_us,
+            dur_us,
+        };
+        let mut g = self.inner.lock().unwrap();
+        match g.segs.iter_mut().find(|(n, _)| *n == seg) {
+            Some((_, h)) => h.record(dur_us),
+            None => {
+                let mut h = HistSnapshot::default();
+                h.record(dur_us);
+                g.segs.push((seg, h));
+            }
+        }
+        if g.ring.len() < self.cap {
+            g.ring.push(ev);
+        } else {
+            let head = g.head;
+            g.ring[head] = ev;
+            g.head = (head + 1) % self.cap;
+        }
+    }
+
+    /// Stamp a frame arrival (transport side).
+    pub fn mark(&self, trace_id: u64, tag: Mark, ts_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if g.marks.len() >= MARK_CAP {
+            g.marks.clear();
+        }
+        g.marks.insert((trace_id, tag), ts_us);
+    }
+
+    /// Consume a frame-arrival stamp (handler side).
+    pub fn take_mark(&self, trace_id: u64, tag: Mark) -> Option<u64> {
+        self.inner.lock().unwrap().marks.remove(&(trace_id, tag))
+    }
+
+    /// Raw events, oldest first.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let g = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(g.ring.len());
+        if g.ring.len() == self.cap {
+            out.extend_from_slice(&g.ring[g.head..]);
+            out.extend_from_slice(&g.ring[..g.head]);
+        } else {
+            out.extend_from_slice(&g.ring);
+        }
+        out
+    }
+
+    /// Per-segment duration histograms (µs), first-appearance order.
+    pub fn segment_hists(&self) -> Vec<(String, HistSnapshot)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .segs
+            .iter()
+            .map(|(n, h)| (n.to_string(), h.clone()))
+            .collect()
+    }
+
+    /// Chrome trace-event JSON (the `{"traceEvents": [...]}` flavor).
+    /// Each segment becomes one complete (`"ph": "X"`) event under
+    /// process `pid`; node labels map to synthetic thread ids with
+    /// `thread_name` metadata, so `chrome://tracing` / Perfetto shows
+    /// one lane per node. The `trace` arg carries the shared trace id —
+    /// the cross-process causal link.
+    pub fn chrome_events(&self, pid: u64) -> Vec<Json> {
+        let events = self.events();
+        let mut tids: Vec<String> = Vec::new();
+        let mut out = Vec::new();
+        for ev in &events {
+            let tid = match tids.iter().position(|n| *n == ev.node) {
+                Some(i) => i,
+                None => {
+                    tids.push(ev.node.clone());
+                    out.push(obj(vec![
+                        ("name", jstr("thread_name".to_string())),
+                        ("ph", jstr("M".to_string())),
+                        ("pid", num(pid as f64)),
+                        ("tid", num((tids.len() - 1) as f64)),
+                        (
+                            "args",
+                            obj(vec![("name", jstr(ev.node.clone()))]),
+                        ),
+                    ]));
+                    tids.len() - 1
+                }
+            };
+            out.push(obj(vec![
+                ("name", jstr(ev.seg.to_string())),
+                ("ph", jstr("X".to_string())),
+                ("pid", num(pid as f64)),
+                ("tid", num(tid as f64)),
+                ("ts", num(ev.start_us as f64)),
+                ("dur", num(ev.dur_us.max(1) as f64)),
+                (
+                    "args",
+                    obj(vec![
+                        ("trace", jstr(format!("{:#x}", ev.trace_id))),
+                        ("parent", num(ev.parent as f64)),
+                    ]),
+                ),
+            ]));
+        }
+        out
+    }
+
+    /// Write the Chrome trace JSON document for this ring to `path`.
+    pub fn dump_chrome(&self, path: &str, pid: u64) -> io::Result<()> {
+        let doc = obj(vec![("traceEvents", arr(self.chrome_events(pid)))]);
+        std::fs::write(path, doc.to_string_pretty(0))
+    }
+}
+
+impl MetricsSource for SpanRing {
+    /// Expose the per-segment histograms as a scrapeable node, so the
+    /// admin endpoints and `ps-top` show the breakdown live
+    /// (`span.<segment>_us` histogram families).
+    fn snapshots(&self) -> Vec<Snapshot> {
+        let mut entries = Vec::new();
+        for (name, h) in self.segment_hists() {
+            h.entries(&format!("span.{name}_us"), &mut entries);
+        }
+        vec![Snapshot {
+            node: "spans".into(),
+            entries,
+        }]
+    }
+}
+
+/// Merge per-process Chrome trace documents (as written by
+/// [`SpanRing::dump_chrome`]) into one, reassigning each input a
+/// distinct pid and naming it via `process_name` metadata — the
+/// `run-cluster` post-run step that makes client and shard segments of
+/// one trace land in one loadable file.
+pub fn merge_chrome_docs(parts: &[(String, Json)]) -> Json {
+    let mut events = Vec::new();
+    for (pid, (label, doc)) in parts.iter().enumerate() {
+        events.push(obj(vec![
+            ("name", jstr("process_name".to_string())),
+            ("ph", jstr("M".to_string())),
+            ("pid", num(pid as f64)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("name", jstr(label.clone()))])),
+        ]));
+        let Some(evs) = doc.get("traceEvents").ok().and_then(|e| e.as_arr().ok()) else {
+            continue;
+        };
+        for ev in evs {
+            // Re-pid the event; everything else passes through.
+            let mut fields: Vec<(String, Json)> = Vec::new();
+            for key in ["name", "ph", "tid", "ts", "dur", "args"] {
+                if let Ok(v) = ev.get(key) {
+                    fields.push((key.to_string(), v.clone()));
+                }
+            }
+            fields.push(("pid".to_string(), num(pid as f64)));
+            events.push(Json::Obj(fields.into_iter().collect()));
+        }
+    }
+    obj(vec![("traceEvents", arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_is_deterministic_and_1_in_n() {
+        let mut s = SpanSampler::new(4);
+        let picks: Vec<Option<u64>> = (0..9).map(|_| s.tick()).collect();
+        assert_eq!(
+            picks,
+            vec![
+                Some(0),
+                None,
+                None,
+                None,
+                Some(1),
+                None,
+                None,
+                None,
+                Some(2)
+            ]
+        );
+        let mut off = SpanSampler::new(0);
+        assert!(!off.enabled());
+        assert_eq!(off.tick(), None);
+    }
+
+    #[test]
+    fn trace_ids_are_distinct_across_origins() {
+        let w = SpanCtx::for_worker(3, 7);
+        let s = SpanCtx::for_shard(3, 7);
+        assert_ne!(w.trace_id, s.trace_id);
+        assert_eq!(w.parent, 3);
+        assert_eq!(s.parent, 3 | SPAN_SHARD_ORIGIN);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_keeps_hists() {
+        let r = SpanRing::new(3);
+        for i in 0..5u64 {
+            r.record(SpanCtx::for_worker(0, i), "worker0", "serve", i * 10, i + 1);
+        }
+        let evs = r.events();
+        assert_eq!(evs.len(), 3);
+        // Oldest two (seq 0, 1) were overwritten.
+        assert_eq!(evs[0].start_us, 20);
+        assert_eq!(evs[2].start_us, 40);
+        let hists = r.segment_hists();
+        assert_eq!(hists.len(), 1);
+        assert_eq!(hists[0].0, "serve");
+        assert_eq!(hists[0].1.count, 5); // histograms see everything
+    }
+
+    #[test]
+    fn marks_roundtrip_once() {
+        let r = SpanRing::new(8);
+        r.mark(42, Mark::ArriveShard, 1000);
+        assert_eq!(r.take_mark(42, Mark::ArriveShard), Some(1000));
+        assert_eq!(r.take_mark(42, Mark::ArriveShard), None);
+        assert_eq!(r.take_mark(42, Mark::ArriveWorker), None);
+    }
+
+    #[test]
+    fn chrome_export_parses_and_carries_trace_ids() {
+        let r = SpanRing::new(8);
+        r.record(SpanCtx::for_worker(1, 0), "worker1", "client_issue", 100, 5);
+        r.record(SpanCtx::for_worker(1, 0), "shard0", "serve", 120, 7);
+        let doc = obj(vec![("traceEvents", arr(r.chrome_events(0)))]);
+        let parsed = Json::parse(&doc.to_string_pretty(0)).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 thread_name metadata + 2 segments.
+        assert_eq!(evs.len(), 4);
+        let xs: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+            .collect();
+        assert_eq!(xs.len(), 2);
+        let t0 = xs[0].get("args").unwrap().get("trace").unwrap();
+        let t1 = xs[1].get("args").unwrap().get("trace").unwrap();
+        assert_eq!(t0.as_str().unwrap(), t1.as_str().unwrap());
+    }
+
+    #[test]
+    fn merged_docs_get_distinct_pids() {
+        let r1 = SpanRing::new(4);
+        r1.record(SpanCtx::for_worker(0, 0), "worker0", "client_issue", 1, 1);
+        let r2 = SpanRing::new(4);
+        r2.record(SpanCtx::for_worker(0, 0), "shard0", "serve", 2, 1);
+        let d1 = obj(vec![("traceEvents", arr(r1.chrome_events(0)))]);
+        let d2 = obj(vec![("traceEvents", arr(r2.chrome_events(0)))]);
+        let merged = merge_chrome_docs(&[("worker0".into(), d1), ("shard0".into(), d2)]);
+        let evs = merged.get("traceEvents").unwrap().as_arr().unwrap();
+        let pids: std::collections::HashSet<u64> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+            .map(|e| e.get("pid").unwrap().as_u64().unwrap())
+            .collect();
+        assert_eq!(pids.len(), 2);
+    }
+
+    #[test]
+    fn metrics_source_exposes_segment_hists() {
+        let r = SpanRing::new(4);
+        r.record(SpanCtx::for_worker(0, 0), "worker0", "serve", 0, 9);
+        let snaps = r.snapshots();
+        assert_eq!(snaps[0].node, "spans");
+        assert_eq!(snaps[0].hist("span.serve_us").count, 1);
+    }
+}

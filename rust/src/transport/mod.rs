@@ -58,6 +58,16 @@ impl Packet {
     pub fn wire_bytes(&self) -> usize {
         wire::packet_frame_len(self)
     }
+
+    /// The sampled span context riding this packet, if any (wire v9):
+    /// what the transports hook to time enqueue/flush segments without
+    /// knowing message semantics.
+    pub fn span(&self) -> Option<crate::telemetry::spans::SpanCtx> {
+        match self {
+            Packet::ToShard(m) => m.span(),
+            Packet::ToWorker(m) => m.span(),
+        }
+    }
 }
 
 /// A one-way message fabric: carries a packet from `src` toward `dst`'s
@@ -223,6 +233,19 @@ impl Fabric {
                 )
                 .context("dialing loopback shard endpoint")?;
                 Ok(Fabric::Tcp { client, server })
+            }
+        }
+    }
+
+    /// Install the span recorder (wire v9) on whichever backend is
+    /// live: sampled frames then get transport enqueue/flush segments
+    /// and inbox-arrival marks. One-shot per backend.
+    pub fn set_spans(&self, ring: Arc<crate::telemetry::spans::SpanRing>) {
+        match self {
+            Fabric::Sim(net) => net.set_spans(ring),
+            Fabric::Tcp { client, server } => {
+                client.set_spans(ring.clone());
+                server.set_spans(ring);
             }
         }
     }

@@ -37,7 +37,7 @@ use std::io::{self, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -48,6 +48,7 @@ use super::{NodeId, Packet, Transport, TransportHandle};
 use crate::ps::msg::{ToShard, ToWorker};
 use crate::sim::fault::FaultInjector;
 use crate::telemetry::registry::{MetricsSource, Snapshot};
+use crate::telemetry::spans::{Mark, SpanRing};
 use crate::telemetry::trace::TraceRing;
 use crate::util::hash::{FxHashMap, FxHashSet};
 
@@ -124,6 +125,20 @@ pub struct TcpStats {
     dropped: AtomicU64,
     backpressure: AtomicU64,
     dial_retries: AtomicU64,
+    /// Span recorder for sampled frames (wire v9), installed once via
+    /// [`TcpTransport::set_spans`]. Lives here so the writer/reader loops
+    /// (which hold the shared stats) can record without new plumbing;
+    /// absent in untraced runs — one `OnceLock` load on the frame path.
+    spans: OnceLock<Arc<SpanRing>>,
+}
+
+impl TcpStats {
+    /// The installed span ring paired with a sampled frame's context, or
+    /// `None` on either miss — callers hook in one `if let`.
+    fn span_of(&self, packet: &Packet) -> Option<(&Arc<SpanRing>, crate::telemetry::spans::SpanCtx)> {
+        let ring = self.spans.get()?;
+        Some((ring, packet.span()?))
+    }
 }
 
 impl TcpStats {
@@ -297,6 +312,13 @@ impl Transport for Inner {
         self.stats
             .bytes
             .fetch_add(bytes as u64, Ordering::AcqRel);
+        // A sampled frame stamps its enqueue; the writer (or the local
+        // fast-path below) turns the stamp into `transport_flush`.
+        if let Some((ring, span)) = self.stats.span_of(&packet) {
+            let now = SpanRing::now_us();
+            ring.record(span, "tcp", "transport_enqueue", now, 0);
+            ring.mark(span.trace_id, Mark::Enqueue, now);
+        }
         // Same-process peer: deliver straight to the hosted inbox, no
         // socket. This is what carries shard->shard migration handoffs
         // and coordinator control messages inside the in-process TCP
@@ -304,6 +326,18 @@ impl Transport for Inner {
         // (src, dst) pair is always local or always remote, so FIFO per
         // link is preserved.
         if let Some(sink) = self.local.get(&dst) {
+            // Local delivery is the flush: close the in-transport segment
+            // and stamp the inbox arrival for the handler's queue-wait.
+            if let Some((ring, span)) = self.stats.span_of(&packet) {
+                let now = SpanRing::now_us();
+                let start = ring.take_mark(span.trace_id, Mark::Enqueue).unwrap_or(now);
+                ring.record(span, "tcp", "transport_flush", start, now.saturating_sub(start));
+                match dst {
+                    NodeId::Shard(_) => ring.mark(span.trace_id, Mark::ArriveShard, now),
+                    NodeId::Worker(_) => ring.mark(span.trace_id, Mark::ArriveWorker, now),
+                    NodeId::Coordinator => {}
+                }
+            }
             match sink.deliver(packet) {
                 LocalDelivery::Delivered => {
                     self.stats.delivered.fetch_add(1, Ordering::AcqRel);
@@ -539,6 +573,13 @@ impl TcpTransport {
     /// backpressure stalls at debug level.
     pub fn set_trace(&self, ring: Arc<TraceRing>) {
         *self.inner.trace.lock().unwrap() = Some(ring);
+    }
+
+    /// Install the span recorder (wire v9): sampled frames then get
+    /// `transport_enqueue`/`transport_flush` segments and arrival marks.
+    /// One-shot; a second call is ignored.
+    pub fn set_spans(&self, ring: Arc<SpanRing>) {
+        let _ = self.inner.stats.spans.set(ring);
     }
 
     /// Scrape adapter for the admin endpoint: one snapshot for the
@@ -883,6 +924,21 @@ fn writer_loop(
                         link.frames.fetch_add(1, Ordering::AcqRel);
                         link.bytes
                             .fetch_add(packet.wire_bytes() as u64, Ordering::AcqRel);
+                        // Sampled frame encoded toward the socket: close
+                        // its in-transport segment (enqueue stamp -> now).
+                        if let Some((ring, span)) = stats.span_of(&packet) {
+                            let now = SpanRing::now_us();
+                            let start = ring
+                                .take_mark(span.trace_id, Mark::Enqueue)
+                                .unwrap_or(now);
+                            ring.record(
+                                span,
+                                "tcp",
+                                "transport_flush",
+                                start,
+                                now.saturating_sub(start),
+                            );
+                        }
                         // Coalescing boundary: a batch past the limit is
                         // flushed now rather than growing unbounded.
                         if batch.len() >= COALESCE {
@@ -923,16 +979,40 @@ fn reader_loop(stream: TcpStream, local: NodeId, peer: NodeId, inner: Arc<Inner>
     let clean = loop {
         match wire::read_frame(&mut r, &mut scratch) {
             Ok(Some((_src, dst, packet))) => {
-                let delivered = inner
-                    .local
-                    .get(&dst)
-                    .map(|sink| sink.deliver(packet))
-                    .unwrap_or(false);
-                if delivered {
-                    inner.stats.delivered.fetch_add(1, Ordering::AcqRel);
-                } else {
-                    inner.stats.dropped.fetch_add(1, Ordering::AcqRel);
-                    eprintln!("transport: frame for {dst:?} mis-routed to this process");
+                // Sampled frame arriving off the socket: stamp its inbox
+                // arrival so the handler can time its queue wait.
+                if let Some((ring, span)) = inner.stats.span_of(&packet) {
+                    let now = SpanRing::now_us();
+                    match dst {
+                        NodeId::Shard(_) => ring.mark(span.trace_id, Mark::ArriveShard, now),
+                        NodeId::Worker(_) => ring.mark(span.trace_id, Mark::ArriveWorker, now),
+                        NodeId::Coordinator => {}
+                    }
+                }
+                match inner.local.get(&dst) {
+                    Some(sink) => match sink.deliver(packet) {
+                        LocalDelivery::Delivered => {
+                            inner.stats.delivered.fetch_add(1, Ordering::AcqRel);
+                        }
+                        // The hosted node's thread exited (orderly
+                        // shutdown or a kill fault): count the drop and
+                        // report the peer down exactly once, as the
+                        // local fast-path does.
+                        LocalDelivery::HungUp => {
+                            inner.stats.dropped.fetch_add(1, Ordering::AcqRel);
+                            inner.note_local_down(dst);
+                        }
+                        LocalDelivery::Mismatch => {
+                            inner.stats.dropped.fetch_add(1, Ordering::AcqRel);
+                            eprintln!(
+                                "transport: frame for {dst:?} has mismatched direction"
+                            );
+                        }
+                    },
+                    None => {
+                        inner.stats.dropped.fetch_add(1, Ordering::AcqRel);
+                        eprintln!("transport: frame for {dst:?} mis-routed to this process");
+                    }
                 }
             }
             Ok(None) => break true, // clean EOF: peer closed its write half
@@ -1057,6 +1137,7 @@ mod tests {
                 data: vec![1.0f32, 2.0].into(),
                 vclock: 1,
                 fresh: 2,
+                span: None,
             }),
         );
         match wrx.recv_timeout(Duration::from_secs(5)).unwrap() {

@@ -74,6 +74,23 @@
 //! that is smaller), decoded back to a dense row by *placing* pairs into
 //! a zero fill, which preserves every bit pattern.
 //!
+//! ## Request spans (wire v9)
+//!
+//! The four data-plane kinds (Get, Update, Row, Push) may carry an
+//! optional trailing span context:
+//!
+//! ```text
+//! span := trace_id:u64 | parent:u32        (12 bytes, at body end)
+//! ```
+//!
+//! Presence is inferred from the body length: each of the four bodies is
+//! otherwise fully self-describing (Get/Row are fixed-size, Update/Push
+//! count their rows), so exactly 12 leftover bytes after the base decode
+//! are the span and 0 leftover bytes mean unsampled. An unsampled frame
+//! is therefore byte-identical to its wire-v8 encoding — tracing is
+//! provably free when off and costs 12 bytes per *sampled* message when
+//! on (see `telemetry::spans` for the sampling discipline).
+//!
 //! Connections start with a fixed-size handshake:
 //!
 //! ```text
@@ -105,6 +122,7 @@ use crate::ps::placement::PlacementDelta;
 use crate::ps::types::{
     delta_wire_bytes, hybrid_snapshot_wire_bytes, row_wire_bytes, Clock, Key, RowDelta, WorkerId,
 };
+use crate::telemetry::spans::{SpanCtx, SPAN_WIRE_BYTES};
 
 /// Handshake magic: protocol name + wire revision byte.
 pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
@@ -118,8 +136,11 @@ pub const MAGIC: [u8; 8] = *b"ESSPWIR1";
 /// waves — hybrid snapshot/delta payloads on Push/VapPush rows and the
 /// sparse-capable RowHandoff row encoding; v8: self-healing failover —
 /// the ReplicaSync/ReplicaCatchUp re-replication pair and the placement
-/// delta's attach/dead fields).
-pub const VERSION: u16 = 8;
+/// delta's attach/dead fields; v9: causal request spans — an optional
+/// trailing 12-byte span context, `trace_id:u64 | parent:u32`, on
+/// Get/Update/Row/Push bodies, present iff the message was sampled, so
+/// unsampled frames stay byte-identical to v8).
+pub const VERSION: u16 = 9;
 /// Versions this binary can speak (currently exactly [`VERSION`]; kept a
 /// range so the reject blob's negotiation surface survives a future
 /// multi-version binary).
@@ -174,14 +195,20 @@ const PAYLOAD_DELTAS: u8 = 1;
 
 // ------------------------------------------------------------------ sizes
 
+/// Bytes the optional trailing span context adds to a body (wire v9).
+#[inline]
+fn span_len(span: &Option<SpanCtx>) -> usize {
+    span.map_or(0, |_| SPAN_WIRE_BYTES)
+}
+
 /// Exact body size of a `ToShard` message.
 pub fn to_shard_body_len(m: &ToShard) -> usize {
     match m {
-        ToShard::Get { .. } => 24,
-        ToShard::Update { rows, .. } => {
+        ToShard::Get { span, .. } => 24 + span_len(span),
+        ToShard::Update { rows, span, .. } => {
             // Per-row accounting delegates to `row_wire_bytes`: the one
             // source of truth shared with the client's pending estimate.
-            16 + rows.iter().map(|(_, d)| row_wire_bytes(d)).sum::<usize>()
+            16 + rows.iter().map(|(_, d)| row_wire_bytes(d)).sum::<usize>() + span_len(span)
         }
         ToShard::ClockTick { .. } => 12,
         ToShard::Register { .. } => 16,
@@ -223,8 +250,11 @@ fn placement_delta_body_len(delta: &PlacementDelta) -> usize {
 /// Exact body size of a `ToWorker` message.
 pub fn to_worker_body_len(m: &ToWorker) -> usize {
     match m {
-        ToWorker::Row { data, .. } => 32 + 4 * data.len(),
-        ToWorker::Push { rows, .. } | ToWorker::VapPush { rows, .. } => {
+        ToWorker::Row { data, span, .. } => 32 + 4 * data.len() + span_len(span),
+        ToWorker::Push { rows, span, .. } => {
+            16 + rows.iter().map(push_row_wire_bytes).sum::<usize>() + span_len(span)
+        }
+        ToWorker::VapPush { rows, .. } => {
             16 + rows.iter().map(push_row_wire_bytes).sum::<usize>()
         }
         ToWorker::Bound { .. } => 5,
@@ -384,22 +414,35 @@ fn write_hybrid_snapshot(w: &mut impl Write, data: &[f32]) -> io::Result<()> {
     }
 }
 
+/// Append the optional trailing span context (wire v9): 12 bytes when
+/// sampled, nothing at all when not.
+fn write_span(w: &mut impl Write, span: &Option<SpanCtx>) -> io::Result<()> {
+    if let Some(s) = span {
+        w64(w, s.trace_id)?;
+        w32(w, s.parent)?;
+    }
+    Ok(())
+}
+
 fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
     match m {
         ToShard::Get {
             key,
             worker,
             min_vclock,
+            span,
         } => {
             w8(w, K_GET)?;
             wkey(w, key)?;
             w32(w, *worker as u32)?;
-            wi64(w, *min_vclock)
+            wi64(w, *min_vclock)?;
+            write_span(w, span)
         }
         ToShard::Update {
             worker,
             clock,
             rows,
+            span,
         } => {
             w8(w, K_UPDATE)?;
             w32(w, *worker as u32)?;
@@ -409,7 +452,7 @@ fn write_to_shard(w: &mut impl Write, m: &ToShard) -> io::Result<()> {
                 wkey(w, key)?;
                 write_row_delta(w, delta)?;
             }
-            Ok(())
+            write_span(w, span)
         }
         ToShard::ClockTick { worker, clock } => {
             w8(w, K_TICK)?;
@@ -587,23 +630,27 @@ fn write_to_worker(w: &mut impl Write, m: &ToWorker) -> io::Result<()> {
             data,
             vclock,
             fresh,
+            span,
         } => {
             w8(w, K_ROW)?;
             wkey(w, key)?;
             wi64(w, *vclock)?;
             wi64(w, *fresh)?;
             w32(w, data.len() as u32)?;
-            write_f32s(w, data)
+            write_f32s(w, data)?;
+            write_span(w, span)
         }
         ToWorker::Push {
             shard,
             vclock,
             rows,
+            span,
         } => {
             w8(w, K_PUSH)?;
             w32(w, *shard as u32)?;
             wi64(w, *vclock)?;
-            write_push_rows(w, rows)
+            write_push_rows(w, rows)?;
+            write_span(w, span)
         }
         ToWorker::VapPush { shard, seq, rows } => {
             w8(w, K_VAP_PUSH)?;
@@ -753,6 +800,21 @@ impl<'a> Cur<'a> {
 
     fn key(&mut self) -> Result<Key> {
         Ok((self.u32()?, self.u64()?))
+    }
+
+    /// Read the optional trailing span context (wire v9). The four bodies
+    /// that carry one are otherwise fully self-describing, so exactly
+    /// [`SPAN_WIRE_BYTES`] leftover bytes are a span and 0 mean
+    /// unsampled; any other remainder falls through to the frame-level
+    /// trailing-bytes check and errors there.
+    fn span_tail(&mut self) -> Result<Option<SpanCtx>> {
+        if self.rem() != SPAN_WIRE_BYTES {
+            return Ok(None);
+        }
+        Ok(Some(SpanCtx {
+            trace_id: self.u64()?,
+            parent: self.u32()?,
+        }))
     }
 
     fn worker(&mut self) -> Result<usize> {
@@ -961,6 +1023,7 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
             key: c.key()?,
             worker: c.worker()?,
             min_vclock: c.i64()?,
+            span: c.span_tail()?,
         }),
         K_UPDATE => {
             let worker = c.worker()?;
@@ -986,6 +1049,7 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
                 worker,
                 clock,
                 rows,
+                span: c.span_tail()?,
             })
         }
         K_TICK => Packet::ToShard(ToShard::ClockTick {
@@ -1113,12 +1177,14 @@ pub fn decode_frame(body: &[u8]) -> Result<(NodeId, NodeId, Packet)> {
                 data: c.f32s_arc(len).context("row payload")?,
                 vclock,
                 fresh,
+                span: c.span_tail()?,
             })
         }
         K_PUSH => Packet::ToWorker(ToWorker::Push {
             shard: c.u32()? as usize,
             vclock: c.i64()?,
             rows: decode_push_rows(&mut c)?,
+            span: c.span_tail()?,
         }),
         K_VAP_PUSH => Packet::ToWorker(ToWorker::VapPush {
             shard: c.u32()? as usize,
@@ -1362,6 +1428,13 @@ mod tests {
                 key: (0, 9),
                 worker: 3,
                 min_vclock: -5,
+                span: None,
+            }),
+            Packet::ToShard(ToShard::Get {
+                key: (0, 9),
+                worker: 3,
+                min_vclock: -5,
+                span: Some(SpanCtx::for_worker(3, 17)),
             }),
             Packet::ToShard(ToShard::Update {
                 worker: 1,
@@ -1372,6 +1445,15 @@ mod tests {
                     ((2, 10), RowDelta::sparse(4096, vec![(0, 1.5), (17, -0.25)])),
                     ((2, 11), RowDelta::sparse(8, vec![])),
                 ],
+                span: None,
+            }),
+            Packet::ToShard(ToShard::Update {
+                // Zero rows + a span: the decoder must not mistake the
+                // trailing 12 bytes for row data.
+                worker: 1,
+                clock: 4,
+                rows: vec![],
+                span: Some(SpanCtx::for_worker(1, 0)),
             }),
             Packet::ToShard(ToShard::ClockTick { worker: 0, clock: 0 }),
             Packet::ToShard(ToShard::Register {
@@ -1478,11 +1560,26 @@ mod tests {
                 data: vec![1.5f32; 4].into(),
                 vclock: 2,
                 fresh: 3,
+                span: None,
+            }),
+            Packet::ToWorker(ToWorker::Row {
+                key: (3, 1),
+                data: vec![1.5f32; 4].into(),
+                vclock: 2,
+                fresh: 3,
+                span: Some(SpanCtx::for_worker(9, 1 << 39)),
             }),
             Packet::ToWorker(ToWorker::Push {
                 shard: 1,
                 vclock: 6,
                 rows: rows.clone(),
+                span: None,
+            }),
+            Packet::ToWorker(ToWorker::Push {
+                shard: 1,
+                vclock: 6,
+                rows: rows.clone(),
+                span: Some(SpanCtx::for_shard(1, 5)),
             }),
             Packet::ToWorker(ToWorker::VapPush {
                 shard: 0,
@@ -1553,6 +1650,7 @@ mod tests {
                 ((1, 4), vec![1.0f32, 2.0].into()),
                 ((1, 5), RowDelta::sparse(128, vec![(7, 0.5)])),
             ],
+            span: Some(SpanCtx::for_worker(2, 3)),
         };
         let mut via_packet = Vec::new();
         write_frame(
@@ -1566,6 +1664,32 @@ mod tests {
         write_to_shard_frame(&mut borrowed, NodeId::Coordinator, NodeId::Shard(1), &m)
             .unwrap();
         assert_eq!(via_packet, borrowed);
+    }
+
+    #[test]
+    fn unsampled_frames_carry_zero_span_bytes() {
+        // The v9 invariant: span == None must encode byte-identically to
+        // the v8 layout — 12 extra bytes appear only when sampled.
+        let bare = Packet::ToShard(ToShard::Get {
+            key: (1, 2),
+            worker: 0,
+            min_vclock: 3,
+            span: None,
+        });
+        let sampled = Packet::ToShard(ToShard::Get {
+            key: (1, 2),
+            worker: 0,
+            min_vclock: 3,
+            span: Some(SpanCtx::for_worker(0, 0)),
+        });
+        let a = encoded(NodeId::Worker(0), NodeId::Shard(0), &bare);
+        let b = encoded(NodeId::Worker(0), NodeId::Shard(0), &sampled);
+        assert_eq!(b.len(), a.len() + SPAN_WIRE_BYTES);
+        // Everything but the length prefix and the trailing span matches.
+        assert_eq!(a[4..], b[4..a.len()]);
+        // Truncating a sampled span mid-way is a decode error, not a
+        // silently shorter message.
+        assert!(decode_frame(&b[4..b.len() - 5]).is_err());
     }
 
     #[test]

@@ -111,6 +111,7 @@ fn wave_allocs(row_len: usize, waves: usize) -> Vec<u64> {
             worker: 0,
             clock,
             rows: vec![((0, 1), RowDelta::sparse(row_len, vec![(0, 1.0), (3, 0.5)]))],
+            span: None,
         });
         for w in 0..WORKERS {
             shard.handle(ToShard::ClockTick { worker: w, clock });

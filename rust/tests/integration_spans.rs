@@ -1,0 +1,408 @@
+//! Causal request-span + profiling-plane integration (wire v9).
+//!
+//!   * the whole profiling plane — sampled spans, the hot-key sketch,
+//!     staleness-lag recording — is strictly out-of-band: deterministic
+//!     runs are bit-identical with it at full blast vs off, for all six
+//!     consistency models over both transports;
+//!   * one shared `SpanRing` links client- and shard-side hops of the
+//!     same sampled request by trace id, and the run report folds the
+//!     segments into per-segment histograms plus a staleness-lag
+//!     histogram;
+//!   * the space-saving hot-key sketch ranks a Zipfian-skewed update
+//!     stream correctly in the harvested shard registry;
+//!   * a real multi-process `run-cluster --trace-spans` leaves ONE
+//!     merged Chrome trace file in which the same trace id appears
+//!     under distinct pids (worker and shard processes), and the admin
+//!     socket serves the hot-key sketch mid-run.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use essptable::ps::client::PsClient;
+use essptable::ps::consistency::Consistency;
+use essptable::ps::server::{Cluster, ClusterConfig, PsApp, TableSpec};
+use essptable::ps::types::{Clock, Key};
+use essptable::telemetry::admin::scrape;
+use essptable::telemetry::spans::SpanRing;
+use essptable::transport::TransportSel;
+use essptable::util::json::Json;
+
+fn assert_bit_identical(ctx: &str, a: &HashMap<Key, Vec<f32>>, b: &HashMap<Key, Vec<f32>>) {
+    assert_eq!(a.len(), b.len(), "{ctx}: row sets differ");
+    for (k, va) in a {
+        let vb = b
+            .get(k)
+            .unwrap_or_else(|| panic!("{ctx}: row {k:?} missing"));
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: row {k:?} elem {i} differs: {x} vs {y}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------ out-of-band proof
+
+/// The order-sensitive fractional counter, with the profiling plane
+/// either fully off or at its most invasive setting: every eligible
+/// frame sampled (`span_sample: 1`), hot-key sketches armed.
+fn counter_run(
+    transport: TransportSel,
+    consistency: Consistency,
+    probes: bool,
+) -> HashMap<Key, Vec<f32>> {
+    let workers = 3;
+    let mut cluster = Cluster::new(ClusterConfig {
+        workers,
+        shards: 2,
+        consistency,
+        transport,
+        deterministic: true,
+        spans: probes.then(|| Arc::new(SpanRing::new(8192))),
+        span_sample: if probes { 1 } else { 0 },
+        hot_key_k: if probes { 8 } else { 0 },
+        ..Default::default()
+    });
+    cluster.add_table(TableSpec::zeros(0, 4, 1));
+    let apps: Vec<Box<dyn PsApp>> = (0..workers)
+        .map(|w| {
+            Box::new(move |ps: &mut PsClient, _c: Clock| {
+                let _ = ps.get((0, 0));
+                ps.inc((0, 0), &[0.1 * (w + 1) as f32]);
+                None
+            }) as Box<dyn PsApp>
+        })
+        .collect();
+    cluster.run(apps, 6).table_rows
+}
+
+#[test]
+fn profiling_plane_at_full_blast_is_bit_identical_to_off() {
+    // The tentpole's out-of-band claim: sample-every-frame spans plus
+    // hot-key sketching must not perturb one bit of the deterministic
+    // result, for every model class over both planes. Sampling is a
+    // deterministic per-node counter and the 12-byte span context is
+    // never a protocol input, so this holds exactly.
+    let models = [
+        Consistency::Bsp,
+        Consistency::Ssp { s: 2 },
+        Consistency::Essp { s: 2 },
+        Consistency::Async { refresh_every: 2 },
+        Consistency::Vap { v0: 100.0 },
+        Consistency::Avap { v0: 100.0, s: 2 },
+    ];
+    for consistency in models {
+        for transport in [TransportSel::Sim, TransportSel::Tcp] {
+            let label = format!("{} over {}", consistency.label(), transport.label());
+            let plain = counter_run(transport, consistency, false);
+            let probed = counter_run(transport, consistency, true);
+            assert_bit_identical(&label, &plain, &probed);
+        }
+    }
+}
+
+// --------------------------------------------- causal linkage + RunReport
+
+#[test]
+fn span_ring_links_client_and_shard_hops_of_one_request() {
+    let ring = Arc::new(SpanRing::new(65536));
+    let workers = 3;
+    let mut cluster = Cluster::new(ClusterConfig {
+        workers,
+        shards: 2,
+        consistency: Consistency::Essp { s: 1 },
+        transport: TransportSel::Sim,
+        deterministic: true,
+        spans: Some(ring.clone()),
+        span_sample: 1,
+        hot_key_k: 4,
+        ..Default::default()
+    });
+    cluster.add_table(TableSpec::zeros(0, 4, 1));
+    let apps: Vec<Box<dyn PsApp>> = (0..workers)
+        .map(|_| {
+            Box::new(|ps: &mut PsClient, _c: Clock| {
+                let _ = ps.get((0, 0));
+                ps.inc((0, 0), &[1.0]);
+                None
+            }) as Box<dyn PsApp>
+        })
+        .collect();
+    let report = cluster.run(apps, 8);
+
+    // The report folds the ring into per-segment histograms: the
+    // client-side issue segment and at least one shard-side segment
+    // must be present, every histogram non-empty and well-formed.
+    let seg = |name: &str| {
+        report
+            .span_segments
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, h)| h)
+    };
+    let issue = seg("client_issue").expect("client_issue segment missing");
+    assert!(issue.count > 0, "client_issue histogram empty");
+    assert!(
+        seg("serve").is_some() || seg("apply").is_some(),
+        "no shard-side segment in {:?}",
+        report
+            .span_segments
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect::<Vec<_>>()
+    );
+    for (name, h) in &report.span_segments {
+        assert!(h.count > 0, "segment {name} has an empty histogram");
+        assert!(h.quantile(0.50) <= h.quantile(0.99), "segment {name} malformed");
+    }
+
+    // Causal linkage: some sampled trace id was recorded by BOTH a
+    // worker node and a shard node — the cross-node timeline the plane
+    // exists for.
+    let mut sides: HashMap<u64, HashSet<&'static str>> = HashMap::new();
+    for ev in ring.events() {
+        let side = if ev.node.starts_with("worker") {
+            "worker"
+        } else if ev.node.starts_with("shard") {
+            "shard"
+        } else {
+            continue;
+        };
+        sides.entry(ev.trace_id).or_default().insert(side);
+    }
+    assert!(
+        sides.values().any(|s| s.len() == 2),
+        "no trace id crossed a node boundary ({} traces)",
+        sides.len()
+    );
+
+    // The client-side staleness-lag histogram recorded every admitted
+    // read (clamped lag, so BSP-tight models still count at bucket 0).
+    assert!(report.staleness_lag.count > 0, "no staleness lags recorded");
+}
+
+// ------------------------------------------------------- hot-key ranking
+
+#[test]
+fn hot_key_sketch_ranks_a_zipfian_skew_in_the_harvested_registry() {
+    // Every worker updates row 0 every clock and one of rows 1..=7 once
+    // per 7 clocks — a crude Zipf head. The shard's space-saving sketch
+    // must rank row 0 first, by a wide margin, in the harvested
+    // registry entries (`hot.u.<table>:<row>`).
+    let workers = 2;
+    let mut cluster = Cluster::new(ClusterConfig {
+        workers,
+        shards: 1,
+        consistency: Consistency::Essp { s: 1 },
+        transport: TransportSel::Sim,
+        deterministic: true,
+        hot_key_k: 4,
+        ..Default::default()
+    });
+    cluster.add_table(TableSpec::zeros(0, 8, 1));
+    let apps: Vec<Box<dyn PsApp>> = (0..workers)
+        .map(|_| {
+            Box::new(|ps: &mut PsClient, c: Clock| {
+                let _ = ps.get((0, 0));
+                ps.inc((0, 0), &[1.0]);
+                ps.inc((0, 1 + (c as u64 % 7)), &[1.0]);
+                None
+            }) as Box<dyn PsApp>
+        })
+        .collect();
+    let report = cluster.run(apps, 14);
+
+    let hot: Vec<(&str, u64)> = report.shard_metrics[0]
+        .iter()
+        .filter(|(n, _)| n.starts_with("hot.u."))
+        .map(|(n, v)| (n.as_str(), *v))
+        .collect();
+    assert!(!hot.is_empty(), "no hot.u entries harvested");
+    let (top_name, top_count) = hot
+        .iter()
+        .max_by_key(|(_, c)| *c)
+        .copied()
+        .expect("sketch empty");
+    assert_eq!(top_name, "hot.u.0:0", "wrong heavy hitter: {hot:?}");
+    // Row 0 saw 7x the traffic of any tail row. Space-saving inflates
+    // an evicted-slot estimate by at most N/k (= 14 here) over a tail
+    // key's true count of 4, still well under the head's exact 28 —
+    // strict dominance must hold.
+    for (name, count) in &hot {
+        if *name != "hot.u.0:0" {
+            assert!(
+                top_count > *count,
+                "head not dominant: {top_name}={top_count} vs {name}={count}"
+            );
+        }
+    }
+    // GET-side sketch saw traffic too (row 0 is the only key read).
+    assert!(
+        report.shard_metrics[0]
+            .iter()
+            .any(|(n, v)| n == "hot.g.0:0" && *v > 0),
+        "hot.g.0:0 missing from {:?}",
+        report.shard_metrics[0]
+    );
+}
+
+// ------------------------------------- multi-process merged Chrome trace
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_essptable")
+}
+
+fn out_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("esspt-spans-{}-{tag}", std::process::id()))
+}
+
+#[test]
+fn run_cluster_merges_a_cross_process_chrome_trace_and_serves_hot_keys() {
+    // 2 shard + 2 worker OS processes, every frame sampled. A seeded
+    // pause holds shard 1 for 2.5s at clock 3 so the run is still in
+    // flight while this test scrapes shard 0's hot-key sketch; after
+    // exit, the launcher-merged Chrome trace must contain the same
+    // trace id under two distinct pids — a request timeline crossing a
+    // real process boundary.
+    const SHARDS: usize = 2;
+    const WORKERS: usize = 2;
+    let out = out_dir("merge");
+    std::fs::create_dir_all(&out).unwrap();
+    let spans_path = out.join("spans.json");
+    let mut child = Command::new(bin())
+        .args([
+            "run-cluster",
+            "--app",
+            "logreg",
+            "--workers",
+            &WORKERS.to_string(),
+            "--shards",
+            &SHARDS.to_string(),
+            "--clocks",
+            "10",
+            "--consistency",
+            "bsp",
+            "--metrics",
+            "true",
+            "--trace-spans",
+            spans_path.to_str().unwrap(),
+            "--span-sample",
+            "1",
+            "--hot-keys",
+            "4",
+            "--fault-plan",
+            "pause=s1@3:2500ms",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawning run-cluster");
+
+    // Collect the admin-port map the launcher prints before spawning,
+    // then drain stdout on a thread so the child never blocks.
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = BufReader::new(stdout);
+    let mut shard_addrs: Vec<String> = Vec::new();
+    let mut worker_addrs: Vec<String> = Vec::new();
+    let mut line = String::new();
+    while shard_addrs.len() + worker_addrs.len() < SHARDS + WORKERS {
+        line.clear();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "run-cluster exited before printing the admin-port map"
+        );
+        if let Some(rest) = line.trim().strip_prefix("metrics: shard ") {
+            shard_addrs.push(rest.split(" -> ").nth(1).unwrap().to_string());
+        } else if let Some(rest) = line.trim().strip_prefix("metrics: worker ") {
+            worker_addrs.push(rest.split(" -> ").nth(1).unwrap().to_string());
+        }
+    }
+    let drain = std::thread::spawn(move || {
+        let mut rest = String::new();
+        use std::io::Read;
+        let _ = reader.read_to_string(&mut rest);
+        rest
+    });
+
+    // Mid-run: shard 0's /json must eventually carry hot-key sketch
+    // entries (hot.u.* — logreg pushes gradients every clock).
+    let tick = Duration::from_millis(400);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let shard0 = &shard_addrs[0];
+    let mut saw_hot = false;
+    while !saw_hot {
+        assert!(
+            Instant::now() < deadline,
+            "shard 0 never served a hot-key entry"
+        );
+        if let Ok(body) = scrape(shard0, "/json", tick) {
+            let doc = Json::parse(&body).expect("shard /json must parse");
+            for n in doc.get("nodes").unwrap().as_arr().unwrap() {
+                if let Ok(metrics) = n.get("metrics").and_then(|m| m.as_obj()) {
+                    if metrics.keys().any(|k| k.starts_with("hot.u.")) {
+                        saw_hot = true;
+                    }
+                }
+            }
+        }
+        if !saw_hot {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    let status = child.wait().expect("waiting for run-cluster");
+    let tail = drain.join().unwrap();
+    assert!(status.success(), "run-cluster failed: {status}\n{tail}");
+
+    // The launcher merged every per-process span dump into one file.
+    let body = std::fs::read_to_string(&spans_path)
+        .unwrap_or_else(|e| panic!("merged trace {spans_path:?} unreadable: {e}"));
+    let doc = Json::parse(&body).expect("merged Chrome trace must parse");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "merged trace has no events");
+
+    // Process lanes: one process_name metadata record per child, for
+    // both roles.
+    let mut labels = HashSet::new();
+    for ev in events {
+        if ev.get("name").and_then(|n| n.as_str()).ok() == Some("process_name") {
+            let name = ev.get("args").unwrap().get("name").unwrap().as_str().unwrap();
+            labels.insert(name.to_string());
+        }
+    }
+    assert!(labels.contains("shard 0"), "labels: {labels:?}");
+    assert!(labels.contains("worker 0"), "labels: {labels:?}");
+
+    // The causal payoff: some trace id appears under >= 2 distinct pids
+    // — the same sampled request timed on both sides of a process
+    // boundary.
+    let mut pids_by_trace: HashMap<String, HashSet<u64>> = HashMap::new();
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()).ok() != Some("X") {
+            continue;
+        }
+        let trace = ev
+            .get("args")
+            .unwrap()
+            .get("trace")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let pid = ev.get("pid").unwrap().as_u64().unwrap();
+        pids_by_trace.entry(trace).or_default().insert(pid);
+    }
+    assert!(
+        pids_by_trace.values().any(|p| p.len() >= 2),
+        "no trace id crossed a process boundary ({} traces)",
+        pids_by_trace.len()
+    );
+    std::fs::remove_dir_all(&out).ok();
+}

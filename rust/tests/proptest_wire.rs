@@ -12,13 +12,18 @@
 //!     delta-chain payloads roundtrip (special float bits included),
 //!     garbage payload/repr tags and lying chain counts are rejected, and
 //!     a lying base vclock decodes verbatim — certifying it is the
-//!     client's job, not the codec's.
+//!     client's job, not the codec's;
+//!   * the wire-v9 span context: random sampled/unsampled spans ride the
+//!     four data-plane variants through the same roundtrip + truncation
+//!     fuzz, and `span: None` encodes byte-identical to a pre-v9 frame
+//!     (the zero-byte-when-unsampled invariant bit-identity rests on).
 
 use std::sync::Arc;
 
 use essptable::ps::msg::{PushPayload, PushRow, ToShard, ToWorker};
 use essptable::ps::placement::PlacementDelta;
 use essptable::ps::types::{Key, RowDelta};
+use essptable::telemetry::spans::{SpanCtx, SPAN_WIRE_BYTES};
 use essptable::transport::wire;
 use essptable::transport::{NodeId, Packet};
 use essptable::util::rng::Rng;
@@ -79,6 +84,15 @@ fn gen_push_rows(rng: &mut Rng) -> Vec<PushRow> {
         .collect()
 }
 
+/// A random wire-v9 span context: absent half the time (the common,
+/// unsampled case), arbitrary trace/parent bits otherwise.
+fn gen_span(rng: &mut Rng) -> Option<SpanCtx> {
+    (rng.f64() < 0.5).then(|| SpanCtx {
+        trace_id: rng.next_u64(),
+        parent: rng.next_u32(),
+    })
+}
+
 const TO_SHARD_VARIANTS: usize = 16;
 
 fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
@@ -87,6 +101,7 @@ fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
             key: gen_key(rng),
             worker: rng.usize_below(64),
             min_vclock: gen_clock(rng),
+            span: gen_span(rng),
         },
         1 => ToShard::Update {
             worker: rng.usize_below(64),
@@ -94,6 +109,7 @@ fn gen_to_shard(rng: &mut Rng, variant: usize) -> ToShard {
             rows: (0..rng.usize_below(9))
                 .map(|_| (gen_key(rng), gen_delta(rng)))
                 .collect(),
+            span: gen_span(rng),
         },
         2 => ToShard::ClockTick {
             worker: rng.usize_below(64),
@@ -201,11 +217,13 @@ fn gen_to_worker(rng: &mut Rng, variant: usize) -> ToWorker {
             data: gen_arc(rng),
             vclock: gen_clock(rng),
             fresh: gen_clock(rng),
+            span: gen_span(rng),
         },
         1 => ToWorker::Push {
             shard: rng.usize_below(16),
             vclock: gen_clock(rng),
             rows: gen_push_rows(rng),
+            span: gen_span(rng),
         },
         2 => ToWorker::VapPush {
             shard: rng.usize_below(16),
@@ -388,6 +406,7 @@ fn lying_row_count_is_bounded_before_allocation() {
         shard: 0,
         vclock: 1,
         rows: vec![],
+        span: None,
     }));
     let n_off = 15 + 4 + 8;
     bytes[n_off..n_off + 4].copy_from_slice(&(1u32 << 31).to_le_bytes());
@@ -406,6 +425,7 @@ fn encoded_delta_push(deltas: Vec<RowDelta>) -> Vec<u8> {
         shard: 1,
         vclock: 5,
         rows: vec![PushRow::deltas((0, 0), 3, deltas.into(), 4)],
+        span: None,
     }))
 }
 
@@ -520,6 +540,7 @@ fn lying_payload_length_is_bounded_before_allocation() {
         worker: 0,
         clock: 1,
         rows: vec![((0, 0), vec![1.0, 2.0].into())],
+        span: None,
     }));
     let len_off = UPDATE_ROW0 + 12 + 1;
     bytes[len_off..len_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
@@ -538,6 +559,7 @@ fn encoded_sparse_update() -> Vec<u8> {
         worker: 0,
         clock: 1,
         rows: vec![((0, 0), RowDelta::sparse(8, vec![(1, 1.0), (2, 2.0)]))],
+        span: None,
     }))
 }
 
@@ -622,6 +644,7 @@ fn sparse_special_float_bits_survive_roundtrip() {
         worker: 2,
         clock: 3,
         rows: vec![((1, 5), RowDelta::sparse(1024, pairs.clone()))],
+        span: None,
     });
     let bytes = encode(&p);
     let (_, _, back) = wire::read_frame(&mut &bytes[..], &mut Vec::new())
@@ -640,6 +663,97 @@ fn sparse_special_float_bits_survive_roundtrip() {
             other => panic!("representation not preserved: {other:?}"),
         },
         other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn unsampled_spans_cost_zero_bytes_on_every_data_plane_variant() {
+    // Wire v9's contract: `span: None` encodes byte-identical to a
+    // pre-v9 frame, and a sampled span appends exactly SPAN_WIRE_BYTES
+    // (`trace_id: u64 | parent: u32`, little-endian) at the very end of
+    // the body. The spans-off bit-identity guarantee rests on the None
+    // half; the trailing placement is what lets the offset-patching
+    // tests in this file keep their hard-coded offsets.
+    let ctx = SpanCtx {
+        trace_id: 0x0123_4567_89AB_CDEF,
+        parent: 0xA5A5_0F0F,
+    };
+    let variants: Vec<(&str, Packet, Packet)> = vec![
+        (
+            "Get",
+            Packet::ToShard(ToShard::Get {
+                key: (1, 2),
+                worker: 3,
+                min_vclock: 4,
+                span: None,
+            }),
+            Packet::ToShard(ToShard::Get {
+                key: (1, 2),
+                worker: 3,
+                min_vclock: 4,
+                span: Some(ctx),
+            }),
+        ),
+        (
+            "Update",
+            Packet::ToShard(ToShard::Update {
+                worker: 0,
+                clock: 1,
+                rows: vec![((0, 0), vec![1.0, 2.0].into())],
+                span: None,
+            }),
+            Packet::ToShard(ToShard::Update {
+                worker: 0,
+                clock: 1,
+                rows: vec![((0, 0), vec![1.0, 2.0].into())],
+                span: Some(ctx),
+            }),
+        ),
+        (
+            "Row",
+            Packet::ToWorker(ToWorker::Row {
+                key: (0, 0),
+                data: vec![1.0f32].into(),
+                vclock: 2,
+                fresh: 1,
+                span: None,
+            }),
+            Packet::ToWorker(ToWorker::Row {
+                key: (0, 0),
+                data: vec![1.0f32].into(),
+                vclock: 2,
+                fresh: 1,
+                span: Some(ctx),
+            }),
+        ),
+        (
+            "Push",
+            Packet::ToWorker(ToWorker::Push {
+                shard: 0,
+                vclock: 1,
+                rows: vec![PushRow::snapshot((0, 0), vec![1.0f32].into(), 1)],
+                span: None,
+            }),
+            Packet::ToWorker(ToWorker::Push {
+                shard: 0,
+                vclock: 1,
+                rows: vec![PushRow::snapshot((0, 0), vec![1.0f32].into(), 1)],
+                span: Some(ctx),
+            }),
+        ),
+    ];
+    for (tag, without, with) in variants {
+        let a = encode(&without);
+        let b = encode(&with);
+        assert_eq!(b.len(), a.len() + SPAN_WIRE_BYTES, "{tag}");
+        // Same bytes except the length prefix (first 4) and the span
+        // tail: the sampled frame is the unsampled frame plus 12 bytes.
+        assert_eq!(a[4..], b[4..b.len() - SPAN_WIRE_BYTES], "{tag}");
+        let tail = &b[b.len() - SPAN_WIRE_BYTES..];
+        assert_eq!(tail[..8], ctx.trace_id.to_le_bytes(), "{tag}");
+        assert_eq!(tail[8..], ctx.parent.to_le_bytes(), "{tag}");
+        roundtrip(without);
+        roundtrip(with);
     }
 }
 
@@ -860,6 +974,7 @@ fn special_float_bit_patterns_survive_roundtrip() {
         data: specials.clone().into(),
         vclock: 0,
         fresh: 0,
+        span: None,
     });
     let bytes = encode(&p);
     let (_, _, back) = wire::read_frame(&mut &bytes[..], &mut Vec::new())

@@ -12,14 +12,18 @@
 # Series recorded: in-process e2e_* numbers (SimNet data plane), the
 # e2e_*_tcp_loopback series — the same workload over the real TCP
 # transport (wire codec + socket hops), for the sim-vs-real comparison —
-# and e2e_essp3_x4w_telemetry_on, the headline workload with wire-shipped
-# stats polling + event tracing enabled, vs its bare get_into twin.
+# e2e_essp3_x4w_telemetry_on, the headline workload with wire-shipped
+# stats polling + event tracing enabled, vs its bare get_into twin — and
+# e2e_essp3_x4w_spans_on, the same workload with wire-v9 causal request
+# spans sampled 1/64 plus the hot-key sketch (the profiling plane's
+# overhead series).
 #
 # Usage: scripts/bench.sh [--quick]
 #
-# --quick runs the smoke subset (microbenchmarks + one e2e series): what
-# CI executes to catch panics and gross hot-path regressions without
-# full-bench runtimes. The JSON bookkeeping is identical.
+# --quick runs the smoke subset (microbenchmarks, one e2e series, and
+# the spans-on series): what CI executes to catch panics and gross
+# hot-path regressions without full-bench runtimes. The JSON bookkeeping
+# is identical.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
